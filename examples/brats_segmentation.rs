@@ -1,0 +1,43 @@
+//! Federated brain-tumor-style segmentation (the Figure 9 scenario):
+//! 10 "hospitals", C=1, E=3, B=3, Adam with warm restarts, dice-scored —
+//! with CosSGD 8-bit vs float32 updates.
+//!
+//!     cargo run --release --example brats_segmentation [-- --rounds 12]
+
+use cossgd::compress::Codec;
+use cossgd::fl::{self, FlConfig};
+use cossgd::runtime::Engine;
+use cossgd::util::cli::Args;
+use cossgd::util::timer::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rounds = args.opt_usize("rounds", 12);
+    let engine = Engine::load_default()?;
+    let params = engine.manifest.model("unet")?.param_count;
+
+    println!("BraTS-substitute federation: 10 hospitals, C=1, Adam, warm restarts\n");
+    for (label, codec) in [
+        ("float32", Codec::float32()),
+        ("cosine-8", Codec::cosine(8)),
+        ("cosine-2 @25%", Codec::cosine(2).with_sparsify(0.25)),
+    ] {
+        let mut cfg = FlConfig::unet().with_rounds(rounds).with_codec(codec);
+        cfg.eval_every = (rounds / 6).max(1);
+        cfg.verbose = false;
+        let r = fl::run(&cfg, &engine)?;
+        print!("{label:<16} dice curve:");
+        for rec in &r.history.records {
+            if let Some(d) = rec.eval_metric {
+                print!(" {d:.3}");
+            }
+        }
+        println!(
+            "  | uplink {} ({:.1}x)",
+            fmt_bytes(r.network.uplink_bytes),
+            r.network.uplink_compression_vs_float32(params)
+        );
+    }
+    println!("\nExpected shape (paper Fig. 9): quantized runs track float32 dice at a\nfraction of the transferred volume.");
+    Ok(())
+}

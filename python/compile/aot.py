@@ -1,0 +1,278 @@
+"""AOT lowering: every computation the Rust coordinator executes is lowered
+here, once, to HLO **text** plus a ``manifest.json`` describing shapes,
+dtypes and model metadata.
+
+HLO text — NOT serialized HloModuleProto — is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only name,...]
+
+Artifacts (defaults; all shapes recorded in the manifest):
+
+    mnist_round   (params[1663370], x[600,784], y[600], perms[60,10], lr) -> (delta, loss)
+    mnist_eval    (params, x[1000,784], y[1000]) -> (correct, loss)
+    mnist_grad    (params, x[64,784], y[64]) -> (grad, loss)
+    cifar_round   (params[122570], x[500,3072], y[500], perms[50,50], lr) -> (delta, loss)
+    cifar_round_e1   same with E=1 (Table 1's (B=50,E=1,C=0.5) config)
+    cifar_eval    (params, x[1000,3072], y[1000]) -> (correct, loss)
+    unet_round    (params, x[12,16,16,16,4], y[12,16,16,16], perms[12,3], lr) -> (delta, loss)
+    unet_eval     (params, x[10,...], y[10,...]) -> (inter[5], psum[5], tsum[5], loss)
+    quant_cos_{1,2,4,8}    (g[65536], norm, bound, u[65536]) -> codes
+    dequant_cos_{1,2,4,8}  (codes[65536], norm, bound) -> g'
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import cosine_quant as K
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dtype_tag(dt) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+# Round configurations (paper section 5.1). Rust reads these from the
+# manifest; change here, re-run `make artifacts`.
+ROUND_CFG = {
+    "mnist": dict(n_data=600, batch=10, epochs=1, eval_n=1000),
+    "cifar": dict(n_data=500, batch=50, epochs=5, eval_n=1000),
+    "cifar_e1": dict(n_data=500, batch=50, epochs=1, eval_n=1000),
+    "unet": dict(n_data=12, batch=3, epochs=3, eval_n=10),
+}
+GRAD_BATCH = 64
+KERNEL_BITS = (1, 2, 4, 8)
+
+
+def model_inputs(name: str, cfg: dict):
+    info = M.MODELS[name]
+    p = M.param_count(info["spec"])
+    n, b, e = cfg["n_data"], cfg["batch"], cfg["epochs"]
+    steps = e * (n // b)
+    x_shape = (n, *info["input_shape"])
+    if name == "unet":
+        y_shape = (n, 16, 16, 16)
+    else:
+        y_shape = (n,)
+    return p, steps, x_shape, y_shape, b
+
+
+def build_artifacts():
+    """[(artifact_name, fn, [(input_name, ShapeDtypeStruct)...])]."""
+    arts = []
+
+    for model_name, cfg_key in (
+        ("mnist", "mnist"),
+        ("cifar", "cifar"),
+        ("cifar", "cifar_e1"),
+        ("unet", "unet"),
+    ):
+        info = M.MODELS[model_name]
+        cfg = ROUND_CFG[cfg_key]
+        p, steps, x_shape, y_shape, b = model_inputs(model_name, cfg)
+        fn = M.make_local_round(
+            info["apply"], info["spec"], info["opt"], info["weight_decay"]
+        )
+        art_name = f"{cfg_key}_round" if cfg_key != "cifar_e1" else "cifar_round_e1"
+        arts.append(
+            (
+                art_name,
+                fn,
+                [
+                    ("params", sds((p,))),
+                    ("x", sds(x_shape)),
+                    ("y", sds(y_shape, I32)),
+                    ("perms", sds((steps, b), I32)),
+                    ("lr", sds(())),
+                ],
+            )
+        )
+
+    # Eval artifacts.
+    for model_name in ("mnist", "cifar"):
+        info = M.MODELS[model_name]
+        cfg = ROUND_CFG[model_name]
+        p = M.param_count(info["spec"])
+        n = cfg["eval_n"]
+
+        def eval_fn(params, x, y, _apply=info["apply"]):
+            return M.classification_eval(_apply, params, x, y)
+
+        arts.append(
+            (
+                f"{model_name}_eval",
+                eval_fn,
+                [
+                    ("params", sds((p,))),
+                    ("x", sds((n, *info["input_shape"]))),
+                    ("y", sds((n,), I32)),
+                ],
+            )
+        )
+    # UNet eval returns dice components.
+    info = M.MODELS["unet"]
+    p = M.param_count(info["spec"])
+    n = ROUND_CFG["unet"]["eval_n"]
+    arts.append(
+        (
+            "unet_eval",
+            M.segmentation_eval,
+            [
+                ("params", sds((p,))),
+                ("x", sds((n, 16, 16, 16, 4))),
+                ("y", sds((n, 16, 16, 16), I32)),
+            ],
+        )
+    )
+
+    # Per-step gradient (Fig. 4 toy study).
+    info = M.MODELS["mnist"]
+    p = M.param_count(info["spec"])
+    arts.append(
+        (
+            "mnist_grad",
+            M.make_grad_step(info["apply"]),
+            [
+                ("params", sds((p,))),
+                ("x", sds((GRAD_BATCH, 784))),
+                ("y", sds((GRAD_BATCH,), I32)),
+            ],
+        )
+    )
+
+    # Pallas quantization kernels.
+    for bits in KERNEL_BITS:
+        arts.append(
+            (
+                f"quant_cos_{bits}",
+                K.quantize_fn(bits),
+                [
+                    ("g", sds((K.CHUNK,))),
+                    ("norm", sds(())),
+                    ("bound", sds(())),
+                    ("u", sds((K.CHUNK,))),
+                ],
+            )
+        )
+        arts.append(
+            (
+                f"dequant_cos_{bits}",
+                K.dequantize_fn(bits),
+                [
+                    ("codes", sds((K.CHUNK,), I32)),
+                    ("norm", sds(())),
+                    ("bound", sds(())),
+                ],
+            )
+        )
+    return arts
+
+
+def model_manifest() -> dict:
+    out = {}
+    for name, info in M.MODELS.items():
+        entries, total = M.spec_sizes(info["spec"])
+        out[name] = {
+            "param_count": total,
+            "classes": info["classes"],
+            "optimizer": info["opt"],
+            "weight_decay": info["weight_decay"],
+            "input_shape": list(info["input_shape"]),
+            "layers": [
+                {
+                    "name": n,
+                    "shape": list(shape),
+                    "offset": off,
+                    "size": size,
+                    "init": init,
+                    "fan_in": M.fan_in(shape),
+                }
+                for n, shape, off, size, init in entries
+            ],
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default="", help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(filter(None, args.only.split(",")))
+    arts = build_artifacts()
+    manifest = {
+        "version": 1,
+        "chunk": K.CHUNK,
+        "kernel_bits": list(KERNEL_BITS),
+        "grad_batch": GRAD_BATCH,
+        "round_cfg": ROUND_CFG,
+        "models": model_manifest(),
+        "artifacts": {},
+    }
+
+    for name, fn, inputs in arts:
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"name": n, "dtype": dtype_tag(s.dtype), "shape": list(s.shape)}
+                for n, s in inputs
+            ],
+        }
+        if only and name not in only:
+            if not os.path.exists(path):
+                print(f"[aot] WARNING: skipping {name} but {path} is missing")
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[s for _, s in inputs])
+        # Record output shapes from the lowering itself.
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        manifest["artifacts"][name]["outputs"] = [
+            {"dtype": dtype_tag(o.dtype), "shape": list(o.shape)} for o in out_avals
+        ]
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(
+            f"[aot] {name}: {len(text)} chars in {time.time() - t0:.1f}s -> {path}",
+            flush=True,
+        )
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {man_path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Layer 1: the CosSGD quantization hot-spot as Pallas kernels.
+
+The encode path (`arccos` + affine + stochastic rounding) and decode path
+(`cos` + scale) are elementwise transcendental pipelines — a VPU workload
+on TPU, not an MXU one. The kernels therefore:
+
+* reshape the flat CHUNK-element gradient to ``(CHUNK/128, 128)`` —
+  lane-dim 128, sublane-aligned rows;
+* tile with ``BlockSpec((BLOCK_ROWS, 128))`` over a 1-D grid, streaming
+  HBM->VMEM one block per step (VMEM footprint per step:
+  one f32 in-block + one f32 u-block + one i32 out-block
+  = 3 * 8 * 128 * 4 B = 12 KiB, far under the ~16 MiB VMEM budget —
+  leaving room for the compiler to double-buffer);
+* read ``norm`` / ``bound`` as (1, 1) blocks replicated to every grid step
+  so the whole quantize is a single fused pass over the gradient.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU performance is *estimated* in EXPERIMENTS.md from
+the VMEM/bandwidth structure above (see DESIGN.md section 7).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PI = math.pi
+
+# Fixed chunk the Rust runtime pads/splits layer gradients into.
+CHUNK = 65536
+LANES = 128
+ROWS = CHUNK // LANES  # 512
+BLOCK_ROWS = 8  # (8, 128) f32 blocks — the TPU-native tile
+GRID = ROWS // BLOCK_ROWS  # 64 steps
+
+
+def _quant_kernel(bits: int, g_ref, norm_ref, bound_ref, u_ref, o_ref):
+    """One (BLOCK_ROWS, 128) tile of the encode pass."""
+    norm = norm_ref[0, 0]
+    bound = bound_ref[0, 0]
+    max_code = float(2**bits - 1)
+    rng = PI - 2.0 * bound
+    inv = jnp.where(rng > 1e-6, 1.0 / rng, 0.0)
+
+    g = g_ref[...]
+    u = u_ref[...]
+    ct = jnp.clip(g / jnp.maximum(norm, 1e-30), -1.0, 1.0)
+    theta = jnp.clip(jnp.arccos(ct), bound, PI - bound)
+    v = (theta - bound) * inv * max_code
+    f = jnp.floor(v)
+    code = f + (u < (v - f)).astype(jnp.float32)
+    code = jnp.clip(code, 0.0, max_code)
+    code = jnp.where(norm > 0.0, code, 0.0)
+    o_ref[...] = code.astype(jnp.int32)
+
+
+def _dequant_kernel(bits: int, c_ref, norm_ref, bound_ref, o_ref):
+    """One (BLOCK_ROWS, 128) tile of the decode pass."""
+    norm = norm_ref[0, 0]
+    bound = bound_ref[0, 0]
+    max_code = float(2**bits - 1)
+    step = (PI - 2.0 * bound) / max_code
+    theta = bound + c_ref[...].astype(jnp.float32) * step
+    o_ref[...] = jnp.where(norm > 0.0, jnp.cos(theta) * norm, 0.0)
+
+
+def _scalar_spec():
+    # (1,1) scalar operand broadcast to every grid step.
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _tile_spec():
+    return pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+
+
+def quantize_chunk(g, norm, bound, u, *, bits: int):
+    """Quantize a CHUNK-element gradient slice.
+
+    g: f32[CHUNK]; norm, bound: f32[] scalars; u: f32[CHUNK] uniform draws
+    (u = 0.5 for the biased regime). Returns int32[CHUNK] codes.
+    """
+    g2 = g.reshape(ROWS, LANES)
+    u2 = u.reshape(ROWS, LANES)
+    n2 = norm.reshape(1, 1)
+    b2 = bound.reshape(1, 1)
+    out = pl.pallas_call(
+        partial(_quant_kernel, bits),
+        grid=(GRID,),
+        in_specs=[_tile_spec(), _scalar_spec(), _scalar_spec(), _tile_spec()],
+        out_specs=_tile_spec(),
+        out_shape=jax.ShapeDtypeStruct((ROWS, LANES), jnp.int32),
+        interpret=True,
+    )(g2, n2, b2, u2)
+    return out.reshape(CHUNK)
+
+
+def dequantize_chunk(codes, norm, bound, *, bits: int):
+    """Invert a CHUNK of codes back to gradient values (f32[CHUNK])."""
+    c2 = codes.reshape(ROWS, LANES)
+    n2 = norm.reshape(1, 1)
+    b2 = bound.reshape(1, 1)
+    out = pl.pallas_call(
+        partial(_dequant_kernel, bits),
+        grid=(GRID,),
+        in_specs=[_tile_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=_tile_spec(),
+        out_shape=jax.ShapeDtypeStruct((ROWS, LANES), jnp.float32),
+        interpret=True,
+    )(c2, n2, b2)
+    return out.reshape(CHUNK)
+
+
+def quantize_fn(bits: int):
+    """jit-able (g, norm, bound, u) -> codes, for AOT lowering."""
+    return partial(quantize_chunk, bits=bits)
+
+
+def dequantize_fn(bits: int):
+    """jit-able (codes, norm, bound) -> g', for AOT lowering."""
+    return partial(dequantize_chunk, bits=bits)

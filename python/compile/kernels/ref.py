@@ -1,0 +1,57 @@
+"""Pure-jnp reference (oracle) for the cosine quantization kernels.
+
+This is the ground truth the Pallas kernels (``cosine_quant.py``) and the
+independent Rust implementation (``rust/src/compress/cosine.rs``) are both
+checked against. It mirrors the paper's section 3 exactly, with the
+``2^s - 1`` scaling documented in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+PI = math.pi
+
+
+def compute_norm(g: jnp.ndarray) -> jnp.ndarray:
+    """l2 norm, f32."""
+    return jnp.sqrt(jnp.sum(g.astype(jnp.float32) ** 2))
+
+
+def compute_bound_auto(g: jnp.ndarray, norm: jnp.ndarray) -> jnp.ndarray:
+    """b_theta = min(min T, pi - max T) over the angle vector."""
+    theta = jnp.arccos(jnp.clip(g / norm, -1.0, 1.0))
+    return jnp.clip(jnp.minimum(jnp.min(theta), PI - jnp.max(theta)), 0.0, PI / 2)
+
+
+def quantize(g, norm, bound, u, bits: int):
+    """Quantize with stochastic rounding driven by u in [0,1).
+
+    * ``u = 0.5`` everywhere reproduces (near-)biased round-to-nearest:
+      floor(v) + (0.5 < frac) differs from round(v) only at frac == 0.5.
+    * ``u ~ U[0,1)`` gives the unbiased regime of Eq. (3).
+
+    Returns int32 codes in [0, 2^bits - 1].
+    """
+    max_code = float(2**bits - 1)
+    rng = PI - 2.0 * bound
+    inv = jnp.where(rng > 1e-6, 1.0 / rng, 0.0)
+    theta = jnp.arccos(jnp.clip(g / jnp.maximum(norm, 1e-30), -1.0, 1.0))
+    theta = jnp.clip(theta, bound, PI - bound)
+    v = (theta - bound) * inv * max_code
+    f = jnp.floor(v)
+    frac = v - f
+    code = f + (u < frac).astype(jnp.float32)
+    code = jnp.clip(code, 0.0, max_code)
+    code = jnp.where(norm > 0.0, code, 0.0)
+    return code.astype(jnp.int32)
+
+
+def dequantize(codes, norm, bound, bits: int):
+    """Invert: g' = cos(b + c * (pi - 2b)/(2^s - 1)) * norm."""
+    max_code = float(2**bits - 1)
+    step = (PI - 2.0 * bound) / max_code
+    theta = bound + codes.astype(jnp.float32) * step
+    return jnp.where(norm > 0.0, jnp.cos(theta) * norm, 0.0)

@@ -1,0 +1,354 @@
+"""Layer 2: the paper's three workloads as JAX models over a FLAT f32
+parameter vector.
+
+Everything the Rust coordinator executes is defined here and AOT-lowered by
+``aot.py``:
+
+* ``mnist`` — the McMahan et al. [25] CNN (two 5x5 convs + fc512 + fc10),
+  exactly 1,663,370 parameters.
+* ``cifar`` — a three-conv + two-fc CNN with exactly 122,570 parameters
+  (the paper's count for its CIFAR-10 model [42]).
+* ``unet`` — a compact 3D-UNet for volumetric segmentation (the BraTS
+  substitute; see DESIGN.md section 5).
+
+The flat-parameter convention is what makes the federated pipeline clean:
+the local update ``g = M_in - M*`` is a single f32 vector, which is exactly
+the object CosSGD quantizes. Local training (E epochs x batches with
+SGD / SGD-momentum / Adam) is a single ``lax.scan``, so one HLO artifact
+per (model, E, B) covers a whole local round.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Parameter specs: (name, shape, init_kind). Offsets are cumulative.
+# init_kind: "he" (normal, std=sqrt(2/fan_in)), "glorot" (uniform limit
+# sqrt(6/(fan_in+fan_out))), "zero".
+# ---------------------------------------------------------------------------
+
+
+class ParamSpec(NamedTuple):
+    name: str
+    shape: tuple
+    init: str
+
+
+def _conv_spec(name: str, kh_kw_in_out: tuple) -> list:
+    return [
+        ParamSpec(f"{name}_w", kh_kw_in_out, "he"),
+        ParamSpec(f"{name}_b", (kh_kw_in_out[-1],), "zero"),
+    ]
+
+
+def _fc_spec(name: str, n_in: int, n_out: int, init: str = "he") -> list:
+    return [
+        ParamSpec(f"{name}_w", (n_in, n_out), init),
+        ParamSpec(f"{name}_b", (n_out,), "zero"),
+    ]
+
+
+MNIST_SPEC: list = (
+    _conv_spec("conv1", (5, 5, 1, 32))
+    + _conv_spec("conv2", (5, 5, 32, 64))
+    + _fc_spec("fc1", 7 * 7 * 64, 512)
+    + _fc_spec("fc2", 512, 10, init="glorot")
+)
+
+CIFAR_SPEC: list = (
+    _conv_spec("conv1", (3, 3, 3, 32))
+    + _conv_spec("conv2", (3, 3, 32, 64))
+    + _conv_spec("conv3", (3, 3, 64, 64))
+    + _fc_spec("fc1", 4 * 4 * 64, 64)
+    + _fc_spec("fc2", 64, 10, init="glorot")
+)
+
+
+def _conv3d_spec(name: str, cin: int, cout: int, k: int = 3) -> list:
+    return [
+        ParamSpec(f"{name}_w", (k, k, k, cin, cout), "he"),
+        ParamSpec(f"{name}_b", (cout,), "zero"),
+    ]
+
+
+# Compact 3D-UNet: enc(4->8->8), down, enc(8->16->16), down, bottleneck
+# (16->32->32), up+skip (48->16->16), up+skip (24->8->8), head (8->5).
+UNET_SPEC: list = (
+    _conv3d_spec("e1a", 4, 8)
+    + _conv3d_spec("e1b", 8, 8)
+    + _conv3d_spec("e2a", 8, 16)
+    + _conv3d_spec("e2b", 16, 16)
+    + _conv3d_spec("ba", 16, 32)
+    + _conv3d_spec("bb", 32, 32)
+    + _conv3d_spec("d2a", 32 + 16, 16)
+    + _conv3d_spec("d2b", 16, 16)
+    + _conv3d_spec("d1a", 16 + 8, 8)
+    + _conv3d_spec("d1b", 8, 8)
+    + _conv3d_spec("head", 8, 5, k=1)
+)
+
+
+def spec_sizes(spec: Sequence[ParamSpec]):
+    """[(name, shape, offset, size, init)] with cumulative offsets."""
+    out, off = [], 0
+    for p in spec:
+        size = int(math.prod(p.shape))
+        out.append((p.name, p.shape, off, size, p.init))
+        off += size
+    return out, off
+
+
+def param_count(spec: Sequence[ParamSpec]) -> int:
+    return spec_sizes(spec)[1]
+
+
+def unflatten(flat: jnp.ndarray, spec: Sequence[ParamSpec]) -> dict:
+    """Split the flat vector into named tensors (static slices)."""
+    entries, total = spec_sizes(spec)
+    assert flat.shape == (total,), f"params {flat.shape} != ({total},)"
+    return {
+        name: flat[off : off + size].reshape(shape)
+        for name, shape, off, size, _ in entries
+    }
+
+
+def fan_in(shape: tuple) -> int:
+    """Fan-in of a weight tensor: all dims but the last (conv & fc)."""
+    return int(math.prod(shape[:-1])) if len(shape) > 1 else int(shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+# ---------------------------------------------------------------------------
+
+
+def _conv2d(x, w, b):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _maxpool2d(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def mnist_apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, 784] -> logits [B, 10]."""
+    p = unflatten(flat, MNIST_SPEC)
+    h = x.reshape(-1, 28, 28, 1)
+    h = jax.nn.relu(_conv2d(h, p["conv1_w"], p["conv1_b"]))
+    h = _maxpool2d(h)
+    h = jax.nn.relu(_conv2d(h, p["conv2_w"], p["conv2_b"]))
+    h = _maxpool2d(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+def cifar_apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, 3072] -> logits [B, 10]."""
+    p = unflatten(flat, CIFAR_SPEC)
+    h = x.reshape(-1, 32, 32, 3)
+    for name in ("conv1", "conv2", "conv3"):
+        h = jax.nn.relu(_conv2d(h, p[f"{name}_w"], p[f"{name}_b"]))
+        h = _maxpool2d(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+def _conv3d(x, w, b):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1, 1), padding="SAME",
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )
+    return y + b
+
+
+def _maxpool3d(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 2, 1), (1, 2, 2, 2, 1), "VALID"
+    )
+
+
+def _upsample3d(x):
+    """Nearest-neighbour x2 in D, H, W."""
+    for axis in (1, 2, 3):
+        x = jnp.repeat(x, 2, axis=axis)
+    return x
+
+
+def unet_apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, D, H, W, 4] -> logits [B, D, H, W, 5]."""
+    p = unflatten(flat, UNET_SPEC)
+
+    def block(h, a, b):
+        h = jax.nn.relu(_conv3d(h, p[f"{a}_w"], p[f"{a}_b"]))
+        return jax.nn.relu(_conv3d(h, p[f"{b}_w"], p[f"{b}_b"]))
+
+    e1 = block(x, "e1a", "e1b")
+    e2 = block(_maxpool3d(e1), "e2a", "e2b")
+    bott = block(_maxpool3d(e2), "ba", "bb")
+    d2 = block(jnp.concatenate([_upsample3d(bott), e2], axis=-1), "d2a", "d2b")
+    d1 = block(jnp.concatenate([_upsample3d(d2), e1], axis=-1), "d1a", "d1b")
+    return _conv3d(d1, p["head_w"], p["head_b"])
+
+
+# ---------------------------------------------------------------------------
+# Losses and metrics.
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; labels are int class ids over the last axis."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def classification_eval(apply_fn, flat, x, y):
+    """-> (num_correct: f32 scalar, mean_loss: f32 scalar)."""
+    logits = apply_fn(flat, x)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return correct, softmax_xent(logits, y)
+
+
+def segmentation_eval(flat, x, y):
+    """-> (intersections[5], pred_sums[5], true_sums[5], mean_loss).
+
+    Dice components summed over the batch; the Rust side computes
+    2*I / (P + T) per class and averages (the BraTS dice protocol).
+    """
+    logits = unet_apply(flat, x)
+    loss = softmax_xent(logits, y)
+    pred = jnp.argmax(logits, axis=-1)
+    classes = jnp.arange(5)
+
+    def per_class(c):
+        pm = (pred == c).astype(jnp.float32)
+        tm = (y == c).astype(jnp.float32)
+        return jnp.sum(pm * tm), jnp.sum(pm), jnp.sum(tm)
+
+    inter, psum, tsum = jax.vmap(per_class)(classes)
+    return inter, psum, tsum, loss
+
+
+# ---------------------------------------------------------------------------
+# Local optimizers (fresh state each round: FedAvg workers re-init from the
+# incoming model — Algorithm 1 "Worker" lines 1-7).
+# ---------------------------------------------------------------------------
+
+
+def opt_init(kind: str, n: int):
+    if kind == "sgd":
+        return ()
+    if kind == "momentum":
+        return (jnp.zeros((n,), jnp.float32),)
+    if kind == "adam":
+        return (
+            jnp.zeros((n,), jnp.float32),
+            jnp.zeros((n,), jnp.float32),
+            jnp.zeros((), jnp.float32),
+        )
+    raise ValueError(f"unknown optimizer {kind}")
+
+
+def opt_update(kind: str, params, grad, state, lr):
+    if kind == "sgd":
+        return params - lr * grad, state
+    if kind == "momentum":
+        (v,) = state
+        v = 0.9 * v + grad
+        return params - lr * v, (v,)
+    if kind == "adam":
+        m, v, t = state
+        t = t + 1.0
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = b1 * m + (1 - b1) * grad
+        v = b2 * v + (1 - b2) * grad * grad
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        return params - lr * mhat / (jnp.sqrt(vhat) + eps), (m, v, t)
+    raise ValueError(f"unknown optimizer {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Whole-local-round functions (one HLO artifact each).
+# ---------------------------------------------------------------------------
+
+
+def make_local_round(
+    apply_fn: Callable,
+    spec: Sequence[ParamSpec],
+    opt: str,
+    weight_decay: float = 0.0,
+) -> Callable:
+    """Build ``(params, x, y, perms, lr) -> (delta, mean_loss)``.
+
+    * ``x``: the client's full local dataset ``[N, ...]``.
+    * ``perms``: ``[steps, B]`` int32 batch-index matrix (the Rust side
+      shuffles per epoch — see fl::client).
+    * ``delta = M_in - M*`` — the update CosSGD quantizes (Alg. 1 line 8).
+    """
+    n_params = param_count(spec)
+
+    def loss_fn(params, xb, yb):
+        return softmax_xent(apply_fn(params, xb), yb)
+
+    def fn(params, x, y, perms, lr):
+        def step(carry, idx):
+            p, s = carry
+            xb = jnp.take(x, idx, axis=0)
+            yb = jnp.take(y, idx, axis=0)
+            loss, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+            if weight_decay > 0.0:
+                g = g + weight_decay * p
+            p, s = opt_update(opt, p, g, s, lr)
+            return (p, s), loss
+
+        (p_out, _), losses = lax.scan(
+            step, (params, opt_init(opt, n_params)), perms
+        )
+        return params - p_out, jnp.mean(losses)
+
+    return fn
+
+
+def make_grad_step(apply_fn):
+    """``(params, x, y) -> (grad, loss)`` — the Fig. 4 toy-study primitive
+    (the Rust side masks/noises the gradient and applies the step)."""
+
+    def loss_fn(params, xb, yb):
+        return softmax_xent(apply_fn(params, xb), yb)
+
+    def fn(params, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(params, x, y)
+        return g, loss
+
+    return fn
+
+
+MODELS = {
+    "mnist": dict(
+        spec=MNIST_SPEC, apply=mnist_apply, opt="sgd", weight_decay=1e-4,
+        input_shape=(784,), classes=10,
+    ),
+    "cifar": dict(
+        spec=CIFAR_SPEC, apply=cifar_apply, opt="momentum", weight_decay=0.0,
+        input_shape=(3072,), classes=10,
+    ),
+    "unet": dict(
+        spec=UNET_SPEC, apply=unet_apply, opt="adam", weight_decay=0.0,
+        input_shape=(16, 16, 16, 4), classes=5,
+    ),
+}

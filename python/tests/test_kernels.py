@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+The kernels are fixed-shape (CHUNK = 65536); hypothesis sweeps the VALUE
+distributions (scale, heavy tails, constants, zeros) and all bit widths.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cosine_quant as K
+from compile.kernels import ref
+
+CHUNK = K.CHUNK
+
+
+def gradient_like(seed: int, scale: float, spike_frac: float) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    g = rng.normal(0.0, 0.01, CHUNK).astype(np.float32)
+    spikes = rng.random(CHUNK) < spike_frac
+    g[spikes] += rng.normal(0.0, 1.0, spikes.sum()).astype(np.float32)
+    return g * scale
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+def test_kernel_matches_ref_biased(bits):
+    g = jnp.asarray(gradient_like(0, 1.0, 0.02))
+    norm = ref.compute_norm(g)
+    bound = ref.compute_bound_auto(g, norm)
+    u = jnp.full((CHUNK,), 0.5, jnp.float32)
+    codes_k = K.quantize_chunk(g, norm, bound, u, bits=bits)
+    codes_r = ref.quantize(g, norm, bound, u, bits)
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    deq_k = K.dequantize_chunk(codes_k, norm, bound, bits=bits)
+    deq_r = ref.dequantize(codes_r, norm, bound, bits)
+    np.testing.assert_allclose(
+        np.asarray(deq_k), np.asarray(deq_r), rtol=1e-4, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("bits", [2, 8])
+def test_kernel_matches_ref_stochastic(bits):
+    g = jnp.asarray(gradient_like(1, 0.1, 0.05))
+    norm = ref.compute_norm(g)
+    bound = ref.compute_bound_auto(g, norm)
+    u = jnp.asarray(np.random.default_rng(7).random(CHUNK, dtype=np.float32))
+    codes_k = K.quantize_chunk(g, norm, bound, u, bits=bits)
+    codes_r = ref.quantize(g, norm, bound, u, bits)
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([1e-4, 1e-2, 1.0, 100.0]),
+    spike=st.sampled_from([0.0, 0.01, 0.2]),
+    bits=st.sampled_from([1, 2, 4, 8]),
+)
+def test_kernel_vs_ref_hypothesis(seed, scale, spike, bits):
+    g = jnp.asarray(gradient_like(seed, scale, spike))
+    norm = ref.compute_norm(g)
+    bound = ref.compute_bound_auto(g, norm)
+    u = jnp.asarray(np.random.default_rng(seed + 1).random(CHUNK, dtype=np.float32))
+    codes_k = np.asarray(K.quantize_chunk(g, norm, bound, u, bits=bits))
+    codes_r = np.asarray(ref.quantize(g, norm, bound, u, bits))
+    np.testing.assert_array_equal(codes_k, codes_r)
+    assert codes_k.min() >= 0 and codes_k.max() <= 2**bits - 1
+    # Dequantized angle error <= one interval everywhere (stochastic).
+    deq = np.asarray(K.dequantize_chunk(jnp.asarray(codes_k), norm, bound, bits=bits))
+    theta = np.arccos(np.clip(np.asarray(g) / max(float(norm), 1e-30), -1, 1))
+    theta = np.clip(theta, float(bound), math.pi - float(bound))
+    theta_back = np.arccos(np.clip(deq / max(float(norm), 1e-30), -1, 1))
+    q = (math.pi - 2 * float(bound)) / (2**bits - 1)
+    assert np.max(np.abs(theta - theta_back)) <= q + 1e-4
+
+
+def test_zero_gradient_roundtrips_to_zero():
+    g = jnp.zeros((CHUNK,), jnp.float32)
+    norm = ref.compute_norm(g)
+    bound = jnp.float32(0.0)
+    u = jnp.full((CHUNK,), 0.5, jnp.float32)
+    codes = K.quantize_chunk(g, norm, bound, u, bits=4)
+    assert int(jnp.max(codes)) == 0
+    deq = K.dequantize_chunk(codes, norm, bound, bits=4)
+    np.testing.assert_array_equal(np.asarray(deq), np.zeros(CHUNK, np.float32))
+
+
+def test_one_bit_degenerates_to_sign_norm():
+    g = jnp.asarray(gradient_like(3, 1.0, 0.02))
+    norm = ref.compute_norm(g)
+    bound = ref.compute_bound_auto(g, norm)
+    u = jnp.full((CHUNK,), 0.5, jnp.float32)
+    codes = np.asarray(K.quantize_chunk(g, norm, bound, u, bits=1))
+    assert set(np.unique(codes)) <= {0, 1}
+    deq = np.asarray(K.dequantize_chunk(jnp.asarray(codes), norm, bound, bits=1))
+    mags = np.abs(deq)
+    np.testing.assert_allclose(mags, mags[0], rtol=1e-5)
+    signs_match = np.sign(deq) == np.sign(np.asarray(g))
+    nonzero = np.abs(np.asarray(g)) > 1e-7
+    assert signs_match[nonzero].mean() > 0.999
+
+
+def test_larger_gradients_reconstruct_relatively_better():
+    """The paper's section 3.1 property, end to end through the kernel."""
+    g = jnp.asarray(gradient_like(9, 1.0, 0.05))
+    norm = ref.compute_norm(g)
+    bound = ref.compute_bound_auto(g, norm)
+    u = jnp.full((CHUNK,), 0.5, jnp.float32)
+    codes = K.quantize_chunk(g, norm, bound, u, bits=4)
+    deq = np.asarray(K.dequantize_chunk(codes, norm, bound, bits=4))
+    gn = np.asarray(g)
+    err = np.abs(gn - deq)
+    big = np.abs(gn) > np.quantile(np.abs(gn), 0.99)
+    small = np.abs(gn) < np.quantile(np.abs(gn), 0.5)
+    # Mean absolute error of the top 1% is smaller than of the small half,
+    # despite their values being ~100x larger.
+    assert err[big].mean() < err[small].mean() * 1.5
+
+
+def test_bound_auto_matches_definition():
+    g = jnp.asarray(gradient_like(5, 1.0, 0.02))
+    norm = ref.compute_norm(g)
+    b = float(ref.compute_bound_auto(g, norm))
+    theta = np.arccos(np.clip(np.asarray(g) / float(norm), -1, 1))
+    expected = min(theta.min(), math.pi - theta.max())
+    assert abs(b - expected) < 1e-6
+    assert 0.0 <= b <= math.pi / 2

@@ -1,0 +1,70 @@
+//! Codec micro-benchmarks: the per-layer quantize/dequantize hot path
+//! (millions of elements per client round). Drives EXPERIMENTS.md §Perf L3.
+
+use cossgd::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
+use cossgd::compress::linear::LinearQuantizer;
+use cossgd::compress::{bitpack, hadamard, signsgd, sparsify, ClientCodecState, Codec};
+use cossgd::util::bench::Bencher;
+use cossgd::util::propcheck::gradient_like;
+use cossgd::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::seeded(1);
+    let n = 1 << 20; // ~1M elements ≈ the MNIST CNN layer scale
+    let g = gradient_like(&mut rng, n);
+    println!("== codec benchmarks (n = {n}) ==");
+
+    for bits in [2u8, 8] {
+        let q = CosineQuantizer::new(bits, Rounding::Biased, BoundMode::ClipTopPercent(1.0));
+        b.bench_elems(&format!("cosine quantize biased {bits}b"), n as u64, || {
+            q.quantize(&g, &mut Pcg64::seeded(2))
+        });
+        let qu = CosineQuantizer::new(bits, Rounding::Unbiased, BoundMode::Auto);
+        b.bench_elems(&format!("cosine quantize unbiased {bits}b"), n as u64, || {
+            qu.quantize(&g, &mut Pcg64::seeded(2))
+        });
+        let quantized = q.quantize(&g, &mut rng);
+        b.bench_elems(&format!("cosine dequantize {bits}b"), n as u64, || {
+            quantized.dequantize()
+        });
+        let lin = LinearQuantizer::unbiased(bits);
+        b.bench_elems(&format!("linear quantize unbiased {bits}b"), n as u64, || {
+            lin.quantize(&g, &mut Pcg64::seeded(2))
+        });
+        let codes = quantized.codes.clone();
+        b.bench_elems(&format!("bitpack {bits}b"), n as u64, || {
+            bitpack::pack(&codes, bits)
+        });
+        let packed = bitpack::pack(&codes, bits);
+        b.bench_elems(&format!("bitunpack {bits}b"), n as u64, || {
+            bitpack::unpack(&packed, bits, n)
+        });
+    }
+
+    b.bench_elems("fwht rotate (pow2 pad)", n as u64, || hadamard::rotate(&g, 7));
+    let rot = hadamard::rotate(&g, 7);
+    b.bench_elems("fwht unrotate", n as u64, || {
+        hadamard::unrotate(&rot, 7, n)
+    });
+
+    b.bench_elems("sign codes", n as u64, || signsgd::sign_codes(&g));
+    b.bench_elems("sparsify mask 5%", n as u64, || sparsify::mask(9, n, 0.05));
+    let m = sparsify::mask(9, n, 0.05);
+    b.bench_elems("gather 5%", m.kept.len() as u64, || sparsify::gather(&g, &m));
+
+    // Whole-pipeline encode/decode (what a client round pays).
+    for codec in [
+        Codec::cosine(2),
+        Codec::cosine(2).with_sparsify(0.05),
+        Codec::cosine(8),
+    ] {
+        let label = format!("pipeline encode {}", codec.name());
+        b.bench_elems(&label, n as u64, || {
+            codec.encode(&g, &mut ClientCodecState::new(), &mut Pcg64::seeded(3))
+        });
+        let enc = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
+        let label = format!("pipeline decode {}", codec.name());
+        b.bench_elems(&label, n as u64, || codec.decode(&enc).unwrap());
+    }
+}

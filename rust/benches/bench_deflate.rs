@@ -1,0 +1,58 @@
+//! DEFLATE benchmarks on the payloads the system actually produces:
+//! bit-packed quantized gradient codes (very compressible) and raw float32
+//! bytes (barely compressible). Cross-referenced against flate2 (zlib) as
+//! an external yardstick — flate2 is a dev-dependency only.
+
+use cossgd::compress::cosine::CosineQuantizer;
+use cossgd::compress::deflate::{deflate, inflate, CompressionLevel};
+use cossgd::compress::{bitpack, entropy};
+use cossgd::util::bench::Bencher;
+use cossgd::util::propcheck::gradient_like;
+use cossgd::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::seeded(1);
+    let n = 1 << 20;
+    let g = gradient_like(&mut rng, n);
+    let q = CosineQuantizer::paper_default(8).quantize(&g, &mut rng);
+    let codes = bitpack::pack(&q.codes, 8);
+    let floats = entropy::f32_bytes(&g);
+    println!(
+        "== deflate benchmarks: codes {} bytes, floats {} bytes ==",
+        codes.len(),
+        floats.len()
+    );
+
+    for level in [CompressionLevel::Fast, CompressionLevel::Default, CompressionLevel::Best] {
+        let out = deflate(&codes, level);
+        b.bench_bytes(
+            &format!("deflate codes {level:?} (ratio {:.2}x)", codes.len() as f64 / out.len() as f64),
+            codes.len() as u64,
+            || deflate(&codes, level),
+        );
+    }
+    let out = deflate(&floats, CompressionLevel::Default);
+    b.bench_bytes(
+        &format!(
+            "deflate float32 Default (ratio {:.3}x)",
+            floats.len() as f64 / out.len() as f64
+        ),
+        floats.len() as u64,
+        || deflate(&floats, CompressionLevel::Default),
+    );
+
+    let compressed = deflate(&codes, CompressionLevel::Default);
+    b.bench_bytes("inflate codes", codes.len() as u64, || {
+        inflate(&compressed).unwrap()
+    });
+
+    // zlib yardstick.
+    use std::io::Write;
+    b.bench_bytes("flate2(6) codes [yardstick]", codes.len() as u64, || {
+        let mut e =
+            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::new(6));
+        e.write_all(&codes).unwrap();
+        e.finish().unwrap()
+    });
+}

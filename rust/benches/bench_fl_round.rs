@@ -1,0 +1,49 @@
+//! End-to-end federated-round benchmarks — one per paper table's workload:
+//! a full FedAvg round (client local training through PJRT + encode +
+//! wire + server decode/aggregate) for each (model, codec) cell. This is
+//! the number the paper's "communication rounds" cost out to wall-clock.
+
+use cossgd::compress::Codec;
+use cossgd::fl::{self, FlConfig};
+use cossgd::runtime::Engine;
+use cossgd::util::bench::Bencher;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_fl_round: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(dir).expect("engine");
+    let mut b = Bencher::new();
+    // Long-running cases: cap iterations via a short min_time override is
+    // handled by BENCH_MIN_TIME_MS; each case below runs ≥1 full round.
+    println!("== end-to-end FL round benchmarks ==");
+
+    let cases: Vec<(&str, FlConfig)> = vec![
+        (
+            "mnist round float32 (Figs 6)",
+            FlConfig::mnist(false).with_rounds(1).with_codec(Codec::float32()),
+        ),
+        (
+            "mnist round cosine-2 (Figs 6/8)",
+            FlConfig::mnist(false).with_rounds(1).with_codec(Codec::cosine(2)),
+        ),
+        (
+            "cifar(E=1) round cosine-2@5% (Fig 10/Tab 1-2)",
+            // E=1 artifact: the E=5 round costs ~3min/client on one core.
+            FlConfig::cifar_e1()
+                .with_rounds(1)
+                .with_codec(Codec::cosine(2).with_sparsify(0.05)),
+        ),
+        (
+            "unet round cosine-8 (Fig 9)",
+            FlConfig::unet().with_rounds(1).with_codec(Codec::cosine(8)),
+        ),
+    ];
+    for (label, mut cfg) in cases {
+        cfg.eval_every = 0;
+        cfg.n_clients = cfg.n_clients.min(20);
+        b.bench(label, || fl::run(&cfg, &engine).unwrap());
+    }
+}

@@ -1,0 +1,105 @@
+//! PJRT runtime benchmarks: artifact execute latency for each model's
+//! round/eval executables and the Pallas kernel path. Requires
+//! `make artifacts`; prints a skip message otherwise.
+
+use cossgd::data::partition::eval_set;
+use cossgd::data::synth::{SynthCifar, SynthMnist, SynthTask};
+use cossgd::runtime::manifest::init_params;
+use cossgd::runtime::Engine;
+use cossgd::util::bench::Bencher;
+use cossgd::util::propcheck::gradient_like;
+use cossgd::util::rng::Pcg64;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_runtime: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(dir).expect("engine");
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::seeded(1);
+    println!("== runtime benchmarks (PJRT CPU) ==");
+
+    // MNIST local round (60 steps of B=10 over the 1.66M-param CNN).
+    {
+        let model = engine.manifest.model("mnist").unwrap().clone();
+        let cfg = engine.manifest.round("mnist").unwrap();
+        let params = init_params(&model, 1);
+        let task = SynthMnist::new(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..cfg.n_data {
+            let (xi, yi) = task.gen(i % 10, (i / 10) as u64);
+            x.extend_from_slice(&xi);
+            y.push(yi[0]);
+        }
+        let perms: Vec<i32> = (0..cfg.epochs)
+            .flat_map(|_| rng.permutation(cfg.n_data))
+            .map(|i| i as i32)
+            .collect();
+        engine.warmup(&["mnist_round"]).unwrap();
+        b.bench("mnist_round (60 steps, B=10)", || {
+            engine
+                .local_round("mnist_round", &params, x.clone(), y.clone(), perms.clone(), 0.1)
+                .unwrap()
+        });
+
+        let n = cfg.eval_n;
+        let (ex, ey) = eval_set(&task, n);
+        engine.warmup(&["mnist_eval"]).unwrap();
+        b.bench("mnist_eval (1000 examples)", || {
+            engine
+                .classification_eval("mnist_eval", &params, ex.clone(), ey.clone(), n)
+                .unwrap()
+        });
+    }
+
+    // CIFAR local round.
+    {
+        let model = engine.manifest.model("cifar").unwrap().clone();
+        let cfg = engine.manifest.round("cifar_e1").unwrap();
+        let params = init_params(&model, 1);
+        let task = SynthCifar::new(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..cfg.n_data {
+            let (xi, yi) = task.gen(i % 10, (i / 10) as u64);
+            x.extend_from_slice(&xi);
+            y.push(yi[0]);
+        }
+        let perms: Vec<i32> = (0..cfg.epochs)
+            .flat_map(|_| rng.permutation(cfg.n_data))
+            .map(|i| i as i32)
+            .collect();
+        engine.warmup(&["cifar_round_e1"]).unwrap();
+        // E=1 artifact: the E=5 round costs ~3 min/iter on one core (that
+        // number is recorded once in EXPERIMENTS.md section Perf).
+        b.bench("cifar_round_e1 (10 steps, B=50)", || {
+            engine
+                .local_round("cifar_round_e1", &params, x.clone(), y.clone(), perms.clone(), 0.05)
+                .unwrap()
+        });
+    }
+
+    // Pallas kernel chunk (65536 elements) vs native Rust quantizer.
+    {
+        let chunk = engine.manifest.chunk;
+        let g = gradient_like(&mut rng, chunk);
+        let norm = cossgd::util::stats::l2_norm(&g) as f32;
+        let u = vec![0.5f32; chunk];
+        engine.warmup(&["quant_cos_8", "dequant_cos_8"]).unwrap();
+        b.bench_elems("pallas quant_cos_8 (1 chunk)", chunk as u64, || {
+            engine.kernel_quantize(8, &g, norm, 0.5, &u).unwrap()
+        });
+        let codes = engine.kernel_quantize(8, &g, norm, 0.5, &u).unwrap();
+        b.bench_elems("pallas dequant_cos_8 (1 chunk)", chunk as u64, || {
+            engine.kernel_dequantize(8, &codes, norm, 0.5).unwrap()
+        });
+        use cossgd::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
+        let q = CosineQuantizer::new(8, Rounding::Biased, BoundMode::FixedAngle(0.5));
+        b.bench_elems("native quantize (same chunk)", chunk as u64, || {
+            q.quantize(&g, &mut Pcg64::seeded(2))
+        });
+    }
+}

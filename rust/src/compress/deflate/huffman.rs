@@ -1,0 +1,548 @@
+//! Huffman machinery for DEFLATE: LSB-first bit I/O, optimal
+//! length-limited code construction (package-merge), canonical code
+//! assignment (RFC 1951 §3.2.2) and a canonical decoder.
+
+// ---------------------------------------------------------------------------
+// Bit I/O (RFC 1951: bytes filled LSB-first; Huffman codes are emitted
+// most-significant-code-bit first, i.e. bit-reversed before writing).
+// ---------------------------------------------------------------------------
+
+/// LSB-first bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    pub bytes: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write `n` bits of `value` (LSB-first plain integer, used for extra
+    /// bits and block headers).
+    #[inline]
+    pub fn write_bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || (value as u64) < (1u64 << n));
+        self.acc |= (value as u64) << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.bytes.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Write a Huffman code of `len` bits: DEFLATE stores codes
+    /// most-significant-bit first, so reverse before the LSB-first write.
+    #[inline]
+    pub fn write_code(&mut self, code: u32, len: u32) {
+        self.write_bits(reverse_bits(code, len), len);
+    }
+
+    /// Pad to a byte boundary with zero bits (for stored blocks).
+    pub fn align_byte(&mut self) {
+        if self.nbits > 0 {
+            self.bytes.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Flush any partial byte and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.bytes
+    }
+
+    /// Current length in bits (for cost accounting).
+    pub fn bit_len(&self) -> usize {
+        self.bytes.len() * 8 + self.nbits as usize
+    }
+}
+
+/// LSB-first bit reader.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+/// Error kind shared with the decoder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitsError(pub &'static str);
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self {
+            data,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.data.len() {
+            self.acc |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits as an LSB-first integer.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u32, BitsError> {
+        debug_assert!(n <= 32);
+        if self.nbits < n {
+            self.refill();
+            if self.nbits < n {
+                return Err(BitsError("unexpected end of stream"));
+            }
+        }
+        let v = (self.acc & ((1u64 << n) - 1)) as u32;
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    /// Peek up to 16 bits without consuming (zero-padded past the end).
+    #[inline]
+    pub fn peek16(&mut self) -> u32 {
+        if self.nbits < 16 {
+            self.refill();
+        }
+        (self.acc & 0xFFFF) as u32
+    }
+
+    /// Consume `n` bits previously peeked.
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> Result<(), BitsError> {
+        if self.nbits < n {
+            return Err(BitsError("consume past end"));
+        }
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(())
+    }
+
+    /// Discard bits to the next byte boundary (stored blocks).
+    pub fn align_byte(&mut self) {
+        let drop = self.nbits % 8;
+        self.acc >>= drop;
+        self.nbits -= drop;
+    }
+
+    /// Read a whole little-endian u16 (after align_byte).
+    pub fn read_u16(&mut self) -> Result<u16, BitsError> {
+        Ok(self.read_bits(16)? as u16)
+    }
+
+    /// Copy `n` raw bytes (after align_byte).
+    pub fn read_bytes(&mut self, n: usize, out: &mut Vec<u8>) -> Result<(), BitsError> {
+        for _ in 0..n {
+            out.push(self.read_bits(8)? as u8);
+        }
+        Ok(())
+    }
+}
+
+#[inline]
+pub fn reverse_bits(code: u32, len: u32) -> u32 {
+    code.reverse_bits() >> (32 - len.max(1))
+}
+
+// ---------------------------------------------------------------------------
+// Optimal length-limited code lengths: package-merge.
+// ---------------------------------------------------------------------------
+
+/// Compute optimal length-limited Huffman code lengths for `freqs`
+/// (0-frequency symbols get length 0). `max_len` ≤ 15.
+///
+/// Uses the package-merge algorithm (Larmore & Hirschberg 1990): optimal
+/// for the length constraint, O(max_len · n log n).
+pub fn build_lengths(freqs: &[u32], max_len: u32) -> Vec<u8> {
+    let n = freqs.len();
+    let mut lengths = vec![0u8; n];
+    let used: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    match used.len() {
+        0 => return lengths,
+        1 => {
+            // RFC permits a single 1-bit code.
+            lengths[used[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+    assert!(
+        (1u64 << max_len) >= used.len() as u64,
+        "alphabet of {} does not fit in {max_len}-bit codes",
+        used.len()
+    );
+
+    // Each item is (weight, set-of-leaf-symbols). Sets are stored as count
+    // increments applied on selection; we keep them as small Vec<u32> of
+    // symbol ids (alphabets are ≤ 288, packages shallow — fine).
+    #[derive(Clone)]
+    struct Item {
+        w: u64,
+        leaves: Vec<u32>,
+    }
+
+    let mut leaves: Vec<Item> = used
+        .iter()
+        .map(|&i| Item {
+            w: freqs[i] as u64,
+            leaves: vec![i as u32],
+        })
+        .collect();
+    leaves.sort_by_key(|it| it.w);
+
+    // packages(l) for l = 1: just the leaves.
+    let mut pkg: Vec<Item> = leaves.clone();
+    for _ in 1..max_len {
+        // Pair adjacent items into packages.
+        let mut merged: Vec<Item> = Vec::with_capacity(pkg.len() / 2 + leaves.len());
+        let mut pairs: Vec<Item> = Vec::with_capacity(pkg.len() / 2);
+        let mut it = pkg.chunks_exact(2);
+        for pair in &mut it {
+            let mut leaves_combined =
+                Vec::with_capacity(pair[0].leaves.len() + pair[1].leaves.len());
+            leaves_combined.extend_from_slice(&pair[0].leaves);
+            leaves_combined.extend_from_slice(&pair[1].leaves);
+            pairs.push(Item {
+                w: pair[0].w + pair[1].w,
+                leaves: leaves_combined,
+            });
+        }
+        // merge-sort leaves + pairs by weight.
+        let (mut a, mut b) = (leaves.iter().peekable(), pairs.into_iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(x), Some(y)) => {
+                    if x.w <= y.w {
+                        merged.push((*a.next().unwrap()).clone());
+                    } else {
+                        merged.push(b.next().unwrap());
+                    }
+                }
+                (Some(_), None) => merged.push((*a.next().unwrap()).clone()),
+                (None, Some(_)) => merged.push(b.next().unwrap()),
+                (None, None) => break,
+            }
+        }
+        pkg = merged;
+    }
+
+    // Select the first 2(m-1) items; each selection of a leaf adds 1 to its
+    // code length.
+    let take = 2 * (used.len() - 1);
+    for item in pkg.into_iter().take(take) {
+        for s in item.leaves {
+            lengths[s as usize] += 1;
+        }
+    }
+    lengths
+}
+
+/// Assign canonical codes from code lengths (RFC 1951 §3.2.2). Returns
+/// `codes[sym]` (valid where `lengths[sym] > 0`).
+pub fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
+    let max_len = lengths.iter().copied().max().unwrap_or(0) as usize;
+    let mut bl_count = vec![0u32; max_len + 1];
+    for &l in lengths {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = vec![0u32; max_len + 2];
+    let mut code = 0u32;
+    for bits in 1..=max_len {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    let mut codes = vec![0u32; lengths.len()];
+    for (sym, &l) in lengths.iter().enumerate() {
+        if l > 0 {
+            codes[sym] = next_code[l as usize];
+            next_code[l as usize] += 1;
+        }
+    }
+    codes
+}
+
+// ---------------------------------------------------------------------------
+// Canonical decoder.
+// ---------------------------------------------------------------------------
+
+/// Fast table-driven canonical Huffman decoder.
+///
+/// A primary lookup table indexed by `PRIMARY_BITS` peeked bits resolves
+/// short codes in one step; longer codes fall back to canonical
+/// first-code/offset search.
+pub struct Decoder {
+    primary: Vec<(u16, u8)>, // (symbol, length) — length 0 = needs fallback
+    // canonical fallback state
+    counts: Vec<u32>,          // codes per length
+    first_code: Vec<u32>,      // first canonical code of each length
+    first_index: Vec<u32>,     // index into `sorted` of each length's run
+    sorted: Vec<u16>,          // symbols ordered by (length, symbol)
+    max_len: u32,
+}
+
+const PRIMARY_BITS: u32 = 9;
+
+impl Decoder {
+    /// Build from code lengths. Returns Err for over-subscribed /
+    /// incomplete codes (except the degenerate 1-symbol code, which is
+    /// allowed by zlib and produced by our encoder).
+    pub fn new(lengths: &[u8]) -> Result<Decoder, BitsError> {
+        let max_len = lengths.iter().copied().max().unwrap_or(0) as u32;
+        if max_len == 0 {
+            return Err(BitsError("empty huffman code"));
+        }
+        if max_len > 15 {
+            return Err(BitsError("code length > 15"));
+        }
+        let mut counts = vec![0u32; (max_len + 1) as usize];
+        for &l in lengths {
+            if l > 0 {
+                counts[l as usize] += 1;
+            }
+        }
+        // Kraft check: allow incomplete codes only in the 1-symbol case.
+        let mut left = 1i64;
+        for bits in 1..=max_len {
+            left = (left << 1) - counts[bits as usize] as i64;
+            if left < 0 {
+                return Err(BitsError("over-subscribed huffman code"));
+            }
+        }
+        let nsyms: u32 = counts.iter().sum();
+        if left > 0 && !(nsyms == 1 && max_len == 1) {
+            return Err(BitsError("incomplete huffman code"));
+        }
+
+        let mut first_code = vec![0u32; (max_len + 2) as usize];
+        let mut first_index = vec![0u32; (max_len + 2) as usize];
+        let mut code = 0u32;
+        let mut index = 0u32;
+        for bits in 1..=max_len {
+            first_code[bits as usize] = code;
+            first_index[bits as usize] = index;
+            code = (code + counts[bits as usize]) << 1;
+            index += counts[bits as usize];
+        }
+        let mut sorted = vec![0u16; nsyms as usize];
+        let mut next_idx = first_index.clone();
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l > 0 {
+                sorted[next_idx[l as usize] as usize] = sym as u16;
+                next_idx[l as usize] += 1;
+            }
+        }
+
+        // Primary table: for each PRIMARY_BITS-bit LSB-first peek value,
+        // the decoded (symbol, length) if the code fits.
+        let codes = canonical_codes(lengths);
+        let table_len = 1usize << PRIMARY_BITS;
+        let mut primary = vec![(0u16, 0u8); table_len];
+        for (sym, &l) in lengths.iter().enumerate() {
+            let l = l as u32;
+            if l == 0 || l > PRIMARY_BITS {
+                continue;
+            }
+            let rev = reverse_bits(codes[sym], l);
+            // All peek values whose low `l` bits equal `rev` decode to sym.
+            let step = 1usize << l;
+            let mut v = rev as usize;
+            while v < table_len {
+                primary[v] = (sym as u16, l as u8);
+                v += step;
+            }
+        }
+
+        Ok(Decoder {
+            primary,
+            counts,
+            first_code,
+            first_index,
+            sorted,
+            max_len,
+        })
+    }
+
+    /// Decode one symbol.
+    #[inline]
+    pub fn decode(&self, br: &mut BitReader) -> Result<u16, BitsError> {
+        let peek = br.peek16();
+        let (sym, len) = self.primary[(peek & ((1 << PRIMARY_BITS) - 1)) as usize];
+        if len > 0 {
+            br.consume(len as u32)?;
+            return Ok(sym);
+        }
+        // Fallback: canonical search bit by bit (codes longer than
+        // PRIMARY_BITS are rare).
+        let mut code = 0u32;
+        for bits in 1..=self.max_len {
+            code = (code << 1) | ((peek >> (bits - 1)) & 1);
+            if bits > 16 {
+                return Err(BitsError("code too long"));
+            }
+            let c = self.counts[bits as usize];
+            let fc = self.first_code[bits as usize];
+            if c > 0 && code < fc + c && code >= fc {
+                br.consume(bits)?;
+                let idx = self.first_index[bits as usize] + (code - fc);
+                return Ok(self.sorted[idx as usize]);
+            }
+        }
+        Err(BitsError("invalid huffman code"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn bit_writer_reader_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xABCD, 16);
+        w.write_bits(1, 1);
+        w.write_bits(0x3FFFFFFF, 30);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xABCD);
+        assert_eq!(r.read_bits(1).unwrap(), 1);
+        assert_eq!(r.read_bits(30).unwrap(), 0x3FFFFFFF);
+        assert!(r.read_bits(8).is_err());
+    }
+
+    #[test]
+    fn reverse_bits_examples() {
+        assert_eq!(reverse_bits(0b110, 3), 0b011);
+        assert_eq!(reverse_bits(0b1, 1), 0b1);
+        assert_eq!(reverse_bits(0b10000000, 8), 0b00000001);
+    }
+
+    #[test]
+    fn package_merge_matches_huffman_when_unconstrained() {
+        // freqs 1,1,2,4: optimal lengths 3,3,2,1 (cost 1*3+1*3+2*2+4*1 = 14).
+        let lens = build_lengths(&[1, 1, 2, 4], 15);
+        let cost: u64 = lens
+            .iter()
+            .zip(&[1u32, 1, 2, 4])
+            .map(|(&l, &f)| l as u64 * f as u64)
+            .sum();
+        assert_eq!(cost, 14);
+        assert!(kraft_ok(&lens));
+    }
+
+    #[test]
+    fn package_merge_respects_length_limit() {
+        // Exponential freqs would want a deep tree; limit to 4.
+        let freqs: Vec<u32> = (0..12).map(|i| 1 << i).collect();
+        let lens = build_lengths(&freqs, 4);
+        assert!(lens.iter().all(|&l| l <= 4 && l > 0));
+        assert!(kraft_ok(&lens));
+    }
+
+    #[test]
+    fn single_symbol_code() {
+        let lens = build_lengths(&[0, 7, 0], 15);
+        assert_eq!(lens, vec![0, 1, 0]);
+        let dec = Decoder::new(&lens).unwrap();
+        let mut w = BitWriter::new();
+        let codes = canonical_codes(&lens);
+        w.write_code(codes[1], 1);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(dec.decode(&mut r).unwrap(), 1);
+    }
+
+    fn kraft_ok(lens: &[u8]) -> bool {
+        let sum: f64 = lens
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        sum <= 1.0 + 1e-12
+    }
+
+    #[test]
+    fn encode_decode_random_alphabets() {
+        let mut rng = Pcg64::seeded(81);
+        for trial in 0..20 {
+            let n = 2 + rng.below_usize(280);
+            let freqs: Vec<u32> = (0..n)
+                .map(|_| if rng.bernoulli(0.3) { 0 } else { 1 + rng.below(1000) as u32 })
+                .collect();
+            if freqs.iter().filter(|&&f| f > 0).count() < 2 {
+                continue;
+            }
+            let lens = build_lengths(&freqs, 15);
+            assert!(kraft_ok(&lens), "trial {trial}");
+            let codes = canonical_codes(&lens);
+            let dec = Decoder::new(&lens).unwrap();
+            // Encode a random symbol sequence and decode it back.
+            let syms: Vec<u16> = (0..200)
+                .map(|_| loop {
+                    let s = rng.below_usize(n);
+                    if freqs[s] > 0 {
+                        return s as u16;
+                    }
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &s in &syms {
+                w.write_code(codes[s as usize], lens[s as usize] as u32);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &s in &syms {
+                assert_eq!(dec.decode(&mut r).unwrap(), s, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_oversubscribed() {
+        // Three codes of length 1 is over-subscribed.
+        assert!(Decoder::new(&[1, 1, 1]).is_err());
+        // Incomplete: a single length-2 code (a lone symbol must be coded
+        // with 1 bit) — rejected.
+        assert!(Decoder::new(&[2, 0, 0]).is_err());
+        // The legal degenerate: one symbol at length 1.
+        assert!(Decoder::new(&[0, 1, 0]).is_ok());
+    }
+
+    #[test]
+    fn long_codes_fall_back_past_primary_table() {
+        // Construct lengths with a code longer than PRIMARY_BITS.
+        let mut freqs = vec![0u32; 40];
+        for (i, f) in freqs.iter_mut().enumerate() {
+            *f = 1 + (i as u32 % 3); // flat-ish -> lengths ~6
+        }
+        freqs[0] = 1 << 20; // force a very short code for 0, long for others
+        let lens = build_lengths(&freqs, 15);
+        let codes = canonical_codes(&lens);
+        let dec = Decoder::new(&lens).unwrap();
+        let mut w = BitWriter::new();
+        for s in 0..40u16 {
+            w.write_code(codes[s as usize], lens[s as usize] as u32);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for s in 0..40u16 {
+            assert_eq!(dec.decode(&mut r).unwrap(), s);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! LZ77 match finder for DEFLATE: 32 KiB sliding window, 3-byte hash
+//! chains, optional lazy matching (evaluate the match starting at the next
+//! byte before committing, as zlib does).
+
+pub const WINDOW_SIZE: usize = 32 * 1024;
+pub const MIN_MATCH: usize = 3;
+pub const MAX_MATCH: usize = 258;
+
+/// One token of the LZ77 stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Token {
+    Literal(u8),
+    /// Back-reference: `len` in 3..=258, `dist` in 1..=32768.
+    Match { len: u16, dist: u16 },
+}
+
+/// Matcher effort knobs (indexed by compression level).
+#[derive(Debug, Clone, Copy)]
+pub struct MatchParams {
+    /// Maximum chain positions examined per match attempt.
+    pub max_chain: usize,
+    /// Stop early once a match of this length is found.
+    pub good_len: usize,
+    /// Enable lazy matching.
+    pub lazy: bool,
+}
+
+impl MatchParams {
+    pub fn fast() -> Self {
+        MatchParams {
+            max_chain: 8,
+            good_len: 32,
+            lazy: false,
+        }
+    }
+    pub fn default_level() -> Self {
+        // Perf-tuned (EXPERIMENTS.md §Perf): greedy with a short chain.
+        // On quantized-gradient payloads lazy matching bought <2% ratio
+        // for ~2.5x the encode time.
+        MatchParams {
+            max_chain: 32,
+            good_len: 64,
+            lazy: false,
+        }
+    }
+    pub fn best() -> Self {
+        MatchParams {
+            max_chain: 512,
+            good_len: MAX_MATCH,
+            lazy: true,
+        }
+    }
+}
+
+/// Cap on hash-chain insertions per committed match (perf; long runs
+/// would otherwise insert hundreds of identical positions).
+const MAX_INSERTS: usize = 32;
+
+const HASH_BITS: u32 = 15;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+const NIL: u32 = u32::MAX;
+
+/// Length of the common prefix of `data[a..]` and `data[b..]`, capped at
+/// `max_len`. Compares 8 bytes at a time (perf: this is the hottest loop
+/// of the DEFLATE encoder — see EXPERIMENTS.md §Perf).
+#[inline]
+fn match_len(data: &[u8], a: usize, b: usize, max_len: usize) -> usize {
+    let mut l = 0usize;
+    while l + 8 <= max_len && b + l + 8 <= data.len() {
+        let x = u64::from_le_bytes(data[a + l..a + l + 8].try_into().unwrap());
+        let y = u64::from_le_bytes(data[b + l..b + l + 8].try_into().unwrap());
+        let diff = x ^ y;
+        if diff != 0 {
+            return l + (diff.trailing_zeros() / 8) as usize;
+        }
+        l += 8;
+    }
+    while l < max_len && data[a + l] == data[b + l] {
+        l += 1;
+    }
+    l
+}
+
+#[inline]
+fn hash3(data: &[u8], i: usize) -> usize {
+    // Multiplicative hash of 3 bytes.
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    ((v.wrapping_mul(0x9E37_79B1)) >> (32 - HASH_BITS)) as usize
+}
+
+/// Tokenize `data` into literals and back-references.
+pub fn tokenize(data: &[u8], params: MatchParams) -> Vec<Token> {
+    let n = data.len();
+    let mut tokens = Vec::with_capacity(n / 3 + 16);
+    if n < MIN_MATCH + 1 {
+        tokens.extend(data.iter().map(|&b| Token::Literal(b)));
+        return tokens;
+    }
+
+    let mut head = vec![NIL; HASH_SIZE];
+    let mut prev = vec![NIL; n];
+
+    #[inline]
+    fn find_match(
+        data: &[u8],
+        pos: usize,
+        head: &[u32],
+        prev: &[u32],
+        params: &MatchParams,
+    ) -> (usize, usize) {
+        let n = data.len();
+        if pos + MIN_MATCH > n {
+            return (0, 0);
+        }
+        let max_len = MAX_MATCH.min(n - pos);
+        let mut best_len = MIN_MATCH - 1;
+        let mut best_dist = 0usize;
+        let mut cand = head[hash3(data, pos)];
+        let min_pos = pos.saturating_sub(WINDOW_SIZE);
+        let mut chain = params.max_chain;
+        while cand != NIL && (cand as usize) >= min_pos && chain > 0 {
+            let c = cand as usize;
+            if c >= pos {
+                break;
+            }
+            // Quick reject: check the byte past the current best.
+            if best_len < max_len && data[c + best_len] == data[pos + best_len] {
+                let l = match_len(data, c, pos, max_len);
+                if l > best_len {
+                    best_len = l;
+                    best_dist = pos - c;
+                    if l >= params.good_len {
+                        break;
+                    }
+                }
+            }
+            cand = prev[c];
+            chain -= 1;
+        }
+        if best_len >= MIN_MATCH {
+            (best_len, best_dist)
+        } else {
+            (0, 0)
+        }
+    }
+
+    #[inline]
+    fn insert(data: &[u8], pos: usize, head: &mut [u32], prev: &mut [u32]) {
+        if pos + MIN_MATCH <= data.len() {
+            let h = hash3(data, pos);
+            prev[pos] = head[h];
+            head[h] = pos as u32;
+        }
+    }
+
+    let mut i = 0usize;
+    while i < n {
+        let (len, dist) = find_match(data, i, &head, &prev, &params);
+        if len == 0 {
+            insert(data, i, &mut head, &mut prev);
+            tokens.push(Token::Literal(data[i]));
+            i += 1;
+            continue;
+        }
+
+        // Lazy matching: if the match starting at i+1 is strictly longer,
+        // emit data[i] as a literal and defer.
+        if params.lazy && len < params.good_len && i + 1 < n {
+            insert(data, i, &mut head, &mut prev);
+            let (len2, _d2) = find_match(data, i + 1, &head, &prev, &params);
+            if len2 > len {
+                tokens.push(Token::Literal(data[i]));
+                i += 1;
+                continue;
+            }
+            // Commit to the match at i; insert its covered positions.
+            tokens.push(Token::Match {
+                len: len as u16,
+                dist: dist as u16,
+            });
+            // Perf: for very long matches (runs), inserting every covered
+            // position costs more than it gains — cap insertions (zlib's
+            // fast-level heuristic). See EXPERIMENTS.md §Perf.
+            let ins_end = (i + len).min(n).min(i + 1 + MAX_INSERTS);
+            for p in i + 1..ins_end {
+                insert(data, p, &mut head, &mut prev);
+            }
+            i += len;
+        } else {
+            tokens.push(Token::Match {
+                len: len as u16,
+                dist: dist as u16,
+            });
+            let ins_end = (i + len).min(n).min(i + MAX_INSERTS);
+            for p in i..ins_end {
+                insert(data, p, &mut head, &mut prev);
+            }
+            i += len;
+        }
+    }
+    tokens
+}
+
+/// Expand tokens back to bytes (used by tests and the decoder's contract).
+pub fn expand(tokens: &[Token]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let start = out
+                    .len()
+                    .checked_sub(dist as usize)
+                    .expect("match distance beyond output");
+                for k in 0..len as usize {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{bytes, compressible_bytes, forall};
+
+    #[test]
+    fn literal_only_for_tiny_input() {
+        let t = tokenize(b"ab", MatchParams::default_level());
+        assert_eq!(t, vec![Token::Literal(b'a'), Token::Literal(b'b')]);
+    }
+
+    #[test]
+    fn detects_runs() {
+        let data = vec![5u8; 300];
+        let t = tokenize(&data, MatchParams::default_level());
+        // One literal then matches with dist 1 covering the run.
+        assert_eq!(t[0], Token::Literal(5));
+        assert!(matches!(t[1], Token::Match { dist: 1, .. }));
+        assert!(t.len() <= 4, "run should compress to few tokens: {t:?}");
+        assert_eq!(expand(&t), data);
+    }
+
+    #[test]
+    fn detects_repeated_motif() {
+        let motif = b"hello world, ";
+        let mut data = Vec::new();
+        for _ in 0..50 {
+            data.extend_from_slice(motif);
+        }
+        let t = tokenize(&data, MatchParams::default_level());
+        let matches = t.iter().filter(|t| matches!(t, Token::Match { .. })).count();
+        assert!(matches >= 2, "{t:?}");
+        assert_eq!(expand(&t), data);
+    }
+
+    #[test]
+    fn match_lengths_and_distances_in_range() {
+        forall(
+            30,
+            91,
+            |rng, size| { let n = size.len(rng) * 211; compressible_bytes(rng, n) },
+            |data| {
+                let t = tokenize(data, MatchParams::default_level());
+                t.iter().all(|tok| match *tok {
+                    Token::Literal(_) => true,
+                    Token::Match { len, dist } => {
+                        (MIN_MATCH..=MAX_MATCH).contains(&(len as usize))
+                            && (1..=WINDOW_SIZE).contains(&(dist as usize))
+                    }
+                }) && expand(&t) == *data
+            },
+        );
+    }
+
+    #[test]
+    fn expand_inverts_tokenize_on_random_data() {
+        forall(
+            30,
+            92,
+            |rng, size| { let n = size.len(rng) * 97; bytes(rng, n) },
+            |data| expand(&tokenize(data, MatchParams::fast())) == *data,
+        );
+    }
+
+    #[test]
+    fn all_param_levels_roundtrip() {
+        let mut rng = crate::util::rng::Pcg64::seeded(93);
+        let data = compressible_bytes(&mut rng, 40_000);
+        for p in [MatchParams::fast(), MatchParams::default_level(), MatchParams::best()] {
+            assert_eq!(expand(&tokenize(&data, p)), data);
+        }
+    }
+
+    #[test]
+    fn lazy_matching_not_worse_than_greedy() {
+        let mut rng = crate::util::rng::Pcg64::seeded(94);
+        let data = compressible_bytes(&mut rng, 60_000);
+        let greedy = tokenize(&data, MatchParams { lazy: false, ..MatchParams::default_level() });
+        let lazy = tokenize(&data, MatchParams::default_level());
+        assert!(lazy.len() <= greedy.len() + greedy.len() / 20);
+    }
+}

@@ -1,0 +1,166 @@
+//! DEFLATE (RFC 1951) implemented from scratch — the paper's lossless stage
+//! (§4, Deutsch [10]).
+//!
+//! The paper's observation: *quantized* gradient codes have low byte-level
+//! entropy (most codes cluster around the "zero-gradient" angle bin), so a
+//! generic LZ77 + Huffman coder shrinks them a further 3–4×, while raw
+//! float32 gradients barely compress (~1.07×). We therefore need a real
+//! DEFLATE on the encode hot path; since no compression crate is available
+//! offline for runtime use, this module implements the format:
+//!
+//! * [`lz77`] — hash-chain match finder (32 KiB window, lazy matching),
+//! * [`huffman`] — canonical code construction (length-limited) + decode
+//!   tables,
+//! * [`encoder`] — block emitter choosing stored / fixed / dynamic per
+//!   block by exact cost,
+//! * [`decoder`] — a full inflate (stored, fixed and dynamic blocks).
+//!
+//! `flate2` (vendored for the `xla` crate) is used **in tests only** to
+//! cross-validate both directions of our implementation against zlib.
+
+pub mod decoder;
+pub mod encoder;
+pub mod huffman;
+pub mod lz77;
+
+pub use decoder::inflate;
+pub use encoder::{deflate, CompressionLevel};
+
+/// Convenience: compress with the default level.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    deflate(data, CompressionLevel::Default)
+}
+
+/// Convenience: decompress, panicking on malformed input is avoided — this
+/// returns a Result with a descriptive error.
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>, decoder::InflateError> {
+    inflate(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{bytes, compressible_bytes, forall};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn empty_input() {
+        let c = compress(&[]);
+        assert_eq!(decompress(&c).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        for data in [&b"a"[..], b"ab", b"aaa", b"abcabcabc"] {
+            let c = compress(data);
+            assert_eq!(decompress(&c).unwrap(), data, "data={data:?}");
+        }
+    }
+
+    #[test]
+    fn long_runs_compress_hard() {
+        let data = vec![7u8; 100_000];
+        let c = compress(&data);
+        assert!(c.len() < 600, "run of 100k bytes -> {} bytes", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn random_data_roundtrips_with_small_overhead() {
+        let mut rng = Pcg64::seeded(71);
+        let data = bytes(&mut rng, 50_000);
+        let c = compress(&data);
+        assert!(c.len() < data.len() + data.len() / 100 + 64);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn property_roundtrip_identity() {
+        forall(
+            60,
+            72,
+            |rng, size| {
+                let n = size.len(rng) * 37;
+                if rng.bernoulli(0.5) {
+                    compressible_bytes(rng, n)
+                } else {
+                    bytes(rng, n)
+                }
+            },
+            |data| decompress(&compress(data)).unwrap() == *data,
+        );
+    }
+
+    #[test]
+    fn quantized_gradient_codes_compress_much_better_than_floats() {
+        // The paper's Figure 5 phenomenon, as a unit test.
+        let mut rng = Pcg64::seeded(73);
+        let g = crate::util::propcheck::gradient_like(&mut rng, 60_000);
+        let quant = crate::compress::cosine::CosineQuantizer::paper_default(8)
+            .quantize(&g, &mut rng);
+        let packed = crate::compress::bitpack::pack(&quant.codes, 8);
+        let float_bytes: Vec<u8> = g.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let ratio_codes = packed.len() as f64 / compress(&packed).len() as f64;
+        let ratio_floats = float_bytes.len() as f64 / compress(&float_bytes).len() as f64;
+        assert!(
+            ratio_codes > 1.7 * ratio_floats && ratio_codes > 1.9,
+            "codes ratio {ratio_codes:.2} vs floats ratio {ratio_floats:.2}"
+        );
+        assert!(ratio_floats < 1.6, "floats should barely compress");
+    }
+
+    // ---- cross-validation against zlib (flate2, tests only) -------------
+
+    #[test]
+    fn our_deflate_is_readable_by_zlib() {
+        use std::io::Read;
+        let mut rng = Pcg64::seeded(74);
+        for n in [0usize, 1, 100, 5000, 70_000] {
+            let data = compressible_bytes(&mut rng, n);
+            let ours = compress(&data);
+            let mut z = flate2::read::DeflateDecoder::new(&ours[..]);
+            let mut out = Vec::new();
+            z.read_to_end(&mut out).expect("zlib rejected our stream");
+            assert_eq!(out, data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn zlib_deflate_is_readable_by_us() {
+        use std::io::Write;
+        let mut rng = Pcg64::seeded(75);
+        for n in [0usize, 1, 333, 10_000, 80_000] {
+            let data = bytes(&mut rng, n);
+            for level in [0u32, 1, 6, 9] {
+                let mut e = flate2::write::DeflateEncoder::new(
+                    Vec::new(),
+                    flate2::Compression::new(level),
+                );
+                e.write_all(&data).unwrap();
+                let zbytes = e.finish().unwrap();
+                assert_eq!(
+                    decompress(&zbytes).expect("we rejected zlib's stream"),
+                    data,
+                    "n={n} level={level}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratio_competitive_with_zlib() {
+        use std::io::Write;
+        let mut rng = Pcg64::seeded(76);
+        let data = compressible_bytes(&mut rng, 120_000);
+        let ours = compress(&data).len();
+        let mut e =
+            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::new(6));
+        e.write_all(&data).unwrap();
+        let theirs = e.finish().unwrap().len();
+        // Within 40% of zlib level 6 on the regime we care about.
+        assert!(
+            (ours as f64) < theirs as f64 * 1.4,
+            "ours={ours} zlib={theirs}"
+        );
+    }
+}

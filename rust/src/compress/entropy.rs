@@ -1,0 +1,142 @@
+//! Byte-stream information statistics for Figure 5: multi-scale entropy of
+//! quantized-gradient codes vs raw float32 bytes, and accumulated DEFLATE
+//! compression-ratio curves.
+//!
+//! The paper's argument (§4): quantized gradients concentrate on few byte
+//! patterns (low entropy at every scale), so a generic lossless coder
+//! compresses them 3–4× further, while adjacent float32 values share almost
+//! no byte patterns (entropy ≈ 8 bits/byte).
+
+use std::collections::HashMap;
+
+use super::deflate;
+
+/// Shannon entropy of `data` viewed as a stream of `scale`-byte symbols,
+/// normalized to **bits per byte** (so a uniform random stream → 8.0 at
+/// every scale and any value below 8 indicates exploitable structure).
+pub fn entropy_bits_per_byte(data: &[u8], scale: usize) -> f64 {
+    assert!(scale >= 1);
+    if data.len() < scale {
+        return 0.0;
+    }
+    let mut counts: HashMap<&[u8], u64> = HashMap::new();
+    let n_symbols = data.len() / scale;
+    for i in 0..n_symbols {
+        *counts.entry(&data[i * scale..(i + 1) * scale]).or_insert(0) += 1;
+    }
+    let n = n_symbols as f64;
+    let bits_per_symbol: f64 = counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum();
+    bits_per_symbol / scale as f64
+}
+
+/// Multi-scale entropy profile at scales 1, 2, 4, 8 bytes.
+pub fn multiscale_entropy(data: &[u8]) -> Vec<(usize, f64)> {
+    [1usize, 2, 4, 8]
+        .iter()
+        .map(|&s| (s, entropy_bits_per_byte(data, s)))
+        .collect()
+}
+
+/// Accumulated compression-ratio curve: for growing prefixes of `data`,
+/// `ratio(i) = prefix_len / deflate(prefix).len()`. Returns
+/// `(prefix_len, ratio)` pairs at `points` log-spaced sizes — the paper's
+/// Fig. 5 right panel.
+pub fn accumulated_compression_curve(data: &[u8], points: usize) -> Vec<(usize, f64)> {
+    let mut out = Vec::with_capacity(points);
+    if data.is_empty() || points == 0 {
+        return out;
+    }
+    let min_len = 256.min(data.len());
+    for k in 0..points {
+        let t = (k + 1) as f64 / points as f64;
+        let len = ((min_len as f64)
+            * ((data.len() as f64 / min_len as f64).powf(t)))
+        .round() as usize;
+        let len = len.clamp(1, data.len());
+        let compressed = deflate::compress(&data[..len]).len().max(1);
+        out.push((len, len as f64 / compressed as f64));
+    }
+    out
+}
+
+/// Reinterpret an f32 slice as little-endian bytes (the float32 baseline
+/// stream of Fig. 5).
+pub fn f32_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn constant_stream_has_zero_entropy() {
+        let data = vec![42u8; 4096];
+        for scale in [1usize, 2, 4, 8] {
+            assert!(entropy_bits_per_byte(&data, scale) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn random_stream_has_high_scale1_entropy() {
+        let mut rng = Pcg64::seeded(101);
+        let data: Vec<u8> = (0..1 << 16).map(|_| rng.next_u32() as u8).collect();
+        let e1 = entropy_bits_per_byte(&data, 1);
+        assert!(e1 > 7.9, "e1={e1}");
+    }
+
+    #[test]
+    fn two_symbol_stream_is_one_bit() {
+        let mut rng = Pcg64::seeded(102);
+        let data: Vec<u8> = (0..1 << 14)
+            .map(|_| if rng.bernoulli(0.5) { 0u8 } else { 255u8 })
+            .collect();
+        let e1 = entropy_bits_per_byte(&data, 1);
+        assert!((e1 - 1.0).abs() < 0.02, "e1={e1}");
+    }
+
+    #[test]
+    fn quantized_codes_have_lower_entropy_than_float_bytes() {
+        // Fig. 5's core claim at unit-test scale.
+        let mut rng = Pcg64::seeded(103);
+        let g = crate::util::propcheck::gradient_like(&mut rng, 30_000);
+        let quant =
+            crate::compress::cosine::CosineQuantizer::paper_default(8).quantize(&g, &mut rng);
+        let packed = crate::compress::bitpack::pack(&quant.codes, 8);
+        let floats = f32_bytes(&g);
+        for scale in [1usize, 2] {
+            let eq = entropy_bits_per_byte(&packed, scale);
+            let ef = entropy_bits_per_byte(&floats, scale);
+            assert!(eq < ef - 1.0, "scale={scale}: {eq} !< {ef}-1");
+        }
+    }
+
+    #[test]
+    fn compression_curve_monotone_sizes() {
+        let mut rng = Pcg64::seeded(104);
+        let data = crate::util::propcheck::compressible_bytes(&mut rng, 20_000);
+        let curve = accumulated_compression_curve(&data, 8);
+        assert_eq!(curve.len(), 8);
+        assert!(curve.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert_eq!(curve.last().unwrap().0, 20_000);
+        // Compressible data: final ratio is substantially > 1.
+        assert!(curve.last().unwrap().1 > 2.0);
+    }
+
+    #[test]
+    fn f32_bytes_layout() {
+        assert_eq!(f32_bytes(&[1.0]), 1.0f32.to_le_bytes().to_vec());
+        assert_eq!(f32_bytes(&[]).len(), 0);
+    }
+}

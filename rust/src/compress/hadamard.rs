@@ -1,0 +1,173 @@
+//! Randomized Hadamard rotation (Suresh et al. [40]; the "R" in the paper's
+//! "linear (U, R)" baseline [17]).
+//!
+//! The rotation `R = (1/√d) · H · D` — `H` the Walsh–Hadamard matrix, `D` a
+//! seeded random ±1 diagonal — spreads the gradient's energy uniformly
+//! across coordinates before linear quantization, shrinking `max|x|` and
+//! therefore the quantization error. `R` is orthonormal, so the server
+//! inverts with `Rᵀ = (1/√d) · D · H`. Only the seed travels on the wire.
+//!
+//! Implementation: in-place fast Walsh–Hadamard transform (O(d log d)),
+//! inputs padded to the next power of two.
+
+use crate::util::rng::Pcg64;
+
+/// In-place (unnormalized) fast Walsh–Hadamard transform.
+/// `data.len()` must be a power of two.
+pub fn fwht(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fwht length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        for chunk in data.chunks_exact_mut(h * 2) {
+            let (a, b) = chunk.split_at_mut(h);
+            for i in 0..h {
+                let x = a[i];
+                let y = b[i];
+                a[i] = x + y;
+                b[i] = x - y;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Seeded ±1 diagonal. Deterministic: the server regenerates it from the
+/// wire seed rather than receiving d bytes.
+fn rademacher(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0xD1A6);
+    let mut out = Vec::with_capacity(n);
+    // 64 signs per draw.
+    let mut i = 0;
+    while i < n {
+        let mut word = rng.next_u64();
+        for _ in 0..64.min(n - i) {
+            out.push(if word & 1 == 1 { 1.0 } else { -1.0 });
+            word >>= 1;
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Next power of two ≥ n (n ≥ 1).
+pub fn padded_len(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Forward rotation: pad `g` to a power of two, apply `(1/√d)·H·D`.
+/// Returns the rotated vector of length `padded_len(g.len())`.
+pub fn rotate(g: &[f32], seed: u64) -> Vec<f32> {
+    let d = padded_len(g.len().max(1));
+    let signs = rademacher(seed, d);
+    let mut x = vec![0.0f32; d];
+    for (i, &v) in g.iter().enumerate() {
+        x[i] = v * signs[i];
+    }
+    fwht(&mut x);
+    let scale = 1.0 / (d as f32).sqrt();
+    for v in &mut x {
+        *v *= scale;
+    }
+    x
+}
+
+/// Inverse rotation: apply `(1/√d)·D·H` and truncate to `n`.
+pub fn unrotate(x: &[f32], seed: u64, n: usize) -> Vec<f32> {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "unrotate length {d} not a power of two");
+    assert!(n <= d);
+    let signs = rademacher(seed, d);
+    let mut y = x.to_vec();
+    fwht(&mut y);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(y[i] * scale * signs[i]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, gradient_like};
+    use crate::util::stats::l2_norm;
+
+    #[test]
+    fn fwht_matches_direct_hadamard_4() {
+        // H_4 applied to e_1 gives [1,1,1,1]; to [1,2,3,4] gives known values.
+        let mut x = [1.0f32, 2.0, 3.0, 4.0];
+        fwht(&mut x);
+        assert_eq!(x, [10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn fwht_involution_up_to_n() {
+        let mut rng = Pcg64::seeded(41);
+        for pow in [1usize, 4, 7] {
+            let n = 1 << pow;
+            let orig: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut x = orig.clone();
+            fwht(&mut x);
+            fwht(&mut x);
+            for (a, b) in orig.iter().zip(&x) {
+                assert!((a * n as f32 - b).abs() < 1e-3 * n as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_roundtrips() {
+        forall(
+            40,
+            42,
+            |rng, size| { let n = size.len(rng) * 3 + 1; gradient_like(rng, n) },
+            |g| {
+                let rot = rotate(g, 123);
+                let back = unrotate(&rot, 123, g.len());
+                g.iter()
+                    .zip(&back)
+                    .all(|(&a, &b)| (a - b).abs() < 1e-4 * (1.0 + a.abs()))
+            },
+        );
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut rng = Pcg64::seeded(43);
+        let g = gradient_like(&mut rng, 1000);
+        let rot = rotate(&g, 9);
+        let n0 = l2_norm(&g);
+        let n1 = l2_norm(&rot);
+        assert!((n0 - n1).abs() < 1e-3 * n0.max(1.0), "{n0} vs {n1}");
+    }
+
+    #[test]
+    fn rotation_flattens_spikes() {
+        // The whole point: a single dominant coordinate spreads out, so
+        // max|x| shrinks toward ‖g‖/√d.
+        let mut g = vec![0.0f32; 1024];
+        g[17] = 5.0;
+        let rot = rotate(&g, 7);
+        let max_before = 5.0f32;
+        let max_after = rot.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(
+            max_after < max_before / 4.0,
+            "max_after={max_after} should be ~5/32"
+        );
+    }
+
+    #[test]
+    fn different_seeds_give_different_rotations() {
+        let g: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
+        let a = rotate(&g, 1);
+        let b = rotate(&g, 2);
+        assert!(a.iter().zip(&b).any(|(x, y)| (x - y).abs() > 1e-3));
+        // But each inverts correctly with its own seed.
+        let back = unrotate(&b, 2, g.len());
+        for (x, y) in g.iter().zip(&back) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Linear (value-space) uniform quantization — the baseline family the
+//! paper compares against: biased round-to-nearest and the probabilistic
+//! unbiased regime of QSGD [2] / Konečný et al. [17].
+//!
+//! Values are quantized uniformly on `[-b_g, b_g]` with `b_g = max |g_i|`
+//! (optionally top-p% clipped, for parity with the cosine ablations).
+//! Combined with [`super::hadamard`] this is the paper's "linear (U, R)"
+//! baseline.
+
+use crate::util::rng::Pcg64;
+use crate::util::stats::kth_largest_abs;
+
+use super::cosine::Rounding;
+
+/// How the value bound `b_g` is obtained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValueBound {
+    /// `b_g = max |g_i|`.
+    MaxAbs,
+    /// `b_g` = the `⌈p%·n⌉`-th largest |g|; larger values saturate.
+    ClipTopPercent(f64),
+}
+
+/// Configuration of the linear quantizer.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearQuantizer {
+    pub bits: u8,
+    pub rounding: Rounding,
+    pub bound: ValueBound,
+}
+
+impl LinearQuantizer {
+    pub fn new(bits: u8, rounding: Rounding, bound: ValueBound) -> Self {
+        assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+        Self {
+            bits,
+            rounding,
+            bound,
+        }
+    }
+
+    /// The paper's "linear" baseline (biased) at `s` bits.
+    pub fn biased(bits: u8) -> Self {
+        Self::new(bits, Rounding::Biased, ValueBound::MaxAbs)
+    }
+
+    /// The paper's "linear (U)" baseline (probabilistic unbiased, QSGD [2]).
+    pub fn unbiased(bits: u8) -> Self {
+        Self::new(bits, Rounding::Unbiased, ValueBound::MaxAbs)
+    }
+
+    pub fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    /// Quantize. Returns codes plus the value bound needed to invert.
+    pub fn quantize(&self, g: &[f32], rng: &mut Pcg64) -> LinearQuantized {
+        let n = g.len();
+        let bound = match self.bound {
+            ValueBound::MaxAbs => g.iter().fold(0.0f32, |m, &x| m.max(x.abs())),
+            ValueBound::ClipTopPercent(p) => {
+                let k = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+                kth_largest_abs(g, k.min(n))
+            }
+        };
+        if !(bound.is_finite() && bound > 0.0) {
+            return LinearQuantized {
+                codes: vec![0; n],
+                bound: 0.0,
+                bits: self.bits,
+            };
+        }
+        let max_code = (self.levels() - 1) as f32;
+        let scale = max_code / (2.0 * bound);
+        let mut codes = Vec::with_capacity(n);
+        match self.rounding {
+            Rounding::Biased => {
+                for &gi in g {
+                    let v = (gi.clamp(-bound, bound) + bound) * scale;
+                    codes.push(((v + 0.5) as u16).min(max_code as u16));
+                }
+            }
+            Rounding::Unbiased => {
+                for &gi in g {
+                    let v = (gi.clamp(-bound, bound) + bound) * scale;
+                    let f = v.floor();
+                    let p = v - f;
+                    let up = (rng.f32() < p) as u16;
+                    codes.push(((f as u16) + up).min(max_code as u16));
+                }
+            }
+        }
+        LinearQuantized {
+            codes,
+            bound,
+            bits: self.bits,
+        }
+    }
+}
+
+/// Output of [`LinearQuantizer::quantize`].
+#[derive(Debug, Clone)]
+pub struct LinearQuantized {
+    pub codes: Vec<u16>,
+    pub bound: f32,
+    pub bits: u8,
+}
+
+impl LinearQuantized {
+    pub fn dequantize(&self) -> Vec<f32> {
+        dequantize_codes(&self.codes, self.bound, self.bits)
+    }
+
+    /// Width of one value interval.
+    pub fn interval_width(&self) -> f32 {
+        2.0 * self.bound / ((1u32 << self.bits) - 1) as f32
+    }
+}
+
+/// Server-side reconstruction from raw codes.
+pub fn dequantize_codes(codes: &[u16], bound: f32, bits: u8) -> Vec<f32> {
+    if bound == 0.0 {
+        return vec![0.0; codes.len()];
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let step = 2.0 * bound / max_code;
+    codes.iter().map(|&c| c as f32 * step - bound).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, gradient_like};
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let mut rng = Pcg64::seeded(31);
+        forall(
+            30,
+            32,
+            |r, size| { let n = size.len(r) * 8 + 2; gradient_like(r, n) },
+            |g| {
+                let quant = LinearQuantizer::biased(8).quantize(g, &mut rng);
+                let back = quant.dequantize();
+                let tol = quant.interval_width() / 2.0 + 1e-6;
+                g.iter().zip(&back).all(|(&a, &b)| (a - b).abs() <= tol)
+            },
+        );
+    }
+
+    #[test]
+    fn error_bound_is_uniform_unlike_cosine() {
+        // The defining contrast with the cosine quantizer: the linear error
+        // bound does not depend on |g|.
+        let q = LinearQuantizer::biased(4);
+        let g = vec![0.001f32, 0.5, -0.9, 1.0, -0.002];
+        let mut rng = Pcg64::seeded(33);
+        let quant = q.quantize(&g, &mut rng);
+        let back = quant.dequantize();
+        let half = quant.interval_width() / 2.0 + 1e-6;
+        for (&a, &b) in g.iter().zip(&back) {
+            assert!((a - b).abs() <= half);
+        }
+    }
+
+    #[test]
+    fn unbiased_mean_converges_to_value() {
+        let mut rng = Pcg64::seeded(34);
+        let g = vec![0.031f32, -0.017, 0.004, 0.0, -0.029];
+        let q = LinearQuantizer::unbiased(2);
+        let reps = 6000;
+        let mut acc = vec![0.0f64; g.len()];
+        for _ in 0..reps {
+            let quant = q.quantize(&g, &mut rng);
+            for (a, v) in acc.iter_mut().zip(quant.dequantize()) {
+                *a += v as f64;
+            }
+        }
+        let step = 2.0 * 0.031 / 3.0;
+        let tol = step as f64 * 4.0 / (reps as f64).sqrt() + 1e-4;
+        for (i, &gi) in g.iter().enumerate() {
+            let mean = acc[i] / reps as f64;
+            assert!(
+                (mean - gi as f64).abs() < tol,
+                "i={i} mean={mean} gi={gi} tol={tol}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_vector() {
+        let mut rng = Pcg64::seeded(35);
+        let q = LinearQuantizer::biased(2);
+        let quant = q.quantize(&[0.0; 9], &mut rng);
+        assert_eq!(quant.bound, 0.0);
+        assert_eq!(quant.dequantize(), vec![0.0; 9]);
+    }
+
+    #[test]
+    fn clipping_saturates_outliers() {
+        let mut rng = Pcg64::seeded(36);
+        let mut g = vec![0.01f32; 100];
+        g[0] = 10.0;
+        let q = LinearQuantizer::new(4, Rounding::Biased, ValueBound::ClipTopPercent(1.0));
+        let quant = q.quantize(&g, &mut rng);
+        assert!(quant.bound <= 10.0);
+        let back = quant.dequantize();
+        assert!(back[0] <= quant.bound + 1e-6);
+        // The bulk is reconstructed within a half-step of the TIGHT bound.
+        let half = quant.interval_width() / 2.0 + 1e-6;
+        for (&a, &b) in g.iter().zip(&back).skip(1) {
+            assert!((a - b).abs() <= half);
+        }
+    }
+
+    #[test]
+    fn codes_fit_in_declared_bits() {
+        let mut rng = Pcg64::seeded(37);
+        let g = gradient_like(&mut rng, 777);
+        for bits in [1u8, 2, 4, 8] {
+            let quant = LinearQuantizer::unbiased(bits).quantize(&g, &mut rng);
+            assert!(quant.codes.iter().all(|&c| (c as u32) < (1u32 << bits)));
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Gradient compression stack.
+//!
+//! The paper's contribution ([`cosine`]) plus every baseline it compares
+//! against, the composition machinery ([`codec`]), the lossless stage
+//! ([`deflate`], built from scratch), and the byte-exact wire format
+//! ([`wire`]) the simulated network meters.
+//!
+//! Pipeline (client → server):
+//!
+//! ```text
+//!  g = M_in − M*  ──sparsify (seeded mask)──►  kept values
+//!      ──quantize (cosine/linear/…, s bits)──►  codes + norm + bound
+//!      ──bitpack (s bits/code)──►  bytes  ──DEFLATE──►  wire payload
+//! ```
+//!
+//! The server reverses every stage; the decoded dense gradient feeds
+//! FedAvg aggregation (Eq. 1).
+
+pub mod bitpack;
+pub mod codec;
+pub mod cosine;
+pub mod deflate;
+pub mod entropy;
+pub mod hadamard;
+pub mod linear;
+pub mod signsgd;
+pub mod sparsify;
+pub mod topk;
+pub mod wire;
+
+pub use codec::{ClientCodecState, Codec, CodecKind, EncodedGradient};

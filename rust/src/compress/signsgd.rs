@@ -1,0 +1,172 @@
+//! 1-bit baselines: signSGD [4], signSGD+Norm [43] and EF-signSGD [15].
+//!
+//! * **signSGD** transmits only the sign of each coordinate; the server
+//!   treats `sign(g)` as the update (magnitude is folded into η_s).
+//! * **signSGD+Norm** additionally transmits `‖g‖₂` and reconstructs
+//!   `sign(g)·‖g‖₂/√n` — norm-preserving; the paper notes this is exactly
+//!   CosSGD's 1-bit degenerate case.
+//! * **EF-signSGD** keeps a per-client residual `e`: compress
+//!   `p = g + e` as `(‖p‖₁/n)·sign(p)` and carry `e ← p − compressed`
+//!   forward. The residual is client-local state — never transmitted.
+
+use crate::util::stats::l2_norm;
+
+/// Sign bits of a vector (1 = non-negative). One code per element, ready
+/// for 1-bit packing.
+pub fn sign_codes(g: &[f32]) -> Vec<u16> {
+    g.iter().map(|&x| (x >= 0.0) as u16).collect()
+}
+
+/// signSGD reconstruction: ±1 per coordinate.
+pub fn decode_sign(codes: &[u16]) -> Vec<f32> {
+    codes
+        .iter()
+        .map(|&c| if c == 1 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// signSGD+Norm reconstruction: ±‖g‖₂/√n per coordinate (preserves ‖g‖₂).
+pub fn decode_sign_norm(codes: &[u16], norm: f32) -> Vec<f32> {
+    let n = codes.len().max(1);
+    let mag = norm / (n as f32).sqrt();
+    codes
+        .iter()
+        .map(|&c| if c == 1 { mag } else { -mag })
+        .collect()
+}
+
+/// Per-client error-feedback memory for EF-signSGD.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorFeedback {
+    pub residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(n: usize) -> Self {
+        Self {
+            residual: vec![0.0; n],
+        }
+    }
+
+    /// Encode `g` with error feedback. Returns `(codes, scale)`; the
+    /// reconstruction is `scale · sign(p)` with `p = g + e`, and the
+    /// residual is updated in place (Karimireddy et al. [15], Alg. 1).
+    pub fn encode(&mut self, g: &[f32]) -> (Vec<u16>, f32) {
+        if self.residual.len() != g.len() {
+            // First use (or model resize): cold-start the memory.
+            self.residual = vec![0.0; g.len()];
+        }
+        let p: Vec<f32> = g
+            .iter()
+            .zip(&self.residual)
+            .map(|(&gi, &ei)| gi + ei)
+            .collect();
+        let n = p.len().max(1);
+        let scale = p.iter().map(|x| x.abs()).sum::<f32>() / n as f32; // ‖p‖₁/n
+        let codes = sign_codes(&p);
+        for (ei, (&pi, &ci)) in self.residual.iter_mut().zip(p.iter().zip(&codes)) {
+            let rec = if ci == 1 { scale } else { -scale };
+            *ei = pi - rec;
+        }
+        (codes, scale)
+    }
+}
+
+/// EF-signSGD reconstruction: `scale · sign`.
+pub fn decode_ef(codes: &[u16], scale: f32) -> Vec<f32> {
+    codes
+        .iter()
+        .map(|&c| if c == 1 { scale } else { -scale })
+        .collect()
+}
+
+/// Convenience: ‖g‖₂ as f32 (shared by the codecs).
+pub fn norm2(g: &[f32]) -> f32 {
+    l2_norm(g) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::gradient_like;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn signs_preserved() {
+        let g = [1.5f32, -0.2, 0.0, -7.0];
+        assert_eq!(sign_codes(&g), vec![1, 0, 1, 0]);
+        assert_eq!(decode_sign(&sign_codes(&g)), vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn sign_norm_preserves_l2_norm() {
+        let mut rng = Pcg64::seeded(51);
+        let g = gradient_like(&mut rng, 4096);
+        let norm = norm2(&g);
+        let rec = decode_sign_norm(&sign_codes(&g), norm);
+        let rec_norm = norm2(&rec);
+        assert!((rec_norm - norm).abs() < 1e-3 * norm, "{rec_norm} vs {norm}");
+    }
+
+    #[test]
+    fn sign_norm_matches_cosine_one_bit_structure() {
+        // Both produce ±c·‖g‖ with a single magnitude c and matching signs.
+        let mut rng = Pcg64::seeded(52);
+        let g = gradient_like(&mut rng, 256);
+        let rec = decode_sign_norm(&sign_codes(&g), norm2(&g));
+        let mags: Vec<f32> = rec.iter().map(|x| x.abs()).collect();
+        for m in &mags {
+            assert!((m - mags[0]).abs() < 1e-6);
+        }
+        for (a, b) in g.iter().zip(&rec) {
+            if a.abs() > 0.0 {
+                assert_eq!(a.signum(), b.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_residual_tracks_compression_error() {
+        let mut ef = ErrorFeedback::new(4);
+        let g = [1.0f32, -0.5, 0.25, -0.125];
+        let (codes, scale) = ef.encode(&g);
+        let rec = decode_ef(&codes, scale);
+        for ((&gi, &ri), &ei) in g.iter().zip(&rec).zip(&ef.residual) {
+            assert!((ei - (gi - ri)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_feedback_compensates_over_time() {
+        // Repeatedly sending the SAME gradient: with EF, the cumulative
+        // reconstruction converges to the cumulative true signal
+        // (residual stays bounded), whereas plain sign loses magnitude info.
+        let g = [0.9f32, -0.1, 0.05, -0.02];
+        let mut ef = ErrorFeedback::new(4);
+        let mut cum = [0.0f32; 4];
+        let steps = 200;
+        for _ in 0..steps {
+            let (codes, scale) = ef.encode(&g);
+            for (c, r) in cum.iter_mut().zip(decode_ef(&codes, scale)) {
+                *c += r;
+            }
+        }
+        for (i, (&ci, &gi)) in cum.iter().zip(&g).enumerate() {
+            let target = gi * steps as f32;
+            // Error is bounded by the residual, not growing with steps.
+            assert!(
+                (ci - target).abs() <= 2.0 * 0.9 + 1e-3,
+                "i={i} cum={ci} target={target}"
+            );
+        }
+    }
+
+    #[test]
+    fn ef_cold_start_on_resize() {
+        let mut ef = ErrorFeedback::new(2);
+        let g = [1.0f32, 2.0, 3.0];
+        let (codes, _) = ef.encode(&g);
+        assert_eq!(codes.len(), 3);
+        assert_eq!(ef.residual.len(), 3);
+    }
+}

@@ -1,0 +1,140 @@
+//! Random-mask gradient sparsification (Konečný et al. [17], §4 of the
+//! paper: "we utilize random masks to send parts of the gradients").
+//!
+//! A seeded pseudo-random mask selects `⌈keep_frac·n⌉` coordinates; only
+//! their values are quantized and transmitted, together with the 8-byte
+//! mask seed. The server regenerates the mask from the seed and scatters
+//! the decoded values into a dense zero vector (unselected coordinates
+//! contribute 0 to the FedAvg average, exactly as the paper describes —
+//! "there are 50% gradients on the server [that] are 0").
+
+use crate::util::rng::Pcg64;
+
+/// The selected coordinates for one update, regenerable from `(seed, n)`.
+#[derive(Debug, Clone)]
+pub struct Mask {
+    pub seed: u64,
+    pub n: usize,
+    pub kept: Vec<usize>,
+}
+
+/// Number of coordinates kept at fraction `f` of `n` (at least 1).
+pub fn kept_count(n: usize, keep_frac: f64) -> usize {
+    ((keep_frac * n as f64).ceil() as usize).clamp(1, n)
+}
+
+/// Generate the mask for `(seed, n, keep_frac)`. Client and server call the
+/// same function — only the seed travels.
+pub fn mask(seed: u64, n: usize, keep_frac: f64) -> Mask {
+    let k = kept_count(n, keep_frac);
+    let mut rng = Pcg64::new(seed, 0x5AA5);
+    let mut kept = rng.sample_indices(n, k);
+    kept.sort_unstable(); // sorted order makes gather/scatter cache-friendly
+    Mask { seed, n, kept }
+}
+
+/// Gather the kept coordinates of `g`.
+pub fn gather(g: &[f32], m: &Mask) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m.n);
+    m.kept.iter().map(|&i| g[i]).collect()
+}
+
+/// Scatter `values` back to a dense vector (zeros elsewhere).
+pub fn scatter(values: &[f32], m: &Mask) -> Vec<f32> {
+    assert_eq!(values.len(), m.kept.len());
+    let mut out = vec![0.0f32; m.n];
+    for (&i, &v) in m.kept.iter().zip(values) {
+        out[i] = v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, gradient_like};
+
+    #[test]
+    fn mask_is_deterministic_in_seed() {
+        let a = mask(99, 1000, 0.1);
+        let b = mask(99, 1000, 0.1);
+        assert_eq!(a.kept, b.kept);
+        let c = mask(100, 1000, 0.1);
+        assert_ne!(a.kept, c.kept);
+    }
+
+    #[test]
+    fn kept_counts() {
+        assert_eq!(kept_count(1000, 0.05), 50);
+        assert_eq!(kept_count(1000, 0.25), 250);
+        assert_eq!(kept_count(3, 0.0), 1); // floor at 1
+        assert_eq!(kept_count(10, 1.0), 10);
+        assert_eq!(kept_count(7, 0.5), 4); // ceil
+    }
+
+    #[test]
+    fn indices_are_sorted_distinct_in_range() {
+        let m = mask(7, 500, 0.2);
+        assert_eq!(m.kept.len(), 100);
+        assert!(m.kept.windows(2).all(|w| w[0] < w[1]));
+        assert!(m.kept.iter().all(|&i| i < 500));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        forall(
+            40,
+            61,
+            |rng, size| {
+                let n = size.len(rng) * 4 + 2;
+                let g = gradient_like(rng, n);
+                let frac = [0.05, 0.1, 0.25, 0.5, 1.0][rng.below_usize(5)];
+                (g, frac, rng.next_u64())
+            },
+            |(g, frac, seed)| {
+                let m = mask(*seed, g.len(), *frac);
+                let dense = scatter(&gather(g, &m), &m);
+                // Kept coordinates survive exactly; others are zero.
+                let mut kept_iter = m.kept.iter().peekable();
+                g.iter().enumerate().all(|(i, &gi)| {
+                    if kept_iter.peek() == Some(&&i) {
+                        kept_iter.next();
+                        dense[i] == gi
+                    } else {
+                        dense[i] == 0.0
+                    }
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn half_mask_keeps_half() {
+        let m = mask(3, 100, 0.5);
+        assert_eq!(m.kept.len(), 50);
+        let g = vec![1.0f32; 100];
+        let dense = scatter(&gather(&g, &m), &m);
+        assert_eq!(dense.iter().filter(|&&x| x == 1.0).count(), 50);
+        assert_eq!(dense.iter().filter(|&&x| x == 0.0).count(), 50);
+    }
+
+    #[test]
+    fn masks_are_roughly_uniform_over_coordinates() {
+        // Over many seeds, every coordinate is selected ~keep_frac of the time.
+        let n = 64;
+        let trials = 2000;
+        let mut counts = vec![0u32; n];
+        for seed in 0..trials {
+            for &i in &mask(seed, n, 0.25).kept {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * 0.25;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < expect * 0.25,
+                "coordinate {i}: {c} vs {expect}"
+            );
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Top-K gradient sparsification (Aji & Heafield [1], Lin et al. [22]) —
+//! the *other* sparsification family the paper discusses (§2.2) and an
+//! extension point beyond its random-mask experiments.
+//!
+//! Unlike the random mask, the selected indices depend on the data, so the
+//! index set must travel on the wire: we transmit sorted indices
+//! delta-encoded as LEB128 varints (small gaps ⇒ ~1 byte each after
+//! DEFLATE), plus the values — which can then be quantized by any codec.
+
+use crate::util::stats::kth_largest_abs;
+
+/// Select the `k` largest-|g| coordinates. Returns sorted indices.
+pub fn top_k_indices(g: &[f32], k: usize) -> Vec<usize> {
+    let k = k.clamp(1, g.len().max(1));
+    if g.is_empty() {
+        return Vec::new();
+    }
+    let thresh = kth_largest_abs(g, k);
+    // >= thresh may exceed k on ties: take ties in index order up to k.
+    let mut idx: Vec<usize> = Vec::with_capacity(k);
+    for (i, &v) in g.iter().enumerate() {
+        if v.abs() > thresh {
+            idx.push(i);
+        }
+    }
+    for (i, &v) in g.iter().enumerate() {
+        if idx.len() >= k {
+            break;
+        }
+        if v.abs() == thresh {
+            idx.push(i);
+        }
+    }
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Gather values at `indices`.
+pub fn gather(g: &[f32], indices: &[usize]) -> Vec<f32> {
+    indices.iter().map(|&i| g[i]).collect()
+}
+
+/// Scatter values back into a dense zero vector of length `n`.
+pub fn scatter(values: &[f32], indices: &[usize], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i] = v;
+    }
+    out
+}
+
+/// Delta + LEB128 encode sorted indices.
+pub fn encode_indices(indices: &[usize]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(indices.len());
+    let mut prev = 0usize;
+    for (pos, &i) in indices.iter().enumerate() {
+        let gap = if pos == 0 { i } else { i - prev - 1 };
+        let mut v = gap as u64;
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(byte);
+                break;
+            }
+            out.push(byte | 0x80);
+        }
+        prev = i;
+    }
+    out
+}
+
+/// Decode `count` indices from the varint stream.
+pub fn decode_indices(bytes: &[u8], count: usize) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::with_capacity(count);
+    let mut pos = 0usize;
+    let mut prev = 0usize;
+    for i in 0..count {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = *bytes
+                .get(pos)
+                .ok_or_else(|| anyhow::anyhow!("truncated index stream"))?;
+            pos += 1;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+            anyhow::ensure!(shift < 64, "varint overflow");
+        }
+        let idx = if i == 0 {
+            v as usize
+        } else {
+            prev + 1 + v as usize
+        };
+        out.push(idx);
+        prev = idx;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, gradient_like};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let g = [0.1f32, -5.0, 0.2, 3.0, -0.05, 4.0];
+        let idx = top_k_indices(&g, 3);
+        assert_eq!(idx, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn handles_ties_deterministically() {
+        let g = [1.0f32, 1.0, 1.0, 1.0];
+        let idx = top_k_indices(&g, 2);
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx, vec![0, 1]); // first ties in index order
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let g = [0.0f32, 2.0, 0.0, -3.0, 1.0];
+        let idx = top_k_indices(&g, 2);
+        let vals = gather(&g, &idx);
+        let dense = scatter(&vals, &idx, g.len());
+        assert_eq!(dense, vec![0.0, 2.0, 0.0, -3.0, 0.0]);
+    }
+
+    #[test]
+    fn index_codec_roundtrip() {
+        forall(
+            60,
+            71,
+            |rng, size| {
+                let n = size.len(rng) * 20 + 5;
+                let k = 1 + rng.below_usize(n);
+                let g = gradient_like(rng, n);
+                (g, k)
+            },
+            |(g, k)| {
+                let idx = top_k_indices(g, *k);
+                let enc = encode_indices(&idx);
+                decode_indices(&enc, idx.len()).unwrap() == idx
+            },
+        );
+    }
+
+    #[test]
+    fn varints_compact_for_dense_selections() {
+        // 10% of 10_000: average gap 9 -> 1 byte each.
+        let mut rng = Pcg64::seeded(3);
+        let g = gradient_like(&mut rng, 10_000);
+        let idx = top_k_indices(&g, 1000);
+        let enc = encode_indices(&idx);
+        assert!(enc.len() <= 2 * idx.len(), "{} bytes for {}", enc.len(), idx.len());
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let idx = vec![5usize, 300, 301];
+        let enc = encode_indices(&idx);
+        assert!(decode_indices(&enc[..enc.len() - 1], 3).is_err());
+    }
+
+    #[test]
+    fn top_k_preserves_energy_better_than_random() {
+        // The reason [22] uses it: top-k keeps most of the l2 energy.
+        let mut rng = Pcg64::seeded(4);
+        let g = gradient_like(&mut rng, 5000);
+        let k = 250; // 5%
+        let idx = top_k_indices(&g, k);
+        let topk_energy: f64 = idx.iter().map(|&i| (g[i] as f64).powi(2)).sum();
+        let rand_idx = rng.sample_indices(g.len(), k);
+        let rand_energy: f64 = rand_idx.iter().map(|&i| (g[i] as f64).powi(2)).sum();
+        let total: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(topk_energy / total > 0.5, "{}", topk_energy / total);
+        assert!(topk_energy > 3.0 * rand_energy);
+    }
+}

@@ -1,0 +1,166 @@
+//! Wire format for compressed gradient updates.
+//!
+//! Every byte the simulated network meters corresponds to this
+//! serialization, so the cost tables (Table 1, Figs. 9–10 x-axes) are
+//! byte-exact. Layout (little-endian):
+//!
+//! ```text
+//! offset size field
+//! 0      4    magic  "CSG1"
+//! 4      1    kind_id
+//! 5      1    bits
+//! 6      1    flags (bit0 = deflated)
+//! 7      1    reserved (0)
+//! 8      4    n      (full gradient length)
+//! 12     4    kept   (transmitted coordinate count)
+//! 16     8    mask_seed
+//! 24     8    rot_seed
+//! 32     4    norm   (f32)
+//! 36     4    bound  (f32)
+//! 40     4    payload_len
+//! 44     ..   payload
+//! ```
+
+use anyhow::{bail, ensure, Result};
+
+use super::codec::EncodedGradient;
+
+pub const MAGIC: [u8; 4] = *b"CSG1";
+pub const HEADER_BYTES: usize = 44;
+
+/// Serialize an encoded gradient to wire bytes.
+pub fn serialize(enc: &EncodedGradient) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + enc.payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(enc.kind_id);
+    out.push(enc.bits);
+    out.push(enc.deflated as u8);
+    out.push(0);
+    out.extend_from_slice(&enc.n.to_le_bytes());
+    out.extend_from_slice(&enc.kept.to_le_bytes());
+    out.extend_from_slice(&enc.mask_seed.to_le_bytes());
+    out.extend_from_slice(&enc.rot_seed.to_le_bytes());
+    out.extend_from_slice(&enc.norm.to_le_bytes());
+    out.extend_from_slice(&enc.bound.to_le_bytes());
+    out.extend_from_slice(&(enc.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&enc.payload);
+    out
+}
+
+/// Parse wire bytes back into an [`EncodedGradient`].
+pub fn deserialize(bytes: &[u8]) -> Result<EncodedGradient> {
+    ensure!(bytes.len() >= HEADER_BYTES, "short update: {}", bytes.len());
+    if bytes[0..4] != MAGIC {
+        bail!("bad magic {:02x?}", &bytes[0..4]);
+    }
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let f32_at = |o: usize| f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+
+    let kind_id = bytes[4];
+    ensure!(kind_id <= 6, "unknown codec id {kind_id}");
+    let bits = bytes[5];
+    ensure!(bits == 32 || (1..=16).contains(&bits), "bad bits {bits}");
+    let flags = bytes[6];
+    let n = u32_at(8);
+    let kept = u32_at(12);
+    ensure!(kept <= n.max(1), "kept {kept} > n {n}");
+    let payload_len = u32_at(40) as usize;
+    ensure!(
+        bytes.len() == HEADER_BYTES + payload_len,
+        "length mismatch: {} vs {}",
+        bytes.len(),
+        HEADER_BYTES + payload_len
+    );
+    Ok(EncodedGradient {
+        kind_id,
+        bits,
+        n,
+        kept,
+        mask_seed: u64_at(16),
+        rot_seed: u64_at(24),
+        norm: f32_at(32),
+        bound: f32_at(36),
+        deflated: flags & 1 == 1,
+        payload: bytes[HEADER_BYTES..].to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::codec::{ClientCodecState, Codec};
+    use crate::util::propcheck::{forall, gradient_like};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_simple() {
+        let enc = EncodedGradient {
+            kind_id: 1,
+            bits: 2,
+            n: 100,
+            kept: 50,
+            mask_seed: 0xDEADBEEF,
+            rot_seed: 42,
+            norm: 1.5,
+            bound: 0.25,
+            deflated: true,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        let bytes = serialize(&enc);
+        assert_eq!(bytes.len(), HEADER_BYTES + 5);
+        assert_eq!(deserialize(&bytes).unwrap(), enc);
+    }
+
+    #[test]
+    fn wire_bytes_matches_serialized_len() {
+        let mut rng = Pcg64::seeded(121);
+        let g = gradient_like(&mut rng, 5000);
+        let codec = Codec::cosine(4).with_sparsify(0.25);
+        let enc = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
+        assert_eq!(serialize(&enc).len(), enc.wire_bytes());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let enc = EncodedGradient {
+            kind_id: 1,
+            bits: 2,
+            n: 10,
+            kept: 10,
+            mask_seed: 0,
+            rot_seed: 0,
+            norm: 1.0,
+            bound: 0.0,
+            deflated: false,
+            payload: vec![0; 3],
+        };
+        let mut bytes = serialize(&enc);
+        bytes[0] = b'X'; // magic
+        assert!(deserialize(&bytes).is_err());
+        let mut bytes = serialize(&enc);
+        bytes[4] = 99; // kind id
+        assert!(deserialize(&bytes).is_err());
+        let mut bytes = serialize(&enc);
+        bytes.truncate(bytes.len() - 1); // length
+        assert!(deserialize(&bytes).is_err());
+        assert!(deserialize(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn property_roundtrip_via_codec() {
+        forall(
+            25,
+            122,
+            |rng, size| { let n = size.len(rng) * 16 + 4; gradient_like(rng, n) },
+            |g| {
+                let mut rng = Pcg64::seeded(g.len() as u64);
+                let codec = Codec::cosine(2).with_sparsify(0.5);
+                let enc = codec.encode(g, &mut ClientCodecState::new(), &mut rng);
+                let back = deserialize(&serialize(&enc)).unwrap();
+                back == enc
+                    && codec.decode(&back).unwrap() == codec.decode(&enc).unwrap()
+            },
+        );
+    }
+}

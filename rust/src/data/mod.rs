@@ -1,0 +1,14 @@
+//! Synthetic datasets + federated partitioning.
+//!
+//! The paper evaluates on MNIST, CIFAR-10 and BraTS; none are available in
+//! this environment, so each is substituted by a procedurally-generated
+//! task with the same shape, class structure and partitioning behaviour
+//! (DESIGN.md §5). Generation is fully deterministic from `(seed, class,
+//! instance)`, so the 100-client × 600-example federations never need to
+//! be materialized — each selected client generates its shard on demand.
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{eval_set, iid_partition, non_iid_partition, ClientShard};
+pub use synth::{SynthCifar, SynthMnist, SynthTask, SynthVolume};

@@ -1,0 +1,207 @@
+//! Federated data partitioning: IID and the paper's Non-IID shard split
+//! (McMahan et al. [25]: sort by label, divide into 2·m shards, give each
+//! client two shards so it sees at most two classes).
+//!
+//! A client's shard is a list of `(class, instance)` pairs; with the
+//! deterministic generators in [`super::synth`], that list *is* the data —
+//! nothing is materialized until a client is selected for a round.
+
+use crate::util::rng::Pcg64;
+
+use super::synth::SynthTask;
+
+/// One client's local dataset description.
+#[derive(Debug, Clone)]
+pub struct ClientShard {
+    pub client_id: usize,
+    /// (class, instance) pairs; instances are globally unique per class.
+    pub examples: Vec<(usize, u64)>,
+}
+
+impl ClientShard {
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// Materialize the shard through a generator: returns flattened
+    /// `(x, y)` with x of `n*input_len` and y of `n*label_len`.
+    pub fn materialize<T: SynthTask>(&self, task: &T) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(self.len() * task.input_len());
+        let mut y = Vec::with_capacity(self.len() * task.label_len());
+        for &(class, instance) in &self.examples {
+            let (xi, yi) = task.gen(class, instance);
+            x.extend_from_slice(&xi);
+            y.extend_from_slice(&yi);
+        }
+        (x, y)
+    }
+}
+
+/// IID: every client draws classes uniformly (instances unique).
+pub fn iid_partition(
+    seed: u64,
+    n_clients: usize,
+    per_client: usize,
+    classes: usize,
+) -> Vec<ClientShard> {
+    let mut rng = Pcg64::new(seed, 0x11D);
+    let mut next_instance = vec![0u64; classes];
+    (0..n_clients)
+        .map(|client_id| {
+            let examples = (0..per_client)
+                .map(|_| {
+                    let c = rng.below_usize(classes);
+                    let inst = next_instance[c];
+                    next_instance[c] += 1;
+                    (c, inst)
+                })
+                .collect();
+            ClientShard {
+                client_id,
+                examples,
+            }
+        })
+        .collect()
+}
+
+/// Non-IID shard split [25]: the virtual pool (balanced classes, sorted by
+/// label) is cut into `2·n_clients` contiguous shards; each client gets two
+/// random shards, hence sees at most two classes.
+pub fn non_iid_partition(
+    seed: u64,
+    n_clients: usize,
+    per_client: usize,
+    classes: usize,
+) -> Vec<ClientShard> {
+    let total = n_clients * per_client;
+    let per_class = total / classes;
+    // Virtual label-sorted pool.
+    let pool: Vec<(usize, u64)> = (0..classes)
+        .flat_map(|c| (0..per_class as u64).map(move |i| (c, i)))
+        .collect();
+    let n_shards = 2 * n_clients;
+    let shard_size = pool.len() / n_shards;
+    let mut shard_ids: Vec<usize> = (0..n_shards).collect();
+    let mut rng = Pcg64::new(seed, 0x2071D);
+    rng.shuffle(&mut shard_ids);
+    (0..n_clients)
+        .map(|client_id| {
+            let mut examples = Vec::with_capacity(2 * shard_size);
+            for k in 0..2 {
+                let s = shard_ids[client_id * 2 + k];
+                let start = s * shard_size;
+                examples.extend_from_slice(&pool[start..start + shard_size]);
+            }
+            ClientShard {
+                client_id,
+                examples,
+            }
+        })
+        .collect()
+}
+
+/// Balanced held-out evaluation set (instances offset far beyond any
+/// training instance so train/test never overlap).
+pub fn eval_set<T: SynthTask>(task: &T, n: usize) -> (Vec<f32>, Vec<i32>) {
+    const EVAL_OFFSET: u64 = 1 << 40;
+    let classes = task.classes();
+    let mut x = Vec::with_capacity(n * task.input_len());
+    let mut y = Vec::with_capacity(n * task.label_len());
+    for i in 0..n {
+        let c = i % classes;
+        let (xi, yi) = task.gen(c, EVAL_OFFSET + (i / classes) as u64);
+        x.extend_from_slice(&xi);
+        y.extend_from_slice(&yi);
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthMnist;
+    use std::collections::HashSet;
+
+    #[test]
+    fn iid_covers_many_classes_per_client() {
+        let parts = iid_partition(1, 20, 100, 10);
+        assert_eq!(parts.len(), 20);
+        for p in &parts {
+            assert_eq!(p.len(), 100);
+            let classes: HashSet<usize> = p.examples.iter().map(|e| e.0).collect();
+            assert!(classes.len() >= 6, "client {} saw {classes:?}", p.client_id);
+        }
+    }
+
+    #[test]
+    fn iid_instances_unique() {
+        let parts = iid_partition(2, 10, 50, 10);
+        let mut seen = HashSet::new();
+        for p in &parts {
+            for &e in &p.examples {
+                assert!(seen.insert(e), "duplicate example {e:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_iid_at_most_two_classes() {
+        let parts = non_iid_partition(3, 100, 600, 10);
+        assert_eq!(parts.len(), 100);
+        let mut class_counts = vec![0usize; 10];
+        for p in &parts {
+            assert_eq!(p.len(), 600);
+            let classes: HashSet<usize> = p.examples.iter().map(|e| e.0).collect();
+            assert!(
+                classes.len() <= 2,
+                "client {} saw {} classes",
+                p.client_id,
+                classes.len()
+            );
+            for c in classes {
+                class_counts[c] += 1;
+            }
+        }
+        // All classes represented across the federation.
+        assert!(class_counts.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn non_iid_shards_disjoint() {
+        let parts = non_iid_partition(4, 10, 60, 10);
+        let mut seen = HashSet::new();
+        for p in &parts {
+            for &e in &p.examples {
+                assert!(seen.insert(e), "duplicate {e:?}");
+            }
+        }
+        assert_eq!(seen.len(), 600);
+    }
+
+    #[test]
+    fn partitions_deterministic_in_seed() {
+        let a = non_iid_partition(5, 10, 20, 10);
+        let b = non_iid_partition(5, 10, 20, 10);
+        assert_eq!(a[3].examples, b[3].examples);
+        let c = non_iid_partition(6, 10, 20, 10);
+        assert_ne!(a[3].examples, c[3].examples);
+    }
+
+    #[test]
+    fn materialize_and_eval_shapes() {
+        let task = SynthMnist::new(1);
+        let parts = iid_partition(1, 2, 5, 10);
+        let (x, y) = parts[0].materialize(&task);
+        assert_eq!(x.len(), 5 * 784);
+        assert_eq!(y.len(), 5);
+        let (ex, ey) = eval_set(&task, 30);
+        assert_eq!(ex.len(), 30 * 784);
+        assert_eq!(ey.len(), 30);
+        // Balanced.
+        let count0 = ey.iter().filter(|&&c| c == 0).count();
+        assert_eq!(count0, 3);
+    }
+}

@@ -1,0 +1,388 @@
+//! Procedural dataset generators (the MNIST / CIFAR-10 / BraTS substitutes).
+//!
+//! Requirements the generators must satisfy for the paper's phenomenology
+//! to transfer (DESIGN.md §5):
+//!
+//! 1. deterministic in `(seed, class, instance)` — shards regenerate
+//!    identically on any process;
+//! 2. clearly learnable but not linearly trivial (convergence curves need
+//!    headroom for quantization schemes to differ);
+//! 3. class structure compatible with the paper's Non-IID shard split.
+
+use crate::util::rng::Pcg64;
+
+/// A synthetic classification/segmentation task.
+pub trait SynthTask {
+    /// Flat input length per example.
+    fn input_len(&self) -> usize;
+    /// Label length per example (1 for classification, voxels for seg).
+    fn label_len(&self) -> usize;
+    fn classes(&self) -> usize;
+    /// Generate one example of `class` (for segmentation, `class` selects
+    /// the scene family). Returns `(input, labels)`.
+    fn gen(&self, class: usize, instance: u64) -> (Vec<f32>, Vec<i32>);
+}
+
+// ---------------------------------------------------------------------------
+// MNIST-like: 28x28 grayscale stroke digits.
+// ---------------------------------------------------------------------------
+
+/// 10-class stroke-pattern images, 28x28x1. Each class has a fixed
+/// prototype polyline skeleton (class-seeded); instances apply affine
+/// jitter, per-vertex noise, stroke-width variation and pixel noise.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthMnist {
+    pub seed: u64,
+}
+
+const MN: usize = 28;
+
+impl SynthMnist {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// Class prototype: 4 connected stroke segments in [4, 24]^2.
+    fn prototype(&self, class: usize) -> Vec<(f32, f32)> {
+        let mut rng = Pcg64::new(self.seed ^ 0xA11CE, class as u64);
+        let n_pts = 5;
+        (0..n_pts)
+            .map(|_| {
+                (
+                    rng.range_f64(5.0, 23.0) as f32,
+                    rng.range_f64(5.0, 23.0) as f32,
+                )
+            })
+            .collect()
+    }
+}
+
+fn dist_to_segment(px: f32, py: f32, a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (vx, vy) = (b.0 - a.0, b.1 - a.1);
+    let (wx, wy) = (px - a.0, py - a.1);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 > 1e-9 {
+        ((wx * vx + wy * vy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (dx, dy) = (px - (a.0 + t * vx), py - (a.1 + t * vy));
+    (dx * dx + dy * dy).sqrt()
+}
+
+impl SynthTask for SynthMnist {
+    fn input_len(&self) -> usize {
+        MN * MN
+    }
+    fn label_len(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        10
+    }
+
+    fn gen(&self, class: usize, instance: u64) -> (Vec<f32>, Vec<i32>) {
+        let proto = self.prototype(class);
+        let mut rng = Pcg64::new(
+            self.seed ^ 0xD161,
+            (class as u64) << 32 | (instance & 0xFFFF_FFFF),
+        );
+        // Instance transform: small rotation + translation + vertex jitter.
+        let angle = rng.range_f64(-0.25, 0.25) as f32;
+        let (ca, sa) = (angle.cos(), angle.sin());
+        let (tx, ty) = (
+            rng.range_f64(-2.0, 2.0) as f32,
+            rng.range_f64(-2.0, 2.0) as f32,
+        );
+        let pts: Vec<(f32, f32)> = proto
+            .iter()
+            .map(|&(x, y)| {
+                let (cx, cy) = (x - 14.0, y - 14.0);
+                let (rx, ry) = (ca * cx - sa * cy, sa * cx + ca * cy);
+                (
+                    rx + 14.0 + tx + rng.normal_f32(0.0, 0.7),
+                    ry + 14.0 + ty + rng.normal_f32(0.0, 0.7),
+                )
+            })
+            .collect();
+        let sigma = rng.range_f64(0.8, 1.3) as f32;
+        let mut img = vec![0.0f32; MN * MN];
+        for (i, pix) in img.iter_mut().enumerate() {
+            let (px, py) = ((i % MN) as f32, (i / MN) as f32);
+            let mut d = f32::MAX;
+            for w in pts.windows(2) {
+                d = d.min(dist_to_segment(px, py, w[0], w[1]));
+            }
+            let v = (-d * d / (2.0 * sigma * sigma)).exp();
+            *pix = v + rng.normal_f32(0.0, 0.08);
+        }
+        (img, vec![class as i32])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CIFAR-like: 32x32x3 textured color images.
+// ---------------------------------------------------------------------------
+
+/// 10-class color-texture images, flattened HWC (32*32*3 = 3072). Class
+/// prototypes are mixtures of oriented sinusoidal gratings with a color
+/// tint; instances jitter phase/frequency and add noise.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthCifar {
+    pub seed: u64,
+}
+
+const CN: usize = 32;
+
+struct Grating {
+    fx: f32,
+    fy: f32,
+    phase: f32,
+    rgb: [f32; 3],
+}
+
+impl SynthCifar {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    fn prototype(&self, class: usize) -> Vec<Grating> {
+        let mut rng = Pcg64::new(self.seed ^ 0xC1FA, class as u64);
+        (0..3)
+            .map(|_| {
+                let freq = rng.range_f64(0.2, 1.1) as f32;
+                let theta = rng.range_f64(0.0, std::f64::consts::PI) as f32;
+                Grating {
+                    fx: freq * theta.cos(),
+                    fy: freq * theta.sin(),
+                    phase: rng.range_f64(0.0, 6.28) as f32,
+                    rgb: [
+                        rng.range_f64(-1.0, 1.0) as f32,
+                        rng.range_f64(-1.0, 1.0) as f32,
+                        rng.range_f64(-1.0, 1.0) as f32,
+                    ],
+                }
+            })
+            .collect()
+    }
+}
+
+impl SynthTask for SynthCifar {
+    fn input_len(&self) -> usize {
+        CN * CN * 3
+    }
+    fn label_len(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        10
+    }
+
+    fn gen(&self, class: usize, instance: u64) -> (Vec<f32>, Vec<i32>) {
+        let protos = self.prototype(class);
+        let mut rng = Pcg64::new(
+            self.seed ^ 0xF00D,
+            (class as u64) << 32 | (instance & 0xFFFF_FFFF),
+        );
+        let dp: Vec<f32> = protos.iter().map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let mut img = vec![0.0f32; CN * CN * 3];
+        for yy in 0..CN {
+            for xx in 0..CN {
+                let base = (yy * CN + xx) * 3;
+                for (g, d) in protos.iter().zip(&dp) {
+                    let v = (g.fx * xx as f32 + g.fy * yy as f32 + g.phase + d).sin();
+                    for c in 0..3 {
+                        img[base + c] += 0.5 * v * g.rgb[c];
+                    }
+                }
+                for c in 0..3 {
+                    img[base + c] += rng.normal_f32(0.0, 0.25);
+                }
+            }
+        }
+        (img, vec![class as i32])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BraTS-like: 16^3 4-channel volumes with 5-label segmentation masks.
+// ---------------------------------------------------------------------------
+
+/// Volumetric "tumor" scenes: background tissue + 1–2 nested ellipsoids.
+/// Labels: 0 background, 1 outer shell ("edema"), 2–4 core types. The four
+/// channels are modalities with label-correlated intensity profiles.
+///
+/// `class` selects the scene family (core label = 2 + class % 3), so the
+/// same class/instance indexing as the classification tasks drives
+/// partitioning.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthVolume {
+    pub seed: u64,
+}
+
+const VD: usize = 16;
+
+impl SynthVolume {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl SynthTask for SynthVolume {
+    fn input_len(&self) -> usize {
+        VD * VD * VD * 4
+    }
+    fn label_len(&self) -> usize {
+        VD * VD * VD
+    }
+    fn classes(&self) -> usize {
+        3 // scene families
+    }
+
+    fn gen(&self, class: usize, instance: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg64::new(
+            self.seed ^ 0xB7A7,
+            (class as u64) << 32 | (instance & 0xFFFF_FFFF),
+        );
+        let core_label = 2 + (class % 3) as i32;
+        let cx = rng.range_f64(5.0, 11.0) as f32;
+        let cy = rng.range_f64(5.0, 11.0) as f32;
+        let cz = rng.range_f64(5.0, 11.0) as f32;
+        let r_core = rng.range_f64(1.8, 3.2) as f32;
+        let r_shell = r_core + rng.range_f64(1.2, 2.4) as f32;
+        // Per-modality intensity of (background, shell, core).
+        let profile: Vec<[f32; 3]> = (0..4)
+            .map(|m| {
+                [
+                    0.1 + 0.05 * m as f32,
+                    0.5 + rng.normal_f32(0.0, 0.05),
+                    0.8 + 0.1 * (core_label as f32 - 2.0) + rng.normal_f32(0.0, 0.05),
+                ]
+            })
+            .collect();
+        let mut x = vec![0.0f32; self.input_len()];
+        let mut y = vec![0i32; self.label_len()];
+        for zz in 0..VD {
+            for yy in 0..VD {
+                for xx in 0..VD {
+                    let d = ((xx as f32 - cx).powi(2)
+                        + (yy as f32 - cy).powi(2)
+                        + (zz as f32 - cz).powi(2))
+                    .sqrt();
+                    let vox = (zz * VD + yy) * VD + xx;
+                    let region = if d < r_core {
+                        y[vox] = core_label;
+                        2
+                    } else if d < r_shell {
+                        y[vox] = 1;
+                        1
+                    } else {
+                        0
+                    };
+                    for m in 0..4 {
+                        x[vox * 4 + m] =
+                            profile[m][region] + rng.normal_f32(0.0, 0.08);
+                    }
+                }
+            }
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let t = SynthMnist::new(7);
+        assert_eq!(t.gen(3, 42), t.gen(3, 42));
+        assert_ne!(t.gen(3, 42).0, t.gen(3, 43).0);
+        assert_ne!(t.gen(3, 42).0, t.gen(4, 42).0);
+        let c = SynthCifar::new(7);
+        assert_eq!(c.gen(1, 5), c.gen(1, 5));
+        let v = SynthVolume::new(7);
+        assert_eq!(v.gen(0, 1), v.gen(0, 1));
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let t = SynthMnist::new(1);
+        let (x, y) = t.gen(0, 0);
+        assert_eq!(x.len(), 784);
+        assert_eq!(y, vec![0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+        let c = SynthCifar::new(1);
+        let (x, _) = c.gen(9, 0);
+        assert_eq!(x.len(), 3072);
+        let v = SynthVolume::new(1);
+        let (x, y) = v.gen(2, 0);
+        assert_eq!(x.len(), 16 * 16 * 16 * 4);
+        assert_eq!(y.len(), 16 * 16 * 16);
+        assert!(y.iter().all(|&l| (0..5).contains(&l)));
+    }
+
+    /// Nearest-centroid accuracy must be far above chance — the task is
+    /// learnable — but below perfect — it is not trivial.
+    fn centroid_accuracy<T: SynthTask>(task: &T, per_class: usize) -> f64 {
+        let k = task.classes();
+        let dim = task.input_len();
+        let mut centroids = vec![vec![0.0f64; dim]; k];
+        for (c, cent) in centroids.iter_mut().enumerate() {
+            for i in 0..per_class {
+                let (x, _) = task.gen(c, i as u64);
+                for (a, b) in cent.iter_mut().zip(&x) {
+                    *a += *b as f64 / per_class as f64;
+                }
+            }
+        }
+        let mut correct = 0usize;
+        let trials = k * 20;
+        for c in 0..k {
+            for i in 0..20 {
+                let (x, _) = task.gen(c, (per_class + i) as u64);
+                let best = centroids
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        let da: f64 =
+                            a.iter().zip(&x).map(|(p, q)| (p - *q as f64).powi(2)).sum();
+                        let db: f64 =
+                            b.iter().zip(&x).map(|(p, q)| (p - *q as f64).powi(2)).sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap()
+                    .0;
+                correct += (best == c) as usize;
+            }
+        }
+        correct as f64 / trials as f64
+    }
+
+    #[test]
+    fn mnist_like_is_learnable_not_trivial() {
+        let acc = centroid_accuracy(&SynthMnist::new(3), 30);
+        assert!(acc > 0.5, "acc {acc} too low — not learnable");
+    }
+
+    #[test]
+    fn cifar_like_is_learnable() {
+        let acc = centroid_accuracy(&SynthCifar::new(3), 30);
+        assert!(acc > 0.4, "acc {acc} too low");
+    }
+
+    #[test]
+    fn volume_labels_cover_multiple_classes() {
+        let v = SynthVolume::new(5);
+        let mut seen = std::collections::HashSet::new();
+        for class in 0..3 {
+            for i in 0..4 {
+                let (_, y) = v.gen(class, i);
+                seen.extend(y);
+            }
+        }
+        assert!(seen.contains(&0) && seen.contains(&1));
+        assert!(seen.len() >= 4, "labels seen: {seen:?}");
+    }
+}

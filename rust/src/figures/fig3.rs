@@ -1,0 +1,78 @@
+//! Figure 3 + the Eq. (5) computation (§3.1): per-interval quantization
+//! error bounds of the cosine quantizer vs the flat linear bound, and the
+//! fraction of intervals where cosine wins (paper: top 50% / 42.9% / 44.1%
+//! for 2/4/8 bits).
+//!
+//! Purely analytic — no artifacts needed.
+
+use anyhow::Result;
+
+use crate::compress::cosine::{
+    cosine_error_bound, intervals_cosine_beats_linear, linear_error_bound,
+};
+use crate::util::json::Json;
+
+use super::FigOpts;
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    println!("== Figure 3: per-interval error bounds (unit-norm gradient) ==");
+    let bound = 0.0f64;
+    let mut out = Json::obj();
+    for bits in [2u8, 4, 8] {
+        let total = 1u32 << bits;
+        let q = (std::f64::consts::PI - 2.0 * bound) / total as f64;
+        let lin = linear_error_bound(bits, bound);
+        println!("\n-- {bits}-bit: interval width q={q:.5}, linear bound {lin:.5} --");
+        println!("{:>4} {:>12} {:>12} {:>6}", "k", "cosine", "linear", "win");
+        let show = if bits <= 4 { total } else { 16 }; // subsample 8-bit print
+        let step = (total / show).max(1);
+        let mut series = Vec::new();
+        for k in (0..total).step_by(step as usize) {
+            let cb = cosine_error_bound(k, q, bound);
+            series.push(Json::from_f64_slice(&[k as f64, cb]));
+            println!(
+                "{k:>4} {cb:>12.6} {lin:>12.6} {:>6}",
+                if cb < lin { "cos" } else { "lin" }
+            );
+        }
+        let (win, tot) = intervals_cosine_beats_linear(bits, bound);
+        let frac = 100.0 * win as f64 / tot as f64;
+        println!("cosine wins {win}/{tot} intervals = {frac:.1}% (paper: 50/42.9/44.1%)");
+        out = out.set(
+            &format!("bits{bits}"),
+            Json::obj()
+                .set("q", q)
+                .set("linear_bound", lin)
+                .set("win", win as usize)
+                .set("total", tot as usize)
+                .set("win_pct", frac)
+                .set("series", Json::Arr(series)),
+        );
+    }
+    let path = opts.out_dir.join("fig3.json");
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(&path, out.pretty())?;
+    println!("\nwrote {path:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_writes_json() {
+        let dir = std::env::temp_dir().join("cossgd_fig3_test");
+        let opts = FigOpts {
+            out_dir: dir.clone(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(dir.join("fig3.json")).unwrap();
+        let json = crate::util::json::Json::parse(&text).unwrap();
+        // 2-bit: exactly half the intervals win.
+        assert_eq!(json.path(&["bits2", "win"]).unwrap().as_usize(), Some(2));
+        assert_eq!(json.path(&["bits2", "total"]).unwrap().as_usize(), Some(4));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,80 @@
+//! Figure 8 (§5.2): low-bit schemes on CIFAR-10.
+//!
+//! (a) 2-bit: cosine vs unbiased linear vs Hadamard-rotated unbiased
+//!     linear ("linear (U,R)") vs float32.
+//! (b) 1-bit family: signSGD, signSGD+Norm (≡ our 1-bit), EF-signSGD, and
+//!     2-bit + 50% random mask (same average bits/parameter).
+
+use anyhow::Result;
+
+use crate::compress::cosine::{BoundMode, Rounding};
+use crate::compress::{Codec, CodecKind};
+use crate::fl::FlConfig;
+use crate::runtime::Engine;
+
+use super::{run_codec_series, FigOpts};
+
+pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
+    let rounds = opts.rounds_or(1, 2000);
+    // Reduced scale: E=1 artifact, 20 clients (see fig7).
+    let mut base = if opts.full {
+        FlConfig::cifar()
+    } else {
+        let mut c = FlConfig::cifar_e1();
+        c.participation = 0.1;
+        c.n_clients = 20;
+        c
+    }
+    .with_rounds(rounds);
+    base.eval_every = (rounds / 4).max(1);
+
+    // (a) 2-bit comparison with rotation.
+    let cos2 = Codec::new(CodecKind::Cosine {
+        bits: 2,
+        rounding: Rounding::Biased,
+        bound: BoundMode::ClipTopPercent(1.0),
+    });
+    let lin2u = Codec::new(CodecKind::Linear {
+        bits: 2,
+        rounding: Rounding::Unbiased,
+    });
+    let lin2ur = Codec::new(CodecKind::LinearRotated {
+        bits: 2,
+        rounding: Rounding::Unbiased,
+    });
+    let series_a = vec![
+        ("float32".to_string(), Codec::float32()),
+        (cos2.name(), cos2),
+        (lin2u.name(), lin2u),
+        (lin2ur.name(), lin2ur),
+    ];
+    run_codec_series(
+        engine,
+        &base,
+        &series_a,
+        "Figure 8a — CIFAR 2-bit schemes",
+        "fig8a",
+        opts,
+    )?;
+
+    // (b) 1-bit family.
+    let series_b = vec![
+        ("signSGD".to_string(), Codec::new(CodecKind::SignSgd)),
+        (
+            "signSGD+Norm".to_string(),
+            Codec::new(CodecKind::SignSgdNorm),
+        ),
+        ("EF-signSGD".to_string(), Codec::new(CodecKind::EfSignSgd)),
+        ("cosine-2 @50%".to_string(), cos2.with_sparsify(0.5)),
+        ("linear-2 (U,R) @50%".to_string(), lin2ur.with_sparsify(0.5)),
+    ];
+    run_codec_series(
+        engine,
+        &base,
+        &series_b,
+        "Figure 8b — CIFAR 1-bit-average schemes",
+        "fig8b",
+        opts,
+    )?;
+    Ok(())
+}

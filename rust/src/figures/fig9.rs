@@ -1,0 +1,69 @@
+//! Figure 9 (§5.2): BraTS-substitute segmentation — dice vs communication
+//! rounds AND vs total transferred gradient volume (B=3, E=3, C=1, Adam,
+//! warm restarts).
+
+use anyhow::Result;
+
+use crate::compress::cosine::{BoundMode, Rounding};
+use crate::compress::{Codec, CodecKind};
+use crate::fl::FlConfig;
+use crate::runtime::Engine;
+use crate::util::timer::fmt_bytes;
+
+use super::{run_codec_series, FigOpts};
+
+pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
+    let rounds = opts.rounds_or(2, 100);
+    let mut base = FlConfig::unet().with_rounds(rounds);
+    base.eval_every = (rounds / 8).max(1);
+
+    let cos = |bits| {
+        Codec::new(CodecKind::Cosine {
+            bits,
+            rounding: Rounding::Biased,
+            bound: BoundMode::ClipTopPercent(1.0),
+        })
+    };
+    let lin8ur = Codec::new(CodecKind::LinearRotated {
+        bits: 8,
+        rounding: Rounding::Unbiased,
+    });
+    let series = if opts.full {
+        vec![
+            ("float32".to_string(), Codec::float32()),
+            ("cosine-8".to_string(), cos(8)),
+            ("cosine-4".to_string(), cos(4)),
+            ("cosine-2".to_string(), cos(2)),
+            ("linear-8 (U,R)".to_string(), lin8ur),
+        ]
+    } else {
+        vec![
+            ("float32".to_string(), Codec::float32()),
+            ("cosine-8".to_string(), cos(8)),
+            ("cosine-2".to_string(), cos(2)),
+        ]
+    };
+    let histories = run_codec_series(
+        engine,
+        &base,
+        &series,
+        "Figure 9 — BraTS-substitute dice vs rounds",
+        "fig9",
+        opts,
+    )?;
+
+    // Second panel: dice vs transferred bytes.
+    println!("\n-- dice vs cumulative uplink (final round) --");
+    println!("{:<22} {:>14} {:>8}", "series", "uplink", "dice");
+    for h in &histories {
+        if let (Some(last), Some(m)) = (h.records.last(), h.final_metric()) {
+            println!(
+                "{:<22} {:>14} {:>8.4}",
+                h.label,
+                fmt_bytes(last.uplink_bytes),
+                m
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! One driver per paper figure/table (DESIGN.md §3 experiment index).
+//!
+//! Every driver prints the same rows/series the paper reports and writes a
+//! JSON dump under `artifacts/results/<id>.json`. Absolute numbers differ
+//! (synthetic data, CPU substrate — DESIGN.md §5); the *shape* — who wins,
+//! by roughly what factor, where training collapses — is the claim.
+//!
+//! Scale: defaults are CPU-budget-reduced round counts; `--scale full`
+//! restores the paper's counts (500/2000/100 rounds).
+
+pub mod fig10;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod tab1;
+pub mod tab2;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+use crate::util::cli::Args;
+
+/// Common figure-driver options parsed from the CLI.
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    /// Override round count (None = the scale default).
+    pub rounds: Option<usize>,
+    /// Paper-scale rounds instead of reduced defaults.
+    pub full: bool,
+    pub seed: u64,
+    pub verbose: bool,
+    /// Where results JSON goes.
+    pub out_dir: std::path::PathBuf,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            rounds: None,
+            full: false,
+            seed: 42,
+            verbose: false,
+            out_dir: std::path::PathBuf::from("artifacts/results"),
+        }
+    }
+}
+
+impl FigOpts {
+    pub fn from_args(args: &Args) -> FigOpts {
+        FigOpts {
+            rounds: args.opt("rounds").map(|r| r.parse().expect("--rounds")),
+            full: args.opt_or("scale", "small") == "full" || args.flag("full"),
+            seed: args.opt_u64("seed", 42),
+            verbose: !args.flag("quiet"),
+            out_dir: std::path::PathBuf::from(
+                args.opt_or("out-dir", "artifacts/results"),
+            ),
+        }
+    }
+
+    /// Choose a round count: explicit > full-scale > reduced default.
+    pub fn rounds_or(&self, small: usize, full: usize) -> usize {
+        self.rounds.unwrap_or(if self.full { full } else { small })
+    }
+}
+
+/// All figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "tab1", "tab2",
+];
+
+/// Dispatch a figure by id. `engine` is lazy so analytic figures (fig3)
+/// work without artifacts.
+pub fn run_figure(id: &str, engine: &mut Option<Engine>, opts: &FigOpts) -> Result<()> {
+    let need_engine = id != "fig3";
+    if need_engine && engine.is_none() {
+        *engine = Some(Engine::load_default()?);
+    }
+    let eng = engine.as_ref();
+    match id {
+        "fig3" => fig3::run(opts),
+        "fig4" => fig4::run(eng.unwrap(), opts),
+        "fig5" => fig5::run(eng.unwrap(), opts),
+        "fig6" => fig6::run(eng.unwrap(), opts),
+        "fig7" => fig7::run(eng.unwrap(), opts),
+        "fig8" => fig8::run(eng.unwrap(), opts),
+        "fig9" => fig9::run(eng.unwrap(), opts),
+        "fig10" => fig10::run(eng.unwrap(), opts),
+        "tab1" => tab1::run(eng.unwrap(), opts),
+        "tab2" => tab2::run(eng.unwrap(), opts),
+        other => bail!("unknown figure '{other}' (use one of {ALL:?})"),
+    }
+}
+
+/// Run one FL experiment per (label, codec) pair over a shared base
+/// config, print the convergence table, dump JSON, return the histories.
+pub fn run_codec_series(
+    engine: &Engine,
+    base: &crate::fl::FlConfig,
+    series: &[(String, crate::compress::Codec)],
+    title: &str,
+    file: &str,
+    opts: &FigOpts,
+) -> Result<Vec<crate::fl::History>> {
+    let mut histories = Vec::new();
+    for (label, codec) in series {
+        if opts.verbose {
+            println!("[{file}] running {label} ({} rounds)...", base.rounds);
+        }
+        let mut cfg = base.clone().with_codec(*codec).with_seed(opts.seed);
+        cfg.verbose = false;
+        let result = crate::fl::runner::run_labeled(&cfg, engine, label)?;
+        if opts.verbose {
+            println!(
+                "[{file}] {label}: best {:.4}, {} uplink, ratio {:.1}x, {:.1}s",
+                result.history.best_metric().unwrap_or(f64::NAN),
+                crate::util::timer::fmt_bytes(result.network.uplink_bytes),
+                result.network.uplink_compression_vs_float32(
+                    engine.manifest.model(base.task.model_key())?.param_count
+                ),
+                result.wall_secs,
+            );
+        }
+        histories.push(result.history);
+    }
+    print_series_table(title, &histories);
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.out_dir.join(format!("{file}.json"));
+    crate::fl::metrics::save_results(&path, title, &histories)?;
+    println!("wrote {path:?}");
+    Ok(histories)
+}
+
+/// Shared pretty-printer for convergence series.
+pub fn print_series_table(title: &str, series: &[crate::fl::History]) {
+    println!("\n== {title} ==");
+    let mut rounds: Vec<usize> = series
+        .iter()
+        .flat_map(|h| {
+            h.records
+                .iter()
+                .filter(|r| r.eval_metric.is_some())
+                .map(|r| r.round)
+        })
+        .collect();
+    rounds.sort_unstable();
+    rounds.dedup();
+    print!("{:<28}", "series \\ round");
+    for r in &rounds {
+        print!(" {r:>7}");
+    }
+    println!("    best");
+    for h in series {
+        print!("{:<28}", h.label);
+        for r in &rounds {
+            let v = h
+                .records
+                .iter()
+                .find(|rec| rec.round == *r)
+                .and_then(|rec| rec.eval_metric);
+            match v {
+                Some(m) => print!(" {:>7.4}", m),
+                None => print!(" {:>7}", "-"),
+            }
+        }
+        println!("   {:.4}", h.best_metric().unwrap_or(f64::NAN));
+    }
+}

@@ -1,0 +1,90 @@
+//! Table 2 (§5.4): ablation of top-gradient clipping for the bound b_θ —
+//! clip percentages 0..6% on CIFAR with random sparsification, at the
+//! most precise (8-bit @10%) and coarsest (2-bit @5%) settings.
+//!
+//! Expected shape: clip=0 (auto bound) collapses for 2-bit (the paper's
+//! "10" entry); moderate clipping (1–6%) recovers and slightly improves
+//! accuracy.
+
+use anyhow::Result;
+
+use crate::compress::cosine::{BoundMode, Rounding};
+use crate::compress::{Codec, CodecKind};
+use crate::fl::{runner, FlConfig};
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+use super::FigOpts;
+
+pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
+    let rounds = opts.rounds_or(1, 2000);
+    let clips: Vec<f64> = if opts.full {
+        vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+    } else {
+        vec![0.0, 1.0, 6.0]
+    };
+    let settings: Vec<(&str, u8, f64)> =
+        vec![("8-bit @10%", 8, 0.10), ("2-bit @5%", 2, 0.05)];
+
+    println!("== Table 2 — clipping ablation (best accuracy) ==");
+    // Reduced scale: E=1 artifact + 20 clients (see fig7).
+    let mut base = if opts.full {
+        FlConfig::cifar()
+    } else {
+        let mut c = FlConfig::cifar_e1();
+        c.participation = 0.1;
+        c.n_clients = 20;
+        c
+    }
+    .with_rounds(rounds);
+    base.eval_every = (rounds / 2).max(1);
+
+    // float32 reference column.
+    if opts.verbose {
+        println!("running f32 reference...");
+    }
+    let f32_result = runner::run_labeled(
+        &base.clone().with_codec(Codec::float32()).with_seed(opts.seed),
+        engine,
+        "f32",
+    )?;
+    let f32_acc = f32_result.history.best_metric().unwrap_or(f64::NAN);
+
+    let mut json_rows = Vec::new();
+    print!("{:<14} {:>8}", "setting", "f32");
+    for c in &clips {
+        print!(" {:>7}", format!("{c}%"));
+    }
+    println!();
+    for (label, bits, keep) in &settings {
+        print!("{label:<14} {f32_acc:>8.4}");
+        let mut row = Json::obj().set("setting", *label).set("f32", f32_acc);
+        for &clip in &clips {
+            let bound = if clip == 0.0 {
+                BoundMode::Auto
+            } else {
+                BoundMode::ClipTopPercent(clip)
+            };
+            let codec = Codec::new(CodecKind::Cosine {
+                bits: *bits,
+                rounding: Rounding::Biased,
+                bound,
+            })
+            .with_sparsify(*keep);
+            let cfg = base.clone().with_codec(codec).with_seed(opts.seed);
+            let result = runner::run_labeled(&cfg, engine, &format!("{label} clip{clip}"))?;
+            let acc = result.history.best_metric().unwrap_or(f64::NAN);
+            print!(" {acc:>7.4}");
+            row = row.set(&format!("clip{clip}"), acc);
+        }
+        println!();
+        json_rows.push(row);
+    }
+    println!("\npaper shape: clip=0 collapses at 2-bit; 1-6% clipping recovers/improves.");
+
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.out_dir.join("tab2.json");
+    std::fs::write(&path, Json::obj().set("rows", Json::Arr(json_rows)).pretty())?;
+    println!("wrote {path:?}");
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Centralized-SGD toy harness for Figure 4: how important are the top vs
+//! rear gradients?
+//!
+//! Per step, the per-batch gradient (from the `mnist_grad` artifact) is
+//! perturbed — zero or Gaussian-noise the top-k% or rear-k% coordinates by
+//! |g| — before the SGD update. The paper's observation: corrupting the
+//! top gradients breaks training; corrupting the rear barely matters.
+
+use anyhow::Result;
+
+use crate::data::partition::eval_set;
+use crate::data::synth::{SynthMnist, SynthTask};
+use crate::runtime::manifest::init_params;
+use crate::runtime::Engine;
+use crate::util::rng::Pcg64;
+use crate::util::stats::kth_largest_abs;
+
+/// What to do to the selected coordinates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Perturbation {
+    None,
+    /// Set the selected coordinates to zero.
+    Zero,
+    /// Add Gaussian noise with the given std (paper: 0.1).
+    Noise(f32),
+}
+
+/// Which coordinates to select.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Target {
+    /// Top `frac` by |g|.
+    Top(f64),
+    /// Rear (smallest) `frac` by |g|.
+    Rear(f64),
+}
+
+/// Apply a perturbation in place.
+pub fn perturb(g: &mut [f32], target: Target, p: Perturbation, rng: &mut Pcg64) {
+    if p == Perturbation::None {
+        return;
+    }
+    let n = g.len();
+    let frac = match target {
+        Target::Top(f) | Target::Rear(f) => f,
+    };
+    let k = ((frac * n as f64).ceil() as usize).clamp(1, n);
+    match target {
+        Target::Top(_) => {
+            // top k%: |g| at or above the k-th largest magnitude.
+            let thresh = kth_largest_abs(g, k);
+            for v in g.iter_mut() {
+                if v.abs() >= thresh {
+                    apply(v, p, rng);
+                }
+            }
+        }
+        Target::Rear(_) => {
+            // rear k%: the k smallest |g| — threshold is the k-th smallest,
+            // i.e. the (n+1-k)-th largest.
+            let thresh = kth_largest_abs(g, n + 1 - k);
+            for v in g.iter_mut() {
+                if v.abs() <= thresh {
+                    apply(v, p, rng);
+                }
+            }
+        }
+    }
+}
+
+fn apply(v: &mut f32, p: Perturbation, rng: &mut Pcg64) {
+    match p {
+        Perturbation::None => {}
+        Perturbation::Zero => *v = 0.0,
+        Perturbation::Noise(std) => *v += rng.normal_f32(0.0, std),
+    }
+}
+
+/// One training curve of the toy study.
+pub struct ToyCurve {
+    pub label: String,
+    /// (epoch, eval accuracy).
+    pub points: Vec<(usize, f64)>,
+}
+
+/// Run centralized SGD on the MNIST-like task with gradient perturbation.
+pub fn run_centralized(
+    engine: &Engine,
+    epochs: usize,
+    n_train: usize,
+    lr: f32,
+    target: Target,
+    perturbation: Perturbation,
+    seed: u64,
+    label: &str,
+) -> Result<ToyCurve> {
+    let task = SynthMnist::new(seed);
+    let model = engine.manifest.model("mnist")?.clone();
+    let batch = engine.manifest.grad_batch;
+    let mut rng = Pcg64::new(seed, 0xF164);
+
+    // Training pool: balanced classes.
+    let mut train_x = Vec::with_capacity(n_train * 784);
+    let mut train_y = Vec::with_capacity(n_train);
+    for i in 0..n_train {
+        let (x, y) = task.gen(i % 10, (i / 10) as u64);
+        train_x.extend_from_slice(&x);
+        train_y.push(y[0]);
+    }
+    let eval_n = engine.manifest.round("mnist")?.eval_n;
+    let (eval_x, eval_y) = eval_set(&task, eval_n);
+
+    let mut params = init_params(&model, seed);
+    let mut points = Vec::new();
+    let steps_per_epoch = n_train / batch;
+    for epoch in 0..epochs {
+        for _ in 0..steps_per_epoch {
+            // Sample a batch.
+            let mut bx = Vec::with_capacity(batch * 784);
+            let mut by = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                let i = rng.below_usize(n_train);
+                bx.extend_from_slice(&train_x[i * 784..(i + 1) * 784]);
+                by.push(train_y[i]);
+            }
+            let (mut grad, _loss) = engine.grad_step(&params, bx, by)?;
+            perturb(&mut grad, target, perturbation, &mut rng);
+            for (p, g) in params.iter_mut().zip(&grad) {
+                *p -= lr * g;
+            }
+        }
+        let (acc, _) = engine.classification_eval(
+            "mnist_eval",
+            &params,
+            eval_x.clone(),
+            eval_y.clone(),
+            eval_n,
+        )?;
+        points.push((epoch + 1, acc));
+    }
+    Ok(ToyCurve {
+        label: label.to_string(),
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perturb_zero_top_hits_largest() {
+        let mut rng = Pcg64::seeded(1);
+        let mut g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
+        perturb(&mut g, Target::Top(0.4), Perturbation::Zero, &mut rng);
+        // top 40% of 5 = 2 coordinates: -5 and 3.
+        assert_eq!(g[1], 0.0);
+        assert_eq!(g[3], 0.0);
+        assert_eq!(g[0], 0.1);
+        assert_eq!(g[2], 0.2);
+    }
+
+    #[test]
+    fn perturb_zero_rear_hits_smallest() {
+        let mut rng = Pcg64::seeded(2);
+        let mut g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
+        perturb(&mut g, Target::Rear(0.4), Perturbation::Zero, &mut rng);
+        // rear 40% = 2 smallest: 0.1 and -0.05.
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[4], 0.0);
+        assert_eq!(g[1], -5.0);
+        assert_eq!(g[3], 3.0);
+    }
+
+    #[test]
+    fn perturb_noise_changes_selected_only() {
+        let mut rng = Pcg64::seeded(3);
+        let orig = vec![0.01f32, -2.0, 0.02, 1.5, -0.03];
+        let mut g = orig.clone();
+        perturb(&mut g, Target::Top(0.4), Perturbation::Noise(0.1), &mut rng);
+        assert_ne!(g[1], orig[1]);
+        assert_ne!(g[3], orig[3]);
+        assert_eq!(g[0], orig[0]);
+        assert_eq!(g[2], orig[2]);
+        assert_eq!(g[4], orig[4]);
+    }
+
+    #[test]
+    fn perturb_none_is_identity() {
+        let mut rng = Pcg64::seeded(4);
+        let orig = vec![1.0f32, 2.0, 3.0];
+        let mut g = orig.clone();
+        perturb(&mut g, Target::Top(0.5), Perturbation::None, &mut rng);
+        assert_eq!(g, orig);
+    }
+}

@@ -1,0 +1,213 @@
+//! A federated worker (Algorithm 1 "Worker"): runs E local epochs through
+//! the AOT round artifact, forms `g = M_in − M*`, and compresses it with
+//! the experiment codec. Per-client state (EF residual, RNG lane, cached
+//! local data) lives here for the life of the run.
+
+use anyhow::Result;
+
+use crate::compress::{codec::EncodedGradient, ClientCodecState, Codec};
+use crate::data::partition::ClientShard;
+use crate::data::synth::SynthTask;
+use crate::runtime::manifest::RoundCfg;
+use crate::runtime::Engine;
+use crate::util::rng::Pcg64;
+
+/// One client.
+pub struct Client {
+    pub shard: ClientShard,
+    pub codec_state: ClientCodecState,
+    rng: Pcg64,
+    /// Materialized local data, generated lazily on first selection.
+    cache: Option<(Vec<f32>, Vec<i32>)>,
+}
+
+/// The result of one local round.
+pub struct LocalUpdate {
+    pub encoded: EncodedGradient,
+    pub num_examples: u32,
+    pub train_loss: f32,
+}
+
+impl Client {
+    pub fn new(shard: ClientShard, run_seed: u64) -> Client {
+        let rng = Pcg64::new(run_seed, 0xC11E0000 | shard.client_id as u64);
+        Client {
+            shard,
+            codec_state: ClientCodecState::new(),
+            rng,
+            cache: None,
+        }
+    }
+
+    /// Epoch permutations: `steps × batch` indices into the local dataset,
+    /// reshuffled per epoch (this is the only stochasticity inside a local
+    /// round; it lives in Rust so artifacts stay deterministic).
+    fn perms(&mut self, cfg: &RoundCfg) -> Vec<i32> {
+        let nb = cfg.n_data / cfg.batch;
+        let mut out = Vec::with_capacity(cfg.epochs * nb * cfg.batch);
+        for _ in 0..cfg.epochs {
+            let perm = self.rng.permutation(cfg.n_data);
+            out.extend(perm[..nb * cfg.batch].iter().map(|&i| i as i32));
+        }
+        out
+    }
+
+    /// Run one local round and compress the update.
+    pub fn run_round<T: SynthTask>(
+        &mut self,
+        engine: &Engine,
+        task: &T,
+        artifact: &str,
+        cfg: &RoundCfg,
+        global_params: &[f32],
+        lr: f32,
+        codec: &Codec,
+        use_kernel_quantizer: bool,
+    ) -> Result<LocalUpdate> {
+        if self.cache.is_none() {
+            self.cache = Some(self.shard.materialize(task));
+        }
+        let (x, y) = self.cache.as_ref().unwrap().clone();
+        let perms = self.perms(cfg);
+        let (delta, train_loss) =
+            engine.local_round(artifact, global_params, x, y, perms, lr)?;
+
+        let encoded = if use_kernel_quantizer {
+            self.encode_via_kernel(engine, &delta, codec)?
+        } else {
+            codec.encode(&delta, &mut self.codec_state, &mut self.rng)
+        };
+        Ok(LocalUpdate {
+            encoded,
+            num_examples: self.shard.len() as u32,
+            train_loss,
+        })
+    }
+
+    /// Quantize through the Pallas kernel artifacts (L1 on the hot path):
+    /// norm/bound from the Rust reducers, angle transform + rounding in the
+    /// lowered kernel, then bit-pack + DEFLATE exactly as the native path.
+    fn encode_via_kernel(
+        &mut self,
+        engine: &Engine,
+        delta: &[f32],
+        codec: &Codec,
+    ) -> Result<EncodedGradient> {
+        use crate::compress::cosine::{BoundMode, Rounding};
+        use crate::compress::{bitpack, deflate, CodecKind};
+        let (bits, rounding, bound_mode) = match codec.kind {
+            CodecKind::Cosine {
+                bits,
+                rounding,
+                bound,
+            } => (bits, rounding, bound),
+            _ => anyhow::bail!("kernel quantizer only supports the cosine codec"),
+        };
+        anyhow::ensure!(
+            codec.keep_frac >= 1.0,
+            "kernel quantizer path does not sparsify"
+        );
+        let norm = crate::util::stats::l2_norm(delta) as f32;
+        if norm <= 0.0 {
+            return Ok(codec.encode(delta, &mut self.codec_state, &mut self.rng));
+        }
+        // Bound from the same definitions as the native quantizer
+        // (CosineQuantizer::compute_bound, §3).
+        let bound = match bound_mode {
+            BoundMode::FixedAngle(b) => b,
+            BoundMode::Auto => {
+                let mut tmin = std::f32::consts::PI;
+                let mut tmax = 0.0f32;
+                for &g in delta {
+                    let t = (g / norm).clamp(-1.0, 1.0).acos();
+                    tmin = tmin.min(t);
+                    tmax = tmax.max(t);
+                }
+                tmin.min(std::f32::consts::PI - tmax)
+                    .clamp(0.0, std::f32::consts::PI / 2.0)
+            }
+            BoundMode::ClipTopPercent(p) => {
+                let k = ((p / 100.0) * delta.len() as f64).ceil().max(1.0) as usize;
+                let clip = crate::util::stats::kth_largest_abs(delta, k.min(delta.len()));
+                (clip.min(norm) / norm).clamp(-1.0, 1.0).acos()
+            }
+        };
+        let u: Vec<f32> = match rounding {
+            Rounding::Biased => vec![0.5; delta.len()],
+            Rounding::Unbiased => (0..delta.len()).map(|_| self.rng.f32()).collect(),
+        };
+        let codes = engine.kernel_quantize(bits, delta, norm, bound, &u)?;
+        let packed = bitpack::pack(&codes, bits);
+        let (payload, deflated) = if codec.deflate {
+            let c = deflate::deflate(&packed, codec.level);
+            if c.len() < packed.len() {
+                (c, true)
+            } else {
+                (packed, false)
+            }
+        } else {
+            (packed, false)
+        };
+        Ok(EncodedGradient {
+            kind_id: codec.kind.id(),
+            bits,
+            n: delta.len() as u32,
+            kept: delta.len() as u32,
+            mask_seed: 0,
+            rot_seed: 0,
+            norm,
+            bound,
+            deflated,
+            payload,
+        })
+    }
+
+    /// Drop the materialized data (memory control for large federations).
+    pub fn evict_cache(&mut self) {
+        self.cache = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::iid_partition;
+
+    #[test]
+    fn perms_cover_dataset_each_epoch() {
+        let shard = iid_partition(1, 1, 20, 10).remove(0);
+        let mut c = Client::new(shard, 7);
+        let cfg = RoundCfg {
+            n_data: 20,
+            batch: 5,
+            epochs: 3,
+            eval_n: 0,
+        };
+        let p = c.perms(&cfg);
+        assert_eq!(p.len(), 3 * 20);
+        for e in 0..3 {
+            let mut epoch: Vec<i32> = p[e * 20..(e + 1) * 20].to_vec();
+            epoch.sort_unstable();
+            assert_eq!(epoch, (0..20).collect::<Vec<i32>>());
+        }
+        // Different epochs use different orders (overwhelmingly likely).
+        assert_ne!(p[0..20], p[20..40]);
+    }
+
+    #[test]
+    fn clients_have_independent_rng_lanes() {
+        let shards = iid_partition(1, 2, 10, 10);
+        let mut a = Client::new(shards[0].clone(), 7);
+        let mut b = Client::new(shards[1].clone(), 7);
+        let cfg = RoundCfg {
+            n_data: 10,
+            batch: 5,
+            epochs: 1,
+            eval_n: 0,
+        };
+        assert_ne!(a.perms(&cfg), b.perms(&cfg));
+        // Same client id + seed → same stream.
+        let mut a2 = Client::new(shards[0].clone(), 7);
+        assert_eq!(Client::new(shards[0].clone(), 7).perms(&cfg), a2.perms(&cfg));
+    }
+}

@@ -1,0 +1,264 @@
+//! Experiment configuration: one [`FlConfig`] fully describes a federated
+//! run (task, federation shape, codec, schedules, seed). Constructors
+//! mirror the paper's §5.1 setups; everything is overridable (CLI flags /
+//! JSON configs map onto these fields).
+
+use anyhow::{bail, Result};
+
+use crate::compress::Codec;
+use crate::util::json::Json;
+
+use super::schedule::LrSchedule;
+
+/// Which workload (and data distribution) to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// MNIST-like, IID split.
+    MnistIid,
+    /// MNIST-like, Non-IID shard split (≤2 classes/client).
+    MnistNonIid,
+    /// CIFAR-like, random equal split.
+    Cifar,
+    /// BraTS-like volumetric segmentation, 10 "hospitals".
+    Unet,
+}
+
+impl Task {
+    pub fn model_key(&self) -> &'static str {
+        match self {
+            Task::MnistIid | Task::MnistNonIid => "mnist",
+            Task::Cifar => "cifar",
+            Task::Unet => "unet",
+        }
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!("{}_eval", self.model_key())
+    }
+
+    pub fn parse(s: &str) -> Result<Task> {
+        Ok(match s {
+            "mnist-iid" => Task::MnistIid,
+            "mnist-noniid" | "mnist" => Task::MnistNonIid,
+            "cifar" => Task::Cifar,
+            "unet" | "brats" => Task::Unet,
+            other => bail!("unknown task '{other}'"),
+        })
+    }
+}
+
+/// A complete federated-learning experiment description.
+#[derive(Debug, Clone)]
+pub struct FlConfig {
+    pub task: Task,
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Total clients m.
+    pub n_clients: usize,
+    /// Participation fraction C.
+    pub participation: f64,
+    /// Round artifact name (selects E/B via the manifest round_cfg).
+    pub round_artifact: String,
+    /// Manifest round-config key (n_data/batch/epochs).
+    pub round_cfg_key: String,
+    /// Gradient compression scheme.
+    pub codec: Codec,
+    /// Server learning rate η_s (paper: 1 everywhere).
+    pub eta_s: f32,
+    /// Client learning-rate schedule η_c.
+    pub client_lr: LrSchedule,
+    pub seed: u64,
+    /// Evaluate every k rounds (0 = only final).
+    pub eval_every: usize,
+    /// Route quantization through the Pallas kernel artifacts instead of
+    /// the native Rust codec (demonstrates the L1 path; slower on CPU).
+    pub use_kernel_quantizer: bool,
+    pub verbose: bool,
+}
+
+impl FlConfig {
+    /// MNIST §5.1: 100 clients, C=0.1, E=1, B=10, SGD; IID 50 rounds with
+    /// constant η_c=0.1, Non-IID 500 rounds with cosine η_c.
+    pub fn mnist(non_iid: bool) -> FlConfig {
+        let rounds = if non_iid { 500 } else { 50 };
+        FlConfig {
+            task: if non_iid {
+                Task::MnistNonIid
+            } else {
+                Task::MnistIid
+            },
+            rounds,
+            n_clients: 100,
+            participation: 0.1,
+            round_artifact: "mnist_round".into(),
+            round_cfg_key: "mnist".into(),
+            codec: Codec::float32(),
+            eta_s: 1.0,
+            client_lr: if non_iid {
+                LrSchedule::Cosine {
+                    base: 0.1,
+                    total: rounds,
+                }
+            } else {
+                LrSchedule::Const(0.1)
+            },
+            seed: 42,
+            eval_every: 5,
+            use_kernel_quantizer: false,
+            verbose: false,
+        }
+    }
+
+    /// CIFAR §5.1: 100 clients, C=0.1, E=5, B=50, momentum 0.9,
+    /// cosine η_c from 0.1, 2000 rounds.
+    pub fn cifar() -> FlConfig {
+        FlConfig {
+            task: Task::Cifar,
+            rounds: 2000,
+            n_clients: 100,
+            participation: 0.1,
+            round_artifact: "cifar_round".into(),
+            round_cfg_key: "cifar".into(),
+            codec: Codec::float32(),
+            eta_s: 1.0,
+            client_lr: LrSchedule::Cosine {
+                base: 0.1,
+                total: 2000,
+            },
+            seed: 42,
+            eval_every: 20,
+            use_kernel_quantizer: false,
+            verbose: false,
+        }
+    }
+
+    /// Table 1's second system: (B=50, E=1, C=0.5) — same data touched.
+    pub fn cifar_e1() -> FlConfig {
+        let mut c = Self::cifar();
+        c.round_artifact = "cifar_round_e1".into();
+        c.round_cfg_key = "cifar_e1".into();
+        c.participation = 0.5;
+        c.rounds = 400; // 2000/5: same number of data passes
+        c.client_lr = LrSchedule::Cosine {
+            base: 0.1,
+            total: 400,
+        };
+        c
+    }
+
+    /// BraTS §5.1: 10 hospitals, C=1, E=3, B=3, Adam, cosine warm restarts
+    /// at rounds 20 and 60, 100 rounds.
+    pub fn unet() -> FlConfig {
+        FlConfig {
+            task: Task::Unet,
+            rounds: 100,
+            n_clients: 10,
+            participation: 1.0,
+            round_artifact: "unet_round".into(),
+            round_cfg_key: "unet".into(),
+            codec: Codec::float32(),
+            eta_s: 1.0,
+            client_lr: LrSchedule::CosineWarmRestarts {
+                base: 1e-3,
+                total: 100,
+                restarts: vec![20, 60],
+            },
+            seed: 42,
+            eval_every: 5,
+            use_kernel_quantizer: false,
+            verbose: false,
+        }
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    pub fn with_rounds(mut self, rounds: usize) -> Self {
+        // Keep cosine horizons in sync with the shortened run.
+        match &mut self.client_lr {
+            LrSchedule::Cosine { total, .. } => *total = rounds,
+            LrSchedule::CosineWarmRestarts { total, restarts, .. } => {
+                let scale = rounds as f64 / (*total).max(1) as f64;
+                for r in restarts.iter_mut() {
+                    *r = ((*r as f64) * scale).round() as usize;
+                }
+                restarts.retain(|&r| r > 0 && r < rounds);
+                *total = rounds;
+            }
+            LrSchedule::Const(_) => {}
+        }
+        self.rounds = rounds;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Clients selected per round.
+    pub fn clients_per_round(&self) -> usize {
+        ((self.n_clients as f64 * self.participation).round() as usize)
+            .clamp(1, self.n_clients)
+    }
+
+    /// Summary for logs / results files.
+    pub fn describe(&self) -> Json {
+        Json::obj()
+            .set("task", format!("{:?}", self.task))
+            .set("rounds", self.rounds)
+            .set("n_clients", self.n_clients)
+            .set("participation", self.participation)
+            .set("codec", self.codec.name())
+            .set("seed", self.seed)
+            .set("round_artifact", self.round_artifact.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let m = FlConfig::mnist(true);
+        assert_eq!(m.rounds, 500);
+        assert_eq!(m.clients_per_round(), 10);
+        let mi = FlConfig::mnist(false);
+        assert_eq!(mi.rounds, 50);
+        let c = FlConfig::cifar();
+        assert_eq!(c.clients_per_round(), 10);
+        let c1 = FlConfig::cifar_e1();
+        assert_eq!(c1.clients_per_round(), 50);
+        let u = FlConfig::unet();
+        assert_eq!(u.clients_per_round(), 10);
+        assert_eq!(u.task.eval_artifact(), "unet_eval");
+    }
+
+    #[test]
+    fn with_rounds_rescales_schedules() {
+        let c = FlConfig::cifar().with_rounds(100);
+        match c.client_lr {
+            LrSchedule::Cosine { total, .. } => assert_eq!(total, 100),
+            _ => panic!(),
+        }
+        let u = FlConfig::unet().with_rounds(50);
+        match u.client_lr {
+            LrSchedule::CosineWarmRestarts { total, restarts, .. } => {
+                assert_eq!(total, 50);
+                assert_eq!(restarts, vec![10, 30]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn task_parsing() {
+        assert_eq!(Task::parse("mnist-iid").unwrap(), Task::MnistIid);
+        assert_eq!(Task::parse("cifar").unwrap(), Task::Cifar);
+        assert_eq!(Task::parse("brats").unwrap(), Task::Unet);
+        assert!(Task::parse("imagenet").is_err());
+    }
+}

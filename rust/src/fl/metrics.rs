@@ -1,0 +1,150 @@
+//! Experiment metrics: per-round records plus JSON export under
+//! `artifacts/results/` (one file per figure/run; the figure harnesses and
+//! EXPERIMENTS.md consume these).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One evaluated round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean local training loss across selected clients this round.
+    pub train_loss: f64,
+    /// Accuracy (classification) or mean dice (segmentation), if evaluated.
+    pub eval_metric: Option<f64>,
+    pub eval_loss: Option<f64>,
+    /// Cumulative uplink bytes after this round.
+    pub uplink_bytes: u64,
+    pub clients: usize,
+}
+
+/// A labelled series of round records.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl History {
+    pub fn new(label: impl Into<String>) -> Self {
+        History {
+            label: label.into(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    /// Best (max) eval metric seen.
+    pub fn best_metric(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.eval_metric)
+            .fold(None, |acc, m| Some(acc.map_or(m, |a: f64| a.max(m))))
+    }
+
+    /// Final eval metric.
+    pub fn final_metric(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.eval_metric)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("label", self.label.as_str())
+            .set(
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            let mut j = Json::obj()
+                                .set("round", r.round)
+                                .set("train_loss", r.train_loss)
+                                .set("uplink_bytes", r.uplink_bytes)
+                                .set("clients", r.clients);
+                            if let Some(m) = r.eval_metric {
+                                j = j.set("eval_metric", m);
+                            }
+                            if let Some(l) = r.eval_loss {
+                                j = j.set("eval_loss", l);
+                            }
+                            j
+                        })
+                        .collect(),
+                ),
+            )
+    }
+}
+
+/// Write a set of histories (one experiment) to a results JSON file.
+pub fn save_results(path: impl AsRef<Path>, name: &str, series: &[History]) -> Result<()> {
+    let json = Json::obj().set("experiment", name).set(
+        "series",
+        Json::Arr(series.iter().map(History::to_json).collect()),
+    );
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, json.pretty()).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, metric: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0 / (round + 1) as f64,
+            eval_metric: metric,
+            eval_loss: metric.map(|m| 1.0 - m),
+            uplink_bytes: round as u64 * 100,
+            clients: 10,
+        }
+    }
+
+    #[test]
+    fn best_and_final() {
+        let mut h = History::new("test");
+        h.push(rec(0, Some(0.5)));
+        h.push(rec(1, None));
+        h.push(rec(2, Some(0.8)));
+        h.push(rec(3, Some(0.7)));
+        assert_eq!(h.best_metric(), Some(0.8));
+        assert_eq!(h.final_metric(), Some(0.7));
+        assert_eq!(History::new("e").best_metric(), None);
+    }
+
+    #[test]
+    fn json_roundtrip_structure() {
+        let mut h = History::new("cosine-2");
+        h.push(rec(0, Some(0.25)));
+        let j = h.to_json();
+        assert_eq!(j.get("label").unwrap().as_str(), Some("cosine-2"));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].get("round").unwrap().as_usize(), Some(0));
+        assert_eq!(recs[0].get("eval_metric").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn save_results_writes_parseable_json() {
+        let dir = std::env::temp_dir().join("cossgd_test_results");
+        let path = dir.join("unit.json");
+        let mut h = History::new("s");
+        h.push(rec(1, Some(0.5)));
+        save_results(&path, "unit", &[h]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = Json::parse(&text).unwrap();
+        assert_eq!(json.get("experiment").unwrap().as_str(), Some("unit"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

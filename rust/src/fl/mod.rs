@@ -1,0 +1,23 @@
+//! The federated-learning coordinator (Layer 3).
+//!
+//! Implements FedAvg (McMahan et al. [25]) exactly as the paper's
+//! Algorithm 1: per round, a random `C` fraction of clients runs `E` local
+//! epochs (through the AOT round artifacts — [`crate::runtime::Engine`]),
+//! compresses `g = M_in − M*` with a [`crate::compress::Codec`], and the
+//! server decompresses and aggregates with Eq. (1). Every byte that moves
+//! is metered by [`network::NetworkLedger`].
+
+pub mod centralized;
+pub mod client;
+pub mod config;
+pub mod metrics;
+pub mod network;
+pub mod runner;
+pub mod schedule;
+pub mod server;
+
+pub use config::{FlConfig, Task};
+pub use metrics::{History, RoundRecord};
+pub use network::NetworkLedger;
+pub use runner::{run, RunResult};
+pub use schedule::LrSchedule;

@@ -1,0 +1,91 @@
+//! Simulated network: a byte-exact ledger of everything that moves between
+//! clients and server. The paper's cost tables (Table 1, the x-axes of
+//! Figs. 9–10) are uplink gradient bytes; we meter downlink (model
+//! broadcast) too for completeness.
+
+use crate::util::timer::fmt_bytes;
+
+/// Cumulative traffic ledger.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkLedger {
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub uplink_messages: u64,
+    pub downlink_messages: u64,
+}
+
+impl NetworkLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A client → server update of `bytes`.
+    pub fn record_uplink(&mut self, bytes: usize) {
+        self.uplink_bytes += bytes as u64;
+        self.uplink_messages += 1;
+    }
+
+    /// A server → client model broadcast of `bytes`.
+    pub fn record_downlink(&mut self, bytes: usize) {
+        self.downlink_bytes += bytes as u64;
+        self.downlink_messages += 1;
+    }
+
+    /// Mean uplink bytes per message.
+    pub fn mean_uplink(&self) -> f64 {
+        if self.uplink_messages == 0 {
+            0.0
+        } else {
+            self.uplink_bytes as f64 / self.uplink_messages as f64
+        }
+    }
+
+    /// Compression ratio of total uplink vs a float32 baseline that would
+    /// have sent `param_count` f32s per message.
+    pub fn uplink_compression_vs_float32(&self, param_count: usize) -> f64 {
+        if self.uplink_bytes == 0 {
+            return 1.0;
+        }
+        let baseline = self.uplink_messages as f64 * param_count as f64 * 4.0;
+        baseline / self.uplink_bytes as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "uplink {} in {} msgs (mean {}), downlink {} in {} msgs",
+            fmt_bytes(self.uplink_bytes),
+            self.uplink_messages,
+            fmt_bytes(self.mean_uplink() as u64),
+            fmt_bytes(self.downlink_bytes),
+            self.downlink_messages,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut n = NetworkLedger::new();
+        n.record_uplink(100);
+        n.record_uplink(300);
+        n.record_downlink(1000);
+        assert_eq!(n.uplink_bytes, 400);
+        assert_eq!(n.uplink_messages, 2);
+        assert_eq!(n.mean_uplink(), 200.0);
+        assert_eq!(n.downlink_bytes, 1000);
+    }
+
+    #[test]
+    fn compression_ratio_vs_baseline() {
+        let mut n = NetworkLedger::new();
+        // Two messages of 1000 bytes for a 10_000-param model:
+        // baseline = 2 * 40_000 bytes -> ratio 40.
+        n.record_uplink(1000);
+        n.record_uplink(1000);
+        assert!((n.uplink_compression_vs_float32(10_000) - 40.0).abs() < 1e-9);
+        assert_eq!(NetworkLedger::new().uplink_compression_vs_float32(10), 1.0);
+    }
+}

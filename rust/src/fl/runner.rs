@@ -1,0 +1,180 @@
+//! The experiment loop: wires clients, server, codec, network and engine
+//! into the full FedAvg round structure of Algorithm 1 and produces a
+//! [`History`].
+
+use anyhow::Result;
+
+use crate::compress::wire;
+use crate::data::partition::{self, eval_set};
+use crate::data::synth::{SynthCifar, SynthMnist, SynthTask, SynthVolume};
+use crate::runtime::manifest::init_params;
+use crate::runtime::Engine;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+use super::client::Client;
+use super::config::{FlConfig, Task};
+use super::metrics::{History, RoundRecord};
+use super::network::NetworkLedger;
+use super::server::Server;
+
+/// The outcome of one federated run.
+pub struct RunResult {
+    pub history: History,
+    pub network: NetworkLedger,
+    pub final_params: Vec<f32>,
+    pub wall_secs: f64,
+}
+
+/// Generic driver over a synthetic task.
+fn run_task<T: SynthTask>(
+    cfg: &FlConfig,
+    engine: &Engine,
+    task: &T,
+    shards: Vec<partition::ClientShard>,
+    label: &str,
+) -> Result<RunResult> {
+    let sw = Stopwatch::start();
+    let model = engine.manifest.model(cfg.task.model_key())?.clone();
+    let round_cfg = engine.manifest.round(&cfg.round_cfg_key)?;
+    let eval_artifact = cfg.task.eval_artifact();
+    let eval_n = round_cfg.eval_n;
+    let (eval_x, eval_y) = eval_set(task, eval_n);
+
+    let mut clients: Vec<Client> = shards
+        .into_iter()
+        .map(|s| Client::new(s, cfg.seed))
+        .collect();
+    let mut server = Server::new(init_params(&model, cfg.seed), cfg.eta_s, cfg.codec);
+    let mut network = NetworkLedger::new();
+    let mut selector = Pcg64::new(cfg.seed, 0x5E1EC7);
+    let mut history = History::new(label);
+
+    let per_round = cfg.clients_per_round();
+    for t in 0..cfg.rounds {
+        let lr = cfg.client_lr.at(t) as f32;
+        let selected = selector.sample_indices(clients.len(), per_round);
+        let mut loss_sum = 0.0f64;
+        for &ci in &selected {
+            network.record_downlink(server.broadcast_bytes());
+            let update = clients[ci].run_round(
+                engine,
+                task,
+                &cfg.round_artifact,
+                &round_cfg,
+                &server.params,
+                lr,
+                &cfg.codec,
+                cfg.use_kernel_quantizer,
+            )?;
+            let bytes = wire::serialize(&update.encoded);
+            network.record_uplink(bytes.len());
+            server.receive_update(&bytes, update.num_examples)?;
+            loss_sum += update.train_loss as f64;
+        }
+        server.finish_round();
+
+        let evaluate = cfg.rounds < 2
+            || t + 1 == cfg.rounds
+            || (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0);
+        let (metric, eval_loss) = if evaluate {
+            let (m, l) = match cfg.task {
+                Task::Unet => engine.segmentation_eval(
+                    &eval_artifact,
+                    &server.params,
+                    eval_x.clone(),
+                    eval_y.clone(),
+                )?,
+                _ => engine.classification_eval(
+                    &eval_artifact,
+                    &server.params,
+                    eval_x.clone(),
+                    eval_y.clone(),
+                    eval_n,
+                )?,
+            };
+            (Some(m), Some(l as f64))
+        } else {
+            (None, None)
+        };
+
+        let rec = RoundRecord {
+            round: t + 1,
+            train_loss: loss_sum / selected.len().max(1) as f64,
+            eval_metric: metric,
+            eval_loss,
+            uplink_bytes: network.uplink_bytes,
+            clients: selected.len(),
+        };
+        if cfg.verbose {
+            let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
+            println!(
+                "[{label}] round {:>4}/{} loss {:.4} metric {m} uplink {}",
+                t + 1,
+                cfg.rounds,
+                rec.train_loss,
+                crate::util::timer::fmt_bytes(network.uplink_bytes)
+            );
+        }
+        history.push(rec);
+    }
+
+    Ok(RunResult {
+        history,
+        network,
+        final_params: server.params,
+        wall_secs: sw.elapsed_secs(),
+    })
+}
+
+/// Run a federated experiment to completion.
+pub fn run(cfg: &FlConfig, engine: &Engine) -> Result<RunResult> {
+    run_labeled(cfg, engine, &cfg.codec.name())
+}
+
+/// Run with an explicit series label (figure harnesses).
+pub fn run_labeled(cfg: &FlConfig, engine: &Engine, label: &str) -> Result<RunResult> {
+    let round_cfg = engine.manifest.round(&cfg.round_cfg_key)?;
+    match cfg.task {
+        Task::MnistIid => {
+            let task = SynthMnist::new(cfg.seed);
+            let shards = partition::iid_partition(
+                cfg.seed,
+                cfg.n_clients,
+                round_cfg.n_data,
+                task.classes(),
+            );
+            run_task(cfg, engine, &task, shards, label)
+        }
+        Task::MnistNonIid => {
+            let task = SynthMnist::new(cfg.seed);
+            let shards = partition::non_iid_partition(
+                cfg.seed,
+                cfg.n_clients,
+                round_cfg.n_data,
+                task.classes(),
+            );
+            run_task(cfg, engine, &task, shards, label)
+        }
+        Task::Cifar => {
+            let task = SynthCifar::new(cfg.seed);
+            let shards = partition::iid_partition(
+                cfg.seed,
+                cfg.n_clients,
+                round_cfg.n_data,
+                task.classes(),
+            );
+            run_task(cfg, engine, &task, shards, label)
+        }
+        Task::Unet => {
+            let task = SynthVolume::new(cfg.seed);
+            let shards = partition::iid_partition(
+                cfg.seed,
+                cfg.n_clients,
+                round_cfg.n_data,
+                task.classes(),
+            );
+            run_task(cfg, engine, &task, shards, label)
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Client learning-rate schedules (§5.1): constant, cosine decay, and
+//! cosine with warm restarts (Loshchilov & Hutter [24], used for BraTS
+//! with restarts at rounds 20 and 60).
+
+use std::f64::consts::PI;
+
+/// η_c as a function of the round index `t ∈ [0, total)`.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Const(f64),
+    /// Cosine from `base` to 0 over `total` rounds.
+    Cosine { base: f64, total: usize },
+    /// Cosine with warm restarts at the given round indices.
+    CosineWarmRestarts {
+        base: f64,
+        total: usize,
+        restarts: Vec<usize>,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: usize) -> f64 {
+        match self {
+            LrSchedule::Const(lr) => *lr,
+            LrSchedule::Cosine { base, total } => {
+                let total = (*total).max(1);
+                let t = t.min(total - 1);
+                base * 0.5 * (1.0 + (PI * t as f64 / total as f64).cos())
+            }
+            LrSchedule::CosineWarmRestarts {
+                base,
+                total,
+                restarts,
+            } => {
+                // Segment boundaries: [0, r1), [r1, r2), ..., [rk, total).
+                let mut seg_start = 0usize;
+                let mut seg_end = *total;
+                for &r in restarts {
+                    if t >= r {
+                        seg_start = r;
+                    } else {
+                        seg_end = r;
+                        break;
+                    }
+                }
+                let len = (seg_end - seg_start).max(1);
+                let local = (t - seg_start).min(len - 1);
+                base * 0.5 * (1.0 + (PI * local as f64 / len as f64).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_const() {
+        let s = LrSchedule::Const(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(999), 0.1);
+    }
+
+    #[test]
+    fn cosine_decays_to_near_zero() {
+        let s = LrSchedule::Cosine {
+            base: 0.1,
+            total: 100,
+        };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!(s.at(50) < 0.06 && s.at(50) > 0.04);
+        assert!(s.at(99) < 0.001);
+        // Monotone decreasing.
+        for t in 1..100 {
+            assert!(s.at(t) <= s.at(t - 1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn warm_restarts_jump_back_up() {
+        let s = LrSchedule::CosineWarmRestarts {
+            base: 0.1,
+            total: 100,
+            restarts: vec![20, 60],
+        };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        let before_restart = s.at(19);
+        let at_restart = s.at(20);
+        assert!(at_restart > before_restart, "{at_restart} vs {before_restart}");
+        assert!((at_restart - 0.1).abs() < 1e-12);
+        let before_second = s.at(59);
+        assert!(s.at(60) > before_second);
+        assert!(s.at(99) < 0.01);
+    }
+}

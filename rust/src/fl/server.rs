@@ -1,0 +1,150 @@
+//! FedAvg server: holds the global model and applies Eq. (1):
+//!
+//! `M^{t+1} = M^t − η_s · Σ_i ∇M_i · N_i / Σ_i N_i`
+//!
+//! where `∇M_i` is client i's *decoded* update (`g = M_in − M*`) and `N_i`
+//! its local example count.
+
+use anyhow::Result;
+
+use crate::compress::{codec::EncodedGradient, wire, Codec};
+
+/// The global model + aggregation state.
+pub struct Server {
+    pub params: Vec<f32>,
+    pub eta_s: f32,
+    codec: Codec,
+    /// Weighted-sum accumulator for the current round.
+    acc: Vec<f64>,
+    weight_sum: f64,
+    updates_this_round: usize,
+}
+
+impl Server {
+    pub fn new(params: Vec<f32>, eta_s: f32, codec: Codec) -> Server {
+        let n = params.len();
+        Server {
+            params,
+            eta_s,
+            codec,
+            acc: vec![0.0; n],
+            weight_sum: 0.0,
+            updates_this_round: 0,
+        }
+    }
+
+    /// Receive one client's wire bytes: deserialize, Deflate-decompress,
+    /// dequantize, scatter, and fold into the weighted sum
+    /// (Algorithm 1 lines 6–7).
+    pub fn receive_update(&mut self, wire_bytes: &[u8], num_examples: u32) -> Result<()> {
+        let enc = wire::deserialize(wire_bytes)?;
+        self.receive_decoded(&enc, num_examples)
+    }
+
+    /// Same, for an already-parsed [`EncodedGradient`].
+    pub fn receive_decoded(&mut self, enc: &EncodedGradient, num_examples: u32) -> Result<()> {
+        let delta = self.codec.decode(enc)?;
+        anyhow::ensure!(
+            delta.len() == self.params.len(),
+            "update length {} != model {}",
+            delta.len(),
+            self.params.len()
+        );
+        let w = num_examples as f64;
+        for (a, &d) in self.acc.iter_mut().zip(&delta) {
+            *a += d as f64 * w;
+        }
+        self.weight_sum += w;
+        self.updates_this_round += 1;
+        Ok(())
+    }
+
+    /// Finish the round: apply the aggregated update to the model
+    /// (Eq. 1) and reset the accumulator. Returns the number of updates
+    /// folded in.
+    pub fn finish_round(&mut self) -> usize {
+        let n_updates = self.updates_this_round;
+        if self.weight_sum > 0.0 {
+            let scale = self.eta_s as f64 / self.weight_sum;
+            for (p, a) in self.params.iter_mut().zip(&mut self.acc) {
+                *p -= (*a * scale) as f32;
+                *a = 0.0;
+            }
+        }
+        self.weight_sum = 0.0;
+        self.updates_this_round = 0;
+        n_updates
+    }
+
+    /// Serialized model size for downlink accounting (float32 broadcast).
+    pub fn broadcast_bytes(&self) -> usize {
+        self.params.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::codec::ClientCodecState;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn aggregation_is_weighted_mean() {
+        // Two float32 clients with weights 1 and 3: the update is the
+        // weighted mean, scaled by eta_s.
+        let codec = Codec::float32();
+        let mut server = Server::new(vec![1.0, 1.0], 2.0, codec);
+        let mut rng = Pcg64::seeded(1);
+        let mut st = ClientCodecState::new();
+        let e1 = codec.encode(&[1.0, 0.0], &mut st, &mut rng);
+        let e2 = codec.encode(&[0.0, 1.0], &mut st, &mut rng);
+        server.receive_decoded(&e1, 1).unwrap();
+        server.receive_decoded(&e2, 3).unwrap();
+        assert_eq!(server.finish_round(), 2);
+        // mean = (1*[1,0] + 3*[0,1]) / 4 = [0.25, 0.75]; M -= 2*mean.
+        assert!((server.params[0] - 0.5).abs() < 1e-6);
+        assert!((server.params[1] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wire_path_equals_decoded_path() {
+        let codec = Codec::cosine(8);
+        let mut rng = Pcg64::seeded(2);
+        let g = crate::util::propcheck::gradient_like(&mut rng, 500);
+        let enc = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
+        let bytes = wire::serialize(&enc);
+
+        let mut s1 = Server::new(vec![0.0; 500], 1.0, codec);
+        s1.receive_update(&bytes, 10).unwrap();
+        s1.finish_round();
+
+        let mut s2 = Server::new(vec![0.0; 500], 1.0, codec);
+        s2.receive_decoded(&enc, 10).unwrap();
+        s2.finish_round();
+
+        assert_eq!(s1.params, s2.params);
+    }
+
+    #[test]
+    fn empty_round_is_noop() {
+        let mut server = Server::new(vec![3.0; 4], 1.0, Codec::float32());
+        assert_eq!(server.finish_round(), 0);
+        assert_eq!(server.params, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn accumulator_resets_between_rounds() {
+        let codec = Codec::float32();
+        let mut server = Server::new(vec![0.0; 2], 1.0, codec);
+        let mut rng = Pcg64::seeded(3);
+        let mut st = ClientCodecState::new();
+        let e = codec.encode(&[1.0, 1.0], &mut st, &mut rng);
+        server.receive_decoded(&e, 1).unwrap();
+        server.finish_round();
+        let after_first = server.params.clone();
+        server.receive_decoded(&e, 1).unwrap();
+        server.finish_round();
+        // Second round applies exactly one more unit step.
+        assert!((server.params[0] - (after_first[0] - 1.0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,39 @@
+//! # CosSGD — communication-efficient federated learning with a
+//! cosine-based nonlinear gradient quantization.
+//!
+//! Reproduction of *"CosSGD: Nonlinear Quantization for
+//! Communication-efficient Federated Learning"* (He, Zenk, Fritz, 2020) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the federated-learning coordinator: FedAvg
+//!   server, simulated client fleet, the full gradient-compression stack
+//!   (cosine quantization plus every baseline the paper compares against),
+//!   a byte-exact simulated network, metrics, config and CLI.
+//! * **Layer 2** — JAX models (`python/compile/model.py`), AOT-lowered to
+//!   HLO text executed through the PJRT CPU client (`runtime`).
+//! * **Layer 1** — Pallas quantization kernels
+//!   (`python/compile/kernels/`), lowered into the same artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! compute once; everything else is this crate.
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |--------|----------|
+//! | [`compress`] | quantizers (cosine, linear, Hadamard-rotated, sign-family), sparsification, bit-packing, our own DEFLATE, entropy stats, wire format |
+//! | [`fl`] | FedAvg server/clients, round runner, schedules, simulated network, centralized toy harness |
+//! | [`data`] | synthetic MNIST/CIFAR/volume datasets + IID/Non-IID partitioning |
+//! | [`runtime`] | PJRT engine: manifest-driven loading and execution of AOT artifacts |
+//! | [`figures`] | one driver per paper figure/table (fig3..fig10, tab1, tab2) |
+//! | [`util`] | offline substrates: PCG64 RNG, JSON, CLI, stats, timing, micro-bench, property-check |
+
+pub mod compress;
+pub mod data;
+pub mod figures;
+pub mod fl;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,209 @@
+//! `repro` — the CosSGD reproduction launcher.
+//!
+//! ```text
+//! repro figure <id>|all [--rounds N] [--scale full] [--seed S] [--quiet]
+//! repro train --task mnist|mnist-iid|cifar|unet --codec <name> [--bits B]
+//!             [--keep F] [--rounds N] [--kernel] [--seed S]
+//! repro compress-stats [--n N]      # codec table, no artifacts needed
+//! repro check                       # load + compile all artifacts
+//! repro list                        # figure ids and codec names
+//! ```
+
+use anyhow::{bail, Result};
+
+use cossgd::compress::cosine::{BoundMode, Rounding};
+use cossgd::compress::{Codec, CodecKind};
+use cossgd::figures::{self, FigOpts};
+use cossgd::fl::{self, FlConfig, Task};
+use cossgd::runtime::Engine;
+use cossgd::util::cli::Args;
+use cossgd::util::rng::Pcg64;
+use cossgd::util::timer::{fmt_bytes, Stopwatch};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("figure") => cmd_figure(args),
+        Some("train") => cmd_train(args),
+        Some("compress-stats") => cmd_compress_stats(args),
+        Some("check") => cmd_check(),
+        Some("list") | None => cmd_list(),
+        Some(other) => bail!("unknown subcommand '{other}' (try `repro list`)"),
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("subcommands: figure, train, compress-stats, check, list");
+    println!("figures: {}", figures::ALL.join(", "));
+    println!("tasks:   mnist (non-iid), mnist-iid, cifar, unet");
+    println!(
+        "codecs:  float32, cosine, linear, linear-rotated, signsgd, signsgd-norm, ef-signsgd"
+    );
+    println!("options: --bits 1..8, --keep 0.05..1.0, --unbiased, --clip P, --no-deflate");
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    let sw = Stopwatch::start();
+    let engine = Engine::load_default()?;
+    let names: Vec<String> = engine.manifest.artifacts.keys().cloned().collect();
+    println!(
+        "manifest: {} artifacts, {} models",
+        names.len(),
+        engine.manifest.models.len()
+    );
+    for n in &names {
+        engine.warmup(&[n.as_str()])?;
+        println!("  compiled {n}");
+    }
+    println!("all artifacts compiled in {:.1}s", sw.elapsed_secs());
+    Ok(())
+}
+
+/// Build a codec from CLI flags.
+fn codec_from_args(args: &Args) -> Result<Codec> {
+    let bits = args.opt_usize("bits", 2) as u8;
+    let rounding = if args.flag("unbiased") {
+        Rounding::Unbiased
+    } else {
+        Rounding::Biased
+    };
+    let bound = match args.opt("clip") {
+        Some(p) => {
+            let p: f64 = p.parse()?;
+            if p == 0.0 {
+                BoundMode::Auto
+            } else {
+                BoundMode::ClipTopPercent(p)
+            }
+        }
+        None => BoundMode::ClipTopPercent(1.0),
+    };
+    let kind = match args.opt_or("codec", "cosine") {
+        "float32" | "f32" => CodecKind::Float32,
+        "cosine" | "cos" => CodecKind::Cosine {
+            bits,
+            rounding,
+            bound,
+        },
+        "linear" => CodecKind::Linear { bits, rounding },
+        "linear-rotated" | "linear-ur" => CodecKind::LinearRotated { bits, rounding },
+        "signsgd" => CodecKind::SignSgd,
+        "signsgd-norm" => CodecKind::SignSgdNorm,
+        "ef-signsgd" => CodecKind::EfSignSgd,
+        other => bail!("unknown codec '{other}'"),
+    };
+    let mut codec = Codec::new(kind).with_sparsify(args.opt_f64("keep", 1.0));
+    if args.flag("no-deflate") || kind == CodecKind::Float32 {
+        codec = codec.without_deflate();
+    }
+    Ok(codec)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let task = Task::parse(args.opt_or("task", "mnist-iid"))?;
+    let codec = codec_from_args(args)?;
+    let mut cfg = match task {
+        Task::MnistIid => FlConfig::mnist(false),
+        Task::MnistNonIid => FlConfig::mnist(true),
+        Task::Cifar => FlConfig::cifar(),
+        Task::Unet => FlConfig::unet(),
+    };
+    let default_rounds = cfg.rounds.min(20);
+    cfg = cfg
+        .with_rounds(args.opt_usize("rounds", default_rounds))
+        .with_codec(codec)
+        .with_seed(args.opt_u64("seed", 42));
+    cfg.eval_every = args.opt_usize("eval-every", 5);
+    cfg.use_kernel_quantizer = args.flag("kernel");
+    cfg.verbose = !args.flag("quiet");
+    if let Some(c) = args.opt("clients") {
+        cfg.n_clients = c.parse()?;
+    }
+    if let Some(c) = args.opt("participation") {
+        cfg.participation = c.parse()?;
+    }
+
+    println!("config: {}", cfg.describe().dump());
+    let engine = Engine::load_default()?;
+    let result = fl::run(&cfg, &engine)?;
+    let model = engine.manifest.model(cfg.task.model_key())?;
+    println!("\nfinished in {:.1}s", result.wall_secs);
+    println!("network: {}", result.network.summary());
+    println!(
+        "uplink compression vs float32: {:.1}x",
+        result
+            .network
+            .uplink_compression_vs_float32(model.param_count)
+    );
+    if let Some(m) = result.history.best_metric() {
+        println!("best metric: {m:.4}");
+    }
+    let out = std::path::Path::new("artifacts/results").join("train_last.json");
+    fl::metrics::save_results(&out, "train", &[result.history])?;
+    println!("history written to {out:?}");
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let opts = FigOpts::from_args(args);
+    let mut engine: Option<Engine> = None;
+    let sw = Stopwatch::start();
+    if id == "all" {
+        for fid in figures::ALL {
+            println!("\n######## {fid} ########");
+            figures::run_figure(fid, &mut engine, &opts)?;
+        }
+    } else {
+        figures::run_figure(id, &mut engine, &opts)?;
+    }
+    println!("\ntotal {:.1}s", sw.elapsed_secs());
+    Ok(())
+}
+
+fn cmd_compress_stats(args: &Args) -> Result<()> {
+    let n = args.opt_usize("n", 1_000_000);
+    let mut rng = Pcg64::seeded(args.opt_u64("seed", 42));
+    let g = cossgd::util::propcheck::gradient_like(&mut rng, n);
+    println!("== codec wire costs on a synthetic {n}-element gradient ==");
+    println!(
+        "{:<24} {:>12} {:>10} {:>10}",
+        "codec", "bytes", "ratio", "deflated"
+    );
+    let f32_bytes = (n * 4) as f64;
+    let mut table: Vec<Codec> = vec![Codec::float32()];
+    for bits in [8u8, 4, 2, 1] {
+        table.push(Codec::cosine(bits));
+    }
+    table.push(Codec::cosine(2).with_sparsify(0.05));
+    table.push(Codec::new(CodecKind::LinearRotated {
+        bits: 2,
+        rounding: Rounding::Unbiased,
+    }));
+    table.push(Codec::new(CodecKind::SignSgdNorm));
+    for codec in table {
+        let mut st = cossgd::compress::ClientCodecState::new();
+        let enc = codec.encode(&g, &mut st, &mut rng);
+        let bytes = enc.wire_bytes();
+        println!(
+            "{:<24} {:>12} {:>9.1}x {:>10}",
+            codec.name(),
+            fmt_bytes(bytes as u64),
+            f32_bytes / bytes as f64,
+            enc.deflated
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,352 @@
+//! The PJRT execution engine.
+//!
+//! Wraps the `xla` crate: one CPU client, one lazily-compiled
+//! [`xla::PjRtLoadedExecutable`] per artifact (cached for the life of the
+//! process), manifest-driven input validation and output unmarshalling.
+//!
+//! HLO *text* is the interchange format (see `aot.py` / DESIGN.md): the
+//! text parser reassigns instruction ids, avoiding xla_extension 0.5.1's
+//! 64-bit-id proto rejection.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{Dtype, Manifest};
+
+/// A typed input value for an artifact call.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    ScalarF32(f32),
+}
+
+impl Value {
+    fn elements(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+            Value::ScalarF32(_) => 1,
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) | Value::ScalarF32(_) => Dtype::F32,
+            Value::I32(_) => Dtype::I32,
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::ScalarF32(x) => return Ok(xla::Literal::scalar(*x)),
+            Value::F32(v) => xla::Literal::vec1(v),
+            Value::I32(v) => xla::Literal::vec1(v),
+        };
+        if shape.is_empty() {
+            // () scalar passed as a 1-element vec.
+            lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"))
+        } else {
+            lit.reshape(&dims)
+                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+        }
+    }
+}
+
+/// One decoded output tensor.
+#[derive(Debug, Clone)]
+pub enum OutValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutValue {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            OutValue::F32(v) => Ok(v),
+            OutValue::I32(_) => bail!("output is i32, expected f32"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            OutValue::I32(v) => Ok(v),
+            OutValue::F32(_) => bail!("output is f32, expected i32"),
+        }
+    }
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+        Ok(v[0])
+    }
+}
+
+/// The engine: PJRT client + executable cache + manifest.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create from an artifacts directory (must contain `manifest.json`).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Default artifacts location relative to the crate root.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (so first-round latency is paid
+    /// up front at launch).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with manifest-validated inputs; returns one
+    /// [`OutValue`] per output in the lowered tuple.
+    pub fn exec(&self, name: &str, inputs: &[Value]) -> Result<Vec<OutValue>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: {} inputs given, {} expected",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (val, io) in inputs.iter().zip(&spec.inputs) {
+            anyhow::ensure!(
+                val.dtype() == io.dtype,
+                "{name}.{}: dtype mismatch",
+                io.name
+            );
+            anyhow::ensure!(
+                val.elements() == io.elements(),
+                "{name}.{}: {} elements given, shape {:?} needs {}",
+                io.name,
+                val.elements(),
+                io.shape,
+                io.elements()
+            );
+            literals.push(val.to_literal(&io.shape)?);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always one tuple layer.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let ty = lit.ty().map_err(|e| anyhow!("ty: {e:?}"))?;
+                match ty {
+                    xla::ElementType::F32 => Ok(OutValue::F32(
+                        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+                    )),
+                    xla::ElementType::S32 => Ok(OutValue::I32(
+                        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+                    )),
+                    other => bail!("unsupported output type {other:?}"),
+                }
+            })
+            .collect()
+    }
+
+    /// Number of artifacts compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// High-level typed wrappers used by the FL layer.
+// ---------------------------------------------------------------------------
+
+impl Engine {
+    /// Run a whole local round: returns `(delta, mean_loss)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_round(
+        &self,
+        artifact: &str,
+        params: &[f32],
+        x: Vec<f32>,
+        y: Vec<i32>,
+        perms: Vec<i32>,
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let out = self.exec(
+            artifact,
+            &[
+                Value::F32(params.to_vec()),
+                Value::F32(x),
+                Value::I32(y),
+                Value::I32(perms),
+                Value::ScalarF32(lr),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 2, "{artifact}: expected (delta, loss)");
+        let delta = out[0].as_f32()?.to_vec();
+        let loss = out[1].scalar_f32()?;
+        Ok((delta, loss))
+    }
+
+    /// Classification eval: `(accuracy, mean_loss)` over `n` examples.
+    pub fn classification_eval(
+        &self,
+        artifact: &str,
+        params: &[f32],
+        x: Vec<f32>,
+        y: Vec<i32>,
+        n: usize,
+    ) -> Result<(f64, f32)> {
+        let out = self.exec(
+            artifact,
+            &[Value::F32(params.to_vec()), Value::F32(x), Value::I32(y)],
+        )?;
+        let correct = out[0].scalar_f32()? as f64;
+        let loss = out[1].scalar_f32()?;
+        Ok((correct / n as f64, loss))
+    }
+
+    /// Segmentation eval: mean dice over classes 1.. (background excluded)
+    /// plus the mean loss.
+    pub fn segmentation_eval(
+        &self,
+        artifact: &str,
+        params: &[f32],
+        x: Vec<f32>,
+        y: Vec<i32>,
+    ) -> Result<(f64, f32)> {
+        let out = self.exec(
+            artifact,
+            &[Value::F32(params.to_vec()), Value::F32(x), Value::I32(y)],
+        )?;
+        let inter = out[0].as_f32()?;
+        let psum = out[1].as_f32()?;
+        let tsum = out[2].as_f32()?;
+        let loss = out[3].scalar_f32()?;
+        let mut dice_sum = 0.0f64;
+        let mut classes = 0usize;
+        for c in 1..inter.len() {
+            let denom = (psum[c] + tsum[c]) as f64;
+            if denom > 0.0 {
+                dice_sum += 2.0 * inter[c] as f64 / denom;
+                classes += 1;
+            }
+        }
+        Ok((dice_sum / classes.max(1) as f64, loss))
+    }
+
+    /// Per-step gradient (Fig. 4): `(grad, loss)`.
+    pub fn grad_step(
+        &self,
+        params: &[f32],
+        x: Vec<f32>,
+        y: Vec<i32>,
+    ) -> Result<(Vec<f32>, f32)> {
+        let out = self.exec(
+            "mnist_grad",
+            &[Value::F32(params.to_vec()), Value::F32(x), Value::I32(y)],
+        )?;
+        Ok((out[0].as_f32()?.to_vec(), out[1].scalar_f32()?))
+    }
+
+    /// Quantize a gradient through the Pallas kernel artifact, chunk by
+    /// chunk (pad with zeros; returns one code per input element).
+    pub fn kernel_quantize(
+        &self,
+        bits: u8,
+        g: &[f32],
+        norm: f32,
+        bound: f32,
+        u: &[f32],
+    ) -> Result<Vec<u16>> {
+        let chunk = self.manifest.chunk;
+        let name = format!("quant_cos_{bits}");
+        let mut codes = Vec::with_capacity(g.len());
+        for (gs, us) in g.chunks(chunk).zip(u.chunks(chunk)) {
+            let mut gbuf = gs.to_vec();
+            let mut ubuf = us.to_vec();
+            gbuf.resize(chunk, 0.0);
+            ubuf.resize(chunk, 0.5);
+            let out = self.exec(
+                &name,
+                &[
+                    Value::F32(gbuf),
+                    Value::ScalarF32(norm),
+                    Value::ScalarF32(bound),
+                    Value::F32(ubuf),
+                ],
+            )?;
+            let chunk_codes = out[0].as_i32()?;
+            codes.extend(chunk_codes[..gs.len()].iter().map(|&c| c as u16));
+        }
+        Ok(codes)
+    }
+
+    /// Dequantize codes through the Pallas kernel artifact.
+    pub fn kernel_dequantize(
+        &self,
+        bits: u8,
+        codes: &[u16],
+        norm: f32,
+        bound: f32,
+    ) -> Result<Vec<f32>> {
+        let chunk = self.manifest.chunk;
+        let name = format!("dequant_cos_{bits}");
+        let mut out_vals = Vec::with_capacity(codes.len());
+        for cs in codes.chunks(chunk) {
+            let mut cbuf: Vec<i32> = cs.iter().map(|&c| c as i32).collect();
+            cbuf.resize(chunk, 0);
+            let out = self.exec(
+                &name,
+                &[
+                    Value::I32(cbuf),
+                    Value::ScalarF32(norm),
+                    Value::ScalarF32(bound),
+                ],
+            )?;
+            out_vals.extend_from_slice(&out[0].as_f32()?[..cs.len()]);
+        }
+        Ok(out_vals)
+    }
+}

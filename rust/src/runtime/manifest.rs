@@ -1,0 +1,360 @@
+//! Manifest parsing: `artifacts/manifest.json` describes every artifact's
+//! I/O signature plus per-model metadata (flat-parameter layout, init
+//! scheme, round configuration). Written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype tags used on the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(tag: &str) -> Result<Dtype> {
+        match tag {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(anyhow!("unknown dtype tag {other}")),
+        }
+    }
+}
+
+/// One artifact input or output.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact (an HLO module).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+}
+
+/// One layer of a model's flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: String,
+    pub fan_in: usize,
+}
+
+/// Model metadata (parameter layout + round configuration).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub param_count: usize,
+    pub classes: usize,
+    pub optimizer: String,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Round configuration (n_data / batch / epochs / eval_n) per config key.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundCfg {
+    pub n_data: usize,
+    pub batch: usize,
+    pub epochs: usize,
+    pub eval_n: usize,
+}
+
+impl RoundCfg {
+    pub fn steps(&self) -> usize {
+        self.epochs * (self.n_data / self.batch)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub chunk: usize,
+    pub kernel_bits: Vec<u8>,
+    pub grad_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub round_cfg: BTreeMap<String, RoundCfg>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&json, dir)
+    }
+
+    fn from_json(json: &Json, dir: PathBuf) -> Result<Manifest> {
+        let io_spec = |j: &Json, idx: usize| -> Result<IoSpec> {
+            Ok(IoSpec {
+                name: j
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&format!("out{idx}"))
+                    .to_string(),
+                dtype: Dtype::parse(
+                    j.get("dtype").and_then(Json::as_str).context("dtype")?,
+                )?,
+                shape: j
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+            })
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in json
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("artifacts")?
+        {
+            let inputs = art
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, j)| io_spec(j, i))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(art.get("file").and_then(Json::as_str).context("file")?),
+                    inputs,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in json.get("models").and_then(Json::as_obj).context("models")? {
+            let layers = m
+                .get("layers")
+                .and_then(Json::as_arr)
+                .context("layers")?
+                .iter()
+                .map(|l| -> Result<LayerSpec> {
+                    Ok(LayerSpec {
+                        name: l.get("name").and_then(Json::as_str).context("lname")?.into(),
+                        shape: l
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("lshape")?
+                            .iter()
+                            .map(|v| v.as_usize().context("dim"))
+                            .collect::<Result<_>>()?,
+                        offset: l.get("offset").and_then(Json::as_usize).context("off")?,
+                        size: l.get("size").and_then(Json::as_usize).context("size")?,
+                        init: l.get("init").and_then(Json::as_str).context("init")?.into(),
+                        fan_in: l.get("fan_in").and_then(Json::as_usize).context("fan")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    param_count: m
+                        .get("param_count")
+                        .and_then(Json::as_usize)
+                        .context("param_count")?,
+                    classes: m.get("classes").and_then(Json::as_usize).context("classes")?,
+                    optimizer: m
+                        .get("optimizer")
+                        .and_then(Json::as_str)
+                        .context("optimizer")?
+                        .into(),
+                    input_shape: m
+                        .get("input_shape")
+                        .and_then(Json::as_arr)
+                        .context("input_shape")?
+                        .iter()
+                        .map(|v| v.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                    layers,
+                },
+            );
+        }
+
+        let mut round_cfg = BTreeMap::new();
+        for (name, c) in json
+            .get("round_cfg")
+            .and_then(Json::as_obj)
+            .context("round_cfg")?
+        {
+            round_cfg.insert(
+                name.clone(),
+                RoundCfg {
+                    n_data: c.get("n_data").and_then(Json::as_usize).context("n_data")?,
+                    batch: c.get("batch").and_then(Json::as_usize).context("batch")?,
+                    epochs: c.get("epochs").and_then(Json::as_usize).context("epochs")?,
+                    eval_n: c.get("eval_n").and_then(Json::as_usize).context("eval_n")?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            chunk: json.get("chunk").and_then(Json::as_usize).unwrap_or(65536),
+            kernel_bits: json
+                .get("kernel_bits")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).map(|b| b as u8).collect())
+                .unwrap_or_else(|| vec![1, 2, 4, 8]),
+            grad_batch: json.get("grad_batch").and_then(Json::as_usize).unwrap_or(64),
+            artifacts,
+            models,
+            round_cfg,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn round(&self, key: &str) -> Result<RoundCfg> {
+        self.round_cfg
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("round cfg '{key}' not in manifest"))
+    }
+}
+
+/// Deterministic parameter initialization from the manifest layer specs
+/// (mirrors `python/tests/test_models.py::init_flat` — He normal for "he",
+/// Glorot uniform for "glorot", zeros for "zero").
+pub fn init_params(model: &ModelSpec, seed: u64) -> Vec<f32> {
+    use crate::util::rng::Pcg64;
+    let mut flat = vec![0.0f32; model.param_count];
+    let mut rng = Pcg64::new(seed, 0x1217);
+    for layer in &model.layers {
+        match layer.init.as_str() {
+            "he" => {
+                let std = (2.0 / layer.fan_in as f64).sqrt() as f32;
+                for v in &mut flat[layer.offset..layer.offset + layer.size] {
+                    *v = rng.normal_f32(0.0, std);
+                }
+            }
+            "glorot" => {
+                let fan_out = *layer.shape.last().unwrap_or(&layer.size);
+                let limit = (6.0 / (layer.fan_in + fan_out) as f64).sqrt();
+                for v in &mut flat[layer.offset..layer.offset + layer.size] {
+                    *v = rng.range_f64(-limit, limit) as f32;
+                }
+            }
+            _ => {} // zero
+        }
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> Json {
+        Json::parse(
+            r#"{
+          "version": 1, "chunk": 65536, "kernel_bits": [2, 8], "grad_batch": 64,
+          "artifacts": {
+            "toy": {"file": "toy.hlo.txt",
+              "inputs": [{"name": "params", "dtype": "f32", "shape": [10]},
+                         {"name": "y", "dtype": "i32", "shape": [2, 3]}]}
+          },
+          "models": {
+            "m": {"param_count": 10, "classes": 2, "optimizer": "sgd",
+              "weight_decay": 0, "input_shape": [4],
+              "layers": [
+                {"name": "w", "shape": [4, 2], "offset": 0, "size": 8, "init": "he", "fan_in": 4},
+                {"name": "b", "shape": [2], "offset": 8, "size": 2, "init": "zero", "fan_in": 2}]}
+          },
+          "round_cfg": {"m": {"n_data": 8, "batch": 4, "epochs": 2, "eval_n": 4}}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&sample_manifest_json(), PathBuf::from("/a")).unwrap();
+        let art = m.artifact("toy").unwrap();
+        assert_eq!(art.inputs.len(), 2);
+        assert_eq!(art.inputs[1].dtype, Dtype::I32);
+        assert_eq!(art.inputs[1].elements(), 6);
+        assert_eq!(art.file, PathBuf::from("/a/toy.hlo.txt"));
+        let model = m.model("m").unwrap();
+        assert_eq!(model.param_count, 10);
+        assert_eq!(m.round("m").unwrap().steps(), 4);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn init_params_respects_layout() {
+        let m = Manifest::from_json(&sample_manifest_json(), PathBuf::from("/a")).unwrap();
+        let model = m.model("m").unwrap();
+        let p = init_params(model, 1);
+        assert_eq!(p.len(), 10);
+        assert!(p[..8].iter().any(|&x| x != 0.0), "he layer initialized");
+        assert!(p[8..].iter().all(|&x| x == 0.0), "bias zero");
+        // Deterministic.
+        assert_eq!(p, init_params(model, 1));
+        assert_ne!(p, init_params(model, 2));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain the expected artifact set.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in [
+            "mnist_round", "cifar_round", "cifar_round_e1", "unet_round",
+            "mnist_eval", "cifar_eval", "unet_eval", "mnist_grad",
+            "quant_cos_2", "dequant_cos_8",
+        ] {
+            assert!(m.artifacts.contains_key(name), "{name}");
+            assert!(m.artifact(name).unwrap().file.exists(), "{name} file");
+        }
+        assert_eq!(m.model("mnist").unwrap().param_count, 1_663_370);
+        assert_eq!(m.model("cifar").unwrap().param_count, 122_570);
+    }
+}

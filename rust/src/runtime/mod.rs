@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the [`Engine`] compiles HLO **text** through
+//! the `xla` crate's PJRT CPU client once per artifact (cached) and then
+//! serves every federated round from Rust.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Value};
+pub use manifest::{ArtifactSpec, IoSpec, LayerSpec, Manifest, ModelSpec};

@@ -1,0 +1,193 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! The `benches/*.rs` targets are built with `harness = false` and drive
+//! this module directly: warm-up, timed iterations, and a one-line report
+//! with mean / p50 / p95 and optional throughput.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::timer::fmt_duration;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Optional bytes processed per iteration (for throughput reporting).
+    pub bytes_per_iter: Option<u64>,
+    /// Optional elements processed per iteration.
+    pub elems_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    /// Render the standard one-line report.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.p50),
+            fmt_duration(self.p95),
+            self.iters
+        );
+        if let Some(b) = self.bytes_per_iter {
+            let gibps = b as f64 / self.mean.as_secs_f64() / (1u64 << 30) as f64;
+            s.push_str(&format!("  {gibps:>7.3} GiB/s"));
+        }
+        if let Some(e) = self.elems_per_iter {
+            let meps = e as f64 / self.mean.as_secs_f64() / 1e6;
+            s.push_str(&format!("  {meps:>9.1} Melem/s"));
+        }
+        s
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bencher {
+    /// Minimum sampling time per case after warm-up.
+    pub min_time: Duration,
+    /// Max iterations per case (guards very fast functions).
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // CI/bench default: enough samples for stable p50 without taking
+        // minutes per target. Override with BENCH_MIN_TIME_MS.
+        let ms = std::env::var("BENCH_MIN_TIME_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(300u64);
+        Bencher {
+            min_time: Duration::from_millis(ms),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; the closure's return value is black-boxed so the
+    /// optimizer cannot elide the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_meta(name, None, None, &mut f)
+    }
+
+    /// Like [`bench`], annotating per-iteration bytes for GiB/s reporting.
+    pub fn bench_bytes<T>(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_meta(name, Some(bytes), None, &mut f)
+    }
+
+    /// Like [`bench`], annotating per-iteration element count.
+    pub fn bench_elems<T>(
+        &mut self,
+        name: &str,
+        elems: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_meta(name, None, Some(elems), &mut f)
+    }
+
+    fn bench_with_meta<T>(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        elems: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        // Warm-up: at least one call, then until 10% of the budget (slow
+        // cases — whole FL rounds — must not burn minutes warming up).
+        let warm_budget = self.min_time / 10;
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_iters < 1
+            || (warm_iters < 3 && warm_start.elapsed() < warm_budget)
+        {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+
+        // Sample (at least one).
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.is_empty()
+            || (start.elapsed() < self.min_time && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        let n = samples.len().max(1);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            p50: samples[n / 2],
+            p95: samples[(n as f64 * 0.95) as usize % n],
+            bytes_per_iter: bytes,
+            elems_per_iter: elems,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher {
+            min_time: Duration::from_millis(20),
+            max_iters: 10_000,
+            results: Vec::new(),
+        };
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean > Duration::from_nanos(1));
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bencher {
+            min_time: Duration::from_millis(10),
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        let data = vec![1u8; 4096];
+        let r = b.bench_bytes("sum4k", 4096, || data.iter().map(|&x| x as u64).sum::<u64>());
+        assert_eq!(r.bytes_per_iter, Some(4096));
+        assert!(r.report().contains("GiB/s"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [positionals] [--key value]... [--flag]...`
+//! Values may also be attached as `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (subcommand is `positional[0]`).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn basic_shapes() {
+        let a = parse(&["figure", "fig6", "--rounds", "50", "--scale=full", "--quiet"]);
+        assert_eq!(a.subcommand(), Some("figure"));
+        assert_eq!(a.positional, vec!["figure", "fig6"]);
+        assert_eq!(a.opt("rounds"), Some("50"));
+        assert_eq!(a.opt("scale"), Some("full"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("loud"));
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse(&["train", "--eta", "0.5"]);
+        assert_eq!(a.opt_usize("rounds", 10), 10);
+        assert!((a.opt_f64("eta", 0.1) - 0.5).abs() < 1e-12);
+        assert_eq!(a.opt_or("codec", "cosine"), "cosine");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_integer_panics() {
+        let a = parse(&["x", "--rounds", "abc"]);
+        a.opt_usize("rounds", 1);
+    }
+}

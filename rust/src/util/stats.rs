@@ -1,0 +1,206 @@
+//! Small statistics helpers: summaries, online (Welford) accumulation,
+//! percentiles, histograms. Used by the metrics pipeline, the entropy
+//! analysis (Fig. 5) and the bench harness.
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    var.sqrt()
+}
+
+/// L2 norm of a slice, accumulated in f64 for stability.
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// `p`-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// The magnitude of the k-th largest |x| (k is 1-based). Used for top-p%
+/// gradient clipping: `k = ceil(p/100 * n)`.
+pub fn kth_largest_abs(xs: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= xs.len(), "kth_largest_abs k={k} n={}", xs.len());
+    let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    // select_nth_unstable is O(n) average — this is on the encode hot path.
+    let idx = mags.len() - k;
+    let (_, kth, _) = mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    *kth
+}
+
+/// Online mean/variance/min/max accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-bin histogram over a closed range.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+    pub fn push(&mut self, x: f64) {
+        let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as isize;
+        let b = b.clamp(0, self.counts.len() as isize - 1) as usize;
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+    /// Shannon entropy of the bin distribution, in bits.
+    pub fn entropy_bits(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let n = self.total as f64;
+        self.counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - (1.25f64).sqrt()).abs() < 1e-6);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn kth_largest() {
+        let xs = [-10.0f32, 1.0, -3.0, 7.0];
+        assert_eq!(kth_largest_abs(&xs, 1), 10.0);
+        assert_eq!(kth_largest_abs(&xs, 2), 7.0);
+        assert_eq!(kth_largest_abs(&xs, 4), 1.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((o.mean() - m).abs() < 1e-12);
+        assert!((o.variance() - v).abs() < 1e-12);
+        assert_eq!(o.count(), 100);
+    }
+
+    #[test]
+    fn histogram_entropy() {
+        // Uniform over 4 bins -> 2 bits; single bin -> 0 bits.
+        let mut h = Histogram::new(0.0, 4.0, 4);
+        for i in 0..400 {
+            h.push((i % 4) as f64 + 0.5);
+        }
+        assert!((h.entropy_bits() - 2.0).abs() < 1e-9);
+        let mut h1 = Histogram::new(0.0, 1.0, 8);
+        for _ in 0..10 {
+            h1.push(0.5);
+        }
+        assert_eq!(h1.entropy_bits(), 0.0);
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.push(-5.0);
+        h.push(5.0);
+        assert_eq!(h.counts, vec![1, 1]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Tiny-scale smoke runs of every figure driver — the harnesses double as
+//! end-to-end tests. Engine-backed figures self-skip without artifacts.
+
+use cossgd::figures::{self, FigOpts};
+use cossgd::runtime::Engine;
+
+fn opts(rounds: usize) -> FigOpts {
+    FigOpts {
+        rounds: Some(rounds),
+        full: false,
+        seed: 7,
+        verbose: false,
+        out_dir: std::env::temp_dir().join("cossgd_fig_smoke"),
+    }
+}
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn fig3_analytic_runs_without_artifacts() {
+    let mut engine: Option<Engine> = None;
+    figures::run_figure("fig3", &mut engine, &opts(1)).unwrap();
+    assert!(engine.is_none(), "fig3 must not need the engine");
+}
+
+#[test]
+fn unknown_figure_is_an_error() {
+    let mut engine: Option<Engine> = None;
+    assert!(figures::run_figure("fig99", &mut engine, &opts(1)).is_err());
+}
+
+// The engine-backed figures at minimum viable scale. Grouped into one test
+// per workload family to bound total runtime.
+
+#[test]
+fn fig5_entropy_smoke() {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let mut engine: Option<Engine> = None;
+    figures::run_figure("fig5", &mut engine, &opts(1)).unwrap();
+}
+
+#[test]
+fn fig9_unet_smoke() {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let mut engine: Option<Engine> = None;
+    figures::run_figure("fig9", &mut engine, &opts(1)).unwrap();
+    // Results file exists and parses.
+    let text = std::fs::read_to_string(
+        std::env::temp_dir().join("cossgd_fig_smoke/fig9.json"),
+    )
+    .unwrap();
+    assert!(cossgd::util::json::Json::parse(&text).is_ok());
+}

@@ -1,0 +1,178 @@
+//! Integration tests over the real AOT artifacts through PJRT.
+//!
+//! These require `make artifacts` to have run; they self-skip (with a
+//! loud message) if the artifacts directory is missing so `cargo test`
+//! stays usable on a fresh checkout.
+
+use cossgd::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
+use cossgd::compress::{Codec, CodecKind};
+use cossgd::data::partition::eval_set;
+use cossgd::data::synth::{SynthMnist, SynthTask};
+use cossgd::fl::{self, FlConfig};
+use cossgd::runtime::manifest::init_params;
+use cossgd::runtime::Engine;
+use cossgd::util::rng::Pcg64;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine load"))
+}
+
+#[test]
+fn eval_at_init_is_chance_level() {
+    let Some(engine) = engine_or_skip() else { return };
+    let model = engine.manifest.model("mnist").unwrap().clone();
+    let params = init_params(&model, 1);
+    let task = SynthMnist::new(42);
+    let n = engine.manifest.round("mnist").unwrap().eval_n;
+    let (x, y) = eval_set(&task, n);
+    let (acc, loss) = engine
+        .classification_eval("mnist_eval", &params, x, y, n)
+        .unwrap();
+    assert!((0.0..=0.35).contains(&acc), "init acc {acc} not near chance");
+    assert!(loss.is_finite() && loss > 1.0, "init loss {loss}");
+}
+
+#[test]
+fn local_round_produces_learning_update() {
+    let Some(engine) = engine_or_skip() else { return };
+    let model = engine.manifest.model("mnist").unwrap().clone();
+    let cfg = engine.manifest.round("mnist").unwrap();
+    let params = init_params(&model, 2);
+    let task = SynthMnist::new(42);
+
+    // One client's data: balanced classes.
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..cfg.n_data {
+        let (xi, yi) = task.gen(i % 10, (i / 10) as u64);
+        x.extend_from_slice(&xi);
+        y.push(yi[0]);
+    }
+    let mut rng = Pcg64::seeded(3);
+    let mut perms = Vec::new();
+    for _ in 0..cfg.epochs {
+        let p = rng.permutation(cfg.n_data);
+        perms.extend(p.iter().map(|&i| i as i32));
+    }
+    let (delta, loss) = engine
+        .local_round("mnist_round", &params, x.clone(), y.clone(), perms, 0.1)
+        .unwrap();
+    assert_eq!(delta.len(), model.param_count);
+    assert!(loss.is_finite() && loss > 0.0);
+    let nonzero = delta.iter().filter(|&&d| d != 0.0).count();
+    assert!(nonzero > delta.len() / 2, "delta mostly zero: {nonzero}");
+
+    // Applying the update improves the local loss (M* = M_in - delta).
+    let after: Vec<f32> = params.iter().zip(&delta).map(|(p, d)| p - d).collect();
+    let n = engine.manifest.round("mnist").unwrap().eval_n;
+    let (ex, ey) = eval_set(&task, n);
+    let (_, loss_before) = engine
+        .classification_eval("mnist_eval", &params, ex.clone(), ey.clone(), n)
+        .unwrap();
+    let (_, loss_after) = engine
+        .classification_eval("mnist_eval", &after, ex, ey, n)
+        .unwrap();
+    assert!(
+        loss_after < loss_before,
+        "eval loss should drop: {loss_before} -> {loss_after}"
+    );
+}
+
+#[test]
+fn pallas_kernel_matches_rust_codec() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::seeded(7);
+    let n = engine.manifest.chunk + 1234; // force pad+chunk path
+    let g = cossgd::util::propcheck::gradient_like(&mut rng, n);
+    let norm = cossgd::util::stats::l2_norm(&g) as f32;
+    for bits in [2u8, 8] {
+        // Shared bound so both paths quantize identically.
+        let q = CosineQuantizer::new(bits, Rounding::Biased, BoundMode::Auto);
+        let rust_q = q.quantize(&g, &mut rng);
+        let u = vec![0.5f32; g.len()];
+        let kernel_codes = engine
+            .kernel_quantize(bits, &g, norm, rust_q.bound, &u)
+            .unwrap();
+        // u=0.5 gives floor(v)+(0.5<frac): differs from round-to-nearest
+        // only when frac == 0.5 exactly. Allow <=1 code difference.
+        let mut diffs = 0usize;
+        for (a, b) in rust_q.codes.iter().zip(&kernel_codes) {
+            let d = (*a as i32 - *b as i32).abs();
+            assert!(d <= 1, "code diff {d} at bits={bits}");
+            diffs += (d != 0) as usize;
+        }
+        assert!(
+            diffs < g.len() / 100,
+            "bits={bits}: too many boundary diffs {diffs}"
+        );
+        // Dequant round-trips through the kernel too.
+        let deq_k = engine
+            .kernel_dequantize(bits, &kernel_codes, norm, rust_q.bound)
+            .unwrap();
+        let deq_r =
+            cossgd::compress::cosine::dequantize_codes(&kernel_codes, norm, rust_q.bound, bits);
+        for (a, b) in deq_k.iter().zip(&deq_r) {
+            assert!((a - b).abs() <= 1e-4 * norm.max(1.0), "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn tiny_federated_run_end_to_end() {
+    let Some(engine) = engine_or_skip() else { return };
+    // 3 rounds of MNIST IID with 2-bit cosine quantization.
+    let cfg = FlConfig::mnist(false)
+        .with_rounds(3)
+        .with_codec(Codec::cosine(2));
+    let mut cfg = cfg;
+    cfg.eval_every = 1;
+    cfg.n_clients = 20; // smaller federation for test speed
+    let result = fl::run(&cfg, &engine).expect("run");
+    assert_eq!(result.history.records.len(), 3);
+    assert!(result.history.final_metric().is_some());
+    // 2 clients/round * 3 rounds updates were metered.
+    assert_eq!(result.network.uplink_messages, 6);
+    assert!(result.network.uplink_bytes > 0);
+    // 2-bit + deflate: orders of magnitude below float32.
+    let ratio = result
+        .network
+        .uplink_compression_vs_float32(engine.manifest.model("mnist").unwrap().param_count);
+    assert!(ratio > 10.0, "compression ratio {ratio}");
+    // Training signal exists: train loss finite and generally decreasing.
+    let first = result.history.records.first().unwrap().train_loss;
+    let last = result.history.records.last().unwrap().train_loss;
+    assert!(first.is_finite() && last.is_finite());
+}
+
+#[test]
+fn unet_round_and_dice_eval() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut cfg = FlConfig::unet().with_rounds(1).with_codec(Codec::cosine(8));
+    cfg.eval_every = 1;
+    let result = fl::run(&cfg, &engine).expect("unet run");
+    let dice = result.history.final_metric().unwrap();
+    assert!((0.0..=1.0).contains(&dice), "dice {dice}");
+}
+
+#[test]
+fn kernel_quantizer_path_runs_in_federation() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut cfg = FlConfig::mnist(false)
+        .with_rounds(1)
+        .with_codec(Codec::new(CodecKind::Cosine {
+            bits: 4,
+            rounding: Rounding::Biased,
+            bound: BoundMode::ClipTopPercent(1.0),
+        }));
+    cfg.n_clients = 10;
+    cfg.use_kernel_quantizer = true;
+    cfg.eval_every = 1;
+    let result = fl::run(&cfg, &engine).expect("kernel-path run");
+    assert!(result.history.final_metric().is_some());
+    assert!(result.network.uplink_bytes > 0);
+}
