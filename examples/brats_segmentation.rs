@@ -1,10 +1,11 @@
 //! Federated brain-tumor-style segmentation (the Figure 9 scenario):
 //! 10 "hospitals", C=1, E=3, B=3, Adam with warm restarts, dice-scored —
-//! with CosSGD 8-bit vs float32 updates.
+//! with CosSGD 8-bit vs float32 updates, plus a full round-trip run
+//! (cosine-4 uplink + cosine-8 downlink model deltas).
 //!
 //!     cargo run --release --example brats_segmentation [-- --rounds 12]
 
-use cossgd::compress::Codec;
+use cossgd::compress::Pipeline;
 use cossgd::fl::{self, FlConfig};
 use cossgd::runtime::Engine;
 use cossgd::util::cli::Args;
@@ -17,12 +18,22 @@ fn main() -> anyhow::Result<()> {
     let params = engine.manifest.model("unet")?.param_count;
 
     println!("BraTS-substitute federation: 10 hospitals, C=1, Adam, warm restarts\n");
-    for (label, codec) in [
-        ("float32", Codec::float32()),
-        ("cosine-8", Codec::cosine(8)),
-        ("cosine-2 @25%", Codec::cosine(2).with_sparsify(0.25)),
-    ] {
-        let mut cfg = FlConfig::unet().with_rounds(rounds).with_codec(codec);
+    let cases: Vec<(&str, FlConfig)> = vec![
+        ("float32", FlConfig::unet().with_uplink(Pipeline::float32())),
+        ("cosine-8", FlConfig::unet().with_uplink(Pipeline::cosine(8))),
+        (
+            "cosine-2 @25%",
+            FlConfig::unet().with_uplink(Pipeline::cosine(2).with_sparsify(0.25)),
+        ),
+        (
+            "round-trip 4↑/8↓",
+            FlConfig::unet()
+                .with_uplink(Pipeline::cosine(4))
+                .with_downlink(Pipeline::cosine(8)),
+        ),
+    ];
+    for (label, base) in cases {
+        let mut cfg = base.with_rounds(rounds);
         cfg.eval_every = (rounds / 6).max(1);
         cfg.verbose = false;
         let r = fl::run(&cfg, &engine)?;
@@ -33,11 +44,13 @@ fn main() -> anyhow::Result<()> {
             }
         }
         println!(
-            "  | uplink {} ({:.1}x)",
+            "  | uplink {} ({}) downlink {} ({})",
             fmt_bytes(r.network.uplink_bytes),
-            r.network.uplink_compression_vs_float32(params)
+            fl::network::fmt_ratio(r.network.uplink_compression_vs_float32(params)),
+            fmt_bytes(r.network.downlink_bytes),
+            fl::network::fmt_ratio(r.network.downlink_compression_vs_float32(params)),
         );
     }
-    println!("\nExpected shape (paper Fig. 9): quantized runs track float32 dice at a\nfraction of the transferred volume.");
+    println!("\nExpected shape (paper Fig. 9): quantized runs track float32 dice at a\nfraction of the transferred volume — in both directions for the round-trip run.");
     Ok(())
 }

@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example cifar_sparsified [-- --rounds 10]
 
-use cossgd::compress::Codec;
+use cossgd::compress::Pipeline;
 use cossgd::fl::{self, FlConfig};
 use cossgd::runtime::Engine;
 use cossgd::util::cli::Args;
@@ -18,20 +18,20 @@ fn main() -> anyhow::Result<()> {
 
     println!("CIFAR-like federation (B=50, E=5, C=0.1), {rounds} rounds\n");
     let mut results = Vec::new();
-    for (label, codec) in [
-        ("float32 full", Codec::float32()),
-        ("cosine-2 @5% mask", Codec::cosine(2).with_sparsify(0.05)),
-        ("cosine-8 @10% mask", Codec::cosine(8).with_sparsify(0.10)),
+    for (label, pipeline) in [
+        ("float32 full", Pipeline::float32()),
+        ("cosine-2 @5% mask", Pipeline::cosine(2).with_sparsify(0.05)),
+        ("cosine-8 @10% mask", Pipeline::cosine(8).with_sparsify(0.10)),
     ] {
-        let mut cfg = FlConfig::cifar().with_rounds(rounds).with_codec(codec);
+        let mut cfg = FlConfig::cifar().with_rounds(rounds).with_uplink(pipeline);
         cfg.eval_every = (rounds / 4).max(1);
         let r = fl::run(&cfg, &engine)?;
         println!(
-            "{label:<20} best acc {:.4}  uplink {:>10}  mean/client {:>10}  ratio {:>8.1}x",
+            "{label:<20} best acc {:.4}  uplink {:>10}  mean/client {:>10}  ratio {:>9}",
             r.history.best_metric().unwrap_or(f64::NAN),
             fmt_bytes(r.network.uplink_bytes),
             fmt_bytes(r.network.mean_uplink() as u64),
-            r.network.uplink_compression_vs_float32(params),
+            fl::network::fmt_ratio(r.network.uplink_compression_vs_float32(params)),
         );
         results.push(r);
     }

@@ -1,12 +1,12 @@
 //! Compression explorer — no artifacts needed. Encodes a synthetic
-//! heavy-tailed gradient with every codec in the library and prints bytes,
-//! ratios, reconstruction error and entropy, demonstrating the public
-//! compression API end to end.
+//! heavy-tailed gradient with every pipeline in the library and prints
+//! bytes, ratios, reconstruction error and entropy, demonstrating the
+//! public compression API end to end.
 //!
 //!     cargo run --release --example compression_explorer [-- --n 500000]
 
 use cossgd::compress::cosine::{BoundMode, Rounding};
-use cossgd::compress::{entropy, ClientCodecState, Codec, CodecKind};
+use cossgd::compress::{decode, entropy, Direction, Pipeline, PipelineState};
 use cossgd::util::cli::Args;
 use cossgd::util::rng::Pcg64;
 use cossgd::util::stats::l2_norm;
@@ -20,44 +20,32 @@ fn main() -> anyhow::Result<()> {
     let gnorm = l2_norm(&g);
     println!("synthetic gradient: n={n}, ‖g‖₂={gnorm:.3}\n");
 
-    let codecs: Vec<Codec> = vec![
-        Codec::float32(),
-        Codec::cosine(8),
-        Codec::cosine(4),
-        Codec::cosine(2),
-        Codec::cosine(1),
-        Codec::new(CodecKind::Cosine {
-            bits: 2,
-            rounding: Rounding::Unbiased,
-            bound: BoundMode::Auto,
-        }),
-        Codec::new(CodecKind::Linear {
-            bits: 2,
-            rounding: Rounding::Biased,
-        }),
-        Codec::new(CodecKind::Linear {
-            bits: 2,
-            rounding: Rounding::Unbiased,
-        }),
-        Codec::new(CodecKind::LinearRotated {
-            bits: 2,
-            rounding: Rounding::Unbiased,
-        }),
-        Codec::new(CodecKind::SignSgd),
-        Codec::new(CodecKind::SignSgdNorm),
-        Codec::new(CodecKind::EfSignSgd),
-        Codec::cosine(2).with_sparsify(0.5),
-        Codec::cosine(2).with_sparsify(0.05),
+    let pipelines: Vec<Pipeline> = vec![
+        Pipeline::float32(),
+        Pipeline::cosine(8),
+        Pipeline::cosine(4),
+        Pipeline::cosine(2),
+        Pipeline::cosine(1),
+        Pipeline::cosine_with(2, Rounding::Unbiased, BoundMode::Auto),
+        Pipeline::linear(2, Rounding::Biased),
+        Pipeline::linear(2, Rounding::Unbiased),
+        Pipeline::linear_rotated(2, Rounding::Unbiased),
+        Pipeline::cosine(8).with_rotation(), // rotation composes with any quantizer
+        Pipeline::sign(),
+        Pipeline::sign_norm(),
+        Pipeline::ef_sign(),
+        Pipeline::cosine(2).with_sparsify(0.5),
+        Pipeline::cosine(2).with_sparsify(0.05),
     ];
 
     println!(
-        "{:<26} {:>10} {:>9} {:>11} {:>10}",
-        "codec", "wire", "ratio", "cos-sim", "rel-l2-err"
+        "{:<32} {:>10} {:>9} {:>11} {:>10}",
+        "pipeline", "wire", "ratio", "cos-sim", "rel-l2-err"
     );
-    for codec in codecs {
-        let mut st = ClientCodecState::new();
-        let enc = codec.encode(&g, &mut st, &mut rng);
-        let dec = codec.decode(&enc)?;
+    for pipe in pipelines {
+        let mut st = PipelineState::new();
+        let enc = pipe.encode(&g, Direction::Uplink, &mut st, &mut rng);
+        let dec = decode(&enc)?;
         let dot: f64 = g.iter().zip(&dec).map(|(&a, &b)| (a * b) as f64).sum();
         let sim = dot / (gnorm * l2_norm(&dec)).max(1e-12);
         let err = (g
@@ -68,8 +56,8 @@ fn main() -> anyhow::Result<()> {
         .sqrt()
             / gnorm;
         println!(
-            "{:<26} {:>10} {:>8.1}x {:>11.4} {:>10.4}",
-            codec.name(),
+            "{:<32} {:>10} {:>8.1}x {:>11.4} {:>10.4}",
+            pipe.name(),
             fmt_bytes(enc.wire_bytes() as u64),
             (n * 4) as f64 / enc.wire_bytes() as f64,
             sim,

@@ -5,7 +5,7 @@
 //!     cargo run --release --example mnist_federated [-- --rounds 12]
 
 use cossgd::compress::cosine::{BoundMode, Rounding};
-use cossgd::compress::{Codec, CodecKind};
+use cossgd::compress::Pipeline;
 use cossgd::fl::{self, FlConfig};
 use cossgd::runtime::Engine;
 use cossgd::util::cli::Args;
@@ -15,46 +15,36 @@ fn main() -> anyhow::Result<()> {
     let rounds = args.opt_usize("rounds", 10);
     let engine = Engine::load_default()?;
 
-    let codecs = [
-        ("float32", Codec::float32()),
-        ("cosine-2 (ours)", Codec::cosine(2)),
-        (
-            "linear-2 (biased)",
-            Codec::new(CodecKind::Linear {
-                bits: 2,
-                rounding: Rounding::Biased,
-            }),
-        ),
+    let pipelines = [
+        ("float32", Pipeline::float32()),
+        ("cosine-2 (ours)", Pipeline::cosine(2)),
+        ("linear-2 (biased)", Pipeline::linear(2, Rounding::Biased)),
         (
             "cosine-1 (=signSGD+Norm)",
-            Codec::new(CodecKind::Cosine {
-                bits: 1,
-                rounding: Rounding::Biased,
-                bound: BoundMode::ClipTopPercent(1.0),
-            }),
+            Pipeline::cosine_with(1, Rounding::Biased, BoundMode::ClipTopPercent(1.0)),
         ),
     ];
 
     println!("Non-IID MNIST-like federation: 100 clients, ≤2 classes each, C=0.1");
     let mut rows = Vec::new();
-    for (label, codec) in codecs {
+    for (label, pipeline) in pipelines {
         let mut cfg = FlConfig::mnist(true)
             .with_rounds(rounds)
-            .with_codec(codec);
+            .with_uplink(pipeline);
         cfg.eval_every = (rounds / 5).max(1);
         let result = fl::run(&cfg, &engine)?;
         let params = engine.manifest.model("mnist")?.param_count;
         rows.push((
             label,
             result.history.best_metric().unwrap_or(f64::NAN),
-            result.network.uplink_compression_vs_float32(params),
+            fl::network::fmt_ratio(result.network.uplink_compression_vs_float32(params)),
         ));
         println!("  {label}: done");
     }
 
     println!("\n{:<26} {:>10} {:>14}", "codec", "best acc", "compression");
     for (label, acc, ratio) in rows {
-        println!("{label:<26} {acc:>10.4} {ratio:>13.1}x");
+        println!("{label:<26} {acc:>10.4} {ratio:>14}");
     }
     println!("\nExpected shape (paper Fig. 6): cosine ≈ float32; biased linear-2 lags/collapses.");
     Ok(())

@@ -1,11 +1,14 @@
-//! Quickstart: a 5-round federated run on the MNIST-like task with the
-//! paper's default CosSGD codec (2-bit, biased, top-1% clipping, DEFLATE).
+//! Quickstart: a 5-round *round-trip* federated run on the MNIST-like
+//! task — CosSGD 2-bit on the uplink (the paper's default: biased, top-1%
+//! clipping, DEFLATE) and an 8-bit quantized model-delta broadcast on the
+//! downlink.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Prints the convergence curve and the measured uplink compression ratio.
+//! Prints the convergence curve and the measured compression ratios in
+//! both directions.
 
-use cossgd::compress::Codec;
+use cossgd::compress::Pipeline;
 use cossgd::fl::{self, FlConfig};
 use cossgd::runtime::Engine;
 use cossgd::util::timer::fmt_bytes;
@@ -16,10 +19,12 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::load_default()?;
 
     // 2. Describe the experiment: MNIST-like task, IID split, 20 clients,
-    //    C = 0.1, E = 1, B = 10 — and CosSGD 2-bit compression.
+    //    C = 0.1, E = 1, B = 10 — CosSGD 2-bit uplink compression and an
+    //    8-bit cosine downlink (the paper's double-direction scheme).
     let mut cfg = FlConfig::mnist(false)
         .with_rounds(5)
-        .with_codec(Codec::cosine(2));
+        .with_uplink(Pipeline::cosine(2))
+        .with_downlink(Pipeline::cosine(8));
     cfg.n_clients = 20;
     cfg.eval_every = 1;
     cfg.verbose = true;
@@ -41,9 +46,14 @@ fn main() -> anyhow::Result<()> {
     }
     let params = engine.manifest.model("mnist")?.param_count;
     println!(
-        "uplink total {} — {:.0}x smaller than float32 updates",
+        "uplink total {} ({} smaller than float32 updates)",
         fmt_bytes(result.network.uplink_bytes),
-        result.network.uplink_compression_vs_float32(params)
+        fl::network::fmt_ratio(result.network.uplink_compression_vs_float32(params)),
+    );
+    println!(
+        "downlink total {} ({} smaller than float32 broadcasts)",
+        fmt_bytes(result.network.downlink_bytes),
+        fl::network::fmt_ratio(result.network.downlink_compression_vs_float32(params)),
     );
     Ok(())
 }

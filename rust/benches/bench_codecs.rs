@@ -1,9 +1,12 @@
-//! Codec micro-benchmarks: the per-layer quantize/dequantize hot path
-//! (millions of elements per client round). Drives EXPERIMENTS.md §Perf L3.
+//! Compression micro-benchmarks: the per-layer quantize/dequantize hot
+//! path (millions of elements per client round). Drives EXPERIMENTS.md
+//! §Perf L3.
 
 use cossgd::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
 use cossgd::compress::linear::LinearQuantizer;
-use cossgd::compress::{bitpack, hadamard, signsgd, sparsify, ClientCodecState, Codec};
+use cossgd::compress::{
+    bitpack, decode, hadamard, signsgd, sparsify, Direction, Pipeline, PipelineState,
+};
 use cossgd::util::bench::Bencher;
 use cossgd::util::propcheck::gradient_like;
 use cossgd::util::rng::Pcg64;
@@ -13,7 +16,7 @@ fn main() {
     let mut rng = Pcg64::seeded(1);
     let n = 1 << 20; // ~1M elements ≈ the MNIST CNN layer scale
     let g = gradient_like(&mut rng, n);
-    println!("== codec benchmarks (n = {n}) ==");
+    println!("== compression benchmarks (n = {n}) ==");
 
     for bits in [2u8, 8] {
         let q = CosineQuantizer::new(bits, Rounding::Biased, BoundMode::ClipTopPercent(1.0));
@@ -54,17 +57,22 @@ fn main() {
     b.bench_elems("gather 5%", m.kept.len() as u64, || sparsify::gather(&g, &m));
 
     // Whole-pipeline encode/decode (what a client round pays).
-    for codec in [
-        Codec::cosine(2),
-        Codec::cosine(2).with_sparsify(0.05),
-        Codec::cosine(8),
+    for pipe in [
+        Pipeline::cosine(2),
+        Pipeline::cosine(2).with_sparsify(0.05),
+        Pipeline::cosine(8),
     ] {
-        let label = format!("pipeline encode {}", codec.name());
+        let label = format!("pipeline encode {}", pipe.name());
         b.bench_elems(&label, n as u64, || {
-            codec.encode(&g, &mut ClientCodecState::new(), &mut Pcg64::seeded(3))
+            pipe.encode(
+                &g,
+                Direction::Uplink,
+                &mut PipelineState::new(),
+                &mut Pcg64::seeded(3),
+            )
         });
-        let enc = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
-        let label = format!("pipeline decode {}", codec.name());
-        b.bench_elems(&label, n as u64, || codec.decode(&enc).unwrap());
+        let enc = pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+        let label = format!("pipeline decode {}", pipe.name());
+        b.bench_elems(&label, n as u64, || decode(&enc).unwrap());
     }
 }

@@ -1,7 +1,8 @@
 //! DEFLATE benchmarks on the payloads the system actually produces:
 //! bit-packed quantized gradient codes (very compressible) and raw float32
 //! bytes (barely compressible). Cross-referenced against flate2 (zlib) as
-//! an external yardstick — flate2 is a dev-dependency only.
+//! an external yardstick when built with `--features zlib-yardstick`
+//! (flate2 is optional so offline builds need no extra crates).
 
 use cossgd::compress::cosine::CosineQuantizer;
 use cossgd::compress::deflate::{deflate, inflate, CompressionLevel};
@@ -47,12 +48,15 @@ fn main() {
         inflate(&compressed).unwrap()
     });
 
-    // zlib yardstick.
-    use std::io::Write;
-    b.bench_bytes("flate2(6) codes [yardstick]", codes.len() as u64, || {
-        let mut e =
-            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::new(6));
-        e.write_all(&codes).unwrap();
-        e.finish().unwrap()
-    });
+    // zlib yardstick (optional dependency).
+    #[cfg(feature = "zlib-yardstick")]
+    {
+        use std::io::Write;
+        b.bench_bytes("flate2(6) codes [yardstick]", codes.len() as u64, || {
+            let mut e =
+                flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::new(6));
+            e.write_all(&codes).unwrap();
+            e.finish().unwrap()
+        });
+    }
 }

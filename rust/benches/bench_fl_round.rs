@@ -1,21 +1,62 @@
 //! End-to-end federated-round benchmarks — one per paper table's workload:
 //! a full FedAvg round (client local training through PJRT + encode +
-//! wire + server decode/aggregate) for each (model, codec) cell. This is
-//! the number the paper's "communication rounds" cost out to wall-clock.
+//! wire + server decode/aggregate) for each (model, codec) cell, plus the
+//! downlink (model-delta) encode/decode path so round-trip overhead shows
+//! up in the perf trajectory. This is the number the paper's
+//! "communication rounds" cost out to wall-clock.
 
-use cossgd::compress::Codec;
+use cossgd::compress::{decode, wire, Direction, Pipeline, PipelineState};
 use cossgd::fl::{self, FlConfig};
 use cossgd::runtime::Engine;
 use cossgd::util::bench::Bencher;
+use cossgd::util::propcheck::gradient_like;
+use cossgd::util::rng::Pcg64;
+
+/// Downlink model-delta encode/decode (no artifacts needed): what the
+/// server pays per broadcast and a client per received frame.
+fn bench_downlink(b: &mut Bencher) {
+    println!("== downlink (model delta) encode/decode benchmarks ==");
+    let n = 1 << 20; // ~1M params ≈ the MNIST CNN
+    let mut rng = Pcg64::seeded(1);
+    let delta = gradient_like(&mut rng, n);
+    for pipe in [Pipeline::cosine(8), Pipeline::cosine(4)] {
+        let label = format!("downlink encode Δ {}", pipe.name());
+        b.bench_elems(&label, n as u64, || {
+            pipe.encode(
+                &delta,
+                Direction::Downlink,
+                &mut PipelineState::new(),
+                &mut Pcg64::seeded(2),
+            )
+        });
+        let enc = pipe.encode(
+            &delta,
+            Direction::Downlink,
+            &mut PipelineState::new(),
+            &mut rng,
+        );
+        let frame = wire::serialize(&enc);
+        let label = format!(
+            "downlink decode Δ {} ({} bytes/client)",
+            pipe.name(),
+            frame.len()
+        );
+        b.bench_elems(&label, n as u64, || {
+            decode(&wire::deserialize(&frame).unwrap()).unwrap()
+        });
+    }
+}
 
 fn main() {
+    let mut b = Bencher::new();
+    bench_downlink(&mut b);
+
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("SKIP bench_fl_round: artifacts not built (run `make artifacts`)");
+        println!("SKIP bench_fl_round FL rounds: artifacts not built (run `make artifacts`)");
         return;
     }
     let engine = Engine::load(dir).expect("engine");
-    let mut b = Bencher::new();
     // Long-running cases: cap iterations via a short min_time override is
     // handled by BENCH_MIN_TIME_MS; each case below runs ≥1 full round.
     println!("== end-to-end FL round benchmarks ==");
@@ -23,22 +64,29 @@ fn main() {
     let cases: Vec<(&str, FlConfig)> = vec![
         (
             "mnist round float32 (Figs 6)",
-            FlConfig::mnist(false).with_rounds(1).with_codec(Codec::float32()),
+            FlConfig::mnist(false).with_rounds(1).with_uplink(Pipeline::float32()),
         ),
         (
             "mnist round cosine-2 (Figs 6/8)",
-            FlConfig::mnist(false).with_rounds(1).with_codec(Codec::cosine(2)),
+            FlConfig::mnist(false).with_rounds(1).with_uplink(Pipeline::cosine(2)),
+        ),
+        (
+            "mnist round-trip cosine-4↑/cosine-8↓",
+            FlConfig::mnist(false)
+                .with_rounds(1)
+                .with_uplink(Pipeline::cosine(4))
+                .with_downlink(Pipeline::cosine(8)),
         ),
         (
             "cifar(E=1) round cosine-2@5% (Fig 10/Tab 1-2)",
             // E=1 artifact: the E=5 round costs ~3min/client on one core.
             FlConfig::cifar_e1()
                 .with_rounds(1)
-                .with_codec(Codec::cosine(2).with_sparsify(0.05)),
+                .with_uplink(Pipeline::cosine(2).with_sparsify(0.05)),
         ),
         (
             "unet round cosine-8 (Fig 9)",
-            FlConfig::unet().with_rounds(1).with_codec(Codec::cosine(8)),
+            FlConfig::unet().with_rounds(1).with_uplink(Pipeline::cosine(8)),
         ),
     ];
     for (label, mut cfg) in cases {

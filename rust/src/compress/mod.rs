@@ -1,31 +1,52 @@
-//! Gradient compression stack.
+//! Tensor compression stack.
 //!
 //! The paper's contribution ([`cosine`]) plus every baseline it compares
-//! against, the composition machinery ([`codec`]), the lossless stage
-//! ([`deflate`], built from scratch), and the byte-exact wire format
-//! ([`wire`]) the simulated network meters.
+//! against, composed by a direction-agnostic stage [`pipeline`], the
+//! lossless stage ([`deflate`], built from scratch), and the byte-exact
+//! [`wire`] format (`CSG2`) the simulated network meters.
 //!
-//! Pipeline (client → server):
+//! The same pipeline runs both arrows of Algorithm 1:
 //!
 //! ```text
-//!  g = M_in − M*  ──sparsify (seeded mask)──►  kept values
-//!      ──quantize (cosine/linear/…, s bits)──►  codes + norm + bound
-//!      ──bitpack (s bits/code)──►  bytes  ──DEFLATE──►  wire payload
+//!              uplink: g = M_in − M*        downlink: Δ = M^{t+1} − M^t
+//!                         │                              │
+//!                         ▼                              ▼
+//!   ┌─────────────────────────────────────────────────────────────────┐
+//!   │ Pipeline stages                                                 │
+//!   │   EF fold      p = v + residual      (optional, endpoint-local) │
+//!   │   sparsify     seeded random mask    (keep_frac < 1)            │
+//!   │   rotate       Hadamard ±1 rotation  (optional, any quantizer)  │
+//!   │   quantize     impl Quantizer        (cosine / linear / sign /  │
+//!   │                                       float32 passthrough)      │
+//!   │   bit-pack     s bits per code       (skipped at 32 bits)       │
+//!   │   DEFLATE      lossless (§4)         (kept only if smaller)     │
+//!   └─────────────────────────────────────────────────────────────────┘
+//!                         │
+//!                         ▼
+//!        EncodedTensor ──wire::serialize──► CSG2 frame (44 B header)
 //! ```
 //!
-//! The server reverses every stage; the decoded dense gradient feeds
-//! FedAvg aggregation (Eq. 1).
+//! The receiver inverts every stage from the self-describing header via
+//! [`pipeline::decode`] — no sender configuration needed. Decoded uplink
+//! gradients feed FedAvg aggregation (Eq. 1); decoded downlink deltas
+//! advance the clients' model replica.
+//!
+//! Adding a scheme = one `impl Quantizer` + one [`quantizer::from_wire`]
+//! arm; the pipeline, wire format, figures and cost ledgers pick it up
+//! unchanged.
 
 pub mod bitpack;
-pub mod codec;
 pub mod cosine;
 pub mod deflate;
 pub mod entropy;
 pub mod hadamard;
 pub mod linear;
+pub mod pipeline;
+pub mod quantizer;
 pub mod signsgd;
 pub mod sparsify;
 pub mod topk;
 pub mod wire;
 
-pub use codec::{ClientCodecState, Codec, CodecKind, EncodedGradient};
+pub use pipeline::{decode, Direction, EncodedTensor, Pipeline, PipelineState};
+pub use quantizer::{Quantized, Quantizer};

@@ -1,0 +1,710 @@
+//! Direction-agnostic compression pipeline (Algorithm 1, both arrows):
+//!
+//! ```text
+//!   values ──EF fold──► sparsify ──► rotate ──► quantize ──► bit-pack ──► DEFLATE
+//! ```
+//!
+//! One [`Pipeline`] value composes a [`Quantizer`] with the structural
+//! stages. [`Pipeline::encode`] turns a dense tensor (an uplink gradient
+//! *or* a downlink model delta) into an [`EncodedTensor`] — what travels
+//! on the wire — and the free function [`decode`] inverts it anywhere,
+//! driven entirely by the self-describing wire header: the receiver never
+//! needs the sender's configuration.
+//!
+//! Stage notes:
+//! * **error feedback** (Karimireddy et al. [15], generalized): fold the
+//!   local residual into the input, quantize, and carry the reconstruction
+//!   error forward in [`PipelineState`]. Works with any quantizer; with
+//!   [`super::quantizer::EfSign`] it is exactly EF-signSGD.
+//! * **sparsify**: seeded random mask [17]; only the seed travels.
+//! * **rotate**: randomized Hadamard rotation [40] (the "R" in
+//!   "linear (U, R)"); composes with any quantizer since CSG2.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Pcg64;
+
+use super::bitpack;
+use super::cosine::{BoundMode, CosineQuantizer, Rounding};
+use super::deflate::{self, CompressionLevel};
+use super::entropy;
+use super::hadamard;
+use super::linear::{LinearQuantizer, ValueBound};
+use super::quantizer::{self, EfSign, Float32Passthrough, Quantizer, SignSgd, SignSgdNorm};
+use super::sparsify;
+
+/// Which way a tensor travels. Tags every wire frame so cost ledgers and
+/// replicas can't confuse a gradient update with a model delta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Client → server (gradient update).
+    Uplink,
+    /// Server → client (model delta broadcast).
+    Downlink,
+}
+
+impl Direction {
+    /// Stable wire id.
+    pub fn id(&self) -> u8 {
+        match self {
+            Direction::Uplink => 0,
+            Direction::Downlink => 1,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Result<Direction> {
+        match id {
+            0 => Ok(Direction::Uplink),
+            1 => Ok(Direction::Downlink),
+            other => anyhow::bail!("bad direction id {other}"),
+        }
+    }
+}
+
+/// A complete compression scheme: one quantizer plus the structural
+/// stages. Cheap to clone (the quantizer is shared).
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    quantizer: Arc<dyn Quantizer>,
+    /// Fraction of coordinates transmitted (random mask [17]); 1.0 = all.
+    pub keep_frac: f64,
+    /// Randomized Hadamard rotation before quantization.
+    pub rotate: bool,
+    /// Fold the [`PipelineState`] residual in before encoding and carry
+    /// the reconstruction error forward (EF memory never hits the wire).
+    pub error_feedback: bool,
+    /// Apply DEFLATE to the packed payload (§4).
+    pub deflate: bool,
+    pub level: CompressionLevel,
+}
+
+impl Pipeline {
+    /// A pipeline around any quantizer: dense, unrotated, DEFLATE on.
+    pub fn new<Q: Quantizer + 'static>(q: Q) -> Pipeline {
+        Pipeline {
+            quantizer: Arc::new(q),
+            keep_frac: 1.0,
+            rotate: false,
+            error_feedback: false,
+            deflate: true,
+            level: CompressionLevel::Default,
+        }
+    }
+
+    /// Uncompressed float32 baseline (no DEFLATE — matching the paper's
+    /// float32 cost accounting; Fig. 5 shows it would gain only ~1.07×).
+    pub fn float32() -> Pipeline {
+        Pipeline::new(Float32Passthrough).without_deflate()
+    }
+
+    /// The paper's default CosSGD config at `bits` (biased, top-1% clip).
+    pub fn cosine(bits: u8) -> Pipeline {
+        Pipeline::new(CosineQuantizer::paper_default(bits))
+    }
+
+    /// CosSGD with explicit rounding / bound mode.
+    pub fn cosine_with(bits: u8, rounding: Rounding, bound: BoundMode) -> Pipeline {
+        Pipeline::new(CosineQuantizer::new(bits, rounding, bound))
+    }
+
+    /// Value-space linear quantization ("linear" / "linear (U)").
+    pub fn linear(bits: u8, rounding: Rounding) -> Pipeline {
+        Pipeline::new(LinearQuantizer::new(bits, rounding, ValueBound::MaxAbs))
+    }
+
+    /// Linear after a randomized Hadamard rotation ("linear (U, R)").
+    pub fn linear_rotated(bits: u8, rounding: Rounding) -> Pipeline {
+        Pipeline::linear(bits, rounding).with_rotation()
+    }
+
+    /// signSGD [4]: signs only, unit magnitude.
+    pub fn sign() -> Pipeline {
+        Pipeline::new(SignSgd)
+    }
+
+    /// signSGD+Norm [43] — identical to 1-bit CosSGD.
+    pub fn sign_norm() -> Pipeline {
+        Pipeline::new(SignSgdNorm)
+    }
+
+    /// EF-signSGD [15]: ℓ₁-scaled signs with client-local error feedback.
+    pub fn ef_sign() -> Pipeline {
+        Pipeline::new(EfSign).with_error_feedback()
+    }
+
+    pub fn with_sparsify(mut self, keep_frac: f64) -> Pipeline {
+        assert!((0.0..=1.0).contains(&keep_frac));
+        self.keep_frac = keep_frac;
+        self
+    }
+
+    pub fn with_rotation(mut self) -> Pipeline {
+        self.rotate = true;
+        self
+    }
+
+    pub fn with_error_feedback(mut self) -> Pipeline {
+        self.error_feedback = true;
+        self
+    }
+
+    pub fn without_deflate(mut self) -> Pipeline {
+        self.deflate = false;
+        self
+    }
+
+    /// The quantizer stage (for introspection / kernel offload).
+    pub fn quantizer(&self) -> &dyn Quantizer {
+        self.quantizer.as_ref()
+    }
+
+    /// Bits per transmitted code.
+    pub fn bits(&self) -> u8 {
+        self.quantizer.bits()
+    }
+
+    /// Full scheme label: quantizer, EF, rotation, sparsification and
+    /// DEFLATE status — every stage that changes bytes-on-wire is visible
+    /// in figure labels.
+    pub fn name(&self) -> String {
+        let mut s = self.quantizer.name();
+        if self.error_feedback {
+            s = format!("EF-{s}");
+        }
+        if self.rotate {
+            s.push_str(" +R");
+        }
+        if self.keep_frac < 1.0 {
+            s.push_str(&format!(" @{}%", (self.keep_frac * 100.0).round()));
+        }
+        if self.deflate {
+            s.push_str(" +deflate");
+        }
+        s
+    }
+
+    /// Encode a dense tensor travelling in `direction`. `rng` drives
+    /// stochastic rounding and the mask/rotation seeds; `state` carries
+    /// the error-feedback residual across rounds (unused otherwise).
+    pub fn encode(
+        &self,
+        values: &[f32],
+        direction: Direction,
+        state: &mut PipelineState,
+        rng: &mut Pcg64,
+    ) -> EncodedTensor {
+        let n = values.len();
+
+        // --- error-feedback fold ------------------------------------------
+        let work: Vec<f32>;
+        let work_ref: &[f32] = if self.error_feedback {
+            if state.residual.len() != n {
+                // First use (or model resize): cold-start the memory.
+                state.residual = vec![0.0; n];
+            }
+            work = values
+                .iter()
+                .zip(&state.residual)
+                .map(|(&v, &e)| v + e)
+                .collect();
+            &work
+        } else {
+            values
+        };
+
+        // --- sparsify ------------------------------------------------------
+        let (mask_seed, kept_values, mask) = if self.keep_frac < 1.0 {
+            let seed = rng.next_u64();
+            let m = sparsify::mask(seed, n, self.keep_frac);
+            let vals = sparsify::gather(work_ref, &m);
+            (seed, vals, Some(m))
+        } else {
+            (0u64, work_ref.to_vec(), None)
+        };
+        let kept_n = kept_values.len();
+
+        // --- rotate --------------------------------------------------------
+        let (rot_seed, stage_values) = if self.rotate {
+            let seed = rng.next_u64();
+            (seed, hadamard::rotate(&kept_values, seed))
+        } else {
+            (0u64, kept_values)
+        };
+
+        // --- quantize + pack ----------------------------------------------
+        let bits = self.quantizer.bits();
+        let (payload_raw, norm, bound, local_rec) = if bits == 32 {
+            // Float passthrough: raw little-endian floats, no bit-packing.
+            let raw = entropy::f32_bytes(&stage_values);
+            let rec = self.error_feedback.then(|| stage_values.clone());
+            (raw, 0.0, 0.0, rec)
+        } else {
+            let q = self.quantizer.quantize(&stage_values, rng);
+            let rec = self
+                .error_feedback
+                .then(|| self.quantizer.dequantize(&q.codes, q.norm, q.bound));
+            (bitpack::pack(&q.codes, bits), q.norm, q.bound, rec)
+        };
+
+        // --- error-feedback residual update -------------------------------
+        if let Some(mut rec) = local_rec {
+            if self.rotate {
+                rec = hadamard::unrotate(&rec, rot_seed, kept_n);
+            }
+            let rec_full = match &mask {
+                Some(m) => sparsify::scatter(&rec, m),
+                None => rec,
+            };
+            for ((e, &p), &r) in state.residual.iter_mut().zip(work_ref).zip(&rec_full) {
+                *e = p - r;
+            }
+        }
+
+        // --- deflate -------------------------------------------------------
+        let (payload, deflated) = self.finish_payload(payload_raw);
+        EncodedTensor {
+            direction,
+            kind_id: self.quantizer.id(),
+            bits,
+            n: n as u32,
+            kept: kept_n as u32,
+            mask_seed,
+            rot_seed,
+            rotated: self.rotate,
+            norm,
+            bound,
+            deflated,
+            payload,
+        }
+    }
+
+    fn finish_payload(&self, raw: Vec<u8>) -> (Vec<u8>, bool) {
+        if self.deflate {
+            let c = deflate::deflate(&raw, self.level);
+            if c.len() < raw.len() {
+                return (c, true);
+            }
+        }
+        (raw, false)
+    }
+
+    /// Codes actually transmitted for `n`-element tensors (pre-pack;
+    /// rotation pads to the next power of two).
+    pub fn transmitted_codes(&self, n: usize) -> usize {
+        let kept = if self.keep_frac < 1.0 {
+            sparsify::kept_count(n, self.keep_frac)
+        } else {
+            n
+        };
+        if self.rotate {
+            hadamard::padded_len(kept.max(1))
+        } else {
+            kept
+        }
+    }
+}
+
+/// Decode an [`EncodedTensor`] into a dense vector of length `enc.n`,
+/// using only the wire header (quantizer id/bits, rotation flag, mask
+/// seed) — no sender configuration required.
+pub fn decode(enc: &EncodedTensor) -> Result<Vec<f32>> {
+    let raw = if enc.deflated {
+        deflate::inflate(&enc.payload)?
+    } else {
+        enc.payload.clone()
+    };
+    let kept = enc.kept as usize;
+    let n = enc.n as usize;
+    let count = if enc.rotated {
+        hadamard::padded_len(kept.max(1))
+    } else {
+        kept
+    };
+
+    let stage_values: Vec<f32> = if enc.kind_id == quantizer::ids::FLOAT32 {
+        ensure!(enc.bits == 32, "float32 frame with bits {}", enc.bits);
+        ensure!(
+            raw.len() == count * 4,
+            "float32 payload size {} != {}",
+            raw.len(),
+            count * 4
+        );
+        raw.chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    } else {
+        ensure!(
+            raw.len() >= bitpack::packed_len(count, enc.bits),
+            "payload too short: {} bytes for {count} codes of {} bits",
+            raw.len(),
+            enc.bits
+        );
+        let codes = bitpack::unpack(&raw, enc.bits, count);
+        let q = quantizer::from_wire(enc.kind_id, enc.bits)?;
+        q.dequantize(&codes, enc.norm, enc.bound)
+    };
+
+    let values = if enc.rotated {
+        hadamard::unrotate(&stage_values, enc.rot_seed, kept)
+    } else {
+        stage_values
+    };
+
+    if enc.mask_seed != 0 && kept < n {
+        let m = sparsify::mask(enc.mask_seed, n, kept as f64 / n as f64);
+        ensure!(
+            m.kept.len() == kept,
+            "mask regeneration mismatch: {} vs {kept}",
+            m.kept.len()
+        );
+        Ok(sparsify::scatter(&values, &m))
+    } else {
+        Ok(values)
+    }
+}
+
+/// Per-endpoint pipeline memory: the error-feedback residual. Client-local
+/// on the uplink, server-local on the downlink; never transmitted.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineState {
+    pub residual: Vec<f32>,
+}
+
+impl PipelineState {
+    pub fn new() -> PipelineState {
+        Self::default()
+    }
+}
+
+/// A compressed tensor as it travels on the wire, either direction.
+/// Serialized byte-exactly by [`super::wire`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedTensor {
+    pub direction: Direction,
+    pub kind_id: u8,
+    pub bits: u8,
+    /// Full (dense) tensor length.
+    pub n: u32,
+    /// Transmitted coordinate count (before rotation padding).
+    pub kept: u32,
+    pub mask_seed: u64,
+    pub rot_seed: u64,
+    pub rotated: bool,
+    pub norm: f32,
+    pub bound: f32,
+    pub deflated: bool,
+    pub payload: Vec<u8>,
+}
+
+impl EncodedTensor {
+    /// Total bytes on the wire (header + payload) — the quantity every
+    /// cost table in the paper measures. See [`super::wire`] for the
+    /// exact serialization this counts.
+    pub fn wire_bytes(&self) -> usize {
+        super::wire::HEADER_BYTES + self.payload.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::gradient_like;
+    use crate::util::stats::l2_norm;
+
+    fn state() -> PipelineState {
+        PipelineState::new()
+    }
+
+    fn enc(p: &Pipeline, g: &[f32], rng: &mut Pcg64) -> EncodedTensor {
+        p.encode(g, Direction::Uplink, &mut state(), rng)
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+        let diff: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        diff / l2_norm(a).max(1e-12)
+    }
+
+    fn cos_sim(a: &[f32], b: &[f32]) -> f64 {
+        let dot: f64 = a.iter().zip(b).map(|(&x, &y)| (x * y) as f64).sum();
+        dot / (l2_norm(a) * l2_norm(b)).max(1e-12)
+    }
+
+    #[test]
+    fn cosine_8bit_roundtrip_accurate() {
+        // Per-element angle error is ≤ q/2, so the L2 relative error scales
+        // like sqrt(n/3)·q/2 ≈ 0.35 at n=10k — assert we stay within that
+        // analytic envelope and that the *direction* is well preserved.
+        let mut rng = Pcg64::seeded(111);
+        let g = gradient_like(&mut rng, 10_000);
+        // Auto bound (no saturation) so every element obeys the envelope;
+        // top-p% clipping deliberately sacrifices the top tail (Table 2).
+        let pipe = Pipeline::cosine_with(8, Rounding::Biased, BoundMode::Auto);
+        let e = enc(&pipe, &g, &mut rng);
+        let dec = decode(&e).unwrap();
+        assert_eq!(dec.len(), g.len());
+        let q = (std::f32::consts::PI - 2.0 * e.bound) / 255.0;
+        let envelope = ((g.len() as f64) / 3.0).sqrt() * (q as f64) / 2.0 * 1.2 + 1e-3;
+        assert!(
+            rel_err(&g, &dec) < envelope,
+            "rel err {} > envelope {envelope}",
+            rel_err(&g, &dec)
+        );
+        assert!(cos_sim(&g, &dec) > 0.93, "cosine similarity {}", cos_sim(&g, &dec));
+    }
+
+    #[test]
+    fn clipping_concentrates_error_on_top_tail() {
+        // With top-1% clipping the saturated elements absorb the error while
+        // the bulk is reconstructed finely — the paper's Table 2 mechanism.
+        let mut rng = Pcg64::seeded(211);
+        let g = gradient_like(&mut rng, 10_000);
+        let pipe = Pipeline::cosine(8);
+        let dec = decode(&enc(&pipe, &g, &mut rng)).unwrap();
+        let k = 100; // top 1%
+        let thresh = crate::util::stats::kth_largest_abs(&g, k);
+        let (mut bulk_err, mut bulk_scale, mut nbulk) = (0.0f64, 0.0f64, 0usize);
+        for (&a, &b) in g.iter().zip(&dec) {
+            if a.abs() < thresh {
+                bulk_err += ((a - b) as f64).powi(2);
+                bulk_scale += (a as f64).powi(2);
+                nbulk += 1;
+            }
+        }
+        assert!(nbulk >= 9_800);
+        let bulk_rel = (bulk_err / bulk_scale.max(1e-12)).sqrt();
+        assert!(bulk_rel < 0.25, "bulk rel err {bulk_rel}");
+    }
+
+    #[test]
+    fn all_schemes_roundtrip_dense_shape() {
+        let mut rng = Pcg64::seeded(112);
+        let g = gradient_like(&mut rng, 3000);
+        let pipes = [
+            Pipeline::float32(),
+            Pipeline::cosine_with(2, Rounding::Unbiased, BoundMode::Auto),
+            Pipeline::linear(4, Rounding::Biased),
+            Pipeline::linear_rotated(2, Rounding::Unbiased),
+            Pipeline::sign(),
+            Pipeline::sign_norm(),
+            Pipeline::ef_sign(),
+        ];
+        for pipe in pipes {
+            for keep in [1.0, 0.25] {
+                let pipe = pipe.clone().with_sparsify(keep);
+                let mut st = state();
+                let e = pipe.encode(&g, Direction::Uplink, &mut st, &mut rng);
+                let dec = decode(&e).unwrap();
+                assert_eq!(dec.len(), g.len(), "{}", pipe.name());
+                if keep < 1.0 {
+                    let zeros = dec.iter().filter(|&&x| x == 0.0).count();
+                    assert!(
+                        zeros >= (g.len() as f64 * 0.7) as usize,
+                        "{}: sparsified decode should be mostly zero ({zeros})",
+                        pipe.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn float32_roundtrip_exact() {
+        let mut rng = Pcg64::seeded(113);
+        let g = gradient_like(&mut rng, 513);
+        let pipe = Pipeline::float32();
+        assert_eq!(decode(&enc(&pipe, &g, &mut rng)).unwrap(), g);
+    }
+
+    #[test]
+    fn sparsified_decode_preserves_kept_exactly_float32() {
+        let mut rng = Pcg64::seeded(114);
+        let g = gradient_like(&mut rng, 800);
+        let pipe = Pipeline::float32().with_sparsify(0.1);
+        let e = enc(&pipe, &g, &mut rng);
+        let dec = decode(&e).unwrap();
+        let m = sparsify::mask(e.mask_seed, g.len(), 0.1);
+        for &i in &m.kept {
+            assert_eq!(dec[i], g[i]);
+        }
+        assert_eq!(dec.iter().filter(|&&x| x != 0.0).count(), m.kept.len());
+    }
+
+    #[test]
+    fn rotated_linear_beats_plain_linear_with_outlier() {
+        // The rotation's raison d'être: a dominating coordinate ruins plain
+        // linear 2-bit; rotation spreads it.
+        let mut rng = Pcg64::seeded(115);
+        let mut g = gradient_like(&mut rng, 4096);
+        g[7] = 25.0;
+        let plain = Pipeline::linear(2, Rounding::Unbiased);
+        let rotated = Pipeline::linear_rotated(2, Rounding::Unbiased);
+        let mut e_plain = 0.0;
+        let mut e_rot = 0.0;
+        for _ in 0..5 {
+            let dp = decode(&enc(&plain, &g, &mut rng)).unwrap();
+            let dr = decode(&enc(&rotated, &g, &mut rng)).unwrap();
+            e_plain += rel_err(&g, &dp);
+            e_rot += rel_err(&g, &dr);
+        }
+        assert!(e_rot < e_plain, "rot {e_rot} !< plain {e_plain}");
+    }
+
+    #[test]
+    fn rotation_composes_with_any_quantizer() {
+        // New in CSG2: rotation is a pipeline stage, so cosine +R decodes
+        // correctly too (CSG1 could only fuse rotation into linear).
+        let mut rng = Pcg64::seeded(120);
+        let g = gradient_like(&mut rng, 2000);
+        let pipe = Pipeline::cosine(8).with_rotation();
+        let e = enc(&pipe, &g, &mut rng);
+        assert!(e.rotated);
+        let dec = decode(&e).unwrap();
+        assert_eq!(dec.len(), g.len());
+        assert!(cos_sim(&g, &dec) > 0.9, "sim {}", cos_sim(&g, &dec));
+    }
+
+    #[test]
+    fn cosine_2bit_beats_linear_2bit_biased() {
+        // Figures 6/7 (a) in miniature: biased linear 2-bit reconstruction
+        // is much worse than biased cosine 2-bit on gradient-like data.
+        let mut rng = Pcg64::seeded(116);
+        let g = gradient_like(&mut rng, 20_000);
+        let cos = Pipeline::cosine(2);
+        let lin = Pipeline::linear(2, Rounding::Biased);
+        let dc = decode(&enc(&cos, &g, &mut rng)).unwrap();
+        let dl = decode(&enc(&lin, &g, &mut rng)).unwrap();
+        assert!(
+            cos_sim(&g, &dc) > cos_sim(&g, &dl),
+            "cosine sim {} !> linear sim {}",
+            cos_sim(&g, &dc),
+            cos_sim(&g, &dl)
+        );
+    }
+
+    #[test]
+    fn wire_cost_reduction_matches_bits() {
+        let mut rng = Pcg64::seeded(117);
+        let g = gradient_like(&mut rng, 100_000);
+        let f32_cost = enc(&Pipeline::float32(), &g, &mut rng).wire_bytes();
+        let q8 = Pipeline::cosine(8).without_deflate();
+        let cost8 = enc(&q8, &g, &mut rng).wire_bytes();
+        let ratio = f32_cost as f64 / cost8 as f64;
+        assert!((3.5..4.5).contains(&ratio), "8-bit ratio {ratio}");
+        // With DEFLATE the paper reports >10x total for 8-bit (Fig. 5).
+        let cost8d = enc(&Pipeline::cosine(8), &g, &mut rng).wire_bytes();
+        let ratio_d = f32_cost as f64 / cost8d as f64;
+        assert!(ratio_d > 6.0, "deflated 8-bit ratio {ratio_d}");
+    }
+
+    #[test]
+    fn deflate_flag_falls_back_when_incompressible() {
+        let mut rng = Pcg64::seeded(118);
+        let g = gradient_like(&mut rng, 4000);
+        let e = enc(&Pipeline::float32(), &g, &mut rng);
+        assert!(!e.deflated); // float32() disables deflate
+    }
+
+    #[test]
+    fn ef_with_mask_keeps_residual_for_unsent() {
+        let mut rng = Pcg64::seeded(119);
+        let g = vec![1.0f32; 64];
+        let pipe = Pipeline::ef_sign().with_sparsify(0.25);
+        let mut st = state();
+        let e = pipe.encode(&g, Direction::Uplink, &mut st, &mut rng);
+        let dec = decode(&e).unwrap();
+        // Unsent coordinates: residual should hold their full value.
+        let m = sparsify::mask(e.mask_seed, g.len(), 0.25);
+        let kept: std::collections::HashSet<usize> = m.kept.iter().copied().collect();
+        for i in 0..g.len() {
+            if !kept.contains(&i) {
+                assert_eq!(dec[i], 0.0);
+                assert!((st.residual[i] - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ef_compensates_over_time() {
+        // Repeatedly sending the SAME input: with EF, the cumulative
+        // reconstruction converges to the cumulative true signal (residual
+        // stays bounded), whereas plain sign loses magnitude info.
+        let g = [0.9f32, -0.1, 0.05, -0.02];
+        let pipe = Pipeline::ef_sign().without_deflate();
+        let mut st = state();
+        let mut rng = Pcg64::seeded(121);
+        let mut cum = [0.0f32; 4];
+        let steps = 200;
+        for _ in 0..steps {
+            let e = pipe.encode(&g, Direction::Uplink, &mut st, &mut rng);
+            for (c, r) in cum.iter_mut().zip(decode(&e).unwrap()) {
+                *c += r;
+            }
+        }
+        for (i, (&ci, &gi)) in cum.iter().zip(&g).enumerate() {
+            let target = gi * steps as f32;
+            // Error is bounded by the residual, not growing with steps.
+            assert!(
+                (ci - target).abs() <= 2.0 * 0.9 + 1e-3,
+                "i={i} cum={ci} target={target}"
+            );
+        }
+    }
+
+    #[test]
+    fn ef_generalizes_to_other_quantizers() {
+        // EF around the cosine quantizer: residual tracks exactly the
+        // reconstruction error of the quantized frame.
+        let mut rng = Pcg64::seeded(122);
+        let g = gradient_like(&mut rng, 256);
+        let pipe = Pipeline::cosine(4).with_error_feedback();
+        let mut st = state();
+        let e = pipe.encode(&g, Direction::Uplink, &mut st, &mut rng);
+        let dec = decode(&e).unwrap();
+        for ((&gi, &di), &ri) in g.iter().zip(&dec).zip(&st.residual) {
+            assert!((ri - (gi - di)).abs() < 1e-5, "{ri} vs {}", gi - di);
+        }
+    }
+
+    #[test]
+    fn direction_tag_is_carried() {
+        let mut rng = Pcg64::seeded(123);
+        let g = gradient_like(&mut rng, 64);
+        let pipe = Pipeline::cosine(4);
+        let up = pipe.encode(&g, Direction::Uplink, &mut state(), &mut rng);
+        let down = pipe.encode(&g, Direction::Downlink, &mut state(), &mut rng);
+        assert_eq!(up.direction, Direction::Uplink);
+        assert_eq!(down.direction, Direction::Downlink);
+        // Direction never changes the payload semantics.
+        assert_eq!(decode(&up).unwrap().len(), decode(&down).unwrap().len());
+    }
+
+    #[test]
+    fn transmitted_codes_counts() {
+        let c = Pipeline::cosine(2).with_sparsify(0.05);
+        assert_eq!(c.transmitted_codes(1000), 50);
+        let r = Pipeline::linear_rotated(2, Rounding::Unbiased).with_sparsify(0.05);
+        assert_eq!(r.transmitted_codes(1000), 64); // padded to pow2
+    }
+
+    #[test]
+    fn names_expose_every_stage() {
+        assert_eq!(Pipeline::float32().name(), "float32");
+        assert_eq!(Pipeline::cosine(2).name(), "cosine-2 +deflate");
+        assert_eq!(
+            Pipeline::cosine(2).with_sparsify(0.05).without_deflate().name(),
+            "cosine-2 @5%"
+        );
+        assert_eq!(
+            Pipeline::linear_rotated(2, Rounding::Unbiased).name(),
+            "linear-2 (U) +R +deflate"
+        );
+        assert_eq!(Pipeline::ef_sign().name(), "EF-signSGD(l1) +deflate");
+    }
+}

@@ -1,0 +1,405 @@
+//! The [`Quantizer`] trait — the single extension point for lossy
+//! compression schemes.
+//!
+//! Every scheme (the paper's cosine quantizer, the linear baselines, the
+//! sign family, and the float32 passthrough) is an `impl Quantizer`; the
+//! [`super::pipeline::Pipeline`] composes one quantizer with the lossless /
+//! structural stages (sparsify → rotate → quantize → bit-pack → DEFLATE).
+//! Adding a new scheme is a drop-in impl plus one line in [`from_wire`] —
+//! no enum surgery across encode/decode/name/cost sites.
+//!
+//! ## Wire identity
+//!
+//! A quantizer is identified on the wire by `(id, bits)`; the two scalar
+//! side-infos (`norm`, `bound`) travel in the [`super::wire`] header. The
+//! server reconstructs a dequantizer from the header alone via
+//! [`from_wire`] — decode never consults the sender's configuration.
+
+use std::any::Any;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg64;
+use crate::util::stats::l2_norm;
+
+use super::cosine::{self, BoundMode, CosineQuantizer, Rounding};
+use super::linear::{self, LinearQuantizer, ValueBound};
+use super::signsgd;
+
+/// Stable wire ids. Id 3 belonged to CSG1's fused "linear-rotated" kind;
+/// rotation is a [`super::pipeline::Pipeline`] stage (wire flag) since
+/// CSG2, so 3 is permanently retired.
+pub mod ids {
+    pub const FLOAT32: u8 = 0;
+    pub const COSINE: u8 = 1;
+    pub const LINEAR: u8 = 2;
+    pub const SIGN: u8 = 4;
+    pub const SIGN_NORM: u8 = 5;
+    pub const EF_SIGN: u8 = 6;
+}
+
+/// The output of [`Quantizer::quantize`]: one code per input element plus
+/// the (at most two) scalars the receiver needs to invert the mapping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub codes: Vec<u16>,
+    /// First side-info scalar (‖g‖₂ for norm-based schemes, else 0).
+    pub norm: f32,
+    /// Second side-info scalar (angle/value bound or sign scale, else 0).
+    pub bound: f32,
+}
+
+/// A lossy value↔code mapping, symmetric across directions: the same
+/// trait quantizes uplink gradients and downlink model deltas.
+pub trait Quantizer: std::fmt::Debug + Send + Sync {
+    /// Stable wire id (see [`ids`]).
+    fn id(&self) -> u8;
+
+    /// Bits per transmitted code. `32` means "raw float32 payload": the
+    /// pipeline serializes values directly and skips bit-packing.
+    fn bits(&self) -> u8;
+
+    /// Short human name (figure labels / CLI).
+    fn name(&self) -> String;
+
+    /// Map values to codes + side info. `rng` drives stochastic rounding;
+    /// deterministic schemes ignore it.
+    fn quantize(&self, values: &[f32], rng: &mut Pcg64) -> Quantized;
+
+    /// Invert [`Self::quantize`] from codes + side info. Must not depend
+    /// on encode-side configuration beyond `(id, bits)` — the receiver
+    /// reconstructs the quantizer via [`from_wire`].
+    fn dequantize(&self, codes: &[u16], norm: f32, bound: f32) -> Vec<f32>;
+
+    /// Downcast support (e.g. the Pallas kernel path needs the concrete
+    /// [`CosineQuantizer`] configuration).
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Check a wire identity without constructing anything (header
+/// validation on the receive hot path).
+pub fn validate_wire(id: u8, bits: u8) -> Result<()> {
+    match id {
+        ids::FLOAT32 => {
+            if bits != 32 {
+                bail!("float32 passthrough requires bits=32, got {bits}");
+            }
+        }
+        ids::COSINE | ids::LINEAR => {
+            if !(1..=16).contains(&bits) {
+                bail!("bad code width {bits} for quantizer id {id}");
+            }
+        }
+        ids::SIGN | ids::SIGN_NORM | ids::EF_SIGN => {
+            if bits != 1 {
+                bail!("sign-family quantizer id {id} requires bits=1, got {bits}");
+            }
+        }
+        other => bail!("unknown quantizer id {other}"),
+    }
+    Ok(())
+}
+
+/// Reconstruct a dequantizer from its wire identity. Together with
+/// [`validate_wire`] this is the one registry to extend when adding an
+/// `impl Quantizer`.
+pub fn from_wire(id: u8, bits: u8) -> Result<Box<dyn Quantizer>> {
+    validate_wire(id, bits)?;
+    Ok(match id {
+        ids::FLOAT32 => Box::new(Float32Passthrough),
+        ids::COSINE => Box::new(CosineQuantizer::new(bits, Rounding::Biased, BoundMode::Auto)),
+        ids::LINEAR => Box::new(LinearQuantizer::new(bits, Rounding::Biased, ValueBound::MaxAbs)),
+        ids::SIGN => Box::new(SignSgd),
+        ids::SIGN_NORM => Box::new(SignSgdNorm),
+        ids::EF_SIGN => Box::new(EfSign),
+        other => bail!("unknown quantizer id {other}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Trait impls for the in-tree schemes.
+// ---------------------------------------------------------------------------
+
+impl Quantizer for CosineQuantizer {
+    fn id(&self) -> u8 {
+        ids::COSINE
+    }
+
+    fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "cosine-{}{}",
+            self.bits,
+            if self.rounding == Rounding::Unbiased { " (U)" } else { "" }
+        )
+    }
+
+    fn quantize(&self, values: &[f32], rng: &mut Pcg64) -> Quantized {
+        let q = CosineQuantizer::quantize(self, values, rng);
+        Quantized {
+            codes: q.codes,
+            norm: q.norm,
+            bound: q.bound,
+        }
+    }
+
+    fn dequantize(&self, codes: &[u16], norm: f32, bound: f32) -> Vec<f32> {
+        cosine::dequantize_codes(codes, norm, bound, self.bits)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl Quantizer for LinearQuantizer {
+    fn id(&self) -> u8 {
+        ids::LINEAR
+    }
+
+    fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "linear-{}{}",
+            self.bits,
+            if self.rounding == Rounding::Unbiased { " (U)" } else { "" }
+        )
+    }
+
+    fn quantize(&self, values: &[f32], rng: &mut Pcg64) -> Quantized {
+        let q = LinearQuantizer::quantize(self, values, rng);
+        Quantized {
+            codes: q.codes,
+            norm: 0.0,
+            bound: q.bound,
+        }
+    }
+
+    fn dequantize(&self, codes: &[u16], _norm: f32, bound: f32) -> Vec<f32> {
+        linear::dequantize_codes(codes, bound, self.bits)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// No quantization: the pipeline serializes raw little-endian float32
+/// values (the paper's baseline). `quantize`/`dequantize` are identity
+/// stubs — the pipeline short-circuits on `bits() == 32`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Float32Passthrough;
+
+impl Quantizer for Float32Passthrough {
+    fn id(&self) -> u8 {
+        ids::FLOAT32
+    }
+
+    fn bits(&self) -> u8 {
+        32
+    }
+
+    fn name(&self) -> String {
+        "float32".into()
+    }
+
+    fn quantize(&self, _values: &[f32], _rng: &mut Pcg64) -> Quantized {
+        Quantized {
+            codes: Vec::new(),
+            norm: 0.0,
+            bound: 0.0,
+        }
+    }
+
+    fn dequantize(&self, _codes: &[u16], _norm: f32, _bound: f32) -> Vec<f32> {
+        Vec::new()
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// signSGD [4]: signs only, unit magnitude (the server folds the step size
+/// into η_s).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignSgd;
+
+impl Quantizer for SignSgd {
+    fn id(&self) -> u8 {
+        ids::SIGN
+    }
+
+    fn bits(&self) -> u8 {
+        1
+    }
+
+    fn name(&self) -> String {
+        "signSGD".into()
+    }
+
+    fn quantize(&self, values: &[f32], _rng: &mut Pcg64) -> Quantized {
+        Quantized {
+            codes: signsgd::sign_codes(values),
+            norm: 0.0,
+            bound: 0.0,
+        }
+    }
+
+    fn dequantize(&self, codes: &[u16], _norm: f32, _bound: f32) -> Vec<f32> {
+        signsgd::decode_sign(codes)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// signSGD+Norm [43]: signs plus ‖g‖₂, reconstructed as
+/// `sign(g)·‖g‖₂/√n` — exactly CosSGD's 1-bit degenerate case.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignSgdNorm;
+
+impl Quantizer for SignSgdNorm {
+    fn id(&self) -> u8 {
+        ids::SIGN_NORM
+    }
+
+    fn bits(&self) -> u8 {
+        1
+    }
+
+    fn name(&self) -> String {
+        "signSGD+Norm".into()
+    }
+
+    fn quantize(&self, values: &[f32], _rng: &mut Pcg64) -> Quantized {
+        Quantized {
+            codes: signsgd::sign_codes(values),
+            norm: l2_norm(values) as f32,
+            bound: 0.0,
+        }
+    }
+
+    fn dequantize(&self, codes: &[u16], norm: f32, _bound: f32) -> Vec<f32> {
+        signsgd::decode_sign_norm(codes, norm)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The inner scheme of EF-signSGD [15]: `(‖v‖₁/n)·sign(v)`. Pair it with
+/// [`super::pipeline::Pipeline::with_error_feedback`] to get the published
+/// algorithm — the residual memory lives in the pipeline state, not here.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EfSign;
+
+impl Quantizer for EfSign {
+    fn id(&self) -> u8 {
+        ids::EF_SIGN
+    }
+
+    fn bits(&self) -> u8 {
+        1
+    }
+
+    fn name(&self) -> String {
+        // Distinct from plain signSGD (id 4): the magnitude is the l1 mean.
+        "signSGD(l1)".into()
+    }
+
+    fn quantize(&self, values: &[f32], _rng: &mut Pcg64) -> Quantized {
+        let n = values.len().max(1);
+        let scale = values.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
+        Quantized {
+            codes: signsgd::sign_codes(values),
+            norm: 0.0,
+            bound: scale,
+        }
+    }
+
+    fn dequantize(&self, codes: &[u16], _norm: f32, bound: f32) -> Vec<f32> {
+        signsgd::decode_ef(codes, bound)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::gradient_like;
+
+    #[test]
+    fn wire_registry_covers_all_ids() {
+        assert_eq!(from_wire(ids::FLOAT32, 32).unwrap().name(), "float32");
+        assert_eq!(from_wire(ids::COSINE, 4).unwrap().bits(), 4);
+        assert_eq!(from_wire(ids::LINEAR, 2).unwrap().id(), ids::LINEAR);
+        assert_eq!(from_wire(ids::SIGN, 1).unwrap().bits(), 1);
+        assert_eq!(from_wire(ids::SIGN_NORM, 1).unwrap().id(), ids::SIGN_NORM);
+        assert_eq!(from_wire(ids::EF_SIGN, 1).unwrap().id(), ids::EF_SIGN);
+    }
+
+    #[test]
+    fn wire_registry_rejects_bad_identities() {
+        assert!(from_wire(3, 2).is_err()); // retired CSG1 linear-rotated
+        assert!(from_wire(7, 2).is_err()); // unknown
+        assert!(from_wire(ids::FLOAT32, 8).is_err()); // passthrough must be 32-bit
+        assert!(from_wire(ids::COSINE, 0).is_err());
+        assert!(from_wire(ids::COSINE, 17).is_err());
+        assert!(from_wire(ids::SIGN, 2).is_err()); // sign family is 1-bit
+        // The allocation-free validator agrees with the constructor.
+        assert!(validate_wire(ids::COSINE, 4).is_ok());
+        assert!(validate_wire(3, 2).is_err());
+        assert!(validate_wire(ids::FLOAT32, 8).is_err());
+    }
+
+    #[test]
+    fn trait_roundtrip_matches_inherent_api() {
+        let mut rng = Pcg64::seeded(71);
+        let g = gradient_like(&mut rng, 2048);
+        let q = CosineQuantizer::paper_default(4);
+        let via_trait = Quantizer::quantize(&q, &g, &mut Pcg64::seeded(5));
+        let inherent = CosineQuantizer::quantize(&q, &g, &mut Pcg64::seeded(5));
+        assert_eq!(via_trait.codes, inherent.codes);
+        assert_eq!(via_trait.norm, inherent.norm);
+        assert_eq!(via_trait.bound, inherent.bound);
+        let back = q.dequantize(&via_trait.codes, via_trait.norm, via_trait.bound);
+        assert_eq!(back, inherent.dequantize());
+    }
+
+    #[test]
+    fn sign_family_side_info() {
+        let mut rng = Pcg64::seeded(72);
+        let g = vec![1.0f32, -2.0, 3.0, -4.0];
+        let qn = Quantizer::quantize(&SignSgdNorm, &g, &mut rng);
+        assert!((qn.norm - (30.0f32).sqrt()).abs() < 1e-5);
+        let qe = Quantizer::quantize(&EfSign, &g, &mut rng);
+        assert!((qe.bound - 2.5).abs() < 1e-6); // ℓ1 mean
+        assert_eq!(qe.codes, vec![1, 0, 1, 0]);
+        assert_eq!(EfSign.dequantize(&qe.codes, 0.0, qe.bound), vec![2.5, -2.5, 2.5, -2.5]);
+    }
+
+    #[test]
+    fn dequantize_via_registry_matches_direct() {
+        let mut rng = Pcg64::seeded(73);
+        let g = gradient_like(&mut rng, 513);
+        let q = LinearQuantizer::biased(8);
+        let quant = Quantizer::quantize(&q, &g, &mut rng);
+        let reg = from_wire(ids::LINEAR, 8).unwrap();
+        assert_eq!(
+            reg.dequantize(&quant.codes, quant.norm, quant.bound),
+            q.dequantize(&quant.codes, quant.norm, quant.bound)
+        );
+    }
+}

@@ -1,13 +1,18 @@
-//! 1-bit baselines: signSGD [4], signSGD+Norm [43] and EF-signSGD [15].
+//! 1-bit code helpers for the sign family: signSGD [4], signSGD+Norm [43]
+//! and the inner scheme of EF-signSGD [15].
 //!
 //! * **signSGD** transmits only the sign of each coordinate; the server
 //!   treats `sign(g)` as the update (magnitude is folded into η_s).
 //! * **signSGD+Norm** additionally transmits `‖g‖₂` and reconstructs
 //!   `sign(g)·‖g‖₂/√n` — norm-preserving; the paper notes this is exactly
 //!   CosSGD's 1-bit degenerate case.
-//! * **EF-signSGD** keeps a per-client residual `e`: compress
-//!   `p = g + e` as `(‖p‖₁/n)·sign(p)` and carry `e ← p − compressed`
-//!   forward. The residual is client-local state — never transmitted.
+//! * **EF-signSGD** compresses as `(‖p‖₁/n)·sign(p)`; the residual memory
+//!   `e ← p − compressed` is the generalized error-feedback stage of
+//!   [`super::pipeline::Pipeline`] (see `with_error_feedback`), carried in
+//!   `PipelineState` — client-local, never transmitted.
+//!
+//! The `impl Quantizer` wrappers over these helpers live in
+//! [`super::quantizer`].
 
 use crate::util::stats::l2_norm;
 
@@ -33,43 +38,6 @@ pub fn decode_sign_norm(codes: &[u16], norm: f32) -> Vec<f32> {
         .iter()
         .map(|&c| if c == 1 { mag } else { -mag })
         .collect()
-}
-
-/// Per-client error-feedback memory for EF-signSGD.
-#[derive(Debug, Clone, Default)]
-pub struct ErrorFeedback {
-    pub residual: Vec<f32>,
-}
-
-impl ErrorFeedback {
-    pub fn new(n: usize) -> Self {
-        Self {
-            residual: vec![0.0; n],
-        }
-    }
-
-    /// Encode `g` with error feedback. Returns `(codes, scale)`; the
-    /// reconstruction is `scale · sign(p)` with `p = g + e`, and the
-    /// residual is updated in place (Karimireddy et al. [15], Alg. 1).
-    pub fn encode(&mut self, g: &[f32]) -> (Vec<u16>, f32) {
-        if self.residual.len() != g.len() {
-            // First use (or model resize): cold-start the memory.
-            self.residual = vec![0.0; g.len()];
-        }
-        let p: Vec<f32> = g
-            .iter()
-            .zip(&self.residual)
-            .map(|(&gi, &ei)| gi + ei)
-            .collect();
-        let n = p.len().max(1);
-        let scale = p.iter().map(|x| x.abs()).sum::<f32>() / n as f32; // ‖p‖₁/n
-        let codes = sign_codes(&p);
-        for (ei, (&pi, &ci)) in self.residual.iter_mut().zip(p.iter().zip(&codes)) {
-            let rec = if ci == 1 { scale } else { -scale };
-            *ei = pi - rec;
-        }
-        (codes, scale)
-    }
 }
 
 /// EF-signSGD reconstruction: `scale · sign`.
@@ -126,47 +94,8 @@ mod tests {
     }
 
     #[test]
-    fn error_feedback_residual_tracks_compression_error() {
-        let mut ef = ErrorFeedback::new(4);
-        let g = [1.0f32, -0.5, 0.25, -0.125];
-        let (codes, scale) = ef.encode(&g);
-        let rec = decode_ef(&codes, scale);
-        for ((&gi, &ri), &ei) in g.iter().zip(&rec).zip(&ef.residual) {
-            assert!((ei - (gi - ri)).abs() < 1e-6);
-        }
-    }
-
-    #[test]
-    fn error_feedback_compensates_over_time() {
-        // Repeatedly sending the SAME gradient: with EF, the cumulative
-        // reconstruction converges to the cumulative true signal
-        // (residual stays bounded), whereas plain sign loses magnitude info.
-        let g = [0.9f32, -0.1, 0.05, -0.02];
-        let mut ef = ErrorFeedback::new(4);
-        let mut cum = [0.0f32; 4];
-        let steps = 200;
-        for _ in 0..steps {
-            let (codes, scale) = ef.encode(&g);
-            for (c, r) in cum.iter_mut().zip(decode_ef(&codes, scale)) {
-                *c += r;
-            }
-        }
-        for (i, (&ci, &gi)) in cum.iter().zip(&g).enumerate() {
-            let target = gi * steps as f32;
-            // Error is bounded by the residual, not growing with steps.
-            assert!(
-                (ci - target).abs() <= 2.0 * 0.9 + 1e-3,
-                "i={i} cum={ci} target={target}"
-            );
-        }
-    }
-
-    #[test]
-    fn ef_cold_start_on_resize() {
-        let mut ef = ErrorFeedback::new(2);
-        let g = [1.0f32, 2.0, 3.0];
-        let (codes, _) = ef.encode(&g);
-        assert_eq!(codes.len(), 3);
-        assert_eq!(ef.residual.len(), 3);
+    fn ef_scale_reconstruction() {
+        let codes = [1u16, 0, 1, 1];
+        assert_eq!(decode_ef(&codes, 0.5), vec![0.5, -0.5, 0.5, 0.5]);
     }
 }

@@ -1,4 +1,4 @@
-//! Wire format for compressed gradient updates.
+//! Wire format for compressed tensors — version 2 (`CSG2`).
 //!
 //! Every byte the simulated network meters corresponds to this
 //! serialization, so the cost tables (Table 1, Figs. 9–10 x-axes) are
@@ -6,36 +6,59 @@
 //!
 //! ```text
 //! offset size field
-//! 0      4    magic  "CSG1"
-//! 4      1    kind_id
-//! 5      1    bits
-//! 6      1    flags (bit0 = deflated)
-//! 7      1    reserved (0)
-//! 8      4    n      (full gradient length)
-//! 12     4    kept   (transmitted coordinate count)
+//! 0      4    magic  "CSG2"
+//! 4      1    kind_id   (quantizer wire id, see compress::quantizer::ids)
+//! 5      1    bits      (32 for float32 passthrough, else 1..=16)
+//! 6      1    flags     (bit0 = deflated, bit1 = rotated; others reserved 0)
+//! 7      1    direction (0 = uplink, 1 = downlink)
+//! 8      4    n         (full tensor length)
+//! 12     4    kept      (transmitted coordinate count)
 //! 16     8    mask_seed
 //! 24     8    rot_seed
-//! 32     4    norm   (f32)
-//! 36     4    bound  (f32)
+//! 32     4    norm      (f32)
+//! 36     4    bound     (f32)
 //! 40     4    payload_len
 //! 44     ..   payload
 //! ```
+//!
+//! ## CSG1 → CSG2 delta
+//!
+//! The header is the same 44 bytes as CSG1, so all CSG1 cost accounting
+//! carries over byte-for-byte. Changes: the magic is bumped; the CSG1
+//! reserved byte at offset 7 now carries the [`Direction`] tag; flags
+//! bit 1 marks a Hadamard-rotated payload (CSG1 fused rotation into the
+//! retired kind id 3); and frames are self-describing — the receiver
+//! reconstructs the dequantizer from `(kind_id, bits)` alone.
 
 use anyhow::{bail, ensure, Result};
 
-use super::codec::EncodedGradient;
+use super::pipeline::{Direction, EncodedTensor};
+use super::quantizer;
 
-pub const MAGIC: [u8; 4] = *b"CSG1";
+pub const MAGIC: [u8; 4] = *b"CSG2";
+/// The retired version-1 magic, rejected with a dedicated message.
+pub const MAGIC_V1: [u8; 4] = *b"CSG1";
 pub const HEADER_BYTES: usize = 44;
 
-/// Serialize an encoded gradient to wire bytes.
-pub fn serialize(enc: &EncodedGradient) -> Vec<u8> {
+const FLAG_DEFLATED: u8 = 1 << 0;
+const FLAG_ROTATED: u8 = 1 << 1;
+const KNOWN_FLAGS: u8 = FLAG_DEFLATED | FLAG_ROTATED;
+
+/// Serialize an encoded tensor to wire bytes.
+pub fn serialize(enc: &EncodedTensor) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_BYTES + enc.payload.len());
     out.extend_from_slice(&MAGIC);
     out.push(enc.kind_id);
     out.push(enc.bits);
-    out.push(enc.deflated as u8);
-    out.push(0);
+    let mut flags = 0u8;
+    if enc.deflated {
+        flags |= FLAG_DEFLATED;
+    }
+    if enc.rotated {
+        flags |= FLAG_ROTATED;
+    }
+    out.push(flags);
+    out.push(enc.direction.id());
     out.extend_from_slice(&enc.n.to_le_bytes());
     out.extend_from_slice(&enc.kept.to_le_bytes());
     out.extend_from_slice(&enc.mask_seed.to_le_bytes());
@@ -47,9 +70,14 @@ pub fn serialize(enc: &EncodedGradient) -> Vec<u8> {
     out
 }
 
-/// Parse wire bytes back into an [`EncodedGradient`].
-pub fn deserialize(bytes: &[u8]) -> Result<EncodedGradient> {
-    ensure!(bytes.len() >= HEADER_BYTES, "short update: {}", bytes.len());
+/// Parse wire bytes back into an [`EncodedTensor`], rejecting malformed
+/// headers (bad magic, unknown quantizer identity, unknown flags,
+/// truncated or oversized payload).
+pub fn deserialize(bytes: &[u8]) -> Result<EncodedTensor> {
+    ensure!(bytes.len() >= HEADER_BYTES, "short frame: {}", bytes.len());
+    if bytes[0..4] == MAGIC_V1 {
+        bail!("legacy CSG1 frame: this build speaks CSG2 (same 44-byte header; see compress::wire)");
+    }
     if bytes[0..4] != MAGIC {
         bail!("bad magic {:02x?}", &bytes[0..4]);
     }
@@ -58,10 +86,12 @@ pub fn deserialize(bytes: &[u8]) -> Result<EncodedGradient> {
     let f32_at = |o: usize| f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
 
     let kind_id = bytes[4];
-    ensure!(kind_id <= 6, "unknown codec id {kind_id}");
     let bits = bytes[5];
-    ensure!(bits == 32 || (1..=16).contains(&bits), "bad bits {bits}");
+    // Validates (kind_id, bits) jointly — unknown ids and bad widths bail.
+    quantizer::validate_wire(kind_id, bits)?;
     let flags = bytes[6];
+    ensure!(flags & !KNOWN_FLAGS == 0, "unknown flags {flags:#04x}");
+    let direction = Direction::from_id(bytes[7])?;
     let n = u32_at(8);
     let kept = u32_at(12);
     ensure!(kept <= n.max(1), "kept {kept} > n {n}");
@@ -72,16 +102,18 @@ pub fn deserialize(bytes: &[u8]) -> Result<EncodedGradient> {
         bytes.len(),
         HEADER_BYTES + payload_len
     );
-    Ok(EncodedGradient {
+    Ok(EncodedTensor {
+        direction,
         kind_id,
         bits,
         n,
         kept,
         mask_seed: u64_at(16),
         rot_seed: u64_at(24),
+        rotated: flags & FLAG_ROTATED != 0,
         norm: f32_at(32),
         bound: f32_at(36),
-        deflated: flags & 1 == 1,
+        deflated: flags & FLAG_DEFLATED != 0,
         payload: bytes[HEADER_BYTES..].to_vec(),
     })
 }
@@ -89,52 +121,57 @@ pub fn deserialize(bytes: &[u8]) -> Result<EncodedGradient> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::codec::{ClientCodecState, Codec};
+    use crate::compress::pipeline::{decode, Pipeline, PipelineState};
     use crate::util::propcheck::{forall, gradient_like};
     use crate::util::rng::Pcg64;
 
-    #[test]
-    fn roundtrip_simple() {
-        let enc = EncodedGradient {
+    fn sample() -> EncodedTensor {
+        EncodedTensor {
+            direction: Direction::Downlink,
             kind_id: 1,
             bits: 2,
             n: 100,
             kept: 50,
             mask_seed: 0xDEADBEEF,
             rot_seed: 42,
+            rotated: false,
             norm: 1.5,
             bound: 0.25,
             deflated: true,
             payload: vec![1, 2, 3, 4, 5],
-        };
+        }
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let enc = sample();
         let bytes = serialize(&enc);
         assert_eq!(bytes.len(), HEADER_BYTES + 5);
         assert_eq!(deserialize(&bytes).unwrap(), enc);
     }
 
     #[test]
+    fn direction_and_rotation_flags_roundtrip() {
+        let mut enc = sample();
+        enc.direction = Direction::Uplink;
+        enc.rotated = true;
+        let back = deserialize(&serialize(&enc)).unwrap();
+        assert_eq!(back.direction, Direction::Uplink);
+        assert!(back.rotated);
+    }
+
+    #[test]
     fn wire_bytes_matches_serialized_len() {
         let mut rng = Pcg64::seeded(121);
         let g = gradient_like(&mut rng, 5000);
-        let codec = Codec::cosine(4).with_sparsify(0.25);
-        let enc = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
+        let pipe = Pipeline::cosine(4).with_sparsify(0.25);
+        let enc = pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
         assert_eq!(serialize(&enc).len(), enc.wire_bytes());
     }
 
     #[test]
     fn rejects_corruption() {
-        let enc = EncodedGradient {
-            kind_id: 1,
-            bits: 2,
-            n: 10,
-            kept: 10,
-            mask_seed: 0,
-            rot_seed: 0,
-            norm: 1.0,
-            bound: 0.0,
-            deflated: false,
-            payload: vec![0; 3],
-        };
+        let enc = sample();
         let mut bytes = serialize(&enc);
         bytes[0] = b'X'; // magic
         assert!(deserialize(&bytes).is_err());
@@ -142,24 +179,47 @@ mod tests {
         bytes[4] = 99; // kind id
         assert!(deserialize(&bytes).is_err());
         let mut bytes = serialize(&enc);
-        bytes.truncate(bytes.len() - 1); // length
+        bytes[4] = 3; // retired CSG1 linear-rotated id
         assert!(deserialize(&bytes).is_err());
-        assert!(deserialize(&bytes[..10]).is_err());
+        let mut bytes = serialize(&enc);
+        bytes[6] |= 0x80; // unknown flag
+        assert!(deserialize(&bytes).is_err());
+        let mut bytes = serialize(&enc);
+        bytes[7] = 9; // bad direction
+        assert!(deserialize(&bytes).is_err());
+        let mut bytes = serialize(&enc);
+        bytes.truncate(bytes.len() - 1); // truncated payload
+        assert!(deserialize(&bytes).is_err());
+        assert!(deserialize(&bytes[..10]).is_err()); // truncated header
+        let mut bytes = serialize(&enc);
+        bytes[40..44].copy_from_slice(&u32::MAX.to_le_bytes()); // oversized payload_len
+        assert!(deserialize(&bytes).is_err());
     }
 
     #[test]
-    fn property_roundtrip_via_codec() {
+    fn rejects_legacy_csg1_with_clear_error() {
+        let mut bytes = serialize(&sample());
+        bytes[0..4].copy_from_slice(&MAGIC_V1);
+        let err = deserialize(&bytes).unwrap_err().to_string();
+        assert!(err.contains("CSG1"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn property_roundtrip_via_pipeline() {
         forall(
             25,
             122,
-            |rng, size| { let n = size.len(rng) * 16 + 4; gradient_like(rng, n) },
+            |rng, size| {
+                let n = size.len(rng) * 16 + 4;
+                gradient_like(rng, n)
+            },
             |g| {
                 let mut rng = Pcg64::seeded(g.len() as u64);
-                let codec = Codec::cosine(2).with_sparsify(0.5);
-                let enc = codec.encode(g, &mut ClientCodecState::new(), &mut rng);
+                let pipe = Pipeline::cosine(2).with_sparsify(0.5);
+                let enc =
+                    pipe.encode(g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
                 let back = deserialize(&serialize(&enc)).unwrap();
-                back == enc
-                    && codec.decode(&back).unwrap() == codec.decode(&enc).unwrap()
+                back == enc && decode(&back).unwrap() == decode(&enc).unwrap()
             },
         );
     }

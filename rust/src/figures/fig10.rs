@@ -9,27 +9,19 @@
 use anyhow::Result;
 
 use crate::compress::cosine::{BoundMode, Rounding};
-use crate::compress::{Codec, CodecKind};
+use crate::compress::Pipeline;
 use crate::fl::FlConfig;
 use crate::runtime::Engine;
 
 use super::{run_codec_series, FigOpts};
 
-fn cell_series(keeps: &[f64], bits_list: &[u8]) -> Vec<(String, Codec)> {
-    let mut out = vec![("float32".to_string(), Codec::float32())];
+fn cell_series(keeps: &[f64], bits_list: &[u8]) -> Vec<(String, Pipeline)> {
+    let mut out = vec![("float32".to_string(), Pipeline::float32())];
     for &keep in keeps {
         for &bits in bits_list {
-            let cos = Codec::new(CodecKind::Cosine {
-                bits,
-                rounding: Rounding::Biased,
-                bound: BoundMode::ClipTopPercent(1.0),
-            })
-            .with_sparsify(keep);
-            let lin = Codec::new(CodecKind::LinearRotated {
-                bits,
-                rounding: Rounding::Unbiased,
-            })
-            .with_sparsify(keep);
+            let cos = Pipeline::cosine_with(bits, Rounding::Biased, BoundMode::ClipTopPercent(1.0))
+                .with_sparsify(keep);
+            let lin = Pipeline::linear_rotated(bits, Rounding::Unbiased).with_sparsify(keep);
             out.push((cos.name(), cos));
             out.push((lin.name(), lin));
         }

@@ -41,11 +41,11 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
             &round_cfg,
             &params,
             1e-3,
-            &crate::compress::Codec::float32(),
+            &crate::compress::Pipeline::float32(),
             false,
         )?;
         // Decode the float32 payload back to the dense delta.
-        let delta = crate::compress::Codec::float32().decode(&up.encoded)?;
+        let delta = crate::compress::decode(&up.encoded)?;
         all_delta.extend(delta);
     }
     println!("collected {} gradient values", all_delta.len());

@@ -7,22 +7,18 @@
 use anyhow::Result;
 
 use crate::compress::cosine::{BoundMode, Rounding};
-use crate::compress::{Codec, CodecKind};
+use crate::compress::Pipeline;
 use crate::fl::FlConfig;
 use crate::runtime::Engine;
 
 use super::{run_codec_series, FigOpts};
 
-pub fn bit_series(rounding: Rounding, full: bool) -> Vec<(String, Codec)> {
-    let mut out = vec![("float32".to_string(), Codec::float32())];
+pub fn bit_series(rounding: Rounding, full: bool) -> Vec<(String, Pipeline)> {
+    let mut out = vec![("float32".to_string(), Pipeline::float32())];
     let bit_list: &[u8] = if full { &[8, 4, 2] } else { &[8, 2] };
     for &bits in bit_list {
-        let cos = Codec::new(CodecKind::Cosine {
-            bits,
-            rounding,
-            bound: BoundMode::ClipTopPercent(1.0),
-        });
-        let lin = Codec::new(CodecKind::Linear { bits, rounding });
+        let cos = Pipeline::cosine_with(bits, rounding, BoundMode::ClipTopPercent(1.0));
+        let lin = Pipeline::linear(bits, rounding);
         out.push((cos.name(), cos));
         out.push((lin.name(), lin));
     }

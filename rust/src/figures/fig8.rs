@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use crate::compress::cosine::{BoundMode, Rounding};
-use crate::compress::{Codec, CodecKind};
+use crate::compress::Pipeline;
 use crate::fl::FlConfig;
 use crate::runtime::Engine;
 
@@ -29,24 +29,14 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
     base.eval_every = (rounds / 4).max(1);
 
     // (a) 2-bit comparison with rotation.
-    let cos2 = Codec::new(CodecKind::Cosine {
-        bits: 2,
-        rounding: Rounding::Biased,
-        bound: BoundMode::ClipTopPercent(1.0),
-    });
-    let lin2u = Codec::new(CodecKind::Linear {
-        bits: 2,
-        rounding: Rounding::Unbiased,
-    });
-    let lin2ur = Codec::new(CodecKind::LinearRotated {
-        bits: 2,
-        rounding: Rounding::Unbiased,
-    });
+    let cos2 = Pipeline::cosine_with(2, Rounding::Biased, BoundMode::ClipTopPercent(1.0));
+    let lin2u = Pipeline::linear(2, Rounding::Unbiased);
+    let lin2ur = Pipeline::linear_rotated(2, Rounding::Unbiased);
     let series_a = vec![
-        ("float32".to_string(), Codec::float32()),
-        (cos2.name(), cos2),
+        ("float32".to_string(), Pipeline::float32()),
+        (cos2.name(), cos2.clone()),
         (lin2u.name(), lin2u),
-        (lin2ur.name(), lin2ur),
+        (lin2ur.name(), lin2ur.clone()),
     ];
     run_codec_series(
         engine,
@@ -59,12 +49,9 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
 
     // (b) 1-bit family.
     let series_b = vec![
-        ("signSGD".to_string(), Codec::new(CodecKind::SignSgd)),
-        (
-            "signSGD+Norm".to_string(),
-            Codec::new(CodecKind::SignSgdNorm),
-        ),
-        ("EF-signSGD".to_string(), Codec::new(CodecKind::EfSignSgd)),
+        ("signSGD".to_string(), Pipeline::sign()),
+        ("signSGD+Norm".to_string(), Pipeline::sign_norm()),
+        ("EF-signSGD".to_string(), Pipeline::ef_sign()),
         ("cosine-2 @50%".to_string(), cos2.with_sparsify(0.5)),
         ("linear-2 (U,R) @50%".to_string(), lin2ur.with_sparsify(0.5)),
     ];

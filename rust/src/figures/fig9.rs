@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::compress::cosine::{BoundMode, Rounding};
-use crate::compress::{Codec, CodecKind};
+use crate::compress::Pipeline;
 use crate::fl::FlConfig;
 use crate::runtime::Engine;
 use crate::util::timer::fmt_bytes;
@@ -17,20 +17,12 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
     let mut base = FlConfig::unet().with_rounds(rounds);
     base.eval_every = (rounds / 8).max(1);
 
-    let cos = |bits| {
-        Codec::new(CodecKind::Cosine {
-            bits,
-            rounding: Rounding::Biased,
-            bound: BoundMode::ClipTopPercent(1.0),
-        })
-    };
-    let lin8ur = Codec::new(CodecKind::LinearRotated {
-        bits: 8,
-        rounding: Rounding::Unbiased,
-    });
+    let cos =
+        |bits| Pipeline::cosine_with(bits, Rounding::Biased, BoundMode::ClipTopPercent(1.0));
+    let lin8ur = Pipeline::linear_rotated(8, Rounding::Unbiased);
     let series = if opts.full {
         vec![
-            ("float32".to_string(), Codec::float32()),
+            ("float32".to_string(), Pipeline::float32()),
             ("cosine-8".to_string(), cos(8)),
             ("cosine-4".to_string(), cos(4)),
             ("cosine-2".to_string(), cos(2)),
@@ -38,7 +30,7 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
         ]
     } else {
         vec![
-            ("float32".to_string(), Codec::float32()),
+            ("float32".to_string(), Pipeline::float32()),
             ("cosine-8".to_string(), cos(8)),
             ("cosine-2".to_string(), cos(2)),
         ]

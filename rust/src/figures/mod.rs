@@ -96,22 +96,23 @@ pub fn run_figure(id: &str, engine: &mut Option<Engine>, opts: &FigOpts) -> Resu
     }
 }
 
-/// Run one FL experiment per (label, codec) pair over a shared base
-/// config, print the convergence table, dump JSON, return the histories.
+/// Run one FL experiment per (label, uplink pipeline) pair over a shared
+/// base config, print the convergence table, dump JSON, return the
+/// histories.
 pub fn run_codec_series(
     engine: &Engine,
     base: &crate::fl::FlConfig,
-    series: &[(String, crate::compress::Codec)],
+    series: &[(String, crate::compress::Pipeline)],
     title: &str,
     file: &str,
     opts: &FigOpts,
 ) -> Result<Vec<crate::fl::History>> {
     let mut histories = Vec::new();
-    for (label, codec) in series {
+    for (label, pipeline) in series {
         if opts.verbose {
             println!("[{file}] running {label} ({} rounds)...", base.rounds);
         }
-        let mut cfg = base.clone().with_codec(*codec).with_seed(opts.seed);
+        let mut cfg = base.clone().with_uplink(pipeline.clone()).with_seed(opts.seed);
         cfg.verbose = false;
         let result = crate::fl::runner::run_labeled(&cfg, engine, label)?;
         if opts.verbose {
@@ -119,9 +120,12 @@ pub fn run_codec_series(
                 "[{file}] {label}: best {:.4}, {} uplink, ratio {:.1}x, {:.1}s",
                 result.history.best_metric().unwrap_or(f64::NAN),
                 crate::util::timer::fmt_bytes(result.network.uplink_bytes),
-                result.network.uplink_compression_vs_float32(
-                    engine.manifest.model(base.task.model_key())?.param_count
-                ),
+                result
+                    .network
+                    .uplink_compression_vs_float32(
+                        engine.manifest.model(base.task.model_key())?.param_count
+                    )
+                    .unwrap_or(f64::NAN),
                 result.wall_secs,
             );
         }

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::compress::cosine::{BoundMode, Rounding};
-use crate::compress::{Codec, CodecKind};
+use crate::compress::Pipeline;
 use crate::fl::{runner, FlConfig};
 use crate::runtime::Engine;
 use crate::util::json::Json;
@@ -25,17 +25,9 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
     // E=1/C=0.5 selects 2) keeps the E=5 round affordable on one core.
     let small_clients = 4;
 
-    let cos2_5 = Codec::new(CodecKind::Cosine {
-        bits: 2,
-        rounding: Rounding::Biased,
-        bound: BoundMode::ClipTopPercent(1.0),
-    })
-    .with_sparsify(0.05);
-    let lin2_5 = Codec::new(CodecKind::LinearRotated {
-        bits: 2,
-        rounding: Rounding::Unbiased,
-    })
-    .with_sparsify(0.05);
+    let cos2_5 = Pipeline::cosine_with(2, Rounding::Biased, BoundMode::ClipTopPercent(1.0))
+        .with_sparsify(0.05);
+    let lin2_5 = Pipeline::linear_rotated(2, Rounding::Unbiased).with_sparsify(0.05);
 
     let mut sys_a = FlConfig::cifar().with_rounds(rounds);
     let mut sys_b = FlConfig::cifar_e1().with_rounds(rounds);
@@ -48,8 +40,8 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
         ("(B=50, E=5, C=0.1)", sys_a),
         ("(B=50, E=1, C=0.5)", sys_b),
     ];
-    let codecs: Vec<(&str, Codec)> = vec![
-        ("float32", Codec::float32()),
+    let codecs: Vec<(&str, Pipeline)> = vec![
+        ("float32", Pipeline::float32()),
         ("linear 2 (U,R) @5%", lin2_5),
         ("cosine 2 @5%", cos2_5),
     ];
@@ -61,7 +53,7 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
     println!("== Table 1 — cost compression ratio and accuracy ==");
     for (sys_label, base) in &systems {
         for (codec_label, codec) in &codecs {
-            let mut cfg = base.clone().with_codec(*codec).with_seed(opts.seed);
+            let mut cfg = base.clone().with_uplink(codec.clone()).with_seed(opts.seed);
             cfg.eval_every = (rounds / 2).max(1);
             if opts.verbose {
                 println!("running {sys_label} {codec_label}...");

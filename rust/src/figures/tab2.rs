@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::compress::cosine::{BoundMode, Rounding};
-use crate::compress::{Codec, CodecKind};
+use crate::compress::Pipeline;
 use crate::fl::{runner, FlConfig};
 use crate::runtime::Engine;
 use crate::util::json::Json;
@@ -44,7 +44,7 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
         println!("running f32 reference...");
     }
     let f32_result = runner::run_labeled(
-        &base.clone().with_codec(Codec::float32()).with_seed(opts.seed),
+        &base.clone().with_uplink(Pipeline::float32()).with_seed(opts.seed),
         engine,
         "f32",
     )?;
@@ -65,13 +65,9 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
             } else {
                 BoundMode::ClipTopPercent(clip)
             };
-            let codec = Codec::new(CodecKind::Cosine {
-                bits: *bits,
-                rounding: Rounding::Biased,
-                bound,
-            })
-            .with_sparsify(*keep);
-            let cfg = base.clone().with_codec(codec).with_seed(opts.seed);
+            let codec = Pipeline::cosine_with(*bits, Rounding::Biased, bound)
+                .with_sparsify(*keep);
+            let cfg = base.clone().with_uplink(codec).with_seed(opts.seed);
             let result = runner::run_labeled(&cfg, engine, &format!("{label} clip{clip}"))?;
             let acc = result.history.best_metric().unwrap_or(f64::NAN);
             print!(" {acc:>7.4}");

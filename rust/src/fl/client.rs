@@ -1,21 +1,64 @@
 //! A federated worker (Algorithm 1 "Worker"): runs E local epochs through
 //! the AOT round artifact, forms `g = M_in − M*`, and compresses it with
-//! the experiment codec. Per-client state (EF residual, RNG lane, cached
-//! local data) lives here for the life of the run.
+//! the experiment's uplink [`Pipeline`]. Per-client state (EF residual,
+//! RNG lane, cached local data) lives here for the life of the run.
+//!
+//! [`ModelReplica`] is the client side of the round-trip scheme: the
+//! decoded model copy a client maintains by applying each round's
+//! dequantized downlink delta.
 
 use anyhow::Result;
 
-use crate::compress::{codec::EncodedGradient, ClientCodecState, Codec};
+use crate::compress::pipeline::{Direction, EncodedTensor, Pipeline, PipelineState};
+use crate::compress::quantizer::Quantizer;
+use crate::compress::wire;
 use crate::data::partition::ClientShard;
 use crate::data::synth::SynthTask;
 use crate::runtime::manifest::RoundCfg;
 use crate::runtime::Engine;
 use crate::util::rng::Pcg64;
 
+/// The client-side decoded model replica (Delta downlink mode).
+///
+/// Starts from the shared initialization (Algorithm 1's common `M^0`) and
+/// advances by the dequantized delta of every broadcast frame. In the
+/// simulator one replica is shared by the whole fleet — every client
+/// receives every broadcast, so all replicas are bit-identical.
+#[derive(Debug, Clone)]
+pub struct ModelReplica {
+    pub params: Vec<f32>,
+}
+
+impl ModelReplica {
+    pub fn new(init: Vec<f32>) -> ModelReplica {
+        ModelReplica { params: init }
+    }
+
+    /// Apply one downlink frame: deserialize, decode, add the delta.
+    pub fn apply_wire(&mut self, frame: &[u8]) -> Result<()> {
+        let enc = wire::deserialize(frame)?;
+        anyhow::ensure!(
+            enc.direction == Direction::Downlink,
+            "model replica received a non-downlink frame"
+        );
+        let delta = crate::compress::pipeline::decode(&enc)?;
+        anyhow::ensure!(
+            delta.len() == self.params.len(),
+            "delta length {} != model {}",
+            delta.len(),
+            self.params.len()
+        );
+        for (p, d) in self.params.iter_mut().zip(&delta) {
+            *p += d;
+        }
+        Ok(())
+    }
+}
+
 /// One client.
 pub struct Client {
     pub shard: ClientShard,
-    pub codec_state: ClientCodecState,
+    pub state: PipelineState,
     rng: Pcg64,
     /// Materialized local data, generated lazily on first selection.
     cache: Option<(Vec<f32>, Vec<i32>)>,
@@ -23,7 +66,7 @@ pub struct Client {
 
 /// The result of one local round.
 pub struct LocalUpdate {
-    pub encoded: EncodedGradient,
+    pub encoded: EncodedTensor,
     pub num_examples: u32,
     pub train_loss: f32,
 }
@@ -33,7 +76,7 @@ impl Client {
         let rng = Pcg64::new(run_seed, 0xC11E0000 | shard.client_id as u64);
         Client {
             shard,
-            codec_state: ClientCodecState::new(),
+            state: PipelineState::new(),
             rng,
             cache: None,
         }
@@ -53,6 +96,7 @@ impl Client {
     }
 
     /// Run one local round and compress the update.
+    #[allow(clippy::too_many_arguments)]
     pub fn run_round<T: SynthTask>(
         &mut self,
         engine: &Engine,
@@ -61,7 +105,7 @@ impl Client {
         cfg: &RoundCfg,
         global_params: &[f32],
         lr: f32,
-        codec: &Codec,
+        uplink: &Pipeline,
         use_kernel_quantizer: bool,
     ) -> Result<LocalUpdate> {
         if self.cache.is_none() {
@@ -73,9 +117,9 @@ impl Client {
             engine.local_round(artifact, global_params, x, y, perms, lr)?;
 
         let encoded = if use_kernel_quantizer {
-            self.encode_via_kernel(engine, &delta, codec)?
+            self.encode_via_kernel(engine, &delta, uplink)?
         } else {
-            codec.encode(&delta, &mut self.codec_state, &mut self.rng)
+            uplink.encode(&delta, Direction::Uplink, &mut self.state, &mut self.rng)
         };
         Ok(LocalUpdate {
             encoded,
@@ -91,25 +135,26 @@ impl Client {
         &mut self,
         engine: &Engine,
         delta: &[f32],
-        codec: &Codec,
-    ) -> Result<EncodedGradient> {
-        use crate::compress::cosine::{BoundMode, Rounding};
-        use crate::compress::{bitpack, deflate, CodecKind};
-        let (bits, rounding, bound_mode) = match codec.kind {
-            CodecKind::Cosine {
-                bits,
-                rounding,
-                bound,
-            } => (bits, rounding, bound),
-            _ => anyhow::bail!("kernel quantizer only supports the cosine codec"),
+        uplink: &Pipeline,
+    ) -> Result<EncodedTensor> {
+        use crate::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
+        use crate::compress::{bitpack, deflate};
+        let cq = match uplink
+            .quantizer()
+            .as_any()
+            .downcast_ref::<CosineQuantizer>()
+        {
+            Some(q) => q,
+            None => anyhow::bail!("kernel quantizer only supports the cosine scheme"),
         };
         anyhow::ensure!(
-            codec.keep_frac >= 1.0,
-            "kernel quantizer path does not sparsify"
+            uplink.keep_frac >= 1.0 && !uplink.rotate && !uplink.error_feedback,
+            "kernel quantizer path supports only the dense unrotated pipeline"
         );
+        let (bits, rounding, bound_mode) = (cq.bits, cq.rounding, cq.bound);
         let norm = crate::util::stats::l2_norm(delta) as f32;
         if norm <= 0.0 {
-            return Ok(codec.encode(delta, &mut self.codec_state, &mut self.rng));
+            return Ok(uplink.encode(delta, Direction::Uplink, &mut self.state, &mut self.rng));
         }
         // Bound from the same definitions as the native quantizer
         // (CosineQuantizer::compute_bound, §3).
@@ -138,8 +183,8 @@ impl Client {
         };
         let codes = engine.kernel_quantize(bits, delta, norm, bound, &u)?;
         let packed = bitpack::pack(&codes, bits);
-        let (payload, deflated) = if codec.deflate {
-            let c = deflate::deflate(&packed, codec.level);
+        let (payload, deflated) = if uplink.deflate {
+            let c = deflate::deflate(&packed, uplink.level);
             if c.len() < packed.len() {
                 (c, true)
             } else {
@@ -148,13 +193,15 @@ impl Client {
         } else {
             (packed, false)
         };
-        Ok(EncodedGradient {
-            kind_id: codec.kind.id(),
+        Ok(EncodedTensor {
+            direction: Direction::Uplink,
+            kind_id: uplink.quantizer().id(),
             bits,
             n: delta.len() as u32,
             kept: delta.len() as u32,
             mask_seed: 0,
             rot_seed: 0,
+            rotated: false,
             norm,
             bound,
             deflated,
@@ -209,5 +256,15 @@ mod tests {
         // Same client id + seed → same stream.
         let mut a2 = Client::new(shards[0].clone(), 7);
         assert_eq!(Client::new(shards[0].clone(), 7).perms(&cfg), a2.perms(&cfg));
+    }
+
+    #[test]
+    fn replica_rejects_uplink_frames() {
+        let pipe = Pipeline::cosine(4);
+        let mut rng = Pcg64::seeded(5);
+        let g = crate::util::propcheck::gradient_like(&mut rng, 32);
+        let enc = pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+        let mut replica = ModelReplica::new(vec![0.0; 32]);
+        assert!(replica.apply_wire(&wire::serialize(&enc)).is_err());
     }
 }

@@ -1,14 +1,15 @@
 //! Experiment configuration: one [`FlConfig`] fully describes a federated
-//! run (task, federation shape, codec, schedules, seed). Constructors
-//! mirror the paper's §5.1 setups; everything is overridable (CLI flags /
-//! JSON configs map onto these fields).
+//! run (task, federation shape, uplink/downlink pipelines, schedules,
+//! seed). Constructors mirror the paper's §5.1 setups; everything is
+//! overridable (CLI flags / JSON configs map onto these fields).
 
 use anyhow::{bail, Result};
 
-use crate::compress::Codec;
+use crate::compress::Pipeline;
 use crate::util::json::Json;
 
 use super::schedule::LrSchedule;
+use super::server::Downlink;
 
 /// Which workload (and data distribution) to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,8 +62,11 @@ pub struct FlConfig {
     pub round_artifact: String,
     /// Manifest round-config key (n_data/batch/epochs).
     pub round_cfg_key: String,
-    /// Gradient compression scheme.
-    pub codec: Codec,
+    /// Uplink (gradient) compression pipeline.
+    pub uplink: Pipeline,
+    /// Downlink (model broadcast) policy; [`Downlink::Float32Model`]
+    /// reproduces the paper's uncompressed-broadcast cost accounting.
+    pub downlink: Downlink,
     /// Server learning rate η_s (paper: 1 everywhere).
     pub eta_s: f32,
     /// Client learning-rate schedule η_c.
@@ -71,7 +75,7 @@ pub struct FlConfig {
     /// Evaluate every k rounds (0 = only final).
     pub eval_every: usize,
     /// Route quantization through the Pallas kernel artifacts instead of
-    /// the native Rust codec (demonstrates the L1 path; slower on CPU).
+    /// the native Rust pipeline (demonstrates the L1 path; slower on CPU).
     pub use_kernel_quantizer: bool,
     pub verbose: bool,
 }
@@ -92,7 +96,8 @@ impl FlConfig {
             participation: 0.1,
             round_artifact: "mnist_round".into(),
             round_cfg_key: "mnist".into(),
-            codec: Codec::float32(),
+            uplink: Pipeline::float32(),
+            downlink: Downlink::Float32Model,
             eta_s: 1.0,
             client_lr: if non_iid {
                 LrSchedule::Cosine {
@@ -119,7 +124,8 @@ impl FlConfig {
             participation: 0.1,
             round_artifact: "cifar_round".into(),
             round_cfg_key: "cifar".into(),
-            codec: Codec::float32(),
+            uplink: Pipeline::float32(),
+            downlink: Downlink::Float32Model,
             eta_s: 1.0,
             client_lr: LrSchedule::Cosine {
                 base: 0.1,
@@ -156,7 +162,8 @@ impl FlConfig {
             participation: 1.0,
             round_artifact: "unet_round".into(),
             round_cfg_key: "unet".into(),
-            codec: Codec::float32(),
+            uplink: Pipeline::float32(),
+            downlink: Downlink::Float32Model,
             eta_s: 1.0,
             client_lr: LrSchedule::CosineWarmRestarts {
                 base: 1e-3,
@@ -170,8 +177,16 @@ impl FlConfig {
         }
     }
 
-    pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.codec = codec;
+    /// Set the uplink (gradient) compression pipeline.
+    pub fn with_uplink(mut self, uplink: Pipeline) -> Self {
+        self.uplink = uplink;
+        self
+    }
+
+    /// Broadcast quantized model deltas through `pipeline` (the paper's
+    /// round-trip scheme) instead of the raw float32 model.
+    pub fn with_downlink(mut self, pipeline: Pipeline) -> Self {
+        self.downlink = Downlink::Delta(pipeline);
         self
     }
 
@@ -211,7 +226,8 @@ impl FlConfig {
             .set("rounds", self.rounds)
             .set("n_clients", self.n_clients)
             .set("participation", self.participation)
-            .set("codec", self.codec.name())
+            .set("uplink", self.uplink.name())
+            .set("downlink", self.downlink.name())
             .set("seed", self.seed)
             .set("round_artifact", self.round_artifact.as_str())
     }
@@ -226,6 +242,7 @@ mod tests {
         let m = FlConfig::mnist(true);
         assert_eq!(m.rounds, 500);
         assert_eq!(m.clients_per_round(), 10);
+        assert!(matches!(m.downlink, Downlink::Float32Model));
         let mi = FlConfig::mnist(false);
         assert_eq!(mi.rounds, 50);
         let c = FlConfig::cifar();
@@ -251,6 +268,18 @@ mod tests {
                 assert_eq!(restarts, vec![10, 30]);
             }
             _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn round_trip_config_builders() {
+        let cfg = FlConfig::mnist(false)
+            .with_uplink(Pipeline::cosine(4))
+            .with_downlink(Pipeline::cosine(8));
+        assert_eq!(cfg.uplink.name(), "cosine-4 +deflate");
+        match &cfg.downlink {
+            Downlink::Delta(p) => assert_eq!(p.name(), "cosine-8 +deflate"),
+            other => panic!("unexpected downlink {other:?}"),
         }
     }
 

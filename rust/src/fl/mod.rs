@@ -1,11 +1,14 @@
 //! The federated-learning coordinator (Layer 3).
 //!
 //! Implements FedAvg (McMahan et al. [25]) exactly as the paper's
-//! Algorithm 1: per round, a random `C` fraction of clients runs `E` local
-//! epochs (through the AOT round artifacts — [`crate::runtime::Engine`]),
-//! compresses `g = M_in − M*` with a [`crate::compress::Codec`], and the
-//! server decompresses and aggregates with Eq. (1). Every byte that moves
-//! is metered by [`network::NetworkLedger`].
+//! Algorithm 1, in both directions: per round the server broadcasts the
+//! model (raw float32, or a quantized delta through a downlink
+//! [`crate::compress::Pipeline`] — the paper's round-trip scheme), a
+//! random `C` fraction of clients runs `E` local epochs (through the AOT
+//! round artifacts — [`crate::runtime::Engine`]) and compresses
+//! `g = M_in − M*` with the uplink pipeline, and the server decodes the
+//! self-describing frames and aggregates with Eq. (1). Every byte that
+//! moves is metered by [`network::NetworkLedger`].
 
 pub mod centralized;
 pub mod client;
@@ -16,8 +19,10 @@ pub mod runner;
 pub mod schedule;
 pub mod server;
 
+pub use client::ModelReplica;
 pub use config::{FlConfig, Task};
 pub use metrics::{History, RoundRecord};
 pub use network::NetworkLedger;
 pub use runner::{run, RunResult};
 pub use schedule::LrSchedule;
+pub use server::{Broadcast, Downlink, Server};

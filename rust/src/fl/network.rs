@@ -1,7 +1,8 @@
 //! Simulated network: a byte-exact ledger of everything that moves between
 //! clients and server. The paper's cost tables (Table 1, the x-axes of
-//! Figs. 9–10) are uplink gradient bytes; we meter downlink (model
-//! broadcast) too for completeness.
+//! Figs. 9–10) are uplink gradient bytes; the downlink (model broadcast)
+//! is metered symmetrically so round-trip compression figures are
+//! reproducible.
 
 use crate::util::timer::fmt_bytes;
 
@@ -41,13 +42,16 @@ impl NetworkLedger {
     }
 
     /// Compression ratio of total uplink vs a float32 baseline that would
-    /// have sent `param_count` f32s per message.
-    pub fn uplink_compression_vs_float32(&self, param_count: usize) -> f64 {
-        if self.uplink_bytes == 0 {
-            return 1.0;
-        }
-        let baseline = self.uplink_messages as f64 * param_count as f64 * 4.0;
-        baseline / self.uplink_bytes as f64
+    /// have sent `param_count` f32s per message. `None` until traffic has
+    /// been recorded — there is no ratio of nothing.
+    pub fn uplink_compression_vs_float32(&self, param_count: usize) -> Option<f64> {
+        ratio_vs_float32(self.uplink_bytes, self.uplink_messages, param_count)
+    }
+
+    /// Symmetric downlink ratio: total broadcast bytes vs `4·param_count`
+    /// per message. `None` until traffic has been recorded.
+    pub fn downlink_compression_vs_float32(&self, param_count: usize) -> Option<f64> {
+        ratio_vs_float32(self.downlink_bytes, self.downlink_messages, param_count)
     }
 
     pub fn summary(&self) -> String {
@@ -60,6 +64,20 @@ impl NetworkLedger {
             self.downlink_messages,
         )
     }
+}
+
+/// Display form of an optional compression ratio: `"12.3x"`, or `"-"`
+/// when no traffic has been recorded yet.
+pub fn fmt_ratio(r: Option<f64>) -> String {
+    r.map(|x| format!("{x:.1}x")).unwrap_or_else(|| "-".into())
+}
+
+fn ratio_vs_float32(bytes: u64, messages: u64, param_count: usize) -> Option<f64> {
+    if bytes == 0 || messages == 0 {
+        return None;
+    }
+    let baseline = messages as f64 * param_count as f64 * 4.0;
+    Some(baseline / bytes as f64)
 }
 
 #[cfg(test)]
@@ -85,7 +103,30 @@ mod tests {
         // baseline = 2 * 40_000 bytes -> ratio 40.
         n.record_uplink(1000);
         n.record_uplink(1000);
-        assert!((n.uplink_compression_vs_float32(10_000) - 40.0).abs() < 1e-9);
-        assert_eq!(NetworkLedger::new().uplink_compression_vs_float32(10), 1.0);
+        assert!((n.uplink_compression_vs_float32(10_000).unwrap() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratio_display_form() {
+        assert_eq!(fmt_ratio(None), "-");
+        assert_eq!(fmt_ratio(Some(12.34)), "12.3x");
+    }
+
+    #[test]
+    fn no_traffic_means_no_ratio() {
+        // The old API returned a misleading 1.0 here.
+        let n = NetworkLedger::new();
+        assert_eq!(n.uplink_compression_vs_float32(10), None);
+        assert_eq!(n.downlink_compression_vs_float32(10), None);
+    }
+
+    #[test]
+    fn downlink_ratio_is_symmetric() {
+        let mut n = NetworkLedger::new();
+        n.record_downlink(4000); // one float32 broadcast of 1000 params
+        assert!((n.downlink_compression_vs_float32(1000).unwrap() - 1.0).abs() < 1e-9);
+        n.record_downlink(400); // one 10x-compressed delta
+        let r = n.downlink_compression_vs_float32(1000).unwrap();
+        assert!((r - 8000.0 / 4400.0).abs() < 1e-9);
     }
 }

@@ -1,6 +1,19 @@
-//! The experiment loop: wires clients, server, codec, network and engine
-//! into the full FedAvg round structure of Algorithm 1 and produces a
-//! [`History`].
+//! The experiment loop: wires clients, server, pipelines, network and
+//! engine into the full FedAvg round structure of Algorithm 1 and produces
+//! a [`History`].
+//!
+//! Round structure (round-trip aware):
+//! 1. the server produces the round's broadcast ([`Server::broadcast`]) —
+//!    raw float32 model, or a quantized delta frame in Delta mode;
+//! 2. the fleet's [`ModelReplica`] applies the frame through the real
+//!    wire-decode path. Downlink metering follows what each mode truly
+//!    costs: a delta frame must reach EVERY client (a missed delta breaks
+//!    the replica forever), so the whole fleet is metered; the raw model
+//!    broadcast is stateless, so only the selected clients who train this
+//!    round are metered — byte-identical to the CSG1-era accounting;
+//! 3. selected clients train from the replica and upload compressed
+//!    updates; the server decodes the self-describing frames and
+//!    aggregates (Eq. 1).
 
 use anyhow::Result;
 
@@ -12,7 +25,7 @@ use crate::runtime::Engine;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
-use super::client::Client;
+use super::client::{Client, ModelReplica};
 use super::config::{FlConfig, Task};
 use super::metrics::{History, RoundRecord};
 use super::network::NetworkLedger;
@@ -45,7 +58,12 @@ fn run_task<T: SynthTask>(
         .into_iter()
         .map(|s| Client::new(s, cfg.seed))
         .collect();
-    let mut server = Server::new(init_params(&model, cfg.seed), cfg.eta_s, cfg.codec);
+    let init = init_params(&model, cfg.seed);
+    let mut server = Server::new(init.clone(), cfg.eta_s)
+        .with_downlink(cfg.downlink.clone(), cfg.seed);
+    // All clients share the initialization (Algorithm 1's common M^0) and
+    // receive every broadcast, so one replica stands in for the fleet.
+    let mut fleet_model = ModelReplica::new(init);
     let mut network = NetworkLedger::new();
     let mut selector = Pcg64::new(cfg.seed, 0x5E1EC7);
     let mut history = History::new(label);
@@ -53,18 +71,40 @@ fn run_task<T: SynthTask>(
     let per_round = cfg.clients_per_round();
     for t in 0..cfg.rounds {
         let lr = cfg.client_lr.at(t) as f32;
+        let broadcast = server.broadcast()?;
+        let receivers = match &broadcast.wire {
+            // Round-trip mode: clients decode the delta frame themselves.
+            // EVERY client must receive every delta frame to stay in sync,
+            // so the whole fleet's downlink is metered.
+            Some(frame) => {
+                fleet_model.apply_wire(frame)?;
+                clients.len()
+            }
+            // Legacy mode: the broadcast IS the raw model; only selected
+            // clients need it (stateless), matching the CSG1 accounting,
+            // and they train straight from the server's params (no copy).
+            None => per_round,
+        };
+        let delta_mode = broadcast.wire.is_some();
+        for _ in 0..receivers {
+            network.record_downlink(broadcast.bytes);
+        }
         let selected = selector.sample_indices(clients.len(), per_round);
         let mut loss_sum = 0.0f64;
         for &ci in &selected {
-            network.record_downlink(server.broadcast_bytes());
+            let global_model: &[f32] = if delta_mode {
+                &fleet_model.params
+            } else {
+                &server.params
+            };
             let update = clients[ci].run_round(
                 engine,
                 task,
                 &cfg.round_artifact,
                 &round_cfg,
-                &server.params,
+                global_model,
                 lr,
-                &cfg.codec,
+                &cfg.uplink,
                 cfg.use_kernel_quantizer,
             )?;
             let bytes = wire::serialize(&update.encoded);
@@ -109,11 +149,12 @@ fn run_task<T: SynthTask>(
         if cfg.verbose {
             let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
             println!(
-                "[{label}] round {:>4}/{} loss {:.4} metric {m} uplink {}",
+                "[{label}] round {:>4}/{} loss {:.4} metric {m} uplink {} downlink {}",
                 t + 1,
                 cfg.rounds,
                 rec.train_loss,
-                crate::util::timer::fmt_bytes(network.uplink_bytes)
+                crate::util::timer::fmt_bytes(network.uplink_bytes),
+                crate::util::timer::fmt_bytes(network.downlink_bytes)
             );
         }
         history.push(rec);
@@ -129,7 +170,7 @@ fn run_task<T: SynthTask>(
 
 /// Run a federated experiment to completion.
 pub fn run(cfg: &FlConfig, engine: &Engine) -> Result<RunResult> {
-    run_labeled(cfg, engine, &cfg.codec.name())
+    run_labeled(cfg, engine, &cfg.uplink.name())
 }
 
 /// Run with an explicit series label (figure harnesses).

@@ -1,19 +1,72 @@
-//! FedAvg server: holds the global model and applies Eq. (1):
+//! FedAvg server: holds the global model, applies Eq. (1):
 //!
 //! `M^{t+1} = M^t − η_s · Σ_i ∇M_i · N_i / Σ_i N_i`
 //!
 //! where `∇M_i` is client i's *decoded* update (`g = M_in − M*`) and `N_i`
-//! its local example count.
+//! its local example count — and produces the per-round model broadcast.
+//!
+//! ## Downlink modes
+//!
+//! * [`Downlink::Float32Model`] (default) — the raw float32 model, metered
+//!   at exactly `4·n` bytes per receiving client: byte-identical to the
+//!   CSG1-era cost accounting.
+//! * [`Downlink::Delta`] — the paper's *round-trip* scheme: the server
+//!   encodes the model delta `Δ = M^{t+1} − M^t` through a downlink
+//!   [`Pipeline`] and advances an internal replica by the **decoded**
+//!   delta, so server and clients agree bit-exactly on the degraded model
+//!   the fleet trains from. The replica starts at the initial model (the
+//!   shared-initialization assumption of Algorithm 1), so round 0
+//!   broadcasts a zero delta.
+//!
+//! Uplink decoding is self-describing (CSG2): the server needs no codec
+//! configuration to receive updates.
 
 use anyhow::Result;
 
-use crate::compress::{codec::EncodedGradient, wire, Codec};
+use crate::compress::pipeline::{decode, Direction, EncodedTensor, Pipeline, PipelineState};
+use crate::compress::wire;
+use crate::util::rng::Pcg64;
+
+/// Server → client compression policy.
+#[derive(Debug, Clone)]
+pub enum Downlink {
+    /// Legacy raw float32 model broadcast (`4·n` bytes, no framing).
+    Float32Model,
+    /// Quantized model delta through a downlink pipeline (CSG2 frame).
+    Delta(Pipeline),
+}
+
+impl Downlink {
+    /// Human label for logs / results files.
+    pub fn name(&self) -> String {
+        match self {
+            Downlink::Float32Model => "float32 model".into(),
+            Downlink::Delta(p) => format!("Δ {}", p.name()),
+        }
+    }
+}
+
+/// One round's model broadcast. The broadcast *content* is not duplicated
+/// here: in legacy mode it is exactly [`Server::params`]; in Delta mode
+/// clients reconstruct it by decoding `wire`, and the server's own copy is
+/// readable via [`Server::replica`].
+pub struct Broadcast {
+    /// The CSG2 frame (None for the raw float32 legacy broadcast).
+    pub wire: Option<Vec<u8>>,
+    /// Bytes on the wire per receiving client.
+    pub bytes: usize,
+}
 
 /// The global model + aggregation state.
 pub struct Server {
     pub params: Vec<f32>,
     pub eta_s: f32,
-    codec: Codec,
+    downlink: Downlink,
+    /// The model as the client fleet currently holds it (Delta mode).
+    replica: Vec<f32>,
+    /// Downlink pipeline memory (EF residual, if enabled) + seed lane.
+    state: PipelineState,
+    rng: Pcg64,
     /// Weighted-sum accumulator for the current round.
     acc: Vec<f64>,
     weight_sum: f64,
@@ -21,29 +74,43 @@ pub struct Server {
 }
 
 impl Server {
-    pub fn new(params: Vec<f32>, eta_s: f32, codec: Codec) -> Server {
+    pub fn new(params: Vec<f32>, eta_s: f32) -> Server {
         let n = params.len();
         Server {
+            replica: params.clone(),
             params,
             eta_s,
-            codec,
+            downlink: Downlink::Float32Model,
+            state: PipelineState::new(),
+            rng: Pcg64::new(0, 0xD0_417),
             acc: vec![0.0; n],
             weight_sum: 0.0,
             updates_this_round: 0,
         }
     }
 
-    /// Receive one client's wire bytes: deserialize, Deflate-decompress,
-    /// dequantize, scatter, and fold into the weighted sum
-    /// (Algorithm 1 lines 6–7).
+    /// Configure the downlink policy; `seed` drives the downlink
+    /// pipeline's stochastic stages (mask/rotation seeds, rounding).
+    pub fn with_downlink(mut self, downlink: Downlink, seed: u64) -> Server {
+        self.downlink = downlink;
+        self.rng = Pcg64::new(seed, 0xD0_417);
+        self
+    }
+
+    /// Receive one client's wire bytes: deserialize, inflate, dequantize,
+    /// scatter, and fold into the weighted sum (Algorithm 1 lines 6–7).
     pub fn receive_update(&mut self, wire_bytes: &[u8], num_examples: u32) -> Result<()> {
         let enc = wire::deserialize(wire_bytes)?;
+        anyhow::ensure!(
+            enc.direction == Direction::Uplink,
+            "server received a non-uplink frame"
+        );
         self.receive_decoded(&enc, num_examples)
     }
 
-    /// Same, for an already-parsed [`EncodedGradient`].
-    pub fn receive_decoded(&mut self, enc: &EncodedGradient, num_examples: u32) -> Result<()> {
-        let delta = self.codec.decode(enc)?;
+    /// Same, for an already-parsed [`EncodedTensor`].
+    pub fn receive_decoded(&mut self, enc: &EncodedTensor, num_examples: u32) -> Result<()> {
+        let delta = decode(enc)?;
         anyhow::ensure!(
             delta.len() == self.params.len(),
             "update length {} != model {}",
@@ -76,28 +143,71 @@ impl Server {
         n_updates
     }
 
-    /// Serialized model size for downlink accounting (float32 broadcast).
-    pub fn broadcast_bytes(&self) -> usize {
-        self.params.len() * 4
+    /// The model as the client fleet holds it (Delta mode): advances by
+    /// the decoded delta on every [`Server::broadcast`]. In legacy mode it
+    /// stays at the shared initialization and is unused.
+    pub fn replica(&self) -> &[f32] {
+        &self.replica
+    }
+
+    /// Produce this round's model broadcast (call once per round, before
+    /// the selected clients train).
+    pub fn broadcast(&mut self) -> Result<Broadcast> {
+        match &self.downlink {
+            Downlink::Float32Model => Ok(Broadcast {
+                wire: None,
+                bytes: self.params.len() * 4,
+            }),
+            Downlink::Delta(pipe) => {
+                let delta: Vec<f32> = self
+                    .params
+                    .iter()
+                    .zip(&self.replica)
+                    .map(|(&p, &r)| p - r)
+                    .collect();
+                let enc = pipe.encode(&delta, Direction::Downlink, &mut self.state, &mut self.rng);
+                let frame = wire::serialize(&enc);
+                // Advance the reference replica by the *decoded* delta so
+                // the server models exactly what clients reconstruct; the
+                // next round's delta then carries this round's
+                // quantization error (implicit downlink error feedback).
+                let decoded = decode(&enc)?;
+                for (r, d) in self.replica.iter_mut().zip(&decoded) {
+                    *r += d;
+                }
+                Ok(Broadcast {
+                    bytes: frame.len(),
+                    wire: Some(frame),
+                })
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::codec::ClientCodecState;
-    use crate::util::rng::Pcg64;
+    use crate::fl::client::ModelReplica;
+    use crate::util::propcheck::gradient_like;
+    use crate::util::stats::l2_norm;
+
+    fn encode_update(pipe: &Pipeline, g: &[f32], seed: u64) -> EncodedTensor {
+        pipe.encode(
+            g,
+            Direction::Uplink,
+            &mut PipelineState::new(),
+            &mut Pcg64::seeded(seed),
+        )
+    }
 
     #[test]
     fn aggregation_is_weighted_mean() {
         // Two float32 clients with weights 1 and 3: the update is the
         // weighted mean, scaled by eta_s.
-        let codec = Codec::float32();
-        let mut server = Server::new(vec![1.0, 1.0], 2.0, codec);
-        let mut rng = Pcg64::seeded(1);
-        let mut st = ClientCodecState::new();
-        let e1 = codec.encode(&[1.0, 0.0], &mut st, &mut rng);
-        let e2 = codec.encode(&[0.0, 1.0], &mut st, &mut rng);
+        let pipe = Pipeline::float32();
+        let mut server = Server::new(vec![1.0, 1.0], 2.0);
+        let e1 = encode_update(&pipe, &[1.0, 0.0], 1);
+        let e2 = encode_update(&pipe, &[0.0, 1.0], 2);
         server.receive_decoded(&e1, 1).unwrap();
         server.receive_decoded(&e2, 3).unwrap();
         assert_eq!(server.finish_round(), 2);
@@ -108,17 +218,17 @@ mod tests {
 
     #[test]
     fn wire_path_equals_decoded_path() {
-        let codec = Codec::cosine(8);
+        let pipe = Pipeline::cosine(8);
         let mut rng = Pcg64::seeded(2);
-        let g = crate::util::propcheck::gradient_like(&mut rng, 500);
-        let enc = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
+        let g = gradient_like(&mut rng, 500);
+        let enc = pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
         let bytes = wire::serialize(&enc);
 
-        let mut s1 = Server::new(vec![0.0; 500], 1.0, codec);
+        let mut s1 = Server::new(vec![0.0; 500], 1.0);
         s1.receive_update(&bytes, 10).unwrap();
         s1.finish_round();
 
-        let mut s2 = Server::new(vec![0.0; 500], 1.0, codec);
+        let mut s2 = Server::new(vec![0.0; 500], 1.0);
         s2.receive_decoded(&enc, 10).unwrap();
         s2.finish_round();
 
@@ -126,19 +236,27 @@ mod tests {
     }
 
     #[test]
+    fn rejects_downlink_frames_on_the_uplink() {
+        let pipe = Pipeline::cosine(4);
+        let mut rng = Pcg64::seeded(3);
+        let g = gradient_like(&mut rng, 64);
+        let enc = pipe.encode(&g, Direction::Downlink, &mut PipelineState::new(), &mut rng);
+        let mut server = Server::new(vec![0.0; 64], 1.0);
+        assert!(server.receive_update(&wire::serialize(&enc), 1).is_err());
+    }
+
+    #[test]
     fn empty_round_is_noop() {
-        let mut server = Server::new(vec![3.0; 4], 1.0, Codec::float32());
+        let mut server = Server::new(vec![3.0; 4], 1.0);
         assert_eq!(server.finish_round(), 0);
         assert_eq!(server.params, vec![3.0; 4]);
     }
 
     #[test]
     fn accumulator_resets_between_rounds() {
-        let codec = Codec::float32();
-        let mut server = Server::new(vec![0.0; 2], 1.0, codec);
-        let mut rng = Pcg64::seeded(3);
-        let mut st = ClientCodecState::new();
-        let e = codec.encode(&[1.0, 1.0], &mut st, &mut rng);
+        let pipe = Pipeline::float32();
+        let mut server = Server::new(vec![0.0; 2], 1.0);
+        let e = encode_update(&pipe, &[1.0, 1.0], 3);
         server.receive_decoded(&e, 1).unwrap();
         server.finish_round();
         let after_first = server.params.clone();
@@ -146,5 +264,80 @@ mod tests {
         server.finish_round();
         // Second round applies exactly one more unit step.
         assert!((server.params[0] - (after_first[0] - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn float32_broadcast_matches_csg1_accounting() {
+        let mut server = Server::new(vec![0.5; 321], 1.0);
+        let b = server.broadcast().unwrap();
+        assert!(b.wire.is_none());
+        assert_eq!(b.bytes, 321 * 4); // exactly the CSG1-era 4·n bytes
+    }
+
+    #[test]
+    fn delta_broadcast_roundtrips_through_client_replica() {
+        let mut rng = Pcg64::seeded(9);
+        let init = gradient_like(&mut rng, 2000);
+        let mut server = Server::new(init.clone(), 1.0)
+            .with_downlink(Downlink::Delta(Pipeline::cosine(8)), 7);
+        let mut fleet = ModelReplica::new(init);
+
+        // Round 0: params == replica, so the delta is zero and tiny.
+        let b0 = server.broadcast().unwrap();
+        fleet.apply_wire(b0.wire.as_ref().unwrap()).unwrap();
+        assert_eq!(fleet.params.as_slice(), server.replica());
+
+        // Simulate two rounds of training drift + broadcast.
+        for round in 0..2u64 {
+            let drift = gradient_like(&mut Pcg64::seeded(100 + round), 2000);
+            for (p, d) in server.params.iter_mut().zip(&drift) {
+                *p -= 0.1 * d;
+            }
+            let b = server.broadcast().unwrap();
+            // The quantized delta frame is strictly below the float32 cost.
+            assert!(b.bytes < 2000 * 4, "delta frame {} bytes", b.bytes);
+            fleet.apply_wire(b.wire.as_ref().unwrap()).unwrap();
+            // Client replica and server reference replica agree bit-exactly.
+            assert_eq!(fleet.params.as_slice(), server.replica());
+        }
+
+        // The replica tracks the true model within quantization error.
+        let err: f64 = server
+            .params
+            .iter()
+            .zip(&fleet.params)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let scale = l2_norm(&server.params).max(1e-9);
+        assert!(err / scale < 0.1, "replica drift {}", err / scale);
+    }
+
+    #[test]
+    fn replica_error_feeds_back_into_next_delta() {
+        // The delta is taken against the *decoded* replica, so a second
+        // broadcast with unchanged params re-sends the residual error and
+        // the replica converges toward the true model.
+        let mut rng = Pcg64::seeded(11);
+        let init = vec![0.0f32; 512];
+        let target = gradient_like(&mut rng, 512);
+        let mut server =
+            Server::new(init.clone(), 1.0).with_downlink(Downlink::Delta(Pipeline::cosine(8)), 3);
+        server.params = target.clone();
+        let mut fleet = ModelReplica::new(init);
+        let mut last_err = f64::INFINITY;
+        for _ in 0..4 {
+            let b = server.broadcast().unwrap();
+            fleet.apply_wire(b.wire.as_ref().unwrap()).unwrap();
+            let err: f64 = target
+                .iter()
+                .zip(&fleet.params)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(err < last_err * 1.001, "error did not shrink: {err} vs {last_err}");
+            last_err = err;
+        }
+        assert!(last_err / l2_norm(&target) < 0.2, "final err {last_err}");
     }
 }

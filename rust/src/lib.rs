@@ -21,8 +21,8 @@
 //!
 //! | module | contents |
 //! |--------|----------|
-//! | [`compress`] | quantizers (cosine, linear, Hadamard-rotated, sign-family), sparsification, bit-packing, our own DEFLATE, entropy stats, wire format |
-//! | [`fl`] | FedAvg server/clients, round runner, schedules, simulated network, centralized toy harness |
+//! | [`compress`] | the `Quantizer` trait + schemes (cosine, linear, sign-family, float32), the direction-agnostic `Pipeline` (EF → sparsify → rotate → quantize → pack → DEFLATE), entropy stats, the `CSG2` wire format |
+//! | [`fl`] | FedAvg server/clients, model replica (round-trip downlink), round runner, schedules, simulated network, centralized toy harness |
 //! | [`data`] | synthetic MNIST/CIFAR/volume datasets + IID/Non-IID partitioning |
 //! | [`runtime`] | PJRT engine: manifest-driven loading and execution of AOT artifacts |
 //! | [`figures`] | one driver per paper figure/table (fig3..fig10, tab1, tab2) |

@@ -4,7 +4,8 @@
 //! repro figure <id>|all [--rounds N] [--scale full] [--seed S] [--quiet]
 //! repro train --task mnist|mnist-iid|cifar|unet --codec <name> [--bits B]
 //!             [--keep F] [--rounds N] [--kernel] [--seed S]
-//! repro compress-stats [--n N]      # codec table, no artifacts needed
+//!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
+//! repro compress-stats [--n N]      # pipeline table, no artifacts needed
 //! repro check                       # load + compile all artifacts
 //! repro list                        # figure ids and codec names
 //! ```
@@ -12,7 +13,7 @@
 use anyhow::{bail, Result};
 
 use cossgd::compress::cosine::{BoundMode, Rounding};
-use cossgd::compress::{Codec, CodecKind};
+use cossgd::compress::{Direction, Pipeline, PipelineState};
 use cossgd::figures::{self, FigOpts};
 use cossgd::fl::{self, FlConfig, Task};
 use cossgd::runtime::Engine;
@@ -47,6 +48,10 @@ fn cmd_list() -> Result<()> {
         "codecs:  float32, cosine, linear, linear-rotated, signsgd, signsgd-norm, ef-signsgd"
     );
     println!("options: --bits 1..8, --keep 0.05..1.0, --unbiased, --clip P, --no-deflate");
+    println!(
+        "round-trip: --downlink <codec> [--downlink-bits B] [--downlink-keep F] \
+         [--downlink-unbiased] [--downlink-clip P] [--downlink-no-deflate]"
+    );
     Ok(())
 }
 
@@ -67,15 +72,35 @@ fn cmd_check() -> Result<()> {
     Ok(())
 }
 
-/// Build a codec from CLI flags.
-fn codec_from_args(args: &Args) -> Result<Codec> {
-    let bits = args.opt_usize("bits", 2) as u8;
-    let rounding = if args.flag("unbiased") {
-        Rounding::Unbiased
-    } else {
-        Rounding::Biased
+/// Build a pipeline from a codec name + generic options.
+fn pipeline_from_opts(
+    name: &str,
+    bits: u8,
+    rounding: Rounding,
+    bound: BoundMode,
+    keep: f64,
+    no_deflate: bool,
+) -> Result<Pipeline> {
+    let mut pipe = match name {
+        "float32" | "f32" => Pipeline::float32(),
+        "cosine" | "cos" => Pipeline::cosine_with(bits, rounding, bound),
+        "linear" => Pipeline::linear(bits, rounding),
+        "linear-rotated" | "linear-ur" => Pipeline::linear_rotated(bits, rounding),
+        "signsgd" => Pipeline::sign(),
+        "signsgd-norm" => Pipeline::sign_norm(),
+        "ef-signsgd" => Pipeline::ef_sign(),
+        other => bail!("unknown codec '{other}'"),
     };
-    let bound = match args.opt("clip") {
+    pipe = pipe.with_sparsify(keep);
+    if no_deflate {
+        pipe = pipe.without_deflate();
+    }
+    Ok(pipe)
+}
+
+/// Parse a `--<flag>` clip percentage into a bound mode (0 = auto).
+fn bound_from_args(args: &Args, flag: &str) -> Result<BoundMode> {
+    Ok(match args.opt(flag) {
         Some(p) => {
             let p: f64 = p.parse()?;
             if p == 0.0 {
@@ -85,31 +110,56 @@ fn codec_from_args(args: &Args) -> Result<Codec> {
             }
         }
         None => BoundMode::ClipTopPercent(1.0),
-    };
-    let kind = match args.opt_or("codec", "cosine") {
-        "float32" | "f32" => CodecKind::Float32,
-        "cosine" | "cos" => CodecKind::Cosine {
-            bits,
-            rounding,
-            bound,
-        },
-        "linear" => CodecKind::Linear { bits, rounding },
-        "linear-rotated" | "linear-ur" => CodecKind::LinearRotated { bits, rounding },
-        "signsgd" => CodecKind::SignSgd,
-        "signsgd-norm" => CodecKind::SignSgdNorm,
-        "ef-signsgd" => CodecKind::EfSignSgd,
-        other => bail!("unknown codec '{other}'"),
-    };
-    let mut codec = Codec::new(kind).with_sparsify(args.opt_f64("keep", 1.0));
-    if args.flag("no-deflate") || kind == CodecKind::Float32 {
-        codec = codec.without_deflate();
+    })
+}
+
+fn rounding_from_flag(unbiased: bool) -> Rounding {
+    if unbiased {
+        Rounding::Unbiased
+    } else {
+        Rounding::Biased
     }
-    Ok(codec)
+}
+
+/// Build the uplink pipeline from CLI flags.
+fn uplink_from_args(args: &Args) -> Result<Pipeline> {
+    pipeline_from_opts(
+        args.opt_or("codec", "cosine"),
+        args.opt_usize("bits", 2) as u8,
+        rounding_from_flag(args.flag("unbiased")),
+        bound_from_args(args, "clip")?,
+        args.opt_f64("keep", 1.0),
+        args.flag("no-deflate"),
+    )
+}
+
+/// Build the optional downlink policy (`--downlink <codec>`), with its own
+/// `--downlink-*` variant of every uplink knob so the two directions are
+/// configured independently. `--downlink float32` names the legacy
+/// raw-model broadcast explicitly (4·n bytes, no framing) — NOT a float32
+/// delta pipeline, which would cost strictly more (44-byte header on top
+/// of the same payload).
+fn downlink_from_args(args: &Args) -> Result<Option<fl::Downlink>> {
+    let Some(name) = args.opt("downlink") else {
+        return Ok(None);
+    };
+    if name == "float32" || name == "f32" || name == "model" {
+        return Ok(Some(fl::Downlink::Float32Model));
+    }
+    pipeline_from_opts(
+        name,
+        args.opt_usize("downlink-bits", 8) as u8,
+        rounding_from_flag(args.flag("downlink-unbiased")),
+        bound_from_args(args, "downlink-clip")?,
+        args.opt_f64("downlink-keep", 1.0),
+        args.flag("downlink-no-deflate"),
+    )
+    .map(|p| Some(fl::Downlink::Delta(p)))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let task = Task::parse(args.opt_or("task", "mnist-iid"))?;
-    let codec = codec_from_args(args)?;
+    let uplink = uplink_from_args(args)?;
     let mut cfg = match task {
         Task::MnistIid => FlConfig::mnist(false),
         Task::MnistNonIid => FlConfig::mnist(true),
@@ -119,8 +169,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let default_rounds = cfg.rounds.min(20);
     cfg = cfg
         .with_rounds(args.opt_usize("rounds", default_rounds))
-        .with_codec(codec)
+        .with_uplink(uplink)
         .with_seed(args.opt_u64("seed", 42));
+    if let Some(down) = downlink_from_args(args)? {
+        cfg.downlink = down;
+    }
     cfg.eval_every = args.opt_usize("eval-every", 5);
     cfg.use_kernel_quantizer = args.flag("kernel");
     cfg.verbose = !args.flag("quiet");
@@ -138,10 +191,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("\nfinished in {:.1}s", result.wall_secs);
     println!("network: {}", result.network.summary());
     println!(
-        "uplink compression vs float32: {:.1}x",
-        result
-            .network
-            .uplink_compression_vs_float32(model.param_count)
+        "uplink compression vs float32:   {}",
+        fl::network::fmt_ratio(result.network.uplink_compression_vs_float32(model.param_count))
+    );
+    println!(
+        "downlink compression vs float32: {}",
+        fl::network::fmt_ratio(
+            result.network.downlink_compression_vs_float32(model.param_count)
+        )
     );
     if let Some(m) = result.history.best_metric() {
         println!("best metric: {m:.4}");
@@ -177,29 +234,26 @@ fn cmd_compress_stats(args: &Args) -> Result<()> {
     let n = args.opt_usize("n", 1_000_000);
     let mut rng = Pcg64::seeded(args.opt_u64("seed", 42));
     let g = cossgd::util::propcheck::gradient_like(&mut rng, n);
-    println!("== codec wire costs on a synthetic {n}-element gradient ==");
+    println!("== pipeline wire costs on a synthetic {n}-element gradient ==");
     println!(
-        "{:<24} {:>12} {:>10} {:>10}",
-        "codec", "bytes", "ratio", "deflated"
+        "{:<32} {:>12} {:>10} {:>10}",
+        "pipeline", "bytes", "ratio", "deflated"
     );
     let f32_bytes = (n * 4) as f64;
-    let mut table: Vec<Codec> = vec![Codec::float32()];
+    let mut table: Vec<Pipeline> = vec![Pipeline::float32()];
     for bits in [8u8, 4, 2, 1] {
-        table.push(Codec::cosine(bits));
+        table.push(Pipeline::cosine(bits));
     }
-    table.push(Codec::cosine(2).with_sparsify(0.05));
-    table.push(Codec::new(CodecKind::LinearRotated {
-        bits: 2,
-        rounding: Rounding::Unbiased,
-    }));
-    table.push(Codec::new(CodecKind::SignSgdNorm));
-    for codec in table {
-        let mut st = cossgd::compress::ClientCodecState::new();
-        let enc = codec.encode(&g, &mut st, &mut rng);
+    table.push(Pipeline::cosine(2).with_sparsify(0.05));
+    table.push(Pipeline::linear_rotated(2, Rounding::Unbiased));
+    table.push(Pipeline::sign_norm());
+    for pipe in table {
+        let mut st = PipelineState::new();
+        let enc = pipe.encode(&g, Direction::Uplink, &mut st, &mut rng);
         let bytes = enc.wire_bytes();
         println!(
-            "{:<24} {:>12} {:>9.1}x {:>10}",
-            codec.name(),
+            "{:<32} {:>12} {:>9.1}x {:>10}",
+            pipe.name(),
             fmt_bytes(bytes as u64),
             f32_bytes / bytes as f64,
             enc.deflated

@@ -1,15 +1,19 @@
 //! System-level tests of the FL stack that do NOT need artifacts: server
-//! aggregation semantics over the full wire path, codec composition under
-//! federation-shaped traffic, and determinism of the whole selection +
-//! encode pipeline.
+//! aggregation semantics over the full wire path, pipeline composition
+//! under federation-shaped traffic, determinism of the whole selection +
+//! encode pipeline, and round-trip (downlink delta) cost accounting.
 
-use cossgd::compress::codec::ClientCodecState;
-use cossgd::compress::{wire, Codec, CodecKind};
+use cossgd::compress::cosine::{BoundMode, Rounding};
+use cossgd::compress::{wire, Direction, Pipeline, PipelineState};
 use cossgd::fl::server::Server;
-use cossgd::fl::NetworkLedger;
+use cossgd::fl::{Downlink, ModelReplica, NetworkLedger};
 use cossgd::util::propcheck::gradient_like;
 use cossgd::util::rng::Pcg64;
 use cossgd::util::stats::l2_norm;
+
+fn encode_up(pipe: &Pipeline, g: &[f32], rng: &mut Pcg64) -> cossgd::compress::EncodedTensor {
+    pipe.encode(g, Direction::Uplink, &mut PipelineState::new(), rng)
+}
 
 /// FedAvg over compressed updates approximates FedAvg over exact updates.
 #[test]
@@ -30,26 +34,20 @@ fn compressed_aggregation_approximates_exact() {
 
     // Auto bound (no tail saturation) so the error envelope is the
     // analytic q/2-per-element one; paper-default clipping deliberately
-    // sacrifices the top tail (tested separately in codec tests).
-    let cosine_auto = |bits| {
-        Codec::new(CodecKind::Cosine {
-            bits,
-            rounding: cossgd::compress::cosine::Rounding::Biased,
-            bound: cossgd::compress::cosine::BoundMode::Auto,
-        })
-    };
+    // sacrifices the top tail (tested separately in pipeline tests).
+    let cosine_auto = |bits| Pipeline::cosine_with(bits, Rounding::Biased, BoundMode::Auto);
     // L2 tolerance scales with the interval width q: per-element error is
     // ≤ q/2·‖g‖, so the aggregate rel err is ~sqrt(n/3)·q/2/√clients —
     // large at 4 bits; the direction (cosine similarity, what SGD needs)
     // is asserted separately below.
-    for (codec, tol) in [
-        (Codec::float32(), 1e-6),
+    for (pipe, tol) in [
+        (Pipeline::float32(), 1e-6),
         (cosine_auto(8), 0.35),
         (cosine_auto(4), 1.6),
     ] {
-        let mut server = Server::new(vec![0.0f32; n], 1.0, codec);
+        let mut server = Server::new(vec![0.0f32; n], 1.0);
         for (d, &w) in deltas.iter().zip(&weights) {
-            let enc = codec.encode(d, &mut ClientCodecState::new(), &mut rng);
+            let enc = encode_up(&pipe, d, &mut rng);
             server.receive_update(&wire::serialize(&enc), w).unwrap();
         }
         server.finish_round();
@@ -65,14 +63,14 @@ fn compressed_aggregation_approximates_exact() {
         assert!(
             err / scale < tol,
             "{}: rel err {} > {tol}",
-            codec.name(),
+            pipe.name(),
             err / scale
         );
         // Direction of the aggregated update is preserved.
         let dot: f64 = got.iter().zip(&exact).map(|(a, b)| a * b).sum();
         let got_norm = got.iter().map(|x| x * x).sum::<f64>().sqrt();
         let sim = dot / (got_norm * scale).max(1e-12);
-        assert!(sim > 0.6, "{}: aggregate cos-sim {sim}", codec.name());
+        assert!(sim > 0.6, "{}: aggregate cos-sim {sim}", pipe.name());
     }
 }
 
@@ -81,11 +79,11 @@ fn compressed_aggregation_approximates_exact() {
 fn sparsified_federation_covers_parameters() {
     let n = 2000;
     let mut rng = Pcg64::seeded(2);
-    let codec = Codec::cosine(4).with_sparsify(0.25);
-    let mut server = Server::new(vec![0.0f32; n], 1.0, codec);
+    let pipe = Pipeline::cosine(4).with_sparsify(0.25);
+    let mut server = Server::new(vec![0.0f32; n], 1.0);
     for _ in 0..20 {
         let d = gradient_like(&mut rng, n);
-        let enc = codec.encode(&d, &mut ClientCodecState::new(), &mut rng);
+        let enc = encode_up(&pipe, &d, &mut rng);
         server.receive_update(&wire::serialize(&enc), 1).unwrap();
     }
     server.finish_round();
@@ -101,27 +99,36 @@ fn encode_pipeline_deterministic() {
         let mut rng = Pcg64::seeded(3);
         gradient_like(&mut rng, 10_000)
     };
-    for kind in [
-        CodecKind::Cosine {
-            bits: 2,
-            rounding: cossgd::compress::cosine::Rounding::Unbiased,
-            bound: cossgd::compress::cosine::BoundMode::ClipTopPercent(1.0),
-        },
-        CodecKind::LinearRotated {
-            bits: 4,
-            rounding: cossgd::compress::cosine::Rounding::Unbiased,
-        },
-        CodecKind::EfSignSgd,
+    for pipe in [
+        Pipeline::cosine_with(2, Rounding::Unbiased, BoundMode::ClipTopPercent(1.0)),
+        Pipeline::linear_rotated(4, Rounding::Unbiased),
+        Pipeline::ef_sign(),
     ] {
-        let codec = Codec::new(kind).with_sparsify(0.5);
-        let enc1 = codec.encode(&g, &mut ClientCodecState::new(), &mut Pcg64::new(7, 9));
-        let enc2 = codec.encode(&g, &mut ClientCodecState::new(), &mut Pcg64::new(7, 9));
-        assert_eq!(enc1, enc2, "{:?}", kind);
-        let enc3 = codec.encode(&g, &mut ClientCodecState::new(), &mut Pcg64::new(8, 9));
+        let pipe = pipe.with_sparsify(0.5);
+        let enc1 = pipe.encode(
+            &g,
+            Direction::Uplink,
+            &mut PipelineState::new(),
+            &mut Pcg64::new(7, 9),
+        );
+        let enc2 = pipe.encode(
+            &g,
+            Direction::Uplink,
+            &mut PipelineState::new(),
+            &mut Pcg64::new(7, 9),
+        );
+        assert_eq!(enc1, enc2, "{}", pipe.name());
+        let enc3 = pipe.encode(
+            &g,
+            Direction::Uplink,
+            &mut PipelineState::new(),
+            &mut Pcg64::new(8, 9),
+        );
         assert_ne!(
             wire::serialize(&enc1),
             wire::serialize(&enc3),
-            "different seeds must differ for {kind:?}"
+            "different seeds must differ for {}",
+            pipe.name()
         );
     }
 }
@@ -132,18 +139,18 @@ fn encode_pipeline_deterministic() {
 fn cost_accounting_matches_paper_band() {
     let n = 122_570; // the CIFAR model
     let mut rng = Pcg64::seeded(4);
-    let codec = Codec::cosine(2).with_sparsify(0.05);
+    let pipe = Pipeline::cosine(2).with_sparsify(0.05);
     let mut ledger = NetworkLedger::new();
     let mut manual_total = 0usize;
     for _ in 0..10 {
         let d = gradient_like(&mut rng, n);
-        let enc = codec.encode(&d, &mut ClientCodecState::new(), &mut rng);
+        let enc = encode_up(&pipe, &d, &mut rng);
         let bytes = wire::serialize(&enc);
         manual_total += bytes.len();
         ledger.record_uplink(bytes.len());
     }
     assert_eq!(ledger.uplink_bytes as usize, manual_total);
-    let ratio = ledger.uplink_compression_vs_float32(n);
+    let ratio = ledger.uplink_compression_vs_float32(n).unwrap();
     assert!(
         (300.0..2000.0).contains(&ratio),
         "2-bit@5% ratio {ratio} outside the paper's band"
@@ -154,16 +161,16 @@ fn cost_accounting_matches_paper_band() {
 #[test]
 fn ef_state_persists_across_rounds() {
     let n = 256;
-    let codec = Codec::new(CodecKind::EfSignSgd);
-    let mut state = ClientCodecState::new();
+    let pipe = Pipeline::ef_sign();
+    let mut state = PipelineState::new();
     let mut rng = Pcg64::seeded(5);
     // Non-constant gradient: sign compression leaves a nonzero residual.
     let g: Vec<f32> = (0..n).map(|i| 0.1 + 0.9 * ((i % 7) as f32 / 7.0)).collect();
-    let e1 = codec.encode(&g, &mut state, &mut rng);
+    let e1 = pipe.encode(&g, Direction::Uplink, &mut state, &mut rng);
     // After the first round the residual is nonzero; a second identical
     // gradient encodes differently than from a fresh client.
-    let e2_continuing = codec.encode(&g, &mut state, &mut rng);
-    let e2_fresh = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
+    let e2_continuing = pipe.encode(&g, Direction::Uplink, &mut state, &mut rng);
+    let e2_fresh = pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
     assert_eq!(e1.payload, e2_fresh.payload);
     // With a constant positive gradient, sign codes agree but the scale
     // (bound field) reflects accumulated residual.
@@ -175,11 +182,105 @@ fn ef_state_persists_across_rounds() {
 fn wire_floats_exact() {
     let mut rng = Pcg64::seeded(6);
     let g = gradient_like(&mut rng, 333);
-    let codec = Codec::cosine(8);
-    let enc = codec.encode(&g, &mut ClientCodecState::new(), &mut rng);
+    let pipe = Pipeline::cosine(8);
+    let enc = encode_up(&pipe, &g, &mut rng);
     let rt = wire::deserialize(&wire::serialize(&enc)).unwrap();
     assert_eq!(rt.norm.to_bits(), enc.norm.to_bits());
     assert_eq!(rt.bound.to_bits(), enc.bound.to_bits());
     let norm_check = l2_norm(&g) as f32;
     assert_eq!(enc.norm.to_bits(), norm_check.to_bits());
+}
+
+/// Legacy downlink mode meters exactly the CSG1-era float32 broadcast:
+/// 4·n bytes per selected client, no framing.
+#[test]
+fn legacy_downlink_byte_accounting() {
+    let n = 1234;
+    let mut server = Server::new(vec![0.1; n], 1.0);
+    let mut ledger = NetworkLedger::new();
+    for _ in 0..3 {
+        let b = server.broadcast().unwrap();
+        assert!(b.wire.is_none());
+        for _ in 0..5 {
+            ledger.record_downlink(b.bytes);
+        }
+        server.finish_round();
+    }
+    assert_eq!(ledger.downlink_bytes, (3 * 5 * n * 4) as u64);
+    let ratio = ledger.downlink_compression_vs_float32(n).unwrap();
+    assert!((ratio - 1.0).abs() < 1e-12, "legacy ratio {ratio} != 1.0");
+}
+
+/// The acceptance scenario, artifact-free: cosine-4 uplink + cosine-8
+/// downlink drive a multi-round federation through the real wire path;
+/// downlink bytes land strictly below the float32 broadcast baseline and
+/// the fleet replica tracks the server.
+#[test]
+fn round_trip_federation_compresses_both_directions() {
+    let n = 20_000;
+    let rounds = 4;
+    let clients = 5;
+    let uplink = Pipeline::cosine(4);
+    let mut rng = Pcg64::seeded(7);
+    let init = gradient_like(&mut rng, n);
+    let mut server = Server::new(init.clone(), 1.0)
+        .with_downlink(Downlink::Delta(Pipeline::cosine(8)), 7);
+    let mut fleet = ModelReplica::new(init);
+    let mut ledger = NetworkLedger::new();
+
+    for _ in 0..rounds {
+        let b = server.broadcast().unwrap();
+        fleet.apply_wire(b.wire.as_ref().unwrap()).unwrap();
+        assert_eq!(
+            fleet.params.as_slice(),
+            server.replica(),
+            "fleet and server replica diverged"
+        );
+        for c in 0..clients {
+            ledger.record_downlink(b.bytes);
+            // Synthetic local training: a gradient-like step from the
+            // broadcast model (what a real client would compute).
+            let g = gradient_like(&mut Pcg64::new(rng.next_u64(), c as u64), n);
+            let enc = uplink.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+            let bytes = wire::serialize(&enc);
+            ledger.record_uplink(bytes.len());
+            server.receive_update(&bytes, 10).unwrap();
+        }
+        server.finish_round();
+    }
+
+    // Downlink strictly below the float32 broadcast baseline.
+    let float32_baseline = (ledger.downlink_messages as usize * n * 4) as u64;
+    assert!(
+        ledger.downlink_bytes < float32_baseline,
+        "downlink {} !< float32 baseline {float32_baseline}",
+        ledger.downlink_bytes
+    );
+    let down_ratio = ledger.downlink_compression_vs_float32(n).unwrap();
+    assert!(down_ratio > 1.0, "downlink ratio {down_ratio}");
+    let up_ratio = ledger.uplink_compression_vs_float32(n).unwrap();
+    assert!(up_ratio > 4.0, "uplink ratio {up_ratio}");
+
+    // The fleet model tracks the server: syncing the last aggregated
+    // update shrinks the gap, and what remains is only the (bounded)
+    // quantization error of the final delta.
+    let gap = |a: &[f32], b: &[f32]| -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let err_before = gap(&server.params, &fleet.params);
+    let b = server.broadcast().unwrap();
+    fleet.apply_wire(b.wire.as_ref().unwrap()).unwrap();
+    let err_after = gap(&server.params, &fleet.params);
+    assert!(
+        err_after < err_before,
+        "sync did not shrink the gap: {err_after} !< {err_before}"
+    );
+    assert!(
+        err_after / l2_norm(&server.params).max(1e-9) < 0.6,
+        "replica error {err_after} out of the quantization envelope"
+    );
 }

@@ -5,7 +5,7 @@
 //! stays usable on a fresh checkout.
 
 use cossgd::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
-use cossgd::compress::{Codec, CodecKind};
+use cossgd::compress::Pipeline;
 use cossgd::data::partition::eval_set;
 use cossgd::data::synth::{SynthMnist, SynthTask};
 use cossgd::fl::{self, FlConfig};
@@ -128,7 +128,7 @@ fn tiny_federated_run_end_to_end() {
     // 3 rounds of MNIST IID with 2-bit cosine quantization.
     let cfg = FlConfig::mnist(false)
         .with_rounds(3)
-        .with_codec(Codec::cosine(2));
+        .with_uplink(Pipeline::cosine(2));
     let mut cfg = cfg;
     cfg.eval_every = 1;
     cfg.n_clients = 20; // smaller federation for test speed
@@ -141,7 +141,8 @@ fn tiny_federated_run_end_to_end() {
     // 2-bit + deflate: orders of magnitude below float32.
     let ratio = result
         .network
-        .uplink_compression_vs_float32(engine.manifest.model("mnist").unwrap().param_count);
+        .uplink_compression_vs_float32(engine.manifest.model("mnist").unwrap().param_count)
+        .expect("uplink traffic was recorded");
     assert!(ratio > 10.0, "compression ratio {ratio}");
     // Training signal exists: train loss finite and generally decreasing.
     let first = result.history.records.first().unwrap().train_loss;
@@ -152,7 +153,9 @@ fn tiny_federated_run_end_to_end() {
 #[test]
 fn unet_round_and_dice_eval() {
     let Some(engine) = engine_or_skip() else { return };
-    let mut cfg = FlConfig::unet().with_rounds(1).with_codec(Codec::cosine(8));
+    let mut cfg = FlConfig::unet()
+        .with_rounds(1)
+        .with_uplink(Pipeline::cosine(8));
     cfg.eval_every = 1;
     let result = fl::run(&cfg, &engine).expect("unet run");
     let dice = result.history.final_metric().unwrap();
@@ -160,15 +163,43 @@ fn unet_round_and_dice_eval() {
 }
 
 #[test]
+fn round_trip_federated_run_end_to_end() {
+    let Some(engine) = engine_or_skip() else { return };
+    // The acceptance scenario: cosine-4 uplink + cosine-8 downlink.
+    let mut cfg = FlConfig::mnist(false)
+        .with_rounds(3)
+        .with_uplink(Pipeline::cosine(4))
+        .with_downlink(Pipeline::cosine(8));
+    cfg.eval_every = 1;
+    cfg.n_clients = 20;
+    let result = fl::run(&cfg, &engine).expect("round-trip run");
+    assert_eq!(result.history.records.len(), 3);
+    assert!(result.history.final_metric().is_some());
+    let params = engine.manifest.model("mnist").unwrap().param_count;
+    // Downlink bytes strictly below the float32 broadcast baseline.
+    let baseline = result.network.downlink_messages * (params as u64) * 4;
+    assert!(
+        result.network.downlink_bytes < baseline,
+        "downlink {} !< float32 baseline {baseline}",
+        result.network.downlink_bytes
+    );
+    let down = result
+        .network
+        .downlink_compression_vs_float32(params)
+        .expect("downlink traffic was recorded");
+    assert!(down > 1.0, "downlink ratio {down}");
+}
+
+#[test]
 fn kernel_quantizer_path_runs_in_federation() {
     let Some(engine) = engine_or_skip() else { return };
     let mut cfg = FlConfig::mnist(false)
         .with_rounds(1)
-        .with_codec(Codec::new(CodecKind::Cosine {
-            bits: 4,
-            rounding: Rounding::Biased,
-            bound: BoundMode::ClipTopPercent(1.0),
-        }));
+        .with_uplink(Pipeline::cosine_with(
+            4,
+            Rounding::Biased,
+            BoundMode::ClipTopPercent(1.0),
+        ));
     cfg.n_clients = 10;
     cfg.use_kernel_quantizer = true;
     cfg.eval_every = 1;
