@@ -1,0 +1,70 @@
+//! Systems-simulator overhead: pure event-engine throughput, no
+//! artifacts and no training. The simulator must stay a rounding error
+//! next to real local training — these numbers bound what it costs per
+//! round at various fleet scales (3 events per participant: broadcast →
+//! train → upload).
+
+use cossgd::sim::{ClientLoad, FleetSim, RoundPlan, RoundPolicy, SimConfig};
+use cossgd::util::bench::Bencher;
+
+fn loads_for(plan: &RoundPlan, upload_bytes: usize) -> Vec<ClientLoad> {
+    plan.active
+        .iter()
+        .map(|&device| ClientLoad {
+            device,
+            // Vary sizes so the event heap sees distinct finish times.
+            upload_bytes: upload_bytes + device % 997,
+            examples: 600,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== fleet sampling ==");
+    for &n in &[1_000usize, 100_000, 1_000_000] {
+        let cfg = SimConfig::heterogeneous();
+        b.bench_elems(&format!("sample fleet n={n}"), n as u64, || {
+            FleetSim::new(&cfg, n, 7)
+        });
+    }
+
+    println!("== round replay (sync policy) ==");
+    for &(n, k) in &[(1_000usize, 100usize), (100_000, 1_000), (1_000_000, 10_000)] {
+        let cfg = SimConfig::heterogeneous();
+        let mut sim = FleetSim::new(&cfg, n, 7);
+        let candidates: Vec<usize> = (0..k).collect();
+        let mut round = 0usize;
+        b.bench_elems(
+            &format!("sim round n={n} k={k} sync"),
+            (k * 3) as u64,
+            || {
+                round += 1;
+                let plan = sim.begin_round(&candidates);
+                let loads = loads_for(&plan, 50_000);
+                sim.complete_round(round, &plan, k, 400_000, &loads)
+            },
+        );
+    }
+
+    println!("== round replay (deadline over-selection x1.3) ==");
+    let cfg = SimConfig::heterogeneous()
+        .with_policy(RoundPolicy::OverSelect { over_sample: 1.3 });
+    let mut sim = FleetSim::new(&cfg, 100_000, 7);
+    let k = 1_000usize;
+    let candidates: Vec<usize> = (0..sim.selection_count(k)).collect();
+    let mut round = 0usize;
+    b.bench_elems(
+        &format!("sim round n=100000 k={k} overselect"),
+        (candidates.len() * 3) as u64,
+        || {
+            round += 1;
+            let plan = sim.begin_round(&candidates);
+            let loads = loads_for(&plan, 50_000);
+            sim.complete_round(round, &plan, k, 400_000, &loads)
+        },
+    );
+
+    let total_cases = b.results().len();
+    println!("{total_cases} cases done");
+}

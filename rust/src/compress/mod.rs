@@ -24,12 +24,19 @@
 //!                         │
 //!                         ▼
 //!        EncodedTensor ──wire::serialize──► CSG2 frame (44 B header)
+//!                         │
+//!                         ├──▶ fl::NetworkLedger   (bytes moved)
+//!                         └──▶ sim::FleetSim       (bytes ÷ device
+//!                              bandwidth = simulated transfer time)
 //! ```
 //!
 //! The receiver inverts every stage from the self-describing header via
 //! [`pipeline::decode`] — no sender configuration needed. Decoded uplink
 //! gradients feed FedAvg aggregation (Eq. 1); decoded downlink deltas
-//! advance the clients' model replica.
+//! advance the clients' model replica. The *size* of every frame feeds
+//! two meters: the byte-exact [`crate::fl::NetworkLedger`], and — when
+//! the systems simulator is on — the virtual clock of [`crate::sim`],
+//! which turns compression ratios into time-to-accuracy speedups.
 //!
 //! Adding a scheme = one `impl Quantizer` + one [`quantizer::from_wire`]
 //! arm; the pipeline, wire format, figures and cost ledgers pick it up

@@ -6,6 +6,7 @@
 use anyhow::{bail, Result};
 
 use crate::compress::Pipeline;
+use crate::sim::SimConfig;
 use crate::util::json::Json;
 
 use super::schedule::LrSchedule;
@@ -77,6 +78,10 @@ pub struct FlConfig {
     /// Route quantization through the Pallas kernel artifacts instead of
     /// the native Rust pipeline (demonstrates the L1 path; slower on CPU).
     pub use_kernel_quantizer: bool,
+    /// Optional systems simulator ([`crate::sim`]): replay every round on
+    /// a virtual clock over a heterogeneous device fleet. `None` keeps the
+    /// pure byte-accounting harness.
+    pub sim: Option<SimConfig>,
     pub verbose: bool,
 }
 
@@ -110,6 +115,7 @@ impl FlConfig {
             seed: 42,
             eval_every: 5,
             use_kernel_quantizer: false,
+            sim: None,
             verbose: false,
         }
     }
@@ -134,6 +140,7 @@ impl FlConfig {
             seed: 42,
             eval_every: 20,
             use_kernel_quantizer: false,
+            sim: None,
             verbose: false,
         }
     }
@@ -173,6 +180,7 @@ impl FlConfig {
             seed: 42,
             eval_every: 5,
             use_kernel_quantizer: false,
+            sim: None,
             verbose: false,
         }
     }
@@ -213,6 +221,14 @@ impl FlConfig {
         self
     }
 
+    /// Attach the discrete-event systems simulator: rounds play out on a
+    /// virtual clock over a device fleet sampled from `sim.tiers`, and the
+    /// run yields a [`crate::sim::Timeline`] alongside the `History`.
+    pub fn with_sim(mut self, sim: SimConfig) -> Self {
+        self.sim = Some(sim);
+        self
+    }
+
     /// Clients selected per round.
     pub fn clients_per_round(&self) -> usize {
         ((self.n_clients as f64 * self.participation).round() as usize)
@@ -230,6 +246,10 @@ impl FlConfig {
             .set("downlink", self.downlink.name())
             .set("seed", self.seed)
             .set("round_artifact", self.round_artifact.as_str())
+            .set(
+                "sim",
+                self.sim.as_ref().map_or("off".to_string(), SimConfig::name),
+            )
     }
 }
 
@@ -281,6 +301,18 @@ mod tests {
             Downlink::Delta(p) => assert_eq!(p.name(), "cosine-8 +deflate"),
             other => panic!("unexpected downlink {other:?}"),
         }
+    }
+
+    #[test]
+    fn sim_builder_and_describe() {
+        let plain = FlConfig::mnist(false);
+        assert!(plain.sim.is_none());
+        assert_eq!(plain.describe().get("sim").unwrap().as_str(), Some("off"));
+        let cfg = FlConfig::mnist(false).with_sim(SimConfig::heterogeneous());
+        let sim = cfg.sim.as_ref().expect("sim attached");
+        assert_eq!(sim.tiers.len(), 6);
+        let described = cfg.describe().get("sim").unwrap().as_str().unwrap().to_string();
+        assert!(described.contains("6 tiers"), "{described}");
     }
 
     #[test]

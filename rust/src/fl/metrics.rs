@@ -19,6 +19,8 @@ pub struct RoundRecord {
     pub eval_loss: Option<f64>,
     /// Cumulative uplink bytes after this round.
     pub uplink_bytes: u64,
+    /// Cumulative downlink (broadcast) bytes after this round.
+    pub downlink_bytes: u64,
     pub clients: usize,
 }
 
@@ -67,6 +69,7 @@ impl History {
                                 .set("round", r.round)
                                 .set("train_loss", r.train_loss)
                                 .set("uplink_bytes", r.uplink_bytes)
+                                .set("downlink_bytes", r.downlink_bytes)
                                 .set("clients", r.clients);
                             if let Some(m) = r.eval_metric {
                                 j = j.set("eval_metric", m);
@@ -107,6 +110,7 @@ mod tests {
             eval_metric: metric,
             eval_loss: metric.map(|m| 1.0 - m),
             uplink_bytes: round as u64 * 100,
+            downlink_bytes: round as u64 * 400,
             clients: 10,
         }
     }
@@ -133,6 +137,7 @@ mod tests {
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].get("round").unwrap().as_usize(), Some(0));
         assert_eq!(recs[0].get("eval_metric").unwrap().as_f64(), Some(0.25));
+        assert_eq!(recs[0].get("downlink_bytes").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -9,6 +9,19 @@
 //! `g = M_in − M*` with the uplink pipeline, and the server decodes the
 //! self-describing frames and aggregates with Eq. (1). Every byte that
 //! moves is metered by [`network::NetworkLedger`].
+//!
+//! Bytes become *time* one layer up: with [`FlConfig::sim`] set, each
+//! round also plays out on the virtual clock of [`crate::sim`] —
+//! broadcast transfer → local training → upload transfer per device, with
+//! heterogeneous bandwidth/compute tiers, availability, dropout and
+//! straggler policies — and the run yields a [`crate::sim::Timeline`]
+//! (simulated seconds per phase, time-to-target-metric) alongside the
+//! [`History`]:
+//!
+//! ```text
+//!   runner ──▶ NetworkLedger   bytes   (what moved)
+//!          └─▶ sim::FleetSim   ticks   (how long it took, per device)
+//! ```
 
 pub mod centralized;
 pub mod client;
@@ -23,6 +36,6 @@ pub use client::ModelReplica;
 pub use config::{FlConfig, Task};
 pub use metrics::{History, RoundRecord};
 pub use network::NetworkLedger;
-pub use runner::{run, RunResult};
+pub use runner::{run, run_labeled, RunResult};
 pub use schedule::LrSchedule;
 pub use server::{Broadcast, Downlink, Server};

@@ -32,6 +32,14 @@ impl NetworkLedger {
         self.downlink_messages += 1;
     }
 
+    /// `receivers` identical broadcasts of `bytes` each, folded in O(1):
+    /// the per-round fan-out must not cost O(fleet) ledger calls at
+    /// million-client scale.
+    pub fn record_downlink_n(&mut self, bytes: usize, receivers: usize) {
+        self.downlink_bytes += bytes as u64 * receivers as u64;
+        self.downlink_messages += receivers as u64;
+    }
+
     /// Mean uplink bytes per message.
     pub fn mean_uplink(&self) -> f64 {
         if self.uplink_messages == 0 {
@@ -94,6 +102,22 @@ mod tests {
         assert_eq!(n.uplink_messages, 2);
         assert_eq!(n.mean_uplink(), 200.0);
         assert_eq!(n.downlink_bytes, 1000);
+    }
+
+    #[test]
+    fn bulk_downlink_equals_the_loop() {
+        let mut bulk = NetworkLedger::new();
+        bulk.record_downlink_n(1234, 57);
+        let mut looped = NetworkLedger::new();
+        for _ in 0..57 {
+            looped.record_downlink(1234);
+        }
+        assert_eq!(bulk.downlink_bytes, looped.downlink_bytes);
+        assert_eq!(bulk.downlink_messages, looped.downlink_messages);
+        // Zero receivers is a no-op, not a message.
+        bulk.record_downlink_n(999, 0);
+        assert_eq!(bulk.downlink_bytes, looped.downlink_bytes);
+        assert_eq!(bulk.downlink_messages, looped.downlink_messages);
     }
 
     #[test]

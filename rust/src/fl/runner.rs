@@ -14,6 +14,14 @@
 //! 3. selected clients train from the replica and upload compressed
 //!    updates; the server decodes the self-describing frames and
 //!    aggregates (Eq. 1).
+//!
+//! With [`FlConfig::sim`] set, the same round additionally plays out on
+//! the virtual clock of a [`FleetSim`]: the policy may over-select,
+//! the availability/dropout lottery thins the participants *before*
+//! training, and the real serialized frame sizes (broadcast and per-client
+//! upload) are divided by each device's bandwidth to time the round.
+//! Updates from stragglers the round policy aborts are neither aggregated
+//! nor metered — their uploads never completed.
 
 use anyhow::Result;
 
@@ -22,6 +30,7 @@ use crate::data::partition::{self, eval_set};
 use crate::data::synth::{SynthCifar, SynthMnist, SynthTask, SynthVolume};
 use crate::runtime::manifest::init_params;
 use crate::runtime::Engine;
+use crate::sim::{secs, ClientLoad, FleetSim, RoundPlan, Timeline};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -37,6 +46,8 @@ pub struct RunResult {
     pub network: NetworkLedger,
     pub final_params: Vec<f32>,
     pub wall_secs: f64,
+    /// Per-round virtual-clock records ([`FlConfig::sim`] runs only).
+    pub timeline: Option<Timeline>,
 }
 
 /// Generic driver over a synthetic task.
@@ -67,31 +78,48 @@ fn run_task<T: SynthTask>(
     let mut network = NetworkLedger::new();
     let mut selector = Pcg64::new(cfg.seed, 0x5E1EC7);
     let mut history = History::new(label);
+    let mut sim: Option<FleetSim> = cfg
+        .sim
+        .as_ref()
+        .map(|s| FleetSim::new(s, cfg.n_clients, cfg.seed));
+    // Every client trains the same artifact schedule per round.
+    let examples_per_round = (round_cfg.steps() * round_cfg.batch) as u64;
 
     let per_round = cfg.clients_per_round();
     for t in 0..cfg.rounds {
         let lr = cfg.client_lr.at(t) as f32;
         let broadcast = server.broadcast()?;
-        let receivers = match &broadcast.wire {
-            // Round-trip mode: clients decode the delta frame themselves.
-            // EVERY client must receive every delta frame to stay in sync,
-            // so the whole fleet's downlink is metered.
-            Some(frame) => {
-                fleet_model.apply_wire(frame)?;
-                clients.len()
-            }
-            // Legacy mode: the broadcast IS the raw model; only selected
-            // clients need it (stateless), matching the CSG1 accounting,
-            // and they train straight from the server's params (no copy).
-            None => per_round,
-        };
         let delta_mode = broadcast.wire.is_some();
-        for _ in 0..receivers {
-            network.record_downlink(broadcast.bytes);
+        if let Some(frame) = &broadcast.wire {
+            // Round-trip mode: clients decode the delta frame themselves.
+            fleet_model.apply_wire(frame)?;
         }
-        let selected = selector.sample_indices(clients.len(), per_round);
-        let mut loss_sum = 0.0f64;
-        for &ci in &selected {
+
+        // Selection (policy may over-select), then the availability /
+        // dropout lottery — offline devices and mid-round failures never
+        // produce an update, so they are not worth training.
+        let k_select = sim
+            .as_ref()
+            .map_or(per_round, |s| s.selection_count(per_round));
+        let selected = selector.sample_indices(clients.len(), k_select);
+        let plan = match sim.as_mut() {
+            Some(s) => s.begin_round(&selected),
+            None => RoundPlan::full(selected),
+        };
+
+        // Downlink metering: a delta frame must reach EVERY client to keep
+        // the replicas in sync, so the whole fleet is metered; the raw
+        // float32 model is stateless, so only the clients that train this
+        // round are metered — byte-identical to the CSG1-era accounting.
+        let receivers = if delta_mode {
+            clients.len()
+        } else {
+            plan.active.len()
+        };
+        network.record_downlink_n(broadcast.bytes, receivers);
+
+        let mut updates = Vec::with_capacity(plan.active.len());
+        for &ci in &plan.active {
             let global_model: &[f32] = if delta_mode {
                 &fleet_model.params
             } else {
@@ -108,9 +136,40 @@ fn run_task<T: SynthTask>(
                 cfg.use_kernel_quantizer,
             )?;
             let bytes = wire::serialize(&update.encoded);
+            updates.push((ci, bytes, update.num_examples, update.train_loss));
+        }
+
+        // With the simulator on, the round policy decides which trained
+        // updates actually land before the round closes; aborted straggler
+        // uploads are neither aggregated nor metered.
+        let kept: Vec<usize> = match sim.as_mut() {
+            Some(s) => {
+                let loads: Vec<ClientLoad> = updates
+                    .iter()
+                    .map(|(ci, bytes, _, _)| ClientLoad {
+                        device: *ci,
+                        upload_bytes: bytes.len(),
+                        examples: examples_per_round,
+                    })
+                    .collect();
+                s.complete_round(t + 1, &plan, per_round, broadcast.bytes, &loads)
+                    .kept
+            }
+            None => plan.active.clone(),
+        };
+        let mut kept_sorted = kept;
+        kept_sorted.sort_unstable();
+
+        let mut loss_sum = 0.0f64;
+        let mut n_kept = 0usize;
+        for (ci, bytes, num_examples, train_loss) in &updates {
+            if kept_sorted.binary_search(ci).is_err() {
+                continue;
+            }
             network.record_uplink(bytes.len());
-            server.receive_update(&bytes, update.num_examples)?;
-            loss_sum += update.train_loss as f64;
+            server.receive_update(bytes, *num_examples)?;
+            loss_sum += *train_loss as f64;
+            n_kept += 1;
         }
         server.finish_round();
 
@@ -140,16 +199,20 @@ fn run_task<T: SynthTask>(
 
         let rec = RoundRecord {
             round: t + 1,
-            train_loss: loss_sum / selected.len().max(1) as f64,
+            train_loss: loss_sum / n_kept.max(1) as f64,
             eval_metric: metric,
             eval_loss,
             uplink_bytes: network.uplink_bytes,
-            clients: selected.len(),
+            downlink_bytes: network.downlink_bytes,
+            clients: n_kept,
         };
         if cfg.verbose {
             let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
+            let sim_note = sim
+                .as_ref()
+                .map_or(String::new(), |s| format!(" sim {:.1}s", secs(s.clock())));
             println!(
-                "[{label}] round {:>4}/{} loss {:.4} metric {m} uplink {} downlink {}",
+                "[{label}] round {:>4}/{} loss {:.4} metric {m} uplink {} downlink {}{sim_note}",
                 t + 1,
                 cfg.rounds,
                 rec.train_loss,
@@ -165,6 +228,7 @@ fn run_task<T: SynthTask>(
         network,
         final_params: server.params,
         wall_secs: sw.elapsed_secs(),
+        timeline: sim.map(FleetSim::into_timeline),
     })
 }
 

@@ -78,6 +78,85 @@ mod tests {
     }
 
     #[test]
+    fn warm_restarts_empty_list_is_plain_cosine() {
+        let plain = LrSchedule::Cosine {
+            base: 0.1,
+            total: 50,
+        };
+        let empty = LrSchedule::CosineWarmRestarts {
+            base: 0.1,
+            total: 50,
+            restarts: vec![],
+        };
+        for t in 0..60 {
+            assert!(
+                (plain.at(t) - empty.at(t)).abs() < 1e-15,
+                "t={t}: {} vs {}",
+                plain.at(t),
+                empty.at(t)
+            );
+        }
+    }
+
+    #[test]
+    fn warm_restart_at_round_zero_is_plain_cosine() {
+        // A restart at 0 only re-anchors the first segment at its own
+        // boundary: the schedule is the plain cosine over [0, total).
+        let s = LrSchedule::CosineWarmRestarts {
+            base: 0.2,
+            total: 40,
+            restarts: vec![0],
+        };
+        let plain = LrSchedule::Cosine {
+            base: 0.2,
+            total: 40,
+        };
+        for t in 0..40 {
+            assert!((s.at(t) - plain.at(t)).abs() < 1e-15, "t={t}");
+        }
+    }
+
+    #[test]
+    fn warm_restart_beyond_total_stretches_the_segment() {
+        // A restart index ≥ total never fires, but it still bounds the
+        // segment: the cosine decays over [0, restart), so the LR stays
+        // above the plain-cosine floor at the end of training and never
+        // jumps back up.
+        let s = LrSchedule::CosineWarmRestarts {
+            base: 0.1,
+            total: 100,
+            restarts: vec![150],
+        };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        for t in 1..100 {
+            assert!(s.at(t) <= s.at(t - 1) + 1e-12, "jumped up at t={t}");
+        }
+        let plain_end = LrSchedule::Cosine {
+            base: 0.1,
+            total: 100,
+        }
+        .at(99);
+        assert!(s.at(99) > plain_end, "{} !> {plain_end}", s.at(99));
+        assert!(s.at(99) > 0.01, "segment should not have fully decayed");
+    }
+
+    #[test]
+    fn warm_restarts_past_the_horizon_stay_bounded() {
+        // Querying past `total` (figure harnesses overrun by one) clamps
+        // into the last segment instead of panicking or going negative.
+        let s = LrSchedule::CosineWarmRestarts {
+            base: 0.1,
+            total: 100,
+            restarts: vec![20, 60],
+        };
+        for t in [100, 101, 150, 10_000] {
+            let v = s.at(t);
+            assert!(v.is_finite() && (0.0..=0.1).contains(&v), "at({t}) = {v}");
+            assert!((v - s.at(99)).abs() < 1e-12, "clamp should freeze the LR");
+        }
+    }
+
+    #[test]
     fn warm_restarts_jump_back_up() {
         let s = LrSchedule::CosineWarmRestarts {
             base: 0.1,

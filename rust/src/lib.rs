@@ -23,6 +23,7 @@
 //! |--------|----------|
 //! | [`compress`] | the `Quantizer` trait + schemes (cosine, linear, sign-family, float32), the direction-agnostic `Pipeline` (EF → sparsify → rotate → quantize → pack → DEFLATE), entropy stats, the `CSG2` wire format |
 //! | [`fl`] | FedAvg server/clients, model replica (round-trip downlink), round runner, schedules, simulated network, centralized toy harness |
+//! | [`sim`] | discrete-event systems simulator: virtual clock + event queue, heterogeneous device tiers, synchronous / over-selection round policies, per-round timelines and time-to-accuracy |
 //! | [`data`] | synthetic MNIST/CIFAR/volume datasets + IID/Non-IID partitioning |
 //! | [`runtime`] | PJRT engine: manifest-driven loading and execution of AOT artifacts |
 //! | [`figures`] | one driver per paper figure/table (fig3..fig10, tab1, tab2) |
@@ -33,6 +34,7 @@ pub mod data;
 pub mod figures;
 pub mod fl;
 pub mod runtime;
+pub mod sim;
 pub mod util;
 
 /// Crate-wide result type (thin alias over `anyhow`).

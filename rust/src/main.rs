@@ -5,6 +5,9 @@
 //! repro train --task mnist|mnist-iid|cifar|unet --codec <name> [--bits B]
 //!             [--keep F] [--rounds N] [--kernel] [--seed S]
 //!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
+//! repro sim   --task <t> [--rounds N] [--fleet heterogeneous|uniform|3g]
+//!             [--policy sync|overselect] [--over F] [--availability P]
+//!             [--dropout P] [--target M]   # time-to-accuracy comparison
 //! repro compress-stats [--n N]      # pipeline table, no artifacts needed
 //! repro check                       # load + compile all artifacts
 //! repro list                        # figure ids and codec names
@@ -17,6 +20,7 @@ use cossgd::compress::{Direction, Pipeline, PipelineState};
 use cossgd::figures::{self, FigOpts};
 use cossgd::fl::{self, FlConfig, Task};
 use cossgd::runtime::Engine;
+use cossgd::sim::{fmt_sim_secs, RoundPolicy, SimConfig};
 use cossgd::util::cli::Args;
 use cossgd::util::rng::Pcg64;
 use cossgd::util::timer::{fmt_bytes, Stopwatch};
@@ -33,6 +37,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("figure") => cmd_figure(args),
         Some("train") => cmd_train(args),
+        Some("sim") => cmd_sim(args),
         Some("compress-stats") => cmd_compress_stats(args),
         Some("check") => cmd_check(),
         Some("list") | None => cmd_list(),
@@ -41,7 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("subcommands: figure, train, compress-stats, check, list");
+    println!("subcommands: figure, train, sim, compress-stats, check, list");
     println!("figures: {}", figures::ALL.join(", "));
     println!("tasks:   mnist (non-iid), mnist-iid, cifar, unet");
     println!(
@@ -51,6 +56,10 @@ fn cmd_list() -> Result<()> {
     println!(
         "round-trip: --downlink <codec> [--downlink-bits B] [--downlink-keep F] \
          [--downlink-unbiased] [--downlink-clip P] [--downlink-no-deflate]"
+    );
+    println!(
+        "sim: --fleet heterogeneous|uniform|3g, --policy sync|overselect [--over F], \
+         --availability P, --dropout P, --target M"
     );
     Ok(())
 }
@@ -206,6 +215,128 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = std::path::Path::new("artifacts/results").join("train_last.json");
     fl::metrics::save_results(&out, "train", &[result.history])?;
     println!("history written to {out:?}");
+    Ok(())
+}
+
+/// Build the fleet/policy description from `--fleet`, `--policy` and the
+/// lottery knobs.
+fn sim_from_args(args: &Args) -> Result<SimConfig> {
+    let mut sim = match args.opt_or("fleet", "heterogeneous") {
+        "heterogeneous" | "het" => SimConfig::heterogeneous(),
+        "uniform" | "wifi" => SimConfig::uniform(),
+        "3g" | "cellular" => SimConfig::cellular(),
+        other => bail!("unknown fleet '{other}' (heterogeneous, uniform, 3g)"),
+    };
+    sim.policy = match args.opt_or("policy", "sync") {
+        "sync" | "synchronous" => RoundPolicy::Synchronous,
+        "overselect" | "deadline" => RoundPolicy::OverSelect {
+            over_sample: args.opt_f64("over", 1.3),
+        },
+        other => bail!("unknown policy '{other}' (sync, overselect)"),
+    };
+    if let Some(a) = args.opt("availability") {
+        sim.availability = a.parse()?;
+        if !(0.0..=1.0).contains(&sim.availability) {
+            bail!("--availability is a probability in [0, 1], got {a}");
+        }
+    }
+    if let Some(d) = args.opt("dropout") {
+        sim.dropout = d.parse()?;
+        if !(0.0..=1.0).contains(&sim.dropout) {
+            bail!("--dropout is a probability in [0, 1], got {d}");
+        }
+    }
+    Ok(sim)
+}
+
+/// Time-to-accuracy comparison: the same federated task across
+/// uplink/downlink pipelines, every run replayed on the same virtual
+/// fleet, so compression ratios become simulated-seconds speedups.
+fn cmd_sim(args: &Args) -> Result<()> {
+    let task = Task::parse(args.opt_or("task", "mnist-iid"))?;
+    let mut base = match task {
+        Task::MnistIid => FlConfig::mnist(false),
+        Task::MnistNonIid => FlConfig::mnist(true),
+        Task::Cifar => FlConfig::cifar(),
+        Task::Unet => FlConfig::unet(),
+    };
+    if let Some(c) = args.opt("clients") {
+        base.n_clients = c.parse()?;
+    }
+    if let Some(p) = args.opt("participation") {
+        base.participation = p.parse()?;
+    }
+    let rounds = args.opt_usize("rounds", base.rounds.min(20));
+    let seed = args.opt_u64("seed", 42);
+    let sim = sim_from_args(args)?;
+    let target: Option<f64> = args.opt("target").map(str::parse).transpose()?;
+    let engine = Engine::load_default()?;
+
+    let schemes: Vec<(&str, Pipeline, Option<Pipeline>)> = vec![
+        ("float32 ↑ / float32 ↓", Pipeline::float32(), None),
+        (
+            "cosine-8 ↑ / Δ cosine-8 ↓",
+            Pipeline::cosine(8),
+            Some(Pipeline::cosine(8)),
+        ),
+        (
+            "cosine-4 ↑ / Δ cosine-4 ↓",
+            Pipeline::cosine(4),
+            Some(Pipeline::cosine(4)),
+        ),
+        (
+            "cosine-2@5% ↑ / Δ cosine-4 ↓",
+            Pipeline::cosine(2).with_sparsify(0.05),
+            Some(Pipeline::cosine(4)),
+        ),
+    ];
+
+    println!(
+        "fleet: {} over {} clients · {} rounds · task {task:?} · seed {seed}",
+        sim.name(),
+        base.n_clients,
+        rounds
+    );
+    println!(
+        "{:<30} {:>7} {:>10} {:>10} {:>11} {:>11} {:>6} {:>5}",
+        "scheme", "best", "sim time", "to-target", "uplink", "downlink", "strag", "drop"
+    );
+    for (name, up, down) in schemes {
+        let mut cfg = base
+            .clone()
+            .with_rounds(rounds)
+            .with_uplink(up)
+            .with_seed(seed)
+            .with_sim(sim.clone());
+        if let Some(d) = down {
+            cfg = cfg.with_downlink(d);
+        }
+        cfg.eval_every = args.opt_usize("eval-every", 5);
+        cfg.verbose = args.flag("verbose");
+        let result = fl::run_labeled(&cfg, &engine, name)?;
+        let tl = result.timeline.as_ref().expect("sim runs carry a timeline");
+        let best = result
+            .history
+            .best_metric()
+            .map_or("-".to_string(), |m| format!("{m:.4}"));
+        let tta = target
+            .and_then(|tg| tl.time_to_metric(&result.history, tg))
+            .map_or("-".to_string(), fmt_sim_secs);
+        println!(
+            "{:<30} {:>7} {:>10} {:>10} {:>11} {:>11} {:>6} {:>5}",
+            name,
+            best,
+            fmt_sim_secs(tl.total_secs()),
+            tta,
+            fmt_bytes(result.network.uplink_bytes),
+            fmt_bytes(result.network.downlink_bytes),
+            tl.stragglers_dropped(),
+            tl.dropouts()
+        );
+    }
+    if target.is_none() {
+        println!("(pass --target M for time-to-target-metric, e.g. --target 0.8)");
+    }
     Ok(())
 }
 

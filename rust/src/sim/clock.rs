@@ -1,0 +1,184 @@
+//! Virtual time and the deterministic event queue — the simulator's
+//! engine room.
+//!
+//! Time is integer microseconds ([`Ticks`]), never floating-point, so a
+//! whole simulated federation is *tick-identical* across runs and
+//! platforms: equal seeds produce equal timelines down to the last bit.
+//! Ties in the event queue are broken by insertion order (a monotone
+//! sequence number), which keeps pop order total and reproducible even
+//! when two transfers finish on the same tick.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Simulated time in microseconds.
+pub type Ticks = u64;
+
+/// Ticks per simulated second.
+pub const TICKS_PER_SEC: u64 = 1_000_000;
+
+/// Simulated seconds for a tick count.
+pub fn secs(t: Ticks) -> f64 {
+    t as f64 / TICKS_PER_SEC as f64
+}
+
+/// Ticks to move `bytes` over a `bits_per_sec` link (ceiling division:
+/// any nonzero transfer costs at least one tick, so causality never
+/// collapses to zero-time).
+pub fn transfer_ticks(bytes: u64, bits_per_sec: u64) -> Ticks {
+    assert!(bits_per_sec > 0, "transfer over a 0 bps link");
+    if bytes == 0 {
+        return 0;
+    }
+    let num = bytes as u128 * 8 * TICKS_PER_SEC as u128;
+    num.div_ceil(bits_per_sec as u128) as Ticks
+}
+
+/// Ticks to process `examples` at `examples_per_sec` device throughput.
+pub fn compute_ticks(examples: u64, examples_per_sec: f64) -> Ticks {
+    assert!(
+        examples_per_sec > 0.0,
+        "compute on a 0 examples/s device"
+    );
+    if examples == 0 {
+        return 0;
+    }
+    let t = examples as f64 / examples_per_sec * TICKS_PER_SEC as f64;
+    t.ceil() as Ticks // saturating f64→u64 cast
+}
+
+/// One scheduled entry. Ordering is `(time, seq)` only — the payload
+/// never participates, so `E` needs no `Ord`.
+struct Scheduled<E> {
+    at: Ticks,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at.cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap of events keyed by virtual time, FIFO within a tick.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    pub fn push(&mut self, at: Ticks, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled { at, seq, event }));
+    }
+
+    /// Pop the earliest event (FIFO among same-tick events).
+    pub fn pop(&mut self) -> Option<(Ticks, E)> {
+        self.heap.pop().map(|Reverse(s)| (s.at, s.event))
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_time(&self) -> Option<Ticks> {
+        self.heap.peek().map(|Reverse(s)| s.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop all pending events (round closed; stragglers aborted).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.peek_time(), Some(10));
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_tick_is_fifo() {
+        let mut q = EventQueue::new();
+        q.push(5, 1);
+        q.push(5, 2);
+        q.push(5, 3);
+        assert_eq!(q.pop(), Some((5, 1)));
+        assert_eq!(q.pop(), Some((5, 2)));
+        assert_eq!(q.pop(), Some((5, 3)));
+    }
+
+    #[test]
+    fn clear_aborts_pending() {
+        let mut q = EventQueue::new();
+        q.push(1, ());
+        q.push(2, ());
+        assert_eq!(q.len(), 2);
+        q.clear();
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn transfer_ticks_is_exact_ceiling() {
+        // 1 MiB over 8 Mbps = 2^20 * 8 bits / 8e6 bps = 1.048576 s.
+        assert_eq!(transfer_ticks(1 << 20, 8_000_000), 1_048_576);
+        // Any nonzero payload costs at least one tick.
+        assert_eq!(transfer_ticks(1, u64::MAX / 16), 1);
+        assert_eq!(transfer_ticks(0, 1), 0);
+    }
+
+    #[test]
+    fn compute_ticks_scales_with_throughput() {
+        assert_eq!(compute_ticks(1000, 1000.0), TICKS_PER_SEC);
+        assert_eq!(compute_ticks(500, 1000.0), TICKS_PER_SEC / 2);
+        assert_eq!(compute_ticks(0, 1.0), 0);
+    }
+
+    #[test]
+    fn seconds_roundtrip() {
+        assert!((secs(1_500_000) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,146 @@
+//! Heterogeneous device fleet: bandwidth/compute tiers and the profiles
+//! sampled from them.
+//!
+//! A [`DeviceTier`] is a *population* (e.g. "wifi·fast": 50 Mbps down,
+//! 20 Mbps up, 4000 examples/s) with a sampling weight; a
+//! [`DeviceProfile`] is one concrete device drawn from a tier, with
+//! per-device multiplicative jitter so no two devices are exactly alike
+//! unless jitter is zero. Sampling is a pure function of `(tiers, n,
+//! jitter, rng)` — the same seed always yields the same fleet.
+
+use crate::util::rng::Pcg64;
+
+/// A device population with a sampling weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceTier {
+    pub name: &'static str,
+    /// Relative sampling weight (normalized over the tier list).
+    pub weight: f64,
+    /// Downlink (server → device) bandwidth in Mbit/s.
+    pub down_mbps: f64,
+    /// Uplink (device → server) bandwidth in Mbit/s.
+    pub up_mbps: f64,
+    /// Local-training throughput in examples/s.
+    pub examples_per_sec: f64,
+}
+
+impl DeviceTier {
+    pub fn new(
+        name: &'static str,
+        weight: f64,
+        down_mbps: f64,
+        up_mbps: f64,
+        examples_per_sec: f64,
+    ) -> DeviceTier {
+        DeviceTier {
+            name,
+            weight,
+            down_mbps,
+            up_mbps,
+            examples_per_sec,
+        }
+    }
+}
+
+/// One concrete device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub id: usize,
+    /// Name of the tier this device was drawn from.
+    pub tier: &'static str,
+    /// Downlink bandwidth in bits/s (≥ 1).
+    pub down_bps: u64,
+    /// Uplink bandwidth in bits/s (≥ 1).
+    pub up_bps: u64,
+    /// Local-training throughput in examples/s (> 0).
+    pub examples_per_sec: f64,
+}
+
+/// Sample `n` device profiles from weighted `tiers`, each rate jittered
+/// independently by a uniform factor in `[1−jitter, 1+jitter]`.
+pub fn sample_fleet(
+    tiers: &[DeviceTier],
+    n: usize,
+    jitter: f64,
+    rng: &mut Pcg64,
+) -> Vec<DeviceProfile> {
+    assert!(!tiers.is_empty(), "sample_fleet: empty tier list");
+    assert!((0.0..1.0).contains(&jitter), "jitter must be in [0, 1)");
+    let total_w: f64 = tiers.iter().map(|t| t.weight).sum();
+    assert!(total_w > 0.0, "sample_fleet: zero total tier weight");
+    let mut fleet = Vec::with_capacity(n);
+    for id in 0..n {
+        // Weighted tier pick, then three independent jitter factors —
+        // always four draws per device, so the stream stays aligned.
+        let mut r = rng.f64() * total_w;
+        let mut tier = &tiers[tiers.len() - 1];
+        for t in tiers {
+            if r < t.weight {
+                tier = t;
+                break;
+            }
+            r -= t.weight;
+        }
+        let jd = 1.0 + jitter * (2.0 * rng.f64() - 1.0);
+        let ju = 1.0 + jitter * (2.0 * rng.f64() - 1.0);
+        let jc = 1.0 + jitter * (2.0 * rng.f64() - 1.0);
+        fleet.push(DeviceProfile {
+            id,
+            tier: tier.name,
+            down_bps: ((tier.down_mbps * 1e6 * jd) as u64).max(1),
+            up_bps: ((tier.up_mbps * 1e6 * ju) as u64).max(1),
+            examples_per_sec: (tier.examples_per_sec * jc).max(1e-6),
+        });
+    }
+    fleet
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tiers() -> Vec<DeviceTier> {
+        vec![
+            DeviceTier::new("wifi", 3.0, 50.0, 20.0, 4000.0),
+            DeviceTier::new("3g", 1.0, 2.0, 0.75, 500.0),
+        ]
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let a = sample_fleet(&two_tiers(), 100, 0.2, &mut Pcg64::new(7, 1));
+        let b = sample_fleet(&two_tiers(), 100, 0.2, &mut Pcg64::new(7, 1));
+        assert_eq!(a, b);
+        let c = sample_fleet(&two_tiers(), 100, 0.2, &mut Pcg64::new(8, 1));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn weights_shape_the_mix() {
+        let fleet = sample_fleet(&two_tiers(), 2000, 0.0, &mut Pcg64::new(1, 2));
+        let wifi = fleet.iter().filter(|d| d.tier == "wifi").count();
+        // Expect ~75% wifi; allow a generous band.
+        assert!((1300..1700).contains(&wifi), "wifi count {wifi}");
+    }
+
+    #[test]
+    fn zero_jitter_matches_tier_rates_exactly() {
+        let tiers = vec![DeviceTier::new("only", 1.0, 10.0, 5.0, 100.0)];
+        let fleet = sample_fleet(&tiers, 5, 0.0, &mut Pcg64::new(3, 3));
+        for d in &fleet {
+            assert_eq!(d.down_bps, 10_000_000);
+            assert_eq!(d.up_bps, 5_000_000);
+            assert!((d.examples_per_sec - 100.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn jitter_stays_in_band() {
+        let tiers = vec![DeviceTier::new("only", 1.0, 10.0, 10.0, 100.0)];
+        let fleet = sample_fleet(&tiers, 500, 0.25, &mut Pcg64::new(4, 4));
+        for d in &fleet {
+            assert!((7_500_000..=12_500_000).contains(&d.down_bps), "{}", d.down_bps);
+            assert!((75.0..=125.0).contains(&d.examples_per_sec));
+        }
+    }
+}

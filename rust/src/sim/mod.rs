@@ -1,0 +1,470 @@
+//! Discrete-event federated *systems* simulator: a virtual clock over a
+//! heterogeneous device fleet.
+//!
+//! The byte ledger ([`crate::fl::NetworkLedger`]) tells you a 40× ratio;
+//! this module tells you what that ratio is *worth*: it replays each
+//! FedAvg round as timed events over devices with real bandwidths and
+//! compute throughputs, so float32 and cosine-k-bit runs compare in
+//! **simulated seconds to target accuracy**, not just bytes.
+//!
+//! ```text
+//!            one round, per participating device
+//!   ────────────────────────────────────────────────────────▶ virtual time
+//!   │ broadcast          │ local training       │ upload        │
+//!   │ frame bytes        │ examples             │ frame bytes   │
+//!   │ ───────────        │ ────────────────     │ ───────────   │
+//!   │ device ↓ bandwidth │ device throughput    │ device ↑ bw   │
+//!   └────────────────────┴──────────────────────┴───────────────┘
+//!                                                 ▲
+//!        RoundPolicy closes the round here ───────┘
+//!        (slowest reporter, or the K-th when over-selecting)
+//! ```
+//!
+//! Everything is deterministic: integer-tick time ([`clock`]), seeded
+//! fleet sampling ([`device`]), seeded availability/dropout lanes, and a
+//! FIFO-tie-broken event queue — same seed + config ⇒ tick-identical
+//! [`Timeline`].
+//!
+//! | file | contents |
+//! |------|----------|
+//! | [`clock`] | `Ticks`, transfer/compute time math, deterministic `EventQueue` |
+//! | [`device`] | `DeviceTier` populations → sampled `DeviceProfile` fleet |
+//! | [`policy`] | `RoundPolicy`: synchronous vs. deadline over-selection |
+//! | [`timeline`] | `TimelineRecord` stream, time-to-target-metric |
+//! | this file | `SimConfig` presets + the [`FleetSim`] round engine |
+
+pub mod clock;
+pub mod device;
+pub mod policy;
+pub mod timeline;
+
+pub use clock::{compute_ticks, secs, transfer_ticks, EventQueue, Ticks};
+pub use device::{sample_fleet, DeviceProfile, DeviceTier};
+pub use policy::RoundPolicy;
+pub use timeline::{fmt_sim_secs, Timeline, TimelineRecord};
+
+use crate::util::rng::Pcg64;
+
+/// Fleet + policy description: everything the simulator needs besides the
+/// per-round transfer sizes the runner threads through.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Device populations to sample the fleet from.
+    pub tiers: Vec<DeviceTier>,
+    /// Round-completion policy.
+    pub policy: RoundPolicy,
+    /// P(selected device is reachable when the round opens).
+    pub availability: f64,
+    /// P(participating device fails mid-round and never reports).
+    pub dropout: f64,
+    /// ± fractional jitter applied to every sampled device rate.
+    pub jitter: f64,
+}
+
+impl SimConfig {
+    /// Homogeneous always-on wifi fleet — isolates protocol timing from
+    /// heterogeneity (every device identical, nobody offline).
+    pub fn uniform() -> SimConfig {
+        SimConfig {
+            tiers: vec![DeviceTier::new("wifi·fast", 1.0, 50.0, 20.0, 4000.0)],
+            policy: RoundPolicy::Synchronous,
+            availability: 1.0,
+            dropout: 0.0,
+            jitter: 0.0,
+        }
+    }
+
+    /// The deployment regime that motivates low-bit quantization:
+    /// wifi/4g/3g × fast/slow compute, 90% availability, 3% mid-round
+    /// dropout, ±20% per-device jitter.
+    pub fn heterogeneous() -> SimConfig {
+        SimConfig {
+            tiers: vec![
+                DeviceTier::new("wifi·fast", 0.25, 50.0, 20.0, 4000.0),
+                DeviceTier::new("wifi·slow", 0.15, 50.0, 20.0, 500.0),
+                DeviceTier::new("4g·fast", 0.20, 20.0, 8.0, 4000.0),
+                DeviceTier::new("4g·slow", 0.20, 20.0, 8.0, 500.0),
+                DeviceTier::new("3g·fast", 0.10, 2.0, 0.75, 4000.0),
+                DeviceTier::new("3g·slow", 0.10, 2.0, 0.75, 500.0),
+            ],
+            policy: RoundPolicy::Synchronous,
+            availability: 0.9,
+            dropout: 0.03,
+            jitter: 0.2,
+        }
+    }
+
+    /// Bandwidth-bound 3G-only fleet: transfer time dominates, so
+    /// compression ratios translate almost 1:1 into round-time speedups.
+    pub fn cellular() -> SimConfig {
+        SimConfig {
+            tiers: vec![
+                DeviceTier::new("3g·fast", 0.5, 2.0, 0.75, 4000.0),
+                DeviceTier::new("3g·slow", 0.5, 2.0, 0.75, 500.0),
+            ],
+            policy: RoundPolicy::Synchronous,
+            availability: 0.95,
+            dropout: 0.02,
+            jitter: 0.2,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: RoundPolicy) -> SimConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Compact label for tables / results files.
+    pub fn name(&self) -> String {
+        format!(
+            "{} tiers · {} · avail {:.2} · drop {:.2}",
+            self.tiers.len(),
+            self.policy.name(),
+            self.availability,
+            self.dropout
+        )
+    }
+}
+
+/// What the availability/dropout lottery decided for one round.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    /// Devices that will actually train this round, in selection order.
+    pub active: Vec<usize>,
+    /// How many were selected in total.
+    pub selected: usize,
+    /// Selected but unreachable when the round opened.
+    pub offline: usize,
+    /// Will start training but fail mid-round (never report).
+    pub dropouts: usize,
+}
+
+impl RoundPlan {
+    /// A plan with everyone participating (the no-simulator path).
+    pub fn full(active: Vec<usize>) -> RoundPlan {
+        RoundPlan {
+            selected: active.len(),
+            active,
+            offline: 0,
+            dropouts: 0,
+        }
+    }
+}
+
+/// One participant's measured round inputs: who it is and what it moves.
+#[derive(Debug, Clone)]
+pub struct ClientLoad {
+    /// Device index into the fleet.
+    pub device: usize,
+    /// Real serialized uplink frame size for this client's update.
+    pub upload_bytes: usize,
+    /// Examples processed locally this round.
+    pub examples: u64,
+}
+
+/// What the event replay decided.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Devices whose uploads were aggregated, in arrival order.
+    pub kept: Vec<usize>,
+    /// Round duration in ticks.
+    pub duration: Ticks,
+    /// Survivors aborted when the quota filled.
+    pub stragglers_dropped: usize,
+}
+
+/// The fleet-level simulator: devices, virtual clock, and the per-round
+/// discrete-event replay.
+pub struct FleetSim {
+    pub devices: Vec<DeviceProfile>,
+    policy: RoundPolicy,
+    availability: f64,
+    dropout: f64,
+    /// Availability/dropout lane — separate from fleet sampling so adding
+    /// rounds never reshuffles the fleet.
+    rng: Pcg64,
+    clock: Ticks,
+    timeline: Timeline,
+}
+
+/// Per-participant lifecycle events (index into the round's load list).
+enum Ev {
+    BroadcastDone(usize),
+    TrainDone(usize),
+    UploadDone(usize),
+}
+
+impl FleetSim {
+    /// Sample an `n_devices` fleet and zero the clock. Two seed lanes:
+    /// `0xF1EE7` for fleet sampling, `0xD1CE` for per-round lotteries.
+    pub fn new(cfg: &SimConfig, n_devices: usize, seed: u64) -> FleetSim {
+        let devices = sample_fleet(
+            &cfg.tiers,
+            n_devices,
+            cfg.jitter,
+            &mut Pcg64::new(seed, 0xF1EE7),
+        );
+        FleetSim {
+            devices,
+            policy: cfg.policy.clone(),
+            availability: cfg.availability,
+            dropout: cfg.dropout,
+            rng: Pcg64::new(seed, 0xD1CE),
+            clock: 0,
+            timeline: Timeline::default(),
+        }
+    }
+
+    /// Current virtual time.
+    pub fn clock(&self) -> Ticks {
+        self.clock
+    }
+
+    /// Policy-adjusted selection size targeting `k` reporters.
+    pub fn selection_count(&self, k: usize) -> usize {
+        self.policy.selection_count(k, self.devices.len())
+    }
+
+    /// Open a round: roll availability and mid-round dropout for each
+    /// candidate (two Bernoulli draws per candidate, in candidate order,
+    /// so the lottery stream is reproducible). Only `active` devices are
+    /// worth training — offline devices never start, dropouts would never
+    /// report.
+    pub fn begin_round(&mut self, candidates: &[usize]) -> RoundPlan {
+        let mut plan = RoundPlan {
+            active: Vec::with_capacity(candidates.len()),
+            selected: candidates.len(),
+            offline: 0,
+            dropouts: 0,
+        };
+        for &c in candidates {
+            debug_assert!(c < self.devices.len(), "device {c} outside fleet");
+            let online = self.rng.bernoulli(self.availability);
+            let fails = self.rng.bernoulli(self.dropout);
+            if !online {
+                plan.offline += 1;
+            } else if fails {
+                plan.dropouts += 1;
+            } else {
+                plan.active.push(c);
+            }
+        }
+        plan
+    }
+
+    /// Replay one round's events: per participant, broadcast transfer →
+    /// local training → upload transfer, each timed by that device's
+    /// profile. The policy's quota closes the round; pending uploads are
+    /// aborted as stragglers. Advances the virtual clock and appends a
+    /// [`TimelineRecord`].
+    pub fn complete_round(
+        &mut self,
+        round: usize,
+        plan: &RoundPlan,
+        k_target: usize,
+        broadcast_bytes: usize,
+        loads: &[ClientLoad],
+    ) -> RoundOutcome {
+        let start = self.clock;
+        let quota = self.policy.quota(k_target, loads.len());
+        let mut q = EventQueue::new();
+        let mut phases: Vec<(Ticks, Ticks, Ticks)> = Vec::with_capacity(loads.len());
+        for (i, load) in loads.iter().enumerate() {
+            let d = &self.devices[load.device];
+            let b = transfer_ticks(broadcast_bytes as u64, d.down_bps);
+            let c = compute_ticks(load.examples, d.examples_per_sec);
+            let u = transfer_ticks(load.upload_bytes as u64, d.up_bps);
+            phases.push((b, c, u));
+            q.push(start + b, Ev::BroadcastDone(i));
+        }
+
+        let mut kept: Vec<usize> = Vec::with_capacity(quota);
+        let mut end = start;
+        let mut critical: Option<usize> = None;
+        while let Some((t, ev)) = q.pop() {
+            match ev {
+                Ev::BroadcastDone(i) => q.push(t + phases[i].1, Ev::TrainDone(i)),
+                Ev::TrainDone(i) => q.push(t + phases[i].2, Ev::UploadDone(i)),
+                Ev::UploadDone(i) => {
+                    kept.push(i);
+                    end = t;
+                    critical = Some(i);
+                    if kept.len() >= quota {
+                        // Quota filled: the round closes NOW; everything
+                        // still in flight is a straggler, aborted.
+                        q.clear();
+                    }
+                }
+            }
+        }
+
+        let stragglers_dropped = loads.len() - kept.len();
+        let (bt, ct, ut) = critical.map_or((0, 0, 0), |i| phases[i]);
+        self.clock = end;
+        self.timeline.push(TimelineRecord {
+            round,
+            start,
+            end,
+            broadcast_ticks: bt,
+            compute_ticks: ct,
+            upload_ticks: ut,
+            selected: plan.selected,
+            offline: plan.offline,
+            dropouts: plan.dropouts,
+            reporters: kept.len(),
+            stragglers_dropped,
+        });
+        RoundOutcome {
+            kept: kept.into_iter().map(|i| loads[i].device).collect(),
+            duration: end - start,
+            stragglers_dropped,
+        }
+    }
+
+    /// The timeline so far.
+    pub fn timeline(&self) -> &Timeline {
+        &self.timeline
+    }
+
+    /// Consume the simulator, yielding its timeline.
+    pub fn into_timeline(self) -> Timeline {
+        self.timeline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(devices: &[usize], upload_bytes: usize, examples: u64) -> Vec<ClientLoad> {
+        devices
+            .iter()
+            .map(|&device| ClientLoad {
+                device,
+                upload_bytes,
+                examples,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn uniform_round_matches_closed_form() {
+        // jitter 0 → every device is exactly the tier: 50 Mbps down,
+        // 20 Mbps up, 4000 ex/s.
+        let mut sim = FleetSim::new(&SimConfig::uniform(), 10, 1);
+        let plan = sim.begin_round(&[0, 1, 2]);
+        assert_eq!(plan.active, vec![0, 1, 2]);
+        let ls = loads(&plan.active, 100_000, 2000);
+        let out = sim.complete_round(1, &plan, 3, 400_000, &ls);
+        let expect = transfer_ticks(400_000, 50_000_000)
+            + compute_ticks(2000, 4000.0)
+            + transfer_ticks(100_000, 20_000_000);
+        assert_eq!(out.duration, expect);
+        assert_eq!(out.kept, vec![0, 1, 2]); // identical devices: FIFO ties
+        assert_eq!(out.stragglers_dropped, 0);
+        let rec = &sim.timeline().records[0];
+        assert_eq!(rec.duration(), expect);
+        assert_eq!(
+            rec.broadcast_ticks + rec.compute_ticks + rec.upload_ticks,
+            expect
+        );
+    }
+
+    #[test]
+    fn clock_accumulates_across_rounds() {
+        let mut sim = FleetSim::new(&SimConfig::uniform(), 4, 2);
+        for round in 1..=3 {
+            let plan = sim.begin_round(&[0, 1]);
+            let ls = loads(&plan.active, 10_000, 100);
+            sim.complete_round(round, &plan, 2, 10_000, &ls);
+        }
+        let tl = sim.timeline();
+        assert_eq!(tl.records.len(), 3);
+        assert_eq!(tl.records[1].start, tl.records[0].end);
+        assert_eq!(tl.total_ticks(), tl.records[2].end);
+        assert_eq!(tl.total_ticks(), 3 * tl.records[0].duration());
+    }
+
+    #[test]
+    fn overselect_keeps_first_k_and_aborts_stragglers() {
+        let cfg = SimConfig::uniform().with_policy(RoundPolicy::OverSelect {
+            over_sample: 2.0,
+        });
+        let mut sim = FleetSim::new(&cfg, 20, 3);
+        assert_eq!(sim.selection_count(5), 10);
+        let candidates: Vec<usize> = (0..10).collect();
+        let plan = sim.begin_round(&candidates);
+        assert_eq!(plan.active.len(), 10); // uniform: everyone online
+        // Heavier uploads finish later on identical devices.
+        let ls: Vec<ClientLoad> = plan
+            .active
+            .iter()
+            .map(|&device| ClientLoad {
+                device,
+                upload_bytes: (device + 1) * 10_000,
+                examples: 100,
+            })
+            .collect();
+        let out = sim.complete_round(1, &plan, 5, 1_000, &ls);
+        assert_eq!(out.kept, vec![0, 1, 2, 3, 4]);
+        assert_eq!(out.stragglers_dropped, 5);
+        let rec = &sim.timeline().records[0];
+        assert_eq!(rec.reporters, 5);
+        assert_eq!(rec.stragglers_dropped, 5);
+        // The critical path is the 5th reporter, not the slowest device.
+        assert_eq!(rec.upload_ticks, transfer_ticks(5 * 10_000, 20_000_000));
+    }
+
+    #[test]
+    fn synchronous_waits_for_the_slowest() {
+        let mut sim = FleetSim::new(&SimConfig::uniform(), 4, 4);
+        let plan = sim.begin_round(&[0, 1]);
+        let ls = vec![
+            ClientLoad { device: 0, upload_bytes: 1_000, examples: 100 },
+            ClientLoad { device: 1, upload_bytes: 1_000_000, examples: 100 },
+        ];
+        let out = sim.complete_round(1, &plan, 2, 1_000, &ls);
+        assert_eq!(out.kept, vec![0, 1]);
+        let slow = transfer_ticks(1_000, 50_000_000)
+            + compute_ticks(100, 4000.0)
+            + transfer_ticks(1_000_000, 20_000_000);
+        assert_eq!(out.duration, slow);
+    }
+
+    #[test]
+    fn lottery_partitions_the_selection() {
+        let mut cfg = SimConfig::uniform();
+        cfg.availability = 0.5;
+        cfg.dropout = 0.2;
+        let mut sim = FleetSim::new(&cfg, 500, 5);
+        let candidates: Vec<usize> = (0..500).collect();
+        let plan = sim.begin_round(&candidates);
+        assert_eq!(
+            plan.active.len() + plan.offline + plan.dropouts,
+            plan.selected
+        );
+        assert!(plan.offline > 150, "offline {}", plan.offline);
+        assert!(plan.dropouts > 20, "dropouts {}", plan.dropouts);
+        assert!(!plan.active.is_empty());
+    }
+
+    #[test]
+    fn empty_round_is_instant() {
+        let mut sim = FleetSim::new(&SimConfig::uniform(), 2, 6);
+        let plan = RoundPlan::full(vec![]);
+        let out = sim.complete_round(1, &plan, 1, 1_000, &[]);
+        assert_eq!(out.duration, 0);
+        assert!(out.kept.is_empty());
+        assert_eq!(sim.clock(), 0);
+    }
+
+    #[test]
+    fn preset_names() {
+        assert!(SimConfig::heterogeneous().name().contains("6 tiers"));
+        assert!(SimConfig::uniform().name().contains("sync"));
+        assert!(SimConfig::cellular()
+            .with_policy(RoundPolicy::OverSelect { over_sample: 1.5 })
+            .name()
+            .contains("overselect"));
+    }
+}

@@ -1,0 +1,89 @@
+//! Round-completion policies: what the server waits for before closing a
+//! round.
+//!
+//! * [`RoundPolicy::Synchronous`] — pure FedAvg: the round ends when the
+//!   *slowest* surviving participant reports. Simple, but one 3G straggler
+//!   gates the whole fleet.
+//! * [`RoundPolicy::OverSelect`] — deadline-style over-selection (the
+//!   standard production mitigation): select `⌈K·over_sample⌉` clients,
+//!   close the round as soon as the first `K` uploads land, and abort the
+//!   stragglers mid-flight (their uploads are neither aggregated nor
+//!   metered).
+
+/// When does a round end?
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoundPolicy {
+    /// Wait for every surviving participant.
+    Synchronous,
+    /// Select `⌈K·over_sample⌉`, keep the first `K` reporters.
+    OverSelect { over_sample: f64 },
+}
+
+impl RoundPolicy {
+    /// How many clients to select so that `k` reporters are expected,
+    /// clamped to the fleet size `n`.
+    pub fn selection_count(&self, k: usize, n: usize) -> usize {
+        match self {
+            RoundPolicy::Synchronous => k.min(n),
+            RoundPolicy::OverSelect { over_sample } => {
+                ((k as f64 * over_sample).ceil() as usize).max(k).min(n)
+            }
+        }
+    }
+
+    /// How many reporters close the round, given `active` surviving
+    /// participants.
+    pub fn quota(&self, k: usize, active: usize) -> usize {
+        match self {
+            RoundPolicy::Synchronous => active,
+            RoundPolicy::OverSelect { .. } => k.min(active),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RoundPolicy::Synchronous => "sync".into(),
+            RoundPolicy::OverSelect { over_sample } => {
+                format!("overselect x{over_sample:.2}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synchronous_selects_exactly_k_and_waits_for_all() {
+        let p = RoundPolicy::Synchronous;
+        assert_eq!(p.selection_count(10, 100), 10);
+        assert_eq!(p.selection_count(10, 5), 5);
+        assert_eq!(p.quota(10, 7), 7); // dropouts thinned the round
+    }
+
+    #[test]
+    fn overselect_rounds_up_and_caps_at_fleet() {
+        let p = RoundPolicy::OverSelect { over_sample: 1.3 };
+        assert_eq!(p.selection_count(10, 100), 13);
+        assert_eq!(p.selection_count(3, 100), 4); // ceil(3.9)
+        assert_eq!(p.selection_count(10, 11), 11);
+        assert_eq!(p.quota(10, 13), 10);
+        assert_eq!(p.quota(10, 6), 6); // never wait for more than survive
+    }
+
+    #[test]
+    fn overselect_below_one_never_underselects() {
+        let p = RoundPolicy::OverSelect { over_sample: 0.5 };
+        assert_eq!(p.selection_count(10, 100), 10);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(RoundPolicy::Synchronous.name(), "sync");
+        assert_eq!(
+            RoundPolicy::OverSelect { over_sample: 1.3 }.name(),
+            "overselect x1.30"
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! The simulator's output stream: one [`TimelineRecord`] per round
+//! (simulated seconds per phase, straggler/dropout counts) and the
+//! [`Timeline`] aggregate with the headline number — **time to target
+//! metric** — that turns compression ratios into wall-clock speedups.
+
+use crate::fl::metrics::History;
+use crate::util::json::Json;
+
+use super::clock::{secs, Ticks};
+
+/// One simulated round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimelineRecord {
+    /// 1-based round index (matches [`crate::fl::RoundRecord::round`]).
+    pub round: usize,
+    /// Virtual time when the round opened.
+    pub start: Ticks,
+    /// Virtual time when the round closed (the quota-th upload landed).
+    pub end: Ticks,
+    /// Phase breakdown of the *critical-path* reporter — the device whose
+    /// upload closed the round.
+    pub broadcast_ticks: Ticks,
+    pub compute_ticks: Ticks,
+    pub upload_ticks: Ticks,
+    /// Clients selected this round (after policy over-selection).
+    pub selected: usize,
+    /// Selected but unreachable when the round opened.
+    pub offline: usize,
+    /// Started the round but failed mid-round; never reported.
+    pub dropouts: usize,
+    /// Uploads that were aggregated.
+    pub reporters: usize,
+    /// Survivors whose uploads were aborted when the quota filled.
+    pub stragglers_dropped: usize,
+}
+
+impl TimelineRecord {
+    /// Round duration in ticks.
+    pub fn duration(&self) -> Ticks {
+        self.end - self.start
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("round", self.round)
+            .set("start_secs", secs(self.start))
+            .set("end_secs", secs(self.end))
+            .set("broadcast_secs", secs(self.broadcast_ticks))
+            .set("compute_secs", secs(self.compute_ticks))
+            .set("upload_secs", secs(self.upload_ticks))
+            .set("selected", self.selected)
+            .set("offline", self.offline)
+            .set("dropouts", self.dropouts)
+            .set("reporters", self.reporters)
+            .set("stragglers_dropped", self.stragglers_dropped)
+    }
+}
+
+/// The full simulated run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Timeline {
+    pub records: Vec<TimelineRecord>,
+}
+
+impl Timeline {
+    pub fn push(&mut self, r: TimelineRecord) {
+        self.records.push(r);
+    }
+
+    /// Total simulated time (virtual clock at the end of the last round).
+    pub fn total_ticks(&self) -> Ticks {
+        self.records.last().map_or(0, |r| r.end)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        secs(self.total_ticks())
+    }
+
+    /// Total stragglers aborted across the run.
+    pub fn stragglers_dropped(&self) -> usize {
+        self.records.iter().map(|r| r.stragglers_dropped).sum()
+    }
+
+    /// Total mid-round dropouts across the run.
+    pub fn dropouts(&self) -> usize {
+        self.records.iter().map(|r| r.dropouts).sum()
+    }
+
+    /// Total devices that were selected but offline across the run.
+    pub fn offline(&self) -> usize {
+        self.records.iter().map(|r| r.offline).sum()
+    }
+
+    /// Simulated seconds until the run first reaches `target` on the eval
+    /// metric: the virtual-clock time at the end of the first round whose
+    /// [`History`] record evaluates at `≥ target`. `None` if the target is
+    /// never reached (or never evaluated).
+    pub fn time_to_metric(&self, history: &History, target: f64) -> Option<f64> {
+        let round = history
+            .records
+            .iter()
+            .find(|r| r.eval_metric.is_some_and(|m| m >= target))?
+            .round;
+        let rec = self.records.iter().find(|t| t.round == round)?;
+        Some(secs(rec.end))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("total_secs", self.total_secs())
+            .set("stragglers_dropped", self.stragglers_dropped())
+            .set("dropouts", self.dropouts())
+            .set("offline", self.offline())
+            .set(
+                "records",
+                Json::Arr(self.records.iter().map(TimelineRecord::to_json).collect()),
+            )
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} rounds in {} simulated ({} stragglers dropped, {} dropouts, {} offline)",
+            self.records.len(),
+            fmt_sim_secs(self.total_secs()),
+            self.stragglers_dropped(),
+            self.dropouts(),
+            self.offline(),
+        )
+    }
+}
+
+/// Human form of a simulated duration: `"42.1s"`, `"12.3m"`, `"2.1h"`.
+pub fn fmt_sim_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.1}h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::metrics::RoundRecord;
+
+    fn tl_rec(round: usize, start: Ticks, end: Ticks) -> TimelineRecord {
+        TimelineRecord {
+            round,
+            start,
+            end,
+            broadcast_ticks: 0,
+            compute_ticks: 0,
+            upload_ticks: 0,
+            selected: 10,
+            offline: 0,
+            dropouts: 0,
+            reporters: 10,
+            stragglers_dropped: 0,
+        }
+    }
+
+    fn hist_rec(round: usize, metric: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 0.5,
+            eval_metric: metric,
+            eval_loss: None,
+            uplink_bytes: 100,
+            downlink_bytes: 400,
+            clients: 10,
+        }
+    }
+
+    #[test]
+    fn time_to_metric_finds_first_crossing() {
+        let mut tl = Timeline::default();
+        tl.push(tl_rec(1, 0, 10_000_000));
+        tl.push(tl_rec(2, 10_000_000, 20_000_000));
+        tl.push(tl_rec(3, 20_000_000, 30_000_000));
+        let mut h = History::new("s");
+        h.push(hist_rec(1, None));
+        h.push(hist_rec(2, Some(0.5)));
+        h.push(hist_rec(3, Some(0.9)));
+        assert_eq!(tl.time_to_metric(&h, 0.4), Some(20.0));
+        assert_eq!(tl.time_to_metric(&h, 0.8), Some(30.0));
+        assert_eq!(tl.time_to_metric(&h, 0.99), None);
+        assert!((tl.total_secs() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn totals_aggregate_over_rounds() {
+        let mut tl = Timeline::default();
+        let mut a = tl_rec(1, 0, 5);
+        a.stragglers_dropped = 2;
+        a.dropouts = 1;
+        let mut b = tl_rec(2, 5, 9);
+        b.stragglers_dropped = 1;
+        b.offline = 3;
+        tl.push(a);
+        tl.push(b);
+        assert_eq!(tl.stragglers_dropped(), 3);
+        assert_eq!(tl.dropouts(), 1);
+        assert_eq!(tl.offline(), 3);
+        assert_eq!(tl.total_ticks(), 9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut tl = Timeline::default();
+        tl.push(tl_rec(1, 0, 2_000_000));
+        let j = tl.to_json();
+        assert_eq!(j.get("total_secs").unwrap().as_f64(), Some(2.0));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs[0].get("round").unwrap().as_usize(), Some(1));
+        assert_eq!(recs[0].get("end_secs").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_sim_secs(42.13), "42.1s");
+        assert_eq!(fmt_sim_secs(125.0), "2.1m");
+        assert_eq!(fmt_sim_secs(7560.0), "2.1h");
+    }
+}
