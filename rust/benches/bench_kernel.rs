@@ -1,0 +1,28 @@
+//! Kernel micro-benchmarks: the transcendental-free quantize (threshold
+//! search) vs the reference `acos` path, LUT dequantize, and the
+//! word-at-a-time bit packer — the compress perf trajectory.
+//!
+//! `--quick` caps sampling for CI smoke runs; `--json` records
+//! `BENCH_compress.json` (schema `cossgd-bench/v1`) so ns/elem numbers
+//! are comparable across PRs.
+
+use cossgd::compress::perf;
+use cossgd::util::bench::{json_requested, quick_requested, write_trajectory, Bencher};
+
+fn main() {
+    let mut b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    };
+    let n = 1 << 20; // ~1M elements, the scale of the acceptance criterion
+    perf::run_suite(&mut b, n, 1);
+    if let Some(speedup) = perf::headline_speedup(b.results()) {
+        println!("headline: 4-bit biased quantize+pack kernel speedup {speedup:.1}x vs reference");
+    }
+    if json_requested() {
+        let path = std::path::Path::new("BENCH_compress.json");
+        write_trajectory(path, perf::SUITE, b.results()).expect("write trajectory");
+        println!("trajectory written to {path:?}");
+    }
+}

@@ -3,9 +3,15 @@
 //! next to real local training — these numbers bound what it costs per
 //! round at various fleet scales (3 events per participant: broadcast →
 //! train → upload).
+//!
+//! Every case annotates its event count, so ns/elem in the trajectory IS
+//! ns/event; `--json` records `BENCH_sim.json` in the same
+//! `cossgd-bench/v1` schema as `BENCH_compress.json` — sim and compress
+//! perf share one trajectory file format across PRs. `--quick` caps
+//! sampling for CI smoke runs.
 
 use cossgd::sim::{ClientLoad, FleetSim, RoundPlan, RoundPolicy, SimConfig};
-use cossgd::util::bench::Bencher;
+use cossgd::util::bench::{json_requested, quick_requested, write_trajectory, Bencher};
 
 fn loads_for(plan: &RoundPlan, upload_bytes: usize) -> Vec<ClientLoad> {
     plan.active
@@ -20,7 +26,11 @@ fn loads_for(plan: &RoundPlan, upload_bytes: usize) -> Vec<ClientLoad> {
 }
 
 fn main() {
-    let mut b = Bencher::new();
+    let mut b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    };
     println!("== fleet sampling ==");
     for &n in &[1_000usize, 100_000, 1_000_000] {
         let cfg = SimConfig::heterogeneous();
@@ -67,4 +77,9 @@ fn main() {
 
     let total_cases = b.results().len();
     println!("{total_cases} cases done");
+    if json_requested() {
+        let path = std::path::Path::new("BENCH_sim.json");
+        write_trajectory(path, "sim", b.results()).expect("write trajectory");
+        println!("trajectory written to {path:?} (ns_per_elem = ns per simulator event)");
+    }
 }

@@ -4,14 +4,29 @@
 //! (`s` ∈ 1..=16). On the wire each code occupies exactly `s` bits,
 //! LSB-first within a little-endian bit stream — the format DEFLATE then
 //! compresses further.
+//!
+//! Implementation: a 64-bit accumulator flushing whole little-endian
+//! words, instead of the byte-at-a-time loop of earlier revisions. The
+//! wire layout is unchanged byte-for-byte (`tests/wire_format.rs` pins
+//! it): an LSB-first bit stream has exactly one byte serialization, so
+//! any flush granularity produces identical output — words just cut the
+//! bookkeeping per code from ~`s/8` byte stores to ~`s/64` word stores.
 
 /// Pack `codes` (each `< 2^bits`) into a byte vector, LSB-first.
 pub fn pack(codes: &[u16], bits: u8) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_into(codes, bits, &mut out);
+    out
+}
+
+/// [`pack`] into a reusable buffer (cleared first).
+pub fn pack_into(codes: &[u16], bits: u8, out: &mut Vec<u8>) {
     assert!((1..=16).contains(&bits), "bits must be in 1..=16");
     let bits = bits as u32;
     let total_bits = codes.len() * bits as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
-    let mut acc: u32 = 0; // bit accumulator
+    out.clear();
+    out.resize(total_bits.div_ceil(8), 0);
+    let mut acc: u64 = 0; // bit accumulator
     let mut nbits: u32 = 0; // valid bits in acc
     let mut pos = 0usize; // next output byte
     for &c in codes {
@@ -19,23 +34,33 @@ pub fn pack(codes: &[u16], bits: u8) -> Vec<u8> {
             (c as u32) < (1u32 << bits),
             "code {c} does not fit in {bits} bits"
         );
-        acc |= (c as u32) << nbits;
+        // The shift drops any bits beyond 64; they are exactly the high
+        // bits of `c` re-seeded into the fresh accumulator after a flush.
+        acc |= (c as u64) << nbits;
         nbits += bits;
-        while nbits >= 8 {
-            out[pos] = acc as u8;
-            pos += 1;
-            acc >>= 8;
-            nbits -= 8;
+        if nbits >= 64 {
+            out[pos..pos + 8].copy_from_slice(&acc.to_le_bytes());
+            pos += 8;
+            nbits -= 64;
+            acc = if nbits > 0 { (c as u64) >> (bits - nbits) } else { 0 };
         }
     }
     if nbits > 0 {
-        out[pos] = acc as u8;
+        let tail = acc.to_le_bytes();
+        let nb = (nbits as usize).div_ceil(8);
+        out[pos..pos + nb].copy_from_slice(&tail[..nb]);
     }
-    out
 }
 
 /// Unpack `n` codes of `bits` bits each from `bytes`.
 pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u16> {
+    let mut out = Vec::new();
+    unpack_into(bytes, bits, n, &mut out);
+    out
+}
+
+/// [`unpack`] into a reusable buffer (cleared first).
+pub fn unpack_into(bytes: &[u8], bits: u8, n: usize, out: &mut Vec<u16>) {
     assert!((1..=16).contains(&bits), "bits must be in 1..=16");
     let bits = bits as u32;
     let needed = (n * bits as usize).div_ceil(8);
@@ -44,22 +69,34 @@ pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u16> {
         "unpack: need {needed} bytes for {n} codes of {bits} bits, got {}",
         bytes.len()
     );
-    let mask: u32 = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
-    let mut out = Vec::with_capacity(n);
-    let mut acc: u32 = 0;
+    let mask: u64 = (1u64 << bits) - 1;
+    out.clear();
+    out.reserve(n);
+    // 128-bit accumulator: refills pull a whole 64-bit word while up to 63
+    // residual bits are still pending, so the hot loop touches memory once
+    // per 64 bits instead of once per byte.
+    let mut acc: u128 = 0;
     let mut nbits: u32 = 0;
     let mut pos = 0usize;
     for _ in 0..n {
-        while nbits < bits {
-            acc |= (bytes[pos] as u32) << nbits;
-            pos += 1;
-            nbits += 8;
+        if nbits < bits {
+            if pos + 8 <= bytes.len() {
+                let w = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+                acc |= (w as u128) << nbits;
+                pos += 8;
+                nbits += 64;
+            } else {
+                while nbits < bits {
+                    acc |= (bytes[pos] as u128) << nbits;
+                    pos += 1;
+                    nbits += 8;
+                }
+            }
         }
-        out.push((acc & mask) as u16);
+        out.push((acc as u64 & mask) as u16);
         acc >>= bits;
         nbits -= bits;
     }
-    out
 }
 
 /// Number of payload bytes for `n` codes at `bits` bits each.

@@ -19,6 +19,8 @@
 use crate::util::rng::Pcg64;
 use crate::util::stats::{kth_largest_abs, l2_norm};
 
+use super::kernel::{self, KernelScratch};
+
 use std::f32::consts::PI;
 
 /// How the angle bound `b_θ` is obtained (§3, Fig. 2).
@@ -72,12 +74,61 @@ impl CosineQuantizer {
 
     /// Quantize a gradient vector. Returns codes (one per element) plus the
     /// two floats the server needs to invert the mapping.
+    ///
+    /// Fast path: for [`Rounding::Biased`] the nonlinear map is replaced by
+    /// the transcendental-free threshold search of [`super::kernel`] —
+    /// bit-identical to [`Self::quantize_reference`] (property-tested in
+    /// `tests/kernel_equivalence.rs`). [`Rounding::Unbiased`] draws a
+    /// uniform per element, so it keeps the reference `acos` loop.
     pub fn quantize(&self, g: &[f32], rng: &mut Pcg64) -> CosineQuantized {
+        let mut scratch = KernelScratch::new();
+        let mut codes = Vec::new();
+        let (norm, bound) = self.quantize_into(g, rng, &mut scratch, &mut codes);
+        CosineQuantized {
+            codes,
+            norm,
+            bound,
+            bits: self.bits,
+        }
+    }
+
+    /// Fast-path quantize writing into reusable buffers (the pipeline's
+    /// steady-state entry point). Returns `(norm, bound)`.
+    pub fn quantize_into(
+        &self,
+        g: &[f32],
+        rng: &mut Pcg64,
+        scratch: &mut KernelScratch,
+        codes: &mut Vec<u16>,
+    ) -> (f32, f32) {
         let n = g.len();
+        codes.clear();
         let norm = l2_norm(g) as f32;
         if !(norm.is_finite() && norm > 0.0) {
             // Zero (or non-finite) gradient: encode as all-zero with norm 0;
             // dequantize reproduces the zero vector exactly.
+            codes.resize(n, 0);
+            return (0.0, 0.0);
+        }
+        let bound = self.compute_bound(g, norm);
+        match self.rounding {
+            Rounding::Biased => {
+                kernel::quantize_cosine_biased(g, norm, bound, self.bits, scratch, codes);
+            }
+            Rounding::Unbiased => {
+                quantize_unbiased_reference(g, norm, bound, self.bits, rng, codes);
+            }
+        }
+        (norm, bound)
+    }
+
+    /// The reference `acos`-per-element encode — the kernel's ground truth
+    /// (and the only unbiased implementation). Kept callable for the
+    /// equivalence property tests and the perf-trajectory benchmarks.
+    pub fn quantize_reference(&self, g: &[f32], rng: &mut Pcg64) -> CosineQuantized {
+        let n = g.len();
+        let norm = l2_norm(g) as f32;
+        if !(norm.is_finite() && norm > 0.0) {
             return CosineQuantized {
                 codes: vec![0; n],
                 norm: 0.0,
@@ -108,27 +159,7 @@ impl CosineQuantizer {
                 }
             }
             Rounding::Unbiased => {
-                // Perf: one 64-bit PCG draw yields two 24-bit uniforms —
-                // halves the RNG cost of stochastic rounding.
-                let mut pending: Option<f32> = None;
-                for &gi in g {
-                    let theta =
-                        (gi * inv_norm).clamp(-1.0, 1.0).acos().clamp(bound, PI - bound);
-                    let v = (theta - bound) * scale;
-                    let f = v.floor();
-                    let p = v - f;
-                    let u = match pending.take() {
-                        Some(u) => u,
-                        None => {
-                            let word = rng.next_u64();
-                            const S: f32 = 1.0 / (1u32 << 24) as f32;
-                            pending = Some(((word >> 40) as u32) as f32 * S);
-                            ((word as u32) >> 8) as f32 * S
-                        }
-                    };
-                    let up = (u < p) as u16;
-                    codes.push(((f as u16) + up).min(max_code as u16));
-                }
+                quantize_unbiased_reference(g, norm, bound, self.bits, rng, &mut codes);
             }
         }
         CosineQuantized {
@@ -139,7 +170,7 @@ impl CosineQuantizer {
         }
     }
 
-    fn compute_bound(&self, g: &[f32], norm: f32) -> f32 {
+    pub(crate) fn compute_bound(&self, g: &[f32], norm: f32) -> f32 {
         match self.bound {
             BoundMode::Auto => {
                 let (mut tmin, mut tmax) = (PI, 0.0f32);
@@ -168,6 +199,46 @@ fn angle(gi: f32, norm: f32) -> f32 {
     (gi / norm).clamp(-1.0, 1.0).acos()
 }
 
+/// The probabilistic regime of Eq. (3): codes are a function of a uniform
+/// draw per element, so there is no transcendental-free table for it —
+/// this single implementation backs both the fast and reference entry
+/// points. `norm` must be finite and positive.
+fn quantize_unbiased_reference(
+    g: &[f32],
+    norm: f32,
+    bound: f32,
+    bits: u8,
+    rng: &mut Pcg64,
+    codes: &mut Vec<u16>,
+) {
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let range = PI - 2.0 * bound;
+    let inv_range = if range > 1e-6 { 1.0 / range } else { 0.0 };
+    let inv_norm = 1.0 / norm;
+    let scale = inv_range * max_code;
+    codes.reserve(g.len());
+    // Perf: one 64-bit PCG draw yields two 24-bit uniforms —
+    // halves the RNG cost of stochastic rounding.
+    let mut pending: Option<f32> = None;
+    for &gi in g {
+        let theta = (gi * inv_norm).clamp(-1.0, 1.0).acos().clamp(bound, PI - bound);
+        let v = (theta - bound) * scale;
+        let f = v.floor();
+        let p = v - f;
+        let u = match pending.take() {
+            Some(u) => u,
+            None => {
+                let word = rng.next_u64();
+                const S: f32 = 1.0 / (1u32 << 24) as f32;
+                pending = Some(((word >> 40) as u32) as f32 * S);
+                ((word as u32) >> 8) as f32 * S
+            }
+        };
+        let up = (u < p) as u16;
+        codes.push(((f as u16) + up).min(max_code as u16));
+    }
+}
+
 /// The output of [`CosineQuantizer::quantize`].
 #[derive(Debug, Clone)]
 pub struct CosineQuantized {
@@ -190,17 +261,26 @@ impl CosineQuantized {
     }
 }
 
-/// Server-side reconstruction from raw codes (shared with the wire decoder).
+/// Server-side reconstruction from raw codes (shared with the wire
+/// decoder). LUT-backed: only `2^s` distinct values exist per tensor, so
+/// the kernel evaluates `cos` once per level instead of once per element
+/// (bit-identical — each LUT entry is the per-element formula).
 pub fn dequantize_codes(codes: &[u16], norm: f32, bound: f32, bits: u8) -> Vec<f32> {
-    if norm == 0.0 {
-        return vec![0.0; codes.len()];
-    }
-    let max_code = ((1u32 << bits) - 1) as f32;
-    let step = (PI - 2.0 * bound) / max_code;
-    codes
-        .iter()
-        .map(|&c| (bound + c as f32 * step).cos() * norm)
-        .collect()
+    let mut out = Vec::new();
+    dequantize_codes_into(codes, norm, bound, bits, &mut KernelScratch::new(), &mut out);
+    out
+}
+
+/// [`dequantize_codes`] into reusable buffers (steady-state decode path).
+pub fn dequantize_codes_into(
+    codes: &[u16],
+    norm: f32,
+    bound: f32,
+    bits: u8,
+    scratch: &mut KernelScratch,
+    out: &mut Vec<f32>,
+) {
+    kernel::dequantize_cosine(codes, norm, bound, bits, scratch, out);
 }
 
 // ---------------------------------------------------------------------------
@@ -240,6 +320,36 @@ mod tests {
 
     fn q(bits: u8, rounding: Rounding) -> CosineQuantizer {
         CosineQuantizer::new(bits, rounding, BoundMode::Auto)
+    }
+
+    #[test]
+    fn fast_biased_path_matches_reference() {
+        // The full adversarial sweep lives in tests/kernel_equivalence.rs;
+        // this is the in-module smoke version.
+        let mut rng = Pcg64::seeded(77);
+        let g = gradient_like(&mut rng, 3000);
+        for bits in [1u8, 2, 4, 8, 12, 16] {
+            for bound in [BoundMode::Auto, BoundMode::ClipTopPercent(1.0)] {
+                let quant_cfg = CosineQuantizer::new(bits, Rounding::Biased, bound);
+                let fast = quant_cfg.quantize(&g, &mut Pcg64::seeded(1));
+                let refr = quant_cfg.quantize_reference(&g, &mut Pcg64::seeded(1));
+                assert_eq!(fast.codes, refr.codes, "bits={bits} bound={bound:?}");
+                assert_eq!(fast.norm.to_bits(), refr.norm.to_bits());
+                assert_eq!(fast.bound.to_bits(), refr.bound.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_fast_entry_matches_reference_stream() {
+        // Unbiased keeps the acos path; the two entry points must consume
+        // the RNG identically.
+        let mut rng = Pcg64::seeded(78);
+        let g = gradient_like(&mut rng, 500);
+        let quant_cfg = q(4, Rounding::Unbiased);
+        let fast = quant_cfg.quantize(&g, &mut Pcg64::seeded(2));
+        let refr = quant_cfg.quantize_reference(&g, &mut Pcg64::seeded(2));
+        assert_eq!(fast.codes, refr.codes);
     }
 
     #[test]

@@ -68,11 +68,18 @@ pub fn accumulated_compression_curve(data: &[u8], points: usize) -> Vec<(usize, 
 /// Reinterpret an f32 slice as little-endian bytes (the float32 baseline
 /// stream of Fig. 5).
 pub fn f32_bytes(xs: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(xs.len() * 4);
+    let mut out = Vec::new();
+    f32_bytes_into(xs, &mut out);
+    out
+}
+
+/// [`f32_bytes`] into a reusable buffer (cleared first).
+pub fn f32_bytes_into(xs: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(xs.len() * 4);
     for x in xs {
         out.extend_from_slice(&x.to_le_bytes());
     }
-    out
 }
 
 #[cfg(test)]

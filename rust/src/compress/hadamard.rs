@@ -32,23 +32,10 @@ pub fn fwht(data: &mut [f32]) {
     }
 }
 
-/// Seeded ±1 diagonal. Deterministic: the server regenerates it from the
-/// wire seed rather than receiving d bytes.
-fn rademacher(seed: u64, n: usize) -> Vec<f32> {
-    let mut rng = Pcg64::new(seed, 0xD1A6);
-    let mut out = Vec::with_capacity(n);
-    // 64 signs per draw.
-    let mut i = 0;
-    while i < n {
-        let mut word = rng.next_u64();
-        for _ in 0..64.min(n - i) {
-            out.push(if word & 1 == 1 { 1.0 } else { -1.0 });
-            word >>= 1;
-            i += 1;
-        }
-    }
-    out
-}
+// The seeded ±1 diagonal (64 signs per PCG word, stream 0xD1A6) is
+// applied streaming inside rotate_into/unrotate_into — deterministic, so
+// the server regenerates it from the wire seed rather than receiving d
+// bytes, and no sign buffer is ever materialized.
 
 /// Next power of two ≥ n (n ≥ 1).
 pub fn padded_len(n: usize) -> usize {
@@ -58,34 +45,68 @@ pub fn padded_len(n: usize) -> usize {
 /// Forward rotation: pad `g` to a power of two, apply `(1/√d)·H·D`.
 /// Returns the rotated vector of length `padded_len(g.len())`.
 pub fn rotate(g: &[f32], seed: u64) -> Vec<f32> {
+    let mut out = Vec::new();
+    rotate_into(g, seed, &mut out);
+    out
+}
+
+/// [`rotate`] into a reusable buffer. The ±1 diagonal is applied
+/// streaming off the RNG words (64 signs per draw, in index order), so
+/// the only storage is the output itself.
+pub fn rotate_into(g: &[f32], seed: u64, out: &mut Vec<f32>) {
     let d = padded_len(g.len().max(1));
-    let signs = rademacher(seed, d);
-    let mut x = vec![0.0f32; d];
-    for (i, &v) in g.iter().enumerate() {
-        x[i] = v * signs[i];
+    out.clear();
+    out.resize(d, 0.0);
+    let mut rng = Pcg64::new(seed, 0xD1A6);
+    let mut i = 0usize;
+    while i < d.min(g.len()) {
+        let mut word = rng.next_u64();
+        for _ in 0..64.min(d - i) {
+            if i < g.len() {
+                out[i] = if word & 1 == 1 { g[i] } else { -g[i] };
+            }
+            word >>= 1;
+            i += 1;
+        }
     }
-    fwht(&mut x);
+    fwht(out);
     let scale = 1.0 / (d as f32).sqrt();
-    for v in &mut x {
+    for v in out.iter_mut() {
         *v *= scale;
     }
-    x
 }
 
 /// Inverse rotation: apply `(1/√d)·D·H` and truncate to `n`.
 pub fn unrotate(x: &[f32], seed: u64, n: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    unrotate_into(x, seed, n, &mut out);
+    out
+}
+
+/// [`unrotate`] into a reusable buffer.
+pub fn unrotate_into(x: &[f32], seed: u64, n: usize, out: &mut Vec<f32>) {
     let d = x.len();
     assert!(d.is_power_of_two(), "unrotate length {d} not a power of two");
     assert!(n <= d);
-    let signs = rademacher(seed, d);
-    let mut y = x.to_vec();
-    fwht(&mut y);
+    out.clear();
+    out.extend_from_slice(x);
+    fwht(out);
     let scale = 1.0 / (d as f32).sqrt();
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        out.push(y[i] * scale * signs[i]);
+    // Stream the diagonal over the first n lanes (the rest are padding).
+    let mut rng = Pcg64::new(seed, 0xD1A6);
+    let mut i = 0usize;
+    while i < n {
+        let mut word = rng.next_u64();
+        for _ in 0..64.min(d - i) {
+            if i < n {
+                let s = if word & 1 == 1 { 1.0 } else { -1.0 };
+                out[i] = out[i] * scale * s;
+            }
+            word >>= 1;
+            i += 1;
+        }
     }
-    out
+    out.truncate(n);
 }
 
 #[cfg(test)]

@@ -1,0 +1,431 @@
+//! Transcendental-free fast paths for the quantization hot loop.
+//!
+//! The paper sells CosSGD on "low computational complexity" (§3, §5), but
+//! the naive encode pays one `acos` per element and the decode one `cos`
+//! per element. Both collapse because the codes are *discrete*:
+//!
+//! * **Quantize** (biased rounding): the angle-domain bin edges
+//!   `θ_k = b + (k + 0.5)·step` map through the monotone-decreasing `cos`
+//!   into `2^s − 1` *value-domain* thresholds. A code is then just "how
+//!   many thresholds lie above `g_i/‖g‖`" — a branchless binary search
+//!   over a per-tensor table, zero transcendentals per element.
+//! * **Dequantize**: only `2^s` distinct reconstruction values exist per
+//!   tensor; build them once (`2^s` `cos` calls) and index.
+//!
+//! ## Bit-exactness contract
+//!
+//! The fast path must be **bit-identical** to the reference `acos` path
+//! ([`CosineQuantizer::quantize_reference`]), which rounds in f32:
+//!
+//! ```text
+//! code(x) = ⌊(clamp(acos(clamp(x,-1,1)), b, π−b) − b)·scale + 0.5⌋
+//! ```
+//!
+//! `code` is monotone non-increasing in `x` (every stage — `acos`, the
+//! clamps, the affine map, the floor — is monotone, including under f32
+//! rounding), so for every boundary `k` there is an exact f32 threshold
+//! `t_k = min{x : code(x) ≤ k}`. We *seed* each threshold with the
+//! analytic `cos(θ_k)` and then pin it down exactly with a bit-level
+//! binary search driven by the reference scalar map itself — so the table
+//! is correct by construction even where libm rounding shifts a boundary
+//! by an ULP. Construction costs `O(2^s · log)` reference evaluations per
+//! tensor, amortized to nothing against element counts in the millions.
+//!
+//! The `Rounding::Unbiased` regime draws a uniform per element, so its
+//! codes are not a pure function of `x`; it keeps the reference path.
+//!
+//! [`CosineQuantizer::quantize_reference`]: super::cosine::CosineQuantizer::quantize_reference
+
+use std::f32::consts::PI;
+
+/// Reusable buffers + memoization keys for the kernel fast paths. One per
+/// long-lived endpoint (client, server); embedded in
+/// [`super::pipeline::EncodeScratch`].
+#[derive(Debug, Clone, Default)]
+pub struct KernelScratch {
+    /// Descending value-domain thresholds for the biased cosine quantizer.
+    thresholds: Vec<f32>,
+    /// `(bits, bound.to_bits())` the threshold table was built for.
+    thresholds_key: Option<(u8, u32)>,
+    /// Reconstruction LUT (`2^s` entries) for the cosine dequantizer.
+    cos_levels: Vec<f32>,
+    cos_levels_key: Option<(u8, u32, u32)>,
+    /// Reconstruction LUT for the linear dequantizer.
+    lin_levels: Vec<f32>,
+    lin_levels_key: Option<(u8, u32)>,
+}
+
+impl KernelScratch {
+    pub fn new() -> KernelScratch {
+        Self::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference map + exact threshold construction.
+// ---------------------------------------------------------------------------
+
+/// The quantizer scale factor, computed exactly as the reference encode
+/// prologue (`cosine.rs`): `0.0` marks the degenerate all-code-0 regime.
+#[inline]
+pub fn scale_for(bits: u8, bound: f32) -> f32 {
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let range = PI - 2.0 * bound;
+    let inv_range = if range > 1e-6 { 1.0 / range } else { 0.0 };
+    inv_range * max_code
+}
+
+/// The reference biased code for a pre-normalized ratio `x = g_i/‖g‖`
+/// (public as the ground truth for the equivalence tests). Must stay
+/// textually identical to the element step of
+/// [`super::cosine::CosineQuantizer::quantize_reference`].
+#[inline]
+pub fn reference_code(x: f32, bound: f32, scale: f32) -> u16 {
+    let theta = x.clamp(-1.0, 1.0).acos().clamp(bound, PI - bound);
+    let v = (theta - bound) * scale;
+    (v + 0.5) as u16 // round-to-nearest, v >= 0
+}
+
+/// Monotone bijection f32 → u32 (IEEE-754 total order on non-NaN values):
+/// lets the threshold search bisect over *representable* values.
+#[inline]
+fn ordered(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+#[inline]
+fn from_ordered(k: u32) -> f32 {
+    f32::from_bits(if k & 0x8000_0000 != 0 { k & 0x7fff_ffff } else { !k })
+}
+
+/// Exact boundary between codes `k` and `k+1`: the smallest f32 `x` in
+/// `[-1, 1]` with `reference_code(x) <= k`, or `+∞` when no such `x`
+/// exists (code `k+1` and up unreachable from above). Seeded by the
+/// analytic candidate, pinned by bit-level bisection of the reference map.
+fn exact_threshold(k: u16, candidate: f32, bound: f32, scale: f32, code_at_neg1: u16) -> f32 {
+    let lo_key = ordered(-1.0);
+    let hi_key = ordered(1.0);
+    if code_at_neg1 <= k {
+        return -1.0; // every clamped ratio already qualifies
+    }
+    // code(1.0) == 0 always (θ = 0 clamps up to b, v = 0), so a qualifying
+    // x exists for every k and the bracket below is well-founded.
+    let code = |key: u32| reference_code(from_ordered(key), bound, scale);
+    let c = ordered(candidate.clamp(-1.0, 1.0)).clamp(lo_key, hi_key);
+    // Bracket [lo, hi] with code(lo) > k and code(hi) <= k, grown outward
+    // from the candidate by ULP doubling (the analytic seed is within a
+    // few ULPs, so this stays O(1) in practice).
+    let (mut lo, mut hi) = if code(c) <= k {
+        let mut hi = c;
+        let mut d = 1u32;
+        let lo = loop {
+            let probe = c.saturating_sub(d).max(lo_key);
+            if code(probe) > k {
+                break probe; // also hit when probe == lo_key (checked above)
+            }
+            hi = probe;
+            d = d.saturating_mul(2);
+        };
+        (lo, hi)
+    } else {
+        let mut lo = c;
+        let mut d = 1u32;
+        let hi = loop {
+            let probe = c.saturating_add(d).min(hi_key);
+            if code(probe) <= k {
+                break probe; // code(hi_key) == 0 <= k guarantees termination
+            }
+            lo = probe;
+            d = d.saturating_mul(2);
+        };
+        (lo, hi)
+    };
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if code(mid) <= k {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    from_ordered(hi)
+}
+
+/// Build the descending threshold table for `(bits, bound)` into `out`.
+/// `out[k] > x  ⟺  reference_code(x) > k`, so the code of `x` is the
+/// count of thresholds above it. Public as a test/diagnostic hook.
+pub fn build_thresholds(bits: u8, bound: f32, out: &mut Vec<f32>) {
+    let scale = scale_for(bits, bound);
+    let max_code = (1u32 << bits) - 1;
+    out.clear();
+    out.reserve(max_code as usize);
+    debug_assert!(scale > 0.0, "degenerate scale handled by the caller");
+    let code_at_neg1 = reference_code(-1.0, bound, scale);
+    let inv_scale = 1.0 / scale as f64;
+    for k in 0..max_code {
+        // Analytic seed: the angle edge between codes k and k+1.
+        let edge = bound as f64 + (k as f64 + 0.5) * inv_scale;
+        let candidate = edge.cos() as f32;
+        out.push(exact_threshold(
+            k as u16,
+            candidate,
+            bound,
+            scale,
+            code_at_neg1,
+        ));
+    }
+}
+
+/// Code for a pre-clamped ratio `x ∈ [-1, 1]`: the number of thresholds
+/// strictly above `x`. Written as a conditional-move binary search so the
+/// hot loop carries no unpredictable branches.
+#[inline]
+pub fn search_code(x: f32, thresholds: &[f32]) -> u16 {
+    if thresholds.len() <= 32 {
+        // Short tables (s ≤ 5, including the headline 4-bit case): a
+        // branch-free count auto-vectorizes and beats the search.
+        // NaN x: every comparison is false → code 0, matching the
+        // reference's NaN → 0 saturating cast.
+        let mut c = 0u32;
+        for &t in thresholds {
+            c += (t > x) as u32;
+        }
+        return c as u16;
+    }
+    // Invariant: the answer lies in [lo, lo + len]. Both arms assign `lo`
+    // and `len` shrinks identically, so the compiler lowers the body to
+    // conditional moves — no data-dependent branch per probe.
+    let mut lo = 0usize;
+    let mut len = thresholds.len();
+    while len > 1 {
+        let half = len / 2;
+        let mid = lo + half;
+        lo = if thresholds[mid] > x { mid } else { lo };
+        len -= half;
+    }
+    (lo + (thresholds[lo] > x) as usize) as u16
+}
+
+/// Quantize `g` with the transcendental-free biased cosine kernel —
+/// bit-identical to the reference `acos` path. The caller guarantees
+/// `norm` is finite and positive (the zero/non-finite regime is handled
+/// upstream, exactly as in the reference).
+pub fn quantize_cosine_biased(
+    g: &[f32],
+    norm: f32,
+    bound: f32,
+    bits: u8,
+    scratch: &mut KernelScratch,
+    codes: &mut Vec<u16>,
+) {
+    codes.clear();
+    codes.reserve(g.len());
+    let scale = scale_for(bits, bound);
+    let inv_norm = 1.0 / norm;
+    if scale == 0.0 {
+        // Degenerate range (all angles identical): the reference emits
+        // v = 0 → code 0 everywhere.
+        codes.resize(g.len(), 0);
+        return;
+    }
+    let key = (bits, bound.to_bits());
+    let table_cached = scratch.thresholds_key == Some(key);
+    // The bound is data-dependent, so a fresh tensor usually means a fresh
+    // table: ~2^s bisections at roughly 8 reference probes each. Below
+    // that break-even (wide codes on small tensors) the reference loop is
+    // cheaper — and identical by definition, so the choice is invisible.
+    if !table_cached && (1usize << bits).saturating_mul(8) > g.len() {
+        codes.extend(g.iter().map(|&gi| reference_code(gi * inv_norm, bound, scale)));
+        return;
+    }
+    if !table_cached {
+        build_thresholds(bits, bound, &mut scratch.thresholds);
+        scratch.thresholds_key = Some(key);
+    }
+    let t = &scratch.thresholds[..];
+    for &gi in g {
+        // Same normalization + clamp as the reference; only the
+        // acos→affine→round tail is replaced by the threshold search.
+        let x = (gi * inv_norm).clamp(-1.0, 1.0);
+        codes.push(search_code(x, t));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dequantize LUTs.
+// ---------------------------------------------------------------------------
+
+/// Cosine reconstruction through a `2^s`-entry LUT — bit-identical to the
+/// per-element `cos` formula (each entry IS that formula, evaluated once).
+/// Falls back to the direct loop when the tensor is smaller than the
+/// table it would amortize.
+pub fn dequantize_cosine(
+    codes: &[u16],
+    norm: f32,
+    bound: f32,
+    bits: u8,
+    scratch: &mut KernelScratch,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    if norm == 0.0 {
+        out.resize(codes.len(), 0.0);
+        return;
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let step = (PI - 2.0 * bound) / max_code;
+    let levels = 1usize << bits;
+    if codes.len() < levels {
+        // Small tensor: the direct loop is cheaper than building the LUT.
+        out.extend(codes.iter().map(|&c| (bound + c as f32 * step).cos() * norm));
+        return;
+    }
+    let key = (bits, norm.to_bits(), bound.to_bits());
+    if scratch.cos_levels_key != Some(key) {
+        scratch.cos_levels.clear();
+        scratch
+            .cos_levels
+            .extend((0..levels).map(|c| (bound + c as f32 * step).cos() * norm));
+        scratch.cos_levels_key = Some(key);
+    }
+    let lut = &scratch.cos_levels[..];
+    out.extend(codes.iter().map(|&c| {
+        // Codes from the wire are masked to `bits`, so the index is in
+        // range; out-of-range codes from arbitrary callers fall back to
+        // the reference formula rather than panicking.
+        lut.get(c as usize)
+            .copied()
+            .unwrap_or_else(|| (bound + c as f32 * step).cos() * norm)
+    }));
+}
+
+/// Linear reconstruction through a level LUT (same contract as
+/// [`dequantize_cosine`], mirroring `linear::dequantize_codes`).
+pub fn dequantize_linear(
+    codes: &[u16],
+    bound: f32,
+    bits: u8,
+    scratch: &mut KernelScratch,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    if bound == 0.0 {
+        out.resize(codes.len(), 0.0);
+        return;
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let step = 2.0 * bound / max_code;
+    let levels = 1usize << bits;
+    if codes.len() < levels {
+        out.extend(codes.iter().map(|&c| c as f32 * step - bound));
+        return;
+    }
+    let key = (bits, bound.to_bits());
+    if scratch.lin_levels_key != Some(key) {
+        scratch.lin_levels.clear();
+        scratch
+            .lin_levels
+            .extend((0..levels).map(|c| c as f32 * step - bound));
+        scratch.lin_levels_key = Some(key);
+    }
+    let lut = &scratch.lin_levels[..];
+    out.extend(codes.iter().map(|&c| {
+        lut.get(c as usize)
+            .copied()
+            .unwrap_or_else(|| c as f32 * step - bound)
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_is_a_monotone_bijection() {
+        let samples = [
+            -1.0f32,
+            -0.5,
+            -f32::MIN_POSITIVE,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            1e-40, // subnormal
+            0.5,
+            1.0,
+        ];
+        for w in samples.windows(2) {
+            assert!(ordered(w[0]) <= ordered(w[1]), "{} vs {}", w[0], w[1]);
+        }
+        for &x in &samples {
+            assert_eq!(from_ordered(ordered(x)).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn search_counts_thresholds_above() {
+        let t = [0.8f32, 0.4, 0.1, -0.3, -0.9]; // descending
+        assert_eq!(search_code(0.9, &t), 0);
+        assert_eq!(search_code(0.8, &t), 0); // not strictly above
+        assert_eq!(search_code(0.5, &t), 1);
+        assert_eq!(search_code(0.0, &t), 3);
+        assert_eq!(search_code(-1.0, &t), 5);
+        assert_eq!(search_code(f32::NAN, &t), 0);
+        assert_eq!(search_code(0.5, &[]), 0);
+        // Long table (binary-search path) agrees with the linear count.
+        let long: Vec<f32> = (0..100).map(|i| 1.0 - i as f32 * 0.02).collect();
+        for x in [-1.5f32, -1.0, -0.011, 0.0, 0.3, 0.999, 1.0, 2.0] {
+            let linear = long.iter().filter(|&&t| t > x).count() as u16;
+            assert_eq!(search_code(x, &long), linear, "x={x}");
+        }
+    }
+
+    #[test]
+    fn thresholds_are_descending_and_exact() {
+        for bits in [1u8, 2, 4, 8] {
+            for bound in [0.0f32, 0.3, 1.2] {
+                let scale = scale_for(bits, bound);
+                let mut t = Vec::new();
+                build_thresholds(bits, bound, &mut t);
+                assert_eq!(t.len(), (1usize << bits) - 1);
+                for w in t.windows(2) {
+                    assert!(w[0] >= w[1], "bits={bits} bound={bound}: {w:?}");
+                }
+                // Each finite threshold is the exact cutover of the
+                // reference map.
+                for (k, &tk) in t.iter().enumerate() {
+                    if !tk.is_finite() {
+                        continue;
+                    }
+                    assert!(
+                        reference_code(tk, bound, scale) <= k as u16,
+                        "bits={bits} bound={bound} k={k}: t_k does not qualify"
+                    );
+                    if tk > -1.0 {
+                        let below = from_ordered(ordered(tk) - 1);
+                        assert!(
+                            reference_code(below, bound, scale) > k as u16,
+                            "bits={bits} bound={bound} k={k}: t_k not minimal"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_scale_emits_zero_codes() {
+        let g = [0.5f32, -0.5, 0.25];
+        let mut scratch = KernelScratch::new();
+        let mut codes = Vec::new();
+        // bound ≈ π/2 ⇒ range below the reference's 1e-6 floor.
+        let bound = PI / 2.0 - 1e-8;
+        assert_eq!(scale_for(4, bound), 0.0);
+        quantize_cosine_biased(&g, 1.0, bound, 4, &mut scratch, &mut codes);
+        assert_eq!(codes, vec![0, 0, 0]);
+    }
+}

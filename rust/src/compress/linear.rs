@@ -11,6 +11,7 @@ use crate::util::rng::Pcg64;
 use crate::util::stats::kth_largest_abs;
 
 use super::cosine::Rounding;
+use super::kernel::{self, KernelScratch};
 
 /// How the value bound `b_g` is obtained.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -55,7 +56,20 @@ impl LinearQuantizer {
 
     /// Quantize. Returns codes plus the value bound needed to invert.
     pub fn quantize(&self, g: &[f32], rng: &mut Pcg64) -> LinearQuantized {
+        let mut codes = Vec::new();
+        let bound = self.quantize_into(g, rng, &mut codes);
+        LinearQuantized {
+            codes,
+            bound,
+            bits: self.bits,
+        }
+    }
+
+    /// Quantize into a reusable buffer (the pipeline's steady-state entry
+    /// point). Returns the value bound.
+    pub fn quantize_into(&self, g: &[f32], rng: &mut Pcg64, codes: &mut Vec<u16>) -> f32 {
         let n = g.len();
+        codes.clear();
         let bound = match self.bound {
             ValueBound::MaxAbs => g.iter().fold(0.0f32, |m, &x| m.max(x.abs())),
             ValueBound::ClipTopPercent(p) => {
@@ -64,15 +78,12 @@ impl LinearQuantizer {
             }
         };
         if !(bound.is_finite() && bound > 0.0) {
-            return LinearQuantized {
-                codes: vec![0; n],
-                bound: 0.0,
-                bits: self.bits,
-            };
+            codes.resize(n, 0);
+            return 0.0;
         }
         let max_code = (self.levels() - 1) as f32;
         let scale = max_code / (2.0 * bound);
-        let mut codes = Vec::with_capacity(n);
+        codes.reserve(n);
         match self.rounding {
             Rounding::Biased => {
                 for &gi in g {
@@ -90,11 +101,7 @@ impl LinearQuantizer {
                 }
             }
         }
-        LinearQuantized {
-            codes,
-            bound,
-            bits: self.bits,
-        }
+        bound
     }
 }
 
@@ -117,14 +124,24 @@ impl LinearQuantized {
     }
 }
 
-/// Server-side reconstruction from raw codes.
+/// Server-side reconstruction from raw codes. LUT-backed like the cosine
+/// decoder — only `2^s` levels exist per tensor (bit-identical: each LUT
+/// entry is the per-element formula evaluated once).
 pub fn dequantize_codes(codes: &[u16], bound: f32, bits: u8) -> Vec<f32> {
-    if bound == 0.0 {
-        return vec![0.0; codes.len()];
-    }
-    let max_code = ((1u32 << bits) - 1) as f32;
-    let step = 2.0 * bound / max_code;
-    codes.iter().map(|&c| c as f32 * step - bound).collect()
+    let mut out = Vec::new();
+    dequantize_codes_into(codes, bound, bits, &mut KernelScratch::new(), &mut out);
+    out
+}
+
+/// [`dequantize_codes`] into reusable buffers (steady-state decode path).
+pub fn dequantize_codes_into(
+    codes: &[u16],
+    bound: f32,
+    bits: u8,
+    scratch: &mut KernelScratch,
+    out: &mut Vec<f32>,
+) {
+    kernel::dequantize_linear(codes, bound, bits, scratch, out);
 }
 
 #[cfg(test)]

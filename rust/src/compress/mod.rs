@@ -12,13 +12,20 @@
 //!                         │                              │
 //!                         ▼                              ▼
 //!   ┌─────────────────────────────────────────────────────────────────┐
-//!   │ Pipeline stages                                                 │
+//!   │ Pipeline stages              (buffers live in an EncodeScratch  │
+//!   │                               arena — zero stage allocations    │
+//!   │                               in the steady state)              │
 //!   │   EF fold      p = v + residual      (optional, endpoint-local) │
 //!   │   sparsify     seeded random mask    (keep_frac < 1)            │
 //!   │   rotate       Hadamard ±1 rotation  (optional, any quantizer)  │
 //!   │   quantize     impl Quantizer        (cosine / linear / sign /  │
-//!   │                                       float32 passthrough)      │
-//!   │   bit-pack     s bits per code       (skipped at 32 bits)       │
+//!   │                │                      float32 passthrough)      │
+//!   │                └─ kernel fast path:  biased cosine encodes by   │
+//!   │                   threshold search, decodes by 2^s-entry LUT —  │
+//!   │                   zero transcendentals per element, bit-exact   │
+//!   │                   vs the reference acos/cos path                │
+//!   │   bit-pack     s bits per code       (64-bit word-at-a-time;    │
+//!   │                                       skipped at 32 bits)       │
 //!   │   DEFLATE      lossless (§4)         (kept only if smaller)     │
 //!   └─────────────────────────────────────────────────────────────────┘
 //!                         │
@@ -38,6 +45,20 @@
 //! the systems simulator is on — the virtual clock of [`crate::sim`],
 //! which turns compression ratios into time-to-accuracy speedups.
 //!
+//! ## Fast kernels ([`kernel`])
+//!
+//! The hot loop never calls a transcendental: the biased cosine encode
+//! collapses into a per-tensor table of `2^s − 1` value-domain thresholds
+//! (the angle bin edges pushed through the monotone `cos`, then pinned to
+//! the exact f32 cutover of the reference map by bit-level bisection) and
+//! a branchless binary search per element; decode indexes a `2^s`-entry
+//! level LUT. Both are **bit-identical** to the reference `acos`/`cos`
+//! path — property-tested across all bit widths in
+//! `tests/kernel_equivalence.rs` — so the fast path is simply *the* path;
+//! the reference survives as `quantize_reference` for `Rounding::Unbiased`
+//! (whose stochastic rounding is not a pure function of the input) and as
+//! the tests' ground truth.
+//!
 //! Adding a scheme = one `impl Quantizer` + one [`quantizer::from_wire`]
 //! arm; the pipeline, wire format, figures and cost ledgers pick it up
 //! unchanged.
@@ -47,7 +68,9 @@ pub mod cosine;
 pub mod deflate;
 pub mod entropy;
 pub mod hadamard;
+pub mod kernel;
 pub mod linear;
+pub mod perf;
 pub mod pipeline;
 pub mod quantizer;
 pub mod signsgd;
@@ -55,5 +78,8 @@ pub mod sparsify;
 pub mod topk;
 pub mod wire;
 
-pub use pipeline::{decode, Direction, EncodedTensor, Pipeline, PipelineState};
+pub use kernel::KernelScratch;
+pub use pipeline::{
+    decode, decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline, PipelineState,
+};
 pub use quantizer::{Quantized, Quantizer};

@@ -1,0 +1,110 @@
+//! The compression perf-trajectory suite: one stable set of bench cases
+//! (ns/elem for quantize / dequantize / pack / unpack per bit width, plus
+//! end-to-end round time) shared by `repro bench`, the `bench_kernel`
+//! bench target and the `#[ignore]`d bench-guard test, and recorded to
+//! `BENCH_compress.json` so the numbers are comparable across PRs.
+
+use crate::util::bench::{BenchResult, Bencher};
+use crate::util::propcheck::gradient_like;
+use crate::util::rng::Pcg64;
+
+use super::bitpack;
+use super::cosine::{self, BoundMode, CosineQuantizer, Rounding};
+use super::kernel::KernelScratch;
+use super::pipeline::{decode_with, Direction, EncodeScratch, Pipeline, PipelineState};
+use super::wire;
+
+/// Trajectory suite tag (the file is `BENCH_compress.json`).
+pub const SUITE: &str = "compress";
+
+/// The acceptance-criterion pair: 4-bit biased cosine quantize+pack,
+/// kernel (threshold search, reused scratch) vs reference (`acos` loop).
+/// Fixed angle bound so both sides measure the nonlinear map itself, not
+/// the shared O(n) bound selection.
+pub const HEADLINE_KERNEL: &str = "quantize+pack/cosine-biased-kernel/4b";
+pub const HEADLINE_REFERENCE: &str = "quantize+pack/cosine-biased-reference/4b";
+
+/// Bit widths each per-stage case sweeps.
+pub const BIT_WIDTHS: [u8; 5] = [1, 2, 4, 8, 16];
+
+/// Run the whole suite on an `n`-element gradient-like tensor.
+pub fn run_suite(b: &mut Bencher, n: usize, seed: u64) {
+    let mut rng = Pcg64::seeded(seed);
+    let g = gradient_like(&mut rng, n);
+    let mut scratch = KernelScratch::new();
+    let mut codes_buf: Vec<u16> = Vec::new();
+    let mut packed_buf: Vec<u8> = Vec::new();
+    let mut values_buf: Vec<f32> = Vec::new();
+
+    println!("== compress perf trajectory (n = {n}) ==");
+    for bits in BIT_WIDTHS {
+        let q = CosineQuantizer::paper_default(bits);
+        b.bench_elems(
+            &format!("quantize/cosine-biased-kernel/{bits}b"),
+            n as u64,
+            || q.quantize_into(&g, &mut Pcg64::seeded(2), &mut scratch, &mut codes_buf),
+        );
+        b.bench_elems(
+            &format!("quantize/cosine-biased-reference/{bits}b"),
+            n as u64,
+            || q.quantize_reference(&g, &mut Pcg64::seeded(2)),
+        );
+        let quant = q.quantize(&g, &mut rng);
+        b.bench_elems(&format!("dequantize/cosine/{bits}b"), n as u64, || {
+            cosine::dequantize_codes_into(
+                &quant.codes,
+                quant.norm,
+                quant.bound,
+                bits,
+                &mut scratch,
+                &mut values_buf,
+            )
+        });
+        b.bench_elems(&format!("pack/{bits}b"), n as u64, || {
+            bitpack::pack_into(&quant.codes, bits, &mut packed_buf)
+        });
+        let packed = bitpack::pack(&quant.codes, bits);
+        b.bench_elems(&format!("unpack/{bits}b"), n as u64, || {
+            bitpack::unpack_into(&packed, bits, n, &mut codes_buf)
+        });
+    }
+
+    // Headline pair (see const docs): fixed bound isolates the map.
+    let qh = CosineQuantizer::new(4, Rounding::Biased, BoundMode::FixedAngle(0.1));
+    b.bench_elems(HEADLINE_KERNEL, n as u64, || {
+        qh.quantize_into(&g, &mut Pcg64::seeded(2), &mut scratch, &mut codes_buf);
+        bitpack::pack_into(&codes_buf, 4, &mut packed_buf);
+    });
+    b.bench_elems(HEADLINE_REFERENCE, n as u64, || {
+        let q = qh.quantize_reference(&g, &mut Pcg64::seeded(2));
+        bitpack::pack(&q.codes, 4)
+    });
+
+    // End-to-end round time: encode → wire → decode, per direction of the
+    // paper's default round trip plus the float32 baseline.
+    for pipe in [Pipeline::cosine(4), Pipeline::cosine(8), Pipeline::float32()] {
+        let mut st = PipelineState::new();
+        let mut esc = EncodeScratch::new();
+        let label = format!("round/{}", pipe.name());
+        b.bench_elems(&label, n as u64, || {
+            let enc = pipe.encode_with(
+                &g,
+                Direction::Uplink,
+                &mut st,
+                &mut Pcg64::seeded(3),
+                &mut esc,
+            );
+            let bytes = wire::serialize(&enc);
+            let back = wire::deserialize(&bytes).unwrap();
+            decode_with(&back, &mut esc).unwrap()
+        });
+    }
+}
+
+/// Kernel-vs-reference speedup of the headline pair, when both ran.
+pub fn headline_speedup(results: &[BenchResult]) -> Option<f64> {
+    let find = |name: &str| results.iter().find(|r| r.name == name);
+    let kernel = find(HEADLINE_KERNEL)?;
+    let reference = find(HEADLINE_REFERENCE)?;
+    Some(reference.mean.as_secs_f64() / kernel.mean.as_secs_f64().max(1e-12))
+}

@@ -31,6 +31,7 @@ use super::cosine::{BoundMode, CosineQuantizer, Rounding};
 use super::deflate::{self, CompressionLevel};
 use super::entropy;
 use super::hadamard;
+use super::kernel::KernelScratch;
 use super::linear::{LinearQuantizer, ValueBound};
 use super::quantizer::{self, EfSign, Float32Passthrough, Quantizer, SignSgd, SignSgdNorm};
 use super::sparsify;
@@ -188,6 +189,10 @@ impl Pipeline {
     /// Encode a dense tensor travelling in `direction`. `rng` drives
     /// stochastic rounding and the mask/rotation seeds; `state` carries
     /// the error-feedback residual across rounds (unused otherwise).
+    ///
+    /// Convenience wrapper over [`Pipeline::encode_with`] paying one
+    /// fresh [`EncodeScratch`] per call — long-lived endpoints (clients,
+    /// the server) hold a scratch and call `encode_with` directly.
     pub fn encode(
         &self,
         values: &[f32],
@@ -195,75 +200,138 @@ impl Pipeline {
         state: &mut PipelineState,
         rng: &mut Pcg64,
     ) -> EncodedTensor {
+        self.encode_with(values, direction, state, rng, &mut EncodeScratch::new())
+    }
+
+    /// [`Pipeline::encode`] with caller-owned scratch: every intermediate
+    /// stage buffer (EF fold, gather, rotation, codes, packed bytes, EF
+    /// reconstruction) lives in `scratch` and is reused across rounds, so
+    /// the steady state performs no stage allocations and no stage
+    /// copies — the dense un-sparsified path quantizes straight off the
+    /// caller's slice. The one buffer that still leaves the arena is the
+    /// payload itself, which must escape into the returned
+    /// [`EncodedTensor`]; `scratch` donates its packed buffer for it and
+    /// re-grows the next round.
+    pub fn encode_with(
+        &self,
+        values: &[f32],
+        direction: Direction,
+        state: &mut PipelineState,
+        rng: &mut Pcg64,
+        scratch: &mut EncodeScratch,
+    ) -> EncodedTensor {
         let n = values.len();
 
         // --- error-feedback fold ------------------------------------------
-        let work: Vec<f32>;
         let work_ref: &[f32] = if self.error_feedback {
             if state.residual.len() != n {
                 // First use (or model resize): cold-start the memory.
                 state.residual = vec![0.0; n];
             }
-            work = values
-                .iter()
-                .zip(&state.residual)
-                .map(|(&v, &e)| v + e)
-                .collect();
-            &work
+            scratch.work.clear();
+            scratch
+                .work
+                .extend(values.iter().zip(&state.residual).map(|(&v, &e)| v + e));
+            &scratch.work
         } else {
             values
         };
 
         // --- sparsify ------------------------------------------------------
-        let (mask_seed, kept_values, mask) = if self.keep_frac < 1.0 {
+        let (mask_seed, mask) = if self.keep_frac < 1.0 {
             let seed = rng.next_u64();
             let m = sparsify::mask(seed, n, self.keep_frac);
-            let vals = sparsify::gather(work_ref, &m);
-            (seed, vals, Some(m))
+            sparsify::gather_into(work_ref, &m, &mut scratch.gathered);
+            (seed, Some(m))
         } else {
-            (0u64, work_ref.to_vec(), None)
+            (0u64, None)
         };
-        let kept_n = kept_values.len();
+        let kept_ref: &[f32] = if mask.is_some() {
+            &scratch.gathered
+        } else {
+            work_ref
+        };
+        let kept_n = kept_ref.len();
 
         // --- rotate --------------------------------------------------------
-        let (rot_seed, stage_values) = if self.rotate {
+        let (rot_seed, stage_ref): (u64, &[f32]) = if self.rotate {
             let seed = rng.next_u64();
-            (seed, hadamard::rotate(&kept_values, seed))
+            hadamard::rotate_into(kept_ref, seed, &mut scratch.rotated);
+            (seed, &scratch.rotated)
         } else {
-            (0u64, kept_values)
+            (0u64, kept_ref)
         };
 
         // --- quantize + pack ----------------------------------------------
         let bits = self.quantizer.bits();
-        let (payload_raw, norm, bound, local_rec) = if bits == 32 {
+        let (norm, bound) = if bits == 32 {
             // Float passthrough: raw little-endian floats, no bit-packing.
-            let raw = entropy::f32_bytes(&stage_values);
-            let rec = self.error_feedback.then(|| stage_values.clone());
-            (raw, 0.0, 0.0, rec)
+            entropy::f32_bytes_into(stage_ref, &mut scratch.packed);
+            (0.0, 0.0)
         } else {
-            let q = self.quantizer.quantize(&stage_values, rng);
-            let rec = self
-                .error_feedback
-                .then(|| self.quantizer.dequantize(&q.codes, q.norm, q.bound));
-            (bitpack::pack(&q.codes, bits), q.norm, q.bound, rec)
+            let (norm, bound) =
+                self.quantizer
+                    .quantize_into(stage_ref, rng, &mut scratch.kernel, &mut scratch.codes);
+            bitpack::pack_into(&scratch.codes, bits, &mut scratch.packed);
+            (norm, bound)
         };
 
         // --- error-feedback residual update -------------------------------
-        if let Some(mut rec) = local_rec {
-            if self.rotate {
-                rec = hadamard::unrotate(&rec, rot_seed, kept_n);
+        if self.error_feedback {
+            if bits == 32 {
+                scratch.rec.clear();
+                scratch.rec.extend_from_slice(stage_ref);
+            } else {
+                self.quantizer.dequantize_into(
+                    &scratch.codes,
+                    norm,
+                    bound,
+                    &mut scratch.kernel,
+                    &mut scratch.rec,
+                );
             }
-            let rec_full = match &mask {
-                Some(m) => sparsify::scatter(&rec, m),
-                None => rec,
+            let rec_stage: &[f32] = if self.rotate {
+                hadamard::unrotate_into(&scratch.rec, rot_seed, kept_n, &mut scratch.rec_dense);
+                &scratch.rec_dense
+            } else {
+                &scratch.rec
             };
-            for ((e, &p), &r) in state.residual.iter_mut().zip(work_ref).zip(&rec_full) {
-                *e = p - r;
+            match &mask {
+                Some(m) => {
+                    // Streaming scatter: unsent coordinates reconstruct as
+                    // zero, so their residual is the full withheld value.
+                    let mut kept_iter = m.kept.iter().zip(rec_stage);
+                    let mut next = kept_iter.next();
+                    for (i, (e, &p)) in state.residual.iter_mut().zip(work_ref).enumerate() {
+                        let r = match next {
+                            Some((&ki, &rv)) if ki == i => {
+                                next = kept_iter.next();
+                                rv
+                            }
+                            _ => 0.0,
+                        };
+                        *e = p - r;
+                    }
+                }
+                None => {
+                    for ((e, &p), &r) in state.residual.iter_mut().zip(work_ref).zip(rec_stage) {
+                        *e = p - r;
+                    }
+                }
             }
         }
 
         // --- deflate -------------------------------------------------------
-        let (payload, deflated) = self.finish_payload(payload_raw);
+        let (payload, deflated) = if self.deflate {
+            let c = deflate::deflate(&scratch.packed, self.level);
+            if c.len() < scratch.packed.len() {
+                (c, true)
+            } else {
+                (std::mem::take(&mut scratch.packed), false)
+            }
+        } else {
+            (std::mem::take(&mut scratch.packed), false)
+        };
         EncodedTensor {
             direction,
             kind_id: self.quantizer.id(),
@@ -278,16 +346,6 @@ impl Pipeline {
             deflated,
             payload,
         }
-    }
-
-    fn finish_payload(&self, raw: Vec<u8>) -> (Vec<u8>, bool) {
-        if self.deflate {
-            let c = deflate::deflate(&raw, self.level);
-            if c.len() < raw.len() {
-                return (c, true);
-            }
-        }
-        (raw, false)
     }
 
     /// Codes actually transmitted for `n`-element tensors (pre-pack;
@@ -310,10 +368,20 @@ impl Pipeline {
 /// using only the wire header (quantizer id/bits, rotation flag, mask
 /// seed) — no sender configuration required.
 pub fn decode(enc: &EncodedTensor) -> Result<Vec<f32>> {
-    let raw = if enc.deflated {
-        deflate::inflate(&enc.payload)?
+    decode_with(enc, &mut EncodeScratch::new())
+}
+
+/// [`decode`] with caller-owned scratch: the unpacked codes and the
+/// dequantize LUTs are reused across rounds. The payload is *borrowed*
+/// when no DEFLATE stage is present (it used to be cloned wholesale);
+/// only the final dense vector is allocated — it is the result.
+pub fn decode_with(enc: &EncodedTensor, scratch: &mut EncodeScratch) -> Result<Vec<f32>> {
+    let inflated;
+    let raw: &[u8] = if enc.deflated {
+        inflated = deflate::inflate(&enc.payload)?;
+        &inflated
     } else {
-        enc.payload.clone()
+        &enc.payload
     };
     let kept = enc.kept as usize;
     let n = enc.n as usize;
@@ -341,9 +409,11 @@ pub fn decode(enc: &EncodedTensor) -> Result<Vec<f32>> {
             raw.len(),
             enc.bits
         );
-        let codes = bitpack::unpack(&raw, enc.bits, count);
+        bitpack::unpack_into(raw, enc.bits, count, &mut scratch.codes);
         let q = quantizer::from_wire(enc.kind_id, enc.bits)?;
-        q.dequantize(&codes, enc.norm, enc.bound)
+        let mut out = Vec::new();
+        q.dequantize_into(&scratch.codes, enc.norm, enc.bound, &mut scratch.kernel, &mut out);
+        out
     };
 
     let values = if enc.rotated {
@@ -374,6 +444,38 @@ pub struct PipelineState {
 
 impl PipelineState {
     pub fn new() -> PipelineState {
+        Self::default()
+    }
+}
+
+/// Reusable stage buffers for [`Pipeline::encode_with`] /
+/// [`decode_with`]: one per long-lived endpoint (each [`crate::fl::client::Client`]
+/// and the server own one), so steady-state rounds run the whole
+/// EF → sparsify → rotate → quantize → pack chain without touching the
+/// allocator. Distinct from [`PipelineState`], which is *semantic* memory
+/// (the EF residual) — dropping a scratch never changes results.
+#[derive(Debug, Clone, Default)]
+pub struct EncodeScratch {
+    /// EF-folded input (`values + residual`).
+    work: Vec<f32>,
+    /// Gathered (sparsified) coordinates.
+    gathered: Vec<f32>,
+    /// Rotated stage values (padded to a power of two).
+    rotated: Vec<f32>,
+    /// Quantizer output codes (also the decode-side unpack buffer).
+    codes: Vec<u16>,
+    /// Bit-packed payload bytes (donated to the frame each round).
+    packed: Vec<u8>,
+    /// EF reconstruction of the stage values.
+    rec: Vec<f32>,
+    /// EF reconstruction after un-rotation.
+    rec_dense: Vec<f32>,
+    /// Threshold / LUT tables for the transcendental-free kernels.
+    kernel: KernelScratch,
+}
+
+impl EncodeScratch {
+    pub fn new() -> EncodeScratch {
         Self::default()
     }
 }
@@ -691,6 +793,45 @@ mod tests {
         assert_eq!(c.transmitted_codes(1000), 50);
         let r = Pipeline::linear_rotated(2, Rounding::Unbiased).with_sparsify(0.05);
         assert_eq!(r.transmitted_codes(1000), 64); // padded to pow2
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // encode_with/decode_with against ONE scratch reused across
+        // schemes and sizes (the stale-buffer hazard) must match the
+        // allocating entry points exactly — frames, residuals and decodes.
+        let mut rng = Pcg64::seeded(130);
+        let g = gradient_like(&mut rng, 3000);
+        let mut scratch = EncodeScratch::new();
+        for pipe in [
+            Pipeline::cosine(4),
+            Pipeline::float32(),
+            Pipeline::cosine(2).with_sparsify(0.25),
+            Pipeline::cosine(8).with_rotation(),
+            Pipeline::ef_sign(),
+            Pipeline::ef_sign().with_sparsify(0.25),
+            Pipeline::linear(4, Rounding::Biased),
+            Pipeline::cosine_with(3, Rounding::Unbiased, BoundMode::Auto),
+        ] {
+            for size in [3000usize, 777, 1] {
+                let gs = &g[..size];
+                let mut st1 = state();
+                let mut st2 = state();
+                let a = pipe.encode(gs, Direction::Uplink, &mut st1, &mut Pcg64::new(5, 1));
+                let b = pipe.encode_with(
+                    gs,
+                    Direction::Uplink,
+                    &mut st2,
+                    &mut Pcg64::new(5, 1),
+                    &mut scratch,
+                );
+                assert_eq!(a, b, "{} n={size}", pipe.name());
+                assert_eq!(st1.residual, st2.residual, "{} n={size}", pipe.name());
+                let d1 = decode(&a).unwrap();
+                let d2 = decode_with(&b, &mut scratch).unwrap();
+                assert_eq!(d1, d2, "{} n={size}", pipe.name());
+            }
+        }
     }
 
     #[test]

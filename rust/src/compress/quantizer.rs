@@ -23,6 +23,7 @@ use crate::util::rng::Pcg64;
 use crate::util::stats::l2_norm;
 
 use super::cosine::{self, BoundMode, CosineQuantizer, Rounding};
+use super::kernel::KernelScratch;
 use super::linear::{self, LinearQuantizer, ValueBound};
 use super::signsgd;
 
@@ -70,6 +71,39 @@ pub trait Quantizer: std::fmt::Debug + Send + Sync {
     /// on encode-side configuration beyond `(id, bits)` — the receiver
     /// reconstructs the quantizer via [`from_wire`].
     fn dequantize(&self, codes: &[u16], norm: f32, bound: f32) -> Vec<f32>;
+
+    /// Bit-identical to [`Self::quantize`], writing codes into a reusable
+    /// buffer and drawing per-tensor tables from `scratch` — the
+    /// steady-state pipeline entry point. Returns `(norm, bound)`. The
+    /// default delegates to [`Self::quantize`] (one allocation); in-tree
+    /// schemes override with true in-place fast paths.
+    fn quantize_into(
+        &self,
+        values: &[f32],
+        rng: &mut Pcg64,
+        _scratch: &mut KernelScratch,
+        codes: &mut Vec<u16>,
+    ) -> (f32, f32) {
+        let q = self.quantize(values, rng);
+        codes.clear();
+        codes.extend_from_slice(&q.codes);
+        (q.norm, q.bound)
+    }
+
+    /// Bit-identical to [`Self::dequantize`], writing into a reusable
+    /// buffer (LUT-backed for the table-friendly schemes).
+    fn dequantize_into(
+        &self,
+        codes: &[u16],
+        norm: f32,
+        bound: f32,
+        _scratch: &mut KernelScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let v = self.dequantize(codes, norm, bound);
+        out.clear();
+        out.extend_from_slice(&v);
+    }
 
     /// Downcast support (e.g. the Pallas kernel path needs the concrete
     /// [`CosineQuantizer`] configuration).
@@ -150,6 +184,27 @@ impl Quantizer for CosineQuantizer {
         cosine::dequantize_codes(codes, norm, bound, self.bits)
     }
 
+    fn quantize_into(
+        &self,
+        values: &[f32],
+        rng: &mut Pcg64,
+        scratch: &mut KernelScratch,
+        codes: &mut Vec<u16>,
+    ) -> (f32, f32) {
+        CosineQuantizer::quantize_into(self, values, rng, scratch, codes)
+    }
+
+    fn dequantize_into(
+        &self,
+        codes: &[u16],
+        norm: f32,
+        bound: f32,
+        scratch: &mut KernelScratch,
+        out: &mut Vec<f32>,
+    ) {
+        cosine::dequantize_codes_into(codes, norm, bound, self.bits, scratch, out);
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }
@@ -183,6 +238,28 @@ impl Quantizer for LinearQuantizer {
 
     fn dequantize(&self, codes: &[u16], _norm: f32, bound: f32) -> Vec<f32> {
         linear::dequantize_codes(codes, bound, self.bits)
+    }
+
+    fn quantize_into(
+        &self,
+        values: &[f32],
+        rng: &mut Pcg64,
+        _scratch: &mut KernelScratch,
+        codes: &mut Vec<u16>,
+    ) -> (f32, f32) {
+        let bound = LinearQuantizer::quantize_into(self, values, rng, codes);
+        (0.0, bound)
+    }
+
+    fn dequantize_into(
+        &self,
+        codes: &[u16],
+        _norm: f32,
+        bound: f32,
+        scratch: &mut KernelScratch,
+        out: &mut Vec<f32>,
+    ) {
+        linear::dequantize_codes_into(codes, bound, self.bits, scratch, out);
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -256,6 +333,28 @@ impl Quantizer for SignSgd {
         signsgd::decode_sign(codes)
     }
 
+    fn quantize_into(
+        &self,
+        values: &[f32],
+        _rng: &mut Pcg64,
+        _scratch: &mut KernelScratch,
+        codes: &mut Vec<u16>,
+    ) -> (f32, f32) {
+        signsgd::sign_codes_into(values, codes);
+        (0.0, 0.0)
+    }
+
+    fn dequantize_into(
+        &self,
+        codes: &[u16],
+        _norm: f32,
+        _bound: f32,
+        _scratch: &mut KernelScratch,
+        out: &mut Vec<f32>,
+    ) {
+        signsgd::decode_signs_into(codes, 1.0, out);
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }
@@ -289,6 +388,29 @@ impl Quantizer for SignSgdNorm {
 
     fn dequantize(&self, codes: &[u16], norm: f32, _bound: f32) -> Vec<f32> {
         signsgd::decode_sign_norm(codes, norm)
+    }
+
+    fn quantize_into(
+        &self,
+        values: &[f32],
+        _rng: &mut Pcg64,
+        _scratch: &mut KernelScratch,
+        codes: &mut Vec<u16>,
+    ) -> (f32, f32) {
+        signsgd::sign_codes_into(values, codes);
+        (l2_norm(values) as f32, 0.0)
+    }
+
+    fn dequantize_into(
+        &self,
+        codes: &[u16],
+        norm: f32,
+        _bound: f32,
+        _scratch: &mut KernelScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let mag = norm / (codes.len().max(1) as f32).sqrt();
+        signsgd::decode_signs_into(codes, mag, out);
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -328,6 +450,30 @@ impl Quantizer for EfSign {
 
     fn dequantize(&self, codes: &[u16], _norm: f32, bound: f32) -> Vec<f32> {
         signsgd::decode_ef(codes, bound)
+    }
+
+    fn quantize_into(
+        &self,
+        values: &[f32],
+        _rng: &mut Pcg64,
+        _scratch: &mut KernelScratch,
+        codes: &mut Vec<u16>,
+    ) -> (f32, f32) {
+        let n = values.len().max(1);
+        let scale = values.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
+        signsgd::sign_codes_into(values, codes);
+        (0.0, scale)
+    }
+
+    fn dequantize_into(
+        &self,
+        codes: &[u16],
+        _norm: f32,
+        bound: f32,
+        _scratch: &mut KernelScratch,
+        out: &mut Vec<f32>,
+    ) {
+        signsgd::decode_signs_into(codes, bound, out);
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -388,6 +534,37 @@ mod tests {
         assert!((qe.bound - 2.5).abs() < 1e-6); // ℓ1 mean
         assert_eq!(qe.codes, vec![1, 0, 1, 0]);
         assert_eq!(EfSign.dequantize(&qe.codes, 0.0, qe.bound), vec![2.5, -2.5, 2.5, -2.5]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_api() {
+        // The scratch-buffer fast paths must be bit-identical to the
+        // allocating trait methods for every scheme, including when the
+        // scratch is reused across schemes (stale-table hazard).
+        let mut rng = Pcg64::seeded(74);
+        let g = gradient_like(&mut rng, 700);
+        let schemes: Vec<Box<dyn Quantizer>> = vec![
+            Box::new(CosineQuantizer::paper_default(4)),
+            Box::new(CosineQuantizer::new(3, Rounding::Unbiased, BoundMode::Auto)),
+            Box::new(LinearQuantizer::biased(8)),
+            Box::new(SignSgd),
+            Box::new(SignSgdNorm),
+            Box::new(EfSign),
+        ];
+        let mut scratch = KernelScratch::new();
+        let mut codes = Vec::new();
+        let mut out = Vec::new();
+        for q in schemes {
+            let a = q.quantize(&g, &mut Pcg64::seeded(9));
+            let (norm, bound) =
+                q.quantize_into(&g, &mut Pcg64::seeded(9), &mut scratch, &mut codes);
+            assert_eq!(codes, a.codes, "{}", q.name());
+            assert_eq!(norm.to_bits(), a.norm.to_bits(), "{}", q.name());
+            assert_eq!(bound.to_bits(), a.bound.to_bits(), "{}", q.name());
+            let d = q.dequantize(&a.codes, a.norm, a.bound);
+            q.dequantize_into(&codes, norm, bound, &mut scratch, &mut out);
+            assert_eq!(out, d, "{}", q.name());
+        }
     }
 
     #[test]

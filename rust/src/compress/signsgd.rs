@@ -19,7 +19,23 @@ use crate::util::stats::l2_norm;
 /// Sign bits of a vector (1 = non-negative). One code per element, ready
 /// for 1-bit packing.
 pub fn sign_codes(g: &[f32]) -> Vec<u16> {
-    g.iter().map(|&x| (x >= 0.0) as u16).collect()
+    let mut out = Vec::new();
+    sign_codes_into(g, &mut out);
+    out
+}
+
+/// [`sign_codes`] into a reusable buffer (cleared first).
+pub fn sign_codes_into(g: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.extend(g.iter().map(|&x| (x >= 0.0) as u16));
+}
+
+/// Reconstruct `magnitude_of(code) · sign` into a reusable buffer — the
+/// shared shape of all three sign-family decoders.
+#[inline]
+pub fn decode_signs_into(codes: &[u16], magnitude: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(codes.iter().map(|&c| if c == 1 { magnitude } else { -magnitude }));
 }
 
 /// signSGD reconstruction: ±1 per coordinate.

@@ -35,8 +35,16 @@ pub fn mask(seed: u64, n: usize, keep_frac: f64) -> Mask {
 
 /// Gather the kept coordinates of `g`.
 pub fn gather(g: &[f32], m: &Mask) -> Vec<f32> {
+    let mut out = Vec::new();
+    gather_into(g, m, &mut out);
+    out
+}
+
+/// [`gather`] into a reusable buffer (cleared first).
+pub fn gather_into(g: &[f32], m: &Mask, out: &mut Vec<f32>) {
     debug_assert_eq!(g.len(), m.n);
-    m.kept.iter().map(|&i| g[i]).collect()
+    out.clear();
+    out.extend(m.kept.iter().map(|&i| g[i]));
 }
 
 /// Scatter `values` back to a dense vector (zeros elsewhere).

@@ -12,7 +12,11 @@
 use crate::util::rng::Pcg64;
 
 /// A synthetic classification/segmentation task.
-pub trait SynthTask {
+///
+/// `Sync` because the runner's parallel client rounds share `&Task`
+/// across worker threads; generators are pure in `(seed, class,
+/// instance)`, so concurrent `gen` calls are naturally safe.
+pub trait SynthTask: Sync {
     /// Flat input length per example.
     fn input_len(&self) -> usize;
     /// Label length per example (1 for classification, voxels for seg).

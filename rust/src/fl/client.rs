@@ -9,7 +9,9 @@
 
 use anyhow::Result;
 
-use crate::compress::pipeline::{Direction, EncodedTensor, Pipeline, PipelineState};
+use crate::compress::pipeline::{
+    Direction, EncodeScratch, EncodedTensor, Pipeline, PipelineState,
+};
 use crate::compress::quantizer::Quantizer;
 use crate::compress::wire;
 use crate::data::partition::ClientShard;
@@ -62,6 +64,10 @@ pub struct Client {
     rng: Pcg64,
     /// Materialized local data, generated lazily on first selection.
     cache: Option<(Vec<f32>, Vec<i32>)>,
+    /// Reusable encode buffers — steady-state rounds allocate nothing in
+    /// the compression stages. Client-private, so the runner's parallel
+    /// fan-out needs no synchronization around it.
+    scratch: EncodeScratch,
 }
 
 /// The result of one local round.
@@ -79,6 +85,7 @@ impl Client {
             state: PipelineState::new(),
             rng,
             cache: None,
+            scratch: EncodeScratch::new(),
         }
     }
 
@@ -119,7 +126,13 @@ impl Client {
         let encoded = if use_kernel_quantizer {
             self.encode_via_kernel(engine, &delta, uplink)?
         } else {
-            uplink.encode(&delta, Direction::Uplink, &mut self.state, &mut self.rng)
+            uplink.encode_with(
+                &delta,
+                Direction::Uplink,
+                &mut self.state,
+                &mut self.rng,
+                &mut self.scratch,
+            )
         };
         Ok(LocalUpdate {
             encoded,

@@ -78,6 +78,12 @@ pub struct FlConfig {
     /// Route quantization through the Pallas kernel artifacts instead of
     /// the native Rust pipeline (demonstrates the L1 path; slower on CPU).
     pub use_kernel_quantizer: bool,
+    /// Worker threads for the per-round client train+encode loop.
+    /// `1` (default) runs serially; `0` means one per available core.
+    /// Results are bit-identical at any value: every client owns its RNG
+    /// lane, EF residual and scratch, and updates are aggregated in
+    /// selection order regardless of completion order.
+    pub client_threads: usize,
     /// Optional systems simulator ([`crate::sim`]): replay every round on
     /// a virtual clock over a heterogeneous device fleet. `None` keeps the
     /// pure byte-accounting harness.
@@ -115,6 +121,7 @@ impl FlConfig {
             seed: 42,
             eval_every: 5,
             use_kernel_quantizer: false,
+            client_threads: 1,
             sim: None,
             verbose: false,
         }
@@ -140,6 +147,7 @@ impl FlConfig {
             seed: 42,
             eval_every: 20,
             use_kernel_quantizer: false,
+            client_threads: 1,
             sim: None,
             verbose: false,
         }
@@ -180,6 +188,7 @@ impl FlConfig {
             seed: 42,
             eval_every: 5,
             use_kernel_quantizer: false,
+            client_threads: 1,
             sim: None,
             verbose: false,
         }
@@ -229,6 +238,24 @@ impl FlConfig {
         self
     }
 
+    /// Run the per-round client train+encode loop on `threads` workers
+    /// (`0` = one per available core, `1` = serial). Bit-identical
+    /// results at any value.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.client_threads = threads;
+        self
+    }
+
+    /// Resolve [`Self::client_threads`] (`0` → available parallelism).
+    pub fn effective_threads(&self) -> usize {
+        match self.client_threads {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            t => t,
+        }
+    }
+
     /// Clients selected per round.
     pub fn clients_per_round(&self) -> usize {
         ((self.n_clients as f64 * self.participation).round() as usize)
@@ -245,6 +272,7 @@ impl FlConfig {
             .set("uplink", self.uplink.name())
             .set("downlink", self.downlink.name())
             .set("seed", self.seed)
+            .set("threads", self.client_threads)
             .set("round_artifact", self.round_artifact.as_str())
             .set(
                 "sim",

@@ -22,6 +22,15 @@
 //! upload) are divided by each device's bandwidth to time the round.
 //! Updates from stragglers the round policy aborts are neither aggregated
 //! nor metered — their uploads never completed.
+//!
+//! The per-round client train+encode loop fans out over
+//! [`std::thread::scope`] when [`FlConfig::client_threads`] ≠ 1. This is
+//! *wall-clock* parallelism only: every client owns its RNG lane, EF
+//! residual and encode scratch, the shared `Engine`/model/task are read
+//! immutably, and updates are re-ordered back into selection order before
+//! aggregation — so runs are bit-identical to serial at any thread count
+//! (asserted by the self-skipping e2e test in
+//! `tests/runtime_integration.rs`).
 
 use anyhow::Result;
 
@@ -118,26 +127,38 @@ fn run_task<T: SynthTask>(
         };
         network.record_downlink_n(broadcast.bytes, receivers);
 
-        let mut updates = Vec::with_capacity(plan.active.len());
-        for &ci in &plan.active {
-            let global_model: &[f32] = if delta_mode {
-                &fleet_model.params
-            } else {
-                &server.params
-            };
-            let update = clients[ci].run_round(
-                engine,
-                task,
-                &cfg.round_artifact,
-                &round_cfg,
-                global_model,
-                lr,
-                &cfg.uplink,
-                cfg.use_kernel_quantizer,
-            )?;
-            let bytes = wire::serialize(&update.encoded);
-            updates.push((ci, bytes, update.num_examples, update.train_loss));
-        }
+        // Train + encode every active client; serially or fanned out over
+        // scoped threads (bit-identical either way — see module docs).
+        let global_model: &[f32] = if delta_mode {
+            &fleet_model.params
+        } else {
+            &server.params
+        };
+        let locals = fan_out(
+            &mut clients,
+            &plan.active,
+            cfg.effective_threads(),
+            |client| {
+                let update = client.run_round(
+                    engine,
+                    task,
+                    &cfg.round_artifact,
+                    &round_cfg,
+                    global_model,
+                    lr,
+                    &cfg.uplink,
+                    cfg.use_kernel_quantizer,
+                )?;
+                let bytes = wire::serialize(&update.encoded);
+                Ok((bytes, update.num_examples, update.train_loss))
+            },
+        )?;
+        let updates: Vec<(usize, Vec<u8>, u32, f32)> = plan
+            .active
+            .iter()
+            .zip(locals)
+            .map(|(&ci, (bytes, num_examples, train_loss))| (ci, bytes, num_examples, train_loss))
+            .collect();
 
         // With the simulator on, the round policy decides which trained
         // updates actually land before the round closes; aborted straggler
@@ -230,6 +251,83 @@ fn run_task<T: SynthTask>(
         wall_secs: sw.elapsed_secs(),
         timeline: sim.map(FleetSim::into_timeline),
     })
+}
+
+/// Run `f` over the clients selected by `active`, returning results in
+/// `active` order. `threads <= 1` runs serially in place; otherwise the
+/// clients fan out round-robin over [`std::thread::scope`] workers.
+///
+/// Determinism: each worker touches only its own disjoint `&mut Client`s
+/// (every client owns its RNG lane / EF residual / scratch), shared state
+/// is read-only, and results carry their selection position, so the
+/// returned vector — and any error, which is the first failure in
+/// `active` order — is independent of scheduling and thread count.
+fn fan_out<R: Send>(
+    clients: &mut [Client],
+    active: &[usize],
+    threads: usize,
+    f: impl Fn(&mut Client) -> Result<R> + Sync,
+) -> Result<Vec<R>> {
+    if threads <= 1 || active.len() <= 1 {
+        let mut out = Vec::with_capacity(active.len());
+        for &ci in active {
+            out.push(f(&mut clients[ci])?);
+        }
+        return Ok(out);
+    }
+
+    // Disjoint &mut extraction: one sweep over the fleet, tagging each
+    // selected client with its position in `active` (indices are distinct
+    // by construction of `sample_indices`).
+    let mut pos_of: Vec<usize> = vec![usize::MAX; clients.len()];
+    for (p, &ci) in active.iter().enumerate() {
+        debug_assert_eq!(pos_of[ci], usize::MAX, "duplicate selection {ci}");
+        pos_of[ci] = p;
+    }
+    let refs: Vec<(usize, &mut Client)> = clients
+        .iter_mut()
+        .enumerate()
+        .filter_map(|(ci, c)| {
+            let p = pos_of[ci];
+            (p != usize::MAX).then_some((p, c))
+        })
+        .collect();
+
+    let threads = threads.min(refs.len());
+    let mut buckets: Vec<Vec<(usize, &mut Client)>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, r) in refs.into_iter().enumerate() {
+        buckets[i % threads].push(r);
+    }
+
+    let f = &f;
+    let per_thread: Vec<Vec<(usize, Result<R>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                s.spawn(move || {
+                    bucket
+                        .into_iter()
+                        .map(|(p, client)| (p, f(client)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client worker panicked"))
+            .collect()
+    });
+
+    let mut results: Vec<Option<Result<R>>> =
+        std::iter::repeat_with(|| None).take(active.len()).collect();
+    for (p, r) in per_thread.into_iter().flatten() {
+        results[p] = Some(r);
+    }
+    let mut out = Vec::with_capacity(active.len());
+    for r in results {
+        out.push(r.expect("missing client result")?);
+    }
+    Ok(out)
 }
 
 /// Run a federated experiment to completion.

@@ -23,7 +23,9 @@
 
 use anyhow::Result;
 
-use crate::compress::pipeline::{decode, Direction, EncodedTensor, Pipeline, PipelineState};
+use crate::compress::pipeline::{
+    decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline, PipelineState,
+};
 use crate::compress::wire;
 use crate::util::rng::Pcg64;
 
@@ -66,6 +68,9 @@ pub struct Server {
     replica: Vec<f32>,
     /// Downlink pipeline memory (EF residual, if enabled) + seed lane.
     state: PipelineState,
+    /// Reusable encode/decode buffers (uplink ingest + downlink encode):
+    /// steady-state rounds run the compression stages allocation-free.
+    scratch: EncodeScratch,
     rng: Pcg64,
     /// Weighted-sum accumulator for the current round.
     acc: Vec<f64>,
@@ -82,6 +87,7 @@ impl Server {
             eta_s,
             downlink: Downlink::Float32Model,
             state: PipelineState::new(),
+            scratch: EncodeScratch::new(),
             rng: Pcg64::new(0, 0xD0_417),
             acc: vec![0.0; n],
             weight_sum: 0.0,
@@ -110,7 +116,7 @@ impl Server {
 
     /// Same, for an already-parsed [`EncodedTensor`].
     pub fn receive_decoded(&mut self, enc: &EncodedTensor, num_examples: u32) -> Result<()> {
-        let delta = decode(enc)?;
+        let delta = decode_with(enc, &mut self.scratch)?;
         anyhow::ensure!(
             delta.len() == self.params.len(),
             "update length {} != model {}",
@@ -165,13 +171,19 @@ impl Server {
                     .zip(&self.replica)
                     .map(|(&p, &r)| p - r)
                     .collect();
-                let enc = pipe.encode(&delta, Direction::Downlink, &mut self.state, &mut self.rng);
+                let enc = pipe.encode_with(
+                    &delta,
+                    Direction::Downlink,
+                    &mut self.state,
+                    &mut self.rng,
+                    &mut self.scratch,
+                );
                 let frame = wire::serialize(&enc);
                 // Advance the reference replica by the *decoded* delta so
                 // the server models exactly what clients reconstruct; the
                 // next round's delta then carries this round's
                 // quantization error (implicit downlink error feedback).
-                let decoded = decode(&enc)?;
+                let decoded = decode_with(&enc, &mut self.scratch)?;
                 for (r, d) in self.replica.iter_mut().zip(&decoded) {
                     *r += d;
                 }

@@ -3,12 +3,15 @@
 //! ```text
 //! repro figure <id>|all [--rounds N] [--scale full] [--seed S] [--quiet]
 //! repro train --task mnist|mnist-iid|cifar|unet --codec <name> [--bits B]
-//!             [--keep F] [--rounds N] [--kernel] [--seed S]
+//!             [--keep F] [--rounds N] [--kernel] [--seed S] [--threads N]
 //!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
 //! repro sim   --task <t> [--rounds N] [--fleet heterogeneous|uniform|3g]
 //!             [--policy sync|overselect] [--over F] [--availability P]
 //!             [--dropout P] [--target M]   # time-to-accuracy comparison
 //! repro compress-stats [--n N]      # pipeline table, no artifacts needed
+//! repro bench [--json] [--quick] [--n N] [--out FILE]
+//!                                   # compress perf trajectory
+//!                                   # (ns/elem per stage × bit width)
 //! repro check                       # load + compile all artifacts
 //! repro list                        # figure ids and codec names
 //! ```
@@ -39,6 +42,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("sim") => cmd_sim(args),
         Some("compress-stats") => cmd_compress_stats(args),
+        Some("bench") => cmd_bench(args),
         Some("check") => cmd_check(),
         Some("list") | None => cmd_list(),
         Some(other) => bail!("unknown subcommand '{other}' (try `repro list`)"),
@@ -46,7 +50,7 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("subcommands: figure, train, sim, compress-stats, check, list");
+    println!("subcommands: figure, train, sim, compress-stats, bench, check, list");
     println!("figures: {}", figures::ALL.join(", "));
     println!("tasks:   mnist (non-iid), mnist-iid, cifar, unet");
     println!(
@@ -61,6 +65,31 @@ fn cmd_list() -> Result<()> {
         "sim: --fleet heterogeneous|uniform|3g, --policy sync|overselect [--over F], \
          --availability P, --dropout P, --target M"
     );
+    println!("perf: --threads N (0 = all cores), bench [--json] [--quick] [--n N] [--out FILE]");
+    Ok(())
+}
+
+/// The compress perf trajectory: ns/elem for every hot stage at every bit
+/// width plus end-to-end round time, optionally recorded as
+/// `BENCH_compress.json` (`--json`) so the numbers are machine-comparable
+/// across PRs.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let n = args.opt_usize("n", 1 << 20);
+    let seed = args.opt_u64("seed", 42);
+    let mut b = if args.flag("quick") {
+        cossgd::util::bench::Bencher::quick()
+    } else {
+        cossgd::util::bench::Bencher::new()
+    };
+    cossgd::compress::perf::run_suite(&mut b, n, seed);
+    if let Some(speedup) = cossgd::compress::perf::headline_speedup(b.results()) {
+        println!("headline: 4-bit biased quantize+pack kernel speedup {speedup:.1}x vs reference");
+    }
+    if args.flag("json") {
+        let out = std::path::PathBuf::from(args.opt_or("out", "BENCH_compress.json"));
+        cossgd::util::bench::write_trajectory(&out, cossgd::compress::perf::SUITE, b.results())?;
+        println!("trajectory written to {out:?}");
+    }
     Ok(())
 }
 
@@ -185,6 +214,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     cfg.eval_every = args.opt_usize("eval-every", 5);
     cfg.use_kernel_quantizer = args.flag("kernel");
+    cfg.client_threads = args.opt_usize("threads", 1);
     cfg.verbose = !args.flag("quiet");
     if let Some(c) = args.opt("clients") {
         cfg.n_clients = c.parse()?;
@@ -312,6 +342,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             cfg = cfg.with_downlink(d);
         }
         cfg.eval_every = args.opt_usize("eval-every", 5);
+        cfg.client_threads = args.opt_usize("threads", 1);
         cfg.verbose = args.flag("verbose");
         let result = fl::run_labeled(&cfg, &engine, name)?;
         let tl = result.timeline.as_ref().expect("sim runs carry a timeline");

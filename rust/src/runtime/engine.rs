@@ -8,10 +8,9 @@
 //! text parser reassigns instruction ids, avoiding xla_extension 0.5.1's
 //! 64-bit-id proto rejection.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -89,8 +88,20 @@ impl OutValue {
 pub struct Engine {
     pub manifest: Manifest,
     client: xla::PjRtClient,
-    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
+
+// SAFETY: the engine is shared read-only (`&Engine`) across the client
+// worker threads of `fl::runner`. The underlying PJRT C++ API guarantees
+// `PjRtClient::Compile` and `PjRtLoadedExecutable::Execute` are
+// thread-safe (concurrent executions of the same loaded executable are a
+// core PJRT use case); the `xla` crate types merely wrap those pointers
+// and lack auto traits only because raw pointers suppress them. All
+// Rust-side mutability (the executable cache) is behind a `Mutex`, and
+// `Manifest` is plain owned data. Literals are created and consumed
+// thread-locally per call.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Create from an artifacts directory (must contain `manifest.json`).
@@ -100,7 +111,7 @@ impl Engine {
         Ok(Engine {
             manifest,
             client,
-            cache: RefCell::new(BTreeMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -110,10 +121,13 @@ impl Engine {
     }
 
     /// Compile (or fetch from cache) the executable for `name`.
-    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
             return Ok(exe.clone());
         }
+        // Compile outside the lock (it can take seconds); racing threads
+        // may compile the same artifact once each, but the first insert
+        // wins and both results are equivalent.
         let spec = self.manifest.artifact(name)?;
         let proto = xla::HloModuleProto::from_text_file(&spec.file)
             .map_err(|e| anyhow!("parse {:?}: {e:?}", spec.file))?;
@@ -122,8 +136,14 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let exe = Arc::new(exe);
+        let exe = self
+            .cache
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(exe)
+            .clone();
         Ok(exe)
     }
 
@@ -193,7 +213,7 @@ impl Engine {
 
     /// Number of artifacts compiled so far (diagnostics).
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }
 

@@ -3,11 +3,22 @@
 //! The `benches/*.rs` targets are built with `harness = false` and drive
 //! this module directly: warm-up, timed iterations, and a one-line report
 //! with mean / p50 / p95 and optional throughput.
+//!
+//! Results can be dumped as a machine-readable **perf trajectory**
+//! (`BENCH_*.json`, schema [`TRAJECTORY_SCHEMA`]): one stable shape shared
+//! by the compress and sim suites, so ns/elem numbers are comparable
+//! across PRs (`repro bench --json`, `cargo bench --bench bench_kernel --
+//! --json`, `cargo bench --bench bench_sim -- --json`).
 
 use std::hint::black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::timer::fmt_duration;
+
+/// Schema tag for the perf-trajectory files.
+pub const TRAJECTORY_SCHEMA: &str = "cossgd-bench/v1";
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -44,6 +55,67 @@ impl BenchResult {
         }
         s
     }
+
+    /// Mean nanoseconds per element (the trajectory's primary metric),
+    /// when the case was annotated with an element count.
+    pub fn ns_per_elem(&self) -> Option<f64> {
+        self.elems_per_iter
+            .map(|e| self.mean.as_nanos() as f64 / e.max(1) as f64)
+    }
+
+    /// Machine-readable form for the trajectory file.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean.as_nanos() as f64)
+            .set("p50_ns", self.p50.as_nanos() as f64)
+            .set("p95_ns", self.p95.as_nanos() as f64);
+        if let Some(e) = self.elems_per_iter {
+            j = j.set("elems_per_iter", e).set(
+                "ns_per_elem",
+                self.ns_per_elem().unwrap_or(0.0),
+            );
+        }
+        if let Some(bts) = self.bytes_per_iter {
+            j = j.set("bytes_per_iter", bts).set(
+                "gib_per_s",
+                bts as f64 / self.mean.as_secs_f64() / (1u64 << 30) as f64,
+            );
+        }
+        j
+    }
+}
+
+/// Assemble the trajectory document for one suite run.
+pub fn trajectory_json(suite: &str, results: &[BenchResult]) -> Json {
+    Json::obj()
+        .set("schema", TRAJECTORY_SCHEMA)
+        .set("suite", suite)
+        .set(
+            "results",
+            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+        )
+}
+
+/// Write `BENCH_<suite>`-style trajectory JSON to `path`.
+pub fn write_trajectory(
+    path: &Path,
+    suite: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    std::fs::write(path, trajectory_json(suite, results).pretty() + "\n")
+}
+
+/// `--quick` convention for `harness = false` bench binaries and
+/// `repro bench`: cap sampling so CI smoke runs finish in seconds.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+/// `--json` convention for the same binaries: record the trajectory file.
+pub fn json_requested() -> bool {
+    std::env::args().any(|a| a == "--json")
 }
 
 /// Benchmark runner with a time budget per case.
@@ -72,6 +144,16 @@ impl Bencher {
         Bencher {
             min_time: Duration::from_millis(ms),
             max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Smoke-run configuration (`--quick`): a few samples per case, just
+    /// enough to prove the path executes and emit a trajectory point.
+    pub fn quick() -> Self {
+        Bencher {
+            min_time: Duration::from_millis(40),
+            max_iters: 2_000,
             results: Vec::new(),
         }
     }
@@ -176,6 +258,25 @@ mod tests {
         });
         assert!(r.mean > Duration::from_nanos(1));
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn trajectory_json_shape() {
+        let mut b = Bencher {
+            min_time: Duration::from_millis(5),
+            max_iters: 50,
+            results: Vec::new(),
+        };
+        b.bench_elems("case/a", 100, || 1 + 1);
+        let j = trajectory_json("compress", b.results());
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(TRAJECTORY_SCHEMA));
+        assert_eq!(j.get("suite").unwrap().as_str(), Some("compress"));
+        let rs = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("case/a"));
+        assert!(rs[0].get("ns_per_elem").unwrap().as_f64().unwrap() >= 0.0);
+        // Round-trips through the in-tree JSON parser.
+        assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
     }
 
     #[test]

@@ -1,0 +1,31 @@
+//! Perf guard for the kernel fast path, `#[ignore]`d by default — timing
+//! assertions are meaningless in debug builds and flaky on loaded CI
+//! boxes. Run deliberately with:
+//!
+//! ```text
+//! cargo test --release --test bench_guard -- --ignored
+//! ```
+//!
+//! It runs the shared compress perf suite (quick sampling), records the
+//! trajectory to `BENCH_compress.json`, and asserts the acceptance
+//! criterion: the transcendental-free 4-bit biased cosine quantize+pack
+//! is at least 5× fewer ns/elem than the reference `acos` path at n≈1M.
+
+use cossgd::compress::perf;
+use cossgd::util::bench::{write_trajectory, Bencher};
+
+#[test]
+#[ignore = "perf guard: run with --release -- --ignored"]
+fn kernel_quantize_pack_is_5x_faster_than_reference() {
+    let mut b = Bencher::quick();
+    perf::run_suite(&mut b, 1 << 20, 1);
+    let path = std::path::Path::new("BENCH_compress.json");
+    write_trajectory(path, perf::SUITE, b.results()).expect("record trajectory");
+    let speedup = perf::headline_speedup(b.results()).expect("headline cases ran");
+    println!("4-bit biased quantize+pack: kernel {speedup:.1}x faster than reference");
+    assert!(
+        speedup >= 5.0,
+        "kernel quantize+pack speedup {speedup:.2}x < 5x \
+         (see {path:?} for the full trajectory)"
+    );
+}

@@ -177,6 +177,54 @@ fn ef_state_persists_across_rounds() {
     assert!((e2_continuing.bound - e2_fresh.bound).abs() > 1e-6);
 }
 
+/// Concurrent per-client encodes (each with its own RNG lane, EF state
+/// and scratch — the runner's fan-out shape) are bit-identical to the
+/// serial loop, independent of how clients land on threads.
+#[test]
+fn threaded_client_encodes_bit_identical_to_serial() {
+    let n_clients = 13;
+    let n = 5000;
+    let pipe = Pipeline::cosine(4).with_error_feedback();
+    let gradients: Vec<Vec<f32>> = (0..n_clients)
+        .map(|c| gradient_like(&mut Pcg64::new(99, c as u64), n))
+        .collect();
+    let encode_client = |c: usize| {
+        // Two rounds so the EF residual carries across encodes.
+        let mut rng = Pcg64::new(7, c as u64);
+        let mut st = PipelineState::new();
+        let mut scratch = cossgd::compress::EncodeScratch::new();
+        let g = &gradients[c];
+        let e1 = pipe.encode_with(g, Direction::Uplink, &mut st, &mut rng, &mut scratch);
+        let e2 = pipe.encode_with(g, Direction::Uplink, &mut st, &mut rng, &mut scratch);
+        (wire::serialize(&e1), wire::serialize(&e2))
+    };
+
+    let serial: Vec<_> = (0..n_clients).map(encode_client).collect();
+    for threads in [2usize, 4, 7] {
+        let mut parallel: Vec<Option<(Vec<u8>, Vec<u8>)>> = vec![None; n_clients];
+        let chunks: Vec<Vec<usize>> = (0..threads)
+            .map(|t| (0..n_clients).filter(|c| c % threads == t).collect())
+            .collect();
+        let ec = &encode_client;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .iter()
+                .map(|chunk| {
+                    s.spawn(move || chunk.iter().map(|&c| (c, ec(c))).collect::<Vec<_>>())
+                })
+                .collect();
+            for h in handles {
+                for (c, frames) in h.join().unwrap() {
+                    parallel[c] = Some(frames);
+                }
+            }
+        });
+        for (c, (got, want)) in parallel.into_iter().zip(&serial).enumerate() {
+            assert_eq!(got.as_ref(), Some(want), "client {c} at {threads} threads");
+        }
+    }
+}
+
 /// Norm is preserved through wire f32 round-trips (header floats).
 #[test]
 fn wire_floats_exact() {

@@ -1,0 +1,212 @@
+//! The kernel fast path's bit-exactness contract: for every bit width in
+//! 1..=16, the transcendental-free biased cosine quantizer (threshold
+//! search) must produce codes **bit-identical** to the reference `acos`
+//! path — including at adversarial inputs: ±0.0, subnormals, values
+//! landing exactly on bin edges (±1 ULP), all-equal vectors, saturated
+//! tails and degenerate shapes.
+
+use cossgd::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
+use cossgd::compress::kernel::{
+    build_thresholds, reference_code, scale_for, search_code, KernelScratch,
+};
+use cossgd::util::propcheck::{forall, gradient_like};
+use cossgd::util::rng::Pcg64;
+
+/// Neighbor in the IEEE-754 total order (same monotone-key construction
+/// as the kernel's threshold bisection; handles the ±0 boundary).
+fn ulp_step(x: f32, up: bool) -> f32 {
+    let b = x.to_bits();
+    let k = if b & 0x8000_0000 != 0 { !b } else { b | 0x8000_0000 };
+    let k2 = if up { k + 1 } else { k - 1 };
+    f32::from_bits(if k2 & 0x8000_0000 != 0 { k2 & 0x7fff_ffff } else { !k2 })
+}
+
+/// The scalar contract at the bin edges themselves: for every threshold
+/// `t_k`, the search and the reference agree at `t_k` and both ULP
+/// neighbors. This is exactly where a naive `cos(edge)` table (without
+/// the exact bisection) goes wrong.
+#[test]
+fn scalar_search_matches_reference_at_every_bin_edge() {
+    let mut thresholds = Vec::new();
+    for bits in 1..=16u8 {
+        // Wide tables get strided probing and fewer bounds to keep the
+        // test fast; narrow ones are swept exhaustively.
+        let stride = if bits <= 10 { 1 } else { 251 };
+        let bounds: &[f32] = if bits <= 10 {
+            &[0.0, 0.1, 0.7, 1.5]
+        } else {
+            &[0.0, 0.7]
+        };
+        for &bound in bounds {
+            let scale = scale_for(bits, bound);
+            assert!(scale > 0.0);
+            build_thresholds(bits, bound, &mut thresholds);
+            for (k, &t) in thresholds.iter().enumerate().step_by(stride) {
+                if !t.is_finite() {
+                    continue;
+                }
+                for x in [t, ulp_step(t, false), ulp_step(t, true)] {
+                    let x = x.clamp(-1.0, 1.0);
+                    assert_eq!(
+                        search_code(x, &thresholds),
+                        reference_code(x, bound, scale),
+                        "bits={bits} bound={bound} k={k} x={x:?} ({:#010x})",
+                        x.to_bits()
+                    );
+                }
+            }
+            // A uniform sweep away from the edges, for good measure.
+            for i in 0..500 {
+                let x = -1.0 + i as f32 * (2.0 / 499.0);
+                assert_eq!(
+                    search_code(x.clamp(-1.0, 1.0), &thresholds),
+                    reference_code(x, bound, scale),
+                    "bits={bits} bound={bound} sweep x={x}"
+                );
+            }
+        }
+    }
+}
+
+/// Hand-built adversarial vectors: signed zeros, subnormals, dominated
+/// tails, all-equal values, single elements.
+fn adversarial_vectors(rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    let mut base = gradient_like(rng, 512);
+    base[0] = 0.0;
+    base[1] = -0.0;
+    base[2] = 1e-41; // subnormal
+    base[3] = -1e-41;
+    base[4] = f32::MIN_POSITIVE;
+    base[5] = -f32::MIN_POSITIVE;
+    base[6] = 40.0; // dominating coordinate (saturates the clip bound)
+    base[7] = -40.0;
+    vec![
+        base,
+        vec![0.25f32; 100],  // all-equal: degenerate angle spread
+        vec![-1e-30f32; 17], // all-equal tiny
+        vec![3.0f32],        // single element
+        vec![0.0f32, -0.0, 5.0], // zeros beside a spike
+        vec![0.0f32; 64],        // zero vector (norm-0 early path)
+        gradient_like(rng, 10_000), // bulk realistic
+    ]
+}
+
+#[test]
+fn kernel_codes_bit_identical_to_reference_all_bit_widths() {
+    let mut rng = Pcg64::seeded(2024);
+    let vectors = adversarial_vectors(&mut rng);
+    for bits in 1..=16u8 {
+        // Wide tables are expensive to rebuild per (bound, vector) pair in
+        // debug builds; one bound mode still exercises the whole path.
+        let bounds: &[BoundMode] = if bits <= 10 {
+            &[
+                BoundMode::Auto,
+                BoundMode::ClipTopPercent(1.0),
+                BoundMode::FixedAngle(0.3),
+            ]
+        } else {
+            &[BoundMode::ClipTopPercent(1.0)]
+        };
+        for &bound in bounds {
+            let q = CosineQuantizer::new(bits, Rounding::Biased, bound);
+            for (vi, g) in vectors.iter().enumerate() {
+                let fast = q.quantize(g, &mut Pcg64::seeded(1));
+                let refr = q.quantize_reference(g, &mut Pcg64::seeded(1));
+                assert_eq!(
+                    fast.codes, refr.codes,
+                    "bits={bits} bound={bound:?} vector #{vi} (n={})",
+                    g.len()
+                );
+                assert_eq!(fast.norm.to_bits(), refr.norm.to_bits());
+                assert_eq!(fast.bound.to_bits(), refr.bound.to_bits());
+                // And the LUT decode inverts to the same values as the
+                // reference formula (it IS the formula, tabulated).
+                assert_eq!(fast.dequantize(), refr.dequantize());
+            }
+        }
+    }
+}
+
+/// Vector-level probing of the bin-edge neighborhood: elements built from
+/// the threshold table (±1 ULP) so normalized ratios cluster tightly
+/// around the code boundaries. (Exact-edge coverage is the scalar test
+/// above — after normalization by the full vector's norm these land
+/// *near*, which is the regime real gradients hit.)
+#[test]
+fn vector_with_planted_bin_edges_matches_reference() {
+    for bits in [2u8, 4, 8] {
+        let bound = 0.25f32;
+        let mut thresholds = Vec::new();
+        build_thresholds(bits, bound, &mut thresholds);
+        let norm_target = 8.0f32;
+        let mut g: Vec<f32> = thresholds
+            .iter()
+            .filter(|t| t.is_finite())
+            .flat_map(|&t| {
+                let v = t * norm_target;
+                [v, ulp_step(v, true), ulp_step(v, false)]
+            })
+            .collect();
+        g.push(1.0); // keep the vector non-degenerate
+        let q = CosineQuantizer::new(bits, Rounding::Biased, BoundMode::FixedAngle(bound));
+        let fast = q.quantize(&g, &mut Pcg64::seeded(3));
+        let refr = q.quantize_reference(&g, &mut Pcg64::seeded(3));
+        assert_eq!(fast.codes, refr.codes, "bits={bits}");
+    }
+}
+
+/// Large tensor at a wide code width: clears the table-build break-even,
+/// so the *table* path (not the small-n reference fallback) is what gets
+/// compared against the reference.
+#[test]
+fn wide_table_path_forced_matches_reference() {
+    let mut rng = Pcg64::seeded(5);
+    let g = gradient_like(&mut rng, 40_000);
+    let q = CosineQuantizer::new(12, Rounding::Biased, BoundMode::ClipTopPercent(1.0));
+    let fast = q.quantize(&g, &mut Pcg64::seeded(1));
+    let refr = q.quantize_reference(&g, &mut Pcg64::seeded(1));
+    assert_eq!(fast.codes, refr.codes);
+}
+
+/// One scratch across changing bounds: the threshold cache must key the
+/// table out, never serve a stale one.
+#[test]
+fn stale_threshold_cache_is_keyed_out() {
+    let mut scratch = KernelScratch::new();
+    let mut codes = Vec::new();
+    let mut rng = Pcg64::seeded(6);
+    let g = gradient_like(&mut rng, 5_000);
+    for bound in [0.2f32, 0.9, 0.2] {
+        let q = CosineQuantizer::new(4, Rounding::Biased, BoundMode::FixedAngle(bound));
+        q.quantize_into(&g, &mut Pcg64::seeded(1), &mut scratch, &mut codes);
+        let refr = q.quantize_reference(&g, &mut Pcg64::seeded(1));
+        assert_eq!(codes, refr.codes, "bound={bound}");
+    }
+}
+
+#[test]
+fn property_random_vectors_and_widths() {
+    forall(
+        60,
+        91,
+        |rng, size| {
+            let n = size.len(rng) * 16 + 1;
+            let bits = 1 + rng.below(16) as u8;
+            let clip = rng.bernoulli(0.5);
+            (gradient_like(rng, n), bits, clip)
+        },
+        |(g, bits, clip)| {
+            let bound = if *clip {
+                BoundMode::ClipTopPercent(1.0)
+            } else {
+                BoundMode::Auto
+            };
+            let q = CosineQuantizer::new(*bits, Rounding::Biased, bound);
+            let fast = q.quantize(g, &mut Pcg64::seeded(7));
+            let refr = q.quantize_reference(g, &mut Pcg64::seeded(7));
+            fast.codes == refr.codes
+                && fast.norm.to_bits() == refr.norm.to_bits()
+                && fast.bound.to_bits() == refr.bound.to_bits()
+        },
+    );
+}

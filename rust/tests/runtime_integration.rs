@@ -219,6 +219,44 @@ fn simulated_federation_end_to_end() {
 }
 
 #[test]
+fn parallel_client_rounds_bit_identical_to_serial() {
+    let Some(engine) = engine_or_skip() else { return };
+    // The tentpole determinism contract: the per-round client
+    // train+encode fan-out must be bit-identical to the serial loop at
+    // ANY thread count — same final params, same byte meters, same
+    // history — because every client owns its RNG lane, EF residual and
+    // scratch, and updates re-enter aggregation in selection order.
+    let base = {
+        let mut cfg = FlConfig::mnist(false)
+            .with_rounds(2)
+            .with_uplink(Pipeline::cosine(4).with_error_feedback())
+            .with_downlink(Pipeline::cosine(8));
+        cfg.eval_every = 1;
+        cfg.n_clients = 12;
+        cfg.participation = 0.5; // several clients per round
+        cfg
+    };
+    let serial = fl::run(&base.clone().with_threads(1), &engine).expect("serial run");
+    for threads in [2usize, 5, 0] {
+        let par = fl::run(&base.clone().with_threads(threads), &engine)
+            .unwrap_or_else(|e| panic!("threads={threads}: {e:#}"));
+        assert_eq!(
+            par.final_params, serial.final_params,
+            "threads={threads}: final params diverged"
+        );
+        assert_eq!(par.network.uplink_bytes, serial.network.uplink_bytes);
+        assert_eq!(par.network.downlink_bytes, serial.network.downlink_bytes);
+        assert_eq!(
+            par.history.records.len(),
+            serial.history.records.len()
+        );
+        for (a, b) in par.history.records.iter().zip(&serial.history.records) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        }
+    }
+}
+
+#[test]
 fn kernel_quantizer_path_runs_in_federation() {
     let Some(engine) = engine_or_skip() else { return };
     let mut cfg = FlConfig::mnist(false)
