@@ -2,9 +2,9 @@
 //! search) vs the reference `acos` path, LUT dequantize, and the
 //! word-at-a-time bit packer — the compress perf trajectory.
 //!
-//! `--quick` caps sampling for CI smoke runs; `--json` records
-//! `BENCH_compress.json` (schema `cossgd-bench/v1`) so ns/elem numbers
-//! are comparable across PRs.
+//! `--quick` caps sampling for CI smoke runs; `--json` **appends** a run
+//! to `BENCH_compress.json` (schema `cossgd-bench/v1`) so ns/elem numbers
+//! accumulate and stay comparable across PRs.
 
 use cossgd::compress::perf;
 use cossgd::util::bench::{json_requested, quick_requested, write_trajectory, Bencher};
@@ -23,6 +23,6 @@ fn main() {
     if json_requested() {
         let path = std::path::Path::new("BENCH_compress.json");
         write_trajectory(path, perf::SUITE, b.results()).expect("write trajectory");
-        println!("trajectory written to {path:?}");
+        println!("run appended to {path:?}");
     }
 }

@@ -5,10 +5,10 @@
 //! train → upload).
 //!
 //! Every case annotates its event count, so ns/elem in the trajectory IS
-//! ns/event; `--json` records `BENCH_sim.json` in the same
+//! ns/event; `--json` **appends** a run to `BENCH_sim.json` in the same
 //! `cossgd-bench/v1` schema as `BENCH_compress.json` — sim and compress
-//! perf share one trajectory file format across PRs. `--quick` caps
-//! sampling for CI smoke runs.
+//! perf share one accumulating trajectory file format across PRs.
+//! `--quick` caps sampling for CI smoke runs.
 
 use cossgd::sim::{ClientLoad, FleetSim, RoundPlan, RoundPolicy, SimConfig};
 use cossgd::util::bench::{json_requested, quick_requested, write_trajectory, Bencher};
@@ -80,6 +80,6 @@ fn main() {
     if json_requested() {
         let path = std::path::Path::new("BENCH_sim.json");
         write_trajectory(path, "sim", b.results()).expect("write trajectory");
-        println!("trajectory written to {path:?} (ns_per_elem = ns per simulator event)");
+        println!("run appended to {path:?} (ns_per_elem = ns per simulator event)");
     }
 }

@@ -304,6 +304,58 @@ pub fn dequantize_cosine(
     }));
 }
 
+/// Fused cosine dequantize+accumulate: `acc[i] += value(code_i) · w`
+/// without materializing the decoded vector. The per-element value is
+/// computed exactly as [`dequantize_cosine`] computes it (same LUT cache,
+/// same small-tensor fallback, same degenerate-norm zeros), and the fold
+/// is the same `f32 → f64` mul-add the server's aggregation loop performs
+/// — so fused-accumulate is **bit-identical** to decode-then-add
+/// (asserted across bit widths in `tests/kernel_equivalence.rs`).
+pub fn accumulate_cosine(
+    codes: &[u16],
+    norm: f32,
+    bound: f32,
+    bits: u8,
+    scratch: &mut KernelScratch,
+    w: f64,
+    acc: &mut [f64],
+) {
+    debug_assert_eq!(codes.len(), acc.len());
+    if norm == 0.0 {
+        // Decode-then-add would fold in exact zeros; do the same adds so
+        // the accumulator bits match (0.0·w is +0.0 for every w > 0).
+        for a in acc.iter_mut() {
+            *a += 0.0f64 * w;
+        }
+        return;
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let step = (PI - 2.0 * bound) / max_code;
+    let levels = 1usize << bits;
+    if codes.len() < levels {
+        for (a, &c) in acc.iter_mut().zip(codes) {
+            *a += ((bound + c as f32 * step).cos() * norm) as f64 * w;
+        }
+        return;
+    }
+    let key = (bits, norm.to_bits(), bound.to_bits());
+    if scratch.cos_levels_key != Some(key) {
+        scratch.cos_levels.clear();
+        scratch
+            .cos_levels
+            .extend((0..levels).map(|c| (bound + c as f32 * step).cos() * norm));
+        scratch.cos_levels_key = Some(key);
+    }
+    let lut = &scratch.cos_levels[..];
+    for (a, &c) in acc.iter_mut().zip(codes) {
+        let v = lut
+            .get(c as usize)
+            .copied()
+            .unwrap_or_else(|| (bound + c as f32 * step).cos() * norm);
+        *a += v as f64 * w;
+    }
+}
+
 /// Linear reconstruction through a level LUT (same contract as
 /// [`dequantize_cosine`], mirroring `linear::dequantize_codes`).
 pub fn dequantize_linear(
@@ -339,6 +391,51 @@ pub fn dequantize_linear(
             .copied()
             .unwrap_or_else(|| c as f32 * step - bound)
     }));
+}
+
+/// Fused linear dequantize+accumulate — the [`accumulate_cosine`]
+/// contract for the linear level map (bit-identical to
+/// [`dequantize_linear`] followed by the f64 fold).
+pub fn accumulate_linear(
+    codes: &[u16],
+    bound: f32,
+    bits: u8,
+    scratch: &mut KernelScratch,
+    w: f64,
+    acc: &mut [f64],
+) {
+    debug_assert_eq!(codes.len(), acc.len());
+    if bound == 0.0 {
+        for a in acc.iter_mut() {
+            *a += 0.0f64 * w;
+        }
+        return;
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
+    let step = 2.0 * bound / max_code;
+    let levels = 1usize << bits;
+    if codes.len() < levels {
+        for (a, &c) in acc.iter_mut().zip(codes) {
+            *a += (c as f32 * step - bound) as f64 * w;
+        }
+        return;
+    }
+    let key = (bits, bound.to_bits());
+    if scratch.lin_levels_key != Some(key) {
+        scratch.lin_levels.clear();
+        scratch
+            .lin_levels
+            .extend((0..levels).map(|c| c as f32 * step - bound));
+        scratch.lin_levels_key = Some(key);
+    }
+    let lut = &scratch.lin_levels[..];
+    for (a, &c) in acc.iter_mut().zip(codes) {
+        let v = lut
+            .get(c as usize)
+            .copied()
+            .unwrap_or_else(|| c as f32 * step - bound);
+        *a += v as f64 * w;
+    }
 }
 
 #[cfg(test)]

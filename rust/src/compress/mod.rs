@@ -80,6 +80,7 @@ pub mod wire;
 
 pub use kernel::KernelScratch;
 pub use pipeline::{
-    decode, decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline, PipelineState,
+    accumulate_with, decode, decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline,
+    PipelineState,
 };
 pub use quantizer::{Quantized, Quantizer};

@@ -435,6 +435,70 @@ pub fn decode_with(enc: &EncodedTensor, scratch: &mut EncodeScratch) -> Result<V
     }
 }
 
+/// Fused decode+accumulate: fold `decode(enc)[i] · w` into `acc[i]`
+/// without materializing the decoded vector — the server's frame-ingest
+/// hot path. For dense unrotated frames (the paper's default pipelines)
+/// the packed codes are unpacked into `scratch` and folded straight
+/// through the quantizer's level LUTs ([`Quantizer::accumulate_into`]);
+/// float32 passthrough folds directly from the payload bytes. Rotated or
+/// sparsified frames fall back to [`decode_with`] + add. Either way the
+/// result is **bit-identical** to decode-then-add: the per-element f32
+/// value and the `f32 → f64` mul-add are the same operations in the same
+/// order (asserted in `tests/kernel_equivalence.rs`).
+pub fn accumulate_with(
+    enc: &EncodedTensor,
+    w: f64,
+    acc: &mut [f64],
+    scratch: &mut EncodeScratch,
+) -> Result<()> {
+    let n = enc.n as usize;
+    ensure!(
+        n == acc.len(),
+        "update length {} != accumulator {}",
+        n,
+        acc.len()
+    );
+    // kept == n ⇒ the payload is dense in coordinate order even when a
+    // mask seed is present (an all-kept mask gathers the identity).
+    if enc.rotated || (enc.kept as usize) != n {
+        let delta = decode_with(enc, scratch)?;
+        for (a, &d) in acc.iter_mut().zip(&delta) {
+            *a += d as f64 * w;
+        }
+        return Ok(());
+    }
+    let inflated;
+    let raw: &[u8] = if enc.deflated {
+        inflated = deflate::inflate(&enc.payload)?;
+        &inflated
+    } else {
+        &enc.payload
+    };
+    if enc.kind_id == quantizer::ids::FLOAT32 {
+        ensure!(enc.bits == 32, "float32 frame with bits {}", enc.bits);
+        ensure!(
+            raw.len() == n * 4,
+            "float32 payload size {} != {}",
+            raw.len(),
+            n * 4
+        );
+        for (a, b) in acc.iter_mut().zip(raw.chunks_exact(4)) {
+            *a += f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64 * w;
+        }
+        return Ok(());
+    }
+    ensure!(
+        raw.len() >= bitpack::packed_len(n, enc.bits),
+        "payload too short: {} bytes for {n} codes of {} bits",
+        raw.len(),
+        enc.bits
+    );
+    bitpack::unpack_into(raw, enc.bits, n, &mut scratch.codes);
+    let q = quantizer::from_wire(enc.kind_id, enc.bits)?;
+    q.accumulate_into(&scratch.codes, enc.norm, enc.bound, &mut scratch.kernel, w, acc);
+    Ok(())
+}
+
 /// Per-endpoint pipeline memory: the error-feedback residual. Client-local
 /// on the uplink, server-local on the downlink; never transmitted.
 #[derive(Debug, Clone, Default)]

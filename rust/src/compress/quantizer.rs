@@ -105,6 +105,28 @@ pub trait Quantizer: std::fmt::Debug + Send + Sync {
         out.extend_from_slice(&v);
     }
 
+    /// Fused dequantize+accumulate: `acc[i] += value(code_i)·w` without
+    /// materializing the decoded vector — the server's frame-ingest hot
+    /// path (one pass over the packed codes per client, no intermediate
+    /// `Vec<f32>`). Must be **bit-identical** to [`Self::dequantize_into`]
+    /// followed by the `f32 → f64` mul-add fold. The default decodes then
+    /// folds (one allocation); in-tree schemes override with true fused
+    /// paths over the shared LUTs.
+    fn accumulate_into(
+        &self,
+        codes: &[u16],
+        norm: f32,
+        bound: f32,
+        _scratch: &mut KernelScratch,
+        w: f64,
+        acc: &mut [f64],
+    ) {
+        let v = self.dequantize(codes, norm, bound);
+        for (a, &x) in acc.iter_mut().zip(&v) {
+            *a += x as f64 * w;
+        }
+    }
+
     /// Downcast support (e.g. the Pallas kernel path needs the concrete
     /// [`CosineQuantizer`] configuration).
     fn as_any(&self) -> &dyn Any;
@@ -205,6 +227,18 @@ impl Quantizer for CosineQuantizer {
         cosine::dequantize_codes_into(codes, norm, bound, self.bits, scratch, out);
     }
 
+    fn accumulate_into(
+        &self,
+        codes: &[u16],
+        norm: f32,
+        bound: f32,
+        scratch: &mut KernelScratch,
+        w: f64,
+        acc: &mut [f64],
+    ) {
+        super::kernel::accumulate_cosine(codes, norm, bound, self.bits, scratch, w, acc);
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }
@@ -260,6 +294,18 @@ impl Quantizer for LinearQuantizer {
         out: &mut Vec<f32>,
     ) {
         linear::dequantize_codes_into(codes, bound, self.bits, scratch, out);
+    }
+
+    fn accumulate_into(
+        &self,
+        codes: &[u16],
+        _norm: f32,
+        bound: f32,
+        scratch: &mut KernelScratch,
+        w: f64,
+        acc: &mut [f64],
+    ) {
+        super::kernel::accumulate_linear(codes, bound, self.bits, scratch, w, acc);
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -355,6 +401,18 @@ impl Quantizer for SignSgd {
         signsgd::decode_signs_into(codes, 1.0, out);
     }
 
+    fn accumulate_into(
+        &self,
+        codes: &[u16],
+        _norm: f32,
+        _bound: f32,
+        _scratch: &mut KernelScratch,
+        w: f64,
+        acc: &mut [f64],
+    ) {
+        signsgd::accumulate_signs(codes, 1.0, w, acc);
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }
@@ -411,6 +469,19 @@ impl Quantizer for SignSgdNorm {
     ) {
         let mag = norm / (codes.len().max(1) as f32).sqrt();
         signsgd::decode_signs_into(codes, mag, out);
+    }
+
+    fn accumulate_into(
+        &self,
+        codes: &[u16],
+        norm: f32,
+        _bound: f32,
+        _scratch: &mut KernelScratch,
+        w: f64,
+        acc: &mut [f64],
+    ) {
+        let mag = norm / (codes.len().max(1) as f32).sqrt();
+        signsgd::accumulate_signs(codes, mag, w, acc);
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -474,6 +545,18 @@ impl Quantizer for EfSign {
         out: &mut Vec<f32>,
     ) {
         signsgd::decode_signs_into(codes, bound, out);
+    }
+
+    fn accumulate_into(
+        &self,
+        codes: &[u16],
+        _norm: f32,
+        bound: f32,
+        _scratch: &mut KernelScratch,
+        w: f64,
+        acc: &mut [f64],
+    ) {
+        signsgd::accumulate_signs(codes, bound, w, acc);
     }
 
     fn as_any(&self) -> &dyn Any {

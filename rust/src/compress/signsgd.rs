@@ -38,6 +38,18 @@ pub fn decode_signs_into(codes: &[u16], magnitude: f32, out: &mut Vec<f32>) {
     out.extend(codes.iter().map(|&c| if c == 1 { magnitude } else { -magnitude }));
 }
 
+/// Fused sign dequantize+accumulate: `acc[i] += (±magnitude) · w` — the
+/// sign-family arm of the server's one-pass frame ingest. Bit-identical
+/// to [`decode_signs_into`] followed by the `f32 → f64` mul-add fold.
+#[inline]
+pub fn accumulate_signs(codes: &[u16], magnitude: f32, w: f64, acc: &mut [f64]) {
+    debug_assert_eq!(codes.len(), acc.len());
+    for (a, &c) in acc.iter_mut().zip(codes) {
+        let v = if c == 1 { magnitude } else { -magnitude };
+        *a += v as f64 * w;
+    }
+}
+
 /// signSGD reconstruction: ±1 per coordinate.
 pub fn decode_sign(codes: &[u16]) -> Vec<f32> {
     codes

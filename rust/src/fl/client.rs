@@ -23,9 +23,12 @@ use crate::util::rng::Pcg64;
 /// The client-side decoded model replica (Delta downlink mode).
 ///
 /// Starts from the shared initialization (Algorithm 1's common `M^0`) and
-/// advances by the dequantized delta of every broadcast frame. In the
-/// simulator one replica is shared by the whole fleet — every client
-/// receives every broadcast, so all replicas are bit-identical.
+/// advances by the dequantized delta of every broadcast frame, decoding
+/// from a borrowed `&[u8]` — the runner hands every replica the SAME
+/// broadcast buffer, so the frame is never cloned per client (metering
+/// counts receivers; the bytes exist once). In the simulator one replica
+/// stands in for the whole fleet — every client receives every broadcast,
+/// so all replicas are bit-identical.
 #[derive(Debug, Clone)]
 pub struct ModelReplica {
     pub params: Vec<f32>,

@@ -10,7 +10,7 @@ use crate::sim::SimConfig;
 use crate::util::json::Json;
 
 use super::schedule::LrSchedule;
-use super::server::Downlink;
+use super::server::{Downlink, RoundMode};
 
 /// Which workload (and data distribution) to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +88,12 @@ pub struct FlConfig {
     /// a virtual clock over a heterogeneous device fleet. `None` keeps the
     /// pure byte-accounting harness.
     pub sim: Option<SimConfig>,
+    /// Aggregation policy: classic synchronous FedAvg rounds, or
+    /// FedBuff-style buffered-async windows
+    /// ([`RoundMode::BufferedAsync`]) where slow uplinks no longer gate
+    /// the fleet. In async mode `rounds` counts *aggregations* (model
+    /// versions), so runs stay comparable at equal update counts.
+    pub round_mode: RoundMode,
     pub verbose: bool,
 }
 
@@ -123,6 +129,7 @@ impl FlConfig {
             use_kernel_quantizer: false,
             client_threads: 1,
             sim: None,
+            round_mode: RoundMode::Synchronous,
             verbose: false,
         }
     }
@@ -149,6 +156,7 @@ impl FlConfig {
             use_kernel_quantizer: false,
             client_threads: 1,
             sim: None,
+            round_mode: RoundMode::Synchronous,
             verbose: false,
         }
     }
@@ -190,6 +198,7 @@ impl FlConfig {
             use_kernel_quantizer: false,
             client_threads: 1,
             sim: None,
+            round_mode: RoundMode::Synchronous,
             verbose: false,
         }
     }
@@ -246,6 +255,13 @@ impl FlConfig {
         self
     }
 
+    /// Select the aggregation policy (`--round-mode sync|async:K[:S]`):
+    /// synchronous FedAvg rounds, or FedBuff-style buffered-async windows.
+    pub fn with_round_mode(mut self, mode: RoundMode) -> Self {
+        self.round_mode = mode;
+        self
+    }
+
     /// Resolve [`Self::client_threads`] (`0` → available parallelism).
     pub fn effective_threads(&self) -> usize {
         match self.client_threads {
@@ -273,6 +289,7 @@ impl FlConfig {
             .set("downlink", self.downlink.name())
             .set("seed", self.seed)
             .set("threads", self.client_threads)
+            .set("round_mode", self.round_mode.name())
             .set("round_artifact", self.round_artifact.as_str())
             .set(
                 "sim",
@@ -341,6 +358,24 @@ mod tests {
         assert_eq!(sim.tiers.len(), 6);
         let described = cfg.describe().get("sim").unwrap().as_str().unwrap().to_string();
         assert!(described.contains("6 tiers"), "{described}");
+    }
+
+    #[test]
+    fn round_mode_builder_and_describe() {
+        let cfg = FlConfig::mnist(false);
+        assert_eq!(cfg.round_mode, RoundMode::Synchronous);
+        assert_eq!(
+            cfg.describe().get("round_mode").unwrap().as_str(),
+            Some("sync")
+        );
+        let cfg = cfg.with_round_mode(RoundMode::BufferedAsync {
+            buffer_k: 5,
+            max_staleness: 3,
+        });
+        assert_eq!(
+            cfg.describe().get("round_mode").unwrap().as_str(),
+            Some("async:5 (≤3 stale)")
+        );
     }
 
     #[test]

@@ -22,6 +22,9 @@ pub struct RoundRecord {
     /// Cumulative downlink (broadcast) bytes after this round.
     pub downlink_bytes: u64,
     pub clients: usize,
+    /// Delivered updates the server discarded as stale in this round
+    /// (buffered-async aggregation windows; always 0 in synchronous mode).
+    pub stale_updates: usize,
 }
 
 /// A labelled series of round records.
@@ -70,7 +73,8 @@ impl History {
                                 .set("train_loss", r.train_loss)
                                 .set("uplink_bytes", r.uplink_bytes)
                                 .set("downlink_bytes", r.downlink_bytes)
-                                .set("clients", r.clients);
+                                .set("clients", r.clients)
+                                .set("stale_updates", r.stale_updates);
                             if let Some(m) = r.eval_metric {
                                 j = j.set("eval_metric", m);
                             }
@@ -112,6 +116,7 @@ mod tests {
             uplink_bytes: round as u64 * 100,
             downlink_bytes: round as u64 * 400,
             clients: 10,
+            stale_updates: 0,
         }
     }
 

@@ -1,27 +1,56 @@
-//! The federated-learning coordinator (Layer 3).
+//! The federated-learning coordinator (Layer 3) — frame-driven.
 //!
 //! Implements FedAvg (McMahan et al. [25]) exactly as the paper's
-//! Algorithm 1, in both directions: per round the server broadcasts the
-//! model (raw float32, or a quantized delta through a downlink
-//! [`crate::compress::Pipeline`] — the paper's round-trip scheme), a
-//! random `C` fraction of clients runs `E` local epochs (through the AOT
-//! round artifacts — [`crate::runtime::Engine`]) and compresses
-//! `g = M_in − M*` with the uplink pipeline, and the server decodes the
-//! self-describing frames and aggregates with Eq. (1). Every byte that
-//! moves is metered by [`network::NetworkLedger`].
-//!
-//! Bytes become *time* one layer up: with [`FlConfig::sim`] set, each
-//! round also plays out on the virtual clock of [`crate::sim`] —
-//! broadcast transfer → local training → upload transfer per device, with
-//! heterogeneous bandwidth/compute tiers, availability, dropout and
-//! straggler policies — and the run yields a [`crate::sim::Timeline`]
-//! (simulated seconds per phase, time-to-target-metric) alongside the
-//! [`History`]:
+//! Algorithm 1, in both directions and in two aggregation modes. Every
+//! client ↔ server exchange is a serialized CSG2 frame in an opaque
+//! [`transport::Frame`] envelope, carried by a [`transport::Transport`]:
+//! the bytes the ledger meters ARE the protocol, and the
+//! delivery/abort/straggler policy lives in the carrier — one decision,
+//! one place.
 //!
 //! ```text
-//!   runner ──▶ NetworkLedger   bytes   (what moved)
-//!          └─▶ sim::FleetSim   ticks   (how long it took, per device)
+//!                        ┌──────────────────────────────┐
+//!   runner (event loop)  │ server (state machine)       │
+//!   ───────────────────  │  ingest(Frame) → Accepted /  │
+//!   select → train →     │    Duplicate / StaleRound /  │
+//!   frames ──┐           │    Malformed                 │
+//!            ▼           │  fused dequantize+accumulate │
+//!   ┌─────────────────┐  │  finish_round() → M^{t+1}    │
+//!   │ Transport       │  └──────────────▲───────────────┘
+//!   │  Loopback       │    delivered    │
+//!   │  SimTransport ──┼──► frames ──────┘
+//!   │  (FleetSim:     │
+//!   │   virtual clock,│   byte metering (NetworkLedger) and the
+//!   │   lottery,      │   straggler policy live HERE — metered
+//!   │   stragglers)   │   bytes are the ground truth
+//!   └─────────────────┘
 //! ```
+//!
+//! Per round the server broadcasts the model (raw float32, or a quantized
+//! delta through a downlink [`crate::compress::Pipeline`] — the paper's
+//! round-trip scheme; ONE shared frame buffer, decoded by every replica,
+//! never cloned per client), selected clients run `E` local epochs
+//! (through the AOT round artifacts — [`crate::runtime::Engine`]) and
+//! upload compressed `g = M_in − M*` frames; the server ingests each
+//! delivered frame — fusing dequantize+accumulate in a single pass over
+//! the packed codes — and applies Eq. (1).
+//!
+//! Aggregation modes ([`server::RoundMode`]):
+//! * **Synchronous** — classic FedAvg rounds; through the transport path
+//!   this is bit-identical to the pre-transport runner.
+//! * **BufferedAsync** — FedBuff-style: clients train continuously
+//!   against whatever model version is current, the server applies as
+//!   soon as `buffer_k` updates are buffered, and stale updates are
+//!   staleness-discounted or dropped. Slow uplinks stop gating the fleet
+//!   — the regime where low-bit quantization buys the most
+//!   time-to-accuracy.
+//!
+//! Bytes become *time* one layer up: with [`FlConfig::sim`] set, the
+//! transport is sim-clocked ([`transport::SimTransport`] over
+//! [`crate::sim::FleetSim`]) — per-device bandwidth/compute tiers,
+//! availability, dropout, straggler aborts — and the run yields a
+//! [`crate::sim::Timeline`] (simulated seconds per phase,
+//! time-to-target-metric) alongside the [`History`].
 
 pub mod centralized;
 pub mod client;
@@ -31,6 +60,7 @@ pub mod network;
 pub mod runner;
 pub mod schedule;
 pub mod server;
+pub mod transport;
 
 pub use client::ModelReplica;
 pub use config::{FlConfig, Task};
@@ -38,4 +68,5 @@ pub use metrics::{History, RoundRecord};
 pub use network::NetworkLedger;
 pub use runner::{run, run_labeled, RunResult};
 pub use schedule::LrSchedule;
-pub use server::{Broadcast, Downlink, Server};
+pub use server::{Broadcast, Downlink, Ingest, RoundMode, Server};
+pub use transport::{Frame, Loopback, SimTransport, Transport};

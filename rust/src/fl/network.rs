@@ -3,6 +3,12 @@
 //! Figs. 9–10) are uplink gradient bytes; the downlink (model broadcast)
 //! is metered symmetrically so round-trip compression figures are
 //! reproducible.
+//!
+//! In the frame-driven runner the ledger is owned by the
+//! [`crate::fl::transport::Transport`] carrying the frames, so a byte is
+//! metered exactly when (and only when) it is delivered — aborted
+//! straggler uploads never reach the ledger, by construction rather than
+//! by a separately-maintained replay.
 
 use crate::util::timer::fmt_bytes;
 

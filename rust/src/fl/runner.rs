@@ -1,45 +1,65 @@
-//! The experiment loop: wires clients, server, pipelines, network and
-//! engine into the full FedAvg round structure of Algorithm 1 and produces
-//! a [`History`].
+//! The experiment loop: a thin event-loop driver that wires clients, the
+//! server's frame-ingest state machine, the compression pipelines and a
+//! [`Transport`] into the full round structure of Algorithm 1 and produces
+//! a [`History`]. Every client ↔ server exchange is a serialized
+//! [`Frame`]; byte metering and the straggler/delivery policy live in the
+//! transport, not here.
 //!
-//! Round structure (round-trip aware):
+//! Synchronous round structure (round-trip aware):
 //! 1. the server produces the round's broadcast ([`Server::broadcast`]) —
 //!    raw float32 model, or a quantized delta frame in Delta mode;
 //! 2. the fleet's [`ModelReplica`] applies the frame through the real
-//!    wire-decode path. Downlink metering follows what each mode truly
-//!    costs: a delta frame must reach EVERY client (a missed delta breaks
-//!    the replica forever), so the whole fleet is metered; the raw model
-//!    broadcast is stateless, so only the selected clients who train this
-//!    round are metered — byte-identical to the CSG1-era accounting;
-//! 3. selected clients train from the replica and upload compressed
-//!    updates; the server decodes the self-describing frames and
-//!    aggregates (Eq. 1).
+//!    wire-decode path, decoding from **one shared buffer** (the
+//!    broadcast payload is never cloned per client — metering counts
+//!    receivers, the bytes exist once). A delta frame must reach EVERY
+//!    client (a missed delta breaks the replica forever), so the whole
+//!    fleet is metered; the raw model broadcast is stateless, so only the
+//!    selected clients who train this round are metered — byte-identical
+//!    to the CSG1-era accounting;
+//! 3. selected clients train from the replica and upload their frames
+//!    through [`Transport::exchange`], which applies the straggler policy
+//!    and meters the survivors; the server ingests each delivered frame
+//!    ([`Server::ingest`]) and closes the round.
 //!
-//! With [`FlConfig::sim`] set, the same round additionally plays out on
-//! the virtual clock of a [`FleetSim`]: the policy may over-select,
-//! the availability/dropout lottery thins the participants *before*
-//! training, and the real serialized frame sizes (broadcast and per-client
-//! upload) are divided by each device's bandwidth to time the round.
-//! Updates from stragglers the round policy aborts are neither aggregated
-//! nor metered — their uploads never completed.
+//! With a sim-clocked transport ([`crate::fl::transport::SimTransport`]),
+//! the same exchange plays out on the virtual clock of a `FleetSim`:
+//! over-selection, the availability/dropout lottery, per-device transfer
+//! and compute times, and straggler aborts — aborted uploads are neither
+//! ingested nor metered, one decision made in one place.
+//!
+//! ## Buffered-async rounds ([`RoundMode::BufferedAsync`])
+//!
+//! There are no synchronized rounds: up to `selection_count(K)` clients
+//! train concurrently, each dispatched against the model version current
+//! at its launch. The driver pops arrivals one at a time
+//! ([`Transport::recv`]), feeds them to [`Server::ingest`] — which
+//! discounts staleness and rejects expired updates — and applies the
+//! model as soon as `buffer_k` updates are buffered
+//! ([`Server::ready_to_apply`]), then refills the freed slot. `rounds`
+//! counts aggregations, so sync and async runs compare at equal update
+//! budgets. Slow uplinks stop gating the fleet — which is exactly where
+//! low-bit quantization matters most (see `tests/async_rounds.rs`).
 //!
 //! The per-round client train+encode loop fans out over
-//! [`std::thread::scope`] when [`FlConfig::client_threads`] ≠ 1. This is
-//! *wall-clock* parallelism only: every client owns its RNG lane, EF
-//! residual and encode scratch, the shared `Engine`/model/task are read
-//! immutably, and updates are re-ordered back into selection order before
-//! aggregation — so runs are bit-identical to serial at any thread count
-//! (asserted by the self-skipping e2e test in
-//! `tests/runtime_integration.rs`).
+//! [`std::thread::scope`] when [`FlConfig::client_threads`] ≠ 1
+//! (synchronous mode; async dispatches train one at a time by
+//! construction). This is *wall-clock* parallelism only: every client
+//! owns its RNG lane, EF residual and encode scratch, the shared
+//! `Engine`/model/task are read immutably, and updates are re-ordered
+//! back into selection order before aggregation — so runs are
+//! bit-identical to serial at any thread count (asserted by the
+//! self-skipping e2e test in `tests/runtime_integration.rs`).
 
-use anyhow::Result;
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
 
 use crate::compress::wire;
 use crate::data::partition::{self, eval_set};
 use crate::data::synth::{SynthCifar, SynthMnist, SynthTask, SynthVolume};
-use crate::runtime::manifest::init_params;
+use crate::runtime::manifest::{init_params, RoundCfg};
 use crate::runtime::Engine;
-use crate::sim::{secs, ClientLoad, FleetSim, RoundPlan, Timeline};
+use crate::sim::{Admission, Timeline};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -47,7 +67,8 @@ use super::client::{Client, ModelReplica};
 use super::config::{FlConfig, Task};
 use super::metrics::{History, RoundRecord};
 use super::network::NetworkLedger;
-use super::server::Server;
+use super::server::{Ingest, RoundMode, Server};
+use super::transport::{Frame, Loopback, SimTransport, Transport};
 
 /// The outcome of one federated run.
 pub struct RunResult {
@@ -57,6 +78,38 @@ pub struct RunResult {
     pub wall_secs: f64,
     /// Per-round virtual-clock records ([`FlConfig::sim`] runs only).
     pub timeline: Option<Timeline>,
+}
+
+/// Evaluate `params` on the task's eval set.
+fn eval_model(
+    cfg: &FlConfig,
+    engine: &Engine,
+    eval_artifact: &str,
+    eval_n: usize,
+    eval_x: &[f32],
+    eval_y: &[i32],
+    params: &[f32],
+) -> Result<(f64, f64)> {
+    let (m, l) = match cfg.task {
+        Task::Unet => {
+            engine.segmentation_eval(eval_artifact, params, eval_x.to_vec(), eval_y.to_vec())?
+        }
+        _ => engine.classification_eval(
+            eval_artifact,
+            params,
+            eval_x.to_vec(),
+            eval_y.to_vec(),
+            eval_n,
+        )?,
+    };
+    Ok((m, l as f64))
+}
+
+/// Should round `done` (1-based) be evaluated?
+fn eval_due(cfg: &FlConfig, done: usize) -> bool {
+    cfg.rounds < 2
+        || done == cfg.rounds
+        || (cfg.eval_every > 0 && done % cfg.eval_every == 0)
 }
 
 /// Generic driver over a synthetic task.
@@ -79,42 +132,118 @@ fn run_task<T: SynthTask>(
         .map(|s| Client::new(s, cfg.seed))
         .collect();
     let init = init_params(&model, cfg.seed);
+    // Aggregation weights (N_i) are registered up front — the frame
+    // envelope carries only (round, client_id, payload).
+    let weights: Vec<u32> = clients.iter().map(|c| c.shard.len() as u32).collect();
     let mut server = Server::new(init.clone(), cfg.eta_s)
-        .with_downlink(cfg.downlink.clone(), cfg.seed);
+        .with_downlink(cfg.downlink.clone(), cfg.seed)
+        .with_round_mode(cfg.round_mode)
+        .with_clients(weights);
     // All clients share the initialization (Algorithm 1's common M^0) and
-    // receive every broadcast, so one replica stands in for the fleet.
+    // receive every broadcast, so one replica stands in for the fleet —
+    // every replica decodes the SAME shared frame buffer.
     let mut fleet_model = ModelReplica::new(init);
-    let mut network = NetworkLedger::new();
     let mut selector = Pcg64::new(cfg.seed, 0x5E1EC7);
     let mut history = History::new(label);
-    let mut sim: Option<FleetSim> = cfg
-        .sim
-        .as_ref()
-        .map(|s| FleetSim::new(s, cfg.n_clients, cfg.seed));
+    let mut transport: Box<dyn Transport> = match cfg.sim.as_ref() {
+        Some(s) => Box::new(SimTransport::new(s, cfg.n_clients, cfg.seed)),
+        None => Box::new(Loopback::new()),
+    };
     // Every client trains the same artifact schedule per round.
     let examples_per_round = (round_cfg.steps() * round_cfg.batch) as u64;
-
     let per_round = cfg.clients_per_round();
+
+    match cfg.round_mode {
+        RoundMode::Synchronous => run_sync_rounds(
+            cfg,
+            engine,
+            task,
+            &round_cfg,
+            &eval_artifact,
+            eval_n,
+            &eval_x,
+            &eval_y,
+            &mut clients,
+            &mut server,
+            &mut fleet_model,
+            &mut selector,
+            transport.as_mut(),
+            &mut history,
+            examples_per_round,
+            per_round,
+            label,
+        )?,
+        RoundMode::BufferedAsync { .. } => run_async_windows(
+            cfg,
+            engine,
+            task,
+            &round_cfg,
+            &eval_artifact,
+            eval_n,
+            &eval_x,
+            &eval_y,
+            &mut clients,
+            &mut server,
+            &mut fleet_model,
+            &mut selector,
+            transport.as_mut(),
+            &mut history,
+            examples_per_round,
+            per_round,
+            label,
+        )?,
+    }
+
+    let (network, timeline) = transport.finish();
+    Ok(RunResult {
+        history,
+        network,
+        final_params: server.params,
+        wall_secs: sw.elapsed_secs(),
+        timeline,
+    })
+}
+
+/// Classic FedAvg rounds over the transport + state machine. Bit-identical
+/// to the pre-transport runner: same RNG streams, same selection, same
+/// aggregation order (the transport's `exchange` contract), same ledger
+/// totals.
+#[allow(clippy::too_many_arguments)]
+fn run_sync_rounds<T: SynthTask>(
+    cfg: &FlConfig,
+    engine: &Engine,
+    task: &T,
+    round_cfg: &RoundCfg,
+    eval_artifact: &str,
+    eval_n: usize,
+    eval_x: &[f32],
+    eval_y: &[i32],
+    clients: &mut [Client],
+    server: &mut Server,
+    fleet_model: &mut ModelReplica,
+    selector: &mut Pcg64,
+    transport: &mut dyn Transport,
+    history: &mut History,
+    examples_per_round: u64,
+    per_round: usize,
+    label: &str,
+) -> Result<()> {
     for t in 0..cfg.rounds {
         let lr = cfg.client_lr.at(t) as f32;
         let broadcast = server.broadcast()?;
         let delta_mode = broadcast.wire.is_some();
         if let Some(frame) = &broadcast.wire {
-            // Round-trip mode: clients decode the delta frame themselves.
+            // Round-trip mode: every replica decodes the one shared frame.
             fleet_model.apply_wire(frame)?;
         }
 
-        // Selection (policy may over-select), then the availability /
-        // dropout lottery — offline devices and mid-round failures never
-        // produce an update, so they are not worth training.
-        let k_select = sim
-            .as_ref()
-            .map_or(per_round, |s| s.selection_count(per_round));
+        // Selection (the transport's policy may over-select), then the
+        // availability/dropout lottery — offline devices and mid-round
+        // failures never produce an update, so they are not worth
+        // training.
+        let k_select = transport.selection_count(per_round);
         let selected = selector.sample_indices(clients.len(), k_select);
-        let plan = match sim.as_mut() {
-            Some(s) => s.begin_round(&selected),
-            None => RoundPlan::full(selected),
-        };
+        let plan = transport.plan_round(&selected);
 
         // Downlink metering: a delta frame must reach EVERY client to keep
         // the replicas in sync, so the whole fleet is metered; the raw
@@ -125,17 +254,18 @@ fn run_task<T: SynthTask>(
         } else {
             plan.active.len()
         };
-        network.record_downlink_n(broadcast.bytes, receivers);
+        transport.broadcast(broadcast.bytes, receivers);
 
         // Train + encode every active client; serially or fanned out over
         // scoped threads (bit-identical either way — see module docs).
+        let round = server.round();
         let global_model: &[f32] = if delta_mode {
             &fleet_model.params
         } else {
             &server.params
         };
         let locals = fan_out(
-            &mut clients,
+            clients,
             &plan.active,
             cfg.effective_threads(),
             |client| {
@@ -143,114 +273,376 @@ fn run_task<T: SynthTask>(
                     engine,
                     task,
                     &cfg.round_artifact,
-                    &round_cfg,
+                    round_cfg,
                     global_model,
                     lr,
                     &cfg.uplink,
                     cfg.use_kernel_quantizer,
                 )?;
-                let bytes = wire::serialize(&update.encoded);
-                Ok((bytes, update.num_examples, update.train_loss))
+                Ok((wire::serialize(&update.encoded), update.train_loss))
             },
         )?;
-        let updates: Vec<(usize, Vec<u8>, u32, f32)> = plan
+        let mut loss_of: HashMap<usize, f32> = HashMap::with_capacity(locals.len());
+        let frames: Vec<Frame> = plan
             .active
             .iter()
             .zip(locals)
-            .map(|(&ci, (bytes, num_examples, train_loss))| (ci, bytes, num_examples, train_loss))
+            .map(|(&ci, (payload, train_loss))| {
+                loss_of.insert(ci, train_loss);
+                Frame {
+                    round,
+                    client_id: ci,
+                    payload,
+                }
+            })
             .collect();
 
-        // With the simulator on, the round policy decides which trained
-        // updates actually land before the round closes; aborted straggler
-        // uploads are neither aggregated nor metered.
-        let kept: Vec<usize> = match sim.as_mut() {
-            Some(s) => {
-                let loads: Vec<ClientLoad> = updates
-                    .iter()
-                    .map(|(ci, bytes, _, _)| ClientLoad {
-                        device: *ci,
-                        upload_bytes: bytes.len(),
-                        examples: examples_per_round,
-                    })
-                    .collect();
-                s.complete_round(t + 1, &plan, per_round, broadcast.bytes, &loads)
-                    .kept
-            }
-            None => plan.active.clone(),
-        };
-        let mut kept_sorted = kept;
-        kept_sorted.sort_unstable();
+        // The transport decides which trained uploads land before the
+        // round closes; aborted straggler uploads are neither delivered
+        // nor metered. Survivors come back in selection order.
+        let delivered =
+            transport.exchange(t + 1, per_round, broadcast.bytes, frames, examples_per_round);
 
         let mut loss_sum = 0.0f64;
-        let mut n_kept = 0usize;
-        for (ci, bytes, num_examples, train_loss) in &updates {
-            if kept_sorted.binary_search(ci).is_err() {
-                continue;
+        let n_kept = delivered.len();
+        for frame in &delivered {
+            match server.ingest(frame) {
+                Ingest::Accepted { .. } => loss_sum += loss_of[&frame.client_id] as f64,
+                verdict => bail!(
+                    "round {}: server refused a delivered frame from client {} ({verdict:?})",
+                    t + 1,
+                    frame.client_id
+                ),
             }
-            network.record_uplink(bytes.len());
-            server.receive_update(bytes, *num_examples)?;
-            loss_sum += *train_loss as f64;
-            n_kept += 1;
         }
         server.finish_round();
 
-        let evaluate = cfg.rounds < 2
-            || t + 1 == cfg.rounds
-            || (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0);
-        let (metric, eval_loss) = if evaluate {
-            let (m, l) = match cfg.task {
-                Task::Unet => engine.segmentation_eval(
-                    &eval_artifact,
-                    &server.params,
-                    eval_x.clone(),
-                    eval_y.clone(),
-                )?,
-                _ => engine.classification_eval(
-                    &eval_artifact,
-                    &server.params,
-                    eval_x.clone(),
-                    eval_y.clone(),
-                    eval_n,
-                )?,
-            };
-            (Some(m), Some(l as f64))
+        let (metric, eval_loss) = if eval_due(cfg, t + 1) {
+            let (m, l) = eval_model(
+                cfg,
+                engine,
+                eval_artifact,
+                eval_n,
+                eval_x,
+                eval_y,
+                &server.params,
+            )?;
+            (Some(m), Some(l))
         } else {
             (None, None)
         };
 
+        let ledger = transport.ledger();
         let rec = RoundRecord {
             round: t + 1,
             train_loss: loss_sum / n_kept.max(1) as f64,
             eval_metric: metric,
             eval_loss,
-            uplink_bytes: network.uplink_bytes,
-            downlink_bytes: network.downlink_bytes,
+            uplink_bytes: ledger.uplink_bytes,
+            downlink_bytes: ledger.downlink_bytes,
             clients: n_kept,
+            stale_updates: 0,
         };
         if cfg.verbose {
             let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
-            let sim_note = sim
-                .as_ref()
-                .map_or(String::new(), |s| format!(" sim {:.1}s", secs(s.clock())));
+            let sim_note = transport
+                .clock_secs()
+                .map_or(String::new(), |s| format!(" sim {s:.1}s"));
             println!(
                 "[{label}] round {:>4}/{} loss {:.4} metric {m} uplink {} downlink {}{sim_note}",
                 t + 1,
                 cfg.rounds,
                 rec.train_loss,
-                crate::util::timer::fmt_bytes(network.uplink_bytes),
-                crate::util::timer::fmt_bytes(network.downlink_bytes)
+                crate::util::timer::fmt_bytes(rec.uplink_bytes),
+                crate::util::timer::fmt_bytes(rec.downlink_bytes)
             );
         }
         history.push(rec);
     }
+    Ok(())
+}
 
-    Ok(RunResult {
-        history,
-        network,
-        final_params: server.params,
-        wall_secs: sw.elapsed_secs(),
-        timeline: sim.map(FleetSim::into_timeline),
-    })
+/// FedBuff-style buffered-async windows: dispatch / arrival event loop.
+#[allow(clippy::too_many_arguments)]
+fn run_async_windows<T: SynthTask>(
+    cfg: &FlConfig,
+    engine: &Engine,
+    task: &T,
+    round_cfg: &RoundCfg,
+    eval_artifact: &str,
+    eval_n: usize,
+    eval_x: &[f32],
+    eval_y: &[i32],
+    clients: &mut [Client],
+    server: &mut Server,
+    fleet_model: &mut ModelReplica,
+    selector: &mut Pcg64,
+    transport: &mut dyn Transport,
+    history: &mut History,
+    examples_per_round: u64,
+    per_round: usize,
+    label: &str,
+) -> Result<()> {
+    let RoundMode::BufferedAsync { buffer_k, .. } = cfg.round_mode else {
+        unreachable!("run_async_windows requires BufferedAsync");
+    };
+    // Each client contributes at most once per window, so a buffer larger
+    // than the fleet could never fill.
+    anyhow::ensure!(
+        buffer_k <= clients.len(),
+        "async buffer {} exceeds the fleet ({} clients)",
+        buffer_k,
+        clients.len()
+    );
+    // Concurrent trainers: what the sync policy would select, but never
+    // fewer than the buffer — the window must be fillable.
+    let concurrency = transport
+        .selection_count(per_round)
+        .max(buffer_k)
+        .min(clients.len());
+    let mut busy = vec![false; clients.len()];
+    let mut loss_of = vec![0.0f32; clients.len()];
+
+    // Initial broadcast (model version 0).
+    let mut broadcast = server.broadcast()?;
+    let mut delta_mode = broadcast.wire.is_some();
+    if let Some(frame) = &broadcast.wire {
+        fleet_model.apply_wire(frame)?;
+        transport.broadcast(broadcast.bytes, clients.len());
+    }
+
+    // Fill the pipeline.
+    for _ in 0..concurrency {
+        let global_model: &[f32] = if delta_mode {
+            &fleet_model.params
+        } else {
+            &server.params
+        };
+        dispatch_one(
+            cfg,
+            engine,
+            task,
+            round_cfg,
+            clients,
+            &mut busy,
+            &mut loss_of,
+            selector,
+            transport,
+            server.round(),
+            global_model,
+            broadcast.bytes,
+            delta_mode,
+            examples_per_round,
+        )?;
+    }
+
+    let mut window_loss = 0.0f64;
+    let mut window_accepted = 0usize;
+    let mut window_dropped = 0usize;
+    let mut applied = 0usize;
+    while applied < cfg.rounds {
+        let Some(frame) = transport.recv() else {
+            // Nothing in flight (a pathological all-offline streak drained
+            // the pipeline): try once to refill, else the run is starved.
+            let global_model: &[f32] = if delta_mode {
+                &fleet_model.params
+            } else {
+                &server.params
+            };
+            if !dispatch_one(
+                cfg,
+                engine,
+                task,
+                round_cfg,
+                clients,
+                &mut busy,
+                &mut loss_of,
+                selector,
+                transport,
+                server.round(),
+                global_model,
+                broadcast.bytes,
+                delta_mode,
+                examples_per_round,
+            )? {
+                bail!("buffered-async run starved: nothing in flight and no dispatchable client");
+            }
+            continue;
+        };
+        busy[frame.client_id] = false;
+        match server.ingest(&frame) {
+            Ingest::Accepted { .. } => {
+                window_accepted += 1;
+                window_loss += loss_of[frame.client_id] as f64;
+            }
+            // Delivered (and metered — it crossed the wire) but discarded:
+            // expired staleness, or a surplus second contribution from a
+            // fast client inside one window.
+            Ingest::StaleRound | Ingest::Duplicate => window_dropped += 1,
+            Ingest::Malformed => bail!(
+                "async ingest refused a delivered frame from client {} as malformed",
+                frame.client_id
+            ),
+        }
+
+        if server.ready_to_apply() {
+            let n_kept = server.finish_round();
+            applied += 1;
+            transport.close_window(applied, n_kept, window_dropped);
+
+            // New model version: broadcast (delta replicas must see every
+            // frame; the raw float32 model is metered per dispatch).
+            broadcast = server.broadcast()?;
+            delta_mode = broadcast.wire.is_some();
+            if let Some(fw) = &broadcast.wire {
+                fleet_model.apply_wire(fw)?;
+                transport.broadcast(broadcast.bytes, clients.len());
+            }
+
+            let (metric, eval_loss) = if eval_due(cfg, applied) {
+                let (m, l) = eval_model(
+                    cfg,
+                    engine,
+                    eval_artifact,
+                    eval_n,
+                    eval_x,
+                    eval_y,
+                    &server.params,
+                )?;
+                (Some(m), Some(l))
+            } else {
+                (None, None)
+            };
+            let ledger = transport.ledger();
+            let rec = RoundRecord {
+                round: applied,
+                train_loss: window_loss / window_accepted.max(1) as f64,
+                eval_metric: metric,
+                eval_loss,
+                uplink_bytes: ledger.uplink_bytes,
+                downlink_bytes: ledger.downlink_bytes,
+                clients: n_kept,
+                stale_updates: window_dropped,
+            };
+            if cfg.verbose {
+                let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
+                let sim_note = transport
+                    .clock_secs()
+                    .map_or(String::new(), |s| format!(" sim {s:.1}s"));
+                println!(
+                    "[{label}] window {:>4}/{} loss {:.4} metric {m} uplink {} stale {}{sim_note}",
+                    applied,
+                    cfg.rounds,
+                    rec.train_loss,
+                    crate::util::timer::fmt_bytes(rec.uplink_bytes),
+                    window_dropped
+                );
+            }
+            history.push(rec);
+            window_loss = 0.0;
+            window_accepted = 0;
+            window_dropped = 0;
+        }
+
+        if applied < cfg.rounds {
+            // Refill the freed slot against the current model version.
+            let global_model: &[f32] = if delta_mode {
+                &fleet_model.params
+            } else {
+                &server.params
+            };
+            dispatch_one(
+                cfg,
+                engine,
+                task,
+                round_cfg,
+                clients,
+                &mut busy,
+                &mut loss_of,
+                selector,
+                transport,
+                server.round(),
+                global_model,
+                broadcast.bytes,
+                delta_mode,
+                examples_per_round,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Admit, train and launch ONE client at the current virtual instant
+/// (buffered-async mode). Returns false when no idle client can be
+/// dispatched (everyone busy, or a pathological offline/dropout streak).
+///
+/// The artifact-free protocol driver
+/// ([`crate::fl::transport::dryrun::run_async`]) mirrors this logic minus
+/// the training — change the two in lockstep.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_one<T: SynthTask>(
+    cfg: &FlConfig,
+    engine: &Engine,
+    task: &T,
+    round_cfg: &RoundCfg,
+    clients: &mut [Client],
+    busy: &mut [bool],
+    loss_of: &mut [f32],
+    selector: &mut Pcg64,
+    transport: &mut dyn Transport,
+    server_round: usize,
+    global_model: &[f32],
+    broadcast_bytes: usize,
+    delta_mode: bool,
+    examples: u64,
+) -> Result<bool> {
+    let mut attempts = 0usize;
+    loop {
+        // A device cannot fly two uploads at once: sample among the idle.
+        let idle: Vec<usize> = (0..clients.len()).filter(|&c| !busy[c]).collect();
+        if idle.is_empty() {
+            return Ok(false);
+        }
+        let candidate = idle[selector.below_usize(idle.len())];
+        attempts += 1;
+        match transport.admit(candidate) {
+            Admission::Admitted => {
+                let lr = cfg.client_lr.at(server_round) as f32;
+                let update = clients[candidate].run_round(
+                    engine,
+                    task,
+                    &cfg.round_artifact,
+                    round_cfg,
+                    global_model,
+                    lr,
+                    &cfg.uplink,
+                    cfg.use_kernel_quantizer,
+                )?;
+                let payload = wire::serialize(&update.encoded);
+                loss_of[candidate] = update.train_loss;
+                if !delta_mode {
+                    // Raw float32 model: one model transfer per dispatch.
+                    transport.broadcast(broadcast_bytes, 1);
+                }
+                transport.dispatch(
+                    Frame {
+                        round: server_round,
+                        client_id: candidate,
+                        payload,
+                    },
+                    broadcast_bytes,
+                    examples,
+                );
+                busy[candidate] = true;
+                return Ok(true);
+            }
+            Admission::Offline | Admission::Dropout => {
+                if attempts > clients.len() * 4 {
+                    return Ok(false); // pathological lottery streak
+                }
+            }
+        }
+    }
 }
 
 /// Run `f` over the clients selected by `active`, returning results in

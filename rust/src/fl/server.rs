@@ -1,9 +1,37 @@
-//! FedAvg server: holds the global model, applies Eq. (1):
+//! FedAvg server: an **incremental frame-ingest state machine** that holds
+//! the global model and applies Eq. (1):
 //!
 //! `M^{t+1} = M^t − η_s · Σ_i ∇M_i · N_i / Σ_i N_i`
 //!
 //! where `∇M_i` is client i's *decoded* update (`g = M_in − M*`) and `N_i`
 //! its local example count — and produces the per-round model broadcast.
+//!
+//! ## Frame ingest
+//!
+//! The server consumes opaque [`Frame`] envelopes one at a time:
+//! [`Server::ingest`] checks the envelope (sender, round window,
+//! duplicate) in O(1), validates the wire payload only for frames that
+//! survive, and — when the frame is good — **fuses dequantize and
+//! accumulate in a single pass
+//! over the packed codes** ([`crate::compress::pipeline::accumulate_with`]):
+//! no intermediate `Vec<f32>` per client. Each verdict
+//! ([`Ingest::Accepted`], [`Ingest::Duplicate`], [`Ingest::StaleRound`],
+//! [`Ingest::Malformed`]) is returned to the caller; only `Accepted`
+//! touches the accumulator. Client aggregation weights (`N_i`) are
+//! registered up front via [`Server::with_clients`] — FedAvg deployments
+//! know shard sizes at selection time, so the weight never rides the wire.
+//!
+//! ## Round modes
+//!
+//! * [`RoundMode::Synchronous`] — classic FedAvg: the round's frames carry
+//!   the current round tag; anything else is [`Ingest::StaleRound`]. The
+//!   driver decides when to call [`Server::finish_round`].
+//! * [`RoundMode::BufferedAsync`] — FedBuff-style buffered aggregation:
+//!   frames may arrive tagged with any model version within
+//!   `max_staleness` of the current one and are folded in with a
+//!   staleness-discounted weight `N_i / (1 + staleness)`; the server
+//!   signals [`Server::ready_to_apply`] once `buffer_k` updates have been
+//!   buffered. Older frames are rejected as [`Ingest::StaleRound`].
 //!
 //! ## Downlink modes
 //!
@@ -21,13 +49,94 @@
 //! Uplink decoding is self-describing (CSG2): the server needs no codec
 //! configuration to receive updates.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::compress::pipeline::{
-    decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline, PipelineState,
+    accumulate_with, decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline,
+    PipelineState,
 };
 use crate::compress::wire;
 use crate::util::rng::Pcg64;
+
+use super::transport::Frame;
+
+/// When does the server fold its buffered updates into the model?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Classic FedAvg: one aggregation per communication round; every
+    /// frame must carry the current round tag.
+    Synchronous,
+    /// FedBuff-style buffered asynchronous aggregation: apply as soon as
+    /// `buffer_k` updates are buffered; accept frames trained on any model
+    /// version at most `max_staleness` behind the current one, with
+    /// staleness-discounted weights `N_i / (1 + staleness)`.
+    BufferedAsync {
+        /// Updates buffered per aggregation.
+        buffer_k: usize,
+        /// Oldest accepted model-version lag.
+        max_staleness: usize,
+    },
+}
+
+impl RoundMode {
+    /// Parse the CLI grammar: `sync`, `async:K`, or `async:K:S`
+    /// (`S` defaults to 2 model versions).
+    pub fn parse(s: &str) -> Result<RoundMode> {
+        if s == "sync" || s == "synchronous" {
+            return Ok(RoundMode::Synchronous);
+        }
+        if let Some(rest) = s.strip_prefix("async:") {
+            let mut parts = rest.splitn(2, ':');
+            let buffer_k: usize = parts
+                .next()
+                .unwrap_or_default()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad buffer size in --round-mode '{s}'"))?;
+            anyhow::ensure!(buffer_k > 0, "--round-mode async needs a buffer of ≥ 1");
+            let max_staleness: usize = match parts.next() {
+                Some(p) => p
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad staleness bound in --round-mode '{s}'"))?,
+                None => 2,
+            };
+            return Ok(RoundMode::BufferedAsync {
+                buffer_k,
+                max_staleness,
+            });
+        }
+        bail!("unknown round mode '{s}' (sync, async:K, async:K:S)")
+    }
+
+    /// Compact label for logs / results files.
+    pub fn name(&self) -> String {
+        match self {
+            RoundMode::Synchronous => "sync".into(),
+            RoundMode::BufferedAsync {
+                buffer_k,
+                max_staleness,
+            } => format!("async:{buffer_k} (≤{max_staleness} stale)"),
+        }
+    }
+}
+
+/// The verdict of one [`Server::ingest`] call. Only [`Ingest::Accepted`]
+/// touches the accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ingest {
+    /// Folded into the open aggregate (staleness 0 in synchronous mode).
+    Accepted {
+        /// Model versions behind the current one the update was trained on.
+        staleness: usize,
+    },
+    /// This client already contributed to the open aggregate.
+    Duplicate,
+    /// The frame's round tag falls outside the acceptance window (older
+    /// than `max_staleness`, or not the open round in synchronous mode).
+    StaleRound,
+    /// The envelope or payload failed validation: unregistered client,
+    /// undecodable wire bytes, wrong direction, or wrong tensor length.
+    Malformed,
+}
 
 /// Server → client compression policy.
 #[derive(Debug, Clone)]
@@ -76,6 +185,19 @@ pub struct Server {
     acc: Vec<f64>,
     weight_sum: f64,
     updates_this_round: usize,
+    /// Aggregation policy for [`Server::ingest`].
+    mode: RoundMode,
+    /// Open round index / model version (increments on
+    /// [`Server::finish_round`]). Frames are tagged with the version they
+    /// trained from.
+    round: usize,
+    /// Registered per-client aggregation weights (`N_i`, example counts).
+    /// A frame from an unregistered client id is [`Ingest::Malformed`].
+    client_weights: Vec<u32>,
+    /// Round stamp of each client's last accepted contribution
+    /// (`round + 1`; 0 = never) — O(1) duplicate detection with no
+    /// per-round clearing sweep.
+    contributed: Vec<u64>,
 }
 
 impl Server {
@@ -92,6 +214,10 @@ impl Server {
             acc: vec![0.0; n],
             weight_sum: 0.0,
             updates_this_round: 0,
+            mode: RoundMode::Synchronous,
+            round: 0,
+            client_weights: Vec::new(),
+            contributed: Vec::new(),
         }
     }
 
@@ -103,8 +229,103 @@ impl Server {
         self
     }
 
-    /// Receive one client's wire bytes: deserialize, inflate, dequantize,
-    /// scatter, and fold into the weighted sum (Algorithm 1 lines 6–7).
+    /// Register the fleet's aggregation weights (`N_i` per client id) —
+    /// required before [`Server::ingest`] will accept frames.
+    pub fn with_clients(mut self, weights: Vec<u32>) -> Server {
+        self.contributed = vec![0; weights.len()];
+        self.client_weights = weights;
+        self
+    }
+
+    /// Select the aggregation policy (default [`RoundMode::Synchronous`]).
+    pub fn with_round_mode(mut self, mode: RoundMode) -> Server {
+        self.mode = mode;
+        self
+    }
+
+    /// The open round index / model version (frames train against this).
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Updates buffered in the open aggregate so far.
+    pub fn buffered(&self) -> usize {
+        self.updates_this_round
+    }
+
+    /// In buffered-async mode: has the buffer filled? (Synchronous mode
+    /// always returns false — the driver owns the round boundary.)
+    pub fn ready_to_apply(&self) -> bool {
+        match self.mode {
+            RoundMode::Synchronous => false,
+            RoundMode::BufferedAsync { buffer_k, .. } => self.updates_this_round >= buffer_k,
+        }
+    }
+
+    /// The duplicate-detection stamp of the open round.
+    fn stamp(&self) -> u64 {
+        self.round as u64 + 1
+    }
+
+    /// Consume one uplink frame: validate, window-check, dedupe, and fold
+    /// the update into the open aggregate in a single fused pass over the
+    /// packed codes. Non-`Accepted` verdicts leave the accumulator (and
+    /// every other piece of server state) untouched.
+    ///
+    /// Verdict precedence: the O(1) *envelope* checks run first —
+    /// unregistered sender, round window, duplicate — so a frame the
+    /// server would discard anyway never pays payload deserialization
+    /// (the ingest hot path on straggler fleets is mostly rejections).
+    /// Payload validation (wire header, direction, tensor length) runs
+    /// only for frames that would otherwise be accepted.
+    pub fn ingest(&mut self, frame: &Frame) -> Ingest {
+        let Some(&n_i) = self.client_weights.get(frame.client_id) else {
+            return Ingest::Malformed;
+        };
+        let staleness = match self.mode {
+            RoundMode::Synchronous => {
+                if frame.round != self.round {
+                    return Ingest::StaleRound;
+                }
+                0
+            }
+            RoundMode::BufferedAsync { max_staleness, .. } => {
+                if frame.round > self.round {
+                    // A version the server never broadcast: outside the
+                    // acceptance window just like an expired one.
+                    return Ingest::StaleRound;
+                }
+                let s = self.round - frame.round;
+                if s > max_staleness {
+                    return Ingest::StaleRound;
+                }
+                s
+            }
+        };
+        if self.contributed[frame.client_id] == self.stamp() {
+            return Ingest::Duplicate;
+        }
+        let Ok(enc) = wire::deserialize(&frame.payload) else {
+            return Ingest::Malformed;
+        };
+        if enc.direction != Direction::Uplink || enc.n as usize != self.params.len() {
+            return Ingest::Malformed;
+        }
+        let weight = n_i as f64 / (1 + staleness) as f64;
+        if accumulate_with(&enc, weight, &mut self.acc, &mut self.scratch).is_err() {
+            return Ingest::Malformed;
+        }
+        self.contributed[frame.client_id] = self.stamp();
+        self.weight_sum += weight;
+        self.updates_this_round += 1;
+        Ingest::Accepted { staleness }
+    }
+
+    /// Receive one client's wire bytes: deserialize and fold into the
+    /// weighted sum (Algorithm 1 lines 6–7). This is the *trusted* direct
+    /// path — no round/duplicate bookkeeping; experiment harnesses that
+    /// drive aggregation by hand (tests, figures) use it. Frame-driven
+    /// drivers go through [`Server::ingest`].
     pub fn receive_update(&mut self, wire_bytes: &[u8], num_examples: u32) -> Result<()> {
         let enc = wire::deserialize(wire_bytes)?;
         anyhow::ensure!(
@@ -114,27 +335,22 @@ impl Server {
         self.receive_decoded(&enc, num_examples)
     }
 
-    /// Same, for an already-parsed [`EncodedTensor`].
+    /// Same, for an already-parsed [`EncodedTensor`]. Fuses dequantize and
+    /// accumulate in one pass over the packed codes — no intermediate
+    /// `Vec<f32>` (bit-identical to decode-then-add; see
+    /// [`crate::compress::pipeline::accumulate_with`]).
     pub fn receive_decoded(&mut self, enc: &EncodedTensor, num_examples: u32) -> Result<()> {
-        let delta = decode_with(enc, &mut self.scratch)?;
-        anyhow::ensure!(
-            delta.len() == self.params.len(),
-            "update length {} != model {}",
-            delta.len(),
-            self.params.len()
-        );
         let w = num_examples as f64;
-        for (a, &d) in self.acc.iter_mut().zip(&delta) {
-            *a += d as f64 * w;
-        }
+        accumulate_with(enc, w, &mut self.acc, &mut self.scratch)?;
         self.weight_sum += w;
         self.updates_this_round += 1;
         Ok(())
     }
 
     /// Finish the round: apply the aggregated update to the model
-    /// (Eq. 1) and reset the accumulator. Returns the number of updates
-    /// folded in.
+    /// (Eq. 1), reset the accumulator, and open the next round (the model
+    /// version advances even when nothing arrived — time moves on).
+    /// Returns the number of updates folded in.
     pub fn finish_round(&mut self) -> usize {
         let n_updates = self.updates_this_round;
         if self.weight_sum > 0.0 {
@@ -146,6 +362,7 @@ impl Server {
         }
         self.weight_sum = 0.0;
         self.updates_this_round = 0;
+        self.round += 1;
         n_updates
     }
 
@@ -323,6 +540,185 @@ mod tests {
             .sqrt();
         let scale = l2_norm(&server.params).max(1e-9);
         assert!(err / scale < 0.1, "replica drift {}", err / scale);
+    }
+
+    fn uplink_frame(pipe: &Pipeline, g: &[f32], seed: u64, round: usize, client_id: usize) -> Frame {
+        Frame {
+            round,
+            client_id,
+            payload: wire::serialize(&encode_update(pipe, g, seed)),
+        }
+    }
+
+    #[test]
+    fn ingest_matches_the_direct_receive_path_bit_exactly() {
+        // Frame ingest (fused dequantize+accumulate, registered weights)
+        // must aggregate exactly like the trusted receive_update path.
+        let pipe = Pipeline::cosine(6);
+        let mut rng = Pcg64::seeded(21);
+        let gs: Vec<Vec<f32>> = (0..3).map(|_| gradient_like(&mut rng, 700)).collect();
+        let weights = vec![10u32, 25, 40];
+
+        let mut by_frames =
+            Server::new(vec![0.0; 700], 1.5).with_clients(weights.clone());
+        let mut direct = Server::new(vec![0.0; 700], 1.5);
+        for (c, g) in gs.iter().enumerate() {
+            let frame = uplink_frame(&pipe, g, 50 + c as u64, 0, c);
+            assert_eq!(by_frames.ingest(&frame), Ingest::Accepted { staleness: 0 });
+            direct.receive_update(&frame.payload, weights[c]).unwrap();
+        }
+        assert_eq!(by_frames.finish_round(), 3);
+        direct.finish_round();
+        assert_eq!(by_frames.params, direct.params);
+        assert_eq!(by_frames.round(), 1);
+    }
+
+    #[test]
+    fn duplicate_frames_leave_the_accumulator_untouched() {
+        let pipe = Pipeline::cosine(4);
+        let mut rng = Pcg64::seeded(22);
+        let g0 = gradient_like(&mut rng, 128);
+        let g1 = gradient_like(&mut rng, 128);
+        let run = |duplicate: bool| -> Vec<f32> {
+            let mut s = Server::new(vec![0.0; 128], 1.0).with_clients(vec![7, 9]);
+            assert_eq!(
+                s.ingest(&uplink_frame(&pipe, &g0, 1, 0, 0)),
+                Ingest::Accepted { staleness: 0 }
+            );
+            if duplicate {
+                // Same client again (even with different contents): refused.
+                assert_eq!(s.ingest(&uplink_frame(&pipe, &g1, 2, 0, 0)), Ingest::Duplicate);
+            }
+            assert_eq!(
+                s.ingest(&uplink_frame(&pipe, &g1, 3, 0, 1)),
+                Ingest::Accepted { staleness: 0 }
+            );
+            assert_eq!(s.finish_round(), 2);
+            s.params
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn stale_round_frames_are_refused_in_sync_mode() {
+        let pipe = Pipeline::cosine(4);
+        let mut rng = Pcg64::seeded(23);
+        let g = gradient_like(&mut rng, 64);
+        let mut s = Server::new(vec![0.25; 64], 1.0).with_clients(vec![5, 5]);
+        assert_eq!(s.ingest(&uplink_frame(&pipe, &g, 1, 0, 0)), Ingest::Accepted { staleness: 0 });
+        s.finish_round();
+        let after_round = s.params.clone();
+        // Round 0 tag at round 1: stale. A round from the future: refused too.
+        assert_eq!(s.ingest(&uplink_frame(&pipe, &g, 2, 0, 1)), Ingest::StaleRound);
+        assert_eq!(s.ingest(&uplink_frame(&pipe, &g, 3, 9, 1)), Ingest::StaleRound);
+        assert_eq!(s.finish_round(), 0);
+        assert_eq!(s.params, after_round, "stale frames must not move the model");
+    }
+
+    #[test]
+    fn malformed_frames_are_refused_without_side_effects() {
+        let pipe = Pipeline::cosine(4);
+        let mut rng = Pcg64::seeded(24);
+        let g = gradient_like(&mut rng, 64);
+        let mut s = Server::new(vec![0.0; 64], 1.0).with_clients(vec![5, 5]);
+
+        // Corrupted header bytes.
+        let mut bad = uplink_frame(&pipe, &g, 1, 0, 0);
+        bad.payload[0] = b'X';
+        assert_eq!(s.ingest(&bad), Ingest::Malformed);
+        // Truncated payload.
+        let mut short = uplink_frame(&pipe, &g, 1, 0, 0);
+        short.payload.truncate(10);
+        assert_eq!(s.ingest(&short), Ingest::Malformed);
+        // A downlink frame on the uplink.
+        let enc = Pipeline::cosine(4).encode(
+            &g,
+            Direction::Downlink,
+            &mut PipelineState::new(),
+            &mut Pcg64::seeded(2),
+        );
+        let down = Frame { round: 0, client_id: 0, payload: wire::serialize(&enc) };
+        assert_eq!(s.ingest(&down), Ingest::Malformed);
+        // Wrong tensor length.
+        let wrong_n = uplink_frame(&pipe, &g[..32], 3, 0, 0);
+        assert_eq!(s.ingest(&wrong_n), Ingest::Malformed);
+        // Unregistered client id.
+        assert_eq!(s.ingest(&uplink_frame(&pipe, &g, 4, 0, 99)), Ingest::Malformed);
+
+        // Nothing above touched the accumulator.
+        assert_eq!(s.finish_round(), 0);
+        assert_eq!(s.params, vec![0.0; 64]);
+    }
+
+    #[test]
+    fn out_of_order_arrival_within_a_round_is_accepted() {
+        let pipe = Pipeline::cosine(8);
+        let mut rng = Pcg64::seeded(25);
+        let gs: Vec<Vec<f32>> = (0..3).map(|_| gradient_like(&mut rng, 96)).collect();
+        let mut s = Server::new(vec![0.0; 96], 1.0).with_clients(vec![1, 2, 3]);
+        // Arrival order 2, 0, 1 — all frames of the open round land.
+        for &c in &[2usize, 0, 1] {
+            assert_eq!(
+                s.ingest(&uplink_frame(&pipe, &gs[c], 10 + c as u64, 0, c)),
+                Ingest::Accepted { staleness: 0 },
+                "client {c} out of order"
+            );
+        }
+        assert_eq!(s.finish_round(), 3);
+        assert_ne!(s.params, vec![0.0; 96]);
+    }
+
+    #[test]
+    fn buffered_async_discounts_staleness_and_signals_apply() {
+        let pipe = Pipeline::float32();
+        let mut s = Server::new(vec![0.0, 0.0], 1.0)
+            .with_clients(vec![100, 100, 100])
+            .with_round_mode(RoundMode::BufferedAsync {
+                buffer_k: 2,
+                max_staleness: 1,
+            });
+        s.finish_round(); // advance to round 1 so staleness exists
+        assert_eq!(s.round(), 1);
+
+        // Fresh update from client 0, stale-by-1 from client 1.
+        assert_eq!(
+            s.ingest(&uplink_frame(&pipe, &[1.0, 0.0], 1, 1, 0)),
+            Ingest::Accepted { staleness: 0 }
+        );
+        assert!(!s.ready_to_apply());
+        assert_eq!(
+            s.ingest(&uplink_frame(&pipe, &[0.0, 1.0], 2, 0, 1)),
+            Ingest::Accepted { staleness: 1 }
+        );
+        assert!(s.ready_to_apply(), "buffer of 2 filled");
+        // Staleness 2 (round 0 at... round tag -1 impossible) — an expired
+        // tag: client 2 trained on a version older than max_staleness.
+        s.finish_round();
+        assert_eq!(s.round(), 2);
+        assert_eq!(s.ingest(&uplink_frame(&pipe, &[1.0, 1.0], 3, 0, 2)), Ingest::StaleRound);
+
+        // The staleness discount halved client 1's weight:
+        // mean = (100·[1,0] + 50·[0,1]) / 150 = [2/3, 1/3]; params = −mean.
+        assert!((s.params[0] + 2.0 / 3.0).abs() < 1e-6, "{}", s.params[0]);
+        assert!((s.params[1] + 1.0 / 3.0).abs() < 1e-6, "{}", s.params[1]);
+    }
+
+    #[test]
+    fn round_mode_parse_grammar() {
+        assert_eq!(RoundMode::parse("sync").unwrap(), RoundMode::Synchronous);
+        assert_eq!(
+            RoundMode::parse("async:8").unwrap(),
+            RoundMode::BufferedAsync { buffer_k: 8, max_staleness: 2 }
+        );
+        assert_eq!(
+            RoundMode::parse("async:4:7").unwrap(),
+            RoundMode::BufferedAsync { buffer_k: 4, max_staleness: 7 }
+        );
+        assert!(RoundMode::parse("async").is_err());
+        assert!(RoundMode::parse("async:0").is_err());
+        assert!(RoundMode::parse("async:x").is_err());
+        assert!(RoundMode::parse("gossip").is_err());
+        assert_eq!(RoundMode::parse("async:4:1").unwrap().name(), "async:4 (≤1 stale)");
     }
 
     #[test]

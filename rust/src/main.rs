@@ -4,14 +4,18 @@
 //! repro figure <id>|all [--rounds N] [--scale full] [--seed S] [--quiet]
 //! repro train --task mnist|mnist-iid|cifar|unet --codec <name> [--bits B]
 //!             [--keep F] [--rounds N] [--kernel] [--seed S] [--threads N]
+//!             [--round-mode sync|async:K[:S]]
 //!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
 //! repro sim   --task <t> [--rounds N] [--fleet heterogeneous|uniform|3g]
 //!             [--policy sync|overselect] [--over F] [--availability P]
-//!             [--dropout P] [--target M]   # time-to-accuracy comparison
+//!             [--dropout P] [--target M] [--round-mode async:K[:S]]
+//!             [--quick]   # sync vs buffered-async time-to-accuracy table
+//!                         # (--quick without artifacts: protocol dry-run)
 //! repro compress-stats [--n N]      # pipeline table, no artifacts needed
 //! repro bench [--json] [--quick] [--n N] [--out FILE]
 //!                                   # compress perf trajectory
-//!                                   # (ns/elem per stage × bit width)
+//!                                   # (ns/elem per stage × bit width;
+//!                                   #  --json APPENDS a run)
 //! repro check                       # load + compile all artifacts
 //! repro list                        # figure ids and codec names
 //! ```
@@ -21,9 +25,9 @@ use anyhow::{bail, Result};
 use cossgd::compress::cosine::{BoundMode, Rounding};
 use cossgd::compress::{Direction, Pipeline, PipelineState};
 use cossgd::figures::{self, FigOpts};
-use cossgd::fl::{self, FlConfig, Task};
+use cossgd::fl::{self, FlConfig, RoundMode, Task};
 use cossgd::runtime::Engine;
-use cossgd::sim::{fmt_sim_secs, RoundPolicy, SimConfig};
+use cossgd::sim::{fmt_sim_secs, RoundPolicy, SimConfig, Timeline};
 use cossgd::util::cli::Args;
 use cossgd::util::rng::Pcg64;
 use cossgd::util::timer::{fmt_bytes, Stopwatch};
@@ -63,10 +67,19 @@ fn cmd_list() -> Result<()> {
     );
     println!(
         "sim: --fleet heterogeneous|uniform|3g, --policy sync|overselect [--over F], \
-         --availability P, --dropout P, --target M"
+         --availability P, --dropout P, --target M, --quick"
     );
+    println!("rounds: --round-mode sync|async:K[:S]  (K = buffer size, S = max staleness)");
     println!("perf: --threads N (0 = all cores), bench [--json] [--quick] [--n N] [--out FILE]");
     Ok(())
+}
+
+/// Parse `--round-mode` (default synchronous).
+fn round_mode_from_args(args: &Args) -> Result<RoundMode> {
+    match args.opt("round-mode") {
+        Some(s) => RoundMode::parse(s),
+        None => Ok(RoundMode::Synchronous),
+    }
 }
 
 /// The compress perf trajectory: ns/elem for every hot stage at every bit
@@ -88,7 +101,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.flag("json") {
         let out = std::path::PathBuf::from(args.opt_or("out", "BENCH_compress.json"));
         cossgd::util::bench::write_trajectory(&out, cossgd::compress::perf::SUITE, b.results())?;
-        println!("trajectory written to {out:?}");
+        println!("run appended to {out:?}");
     }
     Ok(())
 }
@@ -215,6 +228,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.eval_every = args.opt_usize("eval-every", 5);
     cfg.use_kernel_quantizer = args.flag("kernel");
     cfg.client_threads = args.opt_usize("threads", 1);
+    cfg.round_mode = round_mode_from_args(args)?;
     cfg.verbose = !args.flag("quiet");
     if let Some(c) = args.opt("clients") {
         cfg.n_clients = c.parse()?;
@@ -257,13 +271,7 @@ fn sim_from_args(args: &Args) -> Result<SimConfig> {
         "3g" | "cellular" => SimConfig::cellular(),
         other => bail!("unknown fleet '{other}' (heterogeneous, uniform, 3g)"),
     };
-    sim.policy = match args.opt_or("policy", "sync") {
-        "sync" | "synchronous" => RoundPolicy::Synchronous,
-        "overselect" | "deadline" => RoundPolicy::OverSelect {
-            over_sample: args.opt_f64("over", 1.3),
-        },
-        other => bail!("unknown policy '{other}' (sync, overselect)"),
-    };
+    sim.policy = RoundPolicy::parse(args.opt_or("policy", "sync"), args.opt_f64("over", 1.3))?;
     if let Some(a) = args.opt("availability") {
         sim.availability = a.parse()?;
         if !(0.0..=1.0).contains(&sim.availability) {
@@ -279,10 +287,33 @@ fn sim_from_args(args: &Args) -> Result<SimConfig> {
     Ok(sim)
 }
 
+/// The buffered-async mode to compare against synchronous rounds: what
+/// `--round-mode` says, or an `async:K` default where `K` matches the
+/// synchronous cohort (equal updates per aggregation ⇒ comparable bytes).
+fn async_mode_for(args: &Args, per_round: usize) -> Result<RoundMode> {
+    match round_mode_from_args(args)? {
+        m @ RoundMode::BufferedAsync { .. } => Ok(m),
+        RoundMode::Synchronous => Ok(RoundMode::BufferedAsync {
+            buffer_k: per_round,
+            max_staleness: 2,
+        }),
+    }
+}
+
 /// Time-to-accuracy comparison: the same federated task across
 /// uplink/downlink pipelines, every run replayed on the same virtual
-/// fleet, so compression ratios become simulated-seconds speedups.
+/// fleet in BOTH round modes, so compression ratios — and buffered-async
+/// aggregation — become simulated-seconds speedups side by side.
 fn cmd_sim(args: &Args) -> Result<()> {
+    // Same location Engine::load_default resolves.
+    let artifacts_built = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if args.flag("quick") && !artifacts_built {
+        // CI smoke path: no training artifacts — drive the REAL
+        // transport + server state machine with synthetic updates.
+        return cmd_sim_dry(args);
+    }
     let task = Task::parse(args.opt_or("task", "mnist-iid"))?;
     let mut base = match task {
         Task::MnistIid => FlConfig::mnist(false),
@@ -296,10 +327,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(p) = args.opt("participation") {
         base.participation = p.parse()?;
     }
-    let rounds = args.opt_usize("rounds", base.rounds.min(20));
+    let default_rounds = if args.flag("quick") { 6 } else { base.rounds.min(20) };
+    let rounds = args.opt_usize("rounds", default_rounds);
     let seed = args.opt_u64("seed", 42);
     let sim = sim_from_args(args)?;
     let target: Option<f64> = args.opt("target").map(str::parse).transpose()?;
+    let async_mode = async_mode_for(args, base.clients_per_round())?;
     let engine = Engine::load_default()?;
 
     let schemes: Vec<(&str, Pipeline, Option<Pipeline>)> = vec![
@@ -322,14 +355,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
     ];
 
     println!(
-        "fleet: {} over {} clients · {} rounds · task {task:?} · seed {seed}",
+        "fleet: {} over {} clients · {} rounds · task {task:?} · seed {seed} · async = {}",
         sim.name(),
         base.n_clients,
-        rounds
+        rounds,
+        async_mode.name()
     );
     println!(
-        "{:<30} {:>7} {:>10} {:>10} {:>11} {:>11} {:>6} {:>5}",
-        "scheme", "best", "sim time", "to-target", "uplink", "downlink", "strag", "drop"
+        "{:<30} {:>7} {:>10} {:>10} {:>10} {:>10} {:>11} {:>6}",
+        "scheme", "best", "sync time", "sync t2t", "async time", "async t2t", "uplink", "stale"
     );
     for (name, up, down) in schemes {
         let mut cfg = base
@@ -344,30 +378,111 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg.eval_every = args.opt_usize("eval-every", 5);
         cfg.client_threads = args.opt_usize("threads", 1);
         cfg.verbose = args.flag("verbose");
-        let result = fl::run_labeled(&cfg, &engine, name)?;
-        let tl = result.timeline.as_ref().expect("sim runs carry a timeline");
-        let best = result
+        let sync_run = fl::run_labeled(&cfg, &engine, name)?;
+        let async_run =
+            fl::run_labeled(&cfg.clone().with_round_mode(async_mode), &engine, name)?;
+        let tl_sync = sync_run.timeline.as_ref().expect("sim runs carry a timeline");
+        let tl_async = async_run.timeline.as_ref().expect("sim runs carry a timeline");
+        let best = sync_run
             .history
             .best_metric()
             .map_or("-".to_string(), |m| format!("{m:.4}"));
-        let tta = target
-            .and_then(|tg| tl.time_to_metric(&result.history, tg))
-            .map_or("-".to_string(), fmt_sim_secs);
+        let t2t = |run: &fl::RunResult, tl: &Timeline| {
+            target
+                .and_then(|tg| tl.time_to_metric(&run.history, tg))
+                .map_or("-".to_string(), fmt_sim_secs)
+        };
+        let stale: usize = async_run.history.records.iter().map(|r| r.stale_updates).sum();
         println!(
-            "{:<30} {:>7} {:>10} {:>10} {:>11} {:>11} {:>6} {:>5}",
+            "{:<30} {:>7} {:>10} {:>10} {:>10} {:>10} {:>11} {:>6}",
             name,
             best,
-            fmt_sim_secs(tl.total_secs()),
-            tta,
-            fmt_bytes(result.network.uplink_bytes),
-            fmt_bytes(result.network.downlink_bytes),
-            tl.stragglers_dropped(),
-            tl.dropouts()
+            fmt_sim_secs(tl_sync.total_secs()),
+            t2t(&sync_run, tl_sync),
+            fmt_sim_secs(tl_async.total_secs()),
+            t2t(&async_run, tl_async),
+            fmt_bytes(sync_run.network.uplink_bytes),
+            stale
         );
     }
     if target.is_none() {
         println!("(pass --target M for time-to-target-metric, e.g. --target 0.8)");
     }
+    Ok(())
+}
+
+/// Artifact-free `repro sim --quick`: the protocol smoke CI runs. Real
+/// encoded frames, real transport, real server state machine — both round
+/// modes side by side; only the training is synthetic
+/// ([`cossgd::fl::transport::dryrun`]).
+fn cmd_sim_dry(args: &Args) -> Result<()> {
+    use cossgd::fl::transport::dryrun;
+    let n = args.opt_usize("n", 20_000);
+    let n_clients = args.opt_usize("clients", 40);
+    let k = 10usize.min(n_clients);
+    let rounds = args.opt_usize("rounds", 6);
+    let seed = args.opt_u64("seed", 42);
+    let sim = sim_from_args(args)?;
+    let RoundMode::BufferedAsync {
+        buffer_k,
+        max_staleness,
+    } = async_mode_for(args, k)?
+    else {
+        unreachable!("async_mode_for always returns BufferedAsync")
+    };
+    let concurrency = (2 * buffer_k).min(n_clients);
+    println!(
+        "protocol dry-run (artifacts not built): {n}-param synthetic updates, real frames \
+         through transport + ingest state machine"
+    );
+    println!(
+        "fleet: {} over {n_clients} clients · {rounds} rounds · async:{buffer_k} ≤{max_staleness} stale",
+        sim.name()
+    );
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>11} {:>11} {:>6}",
+        "uplink codec",
+        "sync time",
+        "sync/rnd",
+        "async time",
+        "async/rnd",
+        "sync ↑B",
+        "async ↑B",
+        "stale"
+    );
+    for (name, pipe) in [
+        ("float32", Pipeline::float32()),
+        ("cosine-4", Pipeline::cosine(4)),
+    ] {
+        let sync = dryrun::run_sync(&pipe, &sim, n, n_clients, k, rounds, seed)?;
+        let asyn = dryrun::run_async(
+            &pipe,
+            &sim,
+            n,
+            n_clients,
+            buffer_k,
+            concurrency,
+            rounds,
+            max_staleness,
+            seed,
+        )?;
+        anyhow::ensure!(
+            sync.timeline.records.len() == rounds && asyn.aggregations == rounds,
+            "{name}: protocol run incomplete"
+        );
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>11} {:>11} {:>6}",
+            name,
+            fmt_sim_secs(sync.timeline.total_secs()),
+            fmt_sim_secs(sync.timeline.mean_round_secs()),
+            fmt_sim_secs(asyn.timeline.total_secs()),
+            fmt_sim_secs(asyn.timeline.mean_round_secs()),
+            fmt_bytes(sync.ledger.uplink_bytes),
+            fmt_bytes(asyn.ledger.uplink_bytes),
+            asyn.dropped
+        );
+    }
+    println!("protocol dry-run OK (both round modes)");
     Ok(())
 }
 

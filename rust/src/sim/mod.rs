@@ -126,6 +126,19 @@ impl SimConfig {
     }
 }
 
+/// The per-dispatch availability/dropout lottery verdict (buffered-async
+/// rounds, where clients are admitted one at a time instead of per-round).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Online and will survive to upload: worth training.
+    Admitted,
+    /// Unreachable right now; never starts.
+    Offline,
+    /// Would start but fail mid-flight and never report: not worth
+    /// training (mirrors [`FleetSim::begin_round`]'s pre-thinning).
+    Dropout,
+}
+
 /// What the availability/dropout lottery decided for one round.
 #[derive(Debug, Clone)]
 pub struct RoundPlan {
@@ -185,6 +198,14 @@ pub struct FleetSim {
     rng: Pcg64,
     clock: Ticks,
     timeline: Timeline,
+    /// In-flight asynchronous uploads: `(token, phase breakdown)` keyed by
+    /// arrival tick (buffered-async rounds; empty in round-batch use).
+    flights: EventQueue<(u64, (Ticks, Ticks, Ticks))>,
+    /// Virtual time when the open async aggregation window began.
+    window_start: Ticks,
+    /// Phase breakdown of the most recent async arrival (the critical
+    /// path of the window it closes).
+    last_phases: (Ticks, Ticks, Ticks),
 }
 
 /// Per-participant lifecycle events (index into the round's load list).
@@ -212,6 +233,9 @@ impl FleetSim {
             rng: Pcg64::new(seed, 0xD1CE),
             clock: 0,
             timeline: Timeline::default(),
+            flights: EventQueue::new(),
+            window_start: 0,
+            last_phases: (0, 0, 0),
         }
     }
 
@@ -319,6 +343,85 @@ impl FleetSim {
             duration: end - start,
             stragglers_dropped,
         }
+    }
+
+    /// Per-dispatch lottery for buffered-async rounds: the same two
+    /// Bernoulli draws per candidate — in call order — as
+    /// [`FleetSim::begin_round`], so the lottery stream stays reproducible
+    /// across modes.
+    pub fn admit(&mut self, device: usize) -> Admission {
+        debug_assert!(device < self.devices.len(), "device {device} outside fleet");
+        let online = self.rng.bernoulli(self.availability);
+        let fails = self.rng.bernoulli(self.dropout);
+        if !online {
+            Admission::Offline
+        } else if fails {
+            Admission::Dropout
+        } else {
+            Admission::Admitted
+        }
+    }
+
+    /// Launch one asynchronous flight *now*: broadcast transfer → local
+    /// training → upload transfer on `device`, timed from the current
+    /// virtual instant. The arrival is queued under `token` (the caller's
+    /// handle for the in-flight payload); returns the arrival tick.
+    pub fn launch(
+        &mut self,
+        token: u64,
+        device: usize,
+        broadcast_bytes: usize,
+        upload_bytes: usize,
+        examples: u64,
+    ) -> Ticks {
+        let d = &self.devices[device];
+        let b = transfer_ticks(broadcast_bytes as u64, d.down_bps);
+        let c = compute_ticks(examples, d.examples_per_sec);
+        let u = transfer_ticks(upload_bytes as u64, d.up_bps);
+        let at = self.clock + b + c + u;
+        self.flights.push(at, (token, (b, c, u)));
+        at
+    }
+
+    /// Pop the earliest in-flight arrival, advancing the virtual clock to
+    /// it. `None` when nothing is in flight. The clock is monotone: every
+    /// launch lands at or after the instant it started.
+    pub fn arrive(&mut self) -> Option<(Ticks, u64)> {
+        let (t, (token, phases)) = self.flights.pop()?;
+        self.clock = t;
+        self.last_phases = phases;
+        Some((t, token))
+    }
+
+    /// Close one buffered-async aggregation window: appends a
+    /// [`TimelineRecord`] spanning the window, with the *triggering*
+    /// arrival's phase breakdown as the critical path. In async runs
+    /// `stragglers_dropped` counts updates discarded as stale — the async
+    /// analogue of an aborted straggler upload.
+    pub fn close_async_round(
+        &mut self,
+        round: usize,
+        selected: usize,
+        offline: usize,
+        dropouts: usize,
+        reporters: usize,
+        stale_dropped: usize,
+    ) {
+        let (bt, ct, ut) = self.last_phases;
+        self.timeline.push(TimelineRecord {
+            round,
+            start: self.window_start,
+            end: self.clock,
+            broadcast_ticks: bt,
+            compute_ticks: ct,
+            upload_ticks: ut,
+            selected,
+            offline,
+            dropouts,
+            reporters,
+            stragglers_dropped: stale_dropped,
+        });
+        self.window_start = self.clock;
     }
 
     /// The timeline so far.

@@ -48,6 +48,16 @@ impl RoundPolicy {
             }
         }
     }
+
+    /// Parse the CLI grammar (`--policy sync|overselect`, with the
+    /// over-sampling factor supplied separately by `--over`).
+    pub fn parse(name: &str, over_sample: f64) -> anyhow::Result<RoundPolicy> {
+        match name {
+            "sync" | "synchronous" => Ok(RoundPolicy::Synchronous),
+            "overselect" | "deadline" => Ok(RoundPolicy::OverSelect { over_sample }),
+            other => anyhow::bail!("unknown policy '{other}' (sync, overselect)"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -85,5 +95,19 @@ mod tests {
             RoundPolicy::OverSelect { over_sample: 1.3 }.name(),
             "overselect x1.30"
         );
+    }
+
+    #[test]
+    fn parse_roundtrips_the_cli_grammar() {
+        assert_eq!(RoundPolicy::parse("sync", 1.3).unwrap(), RoundPolicy::Synchronous);
+        assert_eq!(
+            RoundPolicy::parse("overselect", 1.5).unwrap(),
+            RoundPolicy::OverSelect { over_sample: 1.5 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("deadline", 2.0).unwrap(),
+            RoundPolicy::OverSelect { over_sample: 2.0 }
+        );
+        assert!(RoundPolicy::parse("bogus", 1.0).is_err());
     }
 }

@@ -2,6 +2,11 @@
 //! (simulated seconds per phase, straggler/dropout counts) and the
 //! [`Timeline`] aggregate with the headline number — **time to target
 //! metric** — that turns compression ratios into wall-clock speedups.
+//!
+//! In buffered-async runs a "round" is one aggregation window (the span
+//! between two model applications) and `stragglers_dropped` counts the
+//! delivered updates the server discarded as stale — the async analogue
+//! of an aborted straggler upload.
 
 use crate::fl::metrics::History;
 use crate::util::json::Json;
@@ -74,6 +79,17 @@ impl Timeline {
 
     pub fn total_secs(&self) -> f64 {
         secs(self.total_ticks())
+    }
+
+    /// Mean round (or async aggregation-window) duration in seconds —
+    /// the cadence columns (`sync/rnd`, `async/rnd`) of the
+    /// `repro sim --quick` protocol table.
+    pub fn mean_round_secs(&self) -> f64 {
+        if self.records.is_empty() {
+            0.0
+        } else {
+            self.total_secs() / self.records.len() as f64
+        }
     }
 
     /// Total stragglers aborted across the run.
@@ -171,6 +187,7 @@ mod tests {
             uplink_bytes: 100,
             downlink_bytes: 400,
             clients: 10,
+            stale_updates: 0,
         }
     }
 
@@ -188,6 +205,8 @@ mod tests {
         assert_eq!(tl.time_to_metric(&h, 0.8), Some(30.0));
         assert_eq!(tl.time_to_metric(&h, 0.99), None);
         assert!((tl.total_secs() - 30.0).abs() < 1e-12);
+        assert!((tl.mean_round_secs() - 10.0).abs() < 1e-12);
+        assert_eq!(Timeline::default().mean_round_secs(), 0.0);
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! (`BENCH_*.json`, schema [`TRAJECTORY_SCHEMA`]): one stable shape shared
 //! by the compress and sim suites, so ns/elem numbers are comparable
 //! across PRs (`repro bench --json`, `cargo bench --bench bench_kernel --
-//! --json`, `cargo bench --bench bench_sim -- --json`).
+//! --json`, `cargo bench --bench bench_sim -- --json`). Each recording
+//! **appends** a timestamped run to the file's `runs` array — the
+//! committed `BENCH_*.json` baselines accumulate history instead of being
+//! overwritten.
 
 use std::hint::black_box;
 use std::path::Path;
@@ -87,24 +90,55 @@ impl BenchResult {
     }
 }
 
-/// Assemble the trajectory document for one suite run.
+/// One run's entry in the trajectory `runs` array.
+fn run_json(results: &[BenchResult]) -> Json {
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Json::obj().set("unix_secs", unix_secs).set(
+        "results",
+        Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+    )
+}
+
+/// Assemble a fresh single-run trajectory document.
 pub fn trajectory_json(suite: &str, results: &[BenchResult]) -> Json {
     Json::obj()
         .set("schema", TRAJECTORY_SCHEMA)
         .set("suite", suite)
-        .set(
-            "results",
-            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
-        )
+        .set("runs", Json::Arr(vec![run_json(results)]))
 }
 
-/// Write `BENCH_<suite>`-style trajectory JSON to `path`.
+/// **Append** one run to the `BENCH_<suite>`-style trajectory at `path`,
+/// so the perf record *accumulates* across PRs instead of each run
+/// overwriting the last. Creates the file if absent; a pre-existing file
+/// with a matching suite keeps its history (legacy single-run files — a
+/// top-level `results` array — are folded in as their first run); a
+/// mismatched or unparseable file is started fresh.
 pub fn write_trajectory(
     path: &Path,
     suite: &str,
     results: &[BenchResult],
 ) -> std::io::Result<()> {
-    std::fs::write(path, trajectory_json(suite, results).pretty() + "\n")
+    let mut runs: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(doc) = Json::parse(&text) {
+            if doc.get("suite").and_then(Json::as_str) == Some(suite) {
+                if let Some(prior) = doc.get("runs").and_then(Json::as_arr) {
+                    runs.extend(prior.iter().cloned());
+                } else if let Some(legacy) = doc.get("results") {
+                    runs.push(Json::obj().set("unix_secs", 0u64).set("results", legacy.clone()));
+                }
+            }
+        }
+    }
+    runs.push(run_json(results));
+    let doc = Json::obj()
+        .set("schema", TRAJECTORY_SCHEMA)
+        .set("suite", suite)
+        .set("runs", Json::Arr(runs));
+    std::fs::write(path, doc.pretty() + "\n")
 }
 
 /// `--quick` convention for `harness = false` bench binaries and
@@ -271,12 +305,51 @@ mod tests {
         let j = trajectory_json("compress", b.results());
         assert_eq!(j.get("schema").unwrap().as_str(), Some(TRAJECTORY_SCHEMA));
         assert_eq!(j.get("suite").unwrap().as_str(), Some("compress"));
-        let rs = j.get("results").unwrap().as_arr().unwrap();
+        let runs = j.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        let rs = runs[0].get("results").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 1);
         assert_eq!(rs[0].get("name").unwrap().as_str(), Some("case/a"));
         assert!(rs[0].get("ns_per_elem").unwrap().as_f64().unwrap() >= 0.0);
         // Round-trips through the in-tree JSON parser.
         assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn trajectory_file_accumulates_runs() {
+        let dir = std::env::temp_dir().join("cossgd_bench_trajectory_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        std::fs::remove_file(&path).ok();
+        let mut b = Bencher {
+            min_time: Duration::from_millis(5),
+            max_iters: 50,
+            results: Vec::new(),
+        };
+        b.bench_elems("case/a", 10, || 1 + 1);
+        // Three appends: the runs array grows; nothing is overwritten.
+        for expect in 1..=3usize {
+            write_trajectory(&path, "test", b.results()).unwrap();
+            let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            assert_eq!(doc.get("schema").unwrap().as_str(), Some(TRAJECTORY_SCHEMA));
+            let runs = doc.get("runs").unwrap().as_arr().unwrap();
+            assert_eq!(runs.len(), expect, "append #{expect}");
+        }
+        // A baseline skeleton with an empty runs array also accumulates.
+        std::fs::write(
+            &path,
+            "{\"schema\": \"cossgd-bench/v1\", \"suite\": \"test\", \"runs\": []}\n",
+        )
+        .unwrap();
+        write_trajectory(&path, "test", b.results()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), 1);
+        // A different suite starts fresh rather than mixing histories.
+        write_trajectory(&path, "other", b.results()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("other"));
+        assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

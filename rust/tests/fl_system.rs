@@ -6,7 +6,7 @@
 use cossgd::compress::cosine::{BoundMode, Rounding};
 use cossgd::compress::{wire, Direction, Pipeline, PipelineState};
 use cossgd::fl::server::Server;
-use cossgd::fl::{Downlink, ModelReplica, NetworkLedger};
+use cossgd::fl::{Downlink, Frame, Ingest, Loopback, ModelReplica, NetworkLedger, Transport};
 use cossgd::util::propcheck::gradient_like;
 use cossgd::util::rng::Pcg64;
 use cossgd::util::stats::l2_norm;
@@ -223,6 +223,54 @@ fn threaded_client_encodes_bit_identical_to_serial() {
             assert_eq!(got.as_ref(), Some(want), "client {c} at {threads} threads");
         }
     }
+}
+
+/// The frame-driven path end to end at the protocol level: loopback
+/// transport + ingest state machine aggregates bit-identically to the
+/// trusted direct receive path, and the transport's ledger matches the
+/// frames it carried.
+#[test]
+fn frame_driven_rounds_match_direct_aggregation_bit_exactly() {
+    let n = 3000;
+    let n_clients = 8;
+    let rounds = 3;
+    let pipe = Pipeline::cosine(4);
+    let weights: Vec<u32> = (0..n_clients as u32).map(|c| 50 + c * 10).collect();
+    let mut rng = Pcg64::seeded(31);
+
+    let mut framed = Server::new(vec![0.0; n], 1.0).with_clients(weights.clone());
+    let mut direct = Server::new(vec![0.0; n], 1.0);
+    let mut transport = Loopback::new();
+    for t in 0..rounds {
+        let candidates: Vec<usize> = (0..n_clients).collect();
+        let plan = transport.plan_round(&candidates);
+        transport.broadcast(n * 4, plan.active.len());
+        let frames: Vec<Frame> = plan
+            .active
+            .iter()
+            .map(|&c| {
+                let g = gradient_like(&mut rng, n);
+                Frame {
+                    round: framed.round(),
+                    client_id: c,
+                    payload: wire::serialize(&encode_up(&pipe, &g, &mut Pcg64::new(t as u64, c as u64))),
+                }
+            })
+            .collect();
+        for f in &transport.exchange(t + 1, n_clients, n * 4, frames, 100) {
+            assert_eq!(framed.ingest(f), Ingest::Accepted { staleness: 0 });
+            direct.receive_update(&f.payload, weights[f.client_id]).unwrap();
+        }
+        assert_eq!(framed.finish_round(), n_clients);
+        direct.finish_round();
+        // Bit-identical every round, not just at the end.
+        assert_eq!(framed.params, direct.params, "round {t}");
+    }
+    // The ledger metered exactly the frames that crossed the loopback.
+    let ledger = transport.ledger();
+    assert_eq!(ledger.uplink_messages, (rounds * n_clients) as u64);
+    assert_eq!(ledger.downlink_messages, (rounds * n_clients) as u64);
+    assert!(ledger.uplink_bytes > 0);
 }
 
 /// Norm is preserved through wire f32 round-trips (header floats).

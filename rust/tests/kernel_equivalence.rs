@@ -7,8 +7,12 @@
 
 use cossgd::compress::cosine::{BoundMode, CosineQuantizer, Rounding};
 use cossgd::compress::kernel::{
-    build_thresholds, reference_code, scale_for, search_code, KernelScratch,
+    accumulate_cosine, accumulate_linear, build_thresholds, reference_code, scale_for,
+    search_code, KernelScratch,
 };
+use cossgd::compress::linear::LinearQuantizer;
+use cossgd::compress::pipeline::{accumulate_with, decode_with};
+use cossgd::compress::{Direction, EncodeScratch, Pipeline, PipelineState, Quantizer};
 use cossgd::util::propcheck::{forall, gradient_like};
 use cossgd::util::rng::Pcg64;
 
@@ -181,6 +185,135 @@ fn stale_threshold_cache_is_keyed_out() {
         q.quantize_into(&g, &mut Pcg64::seeded(1), &mut scratch, &mut codes);
         let refr = q.quantize_reference(&g, &mut Pcg64::seeded(1));
         assert_eq!(codes, refr.codes, "bound={bound}");
+    }
+}
+
+/// The fused dequantize+accumulate contract: for every bit width in
+/// 1..=8, folding codes straight into an f64 accumulator must be
+/// **bit-identical** to the decode-then-add reference path — across
+/// weights, repeated accumulation (multiple clients into one
+/// accumulator), small-tensor fallback and LUT regimes.
+#[test]
+fn fused_accumulate_bit_identical_to_decode_then_add() {
+    let mut rng = Pcg64::seeded(404);
+    for bits in 1..=8u8 {
+        // Both the LUT path (n ≥ 2^bits) and the direct fallback (n < 2^bits).
+        for n in [10_000usize, (1usize << bits).saturating_sub(1).max(1)] {
+            let clients: Vec<Vec<f32>> = (0..4).map(|_| gradient_like(&mut rng, n)).collect();
+            let weights = [3.0f64, 10.0, 0.5, 117.0];
+
+            // --- cosine ---
+            let q = CosineQuantizer::new(bits, Rounding::Biased, BoundMode::ClipTopPercent(1.0));
+            let mut scratch = KernelScratch::new();
+            let mut reference = vec![0.0f64; n];
+            let mut fused = vec![0.0f64; n];
+            for (g, &w) in clients.iter().zip(&weights) {
+                let quant = q.quantize(g, &mut Pcg64::seeded(1));
+                // Reference: materialize the decode, then fold.
+                for (a, &d) in reference.iter_mut().zip(&quant.dequantize()) {
+                    *a += d as f64 * w;
+                }
+                accumulate_cosine(
+                    &quant.codes,
+                    quant.norm,
+                    quant.bound,
+                    bits,
+                    &mut scratch,
+                    w,
+                    &mut fused,
+                );
+            }
+            for (i, (a, b)) in reference.iter().zip(&fused).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "cosine bits={bits} n={n} elem {i}: {a} vs {b}"
+                );
+            }
+
+            // --- linear ---
+            let lq = LinearQuantizer::biased(bits);
+            let mut reference = vec![0.0f64; n];
+            let mut fused = vec![0.0f64; n];
+            for (g, &w) in clients.iter().zip(&weights) {
+                let quant = Quantizer::quantize(&lq, g, &mut Pcg64::seeded(1));
+                for (a, &d) in reference
+                    .iter_mut()
+                    .zip(&lq.dequantize(&quant.codes, quant.norm, quant.bound))
+                {
+                    *a += d as f64 * w;
+                }
+                accumulate_linear(&quant.codes, quant.bound, bits, &mut scratch, w, &mut fused);
+            }
+            for (a, b) in reference.iter().zip(&fused) {
+                assert_eq!(a.to_bits(), b.to_bits(), "linear bits={bits} n={n}");
+            }
+        }
+    }
+}
+
+/// Degenerate regimes fold exactly like the reference: a zero-norm
+/// cosine tensor and a zero-bound linear tensor decode to exact zeros,
+/// and the fused fold performs the same adds.
+#[test]
+fn fused_accumulate_degenerate_scales() {
+    let mut scratch = KernelScratch::new();
+    let codes = vec![1u16, 0, 3, 2];
+    let mut acc = vec![1.5f64, -2.5, 0.0, -0.0];
+    let before = acc.clone();
+    accumulate_cosine(&codes, 0.0, 0.3, 2, &mut scratch, 7.0, &mut acc);
+    let expect: Vec<f64> = before.iter().map(|a| a + 0.0f64 * 7.0).collect();
+    assert_eq!(
+        acc.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+        expect.iter().map(|a| a.to_bits()).collect::<Vec<_>>()
+    );
+    accumulate_linear(&codes, 0.0, 2, &mut scratch, 3.0, &mut acc);
+    assert_eq!(
+        acc.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+        expect.iter().map(|a| a.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+/// The pipeline-level fused dispatcher ([`accumulate_with`]) matches
+/// decode-then-add for every frame shape: dense (fused fast path),
+/// deflated, float32 passthrough, and the rotated/sparsified fallbacks.
+#[test]
+fn accumulate_with_matches_decode_for_every_frame_shape() {
+    let mut rng = Pcg64::seeded(505);
+    let g = gradient_like(&mut rng, 4096);
+    let pipes = [
+        Pipeline::cosine(4),                          // dense + deflate
+        Pipeline::cosine(4).without_deflate(),        // dense, raw packed
+        Pipeline::float32(),                          // passthrough bytes
+        Pipeline::linear(2, Rounding::Biased),        // linear LUT
+        Pipeline::sign_norm(),                        // sign family
+        Pipeline::cosine(8).with_rotation(),          // fallback: rotated
+        Pipeline::cosine(4).with_sparsify(0.25),      // fallback: masked
+        Pipeline::ef_sign(),                          // sign + deflate
+    ];
+    for pipe in pipes {
+        let enc = pipe.encode(
+            &g,
+            Direction::Uplink,
+            &mut PipelineState::new(),
+            &mut Pcg64::seeded(6),
+        );
+        let mut scratch = EncodeScratch::new();
+        let w = 42.5f64;
+        let decoded = decode_with(&enc, &mut scratch).unwrap();
+        let mut reference = vec![0.125f64; g.len()];
+        for (a, &d) in reference.iter_mut().zip(&decoded) {
+            *a += d as f64 * w;
+        }
+        let mut fused = vec![0.125f64; g.len()];
+        accumulate_with(&enc, w, &mut fused, &mut scratch).unwrap();
+        for (i, (a, b)) in reference.iter().zip(&fused).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{} elem {i}", pipe.name());
+        }
+        // Length mismatch is an error, and must not touch the accumulator.
+        let mut wrong = vec![0.0f64; g.len() + 1];
+        assert!(accumulate_with(&enc, w, &mut wrong, &mut scratch).is_err());
+        assert!(wrong.iter().all(|&a| a == 0.0));
     }
 }
 

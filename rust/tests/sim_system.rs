@@ -174,6 +174,7 @@ fn bandwidth_bound_fleet_reaches_target_sooner_with_round_trip_quantization() {
                 uplink_bytes: 0,
                 downlink_bytes: 0,
                 clients: r.reporters,
+                stale_updates: 0,
             });
         }
         h
