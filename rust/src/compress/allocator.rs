@@ -1,0 +1,668 @@
+//! Adaptive fine-grained bit-width control: spend quantization bits where
+//! the error actually is.
+//!
+//! The paper's Fig. 9/10 sweeps (and follow-ups like FedFQ's fine-grained
+//! per-parameter quantization) show that one global bit width for a whole
+//! run wastes budget: early rounds tolerate coarse codes, late rounds
+//! need fine ones, and layers with most of the gradient energy deserve
+//! most of the bits. This module turns that observation into a scheduler:
+//!
+//! * [`BitSchedule`] — the run-level policy (`const:<b>`,
+//!   `anneal:<hi>..<lo>`, `adaptive:<budget>`), parsed straight from the
+//!   `--bits` CLI grammar.
+//! * [`LayerMap`] — a partition of the flat parameter vector into layers
+//!   (from the model manifest's layer extents, or an even split for
+//!   harnesses without one).
+//! * [`BitAllocator`] — budgeted water-filling: given per-layer signals
+//!   and a total uplink-bytes-per-round target, greedily assign the next
+//!   bit to the layer with the largest marginal MSE reduction per byte.
+//! * [`BitController`] — the round-loop brain: consumes the signals the
+//!   stack already produces (per-layer quantization MSE estimated from
+//!   the kernel step tables via [`super::kernel::expected_mse`], the
+//!   clients' EF-residual norm, and the round-over-round loss delta) and
+//!   emits a [`BitPlan`] for the next round.
+//!
+//! ## Bit-identity contract
+//!
+//! `const:<b>` emits a *uniform, unsegmented* plan every round: the
+//! encode path is byte-for-byte the legacy fixed-width pipeline (same
+//! single CSG2 frame, same RNG draws), pinned by the e2e determinism
+//! test. `anneal` is uniform-per-round (one frame, width varying across
+//! the stream); only `adaptive` produces segmented multi-width payloads.
+
+use anyhow::{bail, ensure, Result};
+
+use super::kernel::expected_mse;
+use super::wire::HEADER_BYTES;
+
+/// Widths the allocator may pick. 8 bits is the paper's top end; 1 bit is
+/// the signSGD+Norm degenerate case.
+pub const MIN_BITS: u8 = 1;
+pub const MAX_BITS: u8 = 8;
+
+/// The run-level bit-width policy (`--bits` grammar).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitSchedule {
+    /// One width for the whole run — through the controller this is
+    /// bit-identical to the legacy fixed-width path.
+    Const(u8),
+    /// Linear anneal from `hi` (round 0) to `lo` (last round), uniform
+    /// across layers: coarse early exploration, fine late refinement.
+    Anneal { hi: u8, lo: u8 },
+    /// Budgeted water-filling over layers. `budget` is the target uplink
+    /// payload bytes per client per round (headers included);
+    /// `0` = auto (the cost of a uniform 4-bit frame set).
+    Adaptive { budget: usize },
+}
+
+impl BitSchedule {
+    /// Parse the CLI grammar: `const:<b>`, `anneal:<hi>..<lo>`,
+    /// `adaptive[:<budget-bytes>]`, or a bare integer (alias of `const`).
+    pub fn parse(s: &str) -> Result<BitSchedule> {
+        if let Some(b) = s.strip_prefix("const:") {
+            let b: u8 = b.parse().map_err(|_| bad_bits(s))?;
+            ensure!((1..=16).contains(&b), "const width {b} outside 1..=16");
+            return Ok(BitSchedule::Const(b));
+        }
+        if let Ok(b) = s.parse::<u8>() {
+            ensure!((1..=16).contains(&b), "width {b} outside 1..=16");
+            return Ok(BitSchedule::Const(b));
+        }
+        if let Some(rest) = s.strip_prefix("anneal:") {
+            let Some((hi, lo)) = rest.split_once("..") else {
+                bail!("--bits anneal wants anneal:<hi>..<lo>, got '{s}'");
+            };
+            let hi: u8 = hi.parse().map_err(|_| bad_bits(s))?;
+            let lo: u8 = lo.parse().map_err(|_| bad_bits(s))?;
+            ensure!(
+                (1..=16).contains(&lo) && (1..=16).contains(&hi),
+                "anneal widths outside 1..=16 in '{s}'"
+            );
+            ensure!(hi >= lo, "anneal runs high to low: {hi} < {lo}");
+            return Ok(BitSchedule::Anneal { hi, lo });
+        }
+        if s == "adaptive" {
+            return Ok(BitSchedule::Adaptive { budget: 0 });
+        }
+        if let Some(b) = s.strip_prefix("adaptive:") {
+            let budget: usize = b
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad adaptive budget in --bits '{s}'"))?;
+            return Ok(BitSchedule::Adaptive { budget });
+        }
+        bail!("unknown bit schedule '{s}' (const:<b>, anneal:<hi>..<lo>, adaptive[:<bytes>])")
+    }
+
+    /// Compact label for logs / results files.
+    pub fn name(&self) -> String {
+        match self {
+            BitSchedule::Const(b) => format!("const:{b}"),
+            BitSchedule::Anneal { hi, lo } => format!("anneal:{hi}..{lo}"),
+            BitSchedule::Adaptive { budget: 0 } => "adaptive:auto".into(),
+            BitSchedule::Adaptive { budget } => format!("adaptive:{budget}"),
+        }
+    }
+}
+
+fn bad_bits(s: &str) -> anyhow::Error {
+    anyhow::anyhow!("bad bit width in --bits '{s}'")
+}
+
+/// The uniform width `anneal:<hi>..<lo>` picks for round `t` of `total`:
+/// `hi` at round 0, `lo` at the last round, linear (rounded) in between.
+pub fn anneal_bits(hi: u8, lo: u8, t: usize, total: usize) -> u8 {
+    debug_assert!(hi >= lo);
+    if total <= 1 || hi == lo {
+        return if t == 0 { hi } else { lo };
+    }
+    let frac = (t as f64 / (total - 1) as f64).min(1.0);
+    let w = hi as f64 - frac * (hi - lo) as f64;
+    (w.round() as u8).clamp(lo, hi)
+}
+
+/// A partition of the flat parameter vector into contiguous layers.
+/// `offsets` has `layers + 1` entries: segment `l` is
+/// `offsets[l]..offsets[l+1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerMap {
+    offsets: Vec<usize>,
+}
+
+impl LayerMap {
+    /// One segment covering the whole vector.
+    pub fn whole(n: usize) -> LayerMap {
+        LayerMap { offsets: vec![0, n] }
+    }
+
+    /// `layers` near-even segments (harnesses without a model manifest).
+    pub fn even(n: usize, layers: usize) -> LayerMap {
+        let layers = layers.clamp(1, n.max(1));
+        let mut offsets = Vec::with_capacity(layers + 1);
+        for l in 0..=layers {
+            offsets.push(l * n / layers);
+        }
+        LayerMap { offsets }
+    }
+
+    /// From `(offset, size)` extents (the manifest's `LayerSpec` layout).
+    /// Extents must be contiguous from 0 and non-empty.
+    pub fn from_extents(extents: &[(usize, usize)]) -> Result<LayerMap> {
+        ensure!(!extents.is_empty(), "layer map needs at least one extent");
+        let mut offsets = Vec::with_capacity(extents.len() + 1);
+        let mut at = 0usize;
+        offsets.push(0);
+        for &(off, size) in extents {
+            ensure!(off == at, "layer extents not contiguous: {off} != {at}");
+            ensure!(size > 0, "empty layer extent at offset {off}");
+            at += size;
+            offsets.push(at);
+        }
+        Ok(LayerMap { offsets })
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total parameter count covered.
+    pub fn param_count(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// The half-open range of segment `l`.
+    pub fn segment(&self, l: usize) -> std::ops::Range<usize> {
+        self.offsets[l]..self.offsets[l + 1]
+    }
+
+    /// Per-segment element counts.
+    pub fn sizes(&self) -> Vec<usize> {
+        (0..self.len()).map(|l| self.segment(l).len()).collect()
+    }
+}
+
+/// Wire cost of one CSG2 segment of `n` codes at `bits` (no DEFLATE —
+/// the allocator budgets the honest pre-compression size).
+pub fn segment_cost(n: usize, bits: u8) -> usize {
+    HEADER_BYTES + (n * bits as usize).div_ceil(8)
+}
+
+/// Cost of a uniform `bits` plan over `map` (the `adaptive` auto-budget
+/// reference point: what `const:4` would spend).
+pub fn uniform_cost(map: &LayerMap, bits: u8) -> usize {
+    (0..map.len()).map(|l| segment_cost(map.segment(l).len(), bits)).sum()
+}
+
+/// Per-layer signal the allocator water-fills against.
+#[derive(Debug, Clone)]
+pub struct LayerSignal {
+    /// Elements in the layer.
+    pub n: usize,
+    /// Observed ‖g_l‖₂ of the layer's gradient segment.
+    pub norm: f64,
+    /// Observed angle bound of the layer's last quantization.
+    pub bound: f32,
+}
+
+/// One wire segment the server accepted this round — the free per-layer
+/// signal: `(n, bits, norm, bound)` all travel in the CSG2 header, so the
+/// controller reads them without touching payload bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegmentObs {
+    pub n: usize,
+    pub bits: u8,
+    pub norm: f32,
+    pub bound: f32,
+}
+
+/// The widths chosen for one round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPlan {
+    /// Segment boundaries (`layers + 1` offsets; `[0, n]` when uniform).
+    pub bounds: Vec<usize>,
+    /// Width per segment (one entry per layer; a single entry when
+    /// uniform).
+    pub bits: Vec<u8>,
+    /// `false` ⇒ encode ONE frame at `bits[0]` (the legacy byte-identical
+    /// path); `true` ⇒ one CSG2 segment per layer, mixed widths allowed.
+    pub segmented: bool,
+}
+
+impl BitPlan {
+    /// Uniform plan: one whole-tensor frame at `b`.
+    pub fn uniform(n: usize, b: u8) -> BitPlan {
+        BitPlan {
+            bounds: vec![0, n],
+            bits: vec![b],
+            segmented: false,
+        }
+    }
+
+    /// `Some(w)` when every segment uses the same width `w`.
+    pub fn uniform_width(&self) -> Option<u8> {
+        let w = *self.bits.first()?;
+        self.bits.iter().all(|&b| b == w).then_some(w)
+    }
+}
+
+/// Budgeted water-filling over layers: start every layer at `floor` bits
+/// and repeatedly grant one more bit to the layer with the largest
+/// marginal MSE reduction per byte, until the budget is spent or every
+/// layer is at `cap`.
+#[derive(Debug, Clone, Copy)]
+pub struct BitAllocator {
+    /// No layer goes below this width (raised by controller pressure).
+    pub floor: u8,
+    /// No layer goes above this width.
+    pub cap: u8,
+}
+
+impl Default for BitAllocator {
+    fn default() -> Self {
+        BitAllocator {
+            floor: MIN_BITS,
+            cap: MAX_BITS,
+        }
+    }
+}
+
+impl BitAllocator {
+    /// Water-fill widths under `budget` payload bytes (headers included).
+    /// Deterministic: ties break toward the lowest layer index.
+    pub fn allocate(&self, signals: &[LayerSignal], budget: usize) -> Vec<u8> {
+        let floor = self.floor.clamp(MIN_BITS, self.cap);
+        let l_count = signals.len();
+        let mut bits = vec![MIN_BITS; l_count];
+        let mut spent: usize = signals.iter().map(|s| segment_cost(s.n, MIN_BITS)).sum();
+        if spent > budget {
+            // Even 1 bit everywhere busts the budget: send the minimum —
+            // the budget is a target, not a hard wire limit.
+            return bits;
+        }
+        // Raise to the floor first (uniformly, level by level, so a tight
+        // budget degrades gracefully instead of starving the tail layers).
+        for level in (MIN_BITS + 1)..=floor {
+            for (l, s) in signals.iter().enumerate() {
+                if bits[l] == level - 1 {
+                    let inc = segment_cost(s.n, level) - segment_cost(s.n, level - 1);
+                    if spent + inc <= budget {
+                        bits[l] = level;
+                        spent += inc;
+                    }
+                }
+            }
+        }
+        // Greedy marginal-gain fill. Layer counts are small (a model has
+        // dozens of layers, not thousands), so a plain scan per grant is
+        // cheaper than maintaining a heap.
+        loop {
+            let mut best: Option<(usize, usize, f64)> = None; // (layer, inc, gain/byte)
+            for (l, s) in signals.iter().enumerate() {
+                let w = bits[l];
+                if w >= self.cap {
+                    continue;
+                }
+                let inc = segment_cost(s.n, w + 1) - segment_cost(s.n, w);
+                if spent + inc > budget {
+                    continue;
+                }
+                let gain = expected_mse(w, s.bound, s.norm as f32, s.n)
+                    - expected_mse(w + 1, s.bound, s.norm as f32, s.n);
+                let per_byte = gain / inc.max(1) as f64;
+                let better = match best {
+                    None => true,
+                    Some((_, _, g)) => per_byte > g,
+                };
+                if better {
+                    best = Some((l, inc, per_byte));
+                }
+            }
+            let Some((l, inc, _)) = best else { break };
+            bits[l] += 1;
+            spent += inc;
+        }
+        bits
+    }
+}
+
+/// The round-loop controller: owns the schedule and the layer map, eats
+/// the signals the stack already produces, and emits a [`BitPlan`] per
+/// round.
+///
+/// Signals and how they steer `adaptive`:
+/// * **per-layer quantization MSE** — estimated from the accepted wire
+///   headers `(n, bits, norm, bound)` through the kernel step tables
+///   ([`expected_mse`]); drives the water-filling priorities.
+/// * **EF-residual norm** — when the clients' error-feedback residual
+///   carries a large fraction of the gradient energy, the quantizer is
+///   dropping signal faster than EF can recycle it: the controller raises
+///   the allocation floor one bit (budget unchanged — the widest layers
+///   pay for it).
+/// * **round-over-round loss delta** — a non-improving loss also raises
+///   the floor: starved 1-bit layers are the usual suspect the MSE proxy
+///   cannot see.
+#[derive(Debug, Clone)]
+pub struct BitController {
+    schedule: BitSchedule,
+    map: LayerMap,
+    /// Latest per-layer observations (None until the first segmented
+    /// round reports back).
+    signals: Option<Vec<LayerSignal>>,
+    prev_loss: Option<f64>,
+    /// Extra floor bits from the EF-residual / loss-delta pressure.
+    pressure: u8,
+}
+
+impl BitController {
+    pub fn new(schedule: BitSchedule, map: LayerMap) -> BitController {
+        BitController {
+            schedule,
+            map,
+            signals: None,
+            prev_loss: None,
+            pressure: 0,
+        }
+    }
+
+    pub fn schedule(&self) -> BitSchedule {
+        self.schedule
+    }
+
+    pub fn map(&self) -> &LayerMap {
+        &self.map
+    }
+
+    /// The uplink payload budget `adaptive` water-fills under.
+    pub fn effective_budget(&self) -> usize {
+        match self.schedule {
+            BitSchedule::Adaptive { budget: 0 } => uniform_cost(&self.map, 4),
+            BitSchedule::Adaptive { budget } => budget,
+            _ => 0,
+        }
+    }
+
+    /// The widths for round `t` of `total`.
+    pub fn plan(&mut self, t: usize, total: usize) -> BitPlan {
+        let n = self.map.param_count();
+        match self.schedule {
+            BitSchedule::Const(b) => BitPlan::uniform(n, b),
+            BitSchedule::Anneal { hi, lo } => BitPlan::uniform(n, anneal_bits(hi, lo, t, total)),
+            BitSchedule::Adaptive { .. } => {
+                let alloc = BitAllocator {
+                    floor: MIN_BITS + self.pressure,
+                    cap: MAX_BITS,
+                };
+                let signals = match &self.signals {
+                    Some(s) => s.clone(),
+                    // Cold start: unit-variance gradient prior
+                    // (‖g_l‖ ≈ √n_l), bound 0 — sizes carry the plan.
+                    None => (0..self.map.len())
+                        .map(|l| {
+                            let nl = self.map.segment(l).len();
+                            LayerSignal {
+                                n: nl,
+                                norm: (nl as f64).sqrt(),
+                                bound: 0.0,
+                            }
+                        })
+                        .collect(),
+                };
+                let bits = alloc.allocate(&signals, self.effective_budget());
+                BitPlan {
+                    bounds: self.map.offsets.clone(),
+                    bits,
+                    segmented: true,
+                }
+            }
+        }
+    }
+
+    /// Feed one round's observations back: the accepted segments' wire
+    /// headers, the mean client EF-residual norm (0 when EF is off), and
+    /// the round's mean train loss (`None` when unknown — dry runs).
+    pub fn observe(&mut self, obs: &[SegmentObs], residual_norm: f64, train_loss: Option<f64>) {
+        // Per-layer signals only update when the segment structure
+        // matches the map (uniform rounds report one whole-tensor
+        // segment — keep the previous per-layer view alive).
+        if obs.len() == self.map.len()
+            && obs
+                .iter()
+                .enumerate()
+                .all(|(l, o)| o.n == self.map.segment(l).len())
+        {
+            self.signals = Some(
+                obs.iter()
+                    .map(|o| LayerSignal {
+                        n: o.n,
+                        norm: o.norm as f64,
+                        bound: o.bound,
+                    })
+                    .collect(),
+            );
+        }
+        let grad_energy: f64 = obs.iter().map(|o| (o.norm as f64).powi(2)).sum();
+        let residual_pressure = residual_norm * residual_norm > 0.25 * grad_energy
+            && grad_energy > 0.0;
+        let loss_pressure = match (self.prev_loss, train_loss) {
+            (Some(prev), Some(now)) => now >= prev,
+            _ => false,
+        };
+        self.pressure = residual_pressure as u8 + loss_pressure as u8;
+        if let Some(l) = train_loss {
+            self.prev_loss = Some(l);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_parse_grammar() {
+        assert_eq!(BitSchedule::parse("const:4").unwrap(), BitSchedule::Const(4));
+        assert_eq!(BitSchedule::parse("6").unwrap(), BitSchedule::Const(6));
+        assert_eq!(
+            BitSchedule::parse("anneal:8..2").unwrap(),
+            BitSchedule::Anneal { hi: 8, lo: 2 }
+        );
+        assert_eq!(
+            BitSchedule::parse("adaptive").unwrap(),
+            BitSchedule::Adaptive { budget: 0 }
+        );
+        assert_eq!(
+            BitSchedule::parse("adaptive:25000").unwrap(),
+            BitSchedule::Adaptive { budget: 25_000 }
+        );
+        for bad in ["const:0", "const:17", "anneal:2..8", "anneal:8", "x", "0", "adaptive:x"] {
+            assert!(BitSchedule::parse(bad).is_err(), "{bad} should not parse");
+        }
+        assert_eq!(BitSchedule::parse("anneal:8..2").unwrap().name(), "anneal:8..2");
+        assert_eq!(BitSchedule::parse("adaptive").unwrap().name(), "adaptive:auto");
+        assert_eq!(BitSchedule::parse("const:3").unwrap().name(), "const:3");
+    }
+
+    #[test]
+    fn anneal_is_monotone_and_hits_both_ends() {
+        let total = 10;
+        let widths: Vec<u8> = (0..total).map(|t| anneal_bits(8, 2, t, total)).collect();
+        assert_eq!(widths[0], 8);
+        assert_eq!(widths[total - 1], 2);
+        for w in widths.windows(2) {
+            assert!(w[0] >= w[1], "anneal went up: {widths:?}");
+        }
+        // Past the horizon it stays at lo.
+        assert_eq!(anneal_bits(8, 2, 99, total), 2);
+        // Degenerate horizons.
+        assert_eq!(anneal_bits(8, 2, 0, 1), 8);
+        assert_eq!(anneal_bits(8, 2, 1, 1), 2);
+        assert_eq!(anneal_bits(4, 4, 3, 7), 4);
+    }
+
+    #[test]
+    fn layer_map_shapes() {
+        let m = LayerMap::even(100, 3);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.param_count(), 100);
+        assert_eq!(m.segment(0), 0..33);
+        assert_eq!(m.segment(2), 66..100);
+        assert_eq!(m.sizes().iter().sum::<usize>(), 100);
+
+        let w = LayerMap::whole(42);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.segment(0), 0..42);
+
+        let e = LayerMap::from_extents(&[(0, 10), (10, 30), (40, 2)]).unwrap();
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.param_count(), 42);
+        assert!(LayerMap::from_extents(&[(5, 10)]).is_err(), "gap at 0");
+        assert!(LayerMap::from_extents(&[(0, 10), (20, 5)]).is_err(), "hole");
+        assert!(LayerMap::from_extents(&[]).is_err());
+    }
+
+    fn flat_signals(sizes: &[usize]) -> Vec<LayerSignal> {
+        sizes
+            .iter()
+            .map(|&n| LayerSignal {
+                n,
+                norm: (n as f64).sqrt(),
+                bound: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn allocator_respects_budget_and_cap() {
+        let signals = flat_signals(&[1000, 1000, 1000, 1000]);
+        let alloc = BitAllocator::default();
+        for target in [2u8, 4, 6] {
+            let budget: usize = signals.iter().map(|s| segment_cost(s.n, target)).sum();
+            let bits = alloc.allocate(&signals, budget);
+            let spent: usize = signals
+                .iter()
+                .zip(&bits)
+                .map(|(s, &b)| segment_cost(s.n, b))
+                .sum();
+            assert!(spent <= budget, "target {target}: spent {spent} > {budget}");
+            // Equal layers → (nearly) uniform allocation at the target.
+            for &b in &bits {
+                assert!(b.abs_diff(target) <= 1, "target {target}: {bits:?}");
+            }
+        }
+        // A huge budget caps out at MAX_BITS.
+        let bits = alloc.allocate(&signals, usize::MAX);
+        assert_eq!(bits, vec![MAX_BITS; 4]);
+        // A budget below 1-bit cost still emits the 1-bit minimum.
+        let bits = alloc.allocate(&signals, 10);
+        assert_eq!(bits, vec![MIN_BITS; 4]);
+    }
+
+    #[test]
+    fn allocator_spends_bits_where_the_energy_is() {
+        // Layer 0 holds almost all the gradient energy: water-filling at
+        // a mid budget must give it strictly more bits than the tail.
+        let mut signals = flat_signals(&[1000, 1000, 1000, 1000]);
+        signals[0].norm *= 30.0;
+        let budget: usize = signals.iter().map(|s| segment_cost(s.n, 3)).sum();
+        let bits = BitAllocator::default().allocate(&signals, budget);
+        assert!(
+            bits[0] > bits[1] && bits[0] > bits[3],
+            "no concentration: {bits:?}"
+        );
+        // And the total MSE beats the uniform 3-bit split at equal budget.
+        let mse = |widths: &[u8]| -> f64 {
+            signals
+                .iter()
+                .zip(widths)
+                .map(|(s, &b)| expected_mse(b, s.bound, s.norm as f32, s.n))
+                .sum()
+        };
+        assert!(mse(&bits) < mse(&[3, 3, 3, 3]), "water-filling must beat uniform");
+    }
+
+    #[test]
+    fn controller_const_and_anneal_are_uniform_unsegmented() {
+        let map = LayerMap::even(1000, 4);
+        let mut c = BitController::new(BitSchedule::Const(4), map.clone());
+        let p = c.plan(0, 10);
+        assert!(!p.segmented);
+        assert_eq!(p.uniform_width(), Some(4));
+        assert_eq!(p.bounds, vec![0, 1000]);
+
+        let mut a = BitController::new(BitSchedule::Anneal { hi: 8, lo: 2 }, map);
+        assert_eq!(a.plan(0, 10).uniform_width(), Some(8));
+        assert_eq!(a.plan(9, 10).uniform_width(), Some(2));
+        assert!(!a.plan(5, 10).segmented);
+    }
+
+    #[test]
+    fn controller_adaptive_uses_observations() {
+        let map = LayerMap::even(4000, 4);
+        let mut c = BitController::new(BitSchedule::Adaptive { budget: 0 }, map.clone());
+        assert_eq!(c.effective_budget(), uniform_cost(&map, 4));
+        let cold = c.plan(0, 10);
+        assert!(cold.segmented);
+        assert_eq!(cold.bits.len(), 4);
+        // Feed observations where layer 3 has all the energy.
+        let obs: Vec<SegmentObs> = (0..4)
+            .map(|l| SegmentObs {
+                n: 1000,
+                bits: cold.bits[l],
+                norm: if l == 3 { 100.0 } else { 1.0 },
+                bound: 0.1,
+            })
+            .collect();
+        c.observe(&obs, 0.0, Some(1.0));
+        let warm = c.plan(1, 10);
+        assert!(
+            warm.bits[3] > warm.bits[0],
+            "energy concentration ignored: {:?}",
+            warm.bits
+        );
+        // Plans stay within budget.
+        let spent: usize = (0..4).map(|l| segment_cost(1000, warm.bits[l])).sum();
+        assert!(spent <= c.effective_budget());
+    }
+
+    #[test]
+    fn controller_pressure_raises_the_floor() {
+        let map = LayerMap::even(8000, 8);
+        let budget = uniform_cost(&map, 2);
+        let mut c = BitController::new(BitSchedule::Adaptive { budget }, map.clone());
+        let obs: Vec<SegmentObs> = (0..8)
+            .map(|l| SegmentObs {
+                n: 1000,
+                bits: 2,
+                norm: if l == 0 { 50.0 } else { 1.0 },
+                bound: 0.1,
+            })
+            .collect();
+        // Healthy round: tiny residual, improving loss.
+        c.observe(&obs, 0.0, Some(1.0));
+        let healthy = c.plan(1, 10);
+        let starved = healthy.bits.iter().filter(|&&b| b == 1).count();
+        assert!(starved > 0, "tight budget should starve tail layers: {:?}", healthy.bits);
+        // Pressure round: residual holds most of the energy AND the loss
+        // went up → the floor rises to 3 wherever the budget allows.
+        c.observe(&obs, 1000.0, Some(2.0));
+        let pressured = c.plan(2, 10);
+        assert!(
+            pressured.bits.iter().filter(|&&b| b == 1).count() < starved,
+            "pressure must lift starved layers: {:?} -> {:?}",
+            healthy.bits,
+            pressured.bits
+        );
+    }
+
+    #[test]
+    fn segment_costs_count_headers() {
+        assert_eq!(segment_cost(8, 1), HEADER_BYTES + 1);
+        assert_eq!(segment_cost(1000, 4), HEADER_BYTES + 500);
+        let map = LayerMap::even(1000, 2);
+        assert_eq!(uniform_cost(&map, 4), 2 * HEADER_BYTES + 250 + 250);
+    }
+}

@@ -256,6 +256,28 @@ pub fn quantize_cosine_biased(
     }
 }
 
+/// Analytic quantization-MSE estimate for a cosine-quantized tensor —
+/// the per-layer error signal the adaptive bit controller water-fills
+/// against ([`crate::compress::allocator`]).
+///
+/// Per element the angle error is at most `step/2` where
+/// `step = (π − 2b)/(2^s − 1)`, which maps to a value error of roughly
+/// `‖g‖·step/2·|sin θ|`; averaging `sin²` over the quantization interval
+/// gives the `n/3` factor — the same envelope the round-trip accuracy
+/// tests assert (`sqrt(n/3)·q/2` relative error). This is an *estimate*
+/// computable from wire-header scalars alone (`bits`, `bound`, `norm`,
+/// `n`) — no payload access, no decode.
+pub fn expected_mse(bits: u8, bound: f32, norm: f32, n: usize) -> f64 {
+    if bits >= 32 || n == 0 {
+        return 0.0; // float32 passthrough is lossless
+    }
+    let max_code = ((1u64 << bits) - 1) as f64;
+    let range = (PI - 2.0 * bound).max(0.0) as f64;
+    let step = range / max_code;
+    let per_elem = norm as f64 * step / 2.0;
+    n as f64 / 3.0 * per_elem * per_elem
+}
+
 // ---------------------------------------------------------------------------
 // Dequantize LUTs.
 // ---------------------------------------------------------------------------
@@ -512,6 +534,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn expected_mse_tracks_width_and_energy() {
+        // Monotone decreasing in bits, quadratic in norm, linear in n.
+        let base = expected_mse(4, 0.1, 1.0, 1000);
+        assert!(base > 0.0);
+        assert!(expected_mse(5, 0.1, 1.0, 1000) < base);
+        assert!(expected_mse(3, 0.1, 1.0, 1000) > base);
+        assert!((expected_mse(4, 0.1, 2.0, 1000) / base - 4.0).abs() < 1e-9);
+        assert!((expected_mse(4, 0.1, 1.0, 2000) / base - 2.0).abs() < 1e-9);
+        // Lossless and degenerate cases.
+        assert_eq!(expected_mse(32, 0.1, 1.0, 1000), 0.0);
+        assert_eq!(expected_mse(4, 0.1, 1.0, 0), 0.0);
+        // A wider bound shrinks the quantized range and the error.
+        assert!(expected_mse(4, 0.5, 1.0, 1000) < base);
     }
 
     #[test]

@@ -63,6 +63,7 @@
 //! arm; the pipeline, wire format, figures and cost ledgers pick it up
 //! unchanged.
 
+pub mod allocator;
 pub mod bitpack;
 pub mod cosine;
 pub mod deflate;
@@ -78,6 +79,7 @@ pub mod sparsify;
 pub mod topk;
 pub mod wire;
 
+pub use allocator::{BitController, BitPlan, BitSchedule, LayerMap, SegmentObs};
 pub use kernel::KernelScratch;
 pub use pipeline::{
     accumulate_with, decode, decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline,

@@ -156,6 +156,26 @@ impl Pipeline {
         self
     }
 
+    /// The same pipeline at a different code width — what the adaptive
+    /// bit controller ([`super::allocator`]) reconfigures per round /
+    /// per layer. Rounding, bound mode and every structural stage are
+    /// preserved; at the current width this is an exact clone, so
+    /// `const:<b>` schedules stay byte-identical to the fixed-width
+    /// path. Fixed-width quantizers (the sign family, float32
+    /// passthrough) ignore the request — their width is their identity.
+    pub fn with_bits(&self, bits: u8) -> Pipeline {
+        if bits == self.quantizer.bits() {
+            return self.clone();
+        }
+        let mut out = self.clone();
+        if let Some(cq) = self.quantizer.as_any().downcast_ref::<CosineQuantizer>() {
+            out.quantizer = Arc::new(CosineQuantizer::new(bits, cq.rounding, cq.bound));
+        } else if let Some(lq) = self.quantizer.as_any().downcast_ref::<LinearQuantizer>() {
+            out.quantizer = Arc::new(LinearQuantizer::new(bits, lq.rounding, lq.bound));
+        }
+        out
+    }
+
     /// The quantizer stage (for introspection / kernel offload).
     pub fn quantizer(&self) -> &dyn Quantizer {
         self.quantizer.as_ref()
@@ -896,6 +916,41 @@ mod tests {
                 assert_eq!(d1, d2, "{} n={size}", pipe.name());
             }
         }
+    }
+
+    #[test]
+    fn with_bits_preserves_configuration() {
+        // Same width → exact clone (the const-schedule identity).
+        let base = Pipeline::cosine_with(4, Rounding::Unbiased, BoundMode::Auto)
+            .with_sparsify(0.5)
+            .without_deflate();
+        let same = base.with_bits(4);
+        assert_eq!(same.name(), base.name());
+        let mut rng1 = Pcg64::seeded(7);
+        let mut rng2 = Pcg64::seeded(7);
+        let g = gradient_like(&mut Pcg64::seeded(1), 500);
+        let a = base.encode(&g, Direction::Uplink, &mut state(), &mut rng1);
+        let b = same.encode(&g, Direction::Uplink, &mut state(), &mut rng2);
+        assert_eq!(a, b);
+        // New width keeps rounding/bound/stages; only the width moves.
+        let wide = base.with_bits(8);
+        assert_eq!(wide.bits(), 8);
+        assert_eq!(wide.name(), "cosine-8 (U) @50%");
+        // Reconfigured == constructed from scratch.
+        let direct = Pipeline::cosine_with(8, Rounding::Unbiased, BoundMode::Auto)
+            .with_sparsify(0.5)
+            .without_deflate();
+        let c = wide.encode(&g, Direction::Uplink, &mut state(), &mut Pcg64::seeded(7));
+        let d = direct.encode(&g, Direction::Uplink, &mut state(), &mut Pcg64::seeded(7));
+        assert_eq!(c, d);
+        // Fixed-width schemes ignore the request.
+        assert_eq!(Pipeline::sign().with_bits(4).bits(), 1);
+        assert_eq!(Pipeline::float32().with_bits(4).bits(), 32);
+        // Linear keeps its rounding too.
+        assert_eq!(
+            Pipeline::linear(4, Rounding::Unbiased).with_bits(2).name(),
+            "linear-2 (U) +deflate"
+        );
     }
 
     #[test]

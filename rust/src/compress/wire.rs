@@ -47,6 +47,13 @@ const KNOWN_FLAGS: u8 = FLAG_DEFLATED | FLAG_ROTATED;
 /// Serialize an encoded tensor to wire bytes.
 pub fn serialize(enc: &EncodedTensor) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_BYTES + enc.payload.len());
+    serialize_into(enc, &mut out);
+    out
+}
+
+/// Append one frame's wire bytes to `out` (no intermediate allocation —
+/// the segment-stream encode path appends straight into one buffer).
+pub fn serialize_into(enc: &EncodedTensor, out: &mut Vec<u8>) {
     out.extend_from_slice(&MAGIC);
     out.push(enc.kind_id);
     out.push(enc.bits);
@@ -67,13 +74,55 @@ pub fn serialize(enc: &EncodedTensor) -> Vec<u8> {
     out.extend_from_slice(&enc.bound.to_le_bytes());
     out.extend_from_slice(&(enc.payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&enc.payload);
+}
+
+/// Serialize a *stream* of encoded tensors: the segments of one logical
+/// update, concatenated. Each CSG2 frame is self-describing (its header
+/// carries `payload_len`), so the stream needs no extra framing — the
+/// receiver walks it with [`deserialize_stream`]. A single-segment stream
+/// is byte-identical to [`serialize`] — the adaptive bit controller's
+/// mixed-width payloads and the legacy single-frame payloads share one
+/// wire grammar.
+pub fn serialize_stream(segments: &[EncodedTensor]) -> Vec<u8> {
+    let total: usize = segments.iter().map(|s| HEADER_BYTES + s.payload.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for seg in segments {
+        serialize_into(seg, &mut out);
+    }
     out
+}
+
+/// Parse one frame off the front of `bytes`, tolerating trailing data
+/// (the next segments of a stream). Returns the tensor and the bytes
+/// consumed.
+pub fn deserialize_prefix(bytes: &[u8]) -> Result<(EncodedTensor, usize)> {
+    let enc = parse_one(bytes, false)?;
+    let consumed = HEADER_BYTES + enc.payload.len();
+    Ok((enc, consumed))
+}
+
+/// Parse a whole stream of concatenated CSG2 frames (at least one; every
+/// byte must belong to a frame).
+pub fn deserialize_stream(bytes: &[u8]) -> Result<Vec<EncodedTensor>> {
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while at < bytes.len() {
+        let (enc, used) = deserialize_prefix(&bytes[at..])?;
+        out.push(enc);
+        at += used;
+    }
+    ensure!(!out.is_empty(), "empty frame stream");
+    Ok(out)
 }
 
 /// Parse wire bytes back into an [`EncodedTensor`], rejecting malformed
 /// headers (bad magic, unknown quantizer identity, unknown flags,
 /// truncated or oversized payload).
 pub fn deserialize(bytes: &[u8]) -> Result<EncodedTensor> {
+    parse_one(bytes, true)
+}
+
+fn parse_one(bytes: &[u8], exact: bool) -> Result<EncodedTensor> {
     ensure!(bytes.len() >= HEADER_BYTES, "short frame: {}", bytes.len());
     if bytes[0..4] == MAGIC_V1 {
         bail!("legacy CSG1 frame: this build speaks CSG2 (same 44-byte header; see compress::wire)");
@@ -96,12 +145,21 @@ pub fn deserialize(bytes: &[u8]) -> Result<EncodedTensor> {
     let kept = u32_at(12);
     ensure!(kept <= n.max(1), "kept {kept} > n {n}");
     let payload_len = u32_at(40) as usize;
-    ensure!(
-        bytes.len() == HEADER_BYTES + payload_len,
-        "length mismatch: {} vs {}",
-        bytes.len(),
-        HEADER_BYTES + payload_len
-    );
+    if exact {
+        ensure!(
+            bytes.len() == HEADER_BYTES + payload_len,
+            "length mismatch: {} vs {}",
+            bytes.len(),
+            HEADER_BYTES + payload_len
+        );
+    } else {
+        ensure!(
+            bytes.len() >= HEADER_BYTES + payload_len,
+            "truncated frame: {} < {}",
+            bytes.len(),
+            HEADER_BYTES + payload_len
+        );
+    }
     Ok(EncodedTensor {
         direction,
         kind_id,
@@ -114,7 +172,7 @@ pub fn deserialize(bytes: &[u8]) -> Result<EncodedTensor> {
         norm: f32_at(32),
         bound: f32_at(36),
         deflated: flags & FLAG_DEFLATED != 0,
-        payload: bytes[HEADER_BYTES..].to_vec(),
+        payload: bytes[HEADER_BYTES..HEADER_BYTES + payload_len].to_vec(),
     })
 }
 
@@ -202,6 +260,34 @@ mod tests {
         bytes[0..4].copy_from_slice(&MAGIC_V1);
         let err = deserialize(&bytes).unwrap_err().to_string();
         assert!(err.contains("CSG1"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn stream_roundtrip_and_prefix_parsing() {
+        // A stream of three segments with THREE different widths: the
+        // self-describing headers carry the split.
+        let mut rng = Pcg64::seeded(321);
+        let mut segs = Vec::new();
+        for bits in [2u8, 5, 8] {
+            let g = gradient_like(&mut rng, 300 + bits as usize);
+            let pipe = Pipeline::cosine(bits);
+            segs.push(pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng));
+        }
+        let stream = serialize_stream(&segs);
+        // Single-segment stream == plain serialize, byte for byte.
+        assert_eq!(serialize_stream(&segs[..1]), serialize(&segs[0]));
+        // Prefix parse peels exactly the first frame.
+        let (first, used) = deserialize_prefix(&stream).unwrap();
+        assert_eq!(first, segs[0]);
+        assert_eq!(used, HEADER_BYTES + segs[0].payload.len());
+        // Full stream parse recovers every segment in order.
+        let back = deserialize_stream(&stream).unwrap();
+        assert_eq!(back, segs);
+        // Strict deserialize still rejects trailing bytes.
+        assert!(deserialize(&stream).is_err());
+        // A truncated tail poisons the stream parse.
+        assert!(deserialize_stream(&stream[..stream.len() - 1]).is_err());
+        assert!(deserialize_stream(&[]).is_err());
     }
 
     #[test]

@@ -42,10 +42,11 @@ pub fn run(engine: &Engine, opts: &FigOpts) -> Result<()> {
             &params,
             1e-3,
             &crate::compress::Pipeline::float32(),
+            None,
             false,
         )?;
         // Decode the float32 payload back to the dense delta.
-        let delta = crate::compress::decode(&up.encoded)?;
+        let delta = crate::compress::decode(&up.segments[0])?;
         all_delta.extend(delta);
     }
     println!("collected {} gradient values", all_delta.len());

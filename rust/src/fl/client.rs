@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use crate::compress::allocator::BitPlan;
 use crate::compress::pipeline::{
     Direction, EncodeScratch, EncodedTensor, Pipeline, PipelineState,
 };
@@ -71,13 +72,33 @@ pub struct Client {
     /// the compression stages. Client-private, so the runner's parallel
     /// fan-out needs no synchronization around it.
     scratch: EncodeScratch,
+    /// Per-layer pipeline memory for segmented (adaptive bit-schedule)
+    /// uplinks: each layer segment is its own encode call, so each keeps
+    /// its own EF residual. Empty until the first segmented round.
+    seg_states: Vec<PipelineState>,
 }
 
-/// The result of one local round.
+/// The result of one local round: the update as one or more CSG2
+/// segments (a single whole-tensor frame on the legacy and uniform
+/// bit-schedule paths; one segment per layer — mixed widths allowed —
+/// under an adaptive schedule), plus the signals the bit controller
+/// reads.
 pub struct LocalUpdate {
-    pub encoded: EncodedTensor,
+    /// The encoded segments, in layer order; `wire::serialize_stream`
+    /// turns them into the frame payload.
+    pub segments: Vec<EncodedTensor>,
     pub num_examples: u32,
     pub train_loss: f32,
+    /// ‖EF residual‖₂ after this encode (0 when error feedback is off) —
+    /// one of the adaptive controller's pressure signals.
+    pub residual_norm: f64,
+}
+
+impl LocalUpdate {
+    /// The serialized frame payload (all segments, concatenated).
+    pub fn payload(&self) -> Vec<u8> {
+        wire::serialize_stream(&self.segments)
+    }
 }
 
 impl Client {
@@ -89,6 +110,7 @@ impl Client {
             rng,
             cache: None,
             scratch: EncodeScratch::new(),
+            seg_states: Vec::new(),
         }
     }
 
@@ -105,7 +127,10 @@ impl Client {
         out
     }
 
-    /// Run one local round and compress the update.
+    /// Run one local round and compress the update. `plan` is the bit
+    /// controller's segmented layer plan for this round (`None` on the
+    /// legacy path and for uniform-width schedules, whose width is
+    /// already baked into `uplink` via [`Pipeline::with_bits`]).
     #[allow(clippy::too_many_arguments)]
     pub fn run_round<T: SynthTask>(
         &mut self,
@@ -116,6 +141,7 @@ impl Client {
         global_params: &[f32],
         lr: f32,
         uplink: &Pipeline,
+        plan: Option<&BitPlan>,
         use_kernel_quantizer: bool,
     ) -> Result<LocalUpdate> {
         if self.cache.is_none() {
@@ -126,22 +152,83 @@ impl Client {
         let (delta, train_loss) =
             engine.local_round(artifact, global_params, x, y, perms, lr)?;
 
-        let encoded = if use_kernel_quantizer {
-            self.encode_via_kernel(engine, &delta, uplink)?
-        } else {
-            uplink.encode_with(
-                &delta,
-                Direction::Uplink,
-                &mut self.state,
-                &mut self.rng,
-                &mut self.scratch,
-            )
+        let segments = match plan {
+            Some(p) if p.segmented => {
+                anyhow::ensure!(
+                    !use_kernel_quantizer,
+                    "the Pallas kernel path supports only uniform bit widths"
+                );
+                self.encode_segmented(&delta, uplink, p)?
+            }
+            _ => {
+                let enc = if use_kernel_quantizer {
+                    self.encode_via_kernel(engine, &delta, uplink)?
+                } else {
+                    uplink.encode_with(
+                        &delta,
+                        Direction::Uplink,
+                        &mut self.state,
+                        &mut self.rng,
+                        &mut self.scratch,
+                    )
+                };
+                vec![enc]
+            }
         };
         Ok(LocalUpdate {
-            encoded,
+            segments,
             num_examples: self.shard.len() as u32,
             train_loss,
+            residual_norm: self.residual_norm(uplink),
         })
+    }
+
+    /// Encode one update as per-layer CSG2 segments at the plan's widths.
+    /// Every segment is an independent pipeline pass over its slice of
+    /// the delta (its own EF residual lane, its own mask/rotation seeds
+    /// from this client's RNG), so mixed widths compose with every stage.
+    fn encode_segmented(
+        &mut self,
+        delta: &[f32],
+        uplink: &Pipeline,
+        plan: &BitPlan,
+    ) -> Result<Vec<EncodedTensor>> {
+        anyhow::ensure!(
+            plan.bounds.last() == Some(&delta.len()) && plan.bounds.len() == plan.bits.len() + 1,
+            "bit plan does not cover the update ({:?} segments over {} params)",
+            plan.bits.len(),
+            delta.len()
+        );
+        if self.seg_states.len() != plan.bits.len() {
+            self.seg_states = vec![PipelineState::new(); plan.bits.len()];
+        }
+        let mut segs = Vec::with_capacity(plan.bits.len());
+        for (l, &bits) in plan.bits.iter().enumerate() {
+            let pipe = uplink.with_bits(bits);
+            segs.push(pipe.encode_with(
+                &delta[plan.bounds[l]..plan.bounds[l + 1]],
+                Direction::Uplink,
+                &mut self.seg_states[l],
+                &mut self.rng,
+                &mut self.scratch,
+            ));
+        }
+        Ok(segs)
+    }
+
+    /// ‖EF residual‖₂ across all pipeline state lanes (0 when EF is off).
+    fn residual_norm(&self, uplink: &Pipeline) -> f64 {
+        if !uplink.error_feedback {
+            return 0.0;
+        }
+        let sq: f64 = self
+            .seg_states
+            .iter()
+            .chain(std::iter::once(&self.state))
+            .flat_map(|s| s.residual.iter())
+            .map(|&r| (r as f64) * (r as f64))
+            .sum();
+        sq.sqrt()
     }
 
     /// Quantize through the Pallas kernel artifacts (L1 on the hot path):

@@ -5,6 +5,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::compress::allocator::BitSchedule;
 use crate::compress::Pipeline;
 use crate::sim::SimConfig;
 use crate::util::json::Json;
@@ -65,6 +66,12 @@ pub struct FlConfig {
     pub round_cfg_key: String,
     /// Uplink (gradient) compression pipeline.
     pub uplink: Pipeline,
+    /// Bit-width schedule driving the uplink quantizer across the round
+    /// loop (`--bits const:<b>|anneal:<hi>..<lo>|adaptive[:<budget>]`).
+    /// `None` = legacy fixed width (exactly the `uplink` pipeline's).
+    /// `const:<b>` through the controller is bit-identical to the legacy
+    /// path; `adaptive` emits per-layer mixed-width CSG2 segment streams.
+    pub bit_schedule: Option<BitSchedule>,
     /// Downlink (model broadcast) policy; [`Downlink::Float32Model`]
     /// reproduces the paper's uncompressed-broadcast cost accounting.
     pub downlink: Downlink,
@@ -114,6 +121,7 @@ impl FlConfig {
             round_artifact: "mnist_round".into(),
             round_cfg_key: "mnist".into(),
             uplink: Pipeline::float32(),
+            bit_schedule: None,
             downlink: Downlink::Float32Model,
             eta_s: 1.0,
             client_lr: if non_iid {
@@ -145,6 +153,7 @@ impl FlConfig {
             round_artifact: "cifar_round".into(),
             round_cfg_key: "cifar".into(),
             uplink: Pipeline::float32(),
+            bit_schedule: None,
             downlink: Downlink::Float32Model,
             eta_s: 1.0,
             client_lr: LrSchedule::Cosine {
@@ -186,13 +195,10 @@ impl FlConfig {
             round_artifact: "unet_round".into(),
             round_cfg_key: "unet".into(),
             uplink: Pipeline::float32(),
+            bit_schedule: None,
             downlink: Downlink::Float32Model,
             eta_s: 1.0,
-            client_lr: LrSchedule::CosineWarmRestarts {
-                base: 1e-3,
-                total: 100,
-                restarts: vec![20, 60],
-            },
+            client_lr: LrSchedule::cosine_warm_restarts(1e-3, 100, vec![20, 60]),
             seed: 42,
             eval_every: 5,
             use_kernel_quantizer: false,
@@ -226,6 +232,8 @@ impl FlConfig {
                     *r = ((*r as f64) * scale).round() as usize;
                 }
                 restarts.retain(|&r| r > 0 && r < rounds);
+                // Aggressive downscaling can collide neighbors.
+                restarts.dedup();
                 *total = rounds;
             }
             LrSchedule::Const(_) => {}
@@ -262,6 +270,14 @@ impl FlConfig {
         self
     }
 
+    /// Drive the uplink quantizer's width from a [`BitSchedule`]
+    /// (`--bits const:<b>|anneal:<hi>..<lo>|adaptive[:<budget>]`) instead
+    /// of the pipeline's fixed width.
+    pub fn with_bit_schedule(mut self, schedule: BitSchedule) -> Self {
+        self.bit_schedule = Some(schedule);
+        self
+    }
+
     /// Resolve [`Self::client_threads`] (`0` → available parallelism).
     pub fn effective_threads(&self) -> usize {
         match self.client_threads {
@@ -286,6 +302,10 @@ impl FlConfig {
             .set("n_clients", self.n_clients)
             .set("participation", self.participation)
             .set("uplink", self.uplink.name())
+            .set(
+                "bits",
+                self.bit_schedule.map_or("fixed".to_string(), |s| s.name()),
+            )
             .set("downlink", self.downlink.name())
             .set("seed", self.seed)
             .set("threads", self.client_threads)
@@ -358,6 +378,18 @@ mod tests {
         assert_eq!(sim.tiers.len(), 6);
         let described = cfg.describe().get("sim").unwrap().as_str().unwrap().to_string();
         assert!(described.contains("6 tiers"), "{described}");
+    }
+
+    #[test]
+    fn bit_schedule_builder_and_describe() {
+        let cfg = FlConfig::mnist(false);
+        assert!(cfg.bit_schedule.is_none());
+        assert_eq!(cfg.describe().get("bits").unwrap().as_str(), Some("fixed"));
+        let cfg = cfg.with_bit_schedule(BitSchedule::Anneal { hi: 8, lo: 2 });
+        assert_eq!(
+            cfg.describe().get("bits").unwrap().as_str(),
+            Some("anneal:8..2")
+        );
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub struct RoundRecord {
     /// Delivered updates the server discarded as stale in this round
     /// (buffered-async aggregation windows; always 0 in synchronous mode).
     pub stale_updates: usize,
+    /// Quantizer widths the bit controller chose for this round — one
+    /// entry per layer segment (a single entry for uniform schedules;
+    /// empty on the legacy fixed-width path).
+    pub bits: Vec<u8>,
 }
 
 /// A labelled series of round records.
@@ -75,6 +79,11 @@ impl History {
                                 .set("downlink_bytes", r.downlink_bytes)
                                 .set("clients", r.clients)
                                 .set("stale_updates", r.stale_updates);
+                            if !r.bits.is_empty() {
+                                let widths: Vec<usize> =
+                                    r.bits.iter().map(|&b| b as usize).collect();
+                                j = j.set("bits", Json::from_usize_slice(&widths));
+                            }
                             if let Some(m) = r.eval_metric {
                                 j = j.set("eval_metric", m);
                             }
@@ -117,6 +126,7 @@ mod tests {
             downlink_bytes: round as u64 * 400,
             clients: 10,
             stale_updates: 0,
+            bits: vec![4],
         }
     }
 
@@ -143,6 +153,9 @@ mod tests {
         assert_eq!(recs[0].get("round").unwrap().as_usize(), Some(0));
         assert_eq!(recs[0].get("eval_metric").unwrap().as_f64(), Some(0.25));
         assert_eq!(recs[0].get("downlink_bytes").unwrap().as_u64(), Some(0));
+        let bits = recs[0].get("bits").unwrap().as_arr().unwrap();
+        assert_eq!(bits.len(), 1);
+        assert_eq!(bits[0].as_usize(), Some(4));
     }
 
     #[test]

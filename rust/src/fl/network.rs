@@ -40,10 +40,19 @@ impl NetworkLedger {
 
     /// `receivers` identical broadcasts of `bytes` each, folded in O(1):
     /// the per-round fan-out must not cost O(fleet) ledger calls at
-    /// million-client scale.
+    /// million-client scale. At that scale the product can also overflow
+    /// u64 (a multi-GB model × a million-device fleet × many rounds), so
+    /// the fold is checked: overflow saturates (and trips a debug
+    /// assertion) instead of silently wrapping the ledger back toward
+    /// zero — a saturated ledger reads as "at least this much", a
+    /// wrapped one reads as almost nothing.
     pub fn record_downlink_n(&mut self, bytes: usize, receivers: usize) {
-        self.downlink_bytes += bytes as u64 * receivers as u64;
-        self.downlink_messages += receivers as u64;
+        let total = (bytes as u64).checked_mul(receivers as u64).unwrap_or_else(|| {
+            debug_assert!(false, "downlink fan-out overflow: {bytes} B × {receivers}");
+            u64::MAX
+        });
+        self.downlink_bytes = self.downlink_bytes.saturating_add(total);
+        self.downlink_messages = self.downlink_messages.saturating_add(receivers as u64);
     }
 
     /// Mean uplink bytes per message.
@@ -124,6 +133,32 @@ mod tests {
         bulk.record_downlink_n(999, 0);
         assert_eq!(bulk.downlink_bytes, looped.downlink_bytes);
         assert_eq!(bulk.downlink_messages, looped.downlink_messages);
+    }
+
+    #[test]
+    fn bulk_downlink_near_overflow_is_exact() {
+        // Million-fleet × multi-GB model: the product brushes against
+        // u64::MAX but still fits — the checked path must stay exact.
+        // 2^40 bytes (1 TiB of frames) × 2^23 receivers = 2^63 exactly.
+        let mut n = NetworkLedger::new();
+        n.record_downlink_n(1usize << 40, 1usize << 23);
+        assert_eq!(n.downlink_bytes, 1u64 << 63);
+        assert_eq!(n.downlink_messages, 1u64 << 23);
+        // A second near-max fold saturates the running total instead of
+        // wrapping it back toward zero.
+        n.record_downlink_n(1usize << 40, 1usize << 23);
+        assert_eq!(n.downlink_bytes, u64::MAX);
+    }
+
+    // The product-overflow fallback trips a debug assertion by design, so
+    // the saturation behavior itself is only testable in release builds.
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn bulk_downlink_product_overflow_saturates() {
+        let mut n = NetworkLedger::new();
+        n.record_downlink_n(usize::MAX, 3);
+        assert_eq!(n.downlink_bytes, u64::MAX);
+        assert_eq!(n.downlink_messages, 3);
     }
 
     #[test]

@@ -54,7 +54,8 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::compress::wire;
+use crate::compress::allocator::{BitController, BitPlan, LayerMap};
+use crate::compress::Pipeline;
 use crate::data::partition::{self, eval_set};
 use crate::data::synth::{SynthCifar, SynthMnist, SynthTask, SynthVolume};
 use crate::runtime::manifest::{init_params, RoundCfg};
@@ -149,6 +150,35 @@ fn run_task<T: SynthTask>(
         Some(s) => Box::new(SimTransport::new(s, cfg.n_clients, cfg.seed)),
         None => Box::new(Loopback::new()),
     };
+    // Adaptive bit control: the layer map comes from the model manifest's
+    // flat-parameter layout, so "per-layer" means real model layers.
+    let mut controller = match cfg.bit_schedule {
+        Some(schedule) => {
+            // Schedules reconfigure the quantizer width per round; the
+            // sign family and float32 passthrough have no width to move
+            // (`Pipeline::with_bits` is a no-op for them), so a schedule
+            // there would silently never run — refuse it instead.
+            let q = cfg.uplink.quantizer().id();
+            anyhow::ensure!(
+                q == crate::compress::quantizer::ids::COSINE
+                    || q == crate::compress::quantizer::ids::LINEAR,
+                "--bits schedules need a variable-width quantizer (cosine or linear), \
+                 not {}",
+                cfg.uplink.name()
+            );
+            let extents: Vec<(usize, usize)> =
+                model.layers.iter().map(|l| (l.offset, l.size)).collect();
+            // Non-contiguous manifests degrade to one whole-tensor
+            // segment: every schedule still works, `adaptive` just loses
+            // its per-layer granularity.
+            let map = LayerMap::from_extents(&extents)
+                .ok()
+                .filter(|m| m.param_count() == model.param_count)
+                .unwrap_or_else(|| LayerMap::whole(model.param_count));
+            Some(BitController::new(schedule, map))
+        }
+        None => None,
+    };
     // Every client trains the same artifact schedule per round.
     let examples_per_round = (round_cfg.steps() * round_cfg.batch) as u64;
     let per_round = cfg.clients_per_round();
@@ -169,6 +199,7 @@ fn run_task<T: SynthTask>(
             &mut selector,
             transport.as_mut(),
             &mut history,
+            &mut controller,
             examples_per_round,
             per_round,
             label,
@@ -188,6 +219,7 @@ fn run_task<T: SynthTask>(
             &mut selector,
             transport.as_mut(),
             &mut history,
+            &mut controller,
             examples_per_round,
             per_round,
             label,
@@ -224,12 +256,18 @@ fn run_sync_rounds<T: SynthTask>(
     selector: &mut Pcg64,
     transport: &mut dyn Transport,
     history: &mut History,
+    controller: &mut Option<BitController>,
     examples_per_round: u64,
     per_round: usize,
     label: &str,
 ) -> Result<()> {
     for t in 0..cfg.rounds {
         let lr = cfg.client_lr.at(t) as f32;
+        // The bit controller picks this round's widths; a uniform plan
+        // collapses to the legacy single-frame path (bit-identical for
+        // `const:<b>` — same pipeline config, same RNG draws).
+        let bit_plan = controller.as_mut().map(|c| c.plan(t, cfg.rounds));
+        let (eff_uplink, seg_plan) = effective_uplink(&cfg.uplink, bit_plan.as_ref());
         let broadcast = server.broadcast()?;
         let delta_mode = broadcast.wire.is_some();
         if let Some(frame) = &broadcast.wire {
@@ -276,19 +314,23 @@ fn run_sync_rounds<T: SynthTask>(
                     round_cfg,
                     global_model,
                     lr,
-                    &cfg.uplink,
+                    &eff_uplink,
+                    seg_plan,
                     cfg.use_kernel_quantizer,
                 )?;
-                Ok((wire::serialize(&update.encoded), update.train_loss))
+                Ok((update.payload(), update.train_loss, update.residual_norm))
             },
         )?;
+        let mut residual_sum = 0.0f64;
+        let trained = locals.len();
         let mut loss_of: HashMap<usize, f32> = HashMap::with_capacity(locals.len());
         let frames: Vec<Frame> = plan
             .active
             .iter()
             .zip(locals)
-            .map(|(&ci, (payload, train_loss))| {
+            .map(|(&ci, (payload, train_loss, residual))| {
                 loss_of.insert(ci, train_loss);
+                residual_sum += residual;
                 Frame {
                     round,
                     client_id: ci,
@@ -315,6 +357,17 @@ fn run_sync_rounds<T: SynthTask>(
                 ),
             }
         }
+        let train_loss = loss_sum / n_kept.max(1) as f64;
+        // Close the feedback loop BEFORE the round closes (observations
+        // reset with it): the accepted segments' wire headers, the mean
+        // client EF-residual norm, and the round's mean train loss.
+        if let Some(c) = controller.as_mut() {
+            c.observe(
+                &server.round_observations(),
+                residual_sum / trained.max(1) as f64,
+                Some(train_loss),
+            );
+        }
         server.finish_round();
 
         let (metric, eval_loss) = if eval_due(cfg, t + 1) {
@@ -335,13 +388,14 @@ fn run_sync_rounds<T: SynthTask>(
         let ledger = transport.ledger();
         let rec = RoundRecord {
             round: t + 1,
-            train_loss: loss_sum / n_kept.max(1) as f64,
+            train_loss,
             eval_metric: metric,
             eval_loss,
             uplink_bytes: ledger.uplink_bytes,
             downlink_bytes: ledger.downlink_bytes,
             clients: n_kept,
             stale_updates: 0,
+            bits: bit_plan.map(|p| p.bits).unwrap_or_default(),
         };
         if cfg.verbose {
             let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
@@ -362,6 +416,21 @@ fn run_sync_rounds<T: SynthTask>(
     Ok(())
 }
 
+/// Resolve one round's effective uplink from the bit controller's plan:
+/// a uniform plan bakes its width into the pipeline (the legacy
+/// single-frame path, byte-identical for `const:<b>`); a segmented plan
+/// keeps the base pipeline and hands the per-layer widths to the client.
+fn effective_uplink<'a>(
+    base: &Pipeline,
+    plan: Option<&'a BitPlan>,
+) -> (Pipeline, Option<&'a BitPlan>) {
+    match plan {
+        None => (base.clone(), None),
+        Some(p) if !p.segmented => (base.with_bits(p.bits[0]), None),
+        Some(p) => (base.clone(), Some(p)),
+    }
+}
+
 /// FedBuff-style buffered-async windows: dispatch / arrival event loop.
 #[allow(clippy::too_many_arguments)]
 fn run_async_windows<T: SynthTask>(
@@ -379,6 +448,7 @@ fn run_async_windows<T: SynthTask>(
     selector: &mut Pcg64,
     transport: &mut dyn Transport,
     history: &mut History,
+    controller: &mut Option<BitController>,
     examples_per_round: u64,
     per_round: usize,
     label: &str,
@@ -402,6 +472,11 @@ fn run_async_windows<T: SynthTask>(
         .min(clients.len());
     let mut busy = vec![false; clients.len()];
     let mut loss_of = vec![0.0f32; clients.len()];
+    let mut residual_of = vec![0.0f64; clients.len()];
+    // The widths of the open window; refreshed at every window close, so
+    // a plan change lands mid-stream — in-flight frames keep the widths
+    // they were encoded with (self-describing headers).
+    let mut bit_plan = controller.as_mut().map(|c| c.plan(0, cfg.rounds));
 
     // Initial broadcast (model version 0).
     let mut broadcast = server.broadcast()?;
@@ -418,6 +493,7 @@ fn run_async_windows<T: SynthTask>(
         } else {
             &server.params
         };
+        let (eff_uplink, seg) = effective_uplink(&cfg.uplink, bit_plan.as_ref());
         dispatch_one(
             cfg,
             engine,
@@ -426,10 +502,13 @@ fn run_async_windows<T: SynthTask>(
             clients,
             &mut busy,
             &mut loss_of,
+            &mut residual_of,
             selector,
             transport,
             server.round(),
             global_model,
+            &eff_uplink,
+            seg,
             broadcast.bytes,
             delta_mode,
             examples_per_round,
@@ -437,6 +516,7 @@ fn run_async_windows<T: SynthTask>(
     }
 
     let mut window_loss = 0.0f64;
+    let mut window_residual = 0.0f64;
     let mut window_accepted = 0usize;
     let mut window_dropped = 0usize;
     let mut applied = 0usize;
@@ -449,6 +529,7 @@ fn run_async_windows<T: SynthTask>(
             } else {
                 &server.params
             };
+            let (eff_uplink, seg) = effective_uplink(&cfg.uplink, bit_plan.as_ref());
             if !dispatch_one(
                 cfg,
                 engine,
@@ -457,10 +538,13 @@ fn run_async_windows<T: SynthTask>(
                 clients,
                 &mut busy,
                 &mut loss_of,
+                &mut residual_of,
                 selector,
                 transport,
                 server.round(),
                 global_model,
+                &eff_uplink,
+                seg,
                 broadcast.bytes,
                 delta_mode,
                 examples_per_round,
@@ -474,6 +558,7 @@ fn run_async_windows<T: SynthTask>(
             Ingest::Accepted { .. } => {
                 window_accepted += 1;
                 window_loss += loss_of[frame.client_id] as f64;
+                window_residual += residual_of[frame.client_id];
             }
             // Delivered (and metered — it crossed the wire) but discarded:
             // expired staleness, or a surplus second contribution from a
@@ -486,6 +571,16 @@ fn run_async_windows<T: SynthTask>(
         }
 
         if server.ready_to_apply() {
+            let window_train_loss = window_loss / window_accepted.max(1) as f64;
+            // Feed the controller before the round closes (observations
+            // reset with it).
+            if let Some(c) = controller.as_mut() {
+                c.observe(
+                    &server.round_observations(),
+                    window_residual / window_accepted.max(1) as f64,
+                    Some(window_train_loss),
+                );
+            }
             let n_kept = server.finish_round();
             applied += 1;
             transport.close_window(applied, n_kept, window_dropped);
@@ -516,13 +611,14 @@ fn run_async_windows<T: SynthTask>(
             let ledger = transport.ledger();
             let rec = RoundRecord {
                 round: applied,
-                train_loss: window_loss / window_accepted.max(1) as f64,
+                train_loss: window_train_loss,
                 eval_metric: metric,
                 eval_loss,
                 uplink_bytes: ledger.uplink_bytes,
                 downlink_bytes: ledger.downlink_bytes,
                 clients: n_kept,
                 stale_updates: window_dropped,
+                bits: bit_plan.as_ref().map(|p| p.bits.clone()).unwrap_or_default(),
             };
             if cfg.verbose {
                 let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
@@ -540,8 +636,11 @@ fn run_async_windows<T: SynthTask>(
             }
             history.push(rec);
             window_loss = 0.0;
+            window_residual = 0.0;
             window_accepted = 0;
             window_dropped = 0;
+            // Next window's widths, from the freshly observed signals.
+            bit_plan = controller.as_mut().map(|c| c.plan(applied, cfg.rounds));
         }
 
         if applied < cfg.rounds {
@@ -551,6 +650,7 @@ fn run_async_windows<T: SynthTask>(
             } else {
                 &server.params
             };
+            let (eff_uplink, seg) = effective_uplink(&cfg.uplink, bit_plan.as_ref());
             dispatch_one(
                 cfg,
                 engine,
@@ -559,10 +659,13 @@ fn run_async_windows<T: SynthTask>(
                 clients,
                 &mut busy,
                 &mut loss_of,
+                &mut residual_of,
                 selector,
                 transport,
                 server.round(),
                 global_model,
+                &eff_uplink,
+                seg,
                 broadcast.bytes,
                 delta_mode,
                 examples_per_round,
@@ -588,10 +691,13 @@ fn dispatch_one<T: SynthTask>(
     clients: &mut [Client],
     busy: &mut [bool],
     loss_of: &mut [f32],
+    residual_of: &mut [f64],
     selector: &mut Pcg64,
     transport: &mut dyn Transport,
     server_round: usize,
     global_model: &[f32],
+    uplink: &Pipeline,
+    seg_plan: Option<&BitPlan>,
     broadcast_bytes: usize,
     delta_mode: bool,
     examples: u64,
@@ -615,11 +721,13 @@ fn dispatch_one<T: SynthTask>(
                     round_cfg,
                     global_model,
                     lr,
-                    &cfg.uplink,
+                    uplink,
+                    seg_plan,
                     cfg.use_kernel_quantizer,
                 )?;
-                let payload = wire::serialize(&update.encoded);
+                let payload = update.payload();
                 loss_of[candidate] = update.train_loss;
+                residual_of[candidate] = update.residual_norm;
                 if !delta_mode {
                     // Raw float32 model: one model transfer per dispatch.
                     transport.broadcast(broadcast_bytes, 1);

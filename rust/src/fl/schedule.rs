@@ -19,12 +19,37 @@ pub enum LrSchedule {
 }
 
 impl LrSchedule {
+    /// Build a warm-restart schedule with the restart list validated on
+    /// construction: sorted, deduplicated, and stripped of no-op entries
+    /// (`0` re-anchors the first segment at its own boundary; anything
+    /// `≥ total` can never fire). [`LrSchedule::at`] is additionally
+    /// robust to hand-built unnormalized lists — it scans for the
+    /// enclosing segment instead of trusting the order — so construction
+    /// and evaluation agree for every input.
+    pub fn cosine_warm_restarts(base: f64, total: usize, mut restarts: Vec<usize>) -> LrSchedule {
+        restarts.retain(|&r| r > 0 && r < total);
+        restarts.sort_unstable();
+        restarts.dedup();
+        LrSchedule::CosineWarmRestarts {
+            base,
+            total,
+            restarts,
+        }
+    }
+
+    /// η_c at round `t`. Defined for ALL `t`: past the horizon
+    /// (`t ≥ total`) every cosine variant has fully decayed and returns
+    /// exactly `0.0` — the schedule's true endpoint, not a silent floor
+    /// at the last pre-zero sample (the old clamp made figure harnesses
+    /// that overrun by one keep training at a stale rate).
     pub fn at(&self, t: usize) -> f64 {
         match self {
             LrSchedule::Const(lr) => *lr,
             LrSchedule::Cosine { base, total } => {
                 let total = (*total).max(1);
-                let t = t.min(total - 1);
+                if t >= total {
+                    return 0.0;
+                }
                 base * 0.5 * (1.0 + (PI * t as f64 / total as f64).cos())
             }
             LrSchedule::CosineWarmRestarts {
@@ -32,19 +57,30 @@ impl LrSchedule {
                 total,
                 restarts,
             } => {
-                // Segment boundaries: [0, r1), [r1, r2), ..., [rk, total).
+                let total = (*total).max(1);
+                if t >= total {
+                    return 0.0;
+                }
+                // Enclosing segment [seg_start, seg_end): the largest
+                // valid restart ≤ t and the smallest valid restart > t.
+                // A linear scan (no sort/order assumption) keeps the
+                // result correct even for unsorted or duplicate-laden
+                // hand-built lists; restarts ≥ total never fire and never
+                // bound a segment.
                 let mut seg_start = 0usize;
-                let mut seg_end = *total;
+                let mut seg_end = total;
                 for &r in restarts {
-                    if t >= r {
-                        seg_start = r;
+                    if r >= total {
+                        continue;
+                    }
+                    if r <= t {
+                        seg_start = seg_start.max(r);
                     } else {
-                        seg_end = r;
-                        break;
+                        seg_end = seg_end.min(r);
                     }
                 }
                 let len = (seg_end - seg_start).max(1);
-                let local = (t - seg_start).min(len - 1);
+                let local = t - seg_start; // < len by construction
                 base * 0.5 * (1.0 + (PI * local as f64 / len as f64).cos())
             }
         }
@@ -75,6 +111,22 @@ mod tests {
         for t in 1..100 {
             assert!(s.at(t) <= s.at(t - 1) + 1e-12);
         }
+    }
+
+    #[test]
+    fn cosine_is_exactly_zero_past_the_horizon() {
+        // The old clamp silently floored the LR at the last pre-zero
+        // sample for every t ≥ total; the defined behavior is the true
+        // endpoint: the cosine has fully decayed.
+        let s = LrSchedule::Cosine {
+            base: 0.1,
+            total: 100,
+        };
+        for t in [100, 101, 150, 10_000] {
+            assert_eq!(s.at(t), 0.0, "at({t})");
+        }
+        // And the horizon value is strictly below the last in-range one.
+        assert!(s.at(100) < s.at(99));
     }
 
     #[test]
@@ -117,43 +169,78 @@ mod tests {
     }
 
     #[test]
-    fn warm_restart_beyond_total_stretches_the_segment() {
-        // A restart index ≥ total never fires, but it still bounds the
-        // segment: the cosine decays over [0, restart), so the LR stays
-        // above the plain-cosine floor at the end of training and never
-        // jumps back up.
+    fn warm_restart_beyond_total_never_fires_and_never_missegments() {
+        // A restart index ≥ total can never fire. The old code let it
+        // BOUND the final segment anyway, silently stretching the decay
+        // past the training horizon so the LR never reached its floor.
+        // Defined behavior: such restarts are inert — the schedule is
+        // the plain cosine over [0, total).
         let s = LrSchedule::CosineWarmRestarts {
             base: 0.1,
             total: 100,
             restarts: vec![150],
         };
-        assert!((s.at(0) - 0.1).abs() < 1e-12);
-        for t in 1..100 {
-            assert!(s.at(t) <= s.at(t - 1) + 1e-12, "jumped up at t={t}");
-        }
-        let plain_end = LrSchedule::Cosine {
+        let plain = LrSchedule::Cosine {
             base: 0.1,
             total: 100,
+        };
+        for t in 0..110 {
+            assert!((s.at(t) - plain.at(t)).abs() < 1e-15, "t={t}");
         }
-        .at(99);
-        assert!(s.at(99) > plain_end, "{} !> {plain_end}", s.at(99));
-        assert!(s.at(99) > 0.01, "segment should not have fully decayed");
+        // The validated constructor strips them outright.
+        let LrSchedule::CosineWarmRestarts { restarts, .. } =
+            LrSchedule::cosine_warm_restarts(0.1, 100, vec![150, 0, 100])
+        else {
+            panic!()
+        };
+        assert!(restarts.is_empty(), "{restarts:?}");
     }
 
     #[test]
-    fn warm_restarts_past_the_horizon_stay_bounded() {
-        // Querying past `total` (figure harnesses overrun by one) clamps
-        // into the last segment instead of panicking or going negative.
+    fn warm_restarts_are_exactly_zero_past_the_horizon() {
+        // Querying past `total` (figure harnesses overrun by one) returns
+        // the fully-decayed endpoint, not a frozen stale rate.
         let s = LrSchedule::CosineWarmRestarts {
             base: 0.1,
             total: 100,
             restarts: vec![20, 60],
         };
         for t in [100, 101, 150, 10_000] {
-            let v = s.at(t);
-            assert!(v.is_finite() && (0.0..=0.1).contains(&v), "at({t}) = {v}");
-            assert!((v - s.at(99)).abs() < 1e-12, "clamp should freeze the LR");
+            assert_eq!(s.at(t), 0.0, "at({t})");
         }
+        assert!(s.at(99) > 0.0, "last in-range round still trains");
+    }
+
+    #[test]
+    fn unsorted_or_duplicated_restarts_segment_correctly() {
+        // The old segment scan trusted sort order: an unsorted list
+        // truncated segments at the wrong boundary. The fix makes `at`
+        // order-independent AND the constructor normalize.
+        let sorted = LrSchedule::CosineWarmRestarts {
+            base: 0.1,
+            total: 100,
+            restarts: vec![20, 60],
+        };
+        let shuffled = LrSchedule::CosineWarmRestarts {
+            base: 0.1,
+            total: 100,
+            restarts: vec![60, 20, 60, 150, 0],
+        };
+        let constructed = LrSchedule::cosine_warm_restarts(0.1, 100, vec![60, 20, 60, 150, 0]);
+        for t in 0..105 {
+            assert!(
+                (sorted.at(t) - shuffled.at(t)).abs() < 1e-15,
+                "t={t}: {} vs {}",
+                sorted.at(t),
+                shuffled.at(t)
+            );
+            assert!((sorted.at(t) - constructed.at(t)).abs() < 1e-15, "t={t}");
+        }
+        // The constructor's normalized list is sorted and deduplicated.
+        let LrSchedule::CosineWarmRestarts { restarts, .. } = constructed else {
+            panic!()
+        };
+        assert_eq!(restarts, vec![20, 60]);
     }
 
     #[test]

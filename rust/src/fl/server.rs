@@ -51,6 +51,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::compress::allocator::SegmentObs;
 use crate::compress::pipeline::{
     accumulate_with, decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline,
     PipelineState,
@@ -198,6 +199,22 @@ pub struct Server {
     /// (`round + 1`; 0 = never) — O(1) duplicate detection with no
     /// per-round clearing sweep.
     contributed: Vec<u64>,
+    /// Per-segment wire-header observations accumulated over the open
+    /// round's accepted frames — the adaptive bit controller's free
+    /// per-layer signal (`n`, `bits`, `norm`, `bound` all live in the
+    /// CSG2 header; no payload access). Reset by [`Server::finish_round`].
+    obs_round: Vec<ObsAcc>,
+}
+
+/// Accumulator behind [`Server::round_observations`]: RMS of the segment
+/// norms across accepted frames, latest width/bound.
+#[derive(Debug, Clone)]
+struct ObsAcc {
+    n: usize,
+    bits: u8,
+    norm_sq_sum: f64,
+    bound: f32,
+    count: u64,
 }
 
 impl Server {
@@ -218,6 +235,7 @@ impl Server {
             round: 0,
             client_weights: Vec::new(),
             contributed: Vec::new(),
+            obs_round: Vec::new(),
         }
     }
 
@@ -305,20 +323,110 @@ impl Server {
         if self.contributed[frame.client_id] == self.stamp() {
             return Ingest::Duplicate;
         }
-        let Ok(enc) = wire::deserialize(&frame.payload) else {
+        let weight = n_i as f64 / (1 + staleness) as f64;
+        let Ok((first, used)) = wire::deserialize_prefix(&frame.payload) else {
             return Ingest::Malformed;
         };
-        if enc.direction != Direction::Uplink || enc.n as usize != self.params.len() {
-            return Ingest::Malformed;
-        }
-        let weight = n_i as f64 / (1 + staleness) as f64;
-        if accumulate_with(&enc, weight, &mut self.acc, &mut self.scratch).is_err() {
+        if used == frame.payload.len() {
+            // Single whole-tensor frame — the legacy hot path: fused
+            // dequantize+accumulate, one pass over the packed codes.
+            if first.direction != Direction::Uplink || first.n as usize != self.params.len() {
+                return Ingest::Malformed;
+            }
+            if accumulate_with(&first, weight, &mut self.acc, &mut self.scratch).is_err() {
+                return Ingest::Malformed;
+            }
+            self.note_segments(std::slice::from_ref(&first));
+        } else if self.ingest_segments(&frame.payload, weight).is_err() {
             return Ingest::Malformed;
         }
         self.contributed[frame.client_id] = self.stamp();
         self.weight_sum += weight;
         self.updates_this_round += 1;
         Ingest::Accepted { staleness }
+    }
+
+    /// Fold a multi-segment payload (one CSG2 frame per layer, mixed bit
+    /// widths — the adaptive schedule's wire shape) into the open
+    /// aggregate. Decode is keyed entirely off each segment's header —
+    /// never off configuration. All-or-nothing: every segment is decoded
+    /// (and thereby fully validated) *before* the accumulator is touched,
+    /// so a malformed tail segment has no side effects. The fold is the
+    /// same `f32 → f64` mul-add as the fused single-frame path, which is
+    /// pinned bit-identical to decode-then-add — so the two payload
+    /// shapes aggregate identically at equal widths.
+    fn ingest_segments(&mut self, payload: &[u8], weight: f64) -> Result<()> {
+        let segs = wire::deserialize_stream(payload)?;
+        let total: usize = segs.iter().map(|s| s.n as usize).sum();
+        anyhow::ensure!(
+            total == self.params.len(),
+            "segments cover {total} of {} params",
+            self.params.len()
+        );
+        anyhow::ensure!(
+            segs.iter().all(|s| s.direction == Direction::Uplink),
+            "non-uplink segment in an uplink stream"
+        );
+        let mut decoded = Vec::with_capacity(segs.len());
+        for s in &segs {
+            decoded.push(decode_with(s, &mut self.scratch)?);
+        }
+        let mut off = 0usize;
+        for v in &decoded {
+            for (a, &d) in self.acc[off..off + v.len()].iter_mut().zip(v) {
+                *a += d as f64 * weight;
+            }
+            off += v.len();
+        }
+        self.note_segments(&segs);
+        Ok(())
+    }
+
+    /// Record one accepted frame's segment headers into the round's
+    /// observation accumulator. A frame whose segment structure differs
+    /// from what accumulated so far (an adaptive plan change inside a
+    /// buffered-async window) restarts the accumulation — the controller
+    /// always sees the freshest structure.
+    fn note_segments(&mut self, segs: &[EncodedTensor]) {
+        let matches = self.obs_round.len() == segs.len()
+            && self
+                .obs_round
+                .iter()
+                .zip(segs)
+                .all(|(o, s)| o.n == s.n as usize);
+        if !matches {
+            self.obs_round = segs
+                .iter()
+                .map(|s| ObsAcc {
+                    n: s.n as usize,
+                    bits: s.bits,
+                    norm_sq_sum: 0.0,
+                    bound: s.bound,
+                    count: 0,
+                })
+                .collect();
+        }
+        for (o, s) in self.obs_round.iter_mut().zip(segs) {
+            o.bits = s.bits;
+            o.bound = s.bound;
+            o.norm_sq_sum += (s.norm as f64) * (s.norm as f64);
+            o.count += 1;
+        }
+    }
+
+    /// The open round's per-segment observations (RMS norm over accepted
+    /// frames, latest width/bound) — what the runner feeds the adaptive
+    /// bit controller. Empty until a frame is accepted.
+    pub fn round_observations(&self) -> Vec<SegmentObs> {
+        self.obs_round
+            .iter()
+            .map(|o| SegmentObs {
+                n: o.n,
+                bits: o.bits,
+                norm: (o.norm_sq_sum / o.count.max(1) as f64).sqrt() as f32,
+                bound: o.bound,
+            })
+            .collect()
     }
 
     /// Receive one client's wire bytes: deserialize and fold into the
@@ -362,6 +470,7 @@ impl Server {
         }
         self.weight_sum = 0.0;
         self.updates_this_round = 0;
+        self.obs_round.clear();
         self.round += 1;
         n_updates
     }
@@ -719,6 +828,104 @@ mod tests {
         assert!(RoundMode::parse("async:x").is_err());
         assert!(RoundMode::parse("gossip").is_err());
         assert_eq!(RoundMode::parse("async:4:1").unwrap().name(), "async:4 (≤1 stale)");
+    }
+
+    #[test]
+    fn segmented_mixed_width_ingest_matches_decode_then_add() {
+        // One payload = four CSG2 segments at four different widths.
+        // Ingest must fold exactly like per-segment decode-then-add.
+        let mut rng = Pcg64::seeded(31);
+        let g = gradient_like(&mut rng, 800);
+        let widths = [2u8, 8, 1, 5];
+        let bounds = [0usize, 200, 400, 600, 800];
+        let mut segs = Vec::new();
+        for (l, &w) in widths.iter().enumerate() {
+            let pipe = Pipeline::cosine(4).with_bits(w);
+            segs.push(pipe.encode(
+                &g[bounds[l]..bounds[l + 1]],
+                Direction::Uplink,
+                &mut PipelineState::new(),
+                &mut Pcg64::seeded(90 + l as u64),
+            ));
+        }
+        let frame = Frame {
+            round: 0,
+            client_id: 0,
+            payload: wire::serialize_stream(&segs),
+        };
+        let mut s = Server::new(vec![0.0; 800], 1.0).with_clients(vec![13]);
+        assert_eq!(s.ingest(&frame), Ingest::Accepted { staleness: 0 });
+        // The controller sees one observation per segment, header-true.
+        let obs = s.round_observations();
+        assert_eq!(obs.len(), 4);
+        for (o, (seg, &w)) in obs.iter().zip(segs.iter().zip(&widths)) {
+            assert_eq!(o.bits, w);
+            assert_eq!(o.n, seg.n as usize);
+            assert!((o.norm - seg.norm).abs() < 1e-6);
+        }
+        assert_eq!(s.finish_round(), 1);
+        assert!(s.round_observations().is_empty(), "obs reset per round");
+
+        // Manual decode-then-add reference.
+        let mut expect = vec![0.0f64; 800];
+        for (l, seg) in segs.iter().enumerate() {
+            for (e, &d) in expect[bounds[l]..bounds[l + 1]]
+                .iter_mut()
+                .zip(&crate::compress::decode(seg).unwrap())
+            {
+                *e += d as f64 * 13.0;
+            }
+        }
+        let scale = 1.0 / 13.0; // eta_s / weight_sum
+        let manual: Vec<f32> = expect.iter().map(|&a| -((a * scale) as f32)).collect();
+        assert_eq!(s.params, manual, "segmented ingest must be bit-identical");
+    }
+
+    #[test]
+    fn segmented_ingest_is_all_or_nothing() {
+        let mut rng = Pcg64::seeded(32);
+        let g = gradient_like(&mut rng, 200);
+        let pipe = Pipeline::cosine(4);
+        let seg = |r: std::ops::Range<usize>, seed| {
+            let mut rng = Pcg64::seeded(seed);
+            pipe.encode(&g[r], Direction::Uplink, &mut PipelineState::new(), &mut rng)
+        };
+        let good = [seg(0..100, 1), seg(100..200, 2)];
+        let mut s = Server::new(vec![0.0; 200], 1.0).with_clients(vec![5, 5]);
+
+        // Truncated tail segment: refused, accumulator untouched.
+        let mut cut = wire::serialize_stream(&good);
+        cut.truncate(cut.len() - 3);
+        assert_eq!(
+            s.ingest(&Frame { round: 0, client_id: 0, payload: cut }),
+            Ingest::Malformed
+        );
+        // Segments that do not cover the model: refused.
+        let short = wire::serialize_stream(&good[..1]);
+        assert_eq!(
+            s.ingest(&Frame { round: 0, client_id: 0, payload: short }),
+            Ingest::Malformed
+        );
+        // A downlink segment smuggled into the stream: refused.
+        let mut mixed = good.clone();
+        mixed[1] = pipe.encode(
+            &g[100..200],
+            Direction::Downlink,
+            &mut PipelineState::new(),
+            &mut Pcg64::seeded(3),
+        );
+        assert_eq!(
+            s.ingest(&Frame { round: 0, client_id: 0, payload: wire::serialize_stream(&mixed) }),
+            Ingest::Malformed
+        );
+        assert_eq!(s.finish_round(), 0);
+        assert_eq!(s.params, vec![0.0; 200], "refused streams must not move the model");
+
+        // The intact stream still lands.
+        assert_eq!(
+            s.ingest(&Frame { round: 1, client_id: 0, payload: wire::serialize_stream(&good) }),
+            Ingest::Accepted { staleness: 0 }
+        );
     }
 
     #[test]

@@ -359,6 +359,7 @@ impl Transport for SimTransport {
 pub mod dryrun {
     use anyhow::{bail, ensure, Result};
 
+    use crate::compress::allocator::{BitController, BitPlan, BitSchedule, LayerMap};
     use crate::compress::{wire, Direction, Pipeline, PipelineState};
     use crate::sim::{Admission, SimConfig, Timeline};
     use crate::util::propcheck::gradient_like;
@@ -376,9 +377,91 @@ pub mod dryrun {
         pub aggregations: usize,
         /// Delivered updates the server discarded (stale or duplicate).
         pub dropped: usize,
+        /// Mean measured relative quantization MSE (‖g − ĝ‖²/‖g‖²) of the
+        /// accepted updates, per aggregation (bit-scheduled runs only).
+        pub round_mse: Vec<f64>,
+        /// Widths the bit controller chose, per aggregation
+        /// (bit-scheduled runs only).
+        pub round_bits: Vec<Vec<u8>>,
     }
 
-    /// One synthetic update as a real wire frame.
+    /// Bit-schedule harness for a dry run: the schedule, the layer
+    /// partition, and the per-layer gradient scale decay (`decay^l` —
+    /// the energy concentration that makes per-layer allocation matter;
+    /// `1.0` = flat).
+    #[derive(Debug, Clone)]
+    pub struct DryBits {
+        pub schedule: BitSchedule,
+        pub map: LayerMap,
+        pub decay: f32,
+    }
+
+    /// The per-flight RNG seed: injective in the flight index (an odd
+    /// multiplier is a bijection on u64), so no two flights — not even
+    /// re-dispatches of the SAME client inside one round — can collide
+    /// onto one RNG stream. Pinned by `tests/async_rounds.rs`.
+    pub fn flight_seed(run_seed: u64, flight: u64) -> u64 {
+        run_seed ^ flight.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// A synthetic gradient with geometric per-layer energy decay.
+    pub fn layered_gradient(rng: &mut Pcg64, map: &LayerMap, decay: f32) -> Vec<f32> {
+        let mut g = gradient_like(rng, map.param_count());
+        for l in 0..map.len() {
+            let s = decay.powi(l as i32);
+            for v in &mut g[map.segment(l)] {
+                *v *= s;
+            }
+        }
+        g
+    }
+
+    /// Encode one dry update under the controller's plan. Returns the
+    /// serialized frame payload and the measured relative reconstruction
+    /// MSE (via real decode — the honest fidelity signal the
+    /// time-to-accuracy proxies integrate).
+    fn encode_planned(
+        pipe: &Pipeline,
+        g: &[f32],
+        plan: Option<&BitPlan>,
+        rng: &mut Pcg64,
+    ) -> (Vec<u8>, f64) {
+        let mut segs = Vec::new();
+        match plan {
+            Some(p) if p.segmented => {
+                for (l, &b) in p.bits.iter().enumerate() {
+                    let seg_pipe = pipe.with_bits(b);
+                    segs.push(seg_pipe.encode(
+                        &g[p.bounds[l]..p.bounds[l + 1]],
+                        Direction::Uplink,
+                        &mut PipelineState::new(),
+                        rng,
+                    ));
+                }
+            }
+            Some(p) => {
+                let uni = pipe.with_bits(p.bits[0]);
+                segs.push(uni.encode(g, Direction::Uplink, &mut PipelineState::new(), rng));
+            }
+            None => {
+                segs.push(pipe.encode(g, Direction::Uplink, &mut PipelineState::new(), rng));
+            }
+        }
+        let mut err = 0.0f64;
+        let mut energy = 0.0f64;
+        let mut off = 0usize;
+        for seg in &segs {
+            let dec = crate::compress::decode(seg).expect("dry frame decodes");
+            for (&gi, &di) in g[off..off + dec.len()].iter().zip(&dec) {
+                err += ((gi - di) as f64).powi(2);
+                energy += (gi as f64).powi(2);
+            }
+            off += dec.len();
+        }
+        (wire::serialize_stream(&segs), err / energy.max(1e-30))
+    }
+
+    /// One synthetic update as a real wire frame (unscheduled path).
     fn payload(pipe: &Pipeline, n: usize, client: usize, salt: u64) -> Vec<u8> {
         let mut rng = Pcg64::new(salt, client as u64);
         let g = gradient_like(&mut rng, n);
@@ -396,29 +479,80 @@ pub mod dryrun {
         rounds: usize,
         seed: u64,
     ) -> Result<DryOutcome> {
+        run_sync_bits(pipe, None, sim, n, n_clients, k, rounds, seed)
+    }
+
+    /// Synchronous rounds with an optional bit schedule in the loop: the
+    /// controller picks widths per round (and per layer under
+    /// `adaptive`), clients encode real mixed-width CSG2 segment
+    /// streams, and the server's ingest observations feed back — the
+    /// full control loop, minus training.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_sync_bits(
+        pipe: &Pipeline,
+        bits: Option<&DryBits>,
+        sim: &SimConfig,
+        n: usize,
+        n_clients: usize,
+        k: usize,
+        rounds: usize,
+        seed: u64,
+    ) -> Result<DryOutcome> {
+        if let Some(b) = bits {
+            ensure!(b.map.param_count() == n, "layer map does not cover n");
+        }
+        let mut controller = bits.map(|b| BitController::new(b.schedule, b.map.clone()));
         let mut transport = SimTransport::new(sim, n_clients, seed);
         let mut server = Server::new(vec![0.0; n], 1.0).with_clients(vec![100; n_clients]);
         let mut selector = Pcg64::new(seed, 0x5E1EC7);
+        let mut flight = 0u64;
+        let mut round_mse = Vec::new();
+        let mut round_bits = Vec::new();
         for t in 0..rounds {
+            let bit_plan = controller.as_mut().map(|c| c.plan(t, rounds));
             let k_sel = transport.selection_count(k);
             let selected = selector.sample_indices(n_clients, k_sel);
             let plan = transport.plan_round(&selected);
             transport.broadcast(n * 4, plan.active.len());
+            let mut mse_of = vec![0.0f64; n_clients];
             let frames: Vec<Frame> = plan
                 .active
                 .iter()
-                .map(|&c| Frame {
-                    round: server.round(),
-                    client_id: c,
-                    payload: payload(pipe, n, c, seed.wrapping_add(t as u64)),
+                .map(|&c| {
+                    let mut rng = Pcg64::new(flight_seed(seed, flight), c as u64);
+                    flight += 1;
+                    let payload = match bits {
+                        Some(b) => {
+                            let g = layered_gradient(&mut rng, &b.map, b.decay);
+                            let plan = bit_plan.as_ref();
+                            let (p, mse) = encode_planned(pipe, &g, plan, &mut rng);
+                            mse_of[c] = mse;
+                            p
+                        }
+                        None => payload(pipe, n, c, flight_seed(seed, flight - 1)),
+                    };
+                    Frame {
+                        round: server.round(),
+                        client_id: c,
+                        payload,
+                    }
                 })
                 .collect();
-            for f in &transport.exchange(t + 1, k, n * 4, frames, 300) {
+            let delivered = transport.exchange(t + 1, k, n * 4, frames, 300);
+            let mut mse_sum = 0.0f64;
+            for f in &delivered {
                 ensure!(
                     matches!(server.ingest(f), Ingest::Accepted { .. }),
                     "sync dry-run: ingest refused client {}",
                     f.client_id
                 );
+                mse_sum += mse_of[f.client_id];
+            }
+            if let Some(c) = controller.as_mut() {
+                c.observe(&server.round_observations(), 0.0, None);
+                round_mse.push(mse_sum / delivered.len().max(1) as f64);
+                let widths = bit_plan.as_ref().map(|p| p.bits.clone());
+                round_bits.push(widths.unwrap_or_default());
             }
             server.finish_round();
         }
@@ -428,6 +562,8 @@ pub mod dryrun {
             timeline: tl.expect("sim transport has a timeline"),
             aggregations: rounds,
             dropped: 0,
+            round_mse,
+            round_bits,
         })
     }
 
@@ -444,7 +580,42 @@ pub mod dryrun {
         max_staleness: usize,
         seed: u64,
     ) -> Result<DryOutcome> {
+        run_async_bits(
+            pipe,
+            None,
+            sim,
+            n,
+            n_clients,
+            buffer_k,
+            concurrency,
+            windows,
+            max_staleness,
+            seed,
+        )
+    }
+
+    /// Buffered-async windows with an optional bit schedule: the plan is
+    /// refreshed at every window close, so a width change lands *inside*
+    /// the open round — in-flight frames keep the widths they were
+    /// encoded with (the self-describing headers carry them).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_async_bits(
+        pipe: &Pipeline,
+        bits: Option<&DryBits>,
+        sim: &SimConfig,
+        n: usize,
+        n_clients: usize,
+        buffer_k: usize,
+        concurrency: usize,
+        windows: usize,
+        max_staleness: usize,
+        seed: u64,
+    ) -> Result<DryOutcome> {
         ensure!(buffer_k <= n_clients, "buffer exceeds the fleet");
+        if let Some(b) = bits {
+            ensure!(b.map.param_count() == n, "layer map does not cover n");
+        }
+        let mut controller = bits.map(|b| BitController::new(b.schedule, b.map.clone()));
         let mut transport = SimTransport::new(sim, n_clients, seed);
         let mut server = Server::new(vec![0.0; n], 1.0)
             .with_clients(vec![100; n_clients])
@@ -454,6 +625,9 @@ pub mod dryrun {
             });
         let mut selector = Pcg64::new(seed, 0x5E1EC7);
         let mut busy = vec![false; n_clients];
+        let mut mse_of = vec![0.0f64; n_clients];
+        let mut flight = 0u64;
+        let mut bit_plan = controller.as_mut().map(|c| c.plan(0, windows));
 
         // Mirrors `fl::runner::dispatch_one` exactly (idle sampling,
         // admission lottery, rejection-streak cap) minus the training —
@@ -461,7 +635,10 @@ pub mod dryrun {
         // production event loop enforce the same semantics.
         let mut dispatch_one = |transport: &mut SimTransport,
                                 busy: &mut [bool],
+                                mse_of: &mut [f64],
                                 selector: &mut Pcg64,
+                                flight: &mut u64,
+                                plan: Option<&BitPlan>,
                                 round: usize|
          -> bool {
             let mut attempts = 0usize;
@@ -474,12 +651,24 @@ pub mod dryrun {
                 attempts += 1;
                 match transport.admit(candidate) {
                     Admission::Admitted => {
+                        let fs = flight_seed(seed, *flight);
+                        *flight += 1;
+                        let payload = match bits {
+                            Some(b) => {
+                                let mut rng = Pcg64::new(fs, candidate as u64);
+                                let g = layered_gradient(&mut rng, &b.map, b.decay);
+                                let (p, mse) = encode_planned(pipe, &g, plan, &mut rng);
+                                mse_of[candidate] = mse;
+                                p
+                            }
+                            None => payload(pipe, n, candidate, fs),
+                        };
                         transport.broadcast(n * 4, 1);
                         transport.dispatch(
                             Frame {
                                 round,
                                 client_id: candidate,
-                                payload: payload(pipe, n, candidate, seed ^ ((round as u64) << 1)),
+                                payload,
                             },
                             n * 4,
                             300,
@@ -497,20 +686,42 @@ pub mod dryrun {
         };
 
         for _ in 0..concurrency.min(n_clients) {
-            dispatch_one(&mut transport, &mut busy, &mut selector, server.round());
+            dispatch_one(
+                &mut transport,
+                &mut busy,
+                &mut mse_of,
+                &mut selector,
+                &mut flight,
+                bit_plan.as_ref(),
+                server.round(),
+            );
         }
         let (mut applied, mut window_dropped, mut total_dropped) = (0usize, 0usize, 0usize);
+        let (mut window_mse, mut window_accepted) = (0.0f64, 0usize);
+        let mut round_mse = Vec::new();
+        let mut round_bits = Vec::new();
         while applied < windows {
             let Some(frame) = transport.recv() else {
                 ensure!(
-                    dispatch_one(&mut transport, &mut busy, &mut selector, server.round()),
+                    dispatch_one(
+                        &mut transport,
+                        &mut busy,
+                        &mut mse_of,
+                        &mut selector,
+                        &mut flight,
+                        bit_plan.as_ref(),
+                        server.round(),
+                    ),
                     "async dry-run starved"
                 );
                 continue;
             };
             busy[frame.client_id] = false;
             match server.ingest(&frame) {
-                Ingest::Accepted { .. } => {}
+                Ingest::Accepted { .. } => {
+                    window_accepted += 1;
+                    window_mse += mse_of[frame.client_id];
+                }
                 Ingest::StaleRound | Ingest::Duplicate => {
                     window_dropped += 1;
                     total_dropped += 1;
@@ -518,13 +729,30 @@ pub mod dryrun {
                 Ingest::Malformed => bail!("async dry-run: malformed frame delivered"),
             }
             if server.ready_to_apply() {
+                if let Some(c) = controller.as_mut() {
+                    c.observe(&server.round_observations(), 0.0, None);
+                    round_mse.push(window_mse / window_accepted.max(1) as f64);
+                    let widths = bit_plan.as_ref().map(|p| p.bits.clone());
+                    round_bits.push(widths.unwrap_or_default());
+                }
                 let reporters = server.finish_round();
                 applied += 1;
                 transport.close_window(applied, reporters, window_dropped);
                 window_dropped = 0;
+                window_mse = 0.0;
+                window_accepted = 0;
+                bit_plan = controller.as_mut().map(|c| c.plan(applied, windows));
             }
             if applied < windows {
-                dispatch_one(&mut transport, &mut busy, &mut selector, server.round());
+                dispatch_one(
+                    &mut transport,
+                    &mut busy,
+                    &mut mse_of,
+                    &mut selector,
+                    &mut flight,
+                    bit_plan.as_ref(),
+                    server.round(),
+                );
             }
         }
         let (ledger, tl) = Box::new(transport).finish();
@@ -533,6 +761,8 @@ pub mod dryrun {
             timeline: tl.expect("sim transport has a timeline"),
             aggregations: applied,
             dropped: total_dropped,
+            round_mse,
+            round_bits,
         })
     }
 }

@@ -2,13 +2,15 @@
 //!
 //! ```text
 //! repro figure <id>|all [--rounds N] [--scale full] [--seed S] [--quiet]
-//! repro train --task mnist|mnist-iid|cifar|unet --codec <name> [--bits B]
+//! repro train --task mnist|mnist-iid|cifar|unet --codec <name>
+//!             [--bits B|const:<b>|anneal:<hi>..<lo>|adaptive[:<bytes>]]
 //!             [--keep F] [--rounds N] [--kernel] [--seed S] [--threads N]
 //!             [--round-mode sync|async:K[:S]]
 //!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
 //! repro sim   --task <t> [--rounds N] [--fleet heterogeneous|uniform|3g]
 //!             [--policy sync|overselect] [--over F] [--availability P]
 //!             [--dropout P] [--target M] [--round-mode async:K[:S]]
+//!             [--bits <schedule>]  # adds const vs anneal vs adaptive rows
 //!             [--quick]   # sync vs buffered-async time-to-accuracy table
 //!                         # (--quick without artifacts: protocol dry-run)
 //! repro compress-stats [--n N]      # pipeline table, no artifacts needed
@@ -22,6 +24,7 @@
 
 use anyhow::{bail, Result};
 
+use cossgd::compress::allocator::{BitSchedule, LayerMap};
 use cossgd::compress::cosine::{BoundMode, Rounding};
 use cossgd::compress::{Direction, Pipeline, PipelineState};
 use cossgd::figures::{self, FigOpts};
@@ -60,7 +63,10 @@ fn cmd_list() -> Result<()> {
     println!(
         "codecs:  float32, cosine, linear, linear-rotated, signsgd, signsgd-norm, ef-signsgd"
     );
-    println!("options: --bits 1..8, --keep 0.05..1.0, --unbiased, --clip P, --no-deflate");
+    println!(
+        "options: --bits 1..8 | const:<b> | anneal:<hi>..<lo> | adaptive[:<bytes>], \
+         --keep 0.05..1.0, --unbiased, --clip P, --no-deflate"
+    );
     println!(
         "round-trip: --downlink <codec> [--downlink-bits B] [--downlink-keep F] \
          [--downlink-unbiased] [--downlink-clip P] [--downlink-no-deflate]"
@@ -172,16 +178,44 @@ fn rounding_from_flag(unbiased: bool) -> Rounding {
     }
 }
 
-/// Build the uplink pipeline from CLI flags.
-fn uplink_from_args(args: &Args) -> Result<Pipeline> {
-    pipeline_from_opts(
+/// Parse `--bits`: a bare integer is the legacy fixed width; anything
+/// else is a [`BitSchedule`] (`const:<b>`, `anneal:<hi>..<lo>`,
+/// `adaptive[:<budget>]`) routed through the adaptive bit controller.
+fn bits_from_args(args: &Args) -> Result<(u8, Option<BitSchedule>)> {
+    match args.opt("bits") {
+        None => Ok((2, None)),
+        Some(s) => match s.parse::<u8>() {
+            // Legacy: width baked into the pipeline. Same validation as
+            // `const:<b>` — a clean error, not a quantizer assert.
+            Ok(b) if (1..=16).contains(&b) => Ok((b, None)),
+            Ok(b) => bail!("--bits width {b} outside 1..=16"),
+            Err(_) => {
+                let sched = BitSchedule::parse(s)?;
+                // The pipeline's base width is the schedule's anchor; the
+                // controller overrides it per round / per layer.
+                let base = match sched {
+                    BitSchedule::Const(b) => b,
+                    BitSchedule::Anneal { hi, .. } => hi,
+                    BitSchedule::Adaptive { .. } => 4,
+                };
+                Ok((base, Some(sched)))
+            }
+        },
+    }
+}
+
+/// Build the uplink pipeline (+ optional bit schedule) from CLI flags.
+fn uplink_from_args(args: &Args) -> Result<(Pipeline, Option<BitSchedule>)> {
+    let (bits, schedule) = bits_from_args(args)?;
+    let pipe = pipeline_from_opts(
         args.opt_or("codec", "cosine"),
-        args.opt_usize("bits", 2) as u8,
+        bits,
         rounding_from_flag(args.flag("unbiased")),
         bound_from_args(args, "clip")?,
         args.opt_f64("keep", 1.0),
         args.flag("no-deflate"),
-    )
+    )?;
+    Ok((pipe, schedule))
 }
 
 /// Build the optional downlink policy (`--downlink <codec>`), with its own
@@ -210,7 +244,7 @@ fn downlink_from_args(args: &Args) -> Result<Option<fl::Downlink>> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let task = Task::parse(args.opt_or("task", "mnist-iid"))?;
-    let uplink = uplink_from_args(args)?;
+    let (uplink, bit_schedule) = uplink_from_args(args)?;
     let mut cfg = match task {
         Task::MnistIid => FlConfig::mnist(false),
         Task::MnistNonIid => FlConfig::mnist(true),
@@ -222,6 +256,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .with_rounds(args.opt_usize("rounds", default_rounds))
         .with_uplink(uplink)
         .with_seed(args.opt_u64("seed", 42));
+    cfg.bit_schedule = bit_schedule;
     if let Some(down) = downlink_from_args(args)? {
         cfg.downlink = down;
     }
@@ -335,24 +370,68 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let async_mode = async_mode_for(args, base.clients_per_round())?;
     let engine = Engine::load_default()?;
 
-    let schemes: Vec<(&str, Pipeline, Option<Pipeline>)> = vec![
-        ("float32 ↑ / float32 ↓", Pipeline::float32(), None),
-        (
-            "cosine-8 ↑ / Δ cosine-8 ↓",
-            Pipeline::cosine(8),
-            Some(Pipeline::cosine(8)),
-        ),
-        (
-            "cosine-4 ↑ / Δ cosine-4 ↓",
-            Pipeline::cosine(4),
-            Some(Pipeline::cosine(4)),
-        ),
-        (
-            "cosine-2@5% ↑ / Δ cosine-4 ↓",
-            Pipeline::cosine(2).with_sparsify(0.05),
-            Some(Pipeline::cosine(4)),
-        ),
-    ];
+    // With a `--bits` schedule the table compares bit *schedules* (const
+    // vs anneal vs adaptive — the user's parameters seed the matching
+    // row); without one it compares the fixed pipelines as before.
+    type SchemeRow = (String, Pipeline, Option<Pipeline>, Option<BitSchedule>);
+    let schemes: Vec<SchemeRow> = match bits_from_args(args)? {
+        (_, Some(user)) => {
+            let (c, a, ad) = match user {
+                BitSchedule::Const(b) => (
+                    BitSchedule::Const(b),
+                    BitSchedule::Anneal { hi: 8, lo: 2 },
+                    BitSchedule::Adaptive { budget: 0 },
+                ),
+                BitSchedule::Anneal { hi, lo } => (
+                    BitSchedule::Const(4),
+                    BitSchedule::Anneal { hi, lo },
+                    BitSchedule::Adaptive { budget: 0 },
+                ),
+                BitSchedule::Adaptive { budget } => (
+                    BitSchedule::Const(4),
+                    BitSchedule::Anneal { hi: 8, lo: 2 },
+                    BitSchedule::Adaptive { budget },
+                ),
+            };
+            [c, a, ad]
+                .into_iter()
+                .map(|s| {
+                    (
+                        format!("cosine {} ↑ / Δ cosine-4 ↓", s.name()),
+                        Pipeline::cosine(4),
+                        Some(Pipeline::cosine(4)),
+                        Some(s),
+                    )
+                })
+                .collect()
+        }
+        _ => vec![
+            (
+                "float32 ↑ / float32 ↓".to_string(),
+                Pipeline::float32(),
+                None,
+                None,
+            ),
+            (
+                "cosine-8 ↑ / Δ cosine-8 ↓".to_string(),
+                Pipeline::cosine(8),
+                Some(Pipeline::cosine(8)),
+                None,
+            ),
+            (
+                "cosine-4 ↑ / Δ cosine-4 ↓".to_string(),
+                Pipeline::cosine(4),
+                Some(Pipeline::cosine(4)),
+                None,
+            ),
+            (
+                "cosine-2@5% ↑ / Δ cosine-4 ↓".to_string(),
+                Pipeline::cosine(2).with_sparsify(0.05),
+                Some(Pipeline::cosine(4)),
+                None,
+            ),
+        ],
+    };
 
     println!(
         "fleet: {} over {} clients · {} rounds · task {task:?} · seed {seed} · async = {}",
@@ -365,7 +444,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
         "{:<30} {:>7} {:>10} {:>10} {:>10} {:>10} {:>11} {:>6}",
         "scheme", "best", "sync time", "sync t2t", "async time", "async t2t", "uplink", "stale"
     );
-    for (name, up, down) in schemes {
+    for (name, up, down, schedule) in schemes {
+        let name = name.as_str();
         let mut cfg = base
             .clone()
             .with_rounds(rounds)
@@ -375,6 +455,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         if let Some(d) = down {
             cfg = cfg.with_downlink(d);
         }
+        cfg.bit_schedule = schedule;
         cfg.eval_every = args.opt_usize("eval-every", 5);
         cfg.client_threads = args.opt_usize("threads", 1);
         cfg.verbose = args.flag("verbose");
@@ -440,7 +521,7 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
         sim.name()
     );
     println!(
-        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>11} {:>11} {:>6}",
+        "{:<22} {:>10} {:>10} {:>10} {:>10} {:>11} {:>11} {:>6}",
         "uplink codec",
         "sync time",
         "sync/rnd",
@@ -450,13 +531,34 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
         "async ↑B",
         "stale"
     );
-    for (name, pipe) in [
-        ("float32", Pipeline::float32()),
-        ("cosine-4", Pipeline::cosine(4)),
-    ] {
-        let sync = dryrun::run_sync(&pipe, &sim, n, n_clients, k, rounds, seed)?;
-        let asyn = dryrun::run_async(
+    // A `--bits` schedule adds a controller-in-the-loop row: the full
+    // adaptive/anneal control loop over real mixed-width CSG2 segment
+    // streams (this is what CI smokes on every push).
+    let bit_row: Option<dryrun::DryBits> = match bits_from_args(args)? {
+        (_, Some(schedule)) => Some(dryrun::DryBits {
+            schedule,
+            map: LayerMap::even(n, 6),
+            decay: 0.5,
+        }),
+        _ => None,
+    };
+    let mut rows: Vec<(String, Pipeline, Option<dryrun::DryBits>)> = vec![
+        ("float32".into(), Pipeline::float32(), None),
+        ("cosine-4".into(), Pipeline::cosine(4), None),
+    ];
+    if let Some(b) = bit_row {
+        rows.push((
+            format!("cosine {}", b.schedule.name()),
+            Pipeline::cosine(4),
+            Some(b),
+        ));
+    }
+    for (name, pipe, bits) in rows {
+        let sync =
+            dryrun::run_sync_bits(&pipe, bits.as_ref(), &sim, n, n_clients, k, rounds, seed)?;
+        let asyn = dryrun::run_async_bits(
             &pipe,
+            bits.as_ref(),
             &sim,
             n,
             n_clients,
@@ -471,7 +573,7 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
             "{name}: protocol run incomplete"
         );
         println!(
-            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>11} {:>11} {:>6}",
+            "{:<22} {:>10} {:>10} {:>10} {:>10} {:>11} {:>11} {:>6}",
             name,
             fmt_sim_secs(sync.timeline.total_secs()),
             fmt_sim_secs(sync.timeline.mean_round_secs()),
@@ -481,6 +583,19 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
             fmt_bytes(asyn.ledger.uplink_bytes),
             asyn.dropped
         );
+        if !sync.round_bits.is_empty() {
+            let widths: Vec<String> = sync
+                .round_bits
+                .iter()
+                .map(|b| {
+                    b.iter()
+                        .map(|w| w.to_string())
+                        .collect::<Vec<_>>()
+                        .join("")
+                })
+                .collect();
+            println!("  └ widths/round (sync): {}", widths.join(" "));
+        }
     }
     println!("protocol dry-run OK (both round modes)");
     Ok(())

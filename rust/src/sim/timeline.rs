@@ -188,6 +188,7 @@ mod tests {
             downlink_bytes: 400,
             clients: 10,
             stale_updates: 0,
+            bits: Vec::new(),
         }
     }
 

@@ -171,3 +171,83 @@ fn corrupt_deflate_payload_fails_decode_not_panic() {
         assert_eq!(v.len(), 50_000, "decode returned a wrong-length vector");
     }
 }
+
+/// ISSUE 5 satellite: a CSG2 frame sequence whose bit width changes on
+/// EVERY frame (cycling 1..=8) must round-trip purely off the
+/// self-describing headers — the receiver never consults the sender's
+/// configuration — and `Server::ingest` must fold it bit-identically to
+/// per-frame decode-then-add. The sequence is ingested inside ONE
+/// buffered-async round, so the width changes *within* an open
+/// aggregation window, exactly as an adaptive plan change lands on
+/// in-flight frames.
+#[test]
+fn mixed_width_frame_stream_roundtrips_and_ingests_bit_identically() {
+    use cossgd::fl::server::Server;
+    use cossgd::fl::{Frame, Ingest, RoundMode};
+    use cossgd::util::propcheck::forall;
+
+    forall(
+        12,
+        71,
+        |rng, size| {
+            let n = size.len(rng) * 50 + 64;
+            gradient_like(rng, n)
+        },
+        |g| {
+            let n = g.len();
+            let n_frames = 16usize; // two full 1..=8 width cycles
+            let weights: Vec<u32> = (0..n_frames as u32).map(|i| 10 + i * 7).collect();
+
+            // One encoded frame per client, width cycling 1..=8.
+            let mut encs: Vec<EncodedTensor> = Vec::new();
+            for i in 0..n_frames {
+                let bits = (i % 8) as u8 + 1;
+                let pipe = Pipeline::cosine(4).with_bits(bits);
+                let mut rng = Pcg64::seeded(1000 + i as u64);
+                let enc = pipe.encode(g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+                assert_eq!(enc.bits, bits, "header must carry the per-frame width");
+                // Round-trip through the wire: header-driven decode only.
+                let back = wire::deserialize(&wire::serialize(&enc)).unwrap();
+                if back != enc || decode(&back).unwrap() != decode(&enc).unwrap() {
+                    return false;
+                }
+                encs.push(enc);
+            }
+
+            // Ingest the whole mixed-width sequence inside ONE
+            // buffered-async window (every frame tags round 0; the
+            // buffer only fills at the last frame).
+            let mut server = Server::new(vec![0.0f32; n], 1.0)
+                .with_clients(weights.clone())
+                .with_round_mode(RoundMode::BufferedAsync {
+                    buffer_k: n_frames,
+                    max_staleness: 2,
+                });
+            for (i, enc) in encs.iter().enumerate() {
+                let frame = Frame {
+                    round: 0,
+                    client_id: i,
+                    payload: wire::serialize(enc),
+                };
+                assert_eq!(server.ingest(&frame), Ingest::Accepted { staleness: 0 });
+            }
+            assert!(server.ready_to_apply());
+            assert_eq!(server.finish_round(), n_frames);
+
+            // Reference: per-frame decode-then-add with the same weights.
+            let mut acc = vec![0.0f64; n];
+            let mut wsum = 0.0f64;
+            for (enc, &w) in encs.iter().zip(&weights) {
+                let dec = decode(enc).unwrap();
+                for (a, &d) in acc.iter_mut().zip(&dec) {
+                    *a += d as f64 * w as f64;
+                }
+                wsum += w as f64;
+            }
+            // Mirror finish_round's arithmetic exactly (scale then mul).
+            let scale = 1.0f64 / wsum;
+            let expect: Vec<f32> = acc.iter().map(|&a| -((a * scale) as f32)).collect();
+            server.params == expect
+        },
+    );
+}
