@@ -1,0 +1,252 @@
+//! Hand-rolled parser for the `analyze.toml` manifest (a strict TOML
+//! subset — same zero-dependency policy as `util/json`).
+//!
+//! ```toml
+//! # one section per rule family
+//! [determinism]
+//! paths = ["fl/server.rs", "sim/*"]   # exact path or `dir/*` prefix, or "*"
+//! allow = ["fl/runner.rs::wall_clock"] # `file` or `file::fn` escape hatch
+//! ```
+//!
+//! Only string arrays are supported, `#` starts a comment outside strings,
+//! arrays may span lines. Unknown keys or sections are hard errors so the
+//! manifest cannot silently drift from the rule set.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Scope + allowlist for one rule family.
+#[derive(Debug, Clone, Default)]
+pub struct RuleScope {
+    /// Path patterns this rule applies to: exact relative path, `dir/*`
+    /// prefix, or `*` for everything.
+    pub paths: Vec<String>,
+    /// Allowlist entries: `relative/path.rs` (whole file) or
+    /// `relative/path.rs::fn_name` (one function).
+    pub allow: Vec<String>,
+}
+
+impl RuleScope {
+    pub fn covers(&self, rel: &str) -> bool {
+        self.paths.iter().any(|p| match_pattern(p, rel))
+    }
+
+    pub fn allows_file(&self, rel: &str) -> bool {
+        self.allow.iter().any(|a| a == rel)
+    }
+
+    pub fn allows_fn(&self, rel: &str, fn_name: &str) -> bool {
+        self.allow
+            .iter()
+            .any(|a| a.len() == rel.len() + 2 + fn_name.len()
+                && a.starts_with(rel)
+                && a.ends_with(fn_name)
+                && a[rel.len()..].starts_with("::"))
+    }
+}
+
+fn match_pattern(pat: &str, rel: &str) -> bool {
+    if pat == "*" || pat == rel {
+        return true;
+    }
+    if let Some(prefix) = pat.strip_suffix('*') {
+        return rel.starts_with(prefix);
+    }
+    false
+}
+
+/// The parsed manifest: one [`RuleScope`] per rule family.
+#[derive(Debug, Clone, Default)]
+pub struct AnalyzeConfig {
+    pub rules: BTreeMap<String, RuleScope>,
+}
+
+impl AnalyzeConfig {
+    /// Parse manifest text. `known_rules` pins the accepted section names;
+    /// every known rule must have a section and no section may be unknown.
+    pub fn parse(text: &str, known_rules: &[&str]) -> Result<AnalyzeConfig> {
+        let mut cfg = AnalyzeConfig::default();
+        let mut section: Option<String> = None;
+
+        let mut lines = text.lines().enumerate().peekable();
+        while let Some((ln, raw)) = lines.next() {
+            let line = strip_comment(raw);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("manifest line {}: unterminated section", ln + 1))?
+                    .trim()
+                    .to_string();
+                if name.is_empty() || !name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_')
+                {
+                    bail!("manifest line {}: bad section name '{}'", ln + 1, name);
+                }
+                if !known_rules.contains(&name.as_str()) {
+                    bail!(
+                        "manifest line {}: unknown rule section '{}' (known: {})",
+                        ln + 1,
+                        name,
+                        known_rules.join(", ")
+                    );
+                }
+                if cfg.rules.contains_key(&name) {
+                    bail!("manifest line {}: duplicate section '{}'", ln + 1, name);
+                }
+                cfg.rules.insert(name.clone(), RuleScope::default());
+                section = Some(name);
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: expected `key = [...]`", ln + 1))?;
+            let key = key.trim();
+            let sec = section
+                .clone()
+                .ok_or_else(|| anyhow!("manifest line {}: key before any [section]", ln + 1))?;
+            let mut value = value.trim().to_string();
+            // Arrays may span lines: keep appending until brackets balance.
+            while bracket_balance(&value) > 0 {
+                let (ln2, next) = lines
+                    .next()
+                    .ok_or_else(|| anyhow!("manifest line {}: unterminated array", ln + 1))?;
+                let _ = ln2;
+                value.push(' ');
+                value.push_str(strip_comment(next).trim());
+            }
+            let items = parse_string_array(&value)
+                .map_err(|e| anyhow!("manifest line {}: {}", ln + 1, e))?;
+            let scope = cfg.rules.get_mut(&sec).expect("section just inserted");
+            match key {
+                "paths" => scope.paths = items,
+                "allow" => scope.allow = items,
+                other => bail!(
+                    "manifest line {}: unknown key '{}' (expected paths/allow)",
+                    ln + 1,
+                    other
+                ),
+            }
+        }
+
+        for rule in known_rules {
+            let scope = cfg
+                .rules
+                .get(*rule)
+                .ok_or_else(|| anyhow!("manifest is missing a [{}] section", rule))?;
+            if scope.paths.is_empty() {
+                bail!("manifest section [{}] has no `paths` entry", rule);
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Cut a trailing `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Net `[`/`]` balance outside strings.
+fn bracket_balance(s: &str) -> i64 {
+    let mut bal = 0i64;
+    let mut in_str = false;
+    for c in s.bytes() {
+        match c {
+            b'"' => in_str = !in_str,
+            b'[' if !in_str => bal += 1,
+            b']' if !in_str => bal -= 1,
+            _ => {}
+        }
+    }
+    bal
+}
+
+/// Parse `["a", "b"]` into its string items.
+fn parse_string_array(s: &str) -> Result<Vec<String>, String> {
+    let s = s.trim();
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|r| r.strip_suffix(']'))
+        .ok_or_else(|| format!("expected a [\"...\"] array, got `{s}`"))?;
+    let mut items = Vec::new();
+    let b = inner.as_bytes();
+    let mut i = 0usize;
+    loop {
+        while i < b.len() && (b[i] == b' ' || b[i] == b'\t' || b[i] == b',') {
+            i += 1;
+        }
+        if i >= b.len() {
+            break;
+        }
+        if b[i] != b'"' {
+            return Err(format!("expected a quoted string in array, got `{inner}`"));
+        }
+        i += 1;
+        let start = i;
+        while i < b.len() && b[i] != b'"' {
+            i += 1;
+        }
+        if i >= b.len() {
+            return Err("unterminated string in array".to_string());
+        }
+        items.push(inner[start..i].to_string());
+        i += 1;
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KNOWN: &[&str] = &["determinism", "panic_safety"];
+
+    #[test]
+    fn parses_sections_and_arrays() {
+        let cfg = AnalyzeConfig::parse(
+            "# top comment\n[determinism]\npaths = [\"fl/server.rs\", \"sim/*\"] # inline\nallow = []\n\n[panic_safety]\npaths = [\n  \"compress/wire.rs\",\n]\nallow = [\"fl/server.rs::debug_dump\"]\n",
+            KNOWN,
+        )
+        .unwrap();
+        let det = &cfg.rules["determinism"];
+        assert!(det.covers("fl/server.rs"));
+        assert!(det.covers("sim/clock.rs"));
+        assert!(!det.covers("fl/runner.rs"));
+        let ps = &cfg.rules["panic_safety"];
+        assert!(ps.covers("compress/wire.rs"));
+        assert!(ps.allows_fn("fl/server.rs", "debug_dump"));
+        assert!(!ps.allows_fn("fl/server.rs", "ingest"));
+        assert!(!ps.allows_file("fl/server.rs"));
+    }
+
+    #[test]
+    fn rejects_unknown_sections_keys_and_missing_rules() {
+        assert!(AnalyzeConfig::parse("[mystery]\npaths=[\"*\"]\n", KNOWN).is_err());
+        assert!(AnalyzeConfig::parse("[determinism]\nbad = [\"*\"]\n", KNOWN).is_err());
+        // missing panic_safety section
+        assert!(AnalyzeConfig::parse("[determinism]\npaths=[\"*\"]\n", KNOWN).is_err());
+    }
+
+    #[test]
+    fn wildcard_scope() {
+        let cfg = AnalyzeConfig::parse(
+            "[determinism]\npaths=[\"*\"]\n[panic_safety]\npaths=[\"*\"]\n",
+            KNOWN,
+        )
+        .unwrap();
+        assert!(cfg.rules["determinism"].covers("anything/at/all.rs"));
+    }
+}

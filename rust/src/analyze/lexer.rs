@@ -1,0 +1,758 @@
+//! A small Rust lexer for the static analyzer — not a parser.
+//!
+//! One pass over the raw text *scrubs* everything that is not code
+//! (comments, string/byte-string/char literals — including raw strings
+//! with arbitrary `#` fences and nested block comments) to spaces while
+//! collecting the comment text and literal values per line. A second pass
+//! over the scrubbed text recovers just enough structure for the rules:
+//!
+//! * `fn` spans (declaration line → closing brace), innermost-wins;
+//! * `#[cfg(test)]` / `#[test]` item spans (rules skip test code);
+//! * `unsafe` sites (blocks, `unsafe fn`, `unsafe impl`, `unsafe trait`);
+//! * waiver comments — `// analyze: allow(<rule>[, <rule>…]): reason` —
+//!   resolved to a line range: the same line for a trailing comment, the
+//!   whole next `fn` when the comment sits directly above a declaration,
+//!   otherwise just the next code line.
+//!
+//! The lexer is deliberately heuristic where full parsing would be needed
+//! (lifetimes vs char literals, attribute extents); the heuristics are
+//! pinned by fixtures in `tests/analyze_fixtures/lexer/`.
+
+/// One `fn` item span (0-indexed lines, inclusive).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub decl: usize,
+    /// Line of the opening brace.
+    pub open: usize,
+    /// Line of the matching closing brace.
+    pub end: usize,
+}
+
+/// What kind of `unsafe` appeared at a site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnsafeKind {
+    Block,
+    Fn,
+    Impl,
+    Trait,
+}
+
+impl UnsafeKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            UnsafeKind::Block => "unsafe block",
+            UnsafeKind::Fn => "unsafe fn",
+            UnsafeKind::Impl => "unsafe impl",
+            UnsafeKind::Trait => "unsafe trait",
+        }
+    }
+}
+
+/// One `unsafe` occurrence (0-indexed line of the `unsafe` keyword).
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub line: usize,
+    pub kind: UnsafeKind,
+}
+
+/// A resolved `analyze: allow(...)` waiver: `rule` is waived on lines
+/// `start..=end` (0-indexed).
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A lexed source file: scrubbed code plus the structure the rules need.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Path relative to the analysis root, always `/`-separated.
+    pub rel_path: String,
+    /// Code with comments and literal bodies blanked to spaces, one entry
+    /// per source line.
+    pub lines: Vec<String>,
+    /// Comment text per line (empty if the line carries no comment; the
+    /// leading `//`, `/*` etc. delimiters are stripped, inner `!`/`/` doc
+    /// markers kept).
+    pub comments: Vec<String>,
+    /// String / byte-string literal contents: `(line, raw_inner_text)`.
+    pub literals: Vec<(usize, String)>,
+    pub fns: Vec<FnSpan>,
+    /// Inclusive line spans of `#[cfg(test)]` / `#[test]` items.
+    pub test_spans: Vec<(usize, usize)>,
+    pub unsafes: Vec<UnsafeSite>,
+    pub waivers: Vec<Waiver>,
+}
+
+impl SourceFile {
+    /// Is `line` inside a `#[cfg(test)]` / `#[test]` item?
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| s <= line && line <= e)
+    }
+
+    /// The innermost `fn` span containing `line`, if any.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.decl <= line && line <= f.end)
+            .min_by_key(|f| f.end - f.decl)
+    }
+
+    /// Is `rule` waived at `line` by an `analyze: allow(...)` comment?
+    pub fn waived(&self, rule: &str, line: usize) -> bool {
+        self.waivers
+            .iter()
+            .any(|w| w.rule == rule && w.start <= line && line <= w.end)
+    }
+
+    /// Does the `unsafe` site at `line` carry an adjacent `// SAFETY:`
+    /// comment? Adjacent = on the site line itself, on the line directly
+    /// below (first line of a block body), or in the contiguous
+    /// comment/attribute block immediately above.
+    pub fn has_safety_comment(&self, line: usize) -> bool {
+        let marked = |l: usize| {
+            self.comments
+                .get(l)
+                .map(|c| c.contains("SAFETY"))
+                .unwrap_or(false)
+        };
+        if marked(line) || marked(line + 1) {
+            return true;
+        }
+        let mut l = line;
+        while l > 0 {
+            l -= 1;
+            if marked(l) {
+                return true;
+            }
+            let has_comment = self.comments.get(l).map(|c| !c.is_empty()).unwrap_or(false);
+            let code = self.lines.get(l).map(String::as_str).unwrap_or("").trim();
+            let attr_only = code.starts_with('#') || code.is_empty();
+            if !(has_comment || attr_only) {
+                break; // a real code line ends the adjacency window
+            }
+        }
+        false
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex a file's text. `rel_path` is carried through to diagnostics.
+pub fn lex_str(rel_path: &str, text: &str) -> SourceFile {
+    let (scrub, comments, literals) = scrub_pass(text);
+    let lines: Vec<String> = split_keep_count(&scrub);
+    let comment_lines = comments;
+    let (fns, test_spans, unsafes) = structure_pass(&lines);
+    let waivers = resolve_waivers(&lines, &comment_lines, &fns);
+    SourceFile {
+        rel_path: rel_path.to_string(),
+        lines,
+        comments: comment_lines,
+        literals,
+        fns,
+        test_spans,
+        unsafes,
+        waivers,
+    }
+}
+
+/// Split scrubbed text into lines, preserving the count (including a
+/// trailing line without a newline).
+fn split_keep_count(s: &str) -> Vec<String> {
+    let mut out: Vec<String> = s.split('\n').map(|l| l.to_string()).collect();
+    // `split` yields a final empty element for text ending in '\n'; that
+    // phantom line has no source counterpart only when the file ends
+    // exactly at the newline — keep it, it is harmless (all-blank).
+    if out.is_empty() {
+        out.push(String::new());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: scrub comments and literals.
+// ---------------------------------------------------------------------------
+
+type ScrubOut = (String, Vec<String>, Vec<(usize, String)>);
+
+fn scrub_pass(text: &str) -> ScrubOut {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut literals: Vec<(usize, String)> = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+
+    // Helpers operate on the captured locals via macros to keep borrows
+    // simple in this hand-rolled state machine.
+    macro_rules! newline {
+        () => {{
+            out.push(b'\n');
+            line += 1;
+            comments.push(String::new());
+            i += 1;
+        }};
+    }
+    macro_rules! blank {
+        () => {{
+            out.push(b' ');
+            i += 1;
+        }};
+    }
+    macro_rules! comment_byte {
+        ($byte:expr) => {{
+            comments[line].push($byte as char);
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            newline!();
+            continue;
+        }
+        // Line comment.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            blank!();
+            blank!();
+            while i < n && b[i] != b'\n' {
+                comment_byte!(b[i]);
+                blank!();
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            blank!();
+            blank!();
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    newline!();
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    blank!();
+                    blank!();
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    blank!();
+                    blank!();
+                } else {
+                    comment_byte!(b[i]);
+                    blank!();
+                }
+            }
+            continue;
+        }
+        let prev_ident = out.last().copied().map(is_ident).unwrap_or(false);
+        // Raw strings: r"..." / r#"..."# / br#"..."# (b consumed below).
+        if (c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r')) && !prev_ident {
+            let pfx = if c == b'b' { 2 } else { 1 };
+            let mut h = 0usize;
+            while i + pfx + h < n && b[i + pfx + h] == b'#' {
+                h += 1;
+            }
+            if i + pfx + h < n && b[i + pfx + h] == b'"' {
+                for _ in 0..pfx + h + 1 {
+                    blank!();
+                }
+                let start_line = line;
+                let mut val = String::new();
+                loop {
+                    if i >= n {
+                        break; // unterminated — tolerate
+                    }
+                    if b[i] == b'"' && i + h < n - 0 && b[i + 1..].len() >= h
+                        && b[i + 1..i + 1 + h].iter().all(|&x| x == b'#')
+                    {
+                        for _ in 0..h + 1 {
+                            blank!();
+                        }
+                        break;
+                    }
+                    if b[i] == b'\n' {
+                        val.push('\n');
+                        newline!();
+                    } else {
+                        val.push(b[i] as char);
+                        blank!();
+                    }
+                }
+                literals.push((start_line, val));
+                continue;
+            }
+            // Not a raw string: fall through, copy as code.
+        }
+        // Plain / byte strings.
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"' && !prev_ident) {
+            if c == b'b' {
+                blank!();
+            }
+            blank!(); // opening quote
+            let start_line = line;
+            let mut val = String::new();
+            while i < n {
+                match b[i] {
+                    b'"' => {
+                        blank!();
+                        break;
+                    }
+                    b'\\' => {
+                        val.push('\\');
+                        blank!();
+                        if i < n && b[i] != b'\n' {
+                            val.push(b[i] as char);
+                            blank!();
+                        }
+                    }
+                    b'\n' => {
+                        val.push('\n');
+                        newline!();
+                    }
+                    x => {
+                        val.push(x as char);
+                        blank!();
+                    }
+                }
+            }
+            literals.push((start_line, val));
+            continue;
+        }
+        // Byte char b'x'.
+        if c == b'b' && i + 1 < n && b[i + 1] == b'\'' && !prev_ident {
+            blank!();
+            blank!();
+            if i < n && b[i] == b'\\' {
+                blank!();
+                if i < n {
+                    blank!();
+                }
+            } else if i < n {
+                blank!();
+            }
+            if i < n && b[i] == b'\'' {
+                blank!();
+            }
+            continue;
+        }
+        // Char literal vs lifetime/label.
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: blank the escaped character first
+                // (it may itself be a quote, as in '\''), then scan to the
+                // closing quote.
+                blank!(); // '
+                blank!(); // backslash
+                if i < n && b[i] != b'\n' {
+                    blank!();
+                }
+                while i < n && b[i] != b'\'' && b[i] != b'\n' {
+                    blank!();
+                }
+                if i < n && b[i] == b'\'' {
+                    blank!();
+                }
+                continue;
+            }
+            // One UTF-8 scalar, then a quote ⇒ char literal; else lifetime.
+            let clen = if i + 1 < n {
+                utf8_len(b[i + 1])
+            } else {
+                1
+            };
+            if i + 1 + clen < n && b[i + 1 + clen] == b'\'' {
+                for _ in 0..clen + 2 {
+                    blank!();
+                }
+            } else {
+                out.push(b'\'');
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+
+    // UTF-8 multibyte code bytes were copied verbatim; the scrub buffer is
+    // valid UTF-8 because literals/comments (the only places we blank
+    // mid-char) are blanked whole.
+    let scrub = String::from_utf8_lossy(&out).into_owned();
+    (scrub, comments, literals)
+}
+
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        x if x < 0x80 => 1,
+        x if x >= 0xF0 => 4,
+        x if x >= 0xE0 => 3,
+        x if x >= 0xC0 => 2,
+        _ => 1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2: structure (fn spans, test spans, unsafe sites).
+// ---------------------------------------------------------------------------
+
+struct Open {
+    kind: OpenKind,
+    line: usize,
+    test_marker: bool,
+}
+
+enum OpenKind {
+    Plain,
+    Fn(usize),
+}
+
+type StructureOut = (Vec<FnSpan>, Vec<(usize, usize)>, Vec<UnsafeSite>);
+
+fn structure_pass(lines: &[String]) -> StructureOut {
+    let mut fns: Vec<FnSpan> = Vec::new();
+    let mut test_spans: Vec<(usize, usize)> = Vec::new();
+    let mut unsafes: Vec<UnsafeSite> = Vec::new();
+
+    let mut stack: Vec<Open> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_fn: Option<(String, usize)> = None;
+    let mut pending_unsafe: Option<usize> = None;
+    let mut expecting_fn_name = false;
+    // `;` only clears pending markers outside ( ) / [ ] groups, so
+    // signatures like `fn f(a: [u8; 4])` survive to their brace.
+    let mut group_depth = 0i64;
+    // Multi-line attribute accumulation.
+    let mut attr_depth = 0i64;
+    let mut attr_text = String::new();
+
+    for (ln, l) in lines.iter().enumerate() {
+        let bytes = l.as_bytes();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let c = bytes[i];
+            if attr_depth > 0 {
+                match c {
+                    b'[' => attr_depth += 1,
+                    b']' => {
+                        attr_depth -= 1;
+                        if attr_depth == 0 {
+                            if attr_is_test(&attr_text) {
+                                pending_test = true;
+                            }
+                            attr_text.clear();
+                        }
+                    }
+                    x => attr_text.push(x as char),
+                }
+                i += 1;
+                continue;
+            }
+            match c {
+                b'#' => {
+                    // `#[` / `#![` attribute start; anything else is code.
+                    let mut j = i + 1;
+                    if j < bytes.len() && bytes[j] == b'!' {
+                        j += 1;
+                    }
+                    if j < bytes.len() && bytes[j] == b'[' {
+                        attr_depth = 1;
+                        attr_text.clear();
+                        i = j + 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                b'(' | b'[' => {
+                    group_depth += 1;
+                    i += 1;
+                }
+                b')' | b']' => {
+                    group_depth -= 1;
+                    i += 1;
+                }
+                b';' => {
+                    if group_depth <= 0 {
+                        pending_fn = None;
+                        pending_test = false;
+                        pending_unsafe = None;
+                        expecting_fn_name = false;
+                    }
+                    i += 1;
+                }
+                b'{' => {
+                    if let Some(ul) = pending_unsafe.take() {
+                        unsafes.push(UnsafeSite {
+                            line: ul,
+                            kind: UnsafeKind::Block,
+                        });
+                        stack.push(Open {
+                            kind: OpenKind::Plain,
+                            line: ln,
+                            test_marker: false,
+                        });
+                    } else if let Some((name, decl)) = pending_fn.take() {
+                        let idx = fns.len();
+                        fns.push(FnSpan {
+                            name,
+                            decl,
+                            open: ln,
+                            end: ln,
+                        });
+                        stack.push(Open {
+                            kind: OpenKind::Fn(idx),
+                            line: ln.min(decl),
+                            test_marker: std::mem::take(&mut pending_test),
+                        });
+                    } else {
+                        stack.push(Open {
+                            kind: OpenKind::Plain,
+                            line: ln,
+                            test_marker: std::mem::take(&mut pending_test),
+                        });
+                    }
+                    i += 1;
+                }
+                b'}' => {
+                    if let Some(open) = stack.pop() {
+                        if let OpenKind::Fn(idx) = open.kind {
+                            fns[idx].end = ln;
+                        }
+                        if open.test_marker {
+                            test_spans.push((open.line, ln));
+                        }
+                    }
+                    i += 1;
+                }
+                x if is_ident(x) => {
+                    let start = i;
+                    while i < bytes.len() && is_ident(bytes[i]) {
+                        i += 1;
+                    }
+                    let word = &l[start..i];
+                    if expecting_fn_name {
+                        pending_fn = Some((word.to_string(), ln));
+                        expecting_fn_name = false;
+                        continue;
+                    }
+                    match word {
+                        "fn" => {
+                            if let Some(ul) = pending_unsafe.take() {
+                                unsafes.push(UnsafeSite {
+                                    line: ul,
+                                    kind: UnsafeKind::Fn,
+                                });
+                            }
+                            expecting_fn_name = true;
+                        }
+                        "unsafe" => pending_unsafe = Some(ln),
+                        "impl" => {
+                            if let Some(ul) = pending_unsafe.take() {
+                                unsafes.push(UnsafeSite {
+                                    line: ul,
+                                    kind: UnsafeKind::Impl,
+                                });
+                            }
+                        }
+                        "trait" => {
+                            if let Some(ul) = pending_unsafe.take() {
+                                unsafes.push(UnsafeSite {
+                                    line: ul,
+                                    kind: UnsafeKind::Trait,
+                                });
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                _ => i += 1,
+            }
+        }
+    }
+    // A `fn(` type (no name) leaves expecting_fn_name dangling across the
+    // `(`-group; the `(` path above does not clear it, but the next word
+    // would be misread. Guard: clear at line ends via the loop epilogue —
+    // handled implicitly since `(` is not a word; acceptable for this
+    // codebase's style (function-pointer types are rare and never precede
+    // an item brace).
+    (fns, test_spans, unsafes)
+}
+
+/// Does the attribute text mark a test item? Token-boundary match of
+/// `test` anywhere inside (covers `test`, `cfg(test)`, `cfg(all(test, …))`).
+fn attr_is_test(attr: &str) -> bool {
+    let b = attr.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = attr[from..].find("test") {
+        let at = from + p;
+        let before_ok = at == 0 || !is_ident(b[at - 1]);
+        let after = at + 4;
+        let after_ok = after >= b.len() || !is_ident(b[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + 4;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Waivers.
+// ---------------------------------------------------------------------------
+
+fn resolve_waivers(lines: &[String], comments: &[String], fns: &[FnSpan]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for (ln, c) in comments.iter().enumerate() {
+        for rule in parse_allow(c) {
+            let has_code = lines
+                .get(ln)
+                .map(|l| !l.trim().is_empty())
+                .unwrap_or(false);
+            let (start, end) = if has_code {
+                (ln, ln) // trailing comment: this line only
+            } else {
+                // Find the next code line, skipping attribute-only lines.
+                let mut l2 = ln + 1;
+                while l2 < lines.len() {
+                    let code = lines[l2].trim();
+                    if code.is_empty() || code.starts_with('#') {
+                        l2 += 1;
+                    } else {
+                        break;
+                    }
+                }
+                match fns.iter().find(|f| f.decl == l2) {
+                    Some(f) => (f.decl, f.end), // annotation above a fn
+                    None => (l2, l2),           // next code line only
+                }
+            };
+            out.push(Waiver { rule, start, end });
+        }
+    }
+    out
+}
+
+/// Extract rule names from `analyze: allow(a, b)` / `analyze::allow(a)`.
+fn parse_allow(comment: &str) -> Vec<String> {
+    let mut rules = Vec::new();
+    for marker in ["analyze: allow(", "analyze::allow("] {
+        let mut from = 0usize;
+        while let Some(p) = comment[from..].find(marker) {
+            let open = from + p + marker.len();
+            if let Some(close) = comment[open..].find(')') {
+                for r in comment[open..open + close].split(',') {
+                    let r = r.trim();
+                    if !r.is_empty() {
+                        rules.push(r.to_string());
+                    }
+                }
+                from = open + close;
+            } else {
+                break;
+            }
+        }
+    }
+    rules
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrubs_comments_and_strings() {
+        let f = lex_str(
+            "x.rs",
+            "let a = \"HashMap\"; // HashMap in comment\nlet b = 1; /* HashMap */ let c = 2;\n",
+        );
+        assert!(!f.lines[0].contains("HashMap"));
+        assert!(!f.lines[1].contains("HashMap"));
+        assert!(f.comments[0].contains("HashMap"));
+        assert!(f.comments[1].contains("HashMap"));
+        assert_eq!(f.literals.len(), 1);
+        assert_eq!(f.literals[0].1, "HashMap");
+        // Code around the literals survives.
+        assert!(f.lines[0].contains("let a ="));
+        assert!(f.lines[1].contains("let c = 2;"));
+    }
+
+    #[test]
+    fn fn_spans_and_enclosing() {
+        let src = "fn outer() {\n    let x = 1;\n    fn inner() {\n        let y = 2;\n    }\n}\n";
+        let f = lex_str("x.rs", src);
+        assert_eq!(f.fns.len(), 2);
+        let inner = f.enclosing_fn(3).unwrap();
+        assert_eq!(inner.name, "inner");
+        let outer = f.enclosing_fn(1).unwrap();
+        assert_eq!(outer.name, "outer");
+    }
+
+    #[test]
+    fn signature_brackets_do_not_eat_the_fn() {
+        // The `;` inside `[u8; 4]` must not clear the pending fn.
+        let f = lex_str("x.rs", "fn takes(a: [u8; 4]) -> u8 {\n    a.len() as u8\n}\n");
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "takes");
+        assert_eq!(f.fns[0].end, 2);
+    }
+
+    #[test]
+    fn unsafe_sites_and_safety_adjacency() {
+        let src = "\
+// SAFETY: documented argument.
+unsafe impl Send for X {}
+unsafe impl Sync for X {}
+fn f() {
+    unsafe { danger() } // SAFETY: same-line note
+    unsafe {
+        undocumented();
+    }
+}
+";
+        let f = lex_str("x.rs", src);
+        let kinds: Vec<UnsafeKind> = f.unsafes.iter().map(|u| u.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                UnsafeKind::Impl,
+                UnsafeKind::Impl,
+                UnsafeKind::Block,
+                UnsafeKind::Block
+            ]
+        );
+        assert!(f.has_safety_comment(f.unsafes[0].line));
+        // Second impl: nearest line above is code (the first impl) — not
+        // covered by the comment two lines up.
+        assert!(!f.has_safety_comment(f.unsafes[1].line));
+        assert!(f.has_safety_comment(f.unsafes[2].line));
+        assert!(!f.has_safety_comment(f.unsafes[3].line));
+    }
+
+    #[test]
+    fn waiver_scopes() {
+        let src = "\
+// analyze: allow(hotpath): reference path
+fn reference() {
+    x.acos();
+}
+fn other() {
+    // analyze: allow(hotpath): LUT build
+    y.cos();
+    z.cos();
+}
+let q = 1; // analyze: allow(determinism)
+";
+        let f = lex_str("x.rs", src);
+        assert!(f.waived("hotpath", 2), "fn-level waiver covers the body");
+        assert!(f.waived("hotpath", 6), "line waiver covers the next line");
+        assert!(!f.waived("hotpath", 7), "line waiver is one line only");
+        assert!(f.waived("determinism", 9), "trailing waiver covers its line");
+        assert!(!f.waived("panic_safety", 2), "other rules unaffected");
+    }
+}

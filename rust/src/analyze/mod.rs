@@ -1,0 +1,110 @@
+//! `repro analyze` — a zero-dependency static analyzer for the project's
+//! hand-enforced invariants.
+//!
+//! ```text
+//!            analyze.toml (scopes + allowlists, hand-rolled TOML subset)
+//!                 │
+//!   *.rs ──► lexer::lex_str ──► SourceFile (scrubbed lines, comments,
+//!                 │              literals, fn/test/unsafe spans, waivers)
+//!                 ▼
+//!            rules::all() ── determinism · panic_safety · hotpath
+//!                 │           unsafe_audit · wire
+//!                 ▼
+//!            report::Report (path-sorted; text / --json; exit 1 if dirty)
+//! ```
+//!
+//! The invariants are the ones the repo's correctness story rests on and a
+//! reviewer cannot re-check on every diff: bit-identical deterministic
+//! aggregation, panic-free decode of hostile CSG2 frames, transcendental-
+//! and allocation-free quantization kernels, documented `unsafe`, and a
+//! single source of truth for the 44-byte wire header. Scopes and escape
+//! hatches live in `rust/analyze.toml`; point waivers live next to the
+//! code as `// analyze: allow(<rule>): reason` comments.
+
+pub mod config;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use config::AnalyzeConfig;
+use lexer::SourceFile;
+use report::Report;
+
+/// Run every rule over the `.rs` files under `root` (paths in the report
+/// are `/`-separated and relative to `root`). `filters`, when non-empty,
+/// restricts scanning to files whose relative path starts with one of the
+/// given prefixes — cross-file wire checks that need `compress/wire.rs`
+/// degrade gracefully when it is filtered out.
+pub fn run(root: &Path, manifest: &Path, filters: &[String]) -> Result<Report> {
+    let rules = rules::all();
+    let known: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+    let manifest_text = std::fs::read_to_string(manifest)
+        .with_context(|| format!("reading manifest {}", manifest.display()))?;
+    let cfg = AnalyzeConfig::parse(&manifest_text, &known)
+        .with_context(|| format!("parsing manifest {}", manifest.display()))?;
+
+    let mut rel_paths = Vec::new();
+    collect_rs_files(root, root, &mut rel_paths)
+        .with_context(|| format!("walking {}", root.display()))?;
+    rel_paths.sort();
+    if !filters.is_empty() {
+        rel_paths.retain(|p| filters.iter().any(|f| p.starts_with(f.as_str())));
+    }
+
+    let mut files = Vec::with_capacity(rel_paths.len());
+    for rel in &rel_paths {
+        let text = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("reading {rel}"))?;
+        files.push(lexer::lex_str(rel, &text));
+    }
+    Ok(run_lexed(&files, &cfg, &rules))
+}
+
+/// Rule dispatch over already-lexed files (fixture tests enter here too).
+pub fn run_lexed(
+    files: &[SourceFile],
+    cfg: &AnalyzeConfig,
+    rules: &[Box<dyn rules::Rule>],
+) -> Report {
+    let mut diags = Vec::new();
+    let mut names = Vec::new();
+    for rule in rules {
+        let scope = cfg
+            .rules
+            .get(rule.name())
+            .cloned()
+            .unwrap_or_default(); // parse() guarantees presence; default = empty scope
+        diags.extend(rule.check(files, &scope));
+        names.push(rule.name().to_string());
+    }
+    Report::new(diags, files.len(), names)
+}
+
+/// Deterministic recursive walk: directory entries sorted by name at every
+/// level, `.rs` files only.
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Diagnostic report: deterministic ordering, text and JSON emit.
+
+use crate::util::json::Json;
+
+/// One rule violation. `line` is 1-indexed for display.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(path: &str, line0: usize, rule: &str, message: String) -> Diagnostic {
+        Diagnostic {
+            path: path.to_string(),
+            line: line0 + 1,
+            rule: rule.to_string(),
+            message,
+        }
+    }
+}
+
+/// The full analysis result.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Sorted by (path, line, rule, message) — byte-identical across runs.
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    /// Rule family names that ran, sorted.
+    pub rules_run: Vec<String>,
+}
+
+impl Report {
+    pub fn new(mut diagnostics: Vec<Diagnostic>, files_scanned: usize, mut rules: Vec<String>) -> Report {
+        diagnostics.sort();
+        diagnostics.dedup();
+        rules.sort();
+        Report {
+            diagnostics,
+            files_scanned,
+            rules_run: rules,
+        }
+    }
+
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-readable report, one `path:line: [rule] message` per finding.
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                d.path, d.line, d.rule, d.message
+            ));
+        }
+        out.push_str(&format!(
+            "analyze: {} violation(s), {} file(s) scanned, {} rule(s): {}\n",
+            self.diagnostics.len(),
+            self.files_scanned,
+            self.rules_run.len(),
+            self.rules_run.join(", ")
+        ));
+        out
+    }
+
+    /// Machine-readable report (pretty-printed, stable key order).
+    pub fn json(&self) -> String {
+        let violations: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj()
+                    .set("file", d.path.as_str())
+                    .set("line", d.line)
+                    .set("message", d.message.as_str())
+                    .set("rule", d.rule.as_str())
+            })
+            .collect();
+        Json::obj()
+            .set("clean", self.clean())
+            .set("files_scanned", self.files_scanned)
+            .set(
+                "rules",
+                Json::Arr(self.rules_run.iter().map(|r| Json::from(r.as_str())).collect()),
+            )
+            .set("violations", Json::Arr(violations))
+            .pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_and_deduped() {
+        let r = Report::new(
+            vec![
+                Diagnostic::new("b.rs", 4, "determinism", "x".into()),
+                Diagnostic::new("a.rs", 9, "hotpath", "y".into()),
+                Diagnostic::new("a.rs", 9, "hotpath", "y".into()),
+            ],
+            2,
+            vec!["hotpath".into(), "determinism".into()],
+        );
+        assert_eq!(r.diagnostics.len(), 2);
+        assert_eq!(r.diagnostics[0].path, "a.rs");
+        assert_eq!(r.rules_run, vec!["determinism", "hotpath"]);
+        assert!(r.text().starts_with("a.rs:10: [hotpath] y\n"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let r = Report::new(
+            vec![Diagnostic::new("a.rs", 0, "wire", "bad".into())],
+            1,
+            vec!["wire".into()],
+        );
+        let j = crate::util::json::Json::parse(&r.json()).unwrap();
+        assert_eq!(j.get("clean").unwrap().as_bool(), Some(false));
+        let v = j.get("violations").unwrap().as_arr().unwrap();
+        assert_eq!(v[0].get("line").unwrap().as_usize(), Some(1));
+        assert_eq!(v[0].get("rule").unwrap().as_str(), Some("wire"));
+    }
+}

@@ -1,0 +1,44 @@
+//! Rule `determinism`: order-sensitive modules (server aggregation, the
+//! round loop, transport, the event-driven simulator, the compression
+//! pipeline) must stay bit-identical across runs. Unordered containers,
+//! wall-clock reads, and OS-seeded RNG are banned there.
+
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::{scan_tokens, Rule};
+
+const BANNED: &[(&str, &str)] = &[
+    (
+        "HashMap",
+        "unordered iteration breaks bit-identical aggregation; use BTreeMap or sort keys before iterating",
+    ),
+    (
+        "HashSet",
+        "unordered iteration breaks bit-identical aggregation; use BTreeSet or a sorted Vec",
+    ),
+    (
+        "Instant",
+        "wall-clock reads are nondeterministic; thread sim::Clock time through the caller",
+    ),
+    (
+        "SystemTime",
+        "wall-clock reads are nondeterministic; thread sim::Clock time through the caller",
+    ),
+    (
+        "thread_rng",
+        "OS-seeded RNG is nondeterministic; use the seeded util::rng::Pcg64",
+    ),
+];
+
+pub struct Determinism;
+
+impl Rule for Determinism {
+    fn name(&self) -> &'static str {
+        "determinism"
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        scan_tokens(files, scope, self.name(), BANNED)
+    }
+}

@@ -1,0 +1,46 @@
+//! Rule `hotpath`: the quantization kernels went transcendental-free and
+//! allocation-free in PR 3 — per-element `cos`/`acos` etc. and per-call
+//! clones must not creep back into `compress/kernel.rs` / `bitpack.rs`.
+//! Reference paths and LUT builders carry `// analyze: allow(hotpath)`
+//! waivers instead of allowlist entries so the justification sits next to
+//! the code.
+
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::{scan_tokens, Rule};
+
+const TRANSCENDENTAL_WHY: &str =
+    "per-element transcendental call; use the LUT / polynomial fast path (PR 3)";
+const ALLOC_WHY: &str = "per-call allocation in a hot kernel; reuse caller-provided scratch";
+
+const BANNED: &[(&str, &str)] = &[
+    (".cos(", TRANSCENDENTAL_WHY),
+    (".acos(", TRANSCENDENTAL_WHY),
+    (".sin(", TRANSCENDENTAL_WHY),
+    (".asin(", TRANSCENDENTAL_WHY),
+    (".tan(", TRANSCENDENTAL_WHY),
+    (".atan(", TRANSCENDENTAL_WHY),
+    (".exp(", TRANSCENDENTAL_WHY),
+    (".exp2(", TRANSCENDENTAL_WHY),
+    (".ln(", TRANSCENDENTAL_WHY),
+    (".log2(", TRANSCENDENTAL_WHY),
+    (".log10(", TRANSCENDENTAL_WHY),
+    (".powf(", TRANSCENDENTAL_WHY),
+    (".clone()", ALLOC_WHY),
+    (".to_vec()", ALLOC_WHY),
+    (".to_owned()", ALLOC_WHY),
+    ("vec![", ALLOC_WHY),
+];
+
+pub struct HotPath;
+
+impl Rule for HotPath {
+    fn name(&self) -> &'static str {
+        "hotpath"
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        scan_tokens(files, scope, self.name(), BANNED)
+    }
+}

@@ -1,0 +1,126 @@
+//! The rule families and shared matching helpers.
+//!
+//! Each rule implements [`Rule`] over the full set of lexed files; most are
+//! per-line token scans, `wire` is a cross-file consistency check. Shared
+//! suppression logic: test spans, manifest allowlists (file or `file::fn`),
+//! and inline `// analyze: allow(rule)` waivers.
+
+mod determinism;
+mod hotpath;
+mod panic_safety;
+mod unsafe_audit;
+mod wire;
+
+use super::config::RuleScope;
+use super::lexer::SourceFile;
+use super::report::Diagnostic;
+
+/// One rule family.
+pub trait Rule {
+    fn name(&self) -> &'static str;
+    /// Scan `files` (already restricted to `.rs` sources under the root);
+    /// `scope` carries the manifest paths/allowlist for this rule.
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic>;
+}
+
+/// All rule families, in a fixed order (the report re-sorts anyway).
+pub fn all() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(determinism::Determinism),
+        Box::new(panic_safety::PanicSafety),
+        Box::new(hotpath::HotPath),
+        Box::new(unsafe_audit::UnsafeAudit),
+        Box::new(wire::WireInvariants),
+    ]
+}
+
+/// Is the finding at `line` (0-indexed) suppressed for `rule`?
+pub(crate) fn suppressed(file: &SourceFile, scope: &RuleScope, rule: &str, line: usize) -> bool {
+    if file.in_test(line) {
+        return true;
+    }
+    if scope.allows_file(&file.rel_path) {
+        return true;
+    }
+    if let Some(f) = file.enclosing_fn(line) {
+        if scope.allows_fn(&file.rel_path, &f.name) {
+            return true;
+        }
+    }
+    file.waived(rule, line)
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `line` contain `token` at identifier boundaries? Boundaries are
+/// only enforced on token ends that are themselves identifier characters,
+/// so `.unwrap()` matches as a substring while `HashMap` will not match
+/// inside `MyHashMapExt`.
+pub(crate) fn token_hit(line: &str, token: &str) -> bool {
+    let lb = line.as_bytes();
+    let tb = token.as_bytes();
+    if tb.is_empty() {
+        return false;
+    }
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(token) {
+        let at = from + p;
+        let before_ok =
+            !is_ident_char(tb[0]) || at == 0 || !is_ident_char(lb[at - 1]);
+        let end = at + tb.len();
+        let after_ok =
+            !is_ident_char(tb[tb.len() - 1]) || end >= lb.len() || !is_ident_char(lb[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// Per-line token scan shared by determinism / panic-safety / hot-path:
+/// emit one diagnostic per (line, banned token).
+pub(crate) fn scan_tokens(
+    files: &[SourceFile],
+    scope: &RuleScope,
+    rule: &'static str,
+    banned: &[(&str, &str)],
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for file in files {
+        if !scope.covers(&file.rel_path) {
+            continue;
+        }
+        for (ln, line) in file.lines.iter().enumerate() {
+            for (token, why) in banned {
+                if token_hit(line, token) && !suppressed(file, scope, rule, ln) {
+                    out.push(Diagnostic::new(
+                        &file.rel_path,
+                        ln,
+                        rule,
+                        format!("`{token}`: {why}"),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_boundaries() {
+        assert!(token_hit("let m: HashMap<u32, u32> = x;", "HashMap"));
+        assert!(!token_hit("let m: MyHashMapExt = x;", "HashMap"));
+        assert!(token_hit("v.unwrap();", ".unwrap()"));
+        assert!(!token_hit("v.unwrap_or(0);", ".unwrap()"));
+        assert!(token_hit("x.expect(\"\");", ".expect("));
+        assert!(!token_hit("x.expect_err(\"\");", ".expect("));
+        assert!(token_hit("std::time::Instant::now()", "Instant"));
+    }
+}

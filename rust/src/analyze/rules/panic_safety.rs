@@ -1,0 +1,81 @@
+//! Rule `panic_safety`: untrusted-input paths (CSG2 frame decode, server
+//! ingest) must refuse hostile bytes with `Ingest::Malformed` / `Err`,
+//! never a panic. Panicking combinators and bare slice indexing are banned.
+
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::{scan_tokens, suppressed, Rule};
+
+const BANNED: &[(&str, &str)] = &[
+    (".unwrap()", "panics on None/Err; propagate with `?` or match"),
+    (".expect(", "panics on None/Err; propagate with `?` or match"),
+    ("panic!", "hostile input must map to Malformed/Err, not a panic"),
+    ("unreachable!", "hostile input can reach it; return an error"),
+    ("todo!", "unfinished path reachable from untrusted input"),
+    ("unimplemented!", "unfinished path reachable from untrusted input"),
+];
+
+pub struct PanicSafety;
+
+impl Rule for PanicSafety {
+    fn name(&self) -> &'static str {
+        "panic_safety"
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        let mut out = scan_tokens(files, scope, self.name(), BANNED);
+        // Bare indexing `x[i]` / `x[a..b]` panics out of bounds; require
+        // `.get(..)`. `vec![..]` (macro), `#[..]` (attribute), and type
+        // positions like `&[u8]` are excluded by the preceding character.
+        for file in files {
+            if !scope.covers(&file.rel_path) {
+                continue;
+            }
+            for (ln, line) in file.lines.iter().enumerate() {
+                if has_bare_indexing(line) && !suppressed(file, scope, self.name(), ln) {
+                    out.push(Diagnostic::new(
+                        &file.rel_path,
+                        ln,
+                        self.name(),
+                        "bare slice/array indexing panics out of bounds; use `.get(..)`"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `[` directly preceded by an identifier character, `)` or `]` is an
+/// index expression (Rust style never puts a space there).
+fn has_bare_indexing(line: &str) -> bool {
+    let b = line.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if c != b'[' || i == 0 {
+            continue;
+        }
+        let p = b[i - 1];
+        if p.is_ascii_alphanumeric() || p == b'_' || p == b')' || p == b']' {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_heuristic() {
+        assert!(has_bare_indexing("let x = bytes[0];"));
+        assert!(has_bare_indexing("acc[off..off + v.len()].fill(0.0);"));
+        assert!(has_bare_indexing("f(x)[1]"));
+        assert!(!has_bare_indexing("let v = vec![0u8; 4];"));
+        assert!(!has_bare_indexing("#[derive(Debug)]"));
+        assert!(!has_bare_indexing("fn f(x: &[u8]) -> [u8; 4] {"));
+        assert!(!has_bare_indexing("let [a, b] = pair;"));
+    }
+}

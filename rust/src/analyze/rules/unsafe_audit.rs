@@ -1,0 +1,44 @@
+//! Rule `unsafe_audit`: every `unsafe` block / fn / impl / trait must
+//! carry an adjacent `// SAFETY:` comment stating the invariant that makes
+//! it sound (same line, the line below for block bodies, or the comment
+//! block directly above).
+
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::{suppressed, Rule};
+
+pub struct UnsafeAudit;
+
+impl Rule for UnsafeAudit {
+    fn name(&self) -> &'static str {
+        "unsafe_audit"
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for file in files {
+            if !scope.covers(&file.rel_path) {
+                continue;
+            }
+            for site in &file.unsafes {
+                if file.has_safety_comment(site.line) {
+                    continue;
+                }
+                if suppressed(file, scope, self.name(), site.line) {
+                    continue;
+                }
+                out.push(Diagnostic::new(
+                    &file.rel_path,
+                    site.line,
+                    self.name(),
+                    format!(
+                        "{} without an adjacent `// SAFETY:` comment documenting the invariant",
+                        site.kind.label()
+                    ),
+                ));
+            }
+        }
+        out
+    }
+}

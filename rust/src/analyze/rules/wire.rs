@@ -1,0 +1,252 @@
+//! Rule `wire`: cross-file consistency of the CSG2 framing constants.
+//!
+//! * `HEADER_BYTES` is defined exactly once, in `compress/wire.rs`; every
+//!   consumer imports it — a second definition or a bare `44` literal in
+//!   compress/fl code can silently diverge from the real header size.
+//! * The header layout doc table in `compress/wire.rs` (`offset size
+//!   field` rows) must be cumulative and end at `HEADER_BYTES`, with a
+//!   4-byte `magic` row — the table *is* the format spec the simulator's
+//!   byte accounting relies on.
+//! * Magic byte strings (`CSG2`/`CSG1`) appear only in `compress/wire.rs`;
+//!   consumers use `wire::MAGIC`.
+
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::{suppressed, token_hit, Rule};
+
+const RULE: &str = "wire";
+const CANON: &str = "compress/wire.rs";
+
+pub struct WireInvariants;
+
+impl Rule for WireInvariants {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+
+        // Collect every `const HEADER_BYTES` definition in scope.
+        let mut defs: Vec<(&SourceFile, usize, Option<usize>)> = Vec::new();
+        for file in files {
+            if !scope.covers(&file.rel_path) {
+                continue;
+            }
+            for (ln, line) in file.lines.iter().enumerate() {
+                if file.in_test(ln) {
+                    continue;
+                }
+                if token_hit(line, "HEADER_BYTES") && token_hit(line, "const") {
+                    defs.push((file, ln, parse_const_value(line)));
+                }
+            }
+        }
+
+        let canonical = defs.iter().find(|(f, _, _)| f.rel_path == CANON).cloned();
+        for (file, ln, _) in &defs {
+            if file.rel_path != CANON && !suppressed(file, scope, RULE, *ln) {
+                out.push(Diagnostic::new(
+                    &file.rel_path,
+                    *ln,
+                    RULE,
+                    format!(
+                        "duplicate HEADER_BYTES definition; the single source of truth is {CANON}"
+                    ),
+                ));
+            }
+        }
+
+        let wire_file = files.iter().find(|f| f.rel_path == CANON);
+        if let Some(wf) = wire_file {
+            match canonical {
+                None => out.push(Diagnostic::new(
+                    CANON,
+                    0,
+                    RULE,
+                    "missing `const HEADER_BYTES` definition".to_string(),
+                )),
+                Some((_, def_line, value)) => {
+                    let header = match value {
+                        Some(v) => v,
+                        None => {
+                            out.push(Diagnostic::new(
+                                CANON,
+                                def_line,
+                                RULE,
+                                "HEADER_BYTES must be a literal integer".to_string(),
+                            ));
+                            return out;
+                        }
+                    };
+                    check_doc_table(wf, header, &mut out);
+                    check_bare_literals(files, scope, header, def_line, &mut out);
+                }
+            }
+        }
+
+        // Magic strings outside the canonical file.
+        for file in files {
+            if !scope.covers(&file.rel_path) || file.rel_path == CANON {
+                continue;
+            }
+            for (ln, val) in &file.literals {
+                if (val.contains("CSG2") || val.contains("CSG1"))
+                    && !file.in_test(*ln)
+                    && !suppressed(file, scope, RULE, *ln)
+                {
+                    out.push(Diagnostic::new(
+                        &file.rel_path,
+                        *ln,
+                        RULE,
+                        format!("magic bytes hardcoded outside {CANON}; use wire::MAGIC"),
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Parse `... = <int>;` off a const definition line.
+fn parse_const_value(line: &str) -> Option<usize> {
+    let rhs = line.split('=').nth(1)?;
+    rhs.trim().trim_end_matches(';').trim().parse().ok()
+}
+
+/// Validate the `offset size field` doc table in the canonical file:
+/// consecutive comment rows whose first token is an integer, sizes
+/// cumulative, terminated by a `<HEADER> .. payload` row.
+fn check_doc_table(wf: &SourceFile, header: usize, out: &mut Vec<Diagnostic>) {
+    let mut expected = 0usize;
+    let mut rows = 0usize;
+    let mut terminated = false;
+    for (ln, c) in wf.comments.iter().enumerate() {
+        let text = c.trim_start_matches(['!', '/']).trim();
+        let mut toks = text.split_whitespace();
+        let first = toks.next().unwrap_or("");
+        let offset: usize = match first.parse() {
+            Ok(v) => v,
+            Err(_) => continue,
+        };
+        let size = toks.next().unwrap_or("");
+        let field = toks.next().unwrap_or("");
+        if size == ".." {
+            rows += 1;
+            terminated = true;
+            if offset != header {
+                out.push(Diagnostic::new(
+                    &wf.rel_path,
+                    ln,
+                    RULE,
+                    format!(
+                        "header doc table ends at offset {offset} but HEADER_BYTES = {header}"
+                    ),
+                ));
+            }
+            break;
+        }
+        let size: usize = match size.parse() {
+            Ok(v) => v,
+            Err(_) => continue, // not a table row (e.g. prose starting with a number)
+        };
+        rows += 1;
+        if rows == 1 {
+            expected = offset;
+        }
+        if offset != expected {
+            out.push(Diagnostic::new(
+                &wf.rel_path,
+                ln,
+                RULE,
+                format!(
+                    "header doc table row `{field}` at offset {offset}, expected {expected} (rows must be cumulative)"
+                ),
+            ));
+            expected = offset; // resync so one slip yields one diagnostic
+        }
+        if field == "magic" && size != 4 {
+            out.push(Diagnostic::new(
+                &wf.rel_path,
+                ln,
+                RULE,
+                format!("magic field is {size} bytes in the doc table; the magic is 4 bytes"),
+            ));
+        }
+        expected += size;
+    }
+    if rows < 3 || !terminated {
+        out.push(Diagnostic::new(
+            &wf.rel_path,
+            0,
+            RULE,
+            "header layout doc table (`offset size field` rows ending in `<N> .. payload`) not found"
+                .to_string(),
+        ));
+    }
+}
+
+/// Flag bare `<HEADER_BYTES>` integer literals in covered non-test code.
+fn check_bare_literals(
+    files: &[SourceFile],
+    scope: &RuleScope,
+    header: usize,
+    def_line: usize,
+    out: &mut Vec<Diagnostic>,
+) {
+    let needle = header.to_string();
+    for file in files {
+        if !scope.covers(&file.rel_path) {
+            continue;
+        }
+        for (ln, line) in file.lines.iter().enumerate() {
+            if file.rel_path == CANON && ln == def_line {
+                continue;
+            }
+            if bare_number_hit(line, &needle) && !suppressed(file, scope, RULE, ln) {
+                out.push(Diagnostic::new(
+                    &file.rel_path,
+                    ln,
+                    RULE,
+                    format!("bare `{needle}` header-size literal; use wire::HEADER_BYTES"),
+                ));
+            }
+        }
+    }
+}
+
+/// Like `token_hit` but for integers: neighbours may not be identifier
+/// characters *or* `.` (so `44` does not match inside `44.0` or `0.44`).
+fn bare_number_hit(line: &str, needle: &str) -> bool {
+    let lb = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(needle) {
+        let at = from + p;
+        let end = at + needle.len();
+        let num_ish = |b: u8| b.is_ascii_alphanumeric() || b == b'_' || b == b'.';
+        let before_ok = at == 0 || !num_ish(lb[at - 1]);
+        let after_ok = end >= lb.len() || !num_ish(lb[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_value_and_number_hits() {
+        assert_eq!(parse_const_value("pub const HEADER_BYTES: usize = 44;"), Some(44));
+        assert_eq!(parse_const_value("const X: usize = wire::HEADER_BYTES;"), None);
+        assert!(bare_number_hit("let x = 44 + n;", "44"));
+        assert!(!bare_number_hit("let x = 44.0;", "44"));
+        assert!(!bare_number_hit("let x = 0x44;", "44"));
+        assert!(!bare_number_hit("let x = 442;", "44"));
+        assert!(!bare_number_hit("let x = a44;", "44"));
+    }
+}

@@ -79,6 +79,7 @@ pub fn scale_for(bits: u8, bound: f32) -> f32 {
 /// (public as the ground truth for the equivalence tests). Must stay
 /// textually identical to the element step of
 /// [`super::cosine::CosineQuantizer::quantize_reference`].
+// analyze: allow(hotpath): the reference path is the acos ground truth the fast path is tested against
 #[inline]
 pub fn reference_code(x: f32, bound: f32, scale: f32) -> u16 {
     let theta = x.clamp(-1.0, 1.0).acos().clamp(bound, PI - bound);
@@ -159,6 +160,7 @@ fn exact_threshold(k: u16, candidate: f32, bound: f32, scale: f32, code_at_neg1:
 /// Build the descending threshold table for `(bits, bound)` into `out`.
 /// `out[k] > x  ⟺  reference_code(x) > k`, so the code of `x` is the
 /// count of thresholds above it. Public as a test/diagnostic hook.
+// analyze: allow(hotpath): per-(bits,bound) table build, amortized across the round — not per-element
 pub fn build_thresholds(bits: u8, bound: f32, out: &mut Vec<f32>) {
     let scale = scale_for(bits, bound);
     let max_code = (1u32 << bits) - 1;
@@ -304,6 +306,7 @@ pub fn dequantize_cosine(
     let levels = 1usize << bits;
     if codes.len() < levels {
         // Small tensor: the direct loop is cheaper than building the LUT.
+        // analyze: allow(hotpath): sub-LUT-size fallback, bounded at 2^bits elements
         out.extend(codes.iter().map(|&c| (bound + c as f32 * step).cos() * norm));
         return;
     }
@@ -312,6 +315,7 @@ pub fn dequantize_cosine(
         scratch.cos_levels.clear();
         scratch
             .cos_levels
+            // analyze: allow(hotpath): LUT seed — 2^bits cos calls amortized over the tensor
             .extend((0..levels).map(|c| (bound + c as f32 * step).cos() * norm));
         scratch.cos_levels_key = Some(key);
     }
@@ -322,6 +326,7 @@ pub fn dequantize_cosine(
         // the reference formula rather than panicking.
         lut.get(c as usize)
             .copied()
+            // analyze: allow(hotpath): unreachable-for-wire-codes reference fallback
             .unwrap_or_else(|| (bound + c as f32 * step).cos() * norm)
     }));
 }
@@ -356,6 +361,7 @@ pub fn accumulate_cosine(
     let levels = 1usize << bits;
     if codes.len() < levels {
         for (a, &c) in acc.iter_mut().zip(codes) {
+            // analyze: allow(hotpath): sub-LUT-size fallback, bounded at 2^bits elements
             *a += ((bound + c as f32 * step).cos() * norm) as f64 * w;
         }
         return;
@@ -365,6 +371,7 @@ pub fn accumulate_cosine(
         scratch.cos_levels.clear();
         scratch
             .cos_levels
+            // analyze: allow(hotpath): LUT seed — 2^bits cos calls amortized over the tensor
             .extend((0..levels).map(|c| (bound + c as f32 * step).cos() * norm));
         scratch.cos_levels_key = Some(key);
     }
@@ -373,6 +380,7 @@ pub fn accumulate_cosine(
         let v = lut
             .get(c as usize)
             .copied()
+            // analyze: allow(hotpath): unreachable-for-wire-codes reference fallback
             .unwrap_or_else(|| (bound + c as f32 * step).cos() * norm);
         *a += v as f64 * w;
     }

@@ -62,6 +62,18 @@
 //! Adding a scheme = one `impl Quantizer` + one [`quantizer::from_wire`]
 //! arm; the pipeline, wire format, figures and cost ledgers pick it up
 //! unchanged.
+//!
+//! ## Machine-enforced invariants (`repro analyze`)
+//!
+//! Two properties of this stack are linted by the in-tree analyzer
+//! ([`crate::analyze`], CI-gated) rather than trusted to review:
+//! *hot-path purity* — no transcendentals and no `.clone()`/`.to_vec()`
+//! in [`kernel`]/[`bitpack`] outside explicitly waived reference paths
+//! (the LUT/threshold builders and the `acos` ground truth) — and *wire
+//! invariants* — [`wire`] is the single definition site of
+//! `HEADER_BYTES` and the `CSG2` magic, its header layout doc table must
+//! sum to `HEADER_BYTES`, and no other module may hardcode either.
+//! Scopes and waivers live in `rust/analyze.toml`.
 
 pub mod allocator;
 pub mod bitpack;

@@ -105,11 +105,14 @@ pub fn deserialize_prefix(bytes: &[u8]) -> Result<(EncodedTensor, usize)> {
 /// byte must belong to a frame).
 pub fn deserialize_stream(bytes: &[u8]) -> Result<Vec<EncodedTensor>> {
     let mut out = Vec::new();
-    let mut at = 0usize;
-    while at < bytes.len() {
-        let (enc, used) = deserialize_prefix(&bytes[at..])?;
+    let mut rest = bytes;
+    while !rest.is_empty() {
+        let (enc, used) = deserialize_prefix(rest)?;
         out.push(enc);
-        at += used;
+        // `used <= rest.len()` is guaranteed by the non-truncation check
+        // inside parse_one; get() keeps the hostile-input path panic-free
+        // regardless.
+        rest = rest.get(used..).unwrap_or(&[]);
     }
     ensure!(!out.is_empty(), "empty frame stream");
     Ok(out)
@@ -122,57 +125,86 @@ pub fn deserialize(bytes: &[u8]) -> Result<EncodedTensor> {
     parse_one(bytes, true)
 }
 
+/// Fixed-width field read — the panic-free replacement for
+/// `bytes[o..o + N].try_into().unwrap()`. Hostile inputs hit the length
+/// `ensure!` in `parse_one` first, but every access stays fallible so no
+/// future reordering can reintroduce a decode panic.
+fn arr<const N: usize>(bytes: &[u8], at: usize) -> Result<[u8; N]> {
+    let end = at
+        .checked_add(N)
+        .ok_or_else(|| anyhow::anyhow!("field offset overflow at {at}"))?;
+    bytes
+        .get(at..end)
+        .and_then(|s| <[u8; N]>::try_from(s).ok())
+        .ok_or_else(|| anyhow::anyhow!("truncated frame: no field at {at}..{end}"))
+}
+
+fn byte_at(bytes: &[u8], at: usize) -> Result<u8> {
+    bytes
+        .get(at)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("truncated frame: no byte at {at}"))
+}
+
 fn parse_one(bytes: &[u8], exact: bool) -> Result<EncodedTensor> {
     ensure!(bytes.len() >= HEADER_BYTES, "short frame: {}", bytes.len());
-    if bytes[0..4] == MAGIC_V1 {
-        bail!("legacy CSG1 frame: this build speaks CSG2 (same 44-byte header; see compress::wire)");
+    let magic: [u8; 4] = arr(bytes, 0)?;
+    if magic == MAGIC_V1 {
+        bail!("legacy CSG1 frame: this build speaks CSG2 (same header size; see compress::wire)");
     }
-    if bytes[0..4] != MAGIC {
-        bail!("bad magic {:02x?}", &bytes[0..4]);
+    if magic != MAGIC {
+        bail!("bad magic {magic:02x?}");
     }
-    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
-    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
-    let f32_at = |o: usize| f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u32_at = |o: usize| -> Result<u32> { Ok(u32::from_le_bytes(arr(bytes, o)?)) };
+    let u64_at = |o: usize| -> Result<u64> { Ok(u64::from_le_bytes(arr(bytes, o)?)) };
+    let f32_at = |o: usize| -> Result<f32> { Ok(f32::from_le_bytes(arr(bytes, o)?)) };
 
-    let kind_id = bytes[4];
-    let bits = bytes[5];
+    let kind_id = byte_at(bytes, 4)?;
+    let bits = byte_at(bytes, 5)?;
     // Validates (kind_id, bits) jointly — unknown ids and bad widths bail.
     quantizer::validate_wire(kind_id, bits)?;
-    let flags = bytes[6];
+    let flags = byte_at(bytes, 6)?;
     ensure!(flags & !KNOWN_FLAGS == 0, "unknown flags {flags:#04x}");
-    let direction = Direction::from_id(bytes[7])?;
-    let n = u32_at(8);
-    let kept = u32_at(12);
+    let direction = Direction::from_id(byte_at(bytes, 7)?)?;
+    let n = u32_at(8)?;
+    let kept = u32_at(12)?;
     ensure!(kept <= n.max(1), "kept {kept} > n {n}");
-    let payload_len = u32_at(40) as usize;
+    let payload_len = u32_at(40)? as usize;
+    let frame_len = HEADER_BYTES
+        .checked_add(payload_len)
+        .ok_or_else(|| anyhow::anyhow!("payload_len overflow: {payload_len}"))?;
     if exact {
         ensure!(
-            bytes.len() == HEADER_BYTES + payload_len,
+            bytes.len() == frame_len,
             "length mismatch: {} vs {}",
             bytes.len(),
-            HEADER_BYTES + payload_len
+            frame_len
         );
     } else {
         ensure!(
-            bytes.len() >= HEADER_BYTES + payload_len,
+            bytes.len() >= frame_len,
             "truncated frame: {} < {}",
             bytes.len(),
-            HEADER_BYTES + payload_len
+            frame_len
         );
     }
+    let payload = bytes
+        .get(HEADER_BYTES..frame_len)
+        .map(<[u8]>::to_vec)
+        .ok_or_else(|| anyhow::anyhow!("truncated payload: {} < {frame_len}", bytes.len()))?;
     Ok(EncodedTensor {
         direction,
         kind_id,
         bits,
         n,
         kept,
-        mask_seed: u64_at(16),
-        rot_seed: u64_at(24),
+        mask_seed: u64_at(16)?,
+        rot_seed: u64_at(24)?,
         rotated: flags & FLAG_ROTATED != 0,
-        norm: f32_at(32),
-        bound: f32_at(36),
+        norm: f32_at(32)?,
+        bound: f32_at(36)?,
         deflated: flags & FLAG_DEFLATED != 0,
-        payload: bytes[HEADER_BYTES..HEADER_BYTES + payload_len].to_vec(),
+        payload,
     })
 }
 

@@ -45,6 +45,16 @@
 //!   — the regime where low-bit quantization buys the most
 //!   time-to-accuracy.
 //!
+//! Two properties of this layer are machine-enforced by the in-tree
+//! analyzer ([`crate::analyze`], `repro analyze`, CI-gated):
+//! *determinism* — [`server`], [`runner`] and [`transport`] may not use
+//! `HashMap`/`HashSet` (iteration order), wall clocks, or ambient RNG, so
+//! a seeded run replays byte-identically — and *panic-safety* —
+//! [`server::Server::ingest`] sits on the untrusted-input boundary, so
+//! `server.rs` bans `unwrap`/`expect`/`panic!` and bare indexing outside
+//! `#[cfg(test)]`; malformed frames must come back [`server::Ingest`]
+//! verdicts, never unwind (fuzzed in `tests/analyze.rs`).
+//!
 //! Bytes become *time* one layer up: with [`FlConfig::sim`] set, the
 //! transport is sim-clocked ([`transport::SimTransport`] over
 //! [`crate::sim::FleetSim`]) — per-device bandwidth/compute tiers,

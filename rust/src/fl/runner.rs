@@ -50,7 +50,7 @@
 //! bit-identical to serial at any thread count (asserted by the
 //! self-skipping e2e test in `tests/runtime_integration.rs`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -323,7 +323,7 @@ fn run_sync_rounds<T: SynthTask>(
         )?;
         let mut residual_sum = 0.0f64;
         let trained = locals.len();
-        let mut loss_of: HashMap<usize, f32> = HashMap::with_capacity(locals.len());
+        let mut loss_of: BTreeMap<usize, f32> = BTreeMap::new();
         let frames: Vec<Frame> = plan
             .active
             .iter()

@@ -320,8 +320,14 @@ impl Server {
                 s
             }
         };
-        if self.contributed[frame.client_id] == self.stamp() {
-            return Ingest::Duplicate;
+        // client_weights and contributed are sized together in new(), so
+        // the get() above already proved this id in range; stay fallible
+        // anyway — ingest must never panic on any input.
+        let stamp = self.stamp();
+        match self.contributed.get(frame.client_id) {
+            Some(&c) if c == stamp => return Ingest::Duplicate,
+            Some(_) => {}
+            None => return Ingest::Malformed,
         }
         let weight = n_i as f64 / (1 + staleness) as f64;
         let Ok((first, used)) = wire::deserialize_prefix(&frame.payload) else {
@@ -340,7 +346,9 @@ impl Server {
         } else if self.ingest_segments(&frame.payload, weight).is_err() {
             return Ingest::Malformed;
         }
-        self.contributed[frame.client_id] = self.stamp();
+        if let Some(slot) = self.contributed.get_mut(frame.client_id) {
+            *slot = stamp;
+        }
         self.weight_sum += weight;
         self.updates_this_round += 1;
         Ingest::Accepted { staleness }
@@ -371,9 +379,12 @@ impl Server {
         for s in &segs {
             decoded.push(decode_with(s, &mut self.scratch)?);
         }
+        // `total == params.len() == acc.len()` was just checked, so the
+        // skip/zip walk covers exactly acc — and cannot panic even if it
+        // did not.
         let mut off = 0usize;
         for v in &decoded {
-            for (a, &d) in self.acc[off..off + v.len()].iter_mut().zip(v) {
+            for (a, &d) in self.acc.iter_mut().skip(off).zip(v) {
                 *a += d as f64 * weight;
             }
             off += v.len();

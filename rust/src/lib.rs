@@ -21,6 +21,7 @@
 //!
 //! | module | contents |
 //! |--------|----------|
+//! | [`analyze`] | zero-dependency static analyzer for project invariants (determinism, panic-safety, hot-path purity, unsafe-audit, wire constants) behind `repro analyze` |
 //! | [`compress`] | the `Quantizer` trait + schemes (cosine, linear, sign-family, float32), the direction-agnostic `Pipeline` (EF → sparsify → rotate → quantize → pack → DEFLATE), entropy stats, the `CSG2` wire format |
 //! | [`fl`] | FedAvg server/clients, model replica (round-trip downlink), round runner, schedules, simulated network, centralized toy harness |
 //! | [`sim`] | discrete-event systems simulator: virtual clock + event queue, heterogeneous device tiers, synchronous / over-selection round policies, per-round timelines and time-to-accuracy |
@@ -29,6 +30,7 @@
 //! | [`figures`] | one driver per paper figure/table (fig3..fig10, tab1, tab2) |
 //! | [`util`] | offline substrates: PCG64 RNG, JSON, CLI, stats, timing, micro-bench, property-check |
 
+pub mod analyze;
 pub mod compress;
 pub mod data;
 pub mod figures;

@@ -19,6 +19,9 @@
 //!                                   # (ns/elem per stage × bit width;
 //!                                   #  --json APPENDS a run)
 //! repro check                       # load + compile all artifacts
+//! repro analyze [--json] [--out FILE] [--root DIR] [--manifest FILE] [paths…]
+//!                                   # project-invariant static analysis
+//!                                   # (exit 1 on any violation)
 //! repro list                        # figure ids and codec names
 //! ```
 
@@ -51,13 +54,14 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("compress-stats") => cmd_compress_stats(args),
         Some("bench") => cmd_bench(args),
         Some("check") => cmd_check(),
+        Some("analyze") => cmd_analyze(args),
         Some("list") | None => cmd_list(),
         Some(other) => bail!("unknown subcommand '{other}' (try `repro list`)"),
     }
 }
 
 fn cmd_list() -> Result<()> {
-    println!("subcommands: figure, train, sim, compress-stats, bench, check, list");
+    println!("subcommands: figure, train, sim, compress-stats, bench, check, analyze, list");
     println!("figures: {}", figures::ALL.join(", "));
     println!("tasks:   mnist (non-iid), mnist-iid, cifar, unet");
     println!(
@@ -108,6 +112,38 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let out = std::path::PathBuf::from(args.opt_or("out", "BENCH_compress.json"));
         cossgd::util::bench::write_trajectory(&out, cossgd::compress::perf::SUITE, b.results())?;
         println!("run appended to {out:?}");
+    }
+    Ok(())
+}
+
+/// `repro analyze` — run the project-invariant static analyzer over
+/// `rust/src` (or `--root DIR`) against `rust/analyze.toml` (or
+/// `--manifest FILE`). Extra positionals restrict the scan to relative
+/// path prefixes. `--json` switches the stdout report to JSON; `--out`
+/// additionally writes the JSON report to a file (written even when dirty,
+/// so CI can upload it before the gate fails). Exit code 1 on violations.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let manifest_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = args
+        .opt("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| manifest_dir.join("src"));
+    let manifest = args
+        .opt("manifest")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| manifest_dir.join("analyze.toml"));
+    let filters: Vec<String> = args.positional.iter().skip(1).cloned().collect();
+    let report = cossgd::analyze::run(&root, &manifest, &filters)?;
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, report.json())?;
+    }
+    if args.flag("json") {
+        println!("{}", report.json());
+    } else {
+        print!("{}", report.text());
+    }
+    if !report.clean() {
+        bail!("analyze: {} violation(s)", report.diagnostics.len());
     }
     Ok(())
 }

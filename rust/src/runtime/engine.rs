@@ -91,16 +91,19 @@ pub struct Engine {
     cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
-// SAFETY: the engine is shared read-only (`&Engine`) across the client
-// worker threads of `fl::runner`. The underlying PJRT C++ API guarantees
-// `PjRtClient::Compile` and `PjRtLoadedExecutable::Execute` are
-// thread-safe (concurrent executions of the same loaded executable are a
-// core PJRT use case); the `xla` crate types merely wrap those pointers
-// and lack auto traits only because raw pointers suppress them. All
-// Rust-side mutability (the executable cache) is behind a `Mutex`, and
-// `Manifest` is plain owned data. Literals are created and consumed
+// SAFETY: moving an `Engine` between threads is sound: the underlying
+// PJRT C++ objects are not thread-affine (the `xla` crate types merely
+// wrap raw pointers and lack auto traits only because raw pointers
+// suppress them), `Manifest` is plain owned data, and the executable
+// cache is an owned `Mutex`. Literals are created and consumed
 // thread-locally per call.
 unsafe impl Send for Engine {}
+// SAFETY: sharing `&Engine` across the client worker threads of
+// `fl::runner` is sound by the same argument as `Send` above, plus: the
+// PJRT C++ API guarantees `PjRtClient::Compile` and
+// `PjRtLoadedExecutable::Execute` are thread-safe (concurrent executions
+// of one loaded executable are a core PJRT use case), and all Rust-side
+// mutability (the executable cache) is behind the `Mutex`.
 unsafe impl Sync for Engine {}
 
 impl Engine {

@@ -1,0 +1,334 @@
+//! Integration tests for `repro analyze`: the real tree is clean and the
+//! report is deterministic; every rule family fires on the seeded
+//! `violations` fixture and stays quiet on the `clean` fixture; the lexer
+//! edge cases hold; and — the invariant panic-safety exists to protect —
+//! `Server::ingest` survives a barrage of malformed frames without
+//! panicking or corrupting state.
+
+use std::path::{Path, PathBuf};
+
+use cossgd::analyze::{self, lexer};
+use cossgd::compress::{Direction, Pipeline, PipelineState};
+use cossgd::fl::server::{Ingest, Server};
+use cossgd::fl::transport::Frame;
+use cossgd::util::propcheck::gradient_like;
+use cossgd::util::rng::Pcg64;
+
+fn crate_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> PathBuf {
+    crate_dir().join("tests/analyze_fixtures").join(name)
+}
+
+fn lex_fixture(name: &str) -> lexer::SourceFile {
+    let path = fixture("lexer").join(name);
+    let text = std::fs::read_to_string(&path).expect("lexer fixture readable");
+    lexer::lex_str(name, &text)
+}
+
+// ---------------------------------------------------------------------------
+// Self-check: the real tree passes its own analyzer, deterministically.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn real_tree_is_clean() {
+    let report = analyze::run(&crate_dir().join("src"), &crate_dir().join("analyze.toml"), &[])
+        .expect("analyzer runs on the real tree");
+    assert!(
+        report.clean(),
+        "the real tree must pass its own analyzer:\n{}",
+        report.text()
+    );
+    assert!(report.files_scanned > 30, "walk found the whole tree");
+    assert_eq!(report.rules_run.len(), 5);
+}
+
+#[test]
+fn report_is_byte_identical_across_runs() {
+    let run = || {
+        analyze::run(
+            &fixture("violations/src"),
+            &fixture("violations/analyze.toml"),
+            &[],
+        )
+        .expect("analyzer runs on the violations fixture")
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.text(), b.text());
+    assert_eq!(a.json(), b.json());
+    // And on the real tree as well.
+    let real = || {
+        analyze::run(&crate_dir().join("src"), &crate_dir().join("analyze.toml"), &[])
+            .expect("analyzer runs")
+            .json()
+    };
+    assert_eq!(real(), real());
+}
+
+// ---------------------------------------------------------------------------
+// Every rule family fires on the seeded violations; the clean tree with
+// waivers / allowlists / test spans stays quiet.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_rule_family_fires_on_the_violations_fixture() {
+    let report = analyze::run(
+        &fixture("violations/src"),
+        &fixture("violations/analyze.toml"),
+        &[],
+    )
+    .expect("analyzer runs");
+    assert!(!report.clean());
+
+    let has = |rule: &str, file: &str, needle: &str| {
+        report
+            .diagnostics
+            .iter()
+            .any(|d| d.rule == rule && d.path == file && d.message.contains(needle))
+    };
+    // determinism
+    assert!(has("determinism", "fl/server.rs", "HashMap"), "{}", report.text());
+    assert!(has("determinism", "fl/runner.rs", "Instant"));
+    assert!(has("determinism", "sim/clock.rs", "SystemTime"));
+    assert!(has("determinism", "sim/clock.rs", "thread_rng"));
+    // panic_safety
+    assert!(has("panic_safety", "fl/server.rs", ".unwrap()"));
+    assert!(has("panic_safety", "fl/server.rs", ".expect("));
+    assert!(has("panic_safety", "fl/server.rs", "panic!"));
+    assert!(has("panic_safety", "fl/server.rs", "indexing"));
+    // hotpath
+    assert!(has("hotpath", "compress/kernel.rs", ".acos("));
+    assert!(has("hotpath", "compress/kernel.rs", ".cos("));
+    assert!(has("hotpath", "compress/kernel.rs", ".to_vec()"));
+    assert!(has("hotpath", "compress/kernel.rs", ".clone()"));
+    // unsafe_audit
+    assert!(has("unsafe_audit", "runtime/engine.rs", "unsafe impl"));
+    assert!(has("unsafe_audit", "runtime/engine.rs", "unsafe block"));
+    // wire
+    assert!(has("wire", "compress/wire.rs", "doc table ends at offset 8"));
+    assert!(has("wire", "compress/consumer.rs", "duplicate HEADER_BYTES"));
+    assert!(has("wire", "compress/consumer.rs", "bare `44`"));
+    assert!(has("wire", "compress/consumer.rs", "magic bytes"));
+
+    // Exit-code contract: the CLI turns a dirty report into exit 1; the
+    // report itself is the source of truth.
+    assert!(report.diagnostics.len() >= 16);
+}
+
+#[test]
+fn clean_fixture_is_quiet() {
+    let report = analyze::run(&fixture("clean/src"), &fixture("clean/analyze.toml"), &[])
+        .expect("analyzer runs");
+    assert!(
+        report.clean(),
+        "waivers/allowlists/test spans must suppress everything:\n{}",
+        report.text()
+    );
+}
+
+#[test]
+fn path_filters_restrict_the_scan() {
+    let report = analyze::run(
+        &fixture("violations/src"),
+        &fixture("violations/analyze.toml"),
+        &["sim/".to_string()],
+    )
+    .expect("analyzer runs");
+    assert_eq!(report.files_scanned, 1);
+    assert!(report.diagnostics.iter().all(|d| d.path.starts_with("sim/")));
+    assert!(!report.clean());
+}
+
+// ---------------------------------------------------------------------------
+// Lexer edge cases (one fixture per case).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lexer_raw_strings() {
+    let f = lex_fixture("raw_strings.rs");
+    for line in &f.lines {
+        assert!(!line.contains("HashMap"), "raw-string body leaked: {line}");
+        assert!(!line.contains(".unwrap()"), "raw-string body leaked: {line}");
+    }
+    // The contents are captured as literals (with fences stripped).
+    assert!(f.literals.iter().any(|(_, v)| v.contains("quote \" then HashMap")));
+    assert!(f.literals.iter().any(|(_, v)| v.contains("fence \"# inside")));
+    assert!(f.literals.iter().any(|(_, v)| v.contains("line one HashMap\nline two")));
+    // `r` at the end of an identifier does not open a raw string.
+    assert!(f.lines.iter().any(|l| l.contains("let scale_factor = radius * 2.0;")));
+    assert_eq!(f.fns.len(), 2);
+}
+
+#[test]
+fn lexer_nested_block_comments() {
+    let f = lex_fixture("nested_comments.rs");
+    for line in &f.lines {
+        assert!(!line.contains("HashMap"));
+        assert!(!line.contains("SystemTime"));
+        assert!(!line.contains(".unwrap()"));
+    }
+    assert!(f.comments[0].contains("nested HashMap"));
+    assert_eq!(f.fns.len(), 1);
+    assert_eq!(f.fns[0].name, "after");
+    assert!(f.lines.iter().any(|l| l.trim() == "42"));
+}
+
+#[test]
+fn lexer_byte_literals() {
+    let f = lex_fixture("byte_literals.rs");
+    for line in &f.lines {
+        assert!(!line.contains("CSG9"), "byte-string body leaked: {line}");
+    }
+    assert!(f.literals.iter().any(|(_, v)| v == "CSG9"));
+    assert!(f.literals.iter().any(|(_, v)| v.contains("also \"CSG9\" raw")));
+    // `b` at the end of an identifier does not open a byte string, and
+    // byte chars scrub cleanly.
+    assert!(f.lines.iter().any(|l| l.contains("grab.len()")));
+    assert!(f.lines.iter().any(|l| l.contains("let nl =")));
+}
+
+#[test]
+fn lexer_lifetimes_vs_char_literals() {
+    let f = lex_fixture("lifetimes.rs");
+    // Lifetimes and loop labels survive as code.
+    assert!(f.lines.iter().any(|l| l.contains("Holder<'a>")));
+    assert!(f.lines.iter().any(|l| l.contains("&'a str")));
+    assert!(f.lines.iter().any(|l| l.contains("'outer: loop")));
+    assert!(f.lines.iter().any(|l| l.contains("break 'outer;")));
+    // Char literals (plain, escaped quote, wide) are scrubbed.
+    for needle in ["'\\n'", "'\\''", "'a'", "'π'"] {
+        assert!(
+            !f.lines.iter().any(|l| l.contains(needle)),
+            "char literal {needle} leaked into code"
+        );
+    }
+    assert_eq!(f.fns.len(), 3);
+}
+
+#[test]
+fn lexer_cfg_test_span_exclusion() {
+    let f = lex_fixture("cfg_test.rs");
+    // Every HashMap / unwrap mention sits inside a test span.
+    for (ln, line) in f.lines.iter().enumerate() {
+        if line.contains("HashMap") || line.contains(".unwrap()") {
+            assert!(f.in_test(ln), "line {} not excluded: {line}", ln + 1);
+        }
+    }
+    // Production functions are outside every test span.
+    for name in ["production", "also_production"] {
+        let fspan = f.fns.iter().find(|s| s.name == name).expect("fn span");
+        assert!(!f.in_test(fspan.open), "{name} wrongly inside a test span");
+    }
+    // The free #[test] fn is excluded too.
+    let free = f.fns.iter().find(|s| s.name == "free_test_fn").expect("fn span");
+    assert!(f.in_test(free.open));
+}
+
+// ---------------------------------------------------------------------------
+// Malformed-frame fuzz: hostile payloads through the real ingest path.
+// ---------------------------------------------------------------------------
+
+/// A well-formed single-frame uplink payload for an `n`-param model.
+fn good_payload(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::seeded(seed);
+    let g = gradient_like(&mut rng, n);
+    let pipe = Pipeline::cosine(4);
+    let enc = pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+    cossgd::compress::wire::serialize(&enc)
+}
+
+fn fresh_server(params: &[f32]) -> Server {
+    Server::new(params.to_vec(), 0.5).with_clients(vec![10, 20, 30])
+}
+
+#[test]
+fn ingest_survives_malformed_frames() {
+    let n = 512usize;
+    let params: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01 - 2.0).collect();
+    let good = good_payload(n, 7);
+
+    // Sanity: the untouched payload is accepted.
+    let mut s = fresh_server(&params);
+    assert_eq!(
+        s.ingest(&Frame { round: 0, client_id: 1, payload: good.clone() }),
+        Ingest::Accepted { staleness: 0 }
+    );
+
+    let mut rng = Pcg64::seeded(0xBAD_F00D);
+    let mut accepted = 0usize;
+    let mut refused = 0usize;
+    let mut case = |payload: Vec<u8>, client_id: usize, round: usize| {
+        let mut s = fresh_server(&params);
+        let before = params.clone();
+        match s.ingest(&Frame { round, client_id, payload }) {
+            Ingest::Accepted { .. } => accepted += 1,
+            _ => {
+                refused += 1;
+                // Refusal must leave the server untouched: nothing
+                // buffered, and closing the round moves no weight.
+                assert_eq!(s.buffered(), 0);
+                assert_eq!(s.finish_round(), 0);
+                assert_eq!(s.params, before, "refused frame mutated the model");
+            }
+        }
+    };
+
+    // Deterministic structured corruptions.
+    for cut in [0, 1, 10, 43, 44, 45, good.len() - 1] {
+        case(good[..cut].to_vec(), 0, 0); // truncations
+    }
+    case([good.clone(), vec![0xA5; 17]].concat(), 0, 0); // trailing garbage
+    for off in 0..48usize.min(good.len()) {
+        let mut p = good.clone();
+        p[off] ^= 0x40; // single-bit header corruption, every header byte
+        case(p, 0, 0);
+    }
+    let mut p = good.clone();
+    p[40..44].copy_from_slice(&u32::MAX.to_le_bytes()); // oversized payload_len
+    case(p, 0, 0);
+    let mut p = good.clone();
+    p[40..44].copy_from_slice(&0u32.to_le_bytes()); // undersized payload_len
+    case(p, 0, 0);
+    case(good.clone(), 99, 0); // unregistered client
+    case(good.clone(), 2, 5); // future round tag
+    case(Vec::new(), 0, 0); // empty payload
+    case(vec![0; 44], 0, 0); // all-zero header
+    // A truncated two-segment stream: first frame valid, tail cut off.
+    case([good.clone(), good[..30].to_vec()].concat(), 0, 0);
+
+    // Random mutations: flips, splices, random lengths.
+    for _ in 0..300 {
+        let mut p = good.clone();
+        match rng.below(4) {
+            0 => {
+                let at = rng.below_usize(p.len());
+                p[at] ^= 1u8 << rng.below(8);
+            }
+            1 => {
+                let cut = rng.below_usize(p.len());
+                p.truncate(cut);
+            }
+            2 => {
+                let at = rng.below_usize(p.len());
+                let extra = rng.below_usize(64);
+                let tail = p.split_off(at);
+                p.extend((0..extra).map(|_| rng.next_u64() as u8));
+                p.extend(tail);
+            }
+            _ => {
+                let len = rng.below_usize(128);
+                p = (0..len).map(|_| rng.next_u64() as u8).collect();
+            }
+        }
+        case(p, rng.below_usize(3), rng.below_usize(2));
+    }
+    // Flips landing in the packed-code body (or in seed/norm header
+    // fields) still decode — those are legitimately Accepted. Everything
+    // structurally broken must be refused, which dominates.
+    assert!(
+        refused > 200,
+        "mutations mostly refused ({refused} refused, {accepted} accepted)"
+    );
+}

@@ -1,0 +1,16 @@
+//! Fixture: transcendentals behind explicit waivers — fn-level above the
+//! reference path, line-level at the LUT seed.
+
+// analyze: allow(hotpath): reference ground-truth path
+pub fn reference_code(x: f32) -> u16 {
+    x.acos() as u16
+}
+
+pub fn dequantize(codes: &[u16], step: f32, lut: &mut Vec<f32>, out: &mut Vec<f32>) {
+    if lut.is_empty() {
+        // analyze: allow(hotpath): LUT seed, amortized over the tensor
+        lut.extend((0..16).map(|c| (c as f32 * step).cos()));
+    }
+    out.clear();
+    out.extend(codes.iter().map(|&c| lut.get(c as usize).copied().unwrap_or(0.0)));
+}

@@ -1,0 +1,15 @@
+//! Fixture: a consistent wire spec. Layout:
+//!
+//! ```text
+//! offset size field
+//! 0      4    magic
+//! 4      4    n
+//! 8      4    payload_len
+//! 12     ..   payload
+//! ```
+pub const MAGIC: [u8; 4] = *b"CSG2";
+pub const HEADER_BYTES: usize = 12;
+
+pub fn frame_len(payload: usize) -> usize {
+    HEADER_BYTES + payload
+}

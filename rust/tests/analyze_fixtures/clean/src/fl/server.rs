@@ -1,0 +1,29 @@
+//! Fixture: a compliant ingest path — fallible access only, panics
+//! confined to test code and an allowlisted debug helper.
+use std::collections::BTreeMap;
+
+pub fn ingest(payload: &[u8]) -> Option<u32> {
+    let mut seen: BTreeMap<u32, u32> = BTreeMap::new();
+    let head = *payload.first()?;
+    let tail = payload.get(1..)?;
+    seen.insert(head as u32, tail.len() as u32);
+    Some(head as u32)
+}
+
+/// Allowlisted in analyze.toml (`fl/server.rs::debug_probe`).
+pub fn debug_probe(payload: &[u8]) -> u32 {
+    payload.first().copied().unwrap() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_ingest() {
+        // Panicking combinators are fine inside #[cfg(test)].
+        assert_eq!(ingest(&[7, 1]).unwrap(), 7);
+        let head = [7u8, 1][0];
+        assert_eq!(head, 7);
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixture: documented unsafe — comment-above and same-line styles.
+pub struct Engine {
+    ptr: *mut u8,
+}
+
+// SAFETY: the pointer is owned by Engine and never aliased; dropping the
+// engine frees it exactly once.
+unsafe impl Send for Engine {}
+
+pub fn poke(e: &Engine) -> u8 {
+    // SAFETY: constructors guarantee ptr is non-null and valid for reads.
+    unsafe { e.ptr.read() }
+}

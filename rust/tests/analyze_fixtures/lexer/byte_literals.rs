@@ -1,0 +1,14 @@
+// Byte strings, raw byte strings, and byte chars.
+pub fn bytes() -> u8 {
+    let magic = b"CSG9";
+    let raw = br#"also "CSG9" raw"#;
+    let nl = b'\n';
+    let x = b'x';
+    let _ = (magic, raw, nl);
+    x
+}
+
+pub fn not_byte_string(grab: &[u8]) -> usize {
+    // `b` as the tail of an identifier must not start a byte string.
+    grab.len()
+}

@@ -1,0 +1,29 @@
+// Production code above; everything inside #[cfg(test)] / #[test] spans
+// is invisible to the rules.
+pub fn production(xs: &[u32]) -> u32 {
+    xs.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn sums() {
+        let mut m: HashMap<u32, u32> = HashMap::new();
+        m.insert(1, 2);
+        assert_eq!(production(&[1, 2]), 3);
+        assert_eq!(m.get(&1).copied().unwrap(), 2);
+    }
+}
+
+pub fn also_production(xs: &[u32]) -> u32 {
+    xs.len() as u32
+}
+
+#[test]
+fn free_test_fn() {
+    let v = vec![1u32];
+    assert_eq!(v.first().copied().unwrap(), 1);
+}

@@ -1,0 +1,29 @@
+// Lifetimes must survive as code; char literals must be scrubbed.
+pub struct Holder<'a> {
+    inner: &'a str,
+}
+
+impl<'a> Holder<'a> {
+    pub fn classify(&self, c: char) -> bool {
+        let newline = '\n';
+        let quote = '\'';
+        let alpha = 'a';
+        let wide = 'π';
+        c == newline || c == quote || c == alpha || c == wide
+    }
+
+    pub fn get(&self) -> &'a str {
+        self.inner
+    }
+}
+
+pub fn labeled() -> u32 {
+    let mut n = 0;
+    'outer: loop {
+        n += 1;
+        if n > 3 {
+            break 'outer;
+        }
+    }
+    n
+}

@@ -1,0 +1,7 @@
+/* outer /* nested HashMap */ still a comment .unwrap() */
+pub fn after() -> u32 {
+    /* multi
+       line /* deeper SystemTime */
+       tail */
+    42
+}

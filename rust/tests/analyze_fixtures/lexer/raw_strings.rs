@@ -1,0 +1,17 @@
+// Raw strings: hash fences, embedded quotes, multi-line bodies. None of
+// the banned tokens inside them are code.
+pub fn raw() -> (&'static str, &'static str, &'static str) {
+    let a = r"HashMap::new() .unwrap()";
+    let b = r#"quote " then HashMap"#;
+    let c = r##"fence "# inside, still HashMap"##;
+    let multi = r#"line one HashMap
+line two .unwrap()"#;
+    let _ = multi;
+    (a, b, c)
+}
+
+pub fn not_raw(radius: f32) -> f32 {
+    // `r` as the tail of an identifier must not start a raw string.
+    let scale_factor = radius * 2.0;
+    scale_factor
+}

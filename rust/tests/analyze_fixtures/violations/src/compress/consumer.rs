@@ -1,0 +1,11 @@
+//! Fixture: a consumer that re-declares wire constants instead of
+//! importing them.
+pub const HEADER_BYTES: usize = 48;
+
+pub fn wire_cost(n: usize) -> usize {
+    44 + n
+}
+
+pub fn magic() -> &'static [u8] {
+    b"CSG2"
+}

@@ -1,0 +1,13 @@
+//! Fixture: transcendentals and allocations back in the hot kernel,
+//! with no waiver annotations.
+pub fn quantize(xs: &[f32], out: &mut Vec<u16>) {
+    for &x in xs {
+        out.push(x.acos() as u16);
+    }
+}
+
+pub fn dequantize(codes: &[u16], step: f32) -> Vec<f32> {
+    let copy = codes.to_vec();
+    let scaled: Vec<f32> = copy.iter().map(|&c| (c as f32 * step).cos()).collect();
+    scaled.clone()
+}

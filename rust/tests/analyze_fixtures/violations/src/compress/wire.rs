@@ -1,0 +1,14 @@
+//! Fixture: the wire header spec drifted — the doc table no longer sums
+//! to HEADER_BYTES. Layout:
+//!
+//! ```text
+//! offset size field
+//! 0      4    magic
+//! 4      4    n
+//! 8      ..   payload
+//! ```
+pub const HEADER_BYTES: usize = 44;
+
+pub fn frame_len(payload: usize) -> usize {
+    HEADER_BYTES + payload
+}

@@ -1,0 +1,5 @@
+//! Fixture: wall-clock read in the round loop.
+pub fn round_loop() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

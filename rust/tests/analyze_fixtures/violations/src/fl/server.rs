@@ -1,0 +1,14 @@
+//! Fixture: panic-safety and determinism violations in an ingest path.
+use std::collections::HashMap;
+
+pub fn ingest(payload: &[u8]) -> u32 {
+    let mut seen: HashMap<u32, u32> = HashMap::new();
+    let head = payload[0];
+    let tail = payload.get(1..).unwrap();
+    let text = std::str::from_utf8(tail).expect("utf8");
+    if text.is_empty() {
+        panic!("empty frame");
+    }
+    seen.insert(head as u32, 1);
+    head as u32
+}

@@ -1,0 +1,12 @@
+//! Fixture: undocumented unsafe.
+pub struct Engine {
+    ptr: *mut u8,
+}
+
+unsafe impl Send for Engine {}
+
+pub fn poke(e: &Engine) -> u8 {
+    unsafe {
+        e.ptr.read()
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture: nondeterministic time and RNG in the simulator.
+pub fn now_ms() -> u64 {
+    let wall = std::time::SystemTime::now();
+    let _ = wall;
+    let noise: u64 = rand::thread_rng().gen();
+    noise
+}
