@@ -10,8 +10,10 @@
 //! perf share one accumulating trajectory file format across PRs.
 //! `--quick` caps sampling for CI smoke runs.
 
+use cossgd::obs::Tracer;
 use cossgd::sim::{ClientLoad, FleetSim, RoundPlan, RoundPolicy, SimConfig};
 use cossgd::util::bench::{json_requested, quick_requested, write_trajectory, Bencher};
+use cossgd::util::json::Json;
 
 fn loads_for(plan: &RoundPlan, upload_bytes: usize) -> Vec<ClientLoad> {
     plan.active
@@ -74,6 +76,25 @@ fn main() {
             sim.complete_round(round, &plan, k, 400_000, &loads)
         },
     );
+
+    println!("== tracing-off overhead guard ==");
+    // The tracing-disabled fast path must stay event-free AND
+    // allocation-free: a run without `--trace` pays a branch per probe,
+    // nothing more. Measured here so a regression shows up as a perf
+    // trajectory jump, asserted so it fails loudly.
+    let mut tracer = Tracer::disabled();
+    let probes = 1_000_000u64;
+    b.bench_elems("tracer disabled probe", probes, || {
+        for i in 0..probes {
+            let span = tracer.open("round");
+            tracer.point("ingest", vec![("i", Json::from(i))]);
+            tracer.close(span);
+        }
+        tracer.len()
+    });
+    assert_eq!(tracer.len(), 0, "disabled tracer recorded events");
+    assert_eq!(tracer.dropped(), 0, "disabled tracer counted drops");
+    assert_eq!(tracer.allocated_capacity(), 0, "disabled tracer allocated a ring");
 
     let total_cases = b.results().len();
     println!("{total_cases} cases done");

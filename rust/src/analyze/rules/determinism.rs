@@ -26,6 +26,10 @@ const BANNED: &[(&str, &str)] = &[
         "wall-clock reads are nondeterministic; thread sim::Clock time through the caller",
     ),
     (
+        "Stopwatch",
+        "wall-clock timing is nondeterministic; use obs::TimeSource or sim ticks, or waive for report-only timing",
+    ),
+    (
         "thread_rng",
         "OS-seeded RNG is nondeterministic; use the seeded util::rng::Pcg64",
     ),

@@ -385,6 +385,23 @@ impl BitController {
         }
     }
 
+    /// Extra floor bits currently forced by the EF-residual / loss-delta
+    /// pressure signals (0 = no pressure) — the water-filling rationale
+    /// the trace's `bit_plan` events record.
+    pub fn pressure(&self) -> u8 {
+        self.pressure
+    }
+
+    /// Wire cost of `plan` in payload bytes (headers included) — what the
+    /// budget in [`BitController::effective_budget`] is compared against.
+    pub fn plan_cost(&self, plan: &BitPlan) -> usize {
+        plan.bits
+            .iter()
+            .enumerate()
+            .map(|(l, &b)| segment_cost(plan.bounds[l + 1] - plan.bounds[l], b))
+            .sum()
+    }
+
     /// The widths for round `t` of `total`.
     pub fn plan(&mut self, t: usize, total: usize) -> BitPlan {
         let n = self.map.param_count();
@@ -643,12 +660,24 @@ mod tests {
             .collect();
         // Healthy round: tiny residual, improving loss.
         c.observe(&obs, 0.0, Some(1.0));
+        assert_eq!(c.pressure(), 0);
         let healthy = c.plan(1, 10);
+        assert!(c.plan_cost(&healthy) <= budget);
+        assert_eq!(
+            c.plan_cost(&healthy),
+            healthy
+                .bits
+                .iter()
+                .enumerate()
+                .map(|(l, &b)| segment_cost(map.segment(l).len(), b))
+                .sum::<usize>()
+        );
         let starved = healthy.bits.iter().filter(|&&b| b == 1).count();
         assert!(starved > 0, "tight budget should starve tail layers: {:?}", healthy.bits);
         // Pressure round: residual holds most of the energy AND the loss
         // went up → the floor rises to 3 wherever the budget allows.
         c.observe(&obs, 1000.0, Some(2.0));
+        assert_eq!(c.pressure(), 2);
         let pressured = c.plan(2, 10);
         assert!(
             pressured.bits.iter().filter(|&&b| b == 1).count() < starved,

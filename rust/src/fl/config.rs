@@ -101,6 +101,11 @@ pub struct FlConfig {
     /// the fleet. In async mode `rounds` counts *aggregations* (model
     /// versions), so runs stay comparable at equal update counts.
     pub round_mode: RoundMode,
+    /// Write the run's structured trace (span/point events + final
+    /// metrics snapshot, JSONL) to this path (`--trace FILE`). With the
+    /// simulator attached, the trace clock is virtual sim time and the
+    /// file is byte-identical per seed; otherwise wall time.
+    pub trace: Option<std::path::PathBuf>,
     pub verbose: bool,
 }
 
@@ -138,6 +143,7 @@ impl FlConfig {
             client_threads: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
+            trace: None,
             verbose: false,
         }
     }
@@ -166,6 +172,7 @@ impl FlConfig {
             client_threads: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
+            trace: None,
             verbose: false,
         }
     }
@@ -205,6 +212,7 @@ impl FlConfig {
             client_threads: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
+            trace: None,
             verbose: false,
         }
     }
@@ -275,6 +283,13 @@ impl FlConfig {
     /// of the pipeline's fixed width.
     pub fn with_bit_schedule(mut self, schedule: BitSchedule) -> Self {
         self.bit_schedule = Some(schedule);
+        self
+    }
+
+    /// Write the run's observability trace (JSONL events + metrics
+    /// snapshot) to `path` (`--trace FILE`).
+    pub fn with_trace(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.trace = Some(path.into());
         self
     }
 

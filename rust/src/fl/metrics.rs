@@ -25,6 +25,12 @@ pub struct RoundRecord {
     /// Delivered updates the server discarded as stale in this round
     /// (buffered-async aggregation windows; always 0 in synchronous mode).
     pub stale_updates: usize,
+    /// Frames the server refused as duplicates of an already-counted
+    /// client this round.
+    pub dup_updates: usize,
+    /// Frames the server refused as malformed (undecodable payload or
+    /// wrong parameter count) this round.
+    pub malformed_updates: usize,
     /// Quantizer widths the bit controller chose for this round — one
     /// entry per layer segment (a single entry for uniform schedules;
     /// empty on the legacy fixed-width path).
@@ -78,7 +84,9 @@ impl History {
                                 .set("uplink_bytes", r.uplink_bytes)
                                 .set("downlink_bytes", r.downlink_bytes)
                                 .set("clients", r.clients)
-                                .set("stale_updates", r.stale_updates);
+                                .set("stale_updates", r.stale_updates)
+                                .set("dup_updates", r.dup_updates)
+                                .set("malformed_updates", r.malformed_updates);
                             if !r.bits.is_empty() {
                                 let widths: Vec<usize> =
                                     r.bits.iter().map(|&b| b as usize).collect();
@@ -126,6 +134,8 @@ mod tests {
             downlink_bytes: round as u64 * 400,
             clients: 10,
             stale_updates: 0,
+            dup_updates: 0,
+            malformed_updates: 0,
             bits: vec![4],
         }
     }

@@ -52,23 +52,26 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compress::allocator::{BitController, BitPlan, LayerMap};
 use crate::compress::Pipeline;
 use crate::data::partition::{self, eval_set};
 use crate::data::synth::{SynthCifar, SynthMnist, SynthTask, SynthVolume};
+use crate::obs::{self, Metrics, TimeSource, Tracer};
 use crate::runtime::manifest::{init_params, RoundCfg};
 use crate::runtime::Engine;
 use crate::sim::{Admission, Timeline};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
-use crate::util::timer::Stopwatch;
+use crate::util::timer::Stopwatch; // analyze: allow(determinism): wall-secs reporting only, never steers the run
 
 use super::client::{Client, ModelReplica};
 use super::config::{FlConfig, Task};
 use super::metrics::{History, RoundRecord};
 use super::network::NetworkLedger;
 use super::server::{Ingest, RoundMode, Server};
+use super::transport::dryrun::{note_finish, note_ingest, note_plan};
 use super::transport::{Frame, Loopback, SimTransport, Transport};
 
 /// The outcome of one federated run.
@@ -121,7 +124,7 @@ fn run_task<T: SynthTask>(
     shards: Vec<partition::ClientShard>,
     label: &str,
 ) -> Result<RunResult> {
-    let sw = Stopwatch::start();
+    let sw = Stopwatch::start(); // analyze: allow(determinism): wall-secs reporting only, never steers the run
     let model = engine.manifest.model(cfg.task.model_key())?.clone();
     let round_cfg = engine.manifest.round(&cfg.round_cfg_key)?;
     let eval_artifact = cfg.task.eval_artifact();
@@ -150,6 +153,16 @@ fn run_task<T: SynthTask>(
         Some(s) => Box::new(SimTransport::new(s, cfg.n_clients, cfg.seed)),
         None => Box::new(Loopback::new()),
     };
+    // Observability: the tracer only spends cycles when `--trace` is set.
+    // Sim runs trace on the virtual clock — deterministic, so same-seed
+    // runs produce byte-identical trace files (pinned by
+    // `tests/obs_trace.rs`); wall runs fall back to the monotonic clock.
+    let mut tracer = match (&cfg.trace, &cfg.sim) {
+        (Some(_), Some(_)) => Tracer::new(TimeSource::manual(), obs::DEFAULT_RING_CAPACITY),
+        (Some(_), None) => Tracer::new(TimeSource::wall(), obs::DEFAULT_RING_CAPACITY),
+        (None, _) => Tracer::disabled(),
+    };
+    let mut metrics = Metrics::new();
     // Adaptive bit control: the layer map comes from the model manifest's
     // flat-parameter layout, so "per-layer" means real model layers.
     let mut controller = match cfg.bit_schedule {
@@ -203,6 +216,8 @@ fn run_task<T: SynthTask>(
             examples_per_round,
             per_round,
             label,
+            &mut tracer,
+            &mut metrics,
         )?,
         RoundMode::BufferedAsync { .. } => run_async_windows(
             cfg,
@@ -223,10 +238,23 @@ fn run_task<T: SynthTask>(
             examples_per_round,
             per_round,
             label,
+            &mut tracer,
+            &mut metrics,
         )?,
     }
 
     let (network, timeline) = transport.finish();
+    if let Some(path) = cfg.trace.as_ref() {
+        // Replay the timeline's critical-path records as round/phase
+        // spans (one code path with `repro sim` / `repro trace`) and
+        // snapshot the ledger, then flush the ring to JSONL.
+        note_finish(&mut tracer, &mut metrics, &network, timeline.as_ref(), history.records.len());
+        if !tracer.is_deterministic() {
+            metrics.set_gauge("wall_secs", sw.elapsed_secs());
+        }
+        std::fs::write(path, obs::render_trace(&tracer, &metrics))
+            .with_context(|| format!("writing trace {path:?}"))?;
+    }
     Ok(RunResult {
         history,
         network,
@@ -260,13 +288,19 @@ fn run_sync_rounds<T: SynthTask>(
     examples_per_round: u64,
     per_round: usize,
     label: &str,
+    tracer: &mut Tracer,
+    metrics: &mut Metrics,
 ) -> Result<()> {
     for t in 0..cfg.rounds {
         let lr = cfg.client_lr.at(t) as f32;
+        if let Some(at) = transport.clock_ticks() {
+            tracer.set_now(at);
+        }
         // The bit controller picks this round's widths; a uniform plan
         // collapses to the legacy single-frame path (bit-identical for
         // `const:<b>` — same pipeline config, same RNG draws).
         let bit_plan = controller.as_mut().map(|c| c.plan(t, cfg.rounds));
+        note_plan(tracer, controller.as_ref(), bit_plan.as_ref(), t);
         let (eff_uplink, seg_plan) = effective_uplink(&cfg.uplink, bit_plan.as_ref());
         let broadcast = server.broadcast()?;
         let delta_mode = broadcast.wire.is_some();
@@ -293,6 +327,10 @@ fn run_sync_rounds<T: SynthTask>(
             plan.active.len()
         };
         transport.broadcast(broadcast.bytes, receivers);
+        tracer.point(
+            "downlink",
+            vec![("bytes", Json::from(broadcast.bytes)), ("receivers", Json::from(receivers))],
+        );
 
         // Train + encode every active client; serially or fanned out over
         // scoped threads (bit-identical either way — see module docs).
@@ -347,8 +385,13 @@ fn run_sync_rounds<T: SynthTask>(
 
         let mut loss_sum = 0.0f64;
         let n_kept = delivered.len();
+        if let Some(at) = transport.clock_ticks() {
+            tracer.set_now(at);
+        }
         for frame in &delivered {
-            match server.ingest(frame) {
+            let verdict = server.ingest(frame);
+            note_ingest(tracer, metrics, frame, &verdict);
+            match verdict {
                 Ingest::Accepted { .. } => loss_sum += loss_of[&frame.client_id] as f64,
                 verdict => bail!(
                     "round {}: server refused a delivered frame from client {} ({verdict:?})",
@@ -362,12 +405,18 @@ fn run_sync_rounds<T: SynthTask>(
         // reset with it): the accepted segments' wire headers, the mean
         // client EF-residual norm, and the round's mean train loss.
         if let Some(c) = controller.as_mut() {
+            let obs = server.round_observations();
+            tracer.point(
+                "observe",
+                vec![("round", Json::from(t)), ("segments", Json::from(obs.len()))],
+            );
             c.observe(
-                &server.round_observations(),
+                &obs,
                 residual_sum / trained.max(1) as f64,
                 Some(train_loss),
             );
         }
+        let (dup, stale, malformed) = server.round_verdicts();
         server.finish_round();
 
         let (metric, eval_loss) = if eval_due(cfg, t + 1) {
@@ -384,6 +433,9 @@ fn run_sync_rounds<T: SynthTask>(
         } else {
             (None, None)
         };
+        if let Some(m) = metric {
+            tracer.point("eval", vec![("round", Json::from(t + 1)), ("metric", Json::from(m))]);
+        }
 
         let ledger = transport.ledger();
         let rec = RoundRecord {
@@ -394,7 +446,9 @@ fn run_sync_rounds<T: SynthTask>(
             uplink_bytes: ledger.uplink_bytes,
             downlink_bytes: ledger.downlink_bytes,
             clients: n_kept,
-            stale_updates: 0,
+            stale_updates: stale,
+            dup_updates: dup,
+            malformed_updates: malformed,
             bits: bit_plan.map(|p| p.bits).unwrap_or_default(),
         };
         if cfg.verbose {
@@ -452,6 +506,8 @@ fn run_async_windows<T: SynthTask>(
     examples_per_round: u64,
     per_round: usize,
     label: &str,
+    tracer: &mut Tracer,
+    metrics: &mut Metrics,
 ) -> Result<()> {
     let RoundMode::BufferedAsync { buffer_k, .. } = cfg.round_mode else {
         unreachable!("run_async_windows requires BufferedAsync");
@@ -477,6 +533,7 @@ fn run_async_windows<T: SynthTask>(
     // a plan change lands mid-stream — in-flight frames keep the widths
     // they were encoded with (self-describing headers).
     let mut bit_plan = controller.as_mut().map(|c| c.plan(0, cfg.rounds));
+    note_plan(tracer, controller.as_ref(), bit_plan.as_ref(), 0);
 
     // Initial broadcast (model version 0).
     let mut broadcast = server.broadcast()?;
@@ -484,6 +541,10 @@ fn run_async_windows<T: SynthTask>(
     if let Some(frame) = &broadcast.wire {
         fleet_model.apply_wire(frame)?;
         transport.broadcast(broadcast.bytes, clients.len());
+        tracer.point(
+            "downlink",
+            vec![("bytes", Json::from(broadcast.bytes)), ("receivers", Json::from(clients.len()))],
+        );
     }
 
     // Fill the pipeline.
@@ -512,6 +573,8 @@ fn run_async_windows<T: SynthTask>(
             broadcast.bytes,
             delta_mode,
             examples_per_round,
+            tracer,
+            metrics,
         )?;
     }
 
@@ -548,13 +611,20 @@ fn run_async_windows<T: SynthTask>(
                 broadcast.bytes,
                 delta_mode,
                 examples_per_round,
+                tracer,
+                metrics,
             )? {
                 bail!("buffered-async run starved: nothing in flight and no dispatchable client");
             }
             continue;
         };
         busy[frame.client_id] = false;
-        match server.ingest(&frame) {
+        if let Some(at) = transport.clock_ticks() {
+            tracer.set_now(at);
+        }
+        let verdict = server.ingest(&frame);
+        note_ingest(tracer, metrics, &frame, &verdict);
+        match verdict {
             Ingest::Accepted { .. } => {
                 window_accepted += 1;
                 window_loss += loss_of[frame.client_id] as f64;
@@ -575,15 +645,22 @@ fn run_async_windows<T: SynthTask>(
             // Feed the controller before the round closes (observations
             // reset with it).
             if let Some(c) = controller.as_mut() {
+                let obs = server.round_observations();
+                tracer.point(
+                    "observe",
+                    vec![("round", Json::from(applied)), ("segments", Json::from(obs.len()))],
+                );
                 c.observe(
-                    &server.round_observations(),
+                    &obs,
                     window_residual / window_accepted.max(1) as f64,
                     Some(window_train_loss),
                 );
             }
+            let (dup, stale, malformed) = server.round_verdicts();
             let n_kept = server.finish_round();
             applied += 1;
             transport.close_window(applied, n_kept, window_dropped);
+            metrics.set_gauge("queue_depth", busy.iter().filter(|&&b| b).count() as f64);
 
             // New model version: broadcast (delta replicas must see every
             // frame; the raw float32 model is metered per dispatch).
@@ -592,6 +669,13 @@ fn run_async_windows<T: SynthTask>(
             if let Some(fw) = &broadcast.wire {
                 fleet_model.apply_wire(fw)?;
                 transport.broadcast(broadcast.bytes, clients.len());
+                tracer.point(
+                    "downlink",
+                    vec![
+                        ("bytes", Json::from(broadcast.bytes)),
+                        ("receivers", Json::from(clients.len())),
+                    ],
+                );
             }
 
             let (metric, eval_loss) = if eval_due(cfg, applied) {
@@ -608,6 +692,12 @@ fn run_async_windows<T: SynthTask>(
             } else {
                 (None, None)
             };
+            if let Some(m) = metric {
+                tracer.point(
+                    "eval",
+                    vec![("round", Json::from(applied)), ("metric", Json::from(m))],
+                );
+            }
             let ledger = transport.ledger();
             let rec = RoundRecord {
                 round: applied,
@@ -617,7 +707,9 @@ fn run_async_windows<T: SynthTask>(
                 uplink_bytes: ledger.uplink_bytes,
                 downlink_bytes: ledger.downlink_bytes,
                 clients: n_kept,
-                stale_updates: window_dropped,
+                stale_updates: stale,
+                dup_updates: dup,
+                malformed_updates: malformed,
                 bits: bit_plan.as_ref().map(|p| p.bits.clone()).unwrap_or_default(),
             };
             if cfg.verbose {
@@ -641,6 +733,7 @@ fn run_async_windows<T: SynthTask>(
             window_dropped = 0;
             // Next window's widths, from the freshly observed signals.
             bit_plan = controller.as_mut().map(|c| c.plan(applied, cfg.rounds));
+            note_plan(tracer, controller.as_ref(), bit_plan.as_ref(), applied);
         }
 
         if applied < cfg.rounds {
@@ -669,6 +762,8 @@ fn run_async_windows<T: SynthTask>(
                 broadcast.bytes,
                 delta_mode,
                 examples_per_round,
+                tracer,
+                metrics,
             )?;
         }
     }
@@ -701,6 +796,8 @@ fn dispatch_one<T: SynthTask>(
     broadcast_bytes: usize,
     delta_mode: bool,
     examples: u64,
+    tracer: &mut Tracer,
+    metrics: &mut Metrics,
 ) -> Result<bool> {
     let mut attempts = 0usize;
     loop {
@@ -732,6 +829,14 @@ fn dispatch_one<T: SynthTask>(
                     // Raw float32 model: one model transfer per dispatch.
                     transport.broadcast(broadcast_bytes, 1);
                 }
+                if let Some(at) = transport.clock_ticks() {
+                    tracer.set_now(at);
+                }
+                tracer.point(
+                    "dispatch",
+                    vec![("client", Json::from(candidate)), ("round", Json::from(server_round))],
+                );
+                metrics.inc("dispatches", 1);
                 transport.dispatch(
                     Frame {
                         round: server_round,

@@ -204,6 +204,13 @@ pub struct Server {
     /// per-layer signal (`n`, `bits`, `norm`, `bound` all live in the
     /// CSG2 header; no payload access). Reset by [`Server::finish_round`].
     obs_round: Vec<ObsAcc>,
+    /// Refused-frame tallies for the open round (duplicate / stale /
+    /// malformed), behind [`Server::round_verdicts`]. Reset by
+    /// [`Server::finish_round`] — refused frames used to vanish from every
+    /// artifact, which hid the PR 6 fuzz findings.
+    dup_this_round: usize,
+    stale_this_round: usize,
+    malformed_this_round: usize,
 }
 
 /// Accumulator behind [`Server::round_observations`]: RMS of the segment
@@ -236,6 +243,9 @@ impl Server {
             client_weights: Vec::new(),
             contributed: Vec::new(),
             obs_round: Vec::new(),
+            dup_this_round: 0,
+            stale_this_round: 0,
+            malformed_this_round: 0,
         }
     }
 
@@ -297,6 +307,17 @@ impl Server {
     /// Payload validation (wire header, direction, tensor length) runs
     /// only for frames that would otherwise be accepted.
     pub fn ingest(&mut self, frame: &Frame) -> Ingest {
+        let verdict = self.classify_and_fold(frame);
+        match verdict {
+            Ingest::Accepted { .. } => {}
+            Ingest::Duplicate => self.dup_this_round += 1,
+            Ingest::StaleRound => self.stale_this_round += 1,
+            Ingest::Malformed => self.malformed_this_round += 1,
+        }
+        verdict
+    }
+
+    fn classify_and_fold(&mut self, frame: &Frame) -> Ingest {
         let Some(&n_i) = self.client_weights.get(frame.client_id) else {
             return Ingest::Malformed;
         };
@@ -425,6 +446,18 @@ impl Server {
         }
     }
 
+    /// Refused-frame tallies of the open round, as
+    /// `(duplicate, stale, malformed)` — the ingest verdict counters the
+    /// history records and the trace metrics surface. Reset (with the rest
+    /// of the round state) by [`Server::finish_round`].
+    pub fn round_verdicts(&self) -> (usize, usize, usize) {
+        (
+            self.dup_this_round,
+            self.stale_this_round,
+            self.malformed_this_round,
+        )
+    }
+
     /// The open round's per-segment observations (RMS norm over accepted
     /// frames, latest width/bound) — what the runner feeds the adaptive
     /// bit controller. Empty until a frame is accepted.
@@ -482,6 +515,9 @@ impl Server {
         self.weight_sum = 0.0;
         self.updates_this_round = 0;
         self.obs_round.clear();
+        self.dup_this_round = 0;
+        self.stale_this_round = 0;
+        self.malformed_this_round = 0;
         self.round += 1;
         n_updates
     }
@@ -717,6 +753,25 @@ mod tests {
             s.params
         };
         assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn round_verdicts_tally_refusals_and_reset() {
+        let pipe = Pipeline::cosine(4);
+        let mut rng = Pcg64::seeded(26);
+        let g = gradient_like(&mut rng, 64);
+        let mut s = Server::new(vec![0.0; 64], 1.0).with_clients(vec![5, 5]);
+        assert_eq!(s.round_verdicts(), (0, 0, 0));
+        s.ingest(&uplink_frame(&pipe, &g, 1, 0, 0));
+        s.ingest(&uplink_frame(&pipe, &g, 2, 0, 0)); // duplicate
+        s.ingest(&uplink_frame(&pipe, &g, 3, 9, 1)); // stale (future tag)
+        s.ingest(&uplink_frame(&pipe, &g, 4, 0, 99)); // malformed (unknown id)
+        let mut bad = uplink_frame(&pipe, &g, 5, 0, 1);
+        bad.payload[0] = b'X';
+        s.ingest(&bad); // malformed (corrupt header)
+        assert_eq!(s.round_verdicts(), (1, 1, 2));
+        s.finish_round();
+        assert_eq!(s.round_verdicts(), (0, 0, 0), "tallies reset per round");
     }
 
     #[test]

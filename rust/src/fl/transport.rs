@@ -38,7 +38,7 @@
 
 use std::collections::VecDeque;
 
-use crate::sim::{secs, Admission, ClientLoad, FleetSim, RoundPlan, SimConfig, Timeline};
+use crate::sim::{secs, Admission, ClientLoad, FleetSim, RoundPlan, SimConfig, Ticks, Timeline};
 
 use super::network::NetworkLedger;
 
@@ -119,6 +119,13 @@ pub trait Transport {
 
     /// Current virtual time in seconds (`None` on untimed transports).
     fn clock_secs(&self) -> Option<f64>;
+
+    /// Current virtual time in integer ticks (µs) — what the tracing
+    /// plane stamps events with ([`crate::obs::TimeSource::manual`]).
+    /// `None` on untimed transports (the default).
+    fn clock_ticks(&self) -> Option<Ticks> {
+        None
+    }
 
     /// Consume the transport, yielding the ledger and the virtual-clock
     /// timeline (`None` on untimed transports).
@@ -345,6 +352,10 @@ impl Transport for SimTransport {
         Some(secs(self.sim.clock()))
     }
 
+    fn clock_ticks(&self) -> Option<Ticks> {
+        Some(self.sim.clock())
+    }
+
     fn finish(self: Box<Self>) -> (NetworkLedger, Option<Timeline>) {
         (self.ledger, Some(self.sim.into_timeline()))
     }
@@ -361,13 +372,104 @@ pub mod dryrun {
 
     use crate::compress::allocator::{BitController, BitPlan, BitSchedule, LayerMap};
     use crate::compress::{wire, Direction, Pipeline, PipelineState};
+    use crate::obs::{emit_round_spans, Metrics, Tracer};
     use crate::sim::{Admission, SimConfig, Timeline};
+    use crate::util::json::Json;
     use crate::util::propcheck::gradient_like;
     use crate::util::rng::Pcg64;
 
     use super::super::network::NetworkLedger;
     use super::super::server::{Ingest, RoundMode, Server};
     use super::{Frame, SimTransport, Transport};
+
+    /// Histogram buckets for delivered frame sizes (bytes).
+    const FRAME_BYTES_BOUNDS: &[f64] = &[1_000.0, 10_000.0, 100_000.0, 1_000_000.0];
+    /// Histogram buckets for accepted-update staleness (model versions).
+    const STALENESS_BOUNDS: &[f64] = &[0.0, 1.0, 2.0, 4.0, 8.0];
+
+    fn verdict_label(v: &Ingest) -> &'static str {
+        match v {
+            Ingest::Accepted { .. } => "accepted",
+            Ingest::Duplicate => "duplicate",
+            Ingest::StaleRound => "stale",
+            Ingest::Malformed => "malformed",
+        }
+    }
+
+    fn verdict_counter(v: &Ingest) -> &'static str {
+        match v {
+            Ingest::Accepted { .. } => "ingest_accepted",
+            Ingest::Duplicate => "ingest_duplicate",
+            Ingest::StaleRound => "ingest_stale",
+            Ingest::Malformed => "ingest_malformed",
+        }
+    }
+
+    /// One `ingest` trace point + verdict counters per delivered frame.
+    pub(crate) fn note_ingest(
+        tracer: &mut Tracer,
+        metrics: &mut Metrics,
+        frame: &Frame,
+        verdict: &Ingest,
+    ) {
+        metrics.inc(verdict_counter(verdict), 1);
+        metrics.observe("frame_bytes", FRAME_BYTES_BOUNDS, frame.wire_bytes() as f64);
+        let mut fields = vec![
+            ("client", Json::from(frame.client_id)),
+            ("round", Json::from(frame.round)),
+            ("verdict", Json::from(verdict_label(verdict))),
+        ];
+        if let Ingest::Accepted { staleness } = verdict {
+            metrics.observe("staleness", STALENESS_BOUNDS, *staleness as f64);
+            fields.push(("staleness", Json::from(*staleness)));
+        }
+        tracer.point("ingest", fields);
+    }
+
+    /// One `bit_plan` trace point: the controller's decision plus the
+    /// water-filling rationale (cost vs budget, pressure-raised floor).
+    pub(crate) fn note_plan(
+        tracer: &mut Tracer,
+        controller: Option<&BitController>,
+        plan: Option<&BitPlan>,
+        round: usize,
+    ) {
+        let (Some(c), Some(p)) = (controller, plan) else {
+            return;
+        };
+        let widths: Vec<String> = p.bits.iter().map(|b| b.to_string()).collect();
+        tracer.point(
+            "bit_plan",
+            vec![
+                ("round", Json::from(round)),
+                ("bits", Json::from(widths.join(","))),
+                ("segmented", Json::from(p.segmented)),
+                ("cost", Json::from(c.plan_cost(p))),
+                ("budget", Json::from(c.effective_budget())),
+                ("floor", Json::from(1usize + c.pressure() as usize)),
+            ],
+        );
+    }
+
+    /// Post-run: replay the timeline's critical-path records as spans
+    /// (the one-code-path contract with `repro sim`) and snapshot the
+    /// byte-exact ledger into the metrics registry.
+    pub(crate) fn note_finish(
+        tracer: &mut Tracer,
+        metrics: &mut Metrics,
+        ledger: &NetworkLedger,
+        timeline: Option<&Timeline>,
+        aggregations: usize,
+    ) {
+        for r in timeline.map(|tl| tl.records.as_slice()).unwrap_or(&[]) {
+            emit_round_spans(tracer, r);
+        }
+        metrics.inc("uplink_bytes", ledger.uplink_bytes);
+        metrics.inc("downlink_bytes", ledger.downlink_bytes);
+        metrics.inc("uplink_messages", ledger.uplink_messages);
+        metrics.inc("downlink_messages", ledger.downlink_messages);
+        metrics.inc("rounds", aggregations as u64);
+    }
 
     /// What a dry protocol run produced.
     pub struct DryOutcome {
@@ -498,6 +600,38 @@ pub mod dryrun {
         rounds: usize,
         seed: u64,
     ) -> Result<DryOutcome> {
+        run_sync_bits_traced(
+            pipe,
+            bits,
+            sim,
+            n,
+            n_clients,
+            k,
+            rounds,
+            seed,
+            &mut Tracer::disabled(),
+            &mut Metrics::new(),
+        )
+    }
+
+    /// [`run_sync_bits`] with the observability plane in the loop: live
+    /// `bit_plan`/`downlink`/`ingest`/`observe` points stamped on the sim
+    /// clock, verdict/byte metrics, and a post-run span replay of the
+    /// timeline. With a deterministic tracer clock the emitted trace is
+    /// byte-identical per seed (pinned by `tests/obs_trace.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_sync_bits_traced(
+        pipe: &Pipeline,
+        bits: Option<&DryBits>,
+        sim: &SimConfig,
+        n: usize,
+        n_clients: usize,
+        k: usize,
+        rounds: usize,
+        seed: u64,
+        tracer: &mut Tracer,
+        metrics: &mut Metrics,
+    ) -> Result<DryOutcome> {
         if let Some(b) = bits {
             ensure!(b.map.param_count() == n, "layer map does not cover n");
         }
@@ -510,10 +644,18 @@ pub mod dryrun {
         let mut round_bits = Vec::new();
         for t in 0..rounds {
             let bit_plan = controller.as_mut().map(|c| c.plan(t, rounds));
+            if let Some(at) = transport.clock_ticks() {
+                tracer.set_now(at);
+            }
+            note_plan(tracer, controller.as_ref(), bit_plan.as_ref(), t);
             let k_sel = transport.selection_count(k);
             let selected = selector.sample_indices(n_clients, k_sel);
             let plan = transport.plan_round(&selected);
             transport.broadcast(n * 4, plan.active.len());
+            tracer.point(
+                "downlink",
+                vec![("bytes", Json::from(n * 4)), ("receivers", Json::from(plan.active.len()))],
+            );
             let mut mse_of = vec![0.0f64; n_clients];
             let frames: Vec<Frame> = plan
                 .active
@@ -539,17 +681,27 @@ pub mod dryrun {
                 })
                 .collect();
             let delivered = transport.exchange(t + 1, k, n * 4, frames, 300);
+            if let Some(at) = transport.clock_ticks() {
+                tracer.set_now(at);
+            }
             let mut mse_sum = 0.0f64;
             for f in &delivered {
+                let verdict = server.ingest(f);
+                note_ingest(tracer, metrics, f, &verdict);
                 ensure!(
-                    matches!(server.ingest(f), Ingest::Accepted { .. }),
+                    matches!(verdict, Ingest::Accepted { .. }),
                     "sync dry-run: ingest refused client {}",
                     f.client_id
                 );
                 mse_sum += mse_of[f.client_id];
             }
             if let Some(c) = controller.as_mut() {
-                c.observe(&server.round_observations(), 0.0, None);
+                let obs = server.round_observations();
+                tracer.point(
+                    "observe",
+                    vec![("round", Json::from(t)), ("segments", Json::from(obs.len()))],
+                );
+                c.observe(&obs, 0.0, None);
                 round_mse.push(mse_sum / delivered.len().max(1) as f64);
                 let widths = bit_plan.as_ref().map(|p| p.bits.clone());
                 round_bits.push(widths.unwrap_or_default());
@@ -557,9 +709,11 @@ pub mod dryrun {
             server.finish_round();
         }
         let (ledger, tl) = Box::new(transport).finish();
+        let timeline = tl.expect("sim transport has a timeline");
+        note_finish(tracer, metrics, &ledger, Some(&timeline), rounds);
         Ok(DryOutcome {
             ledger,
-            timeline: tl.expect("sim transport has a timeline"),
+            timeline,
             aggregations: rounds,
             dropped: 0,
             round_mse,
@@ -611,6 +765,41 @@ pub mod dryrun {
         max_staleness: usize,
         seed: u64,
     ) -> Result<DryOutcome> {
+        run_async_bits_traced(
+            pipe,
+            bits,
+            sim,
+            n,
+            n_clients,
+            buffer_k,
+            concurrency,
+            windows,
+            max_staleness,
+            seed,
+            &mut Tracer::disabled(),
+            &mut Metrics::new(),
+        )
+    }
+
+    /// [`run_async_bits`] with the observability plane in the loop:
+    /// `dispatch`/`arrive`/`ingest` points on the virtual clock, a
+    /// `queue_depth` gauge at every window close, and the same post-run
+    /// span replay + ledger snapshot as the sync path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_async_bits_traced(
+        pipe: &Pipeline,
+        bits: Option<&DryBits>,
+        sim: &SimConfig,
+        n: usize,
+        n_clients: usize,
+        buffer_k: usize,
+        concurrency: usize,
+        windows: usize,
+        max_staleness: usize,
+        seed: u64,
+        tracer: &mut Tracer,
+        metrics: &mut Metrics,
+    ) -> Result<DryOutcome> {
         ensure!(buffer_k <= n_clients, "buffer exceeds the fleet");
         if let Some(b) = bits {
             ensure!(b.map.param_count() == n, "layer map does not cover n");
@@ -639,7 +828,9 @@ pub mod dryrun {
                                 selector: &mut Pcg64,
                                 flight: &mut u64,
                                 plan: Option<&BitPlan>,
-                                round: usize|
+                                round: usize,
+                                tracer: &mut Tracer,
+                                metrics: &mut Metrics|
          -> bool {
             let mut attempts = 0usize;
             loop {
@@ -664,6 +855,14 @@ pub mod dryrun {
                             None => payload(pipe, n, candidate, fs),
                         };
                         transport.broadcast(n * 4, 1);
+                        if let Some(at) = transport.clock_ticks() {
+                            tracer.set_now(at);
+                        }
+                        tracer.point(
+                            "dispatch",
+                            vec![("client", Json::from(candidate)), ("round", Json::from(round))],
+                        );
+                        metrics.inc("dispatches", 1);
                         transport.dispatch(
                             Frame {
                                 round,
@@ -685,6 +884,7 @@ pub mod dryrun {
             }
         };
 
+        note_plan(tracer, controller.as_ref(), bit_plan.as_ref(), 0);
         for _ in 0..concurrency.min(n_clients) {
             dispatch_one(
                 &mut transport,
@@ -694,6 +894,8 @@ pub mod dryrun {
                 &mut flight,
                 bit_plan.as_ref(),
                 server.round(),
+                tracer,
+                metrics,
             );
         }
         let (mut applied, mut window_dropped, mut total_dropped) = (0usize, 0usize, 0usize);
@@ -711,13 +913,21 @@ pub mod dryrun {
                         &mut flight,
                         bit_plan.as_ref(),
                         server.round(),
+                        tracer,
+                        metrics,
                     ),
                     "async dry-run starved"
                 );
                 continue;
             };
+            if let Some(at) = transport.clock_ticks() {
+                tracer.set_now(at);
+            }
+            tracer.point("arrive", vec![("client", Json::from(frame.client_id))]);
             busy[frame.client_id] = false;
-            match server.ingest(&frame) {
+            let verdict = server.ingest(&frame);
+            note_ingest(tracer, metrics, &frame, &verdict);
+            match verdict {
                 Ingest::Accepted { .. } => {
                     window_accepted += 1;
                     window_mse += mse_of[frame.client_id];
@@ -730,7 +940,12 @@ pub mod dryrun {
             }
             if server.ready_to_apply() {
                 if let Some(c) = controller.as_mut() {
-                    c.observe(&server.round_observations(), 0.0, None);
+                    let obs = server.round_observations();
+                    tracer.point(
+                        "observe",
+                        vec![("round", Json::from(applied)), ("segments", Json::from(obs.len()))],
+                    );
+                    c.observe(&obs, 0.0, None);
                     round_mse.push(window_mse / window_accepted.max(1) as f64);
                     let widths = bit_plan.as_ref().map(|p| p.bits.clone());
                     round_bits.push(widths.unwrap_or_default());
@@ -738,10 +953,12 @@ pub mod dryrun {
                 let reporters = server.finish_round();
                 applied += 1;
                 transport.close_window(applied, reporters, window_dropped);
+                metrics.set_gauge("queue_depth", busy.iter().filter(|&&b| b).count() as f64);
                 window_dropped = 0;
                 window_mse = 0.0;
                 window_accepted = 0;
                 bit_plan = controller.as_mut().map(|c| c.plan(applied, windows));
+                note_plan(tracer, controller.as_ref(), bit_plan.as_ref(), applied);
             }
             if applied < windows {
                 dispatch_one(
@@ -752,13 +969,17 @@ pub mod dryrun {
                     &mut flight,
                     bit_plan.as_ref(),
                     server.round(),
+                    tracer,
+                    metrics,
                 );
             }
         }
         let (ledger, tl) = Box::new(transport).finish();
+        let timeline = tl.expect("sim transport has a timeline");
+        note_finish(tracer, metrics, &ledger, Some(&timeline), applied);
         Ok(DryOutcome {
             ledger,
-            timeline: tl.expect("sim transport has a timeline"),
+            timeline,
             aggregations: applied,
             dropped: total_dropped,
             round_mse,

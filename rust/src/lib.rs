@@ -24,6 +24,7 @@
 //! | [`analyze`] | zero-dependency static analyzer for project invariants (determinism, panic-safety, hot-path purity, unsafe-audit, wire constants) behind `repro analyze` |
 //! | [`compress`] | the `Quantizer` trait + schemes (cosine, linear, sign-family, float32), the direction-agnostic `Pipeline` (EF → sparsify → rotate → quantize → pack → DEFLATE), entropy stats, the `CSG2` wire format |
 //! | [`fl`] | FedAvg server/clients, model replica (round-trip downlink), round runner, schedules, simulated network, centralized toy harness |
+//! | [`obs`] | observability plane: `TimeSource` clocks, span tracing over a bounded ring, typed metrics registry, JSONL/Prometheus sinks, the `repro trace` explorer |
 //! | [`sim`] | discrete-event systems simulator: virtual clock + event queue, heterogeneous device tiers, synchronous / over-selection round policies, per-round timelines and time-to-accuracy |
 //! | [`data`] | synthetic MNIST/CIFAR/volume datasets + IID/Non-IID partitioning |
 //! | [`runtime`] | PJRT engine: manifest-driven loading and execution of AOT artifacts |
@@ -35,6 +36,7 @@ pub mod compress;
 pub mod data;
 pub mod figures;
 pub mod fl;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

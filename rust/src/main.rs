@@ -5,14 +5,18 @@
 //! repro train --task mnist|mnist-iid|cifar|unet --codec <name>
 //!             [--bits B|const:<b>|anneal:<hi>..<lo>|adaptive[:<bytes>]]
 //!             [--keep F] [--rounds N] [--kernel] [--seed S] [--threads N]
-//!             [--round-mode sync|async:K[:S]]
+//!             [--round-mode sync|async:K[:S]] [--trace FILE]
 //!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
 //! repro sim   --task <t> [--rounds N] [--fleet heterogeneous|uniform|3g]
 //!             [--policy sync|overselect] [--over F] [--availability P]
 //!             [--dropout P] [--target M] [--round-mode async:K[:S]]
 //!             [--bits <schedule>]  # adds const vs anneal vs adaptive rows
+//!             [--trace FILE]       # structured JSONL round telemetry
 //!             [--quick]   # sync vs buffered-async time-to-accuracy table
 //!                         # (--quick without artifacts: protocol dry-run)
+//! repro trace FILE                  # explore a --trace JSONL: phase
+//!                                   # breakdowns, ingest verdicts,
+//!                                   # bit-plan decision log, metrics
 //! repro compress-stats [--n N]      # pipeline table, no artifacts needed
 //! repro bench [--json] [--quick] [--n N] [--out FILE]
 //!                                   # compress perf trajectory
@@ -32,6 +36,7 @@ use cossgd::compress::cosine::{BoundMode, Rounding};
 use cossgd::compress::{Direction, Pipeline, PipelineState};
 use cossgd::figures::{self, FigOpts};
 use cossgd::fl::{self, FlConfig, RoundMode, Task};
+use cossgd::obs::{self, Metrics, PhaseBreakdown, TimeSource, Tracer};
 use cossgd::runtime::Engine;
 use cossgd::sim::{fmt_sim_secs, RoundPolicy, SimConfig, Timeline};
 use cossgd::util::cli::Args;
@@ -51,6 +56,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("figure") => cmd_figure(args),
         Some("train") => cmd_train(args),
         Some("sim") => cmd_sim(args),
+        Some("trace") => cmd_trace(args),
         Some("compress-stats") => cmd_compress_stats(args),
         Some("bench") => cmd_bench(args),
         Some("check") => cmd_check(),
@@ -61,7 +67,7 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("subcommands: figure, train, sim, compress-stats, bench, check, analyze, list");
+    println!("subcommands: figure, train, sim, trace, compress-stats, bench, check, analyze, list");
     println!("figures: {}", figures::ALL.join(", "));
     println!("tasks:   mnist (non-iid), mnist-iid, cifar, unet");
     println!(
@@ -80,6 +86,7 @@ fn cmd_list() -> Result<()> {
          --availability P, --dropout P, --target M, --quick"
     );
     println!("rounds: --round-mode sync|async:K[:S]  (K = buffer size, S = max staleness)");
+    println!("observability: --trace FILE writes JSONL round telemetry; `repro trace FILE` explores it");
     println!("perf: --threads N (0 = all cores), bench [--json] [--quick] [--n N] [--out FILE]");
     Ok(())
 }
@@ -301,6 +308,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.client_threads = args.opt_usize("threads", 1);
     cfg.round_mode = round_mode_from_args(args)?;
     cfg.verbose = !args.flag("quiet");
+    if let Some(p) = args.opt("trace") {
+        cfg = cfg.with_trace(p);
+    }
     if let Some(c) = args.opt("clients") {
         cfg.n_clients = c.parse()?;
     }
@@ -330,6 +340,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = std::path::Path::new("artifacts/results").join("train_last.json");
     fl::metrics::save_results(&out, "train", &[result.history])?;
     println!("history written to {out:?}");
+    if let Some(p) = args.opt("trace") {
+        println!("trace written to {p}; inspect with `repro trace {p}`");
+    }
     Ok(())
 }
 
@@ -480,7 +493,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
         "{:<30} {:>7} {:>10} {:>10} {:>10} {:>10} {:>11} {:>6}",
         "scheme", "best", "sync time", "sync t2t", "async time", "async t2t", "uplink", "stale"
     );
-    for (name, up, down, schedule) in schemes {
+    let trace_path = args.opt("trace");
+    for (i, (name, up, down, schedule)) in schemes.into_iter().enumerate() {
         let name = name.as_str();
         let mut cfg = base
             .clone()
@@ -495,9 +509,17 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg.eval_every = args.opt_usize("eval-every", 5);
         cfg.client_threads = args.opt_usize("threads", 1);
         cfg.verbose = args.flag("verbose");
+        // `--trace` captures the first scheme's synchronous run (one run
+        // per file; the dry-run path traces every row into one file).
+        if i == 0 {
+            if let Some(p) = trace_path {
+                cfg = cfg.with_trace(p);
+            }
+        }
         let sync_run = fl::run_labeled(&cfg, &engine, name)?;
-        let async_run =
-            fl::run_labeled(&cfg.clone().with_round_mode(async_mode), &engine, name)?;
+        let mut async_cfg = cfg.clone().with_round_mode(async_mode);
+        async_cfg.trace = None;
+        let async_run = fl::run_labeled(&async_cfg, &engine, name)?;
         let tl_sync = sync_run.timeline.as_ref().expect("sim runs carry a timeline");
         let tl_async = async_run.timeline.as_ref().expect("sim runs carry a timeline");
         let best = sync_run
@@ -524,6 +546,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     if target.is_none() {
         println!("(pass --target M for time-to-target-metric, e.g. --target 0.8)");
+    }
+    if let Some(p) = trace_path {
+        println!("trace written to {p} (first scheme, sync mode); inspect with `repro trace {p}`");
     }
     Ok(())
 }
@@ -589,10 +614,30 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
             Some(b),
         ));
     }
+    // `--trace` captures every row (sync + async) into one JSONL file,
+    // separated by `section` points — the explorer reports per section.
+    let trace_path = args.opt("trace");
+    let mut tracer = match trace_path {
+        Some(_) => Tracer::new(TimeSource::manual(), obs::DEFAULT_RING_CAPACITY),
+        None => Tracer::disabled(),
+    };
+    let mut metrics = Metrics::new();
     for (name, pipe, bits) in rows {
-        let sync =
-            dryrun::run_sync_bits(&pipe, bits.as_ref(), &sim, n, n_clients, k, rounds, seed)?;
-        let asyn = dryrun::run_async_bits(
+        tracer.point("section", vec![("label", format!("{name} sync").into())]);
+        let sync = dryrun::run_sync_bits_traced(
+            &pipe,
+            bits.as_ref(),
+            &sim,
+            n,
+            n_clients,
+            k,
+            rounds,
+            seed,
+            &mut tracer,
+            &mut metrics,
+        )?;
+        tracer.point("section", vec![("label", format!("{name} async").into())]);
+        let asyn = dryrun::run_async_bits_traced(
             &pipe,
             bits.as_ref(),
             &sim,
@@ -603,6 +648,8 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
             rounds,
             max_staleness,
             seed,
+            &mut tracer,
+            &mut metrics,
         )?;
         anyhow::ensure!(
             sync.timeline.records.len() == rounds && asyn.aggregations == rounds,
@@ -619,6 +666,11 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
             fmt_bytes(asyn.ledger.uplink_bytes),
             asyn.dropped
         );
+        // The same phase model `repro trace` reports from — one code path.
+        println!(
+            "  └ {}",
+            PhaseBreakdown::from_timeline(&sync.timeline).critical_path_line()
+        );
         if !sync.round_bits.is_empty() {
             let widths: Vec<String> = sync
                 .round_bits
@@ -634,6 +686,25 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
         }
     }
     println!("protocol dry-run OK (both round modes)");
+    if let Some(path) = trace_path {
+        std::fs::write(path, obs::render_trace(&tracer, &metrics))?;
+        println!(
+            "trace written to {path} ({} events); inspect with `repro trace {path}`",
+            tracer.len()
+        );
+    }
+    Ok(())
+}
+
+/// `repro trace FILE` — render a `--trace` JSONL file: per-section phase
+/// tables with the critical-path share, the flame table, ingest verdict
+/// totals, the bit controller's decision log, and the metrics snapshot.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: repro trace FILE  (a JSONL file written by --trace)");
+    };
+    let report = cossgd::obs::explore::explore_file(std::path::Path::new(path))?;
+    println!("{}", report.trim_end());
     Ok(())
 }
 

@@ -1,0 +1,111 @@
+//! Where instrumentation timestamps come from.
+//!
+//! The tracing plane never reads a clock directly: every event timestamp
+//! flows through a [`TimeSource`], so instrumented code stays inside the
+//! analyzer's determinism rules (`repro analyze` bans raw
+//! `Instant`/`SystemTime`/`Stopwatch` reads across `fl/`, `sim/` and
+//! `obs/` — this file's `wall` constructor is the one allowlisted
+//! exception, in `rust/analyze.toml`).
+//!
+//! Three sources:
+//!
+//! * [`TimeSource::manual`] — externally driven virtual time: the runner
+//!   copies the transport's sim clock into the tracer, so trace
+//!   timestamps are integer sim ticks and byte-reproducible per seed.
+//! * [`TimeSource::wall`] — monotonic wall clock anchored at creation,
+//!   for runs without a virtual clock. Explicitly nondeterministic: the
+//!   byte-identity contract (and its pinned test) excludes it.
+//! * [`TimeSource::frozen`] — pinned at a fixed tick forever: unit tests
+//!   that want stable timestamps without threading a clock.
+
+use crate::sim::Ticks;
+
+/// A timestamp source in integer microsecond ticks (the sim's unit).
+#[derive(Debug, Clone)]
+pub enum TimeSource {
+    /// Virtual time, driven by the caller through [`TimeSource::set_now`].
+    Manual { now: Ticks },
+    /// Monotonic wall clock, anchored at construction.
+    Wall { origin: std::time::Instant }, // analyze: allow(determinism): the wall-clock variant is the explicit nondeterministic escape hatch
+    /// A constant instant (test fixtures).
+    Frozen { at: Ticks },
+}
+
+impl TimeSource {
+    /// Caller-driven virtual time starting at tick 0 (the sim path).
+    pub fn manual() -> TimeSource {
+        TimeSource::Manual { now: 0 }
+    }
+
+    /// Monotonic wall clock anchored now. Traces stamped from this source
+    /// are NOT byte-reproducible across runs.
+    pub fn wall() -> TimeSource {
+        TimeSource::Wall {
+            origin: std::time::Instant::now(),
+        }
+    }
+
+    /// Pinned at `at` forever.
+    pub fn frozen(at: Ticks) -> TimeSource {
+        TimeSource::Frozen { at }
+    }
+
+    /// The current timestamp in ticks (µs).
+    pub fn now(&self) -> Ticks {
+        match self {
+            TimeSource::Manual { now } => *now,
+            TimeSource::Wall { origin } => origin.elapsed().as_micros() as Ticks,
+            TimeSource::Frozen { at } => *at,
+        }
+    }
+
+    /// Drive a `Manual` source to `t` (the caller owns monotonicity;
+    /// replaying a completed timeline into spans may legitimately rewind).
+    /// `Wall` and `Frozen` ignore it.
+    pub fn set_now(&mut self, t: Ticks) {
+        if let TimeSource::Manual { now } = self {
+            *now = t;
+        }
+    }
+
+    /// `true` when equal seeds replay byte-identical timestamps — the
+    /// trace byte-identity contract holds for these sources only.
+    pub fn is_deterministic(&self) -> bool {
+        !matches!(self, TimeSource::Wall { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_is_caller_driven() {
+        let mut c = TimeSource::manual();
+        assert_eq!(c.now(), 0);
+        c.set_now(42);
+        assert_eq!(c.now(), 42);
+        // Rewind is allowed (timeline replay).
+        c.set_now(7);
+        assert_eq!(c.now(), 7);
+        assert!(c.is_deterministic());
+    }
+
+    #[test]
+    fn frozen_ignores_the_driver() {
+        let mut c = TimeSource::frozen(99);
+        c.set_now(1);
+        assert_eq!(c.now(), 99);
+        assert!(c.is_deterministic());
+    }
+
+    #[test]
+    fn wall_is_monotone_and_flagged_nondeterministic() {
+        let mut c = TimeSource::wall();
+        let a = c.now();
+        c.set_now(0); // ignored
+        let b = c.now();
+        assert!(b >= a);
+        assert!(!c.is_deterministic());
+    }
+}

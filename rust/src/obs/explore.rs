@@ -1,0 +1,266 @@
+//! The `repro trace` explorer: load a `--trace` JSONL file and render
+//! what the runner saw — per-round phase breakdowns (through the same
+//! [`PhaseBreakdown`] code path `repro sim` uses), a critical-path flame
+//! table, ingest verdict totals, the `BitController` decision log, and
+//! the final metrics snapshot.
+//!
+//! Input format (what [`super::render_trace`] writes): one compact JSON
+//! object per line — span/point events carry an `"ev"` key; the single
+//! registry snapshot carries a `"metrics"` key.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::phases::PhaseBreakdown;
+
+/// Read `path` and render the full report.
+pub fn explore_file(path: &Path) -> Result<String> {
+    let doc = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    report(&doc)
+}
+
+/// Render the report from an in-memory JSONL trace document.
+pub fn report(doc: &str) -> Result<String> {
+    let mut events: Vec<Json> = Vec::new();
+    let mut metrics: Option<Json> = None;
+    for (i, line) in doc.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+        if j.get("metrics").is_some() {
+            metrics = Some(j);
+        } else if j.get("ev").is_some() {
+            events.push(j);
+        } else {
+            return Err(anyhow!("trace line {}: neither an event nor a metrics snapshot", i + 1));
+        }
+    }
+    if events.is_empty() && metrics.is_none() {
+        return Err(anyhow!("empty trace"));
+    }
+
+    let mut out = format!("trace: {} events\n", events.len());
+
+    // -- sections (one per `section` point, e.g. per sim scheme) ----------
+    for (label, block) in split_sections(&events) {
+        let bd = PhaseBreakdown::from_events(block);
+        if bd.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("\n== {label} ==\n"));
+        out.push_str(&bd.table());
+        out.push_str(&bd.critical_path_line());
+        out.push('\n');
+        out.push_str("\nflame (critical path):\n");
+        out.push_str(&bd.flame_table());
+    }
+
+    // -- ingest verdict totals -------------------------------------------
+    out.push_str(&verdict_totals(&events, metrics.as_ref()));
+
+    // -- allocator decision log ------------------------------------------
+    let decisions = decision_log(&events);
+    if !decisions.is_empty() {
+        out.push_str("\nallocator decisions:\n");
+        out.push_str(&decisions);
+    }
+
+    // -- final metrics snapshot ------------------------------------------
+    if let Some(m) = &metrics {
+        out.push_str(&metrics_summary(m));
+    }
+    Ok(out)
+}
+
+/// Split the event stream into `(label, slice)` blocks at `section`
+/// points. Events before the first section land in an `"all"` block.
+fn split_sections(events: &[Json]) -> Vec<(String, &[Json])> {
+    let mut cuts: Vec<(String, usize)> = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        if ev.get("name").and_then(Json::as_str) == Some("section") {
+            let label = ev
+                .path(&["f", "label"])
+                .and_then(Json::as_str)
+                .unwrap_or("section")
+                .to_string();
+            cuts.push((label, i));
+        }
+    }
+    if cuts.is_empty() {
+        return vec![("all".to_string(), events)];
+    }
+    let mut blocks = Vec::new();
+    if cuts[0].1 > 0 {
+        blocks.push(("preamble".to_string(), &events[..cuts[0].1]));
+    }
+    for (j, (label, start)) in cuts.iter().enumerate() {
+        let end = cuts.get(j + 1).map_or(events.len(), |c| c.1);
+        blocks.push((label.clone(), &events[*start..end]));
+    }
+    blocks
+}
+
+/// Ingest verdict totals: prefer the metrics counters; fall back to
+/// counting `ingest` points when the snapshot is absent.
+fn verdict_totals(events: &[Json], metrics: Option<&Json>) -> String {
+    let from_counters = |m: &Json, k: &str| {
+        m.path(&["metrics", "counters", k]).and_then(Json::as_u64)
+    };
+    let (acc, dup, stale, mal) = match metrics {
+        Some(m) if from_counters(m, "ingest_accepted").is_some() => (
+            from_counters(m, "ingest_accepted").unwrap_or(0),
+            from_counters(m, "ingest_duplicate").unwrap_or(0),
+            from_counters(m, "ingest_stale").unwrap_or(0),
+            from_counters(m, "ingest_malformed").unwrap_or(0),
+        ),
+        _ => {
+            let mut t = (0u64, 0u64, 0u64, 0u64);
+            for ev in events {
+                if ev.get("name").and_then(Json::as_str) != Some("ingest") {
+                    continue;
+                }
+                match ev.path(&["f", "verdict"]).and_then(Json::as_str) {
+                    Some("accepted") => t.0 += 1,
+                    Some("duplicate") => t.1 += 1,
+                    Some("stale") => t.2 += 1,
+                    Some("malformed") => t.3 += 1,
+                    _ => {}
+                }
+            }
+            t
+        }
+    };
+    format!(
+        "\ningest verdicts: accepted {acc} · duplicate {dup} · stale {stale} · malformed {mal}\n"
+    )
+}
+
+/// The `BitController` decision log, one line per `bit_plan` point.
+fn decision_log(events: &[Json]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        if ev.get("name").and_then(Json::as_str) != Some("bit_plan") {
+            continue;
+        }
+        let f = |k: &str| ev.path(&["f", k]);
+        let round = f("round").and_then(Json::as_usize).unwrap_or(0);
+        let bits = f("bits").and_then(Json::as_str).unwrap_or("?").to_string();
+        let segmented = f("segmented").map(|j| *j == Json::Bool(true)).unwrap_or(false);
+        let cost = f("cost").and_then(Json::as_usize).unwrap_or(0);
+        let budget = f("budget").and_then(Json::as_usize).unwrap_or(0);
+        let floor = f("floor").and_then(Json::as_usize).unwrap_or(0);
+        out.push_str(&format!(
+            "  round {round:>3}: bits {bits}{} cost {cost}B budget {budget}B floor {floor}b\n",
+            if segmented { " (segmented)" } else { " (uniform)" },
+        ));
+    }
+    out
+}
+
+/// Counters + gauges from the final snapshot, one per line.
+fn metrics_summary(m: &Json) -> String {
+    let mut out = String::new();
+    for (section, title) in [("counters", "counters"), ("gauges", "gauges")] {
+        if let Some(obj) = m.path(&["metrics", section]).and_then(Json::as_obj) {
+            if obj.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n{title}:\n"));
+            for (k, v) in obj {
+                out.push_str(&format!("  {k} = {}\n", v.dump()));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::TimeSource;
+    use crate::obs::phases::emit_round_spans;
+    use crate::obs::trace::Tracer;
+    use crate::obs::Metrics;
+    use crate::sim::TimelineRecord;
+
+    fn sample_doc() -> String {
+        let mut t = Tracer::new(TimeSource::manual(), 256);
+        t.point("section", vec![("label", Json::from("sync b4"))]);
+        t.point(
+            "bit_plan",
+            vec![
+                ("round", Json::from(1usize)),
+                ("bits", Json::from("44")),
+                ("segmented", Json::from(true)),
+                ("cost", Json::from(152usize)),
+                ("budget", Json::from(160usize)),
+                ("floor", Json::from(1usize)),
+            ],
+        );
+        for v in ["accepted", "accepted", "duplicate", "stale"] {
+            t.point("ingest", vec![("verdict", Json::from(v))]);
+        }
+        emit_round_spans(
+            &mut t,
+            &TimelineRecord {
+                round: 1,
+                start: 0,
+                end: 5_000_000,
+                broadcast_ticks: 1_000_000,
+                compute_ticks: 2_000_000,
+                upload_ticks: 2_000_000,
+                selected: 4,
+                offline: 0,
+                dropouts: 0,
+                reporters: 2,
+                stragglers_dropped: 0,
+            },
+        );
+        let mut m = Metrics::new();
+        m.inc("uplink_bytes", 304);
+        m.set_gauge("residual_norm", 0.5);
+        super::super::render_trace(&t, &m)
+    }
+
+    #[test]
+    fn report_renders_all_panels() {
+        let doc = sample_doc();
+        let rep = report(&doc).expect("report");
+        assert!(rep.contains("== sync b4 =="), "section header: {rep}");
+        assert!(rep.contains("critical path:"), "{rep}");
+        assert!(rep.contains("flame"), "{rep}");
+        assert!(
+            rep.contains("accepted 2 · duplicate 1 · stale 1 · malformed 0"),
+            "verdict totals from ingest points: {rep}"
+        );
+        assert!(rep.contains("bits 44 (segmented)"), "decision log: {rep}");
+        assert!(rep.contains("uplink_bytes = 304"), "metrics panel: {rep}");
+    }
+
+    #[test]
+    fn counters_beat_point_counting_when_present() {
+        let mut t = Tracer::new(TimeSource::frozen(0), 16);
+        t.point("ingest", vec![("verdict", Json::from("accepted"))]);
+        let mut m = Metrics::new();
+        m.inc("ingest_accepted", 9);
+        m.inc("ingest_malformed", 3);
+        let rep = report(&super::super::render_trace(&t, &m)).unwrap();
+        assert!(
+            rep.contains("accepted 9 · duplicate 0 · stale 0 · malformed 3"),
+            "{rep}"
+        );
+    }
+
+    #[test]
+    fn rejects_garbage_and_empty_docs() {
+        assert!(report("").is_err());
+        assert!(report("not json\n").is_err());
+        assert!(report("{\"no_ev_key\":1}\n").is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Typed metrics registry: counters, gauges, and fixed-bucket histograms
+//! keyed by `&'static str` names in `BTreeMap`s — so a snapshot
+//! serializes in deterministic key order, and the registry itself can
+//! never introduce iteration-order nondeterminism into a trace file.
+//!
+//! Two snapshot forms: [`Metrics::to_json`] (the final line of a
+//! `--trace` JSONL file, consumed by `repro trace`) and
+//! [`Metrics::prometheus`] (Prometheus text exposition, for scraping or
+//! eyeballing).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// A fixed-bucket histogram: `counts[i]` tallies observations
+/// `≤ bounds[i]`, with one implicit `+Inf` overflow bucket at the end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    total: u64,
+}
+
+impl Hist {
+    fn new(bounds: &[f64]) -> Hist {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Hist {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            total: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// The registry. Create once per run, thread `&mut` through the loop.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Hist>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Add `by` to counter `name` (created at 0 on first touch).
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    /// Set gauge `name` (last write wins).
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Record `v` into histogram `name`, creating it with `bounds` on
+    /// first touch (later calls keep the original buckets).
+    pub fn observe(&mut self, name: &'static str, bounds: &[f64], v: f64) {
+        self.hists.entry(name).or_insert_with(|| Hist::new(bounds)).observe(v);
+    }
+
+    /// Counter value (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, if ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram, if ever observed.
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Deterministic JSON snapshot (the `{"metrics": …}` trace line).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(k, *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges = gauges.set(k, *v);
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.hists {
+            let counts: Vec<Json> = h.counts.iter().map(|&c| Json::from(c)).collect();
+            hists = hists.set(
+                k,
+                Json::obj()
+                    .set("bounds", Json::from_f64_slice(&h.bounds))
+                    .set("counts", counts)
+                    .set("count", h.total)
+                    .set("sum", h.sum),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("hists", hists)
+    }
+
+    /// Prometheus text exposition of the full registry.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("# TYPE {k} counter\n{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {k} gauge\n{k} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            out.push_str(&format!("# TYPE {k} histogram\n"));
+            let mut cum = 0u64;
+            for (i, c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = match h.bounds.get(i) {
+                    Some(b) => format!("{b}"),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!("{k}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{k}_sum {}\n{k}_count {}\n", h.sum, h.total));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut m = Metrics::new();
+        assert!(m.is_empty());
+        m.inc("ingest_accepted", 3);
+        m.inc("ingest_accepted", 2);
+        m.set_gauge("residual_norm", 1.5);
+        m.set_gauge("residual_norm", 2.5);
+        assert_eq!(m.counter("ingest_accepted"), 5);
+        assert_eq!(m.counter("never"), 0);
+        assert_eq!(m.gauge("residual_norm"), Some(2.5));
+        assert_eq!(m.gauge("never"), None);
+    }
+
+    #[test]
+    fn histogram_buckets_partition_observations() {
+        let mut m = Metrics::new();
+        let bounds = [1.0, 10.0, 100.0];
+        for v in [0.5, 1.0, 5.0, 50.0, 500.0] {
+            m.observe("frame_bytes", &bounds, v);
+        }
+        let h = m.hist("frame_bytes").unwrap();
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 556.5).abs() < 1e-9);
+        assert_eq!(h.counts, vec![2, 1, 1, 1], "≤1, ≤10, ≤100, +Inf");
+    }
+
+    #[test]
+    fn json_snapshot_is_deterministic() {
+        let build = || {
+            let mut m = Metrics::new();
+            m.inc("z_last", 1);
+            m.inc("a_first", 2);
+            m.set_gauge("g", 0.25);
+            m.observe("h", &[2.0], 1.0);
+            m.to_json().dump()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        // BTreeMap order: a_first before z_last.
+        assert!(a.find("a_first").unwrap() < a.find("z_last").unwrap());
+        Json::parse(&a).expect("snapshot parses");
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let mut m = Metrics::new();
+        m.inc("uplink_bytes", 1234);
+        m.set_gauge("queue_depth", 7.0);
+        m.observe("staleness", &[0.0, 2.0], 1.0);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE uplink_bytes counter"));
+        assert!(text.contains("uplink_bytes 1234"));
+        assert!(text.contains("queue_depth 7"));
+        assert!(text.contains("staleness_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("staleness_count 1"));
+    }
+}

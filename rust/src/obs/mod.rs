@@ -1,0 +1,96 @@
+//! Zero-dependency observability plane: structured tracing + metrics for
+//! the federation loop.
+//!
+//! Every window into a run flows through this module: the runner and the
+//! dry-run transport loops emit span/point events into a bounded ring
+//! ([`trace`]) and typed counters/gauges/histograms into a registry
+//! ([`metrics`]); the sinks below turn those into artifacts.
+//!
+//! ```text
+//!     fl::runner / fl::transport::dryrun          sim::Timeline
+//!        │  live points: ingest verdicts,            │  completed records
+//!        │  bit_plan, observe, downlink,             │  (round start/end +
+//!        │  dispatch/arrive, eval, section           │  critical-path phases)
+//!        ▼                                           ▼
+//!   ┌──────────────────────────────┐    phases::emit_round_spans
+//!   │ Tracer                       │◀── (timeline records replayed as
+//!   │   TimeSource (clock)         │     round ▸ broadcast/train/upload
+//!   │     manual │ wall │ frozen   │     span trees — satellite of the
+//!   │   bounded event ring         │     one-code-path contract)
+//!   │     overwrite-oldest,        │
+//!   │     never reallocates        │   ┌──────────────────────────────┐
+//!   └──────────────┬───────────────┘   │ Metrics                      │
+//!                  │                   │   counters · gauges · hists  │
+//!                  │  to_jsonl()       │   (BTreeMap ⇒ deterministic) │
+//!                  ▼                   └───────┬──────────────┬───────┘
+//!        one JSON object per line              │ to_json()    │ prometheus()
+//!                  │            ┌──────────────┘              ▼
+//!                  ▼            ▼                    text exposition
+//!            render_trace: events + final
+//!            {"metrics": …} snapshot line
+//!                  │
+//!                  ▼
+//!            --trace FILE  ──────▶  repro trace FILE ([`explore`]):
+//!            (byte-identical per     phase tables, flame table,
+//!             seed under manual/     ingest verdict totals,
+//!             frozen clocks —        allocator decision log,
+//!             pinned by test)        metrics panel
+//! ```
+//!
+//! Determinism contract: with a [`TimeSource::manual`] or
+//! [`TimeSource::frozen`] clock, two runs at the same seed produce
+//! byte-identical trace files — timestamps are integer sim ticks, event
+//! ids are allocation-ordered, and both JSON emitters iterate `BTreeMap`s
+//! (`tests/obs_trace.rs` pins the bytes). The wall clock is the one
+//! explicitly nondeterministic escape hatch, allowlisted in
+//! `rust/analyze.toml`; everything else in `obs/` passes the same
+//! determinism rule that guards `fl/` and `sim/`.
+
+pub mod clock;
+pub mod explore;
+pub mod metrics;
+pub mod phases;
+pub mod trace;
+
+pub use clock::TimeSource;
+pub use metrics::{Hist, Metrics};
+pub use phases::{emit_round_spans, PhaseBreakdown, PhaseRow};
+pub use trace::{Event, EventKind, SpanId, Tracer};
+
+/// Default event-ring bound for `--trace` runs: big enough for every
+/// event of a quick sim sweep, small enough (a few MiB) to sit in memory
+/// for a million-device run — older events are overwritten past this.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// Serialize a completed run: the tracer's event ring as JSONL followed
+/// by one `{"metrics": …}` snapshot line — the document `--trace FILE`
+/// writes and [`explore::report`] reads.
+pub fn render_trace(tracer: &Tracer, metrics: &Metrics) -> String {
+    let mut out = tracer.to_jsonl();
+    out.push_str(
+        &crate::util::json::Json::obj()
+            .set("metrics", metrics.to_json())
+            .dump(),
+    );
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_trace_ends_with_the_metrics_line() {
+        let mut t = Tracer::new(TimeSource::frozen(1), 8);
+        t.point("eval", Vec::new());
+        let mut m = Metrics::new();
+        m.inc("rounds", 2);
+        let doc = render_trace(&t, &m);
+        let lines: Vec<&str> = doc.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"eval\""));
+        assert!(lines[1].starts_with("{\"metrics\":"));
+        assert!(doc.ends_with('\n'));
+    }
+}

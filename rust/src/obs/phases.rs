@@ -1,0 +1,285 @@
+//! One phase model for both reporters: the simulator's per-round
+//! critical-path breakdown ([`TimelineRecord`]) folded onto the span
+//! model, so `repro sim` (which has a [`Timeline`]) and `repro trace`
+//! (which has a parsed span stream) render the SAME [`PhaseBreakdown`]
+//! through the same table code — one code path, two entry points.
+//!
+//! * [`emit_round_spans`] replays a completed timeline record into a
+//!   tracer as a `round` span wrapping `broadcast`/`train`/`upload`
+//!   children laid end-to-end on the critical path.
+//! * [`PhaseBreakdown::from_timeline`] / [`PhaseBreakdown::from_events`]
+//!   rebuild the rows from either side; byte-for-byte the trace route
+//!   recovers exactly what the timeline route computes.
+
+use std::collections::BTreeMap;
+
+use crate::sim::{fmt_sim_secs, secs, Ticks, Timeline, TimelineRecord};
+use crate::util::json::Json;
+
+use super::trace::Tracer;
+
+/// One round's (or async window's) critical-path phase split, in ticks.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseRow {
+    pub round: usize,
+    pub start: Ticks,
+    pub end: Ticks,
+    /// Downlink transfer of the round-closing reporter.
+    pub broadcast: Ticks,
+    /// Local training of the round-closing reporter.
+    pub train: Ticks,
+    /// Uplink transfer of the round-closing reporter.
+    pub upload: Ticks,
+    /// Uploads aggregated this round.
+    pub reporters: usize,
+}
+
+impl PhaseRow {
+    pub fn from_record(r: &TimelineRecord) -> PhaseRow {
+        PhaseRow {
+            round: r.round,
+            start: r.start,
+            end: r.end,
+            broadcast: r.broadcast_ticks,
+            train: r.compute_ticks,
+            upload: r.upload_ticks,
+            reporters: r.reporters,
+        }
+    }
+
+    /// Round wall span in ticks.
+    pub fn total(&self) -> Ticks {
+        self.end - self.start
+    }
+}
+
+/// Replay one completed timeline record into `tracer` as spans: the
+/// round's wall span, with the critical-path phases as children laid
+/// end-to-end from the round start. Rewinds the manual clock — call
+/// after the live point events, it only ever appends.
+pub fn emit_round_spans(tracer: &mut Tracer, r: &TimelineRecord) {
+    tracer.set_now(r.start);
+    let round = tracer.open_with(
+        "round",
+        vec![
+            ("round", Json::from(r.round)),
+            ("selected", Json::from(r.selected)),
+            ("reporters", Json::from(r.reporters)),
+            ("stragglers_dropped", Json::from(r.stragglers_dropped)),
+            ("offline", Json::from(r.offline)),
+            ("dropouts", Json::from(r.dropouts)),
+        ],
+    );
+    let mut at = r.start;
+    for (name, ticks) in [
+        ("broadcast", r.broadcast_ticks),
+        ("train", r.compute_ticks),
+        ("upload", r.upload_ticks),
+    ] {
+        tracer.set_now(at);
+        let span = tracer.open(name);
+        at += ticks;
+        tracer.set_now(at);
+        tracer.close(span);
+    }
+    tracer.set_now(r.end);
+    tracer.close(round);
+}
+
+/// Per-round phase rows plus the shared renderers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseBreakdown {
+    pub rows: Vec<PhaseRow>,
+}
+
+impl PhaseBreakdown {
+    /// The `repro sim` entry point: straight off the timeline.
+    pub fn from_timeline(tl: &Timeline) -> PhaseBreakdown {
+        PhaseBreakdown {
+            rows: tl.records.iter().map(PhaseRow::from_record).collect(),
+        }
+    }
+
+    /// The `repro trace` entry point: rebuild rows by pairing
+    /// `open`/`close` span events (as parsed JSON objects, in file
+    /// order). `broadcast`/`train`/`upload` children fold into their
+    /// parent `round` span's row.
+    pub fn from_events(events: &[Json]) -> PhaseBreakdown {
+        let mut opens: BTreeMap<u64, &Json> = BTreeMap::new();
+        // Child phase durations keyed by the enclosing round-span id.
+        let mut pending: BTreeMap<u64, (Ticks, Ticks, Ticks)> = BTreeMap::new();
+        let mut rows = Vec::new();
+        for ev in events {
+            let id = ev.get("id").and_then(Json::as_u64).unwrap_or(0);
+            match ev.get("ev").and_then(Json::as_str) {
+                Some("open") => {
+                    opens.insert(id, ev);
+                }
+                Some("close") => {
+                    let Some(open) = opens.remove(&id) else { continue };
+                    let at_open = open.get("at").and_then(Json::as_u64).unwrap_or(0);
+                    let at_close = ev.get("at").and_then(Json::as_u64).unwrap_or(at_open);
+                    let dur = at_close.saturating_sub(at_open);
+                    match open.get("name").and_then(Json::as_str) {
+                        Some(phase @ ("broadcast" | "train" | "upload")) => {
+                            if let Some(p) = open.get("parent").and_then(Json::as_u64) {
+                                let e = pending.entry(p).or_insert((0, 0, 0));
+                                match phase {
+                                    "broadcast" => e.0 += dur,
+                                    "train" => e.1 += dur,
+                                    _ => e.2 += dur,
+                                }
+                            }
+                        }
+                        Some("round") => {
+                            let (b, t, u) = pending.remove(&id).unwrap_or((0, 0, 0));
+                            let f = |k: &str| {
+                                open.path(&["f", k]).and_then(Json::as_usize).unwrap_or(0)
+                            };
+                            rows.push(PhaseRow {
+                                round: f("round"),
+                                start: at_open,
+                                end: at_close,
+                                broadcast: b,
+                                train: t,
+                                upload: u,
+                                reporters: f("reporters"),
+                            });
+                        }
+                        _ => {}
+                    }
+                }
+                _ => {}
+            }
+        }
+        PhaseBreakdown { rows }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Per-round phase table (simulated seconds).
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "{:>5} {:>9} {:>10} {:>9} {:>9} {:>9} {:>6}\n",
+            "round", "start", "broadcast", "train", "upload", "total", "kept"
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:>5} {:>9} {:>10} {:>9} {:>9} {:>9} {:>6}\n",
+                r.round,
+                fmt_sim_secs(secs(r.start)),
+                fmt_sim_secs(secs(r.broadcast)),
+                fmt_sim_secs(secs(r.train)),
+                fmt_sim_secs(secs(r.upload)),
+                fmt_sim_secs(secs(r.total())),
+                r.reporters,
+            ));
+        }
+        out
+    }
+
+    /// Critical-path flame table: where the closing reporters' time went,
+    /// summed across rounds.
+    pub fn flame_table(&self) -> String {
+        let b: Ticks = self.rows.iter().map(|r| r.broadcast).sum();
+        let t: Ticks = self.rows.iter().map(|r| r.train).sum();
+        let u: Ticks = self.rows.iter().map(|r| r.upload).sum();
+        let total = (b + t + u).max(1);
+        let n = self.rows.len().max(1);
+        let mut out = format!(
+            "{:<10} {:>9} {:>6} {:>10}\n",
+            "phase", "total", "share", "mean/round"
+        );
+        for (name, ticks) in [("broadcast", b), ("train", t), ("upload", u)] {
+            out.push_str(&format!(
+                "{:<10} {:>9} {:>5.1}% {:>10}\n",
+                name,
+                fmt_sim_secs(secs(ticks)),
+                100.0 * ticks as f64 / total as f64,
+                fmt_sim_secs(secs(ticks / n as u64)),
+            ));
+        }
+        out
+    }
+
+    /// One-line critical-path summary — the line `repro sim --quick`
+    /// prints under each scheme, and `repro trace` prints per section.
+    pub fn critical_path_line(&self) -> String {
+        let b: Ticks = self.rows.iter().map(|r| r.broadcast).sum();
+        let t: Ticks = self.rows.iter().map(|r| r.train).sum();
+        let u: Ticks = self.rows.iter().map(|r| r.upload).sum();
+        let total = (b + t + u).max(1) as f64;
+        format!(
+            "critical path: broadcast {:.0}% · train {:.0}% · upload {:.0}%",
+            100.0 * b as f64 / total,
+            100.0 * t as f64 / total,
+            100.0 * u as f64 / total,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::TimeSource;
+
+    fn rec(round: usize, start: Ticks) -> TimelineRecord {
+        TimelineRecord {
+            round,
+            start,
+            end: start + 6_000_000,
+            broadcast_ticks: 1_000_000,
+            compute_ticks: 3_000_000,
+            upload_ticks: 2_000_000,
+            selected: 12,
+            offline: 1,
+            dropouts: 1,
+            reporters: 10,
+            stragglers_dropped: 0,
+        }
+    }
+
+    #[test]
+    fn timeline_and_trace_routes_agree() {
+        let mut tl = Timeline::default();
+        tl.push(rec(1, 0));
+        tl.push(rec(2, 6_000_000));
+        let direct = PhaseBreakdown::from_timeline(&tl);
+
+        // Replay through the span model and rebuild from parsed events.
+        let mut tracer = Tracer::new(TimeSource::manual(), 64);
+        for r in &tl.records {
+            emit_round_spans(&mut tracer, r);
+        }
+        let events: Vec<Json> = tracer
+            .to_jsonl()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        let via_trace = PhaseBreakdown::from_events(&events);
+        assert_eq!(direct, via_trace, "one phase model, two entry points");
+        assert_eq!(via_trace.rows.len(), 2);
+        assert_eq!(via_trace.rows[0].train, 3_000_000);
+        assert_eq!(via_trace.rows[1].start, 6_000_000);
+        assert_eq!(via_trace.rows[1].reporters, 10);
+    }
+
+    #[test]
+    fn renderers_cover_the_rows() {
+        let bd = PhaseBreakdown::from_timeline(&{
+            let mut tl = Timeline::default();
+            tl.push(rec(1, 0));
+            tl
+        });
+        let table = bd.table();
+        assert!(table.contains("round"));
+        assert!(table.contains("3.0s"), "train phase rendered: {table}");
+        let flame = bd.flame_table();
+        assert!(flame.contains("50.0%"), "train share: {flame}");
+        let line = bd.critical_path_line();
+        assert!(line.contains("train 50%"), "{line}");
+        assert!(PhaseBreakdown::default().is_empty());
+    }
+}

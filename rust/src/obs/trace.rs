@@ -1,0 +1,338 @@
+//! Span tracing over a bounded in-memory ring.
+//!
+//! A [`Tracer`] records [`Event`]s — span opens/closes and instant
+//! points, each with a parent id taken from the open-span stack — into a
+//! preallocated ring: when full, the oldest event is overwritten in
+//! place (never a reallocation, pinned by `tests/obs_trace.rs`), so
+//! instrumentation cost is bounded no matter how long a run is.
+//!
+//! Timestamps come from the tracer's [`TimeSource`]; serialization is one
+//! compact JSON object per event ([`Tracer::to_jsonl`]), with
+//! `BTreeMap`-ordered keys — under a deterministic clock, same seed ⇒
+//! byte-identical trace, the contract `repro trace` and the CI artifact
+//! rely on.
+
+use crate::sim::Ticks;
+use crate::util::json::Json;
+
+use super::clock::TimeSource;
+
+/// Handle to an open span, consumed by [`Tracer::close`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanId {
+    id: u64,
+    name: &'static str,
+}
+
+/// What an [`Event`] marks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A span began (`id` names it until the matching `Close`).
+    Open,
+    /// A span ended (same `id` as its `Open`).
+    Close,
+    /// An instant (no duration).
+    Point,
+}
+
+impl EventKind {
+    fn label(self) -> &'static str {
+        match self {
+            EventKind::Open => "open",
+            EventKind::Close => "close",
+            EventKind::Point => "point",
+        }
+    }
+}
+
+/// One structured trace event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Timestamp in ticks (µs) from the tracer's [`TimeSource`].
+    pub at: Ticks,
+    /// Span id (`Open`/`Close` pairs share it; `Point`s get their own).
+    pub id: u64,
+    /// Id of the enclosing open span, if any.
+    pub parent: Option<u64>,
+    pub kind: EventKind,
+    pub name: &'static str,
+    /// Structured payload, nested under `"f"` in the JSON form.
+    pub fields: Vec<(&'static str, Json)>,
+}
+
+impl Event {
+    /// One compact JSON object (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("at", self.at)
+            .set("ev", self.kind.label())
+            .set("id", self.id)
+            .set("name", self.name);
+        if let Some(p) = self.parent {
+            j = j.set("parent", p);
+        }
+        if !self.fields.is_empty() {
+            let mut f = Json::obj();
+            for (k, v) in &self.fields {
+                f = f.set(k, v.clone());
+            }
+            j = j.set("f", f);
+        }
+        j
+    }
+}
+
+/// The recording side of the tracing plane: a clock, an open-span stack,
+/// and the bounded event ring.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    clock: TimeSource,
+    /// Preallocated to `cap`; never grows past it.
+    ring: Vec<Event>,
+    /// Ring capacity (a `Vec` may over-allocate; this is the logical cap).
+    cap: usize,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    /// Events overwritten after the ring filled.
+    dropped: u64,
+    next_id: u64,
+    stack: Vec<u64>,
+}
+
+impl Tracer {
+    /// An enabled tracer holding at most `capacity` events.
+    pub fn new(clock: TimeSource, capacity: usize) -> Tracer {
+        Tracer {
+            enabled: true,
+            clock,
+            ring: Vec::with_capacity(capacity),
+            cap: capacity,
+            head: 0,
+            dropped: 0,
+            next_id: 1,
+            stack: Vec::new(),
+        }
+    }
+
+    /// A no-op tracer: every call returns immediately and records
+    /// nothing — the tracing-off fast path (`bench_sim` guards that it
+    /// stays event-free).
+    pub fn disabled() -> Tracer {
+        let mut t = Tracer::new(TimeSource::frozen(0), 0);
+        t.enabled = false;
+        t
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// `true` when this tracer's clock replays byte-identically per seed.
+    pub fn is_deterministic(&self) -> bool {
+        self.clock.is_deterministic()
+    }
+
+    /// Current clock reading.
+    pub fn now(&self) -> Ticks {
+        self.clock.now()
+    }
+
+    /// Drive a manual clock (see [`TimeSource::set_now`]).
+    pub fn set_now(&mut self, t: Ticks) {
+        self.clock.set_now(t);
+    }
+
+    /// Open a span under the current innermost open span.
+    pub fn open(&mut self, name: &'static str) -> SpanId {
+        self.open_with(name, Vec::new())
+    }
+
+    /// Open a span with structured fields on the open event.
+    pub fn open_with(&mut self, name: &'static str, fields: Vec<(&'static str, Json)>) -> SpanId {
+        let span = SpanId {
+            id: self.next_id,
+            name,
+        };
+        if !self.enabled {
+            return span;
+        }
+        self.next_id += 1;
+        let ev = Event {
+            at: self.clock.now(),
+            id: span.id,
+            parent: self.stack.last().copied(),
+            kind: EventKind::Open,
+            name,
+            fields,
+        };
+        self.stack.push(span.id);
+        self.record(ev);
+        span
+    }
+
+    /// Close `span` (and any still-open children — unbalanced closes pop
+    /// through rather than corrupt the stack).
+    pub fn close(&mut self, span: SpanId) {
+        if !self.enabled {
+            return;
+        }
+        while let Some(top) = self.stack.pop() {
+            if top == span.id {
+                break;
+            }
+        }
+        let ev = Event {
+            at: self.clock.now(),
+            id: span.id,
+            parent: self.stack.last().copied(),
+            kind: EventKind::Close,
+            name: span.name,
+            fields: Vec::new(),
+        };
+        self.record(ev);
+    }
+
+    /// Record an instant event under the current open span.
+    pub fn point(&mut self, name: &'static str, fields: Vec<(&'static str, Json)>) {
+        if !self.enabled {
+            return;
+        }
+        let ev = Event {
+            at: self.clock.now(),
+            id: self.next_id,
+            parent: self.stack.last().copied(),
+            kind: EventKind::Point,
+            name,
+            fields,
+        };
+        self.next_id += 1;
+        self.record(ev);
+    }
+
+    fn record(&mut self, ev: Event) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.ring.len() < self.cap {
+            self.ring.push(ev);
+        } else {
+            // Overwrite the oldest slot in place — no reallocation, ever.
+            self.ring[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently held, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.ring[self.head..].iter().chain(self.ring[..self.head].iter())
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// The logical ring bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Bytes-level allocation witness: the backing buffer's capacity.
+    /// Constant for the tracer's lifetime (pinned by the overflow test).
+    pub fn allocated_capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    /// Events overwritten (or discarded by a zero-capacity ring).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The whole ring as JSONL: one compact JSON object per line,
+    /// oldest first.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            out.push_str(&ev.to_json().dump());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_points_attach_to_the_open_span() {
+        let mut t = Tracer::new(TimeSource::frozen(5), 16);
+        let outer = t.open("round");
+        let inner = t.open_with("train", vec![("client", Json::from(3usize))]);
+        t.point("ingest", vec![("verdict", Json::from("accepted"))]);
+        t.close(inner);
+        t.close(outer);
+        let evs: Vec<&Event> = t.events().collect();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].kind, EventKind::Open);
+        assert_eq!(evs[0].parent, None);
+        assert_eq!(evs[1].parent, Some(evs[0].id));
+        assert_eq!(evs[2].parent, Some(evs[1].id), "point under innermost span");
+        assert_eq!(evs[3].kind, EventKind::Close);
+        assert_eq!(evs[3].name, "train");
+        assert_eq!(evs[4].name, "round");
+        assert_eq!(evs[4].parent, None);
+        assert!(t.to_jsonl().lines().count() == 5);
+        for line in t.to_jsonl().lines() {
+            Json::parse(line).expect("every trace line parses");
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_without_reallocating() {
+        let mut t = Tracer::new(TimeSource::frozen(0), 4);
+        let alloc0 = t.allocated_capacity();
+        for i in 0..10usize {
+            t.point("p", vec![("i", Json::from(i))]);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        assert_eq!(t.capacity(), 4);
+        assert_eq!(t.allocated_capacity(), alloc0, "ring must never reallocate");
+        // Oldest first, and the survivors are the LAST four points.
+        let is: Vec<usize> = t
+            .events()
+            .map(|e| e.fields[0].1.as_usize().unwrap())
+            .collect();
+        assert_eq!(is, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        let s = t.open("round");
+        t.point("ingest", Vec::new());
+        t.close(s);
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.dropped(), 0);
+        assert!(t.to_jsonl().is_empty());
+    }
+
+    #[test]
+    fn unbalanced_close_pops_through_children() {
+        let mut t = Tracer::new(TimeSource::frozen(0), 16);
+        let outer = t.open("outer");
+        let _inner = t.open("inner");
+        t.close(outer); // inner never closed explicitly
+        t.point("after", Vec::new());
+        let last = t.events().last().unwrap();
+        assert_eq!(last.parent, None, "stack fully unwound by the outer close");
+    }
+}

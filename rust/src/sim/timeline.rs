@@ -188,6 +188,8 @@ mod tests {
             downlink_bytes: 400,
             clients: 10,
             stale_updates: 0,
+            dup_updates: 0,
+            malformed_updates: 0,
             bits: Vec::new(),
         }
     }

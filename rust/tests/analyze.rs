@@ -93,6 +93,11 @@ fn every_rule_family_fires_on_the_violations_fixture() {
     assert!(has("determinism", "fl/runner.rs", "Instant"));
     assert!(has("determinism", "sim/clock.rs", "SystemTime"));
     assert!(has("determinism", "sim/clock.rs", "thread_rng"));
+    // ...and the observability plane is scoped: raw clock reads in a
+    // tracer would break the byte-identical-trace contract.
+    assert!(has("determinism", "obs/trace.rs", "Instant"));
+    assert!(has("determinism", "obs/trace.rs", "SystemTime"));
+    assert!(has("determinism", "obs/trace.rs", "Stopwatch"));
     // panic_safety
     assert!(has("panic_safety", "fl/server.rs", ".unwrap()"));
     assert!(has("panic_safety", "fl/server.rs", ".expect("));
@@ -114,7 +119,7 @@ fn every_rule_family_fires_on_the_violations_fixture() {
 
     // Exit-code contract: the CLI turns a dirty report into exit 1; the
     // report itself is the source of truth.
-    assert!(report.diagnostics.len() >= 16);
+    assert!(report.diagnostics.len() >= 19);
 }
 
 #[test]

@@ -1,0 +1,14 @@
+//! Fixture: a compliant tracing clock — the wall read is confined to the
+//! allowlisted `wall` constructor; everything else is virtual time.
+pub enum TimeSource {
+    Manual { now: u64 },
+}
+
+pub fn manual() -> TimeSource {
+    TimeSource::Manual { now: 0 }
+}
+
+/// Allowlisted in analyze.toml (`obs/clock.rs::wall`).
+pub fn wall() -> u64 {
+    std::time::Instant::now().elapsed().as_micros() as u64
+}

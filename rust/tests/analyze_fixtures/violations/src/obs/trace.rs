@@ -1,0 +1,9 @@
+//! Fixture: a tracer that reads raw clocks — determinism hits on all
+//! three wall-time tokens.
+pub fn stamp() -> u64 {
+    let t = std::time::Instant::now();
+    let wall = std::time::SystemTime::now();
+    let sw = crate::util::timer::Stopwatch::start();
+    let _ = (wall, sw);
+    t.elapsed().as_micros() as u64
+}

@@ -51,6 +51,8 @@ fn history_over(tl: &Timeline, target_rounds: usize) -> History {
             downlink_bytes: 0,
             clients: r.reporters,
             stale_updates: r.stragglers_dropped,
+            dup_updates: 0,
+            malformed_updates: 0,
             bits: Vec::new(),
         });
     }

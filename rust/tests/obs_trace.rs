@@ -1,0 +1,183 @@
+//! The observability plane's system-level contracts:
+//!
+//! * **byte-identical traces** — a sim-clocked (`TimeSource::manual`)
+//!   traced run is a pure function of the seed: two runs with equal seeds
+//!   render byte-for-byte equal JSONL documents, different seeds diverge;
+//! * every line of a rendered trace parses as JSON and the document ends
+//!   with exactly one metrics snapshot;
+//! * the bounded ring drops oldest-first without reallocating;
+//! * the `repro trace` explorer renders all its panels from a real
+//!   protocol-run trace.
+
+use cossgd::compress::allocator::{BitSchedule, LayerMap};
+use cossgd::compress::Pipeline;
+use cossgd::fl::transport::dryrun::{self, DryBits};
+use cossgd::obs::{self, Metrics, TimeSource, Tracer};
+use cossgd::sim::SimConfig;
+use cossgd::util::json::Json;
+
+const N: usize = 2_000;
+const CLIENTS: usize = 12;
+
+fn bits() -> DryBits {
+    DryBits {
+        schedule: BitSchedule::Adaptive { budget: 0 },
+        map: LayerMap::even(N, 4),
+        decay: 0.5,
+    }
+}
+
+/// One traced sync + async protocol run, rendered to a JSONL document.
+fn trace_doc(seed: u64) -> String {
+    let pipe = Pipeline::cosine(4);
+    let sim = SimConfig::heterogeneous();
+    let b = bits();
+    let mut tracer = Tracer::new(TimeSource::manual(), 4096);
+    let mut metrics = Metrics::new();
+    dryrun::run_sync_bits_traced(
+        &pipe,
+        Some(&b),
+        &sim,
+        N,
+        CLIENTS,
+        4,
+        3,
+        seed,
+        &mut tracer,
+        &mut metrics,
+    )
+    .expect("sync dry run");
+    dryrun::run_async_bits_traced(
+        &pipe,
+        Some(&b),
+        &sim,
+        N,
+        CLIENTS,
+        4,
+        8,
+        3,
+        2,
+        seed,
+        &mut tracer,
+        &mut metrics,
+    )
+    .expect("async dry run");
+    obs::render_trace(&tracer, &metrics)
+}
+
+#[test]
+fn same_seed_traces_are_byte_identical() {
+    let a = trace_doc(42);
+    let b = trace_doc(42);
+    assert_eq!(a, b, "sim-clocked traces must be a pure function of the seed");
+    let c = trace_doc(43);
+    assert_ne!(a, c, "different seeds must diverge somewhere in the trace");
+    assert!(a.lines().count() > 10, "the run actually traced something");
+}
+
+#[test]
+fn every_line_parses_and_the_doc_ends_with_one_metrics_snapshot() {
+    let doc = trace_doc(42);
+    let mut metrics_lines = 0usize;
+    let mut event_lines = 0usize;
+    for (i, line) in doc.lines().enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+        if j.get("metrics").is_some() {
+            metrics_lines += 1;
+            assert_eq!(
+                i + 1,
+                doc.lines().count(),
+                "the metrics snapshot must be the final line"
+            );
+        } else {
+            event_lines += 1;
+            let kind = j.get("ev").and_then(Json::as_str).expect("ev key");
+            assert!(matches!(kind, "open" | "close" | "point"), "kind {kind}");
+            assert!(j.get("at").and_then(Json::as_u64).is_some(), "timestamp");
+            assert!(j.get("name").and_then(Json::as_str).is_some(), "name");
+        }
+    }
+    assert_eq!(metrics_lines, 1);
+    assert!(event_lines > 0);
+}
+
+#[test]
+fn the_trace_covers_the_round_story() {
+    let doc = trace_doc(42);
+    let names: Vec<String> = doc
+        .lines()
+        .filter_map(|l| {
+            Json::parse(l)
+                .ok()?
+                .get("name")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+        })
+        .collect();
+    for needle in [
+        "round", "broadcast", "train", "upload", // timeline-replay spans
+        "downlink", "dispatch", "ingest", "observe", "bit_plan", // live points
+    ] {
+        assert!(
+            names.iter().any(|n| n == needle),
+            "no `{needle}` event in the trace; saw {names:?}"
+        );
+    }
+    // The metrics snapshot carries the verdict counters and the ledger.
+    let last = doc.lines().last().expect("metrics line");
+    let m = Json::parse(last).expect("metrics json");
+    for counter in ["ingest_accepted", "uplink_bytes", "downlink_bytes", "rounds"] {
+        assert!(
+            m.path(&["metrics", "counters", counter])
+                .and_then(Json::as_u64)
+                .is_some_and(|v| v > 0),
+            "counter {counter} missing or zero in {last}"
+        );
+    }
+}
+
+#[test]
+fn ring_overflow_drops_oldest_without_reallocation() {
+    let cap = 64usize;
+    let mut t = Tracer::new(TimeSource::frozen(7), cap);
+    for i in 0..(cap * 3) {
+        t.point("tick", vec![("i", Json::from(i))]);
+    }
+    assert_eq!(t.len(), cap);
+    assert_eq!(t.allocated_capacity(), cap, "the ring must never reallocate");
+    assert_eq!(t.dropped(), (cap * 2) as u64);
+    // Oldest-first ordering survived the wrap: the survivors are the tail.
+    let first = t.events().next().expect("events");
+    assert_eq!(
+        first.fields[0].1,
+        Json::from(cap * 2),
+        "oldest surviving event is the first undropped one"
+    );
+}
+
+#[test]
+fn explorer_renders_all_panels_from_a_real_run() {
+    let doc = trace_doc(42);
+    let report = cossgd::obs::explore::report(&doc).expect("explorer parses its own output");
+    for needle in [
+        "trace:",
+        "critical path:",
+        "flame",
+        "ingest verdicts:",
+        "allocator decisions:",
+        "counters:",
+    ] {
+        assert!(report.contains(needle), "missing `{needle}` in:\n{report}");
+    }
+}
+
+#[test]
+fn disabled_tracer_records_nothing() {
+    let mut t = Tracer::disabled();
+    let s = t.open("round");
+    t.point("ingest", vec![("client", Json::from(1usize))]);
+    t.close(s);
+    assert!(t.is_empty());
+    assert_eq!(t.dropped(), 0);
+    assert_eq!(t.allocated_capacity(), 0, "disabled tracer allocates no ring");
+}

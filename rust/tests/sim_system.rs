@@ -175,6 +175,8 @@ fn bandwidth_bound_fleet_reaches_target_sooner_with_round_trip_quantization() {
                 downlink_bytes: 0,
                 clients: r.reporters,
                 stale_updates: 0,
+                dup_updates: 0,
+                malformed_updates: 0,
                 bits: Vec::new(),
             });
         }
