@@ -1,0 +1,143 @@
+//! Sharded ingest-plane throughput: how fast prepared CSG2 frames fold
+//! into the server accumulator at 1/4/16 shards, for both frame shapes
+//! (whole-tensor single-segment "legacy" frames and segmented
+//! mixed-width streams) and both flush cadences (batched = one flush
+//! per sync round, streamed = one flush per arrival, the buffered-async
+//! worst case). `elems_per_iter` counts accumulator elements folded, so
+//! ns/elem in the trajectory is directly comparable across shapes;
+//! frames/sec headlines are printed per case.
+//!
+//! The merge contract is asserted inline before timing: every shard
+//! count must produce a bit-identical accumulator — the parallel plane
+//! is an optimization, never a different answer.
+//!
+//! Every run **appends** to `BENCH_ingest.json` (same `cossgd-bench/v1`
+//! schema as `BENCH_compress.json` / `BENCH_sim.json`) so the committed
+//! trajectory accumulates a point per CI run instead of sitting empty.
+//! `--quick` caps sampling for CI smoke runs.
+
+use cossgd::compress::{Direction, EncodeScratch, LayerMap, Pipeline, PipelineState};
+use cossgd::fl::{IngestPlane, PreparedFrame, PreparedSegment};
+use cossgd::util::bench::{quick_requested, write_trajectory, Bencher};
+use cossgd::util::propcheck::gradient_like;
+use cossgd::util::rng::Pcg64;
+
+/// Accumulator extent per frame (64k params — big enough that the fold
+/// dominates thread-spawn overhead, small enough for quick CI runs).
+const N: usize = 1 << 16;
+/// Layers in the segmented shape (widths cycle 1..=8 across them).
+const LAYERS: usize = 32;
+/// Frames per batched flush (one sync round's worth of arrivals).
+const FRAMES: usize = 16;
+
+/// Encode one synthetic update as a prepared frame. `segmented` encodes
+/// per-layer mixed-width segments; otherwise one whole-tensor segment.
+/// Deflate stays off: inflation happens once on the coordinator at
+/// prepare time, and this bench times the fold, not the inflate.
+fn prepared_frame(map: &LayerMap, segmented: bool, salt: u64) -> PreparedFrame {
+    let mut rng = Pcg64::new(salt, 0xF01D);
+    let g = gradient_like(&mut rng, map.param_count());
+    let mut scratch = EncodeScratch::new();
+    let mut segments = Vec::new();
+    if segmented {
+        for l in 0..map.len() {
+            let seg = map.segment(l);
+            let bits = 1 + ((salt as usize + l) % 8) as u8;
+            let pipe = Pipeline::cosine(bits).without_deflate();
+            let enc = pipe.encode(
+                &g[seg.clone()],
+                Direction::Uplink,
+                &mut PipelineState::new(),
+                &mut rng,
+            );
+            segments.push(
+                PreparedSegment::prepare(enc, seg.start, &mut scratch).expect("prepare segment"),
+            );
+        }
+    } else {
+        let pipe = Pipeline::cosine(4).without_deflate();
+        let enc = pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+        segments.push(PreparedSegment::prepare(enc, 0, &mut scratch).expect("prepare frame"));
+    }
+    PreparedFrame::new(1.0 / FRAMES as f64, segments)
+}
+
+/// Fold `frames` through a fresh plane at `shards` and return the bits.
+fn fold_bits(map: &LayerMap, frames: &[PreparedFrame], shards: usize) -> Vec<u64> {
+    let mut plane = IngestPlane::new(shards, map).with_capacity(FRAMES);
+    let mut acc = vec![0.0f64; map.param_count()];
+    for f in frames {
+        plane.submit(f.clone());
+    }
+    plane.flush(&mut acc).expect("flush");
+    acc.iter().map(|v| v.to_bits()).collect()
+}
+
+fn main() {
+    let mut b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    };
+    let map = LayerMap::even(N, LAYERS);
+
+    for (shape, segmented) in [("segmented", true), ("single-frame", false)] {
+        let frames: Vec<PreparedFrame> = (0..FRAMES)
+            .map(|f| prepared_frame(&map, segmented, f as u64))
+            .collect();
+
+        // The determinism contract, asserted before any timing: every
+        // shard count folds to the bit-identical accumulator.
+        let serial = fold_bits(&map, &frames, 1);
+        for shards in [4usize, 16] {
+            assert_eq!(
+                fold_bits(&map, &frames, shards),
+                serial,
+                "{shape}: {shards}-shard fold diverged from serial"
+            );
+        }
+
+        for shards in [1usize, 4, 16] {
+            let mut plane = IngestPlane::new(shards, &map).with_capacity(FRAMES);
+            let mut acc = vec![0.0f64; N];
+
+            // Batched cadence: a sync round's arrivals, one flush.
+            let case = format!("ingest {shape} shards={shards} batched");
+            b.bench_elems(&case, (FRAMES * N) as u64, || {
+                for f in &frames {
+                    plane.submit(f.clone());
+                }
+                plane.flush(&mut acc).expect("flush");
+                acc[0]
+            });
+            report_frames_per_sec(&b, FRAMES as f64);
+
+            // Streamed cadence: buffered-async worst case, one flush per
+            // arrival — granularity never changes bits, only throughput.
+            let case = format!("ingest {shape} shards={shards} streamed");
+            b.bench_elems(&case, (FRAMES * N) as u64, || {
+                for f in &frames {
+                    plane.submit(f.clone());
+                    plane.flush(&mut acc).expect("flush");
+                }
+                acc[0]
+            });
+            report_frames_per_sec(&b, FRAMES as f64);
+        }
+    }
+
+    println!("{} cases done", b.results().len());
+    let path = std::path::Path::new("BENCH_ingest.json");
+    write_trajectory(path, "ingest", b.results()).expect("write trajectory");
+    println!("run appended to {path:?} (elems = accumulator elements folded per iteration)");
+}
+
+/// Print the last case's throughput as frames/sec (the headline the
+/// acceptance gate reads: ≥2x at 4 shards vs serial on segmented
+/// mixed-width frames).
+fn report_frames_per_sec(b: &Bencher, frames_per_iter: f64) {
+    if let Some(r) = b.results().last() {
+        let secs = r.mean.as_secs_f64().max(1e-12);
+        println!("    └ {:>10.0} frames/sec", frames_per_iter / secs);
+    }
+}

@@ -99,6 +99,63 @@ pub fn unpack_into(bytes: &[u8], bits: u8, n: usize, out: &mut Vec<u16>) {
     }
 }
 
+/// Unpack codes `start..start + count` of an LSB-first stream without
+/// touching the preceding codes: seek to the byte containing bit
+/// `start·bits`, discard the sub-byte remainder once, then run the same
+/// word-refill loop as [`unpack_into`]. An LSB-first stream is a pure
+/// function of bit position, so the output is **bit-identical** to
+/// `unpack_into(..)` followed by slicing `[start..start + count]` — the
+/// contract the sharded ingest plane's per-shard sub-range folds rely on
+/// (pinned in `tests/kernel_equivalence.rs`).
+pub fn unpack_range_into(bytes: &[u8], bits: u8, start: usize, count: usize, out: &mut Vec<u16>) {
+    assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+    out.clear();
+    if count == 0 {
+        return;
+    }
+    let bits = bits as u32;
+    let needed = ((start + count) * bits as usize).div_ceil(8);
+    assert!(
+        bytes.len() >= needed,
+        "unpack_range: need {needed} bytes for codes ..{} of {bits} bits, got {}",
+        start + count,
+        bytes.len()
+    );
+    out.reserve(count);
+    let mask: u64 = (1u64 << bits) - 1;
+    let first_bit = start * bits as usize;
+    let mut pos = first_bit / 8;
+    // Bits of the first loaded byte that belong to code `start - 1`;
+    // shifted out exactly once, right after the first refill.
+    let mut discard = (first_bit % 8) as u32;
+    let mut acc: u128 = 0;
+    let mut nbits: u32 = 0;
+    for _ in 0..count {
+        if nbits < bits {
+            while nbits < bits + discard {
+                if pos + 8 <= bytes.len() {
+                    let w = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+                    acc |= (w as u128) << nbits;
+                    pos += 8;
+                    nbits += 64;
+                } else {
+                    acc |= (bytes[pos] as u128) << nbits;
+                    pos += 1;
+                    nbits += 8;
+                }
+            }
+            if discard > 0 {
+                acc >>= discard;
+                nbits -= discard;
+                discard = 0;
+            }
+        }
+        out.push((acc as u64 & mask) as u16);
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
 /// Number of payload bytes for `n` codes at `bits` bits each.
 pub fn packed_len(n: usize, bits: u8) -> usize {
     (n * bits as usize).div_ceil(8)
@@ -162,5 +219,47 @@ mod tests {
     #[should_panic(expected = "bits must be in 1..=16")]
     fn rejects_zero_bits() {
         pack(&[0], 0);
+    }
+
+    #[test]
+    fn range_unpack_matches_full_unpack_slices() {
+        let mut rng = Pcg64::seeded(23);
+        let mut ranged = Vec::new();
+        for bits in 1..=16u8 {
+            let n = 64 + rng.below_usize(500);
+            let codes: Vec<u16> =
+                (0..n).map(|_| rng.below(1u64 << bits) as u16).collect();
+            let packed = pack(&codes, bits);
+            let full = unpack(&packed, bits, n);
+            // Aligned, unaligned, head, tail, singleton and empty ranges.
+            let starts = [0usize, 1, 7, 8, n / 3, n - 1, n];
+            for &start in &starts {
+                for count in [0usize, 1, 5, n - start] {
+                    if start + count > n {
+                        continue;
+                    }
+                    unpack_range_into(&packed, bits, start, count, &mut ranged);
+                    assert_eq!(
+                        ranged,
+                        &full[start..start + count],
+                        "bits={bits} n={n} start={start} count={count}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn range_unpack_whole_range_is_unpack() {
+        let mut rng = Pcg64::seeded(24);
+        for bits in [1u8, 3, 5, 8, 11, 16] {
+            let n = 1 + rng.below_usize(300);
+            let codes: Vec<u16> =
+                (0..n).map(|_| rng.below(1u64 << bits) as u16).collect();
+            let packed = pack(&codes, bits);
+            let mut out = Vec::new();
+            unpack_range_into(&packed, bits, 0, n, &mut out);
+            assert_eq!(out, codes, "bits={bits} n={n}");
+        }
     }
 }

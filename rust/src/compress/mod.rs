@@ -94,7 +94,7 @@ pub mod wire;
 pub use allocator::{BitController, BitPlan, BitSchedule, LayerMap, SegmentObs};
 pub use kernel::KernelScratch;
 pub use pipeline::{
-    accumulate_with, decode, decode_with, Direction, EncodeScratch, EncodedTensor, Pipeline,
-    PipelineState,
+    accumulate_range_with, accumulate_with, decode, decode_with, Direction, EncodeScratch,
+    EncodedTensor, Pipeline, PipelineState,
 };
 pub use quantizer::{Quantized, Quantizer};

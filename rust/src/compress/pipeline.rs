@@ -34,6 +34,7 @@ use super::hadamard;
 use super::kernel::KernelScratch;
 use super::linear::{LinearQuantizer, ValueBound};
 use super::quantizer::{self, EfSign, Float32Passthrough, Quantizer, SignSgd, SignSgdNorm};
+use super::signsgd;
 use super::sparsify;
 
 /// Which way a tensor travels. Tags every wire frame so cost ledgers and
@@ -514,6 +515,80 @@ pub fn accumulate_with(
         enc.bits
     );
     bitpack::unpack_into(raw, enc.bits, n, &mut scratch.codes);
+    let q = quantizer::from_wire(enc.kind_id, enc.bits)?;
+    q.accumulate_into(&scratch.codes, enc.norm, enc.bound, &mut scratch.kernel, w, acc);
+    Ok(())
+}
+
+/// Sub-range fused accumulate: fold elements `start..start + acc.len()`
+/// of a dense, unrotated, **already-inflated** frame into `acc` — the
+/// worker-side kernel of the sharded ingest plane
+/// ([`crate::fl::ingest`]), where each shard owns a contiguous slice of
+/// the server accumulator and folds only its intersection with every
+/// frame/segment.
+///
+/// Bit-exactness contract (vs [`accumulate_with`] over the full frame):
+/// * the packed codes are a pure LSB-first function of bit position, so
+///   [`bitpack::unpack_range_into`] yields exactly
+///   `unpack_into(..)[start..]`;
+/// * every per-element reconstruction is position-independent given the
+///   wire-header scalars. The one length-dependent scheme — signSGD+Norm,
+///   whose magnitude is `norm/√n` — is computed here from the header's
+///   full `n`, not the sub-range length. The cosine/linear LUT-vs-direct
+///   branch may differ between a sub-range and the full tensor, but each
+///   LUT entry *is* the direct formula evaluated once, so the folded
+///   values are identical either way.
+///
+/// Pinned against the serial path in `tests/kernel_equivalence.rs`.
+pub fn accumulate_range_with(
+    enc: &EncodedTensor,
+    start: usize,
+    w: f64,
+    acc: &mut [f64],
+    scratch: &mut EncodeScratch,
+) -> Result<()> {
+    let n = enc.n as usize;
+    let len = acc.len();
+    ensure!(!enc.deflated, "range accumulate needs an inflated payload");
+    ensure!(
+        !enc.rotated && enc.kept as usize == n,
+        "range accumulate needs a dense unrotated frame"
+    );
+    ensure!(
+        start + len <= n,
+        "range {start}..{} exceeds frame length {n}",
+        start + len
+    );
+    let raw: &[u8] = &enc.payload;
+    if enc.kind_id == quantizer::ids::FLOAT32 {
+        ensure!(enc.bits == 32, "float32 frame with bits {}", enc.bits);
+        ensure!(
+            raw.len() == n * 4,
+            "float32 payload size {} != {}",
+            raw.len(),
+            n * 4
+        );
+        let sub = &raw[start * 4..(start + len) * 4];
+        for (a, b) in acc.iter_mut().zip(sub.chunks_exact(4)) {
+            *a += f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64 * w;
+        }
+        return Ok(());
+    }
+    ensure!(
+        raw.len() >= bitpack::packed_len(n, enc.bits),
+        "payload too short: {} bytes for {n} codes of {} bits",
+        raw.len(),
+        enc.bits
+    );
+    bitpack::unpack_range_into(raw, enc.bits, start, len, &mut scratch.codes);
+    if enc.kind_id == quantizer::ids::SIGN_NORM {
+        // ±‖g‖₂/√n: the magnitude depends on the FULL tensor length, so
+        // it must not be recomputed from the sub-range code count (which
+        // is what `SignSgdNorm::accumulate_into` would do).
+        let mag = enc.norm / (n.max(1) as f32).sqrt();
+        signsgd::accumulate_signs(&scratch.codes, mag, w, acc);
+        return Ok(());
+    }
     let q = quantizer::from_wire(enc.kind_id, enc.bits)?;
     q.accumulate_into(&scratch.codes, enc.norm, enc.bound, &mut scratch.kernel, w, acc);
     Ok(())

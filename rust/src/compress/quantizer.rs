@@ -112,6 +112,15 @@ pub trait Quantizer: std::fmt::Debug + Send + Sync {
     /// followed by the `f32 → f64` mul-add fold. The default decodes then
     /// folds (one allocation); in-tree schemes override with true fused
     /// paths over the shared LUTs.
+    ///
+    /// Sub-slice caveat: callers may pass a *contiguous sub-range* of a
+    /// tensor's codes (the sharded ingest plane does), which is exact for
+    /// every scheme whose per-element value depends only on wire-header
+    /// scalars. signSGD+Norm is the exception — its magnitude is
+    /// `norm/√codes.len()`, so sub-range folds must compute the magnitude
+    /// from the full tensor length and call
+    /// [`super::signsgd::accumulate_signs`] directly (see
+    /// [`super::pipeline::accumulate_range_with`]).
     fn accumulate_into(
         &self,
         codes: &[u16],

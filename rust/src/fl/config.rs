@@ -91,6 +91,13 @@ pub struct FlConfig {
     /// lane, EF residual and scratch, and updates are aggregated in
     /// selection order regardless of completion order.
     pub client_threads: usize,
+    /// Ingest-plane shards for the server's fused dequantize+accumulate
+    /// fold (`--ingest-shards N`). `1` (default) folds inline on the
+    /// coordinator; `0` means one per available core. Results are
+    /// bit-identical at any value — workers own disjoint contiguous
+    /// accumulator slices and fold in arrival order
+    /// ([`crate::fl::ingest`]).
+    pub ingest_shards: usize,
     /// Optional systems simulator ([`crate::sim`]): replay every round on
     /// a virtual clock over a heterogeneous device fleet. `None` keeps the
     /// pure byte-accounting harness.
@@ -141,6 +148,7 @@ impl FlConfig {
             eval_every: 5,
             use_kernel_quantizer: false,
             client_threads: 1,
+            ingest_shards: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
             trace: None,
@@ -170,6 +178,7 @@ impl FlConfig {
             eval_every: 20,
             use_kernel_quantizer: false,
             client_threads: 1,
+            ingest_shards: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
             trace: None,
@@ -210,6 +219,7 @@ impl FlConfig {
             eval_every: 5,
             use_kernel_quantizer: false,
             client_threads: 1,
+            ingest_shards: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
             trace: None,
@@ -271,6 +281,14 @@ impl FlConfig {
         self
     }
 
+    /// Shard the server's ingest fold across `shards` workers
+    /// (`--ingest-shards`: `0` = one per available core, `1` = inline
+    /// serial fold). Bit-identical results at any value.
+    pub fn with_ingest_shards(mut self, shards: usize) -> Self {
+        self.ingest_shards = shards;
+        self
+    }
+
     /// Select the aggregation policy (`--round-mode sync|async:K[:S]`):
     /// synchronous FedAvg rounds, or FedBuff-style buffered-async windows.
     pub fn with_round_mode(mut self, mode: RoundMode) -> Self {
@@ -303,6 +321,16 @@ impl FlConfig {
         }
     }
 
+    /// Resolve [`Self::ingest_shards`] (`0` → available parallelism,
+    /// capped at the per-shard metrics table —
+    /// [`crate::fl::ingest::auto_shards`]).
+    pub fn effective_ingest_shards(&self) -> usize {
+        match self.ingest_shards {
+            0 => super::ingest::auto_shards(),
+            s => s,
+        }
+    }
+
     /// Clients selected per round.
     pub fn clients_per_round(&self) -> usize {
         ((self.n_clients as f64 * self.participation).round() as usize)
@@ -324,6 +352,7 @@ impl FlConfig {
             .set("downlink", self.downlink.name())
             .set("seed", self.seed)
             .set("threads", self.client_threads)
+            .set("ingest_shards", self.ingest_shards)
             .set("round_mode", self.round_mode.name())
             .set("round_artifact", self.round_artifact.as_str())
             .set(
@@ -423,6 +452,22 @@ mod tests {
             cfg.describe().get("round_mode").unwrap().as_str(),
             Some("async:5 (≤3 stale)")
         );
+    }
+
+    #[test]
+    fn ingest_shards_builder_and_describe() {
+        let cfg = FlConfig::mnist(false);
+        assert_eq!(cfg.ingest_shards, 1, "serial fold by default");
+        assert_eq!(cfg.effective_ingest_shards(), 1);
+        let cfg = cfg.with_ingest_shards(4);
+        assert_eq!(cfg.effective_ingest_shards(), 4);
+        assert_eq!(
+            cfg.describe().get("ingest_shards").unwrap().as_usize(),
+            Some(4)
+        );
+        // 0 = auto: always at least one worker.
+        let auto = FlConfig::mnist(false).with_ingest_shards(0);
+        assert!(auto.effective_ingest_shards() >= 1);
     }
 
     #[test]

@@ -1,0 +1,833 @@
+//! Sharded parallel ingest plane: N-way fused dequantize+accumulate with
+//! a deterministic tree-reduce merge.
+//!
+//! [`crate::fl::server::Server::ingest`] is a single-threaded state
+//! machine, so at the fleet sizes the simulator models the server CPU —
+//! not the network — becomes the bottleneck quantization cannot fix. This
+//! module parallelizes the *fold* (the fused dequantize+accumulate over
+//! packed codes) while keeping every piece of verdict bookkeeping on the
+//! coordinator, so `Ingest` verdicts, `round_verdicts()` and
+//! `round_observations()` are byte-for-byte what the serial server
+//! produced.
+//!
+//! ```text
+//!   coordinator (Server::ingest_prepare)          workers (flush)
+//!   ───────────────────────────────────          ─────────────────────
+//!   envelope checks ─ dup/stale/malformed   ┌──► shard 0  acc[b0..b1]
+//!   payload parse + inflate + validation    │    shard 1  acc[b1..b2]
+//!   verdict tallies, round observations     │      …
+//!        │                                  │    shard S  acc[bS..n]
+//!        ▼                                  │      │ fused sub-range
+//!   PreparedFrame ──► bounded pending ──────┘      │ accumulate_range_with
+//!   (weight + segs)   queue (SPMC: every           ▼
+//!                     worker reads the run,   ShardStats ──┐ pairwise
+//!                     folds only its slice)   ShardStats ──┤ tree-reduce
+//!                                             ShardStats ──┘ → FlushStats
+//! ```
+//!
+//! ## Routing
+//!
+//! Shard bounds come from the model's [`LayerMap`]: layer extents are
+//! contiguous, so each worker owns one contiguous accumulator slice and
+//! segmented mixed-width frames route each segment to (usually) a single
+//! owner with zero locking. Single-layer / legacy whole-tensor frames
+//! fall back to an even element split — ownership is purely positional,
+//! so the cut points never affect results, only load balance.
+//!
+//! ## Determinism contract
+//!
+//! Bit-identical to the serial server at **any** shard count and **any**
+//! flush granularity:
+//!
+//! * workers own *disjoint, contiguous* accumulator slices — no element
+//!   is ever written by two shards, so the "merge" of the folded values
+//!   is plain concatenation, deterministic by construction;
+//! * every worker walks the *whole* pending run in arrival order, so each
+//!   accumulator element receives its `+= v·w` contributions in exactly
+//!   the order the serial loop applied them — f64 addition order is
+//!   preserved, not just the operand set;
+//! * the per-element values are position-pure:
+//!   [`crate::compress::bitpack::unpack_range_into`] reproduces
+//!   `unpack_into(..)[start..]` exactly, and
+//!   [`accumulate_range_with`] pins the one length-dependent scheme
+//!   (signSGD+Norm) to the header's full `n`;
+//! * the only cross-shard reduction — [`ShardStats`] — is integer-only
+//!   and merged by a fixed-shape pairwise tree.
+//!
+//! The contract is pinned by `tests/ingest_shards.rs` (shards {1, 4, 16}
+//! over shuffled frame orders, dup/stale/malformed interleavings and
+//! mixed widths) and `tests/kernel_equivalence.rs` (sub-range kernels).
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::compress::allocator::LayerMap;
+use crate::compress::pipeline::{
+    accumulate_range_with, decode_with, EncodeScratch, EncodedTensor,
+};
+use crate::compress::{bitpack, deflate, quantizer};
+use crate::obs::Metrics;
+
+use super::server::Server;
+
+/// One validated, normalized wire segment, ready for lock-free sub-range
+/// folding: inflated (never DEFLATE-compressed), and — when the fused
+/// kernel cannot walk it positionally (rotated or sparsified frames) —
+/// staged to a dense value vector on the coordinator.
+#[derive(Debug, Clone)]
+pub struct PreparedSegment {
+    /// First accumulator index this segment covers.
+    offset: usize,
+    /// The inflated wire frame: headers drive the fold, payload feeds the
+    /// fused sub-range kernel.
+    enc: EncodedTensor,
+    /// Dense decoded values for rotated/sparsified segments (positional
+    /// sub-range folding needs coordinate order; the Hadamard rotation
+    /// and mask scatter do not preserve it).
+    staged: Option<Vec<f32>>,
+}
+
+impl PreparedSegment {
+    /// Validate and normalize one wire segment covering
+    /// `offset..offset + enc.n` of the accumulator. Everything that could
+    /// fail at fold time fails *here*, on the coordinator — inflate
+    /// errors, bad kind ids, short payloads — so the all-or-nothing
+    /// ingest contract holds and shard workers are infallible in
+    /// practice.
+    pub fn prepare(
+        mut enc: EncodedTensor,
+        offset: usize,
+        scratch: &mut EncodeScratch,
+    ) -> Result<PreparedSegment> {
+        let n = enc.n as usize;
+        if enc.rotated || enc.kept as usize != n {
+            // Stage-decode: full validation (inflate, mask regeneration,
+            // payload shape) happens inside decode_with.
+            let staged = decode_with(&enc, scratch)?;
+            ensure!(
+                staged.len() == n,
+                "staged decode produced {} of {n} values",
+                staged.len()
+            );
+            return Ok(PreparedSegment { offset, enc, staged: Some(staged) });
+        }
+        if enc.deflated {
+            enc.payload = deflate::inflate(&enc.payload)?;
+            enc.deflated = false;
+        }
+        if enc.kind_id == quantizer::ids::FLOAT32 {
+            ensure!(enc.bits == 32, "float32 frame with bits {}", enc.bits);
+            ensure!(
+                enc.payload.len() == n * 4,
+                "float32 payload size {} != {}",
+                enc.payload.len(),
+                n * 4
+            );
+        } else {
+            // Rejects unknown kind ids and out-of-range widths up front.
+            quantizer::from_wire(enc.kind_id, enc.bits)?;
+            ensure!(
+                enc.payload.len() >= bitpack::packed_len(n, enc.bits),
+                "payload too short: {} bytes for {n} codes of {} bits",
+                enc.payload.len(),
+                enc.bits
+            );
+        }
+        Ok(PreparedSegment { offset, enc, staged: None })
+    }
+
+    /// The wire header (post-inflate; `n`/`bits`/`norm`/`bound` are
+    /// untouched by normalization) — what the round-observation
+    /// accumulator reads.
+    pub fn header(&self) -> &EncodedTensor {
+        &self.enc
+    }
+
+    /// Accumulator extent covered by this segment.
+    pub fn extent(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.enc.n as usize
+    }
+}
+
+/// One accepted frame, validated and committed on the coordinator,
+/// awaiting its (deferred) fold into the accumulator.
+#[derive(Debug, Clone)]
+pub struct PreparedFrame {
+    /// Aggregation weight `N_i / (1 + staleness)` — fixed at accept time,
+    /// so a deferred fold cannot drift from the verdict-time staleness.
+    weight: f64,
+    /// Segments in coverage order; offsets tile `0..n` exactly.
+    segments: Vec<PreparedSegment>,
+}
+
+impl PreparedFrame {
+    pub fn new(weight: f64, segments: Vec<PreparedSegment>) -> PreparedFrame {
+        PreparedFrame { weight, segments }
+    }
+
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    pub fn segments(&self) -> &[PreparedSegment] {
+        &self.segments
+    }
+}
+
+/// Integer per-shard fold tallies — the only cross-shard reduction, and
+/// therefore the only thing the tree-reduce has to keep deterministic
+/// (integer addition is associative, so the fixed pairwise shape is
+/// belt-and-braces; the accumulator itself needs no merge at all).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Segment⋂shard intersections folded.
+    pub segments: u64,
+    /// Accumulator elements written.
+    pub elems: u64,
+}
+
+impl ShardStats {
+    fn merge(self, other: ShardStats) -> ShardStats {
+        ShardStats {
+            segments: self.segments + other.segments,
+            elems: self.elems + other.elems,
+        }
+    }
+}
+
+/// Fixed-shape pairwise tree-reduce over per-shard stats: level k merges
+/// neighbors 2i and 2i+1 of level k−1, identical for every run at a given
+/// shard count.
+fn tree_reduce(stats: &[ShardStats]) -> ShardStats {
+    let mut layer: Vec<ShardStats> = Vec::with_capacity(stats.len());
+    layer.extend_from_slice(stats);
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        for pair in layer.chunks(2) {
+            next.push(pair.iter().copied().fold(ShardStats::default(), ShardStats::merge));
+        }
+        layer = next;
+    }
+    layer.first().copied().unwrap_or_default()
+}
+
+/// What one [`IngestPlane::flush`] did — tree-reduced totals plus the
+/// per-shard element counts the busy gauges surface.
+#[derive(Debug, Clone, Default)]
+pub struct FlushStats {
+    /// Frames drained from the pending queue.
+    pub frames: u64,
+    /// Segment⋂shard intersections folded (tree-reduced).
+    pub segments: u64,
+    /// Accumulator elements written (tree-reduced).
+    pub elems: u64,
+    /// Elements folded per shard, in shard order — the load-balance /
+    /// busy signal.
+    pub per_shard: Vec<u64>,
+}
+
+/// Per-shard busy gauges need `&'static str` names (the metrics registry
+/// never allocates keys); shards beyond the table aggregate into
+/// [`SHARD_ELEMS_REST`].
+const SHARD_ELEMS: [&str; 16] = [
+    "ingest_shard00_elems",
+    "ingest_shard01_elems",
+    "ingest_shard02_elems",
+    "ingest_shard03_elems",
+    "ingest_shard04_elems",
+    "ingest_shard05_elems",
+    "ingest_shard06_elems",
+    "ingest_shard07_elems",
+    "ingest_shard08_elems",
+    "ingest_shard09_elems",
+    "ingest_shard10_elems",
+    "ingest_shard11_elems",
+    "ingest_shard12_elems",
+    "ingest_shard13_elems",
+    "ingest_shard14_elems",
+    "ingest_shard15_elems",
+];
+const SHARD_ELEMS_REST: &str = "ingest_shard_rest_elems";
+
+impl FlushStats {
+    /// Record this flush into the metrics registry: cumulative fold
+    /// counters plus the per-shard busy gauge family.
+    pub fn record(&self, metrics: &mut Metrics) {
+        metrics.inc("ingest_flushes", 1);
+        metrics.inc("ingest_frames_folded", self.frames);
+        metrics.inc("ingest_segments_folded", self.segments);
+        metrics.inc("ingest_elems_folded", self.elems);
+        let mut rest = 0u64;
+        for (i, &e) in self.per_shard.iter().enumerate() {
+            match SHARD_ELEMS.get(i) {
+                Some(name) => metrics.set_gauge(name, e as f64),
+                None => rest += e,
+            }
+        }
+        if self.per_shard.len() > SHARD_ELEMS.len() {
+            metrics.set_gauge(SHARD_ELEMS_REST, rest as f64);
+        }
+    }
+}
+
+/// Compute the shard cut points over `0..map.param_count()`.
+///
+/// Multi-layer maps snap each even cut to the nearest layer boundary
+/// (layer extents are contiguous, so most segments then route to exactly
+/// one owner); single-layer maps split evenly by element. Cuts that
+/// collapse onto a neighbor are dropped, so the effective shard count may
+/// be lower than requested — never higher. Bounds are strictly
+/// increasing, start at 0 and end at `param_count()`.
+pub fn shard_bounds(map: &LayerMap, shards: usize) -> Vec<usize> {
+    let n = map.param_count();
+    let shards = shards.max(1).min(n.max(1));
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0usize);
+    if map.len() > 1 {
+        let ends: Vec<usize> = (0..map.len()).map(|l| map.segment(l).end).collect();
+        for i in 1..shards {
+            let target = i * n / shards;
+            let nearest = ends
+                .iter()
+                .copied()
+                .filter(|&e| e > 0 && e < n)
+                .min_by_key(|&e| e.abs_diff(target))
+                .unwrap_or(target);
+            if nearest > bounds.last().copied().unwrap_or(0) {
+                bounds.push(nearest);
+            }
+        }
+    } else {
+        for i in 1..shards {
+            let cut = i * n / shards;
+            if cut > bounds.last().copied().unwrap_or(0) {
+                bounds.push(cut);
+            }
+        }
+    }
+    if bounds.last().copied().unwrap_or(0) < n || bounds.len() == 1 {
+        bounds.push(n);
+    }
+    bounds
+}
+
+/// Fold every pending frame's intersection with `lo..hi` into `out`
+/// (`out.len() == hi - lo`), in arrival order — the per-worker kernel.
+/// Infallible for frames that went through [`PreparedSegment::prepare`];
+/// stays fallible anyway so a logic error surfaces as an `Err`, not a
+/// poisoned accumulator.
+fn fold_shard(
+    pending: &[PreparedFrame],
+    lo: usize,
+    hi: usize,
+    out: &mut [f64],
+    scratch: &mut EncodeScratch,
+) -> Result<ShardStats> {
+    ensure!(out.len() == hi - lo, "shard slice {} != extent {}", out.len(), hi - lo);
+    let mut stats = ShardStats::default();
+    for frame in pending {
+        for seg in &frame.segments {
+            let s_lo = seg.offset;
+            let s_hi = s_lo + seg.enc.n as usize;
+            let a = s_lo.max(lo);
+            let b = s_hi.min(hi);
+            if a >= b {
+                continue;
+            }
+            let dst = &mut out[a - lo..b - lo];
+            match &seg.staged {
+                Some(values) => {
+                    for (o, &d) in dst.iter_mut().zip(&values[a - s_lo..b - s_lo]) {
+                        *o += d as f64 * frame.weight;
+                    }
+                }
+                None => {
+                    accumulate_range_with(&seg.enc, a - s_lo, frame.weight, dst, scratch)?;
+                }
+            }
+            stats.segments += 1;
+            stats.elems += (b - a) as u64;
+        }
+    }
+    Ok(stats)
+}
+
+/// Fold one prepared frame over the whole accumulator — the serial
+/// (shards = 1) ingest path, routed through the *same* kernel the shard
+/// workers run so serial and sharded ingest cannot drift apart.
+pub(crate) fn fold_frame(
+    frame: &PreparedFrame,
+    acc: &mut [f64],
+    scratch: &mut EncodeScratch,
+) -> Result<()> {
+    fold_shard(std::slice::from_ref(frame), 0, acc.len(), acc, scratch)?;
+    Ok(())
+}
+
+/// The sharded ingest plane: a bounded pending queue of
+/// [`PreparedFrame`]s plus per-shard scratch, flushed through scoped
+/// worker threads into disjoint accumulator slices.
+///
+/// The queue is SPMC in the broadcast sense: the coordinator is the
+/// single producer; at flush time every worker reads the *entire* queued
+/// run (ownership decides what it folds), which is exactly what the
+/// arrival-order determinism contract requires.
+pub struct IngestPlane {
+    /// Strictly increasing cut points; `bounds[i]..bounds[i+1]` is shard
+    /// i's slice. See [`shard_bounds`].
+    bounds: Vec<usize>,
+    /// Accepted frames awaiting their fold, in arrival order.
+    pending: Vec<PreparedFrame>,
+    /// One scratch arena per worker — steady-state flushes run
+    /// allocation-free.
+    scratch: Vec<EncodeScratch>,
+    /// Queue bound: [`IngestPlane::full`] past this many pending frames.
+    capacity: usize,
+}
+
+impl IngestPlane {
+    /// Default pending-queue bound: deep enough to amortize the scoped
+    /// thread spawn per flush, shallow enough to keep staged frames from
+    /// accumulating.
+    pub const DEFAULT_CAPACITY: usize = 64;
+
+    /// A plane with `shards` workers (clamped to ≥ 1; the effective count
+    /// may be lower if cut points collapse — see [`shard_bounds`]) over
+    /// the accumulator extent described by `map`.
+    pub fn new(shards: usize, map: &LayerMap) -> IngestPlane {
+        let bounds = shard_bounds(map, shards);
+        let shards = bounds.len() - 1;
+        IngestPlane {
+            bounds,
+            pending: Vec::new(),
+            scratch: (0..shards).map(|_| EncodeScratch::new()).collect(),
+            capacity: Self::DEFAULT_CAPACITY,
+        }
+    }
+
+    /// Override the pending-queue bound (minimum 1).
+    pub fn with_capacity(mut self, frames: usize) -> IngestPlane {
+        self.capacity = frames.max(1);
+        self
+    }
+
+    /// Effective worker count.
+    pub fn shards(&self) -> usize {
+        self.bounds.len().saturating_sub(1).max(1)
+    }
+
+    /// The shard cut points (for logs / tests).
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Frames queued and not yet flushed.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Has the bounded queue filled? Callers flush when this turns true
+    /// (and always before reading round results).
+    pub fn full(&self) -> bool {
+        self.pending.len() >= self.capacity
+    }
+
+    /// Enqueue one accepted frame (single producer: the coordinator).
+    pub fn submit(&mut self, frame: PreparedFrame) {
+        self.pending.push(frame);
+    }
+
+    /// Drain the queue: fold every pending frame into `acc` across the
+    /// shard workers and tree-reduce their stats. `acc.len()` must equal
+    /// the plane extent. Serial (1-shard) planes fold inline — no thread
+    /// is ever spawned, so `--ingest-shards 1` *is* the serial server.
+    pub fn flush(&mut self, acc: &mut [f64]) -> Result<FlushStats> {
+        let n = self.bounds.last().copied().unwrap_or(0);
+        ensure!(
+            acc.len() == n,
+            "accumulator length {} != plane extent {n}",
+            acc.len()
+        );
+        let frames = self.pending.len() as u64;
+        let shards = self.shards();
+        if frames == 0 {
+            return Ok(FlushStats {
+                frames: 0,
+                segments: 0,
+                elems: 0,
+                per_shard: std::iter::repeat(0).take(shards).collect(),
+            });
+        }
+        let stats: Vec<ShardStats> = if shards == 1 {
+            let first = self
+                .scratch
+                .first_mut()
+                .ok_or_else(|| anyhow!("ingest plane has no scratch arena"))?;
+            let mut one = Vec::with_capacity(1);
+            one.push(fold_shard(&self.pending, 0, n, acc, first)?);
+            one
+        } else {
+            let bounds = &self.bounds;
+            let pending = &self.pending;
+            let mut parts: Vec<(usize, &mut [f64], &mut EncodeScratch)> =
+                Vec::with_capacity(shards);
+            let mut rest = acc;
+            let mut scratches = &mut self.scratch[..];
+            for i in 0..shards {
+                let len = bounds[i + 1] - bounds[i];
+                let (head, tail) = rest.split_at_mut(len);
+                let (scr, scr_tail) = scratches
+                    .split_first_mut()
+                    .ok_or_else(|| anyhow!("scratch arenas out of step with shard count"))?;
+                parts.push((i, head, scr));
+                rest = tail;
+                scratches = scr_tail;
+            }
+            let results: Vec<Result<ShardStats>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = parts
+                    .into_iter()
+                    .map(|(i, slice, scratch)| {
+                        let lo = bounds[i];
+                        let hi = bounds[i + 1];
+                        scope.spawn(move || fold_shard(pending, lo, hi, slice, scratch))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join()
+                            .unwrap_or_else(|_| Err(anyhow!("ingest shard worker panicked")))
+                    })
+                    .collect()
+            });
+            let mut stats = Vec::with_capacity(results.len());
+            for r in results {
+                stats.push(r?);
+            }
+            stats
+        };
+        self.pending.clear();
+        let per_shard: Vec<u64> = stats.iter().map(|s| s.elems).collect();
+        let total = tree_reduce(&stats);
+        Ok(FlushStats {
+            frames,
+            segments: total.segments,
+            elems: total.elems,
+            per_shard,
+        })
+    }
+
+    /// [`IngestPlane::flush`] straight into a server's open-round
+    /// accumulator.
+    pub fn flush_into(&mut self, server: &mut Server) -> Result<FlushStats> {
+        self.flush(server.accumulator_mut())
+    }
+}
+
+/// Resolve `--ingest-shards 0` (auto): the machine's available
+/// parallelism, capped at the per-shard gauge table. Affects load balance
+/// and wall-clock only — never results (the determinism contract above).
+pub fn auto_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(SHARD_ELEMS.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pipeline::{accumulate_with, Direction, Pipeline, PipelineState};
+    use crate::compress::wire;
+    use crate::util::propcheck::gradient_like;
+    use crate::util::rng::Pcg64;
+
+    fn enc_of(pipe: &Pipeline, g: &[f32], seed: u64) -> EncodedTensor {
+        pipe.encode(
+            g,
+            Direction::Uplink,
+            &mut PipelineState::new(),
+            &mut Pcg64::seeded(seed),
+        )
+    }
+
+    #[test]
+    fn shard_bounds_even_split_on_single_layer() {
+        let map = LayerMap::whole(100);
+        assert_eq!(shard_bounds(&map, 1), vec![0, 100]);
+        assert_eq!(shard_bounds(&map, 4), vec![0, 25, 50, 75, 100]);
+        // More shards than elements: clamped.
+        let tiny = LayerMap::whole(2);
+        assert_eq!(shard_bounds(&tiny, 16), vec![0, 1, 2]);
+        // Empty model.
+        assert_eq!(shard_bounds(&LayerMap::whole(0), 4), vec![0, 0]);
+    }
+
+    #[test]
+    fn shard_bounds_snap_to_layer_extents() {
+        // Layers of 10/70/20: the 2-shard cut (target 50) snaps to the
+        // nearest layer end (80).
+        let map = LayerMap::from_extents(&[(0, 10), (1, 70), (2, 20)]).unwrap();
+        assert_eq!(shard_bounds(&map, 2), vec![0, 80, 100]);
+        // 4 shards, targets 25/50/75 → all snap to 10 or 80; duplicates
+        // collapse, so the effective count drops to 3.
+        assert_eq!(shard_bounds(&map, 4), vec![0, 10, 80, 100]);
+    }
+
+    #[test]
+    fn bounds_are_strictly_increasing_and_cover() {
+        let mut rng = Pcg64::seeded(7);
+        for _ in 0..50 {
+            let layers = 1 + rng.below_usize(6);
+            let extents: Vec<(usize, usize)> = (0..layers)
+                .map(|l| (l, 1 + rng.below_usize(300)))
+                .collect();
+            let map = LayerMap::from_extents(&extents).unwrap();
+            for shards in [1usize, 2, 3, 4, 16, 64] {
+                let b = shard_bounds(&map, shards);
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), map.param_count());
+                assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+                assert!(b.len() - 1 <= shards.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_totals() {
+        let stats: Vec<ShardStats> = (0..5)
+            .map(|i| ShardStats { segments: i, elems: 10 * i })
+            .collect();
+        let t = tree_reduce(&stats);
+        assert_eq!(t.segments, 10);
+        assert_eq!(t.elems, 100);
+        assert_eq!(tree_reduce(&[]), ShardStats::default());
+    }
+
+    #[test]
+    fn prepare_normalizes_deflate_and_stages_rotation() {
+        let mut rng = Pcg64::seeded(11);
+        let g = gradient_like(&mut rng, 600);
+        let mut scratch = EncodeScratch::new();
+
+        let dense = enc_of(&Pipeline::cosine(3), &g, 1);
+        let p = PreparedSegment::prepare(dense, 0, &mut scratch).unwrap();
+        assert!(!p.header().deflated, "deflate is undone at prepare");
+        assert!(p.staged.is_none(), "dense frames stay packed");
+
+        let rotated = enc_of(&Pipeline::cosine(4).with_rotation(), &g, 2);
+        let p = PreparedSegment::prepare(rotated, 0, &mut scratch).unwrap();
+        assert_eq!(p.staged.as_ref().unwrap().len(), 600);
+
+        let sparse = enc_of(&Pipeline::cosine(4).with_sparsify(0.25), &g, 3);
+        let p = PreparedSegment::prepare(sparse, 0, &mut scratch).unwrap();
+        assert_eq!(p.staged.as_ref().unwrap().len(), 600);
+    }
+
+    #[test]
+    fn prepare_rejects_what_the_fold_would_choke_on() {
+        let mut rng = Pcg64::seeded(12);
+        let g = gradient_like(&mut rng, 64);
+        let mut scratch = EncodeScratch::new();
+        // Truncated payload.
+        let mut enc = enc_of(&Pipeline::cosine(8).without_deflate(), &g, 1);
+        enc.payload.truncate(4);
+        assert!(PreparedSegment::prepare(enc, 0, &mut scratch).is_err());
+        // Unknown kind id.
+        let mut enc = enc_of(&Pipeline::cosine(8).without_deflate(), &g, 2);
+        enc.kind_id = 99;
+        assert!(PreparedSegment::prepare(enc, 0, &mut scratch).is_err());
+        // Corrupt DEFLATE body.
+        let mut enc = enc_of(&Pipeline::cosine(8), &g, 3);
+        if enc.deflated {
+            enc.payload.clear();
+            assert!(PreparedSegment::prepare(enc, 0, &mut scratch).is_err());
+        }
+    }
+
+    fn prepared(pipe: &Pipeline, g: &[f32], seed: u64, weight: f64) -> PreparedFrame {
+        let enc = enc_of(pipe, g, seed);
+        let mut scratch = EncodeScratch::new();
+        let seg = PreparedSegment::prepare(enc, 0, &mut scratch).unwrap();
+        PreparedFrame::new(weight, vec![seg])
+    }
+
+    #[test]
+    fn sharded_flush_is_bit_identical_to_serial_fold() {
+        let mut rng = Pcg64::seeded(13);
+        let n = 777;
+        let pipes = [
+            Pipeline::cosine(4),
+            Pipeline::cosine(1),
+            Pipeline::float32(),
+            Pipeline::sign_norm(),
+            Pipeline::cosine(8).with_rotation(),
+            Pipeline::cosine(4).with_sparsify(0.5),
+        ];
+        let frames: Vec<PreparedFrame> = pipes
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let g = gradient_like(&mut rng, n);
+                prepared(p, &g, 40 + i as u64, 1.0 + i as f64)
+            })
+            .collect();
+
+        // Serial reference: the fused whole-frame fold.
+        let mut reference = vec![0.0f64; n];
+        let mut scratch = EncodeScratch::new();
+        for f in &frames {
+            for s in &f.segments {
+                match &s.staged {
+                    Some(v) => {
+                        for (a, &d) in reference.iter_mut().zip(v) {
+                            *a += d as f64 * f.weight;
+                        }
+                    }
+                    None => {
+                        accumulate_with(&s.enc, f.weight, &mut reference, &mut scratch).unwrap();
+                    }
+                }
+            }
+        }
+
+        for shards in [1usize, 2, 4, 16] {
+            let mut plane = IngestPlane::new(shards, &LayerMap::whole(n));
+            for f in &frames {
+                plane.submit(f.clone());
+            }
+            let mut acc = vec![0.0f64; n];
+            let stats = plane.flush(&mut acc).unwrap();
+            assert_eq!(stats.frames, frames.len() as u64);
+            assert_eq!(stats.elems, (n * frames.len()) as u64);
+            let ref_bits: Vec<u64> = reference.iter().map(|v| v.to_bits()).collect();
+            let acc_bits: Vec<u64> = acc.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(acc_bits, ref_bits, "shards={shards}");
+            assert!(plane.is_empty(), "flush drains the queue");
+        }
+    }
+
+    #[test]
+    fn flush_granularity_does_not_change_bits() {
+        // One flush per frame vs one flush for all frames: identical —
+        // the fold order per element is arrival order either way.
+        let mut rng = Pcg64::seeded(14);
+        let n = 320;
+        let frames: Vec<PreparedFrame> = (0..6)
+            .map(|i| {
+                let g = gradient_like(&mut rng, n);
+                prepared(&Pipeline::cosine(5), &g, 70 + i, 2.0)
+            })
+            .collect();
+        let map = LayerMap::even(n, 4);
+        let mut batched = IngestPlane::new(4, &map);
+        let mut stepped = IngestPlane::new(4, &map);
+        let mut acc_a = vec![0.0f64; n];
+        let mut acc_b = vec![0.0f64; n];
+        for f in &frames {
+            batched.submit(f.clone());
+            stepped.submit(f.clone());
+            stepped.flush(&mut acc_b).unwrap();
+        }
+        batched.flush(&mut acc_a).unwrap();
+        let a: Vec<u64> = acc_a.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> = acc_b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn segmented_frames_route_to_owning_shards() {
+        // A 3-layer model, segment per layer, shard per layer: every
+        // segment has exactly one owner, and stats see one intersection
+        // per segment.
+        let mut rng = Pcg64::seeded(15);
+        let sizes = [100usize, 200, 60];
+        let map = LayerMap::from_extents(&[(0, 100), (1, 200), (2, 60)]).unwrap();
+        let n: usize = sizes.iter().sum();
+        let g = gradient_like(&mut rng, n);
+        let mut scratch = EncodeScratch::new();
+        let mut segs = Vec::new();
+        let mut off = 0usize;
+        for (l, &sz) in sizes.iter().enumerate() {
+            let pipe = Pipeline::cosine(4).with_bits(2 + l as u8);
+            let enc = enc_of(&pipe, &g[off..off + sz], 80 + l as u64);
+            segs.push(PreparedSegment::prepare(enc, off, &mut scratch).unwrap());
+            off += sz;
+        }
+        let frame = PreparedFrame::new(3.0, segs);
+        let mut plane = IngestPlane::new(3, &map);
+        assert_eq!(plane.bounds(), &[0, 100, 300, 360]);
+        plane.submit(frame.clone());
+        let mut acc = vec![0.0f64; n];
+        let stats = plane.flush(&mut acc).unwrap();
+        assert_eq!(stats.segments, 3, "one owner per segment");
+        assert_eq!(stats.per_shard, vec![100, 200, 60]);
+
+        // And the fold equals the serial whole-frame fold.
+        let mut reference = vec![0.0f64; n];
+        fold_frame(&frame, &mut reference, &mut scratch).unwrap();
+        let a: Vec<u64> = acc.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> = reference.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn flush_stats_record_metrics() {
+        let stats = FlushStats {
+            frames: 3,
+            segments: 7,
+            elems: 1000,
+            per_shard: vec![600, 400],
+        };
+        let mut m = Metrics::new();
+        stats.record(&mut m);
+        stats.record(&mut m);
+        assert_eq!(m.counter("ingest_flushes"), 2);
+        assert_eq!(m.counter("ingest_frames_folded"), 6);
+        assert_eq!(m.counter("ingest_elems_folded"), 2000);
+        assert_eq!(m.gauge("ingest_shard00_elems"), Some(600.0));
+        assert_eq!(m.gauge("ingest_shard01_elems"), Some(400.0));
+        assert_eq!(m.gauge("ingest_shard_rest_elems"), None);
+    }
+
+    #[test]
+    fn queue_bound_and_capacity() {
+        let mut plane = IngestPlane::new(1, &LayerMap::whole(8)).with_capacity(2);
+        assert!(!plane.full());
+        let g = [1.0f32; 8];
+        plane.submit(prepared(&Pipeline::float32(), &g, 1, 1.0));
+        assert!(!plane.full());
+        plane.submit(prepared(&Pipeline::float32(), &g, 2, 1.0));
+        assert!(plane.full());
+        assert_eq!(plane.pending(), 2);
+        let mut acc = vec![0.0f64; 8];
+        plane.flush(&mut acc).unwrap();
+        assert!(!plane.full());
+        assert_eq!(acc, vec![2.0f64; 8]);
+    }
+
+    #[test]
+    fn wire_roundtrip_prepares_cleanly() {
+        // A frame that went through serialize/deserialize prepares the
+        // same as the in-memory EncodedTensor.
+        let mut rng = Pcg64::seeded(16);
+        let g = gradient_like(&mut rng, 256);
+        let enc = enc_of(&Pipeline::cosine(6), &g, 5);
+        let bytes = wire::serialize(&enc);
+        let back = wire::deserialize(&bytes).unwrap();
+        let mut scratch = EncodeScratch::new();
+        let a = PreparedSegment::prepare(enc, 0, &mut scratch).unwrap();
+        let b = PreparedSegment::prepare(back, 0, &mut scratch).unwrap();
+        assert_eq!(a.enc, b.enc);
+    }
+
+    #[test]
+    fn auto_shards_is_positive_and_bounded() {
+        let s = auto_shards();
+        assert!(s >= 1);
+        assert!(s <= SHARD_ELEMS.len());
+    }
+}

@@ -11,19 +11,22 @@
 //! ```text
 //!                        ┌──────────────────────────────┐
 //!   runner (event loop)  │ server (state machine)       │
-//!   ───────────────────  │  ingest(Frame) → Accepted /  │
-//!   select → train →     │    Duplicate / StaleRound /  │
-//!   frames ──┐           │    Malformed                 │
-//!            ▼           │  fused dequantize+accumulate │
+//!   ───────────────────  │  ingest_prepare(Frame) →     │
+//!   select → train →     │    Accepted / Duplicate /    │
+//!   frames ──┐           │    StaleRound / Malformed    │
+//!            ▼           │    + PreparedFrame           │
 //!   ┌─────────────────┐  │  finish_round() → M^{t+1}    │
-//!   │ Transport       │  └──────────────▲───────────────┘
-//!   │  Loopback       │    delivered    │
-//!   │  SimTransport ──┼──► frames ──────┘
-//!   │  (FleetSim:     │
-//!   │   virtual clock,│   byte metering (NetworkLedger) and the
-//!   │   lottery,      │   straggler policy live HERE — metered
-//!   │   stragglers)   │   bytes are the ground truth
-//!   └─────────────────┘
+//!   │ Transport       │  └───────┬──────────▲───────────┘
+//!   │  Loopback       │          │ accepted │ flush_into
+//!   │  SimTransport ──┼──► ┌─────▼──────────┴───────────┐
+//!   │  (FleetSim:     │    │ ingest (sharded plane)     │
+//!   │   virtual clock,│    │  N workers, disjoint acc   │
+//!   │   lottery,      │    │  slices, fused sub-range   │
+//!   │   stragglers)   │    │  dequantize+accumulate —   │
+//!   └─────────────────┘    │  bit-identical ∀ shards    │
+//!   byte metering          └────────────────────────────┘
+//!   (NetworkLedger) and the straggler policy live in the
+//!   carrier — metered bytes are the ground truth
 //! ```
 //!
 //! Per round the server broadcasts the model (raw float32, or a quantized
@@ -65,6 +68,7 @@
 pub mod centralized;
 pub mod client;
 pub mod config;
+pub mod ingest;
 pub mod metrics;
 pub mod network;
 pub mod runner;
@@ -74,6 +78,7 @@ pub mod transport;
 
 pub use client::ModelReplica;
 pub use config::{FlConfig, Task};
+pub use ingest::{FlushStats, IngestPlane, PreparedFrame, PreparedSegment};
 pub use metrics::{History, RoundRecord};
 pub use network::NetworkLedger;
 pub use runner::{run, run_labeled, RunResult};

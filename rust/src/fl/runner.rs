@@ -68,10 +68,11 @@ use crate::util::timer::Stopwatch; // analyze: allow(determinism): wall-secs rep
 
 use super::client::{Client, ModelReplica};
 use super::config::{FlConfig, Task};
+use super::ingest::IngestPlane;
 use super::metrics::{History, RoundRecord};
 use super::network::NetworkLedger;
 use super::server::{Ingest, RoundMode, Server};
-use super::transport::dryrun::{note_finish, note_ingest, note_plan};
+use super::transport::dryrun::{flush_plane, note_finish, note_ingest, note_plan};
 use super::transport::{Frame, Loopback, SimTransport, Transport};
 
 /// The outcome of one federated run.
@@ -192,6 +193,19 @@ fn run_task<T: SynthTask>(
         }
         None => None,
     };
+    // Sharded ingest plane: accepted frames queue here and fold into the
+    // server's accumulator across N workers sharded by layer extent —
+    // bit-identical to serial ingest at any shard count (the worker
+    // kernel IS the serial kernel, run over disjoint slices in arrival
+    // order). Non-contiguous manifests degrade to one whole-tensor
+    // extent; routing still splits it evenly by element.
+    let ingest_extents: Vec<(usize, usize)> =
+        model.layers.iter().map(|l| (l.offset, l.size)).collect();
+    let ingest_map = LayerMap::from_extents(&ingest_extents)
+        .ok()
+        .filter(|m| m.param_count() == model.param_count)
+        .unwrap_or_else(|| LayerMap::whole(model.param_count));
+    let mut ingest_plane = IngestPlane::new(cfg.effective_ingest_shards(), &ingest_map);
     // Every client trains the same artifact schedule per round.
     let examples_per_round = (round_cfg.steps() * round_cfg.batch) as u64;
     let per_round = cfg.clients_per_round();
@@ -213,6 +227,7 @@ fn run_task<T: SynthTask>(
             transport.as_mut(),
             &mut history,
             &mut controller,
+            &mut ingest_plane,
             examples_per_round,
             per_round,
             label,
@@ -235,6 +250,7 @@ fn run_task<T: SynthTask>(
             transport.as_mut(),
             &mut history,
             &mut controller,
+            &mut ingest_plane,
             examples_per_round,
             per_round,
             label,
@@ -285,6 +301,7 @@ fn run_sync_rounds<T: SynthTask>(
     transport: &mut dyn Transport,
     history: &mut History,
     controller: &mut Option<BitController>,
+    plane: &mut IngestPlane,
     examples_per_round: u64,
     per_round: usize,
     label: &str,
@@ -389,10 +406,21 @@ fn run_sync_rounds<T: SynthTask>(
             tracer.set_now(at);
         }
         for frame in &delivered {
-            let verdict = server.ingest(frame);
+            // Validate/commit on the coordinator; defer the fold to the
+            // sharded plane (flushed below, before the round closes).
+            let (verdict, prepared) = server.ingest_prepare(frame);
             note_ingest(tracer, metrics, frame, &verdict);
             match verdict {
-                Ingest::Accepted { .. } => loss_sum += loss_of[&frame.client_id] as f64,
+                Ingest::Accepted { .. } => {
+                    loss_sum += loss_of[&frame.client_id] as f64;
+                    if let Some(p) = prepared {
+                        if plane.full() {
+                            flush_plane(plane, server, tracer, metrics)?;
+                        }
+                        plane.submit(p);
+                        metrics.set_gauge("ingest_queue_depth", plane.pending() as f64);
+                    }
+                }
                 verdict => bail!(
                     "round {}: server refused a delivered frame from client {} ({verdict:?})",
                     t + 1,
@@ -400,6 +428,7 @@ fn run_sync_rounds<T: SynthTask>(
                 ),
             }
         }
+        flush_plane(plane, server, tracer, metrics)?;
         let train_loss = loss_sum / n_kept.max(1) as f64;
         // Close the feedback loop BEFORE the round closes (observations
         // reset with it): the accepted segments' wire headers, the mean
@@ -503,6 +532,7 @@ fn run_async_windows<T: SynthTask>(
     transport: &mut dyn Transport,
     history: &mut History,
     controller: &mut Option<BitController>,
+    plane: &mut IngestPlane,
     examples_per_round: u64,
     per_round: usize,
     label: &str,
@@ -619,16 +649,27 @@ fn run_async_windows<T: SynthTask>(
             continue;
         };
         busy[frame.client_id] = false;
+        // In-flight gauge moves at BOTH edges: here (drain) and at
+        // dispatch (enqueue, inside `dispatch_one`) — sampling only at
+        // window close under-reported the depth between aggregations.
+        metrics.set_gauge("queue_depth", busy.iter().filter(|&&b| b).count() as f64);
         if let Some(at) = transport.clock_ticks() {
             tracer.set_now(at);
         }
-        let verdict = server.ingest(&frame);
+        let (verdict, prepared) = server.ingest_prepare(&frame);
         note_ingest(tracer, metrics, &frame, &verdict);
         match verdict {
             Ingest::Accepted { .. } => {
                 window_accepted += 1;
                 window_loss += loss_of[frame.client_id] as f64;
                 window_residual += residual_of[frame.client_id];
+                if let Some(p) = prepared {
+                    if plane.full() {
+                        flush_plane(plane, server, tracer, metrics)?;
+                    }
+                    plane.submit(p);
+                    metrics.set_gauge("ingest_queue_depth", plane.pending() as f64);
+                }
             }
             // Delivered (and metered — it crossed the wire) but discarded:
             // expired staleness, or a surplus second contribution from a
@@ -641,6 +682,9 @@ fn run_async_windows<T: SynthTask>(
         }
 
         if server.ready_to_apply() {
+            // Fold everything still queued before the window closes —
+            // `finish_round` consumes the accumulator.
+            flush_plane(plane, server, tracer, metrics)?;
             let window_train_loss = window_loss / window_accepted.max(1) as f64;
             // Feed the controller before the round closes (observations
             // reset with it).
@@ -847,6 +891,7 @@ fn dispatch_one<T: SynthTask>(
                     examples,
                 );
                 busy[candidate] = true;
+                metrics.set_gauge("queue_depth", busy.iter().filter(|&&b| b).count() as f64);
                 return Ok(true);
             }
             Admission::Offline | Admission::Dropout => {

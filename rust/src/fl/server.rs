@@ -21,6 +21,14 @@
 //! registered up front via [`Server::with_clients`] — FedAvg deployments
 //! know shard sizes at selection time, so the weight never rides the wire.
 //!
+//! Ingest is split validate → route → accumulate:
+//! [`Server::ingest_prepare`] runs every check and commits the verdict
+//! bookkeeping, returning an accepted frame as a validated
+//! [`PreparedFrame`]; the fold is either immediate ([`Server::ingest`])
+//! or deferred onto the sharded parallel plane of [`crate::fl::ingest`]
+//! — both run the same sub-range kernel, so shard count never changes
+//! results.
+//!
 //! ## Round modes
 //!
 //! * [`RoundMode::Synchronous`] — classic FedAvg: the round's frames carry
@@ -59,6 +67,7 @@ use crate::compress::pipeline::{
 use crate::compress::wire;
 use crate::util::rng::Pcg64;
 
+use super::ingest::{self, PreparedFrame, PreparedSegment};
 use super::transport::Frame;
 
 /// When does the server fold its buffered updates into the model?
@@ -300,31 +309,60 @@ impl Server {
     /// packed codes. Non-`Accepted` verdicts leave the accumulator (and
     /// every other piece of server state) untouched.
     ///
+    /// This is [`Server::ingest_prepare`] plus an immediate fold through
+    /// the *same* sub-range kernel the sharded ingest plane runs
+    /// ([`crate::fl::ingest`]) — so serial ingest and `--ingest-shards N`
+    /// cannot drift apart: they are one code path at different cut
+    /// counts.
+    pub fn ingest(&mut self, frame: &Frame) -> Ingest {
+        let (verdict, prepared) = self.ingest_prepare(frame);
+        if let Some(p) = prepared {
+            // Prepared frames are pre-validated, so the fold is
+            // infallible in practice; stay fallible anyway — ingest must
+            // never panic on any input.
+            let folded = ingest::fold_frame(&p, &mut self.acc, &mut self.scratch);
+            debug_assert!(folded.is_ok(), "prepared frame failed to fold: {folded:?}");
+        }
+        verdict
+    }
+
+    /// The validate → commit half of [`Server::ingest`], with the
+    /// accumulator fold *deferred*: every envelope and payload check
+    /// runs, the verdict tallies / duplicate stamp / weight sum /
+    /// round observations update exactly as serial ingest would — but
+    /// instead of touching the accumulator, an accepted frame comes back
+    /// as a [`PreparedFrame`] (validated, inflated, weight fixed at
+    /// accept time) for the caller to queue on an
+    /// [`crate::fl::ingest::IngestPlane`]. Callers must flush the plane
+    /// before reading round results.
+    ///
     /// Verdict precedence: the O(1) *envelope* checks run first —
     /// unregistered sender, round window, duplicate — so a frame the
     /// server would discard anyway never pays payload deserialization
     /// (the ingest hot path on straggler fleets is mostly rejections).
-    /// Payload validation (wire header, direction, tensor length) runs
-    /// only for frames that would otherwise be accepted.
-    pub fn ingest(&mut self, frame: &Frame) -> Ingest {
-        let verdict = self.classify_and_fold(frame);
+    /// Payload validation (wire header, direction, tensor length,
+    /// inflate) runs only for frames that would otherwise be accepted,
+    /// and is all-or-nothing: a malformed tail segment has no side
+    /// effects.
+    pub fn ingest_prepare(&mut self, frame: &Frame) -> (Ingest, Option<PreparedFrame>) {
+        let (verdict, prepared) = self.classify_and_prepare(frame);
         match verdict {
             Ingest::Accepted { .. } => {}
             Ingest::Duplicate => self.dup_this_round += 1,
             Ingest::StaleRound => self.stale_this_round += 1,
             Ingest::Malformed => self.malformed_this_round += 1,
         }
-        verdict
+        (verdict, prepared)
     }
 
-    fn classify_and_fold(&mut self, frame: &Frame) -> Ingest {
+    fn classify_and_prepare(&mut self, frame: &Frame) -> (Ingest, Option<PreparedFrame>) {
         let Some(&n_i) = self.client_weights.get(frame.client_id) else {
-            return Ingest::Malformed;
+            return (Ingest::Malformed, None);
         };
         let staleness = match self.mode {
             RoundMode::Synchronous => {
                 if frame.round != self.round {
-                    return Ingest::StaleRound;
+                    return (Ingest::StaleRound, None);
                 }
                 0
             }
@@ -332,11 +370,11 @@ impl Server {
                 if frame.round > self.round {
                     // A version the server never broadcast: outside the
                     // acceptance window just like an expired one.
-                    return Ingest::StaleRound;
+                    return (Ingest::StaleRound, None);
                 }
                 let s = self.round - frame.round;
                 if s > max_staleness {
-                    return Ingest::StaleRound;
+                    return (Ingest::StaleRound, None);
                 }
                 s
             }
@@ -346,45 +384,53 @@ impl Server {
         // anyway — ingest must never panic on any input.
         let stamp = self.stamp();
         match self.contributed.get(frame.client_id) {
-            Some(&c) if c == stamp => return Ingest::Duplicate,
+            Some(&c) if c == stamp => return (Ingest::Duplicate, None),
             Some(_) => {}
-            None => return Ingest::Malformed,
+            None => return (Ingest::Malformed, None),
         }
         let weight = n_i as f64 / (1 + staleness) as f64;
         let Ok((first, used)) = wire::deserialize_prefix(&frame.payload) else {
-            return Ingest::Malformed;
+            return (Ingest::Malformed, None);
         };
-        if used == frame.payload.len() {
-            // Single whole-tensor frame — the legacy hot path: fused
-            // dequantize+accumulate, one pass over the packed codes.
+        let segments: Vec<PreparedSegment> = if used == frame.payload.len() {
+            // Single whole-tensor frame — the legacy hot path.
             if first.direction != Direction::Uplink || first.n as usize != self.params.len() {
-                return Ingest::Malformed;
+                return (Ingest::Malformed, None);
             }
-            if accumulate_with(&first, weight, &mut self.acc, &mut self.scratch).is_err() {
-                return Ingest::Malformed;
+            match PreparedSegment::prepare(first, 0, &mut self.scratch) {
+                Ok(seg) => vec![seg],
+                Err(_) => return (Ingest::Malformed, None),
             }
-            self.note_segments(std::slice::from_ref(&first));
-        } else if self.ingest_segments(&frame.payload, weight).is_err() {
-            return Ingest::Malformed;
-        }
+        } else {
+            // Multi-segment payload (one CSG2 frame per layer, mixed bit
+            // widths — the adaptive schedule's wire shape).
+            match self.prepare_segments(&frame.payload) {
+                Ok(segs) => segs,
+                Err(_) => return (Ingest::Malformed, None),
+            }
+        };
+        // Commit: every check has passed; nothing below can fail.
+        self.note_segments(&segments);
         if let Some(slot) = self.contributed.get_mut(frame.client_id) {
             *slot = stamp;
         }
         self.weight_sum += weight;
         self.updates_this_round += 1;
-        Ingest::Accepted { staleness }
+        (
+            Ingest::Accepted { staleness },
+            Some(PreparedFrame::new(weight, segments)),
+        )
     }
 
-    /// Fold a multi-segment payload (one CSG2 frame per layer, mixed bit
-    /// widths — the adaptive schedule's wire shape) into the open
-    /// aggregate. Decode is keyed entirely off each segment's header —
-    /// never off configuration. All-or-nothing: every segment is decoded
-    /// (and thereby fully validated) *before* the accumulator is touched,
-    /// so a malformed tail segment has no side effects. The fold is the
-    /// same `f32 → f64` mul-add as the fused single-frame path, which is
-    /// pinned bit-identical to decode-then-add — so the two payload
-    /// shapes aggregate identically at equal widths.
-    fn ingest_segments(&mut self, payload: &[u8], weight: f64) -> Result<()> {
+    /// Validate and prepare a multi-segment payload. Decode is keyed
+    /// entirely off each segment's header — never off configuration.
+    /// All-or-nothing: every segment is fully validated (inflate, kind
+    /// id, payload length — [`PreparedSegment::prepare`]) *before* any
+    /// state changes, so a malformed tail segment has no side effects.
+    /// Each dense segment then folds via the fused sub-range kernel —
+    /// the same zero-`Vec<f32>` path single frames take, pinned
+    /// bit-identical to decode-then-add in `tests/kernel_equivalence.rs`.
+    fn prepare_segments(&mut self, payload: &[u8]) -> Result<Vec<PreparedSegment>> {
         let segs = wire::deserialize_stream(payload)?;
         let total: usize = segs.iter().map(|s| s.n as usize).sum();
         anyhow::ensure!(
@@ -396,54 +442,59 @@ impl Server {
             segs.iter().all(|s| s.direction == Direction::Uplink),
             "non-uplink segment in an uplink stream"
         );
-        let mut decoded = Vec::with_capacity(segs.len());
-        for s in &segs {
-            decoded.push(decode_with(s, &mut self.scratch)?);
-        }
-        // `total == params.len() == acc.len()` was just checked, so the
-        // skip/zip walk covers exactly acc — and cannot panic even if it
-        // did not.
+        let mut prepared = Vec::with_capacity(segs.len());
         let mut off = 0usize;
-        for v in &decoded {
-            for (a, &d) in self.acc.iter_mut().skip(off).zip(v) {
-                *a += d as f64 * weight;
-            }
-            off += v.len();
+        for seg in segs {
+            let n = seg.n as usize;
+            prepared.push(PreparedSegment::prepare(seg, off, &mut self.scratch)?);
+            off += n;
         }
-        self.note_segments(&segs);
-        Ok(())
+        Ok(prepared)
     }
 
     /// Record one accepted frame's segment headers into the round's
     /// observation accumulator. A frame whose segment structure differs
     /// from what accumulated so far (an adaptive plan change inside a
     /// buffered-async window) restarts the accumulation — the controller
-    /// always sees the freshest structure.
-    fn note_segments(&mut self, segs: &[EncodedTensor]) {
+    /// always sees the freshest structure. Headers are read post-prepare,
+    /// but normalization never touches `n`/`bits`/`norm`/`bound`, so the
+    /// controller sees exactly the wire headers.
+    fn note_segments(&mut self, segs: &[PreparedSegment]) {
         let matches = self.obs_round.len() == segs.len()
             && self
                 .obs_round
                 .iter()
                 .zip(segs)
-                .all(|(o, s)| o.n == s.n as usize);
+                .all(|(o, p)| o.n == p.header().n as usize);
         if !matches {
             self.obs_round = segs
                 .iter()
-                .map(|s| ObsAcc {
-                    n: s.n as usize,
-                    bits: s.bits,
-                    norm_sq_sum: 0.0,
-                    bound: s.bound,
-                    count: 0,
+                .map(|p| {
+                    let s = p.header();
+                    ObsAcc {
+                        n: s.n as usize,
+                        bits: s.bits,
+                        norm_sq_sum: 0.0,
+                        bound: s.bound,
+                        count: 0,
+                    }
                 })
                 .collect();
         }
-        for (o, s) in self.obs_round.iter_mut().zip(segs) {
+        for (o, p) in self.obs_round.iter_mut().zip(segs) {
+            let s = p.header();
             o.bits = s.bits;
             o.bound = s.bound;
             o.norm_sq_sum += (s.norm as f64) * (s.norm as f64);
             o.count += 1;
         }
+    }
+
+    /// The open round's weighted-sum accumulator — the sharded ingest
+    /// plane's flush target
+    /// ([`crate::fl::ingest::IngestPlane::flush_into`]).
+    pub(crate) fn accumulator_mut(&mut self) -> &mut [f64] {
+        &mut self.acc
     }
 
     /// Refused-frame tallies of the open round, as

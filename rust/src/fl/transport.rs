@@ -378,6 +378,7 @@ pub mod dryrun {
     use crate::util::propcheck::gradient_like;
     use crate::util::rng::Pcg64;
 
+    use super::super::ingest::IngestPlane;
     use super::super::network::NetworkLedger;
     use super::super::server::{Ingest, RoundMode, Server};
     use super::{Frame, SimTransport, Transport};
@@ -449,6 +450,37 @@ pub mod dryrun {
                 ("floor", Json::from(1usize + c.pressure() as usize)),
             ],
         );
+    }
+
+    /// Drain the ingest plane into the server's accumulator and emit the
+    /// flush telemetry (span point, fold counters, per-shard element
+    /// gauges). No-op when nothing is pending. Flush granularity never
+    /// changes bits — every accumulator element still receives its
+    /// contributions in frame-arrival order — so callers flush whenever
+    /// the bounded queue fills and always before closing a round. Shared
+    /// by the production runner and the dry protocol drivers below.
+    pub(crate) fn flush_plane(
+        plane: &mut IngestPlane,
+        server: &mut Server,
+        tracer: &mut Tracer,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        if plane.is_empty() {
+            return Ok(());
+        }
+        let shards = plane.shards();
+        let stats = plane.flush_into(server)?;
+        tracer.point(
+            "ingest_flush",
+            vec![
+                ("frames", Json::from(stats.frames)),
+                ("shards", Json::from(shards)),
+                ("elems", Json::from(stats.elems)),
+            ],
+        );
+        stats.record(metrics);
+        metrics.set_gauge("ingest_queue_depth", 0.0);
+        Ok(())
     }
 
     /// Post-run: replay the timeline's critical-path records as spans
@@ -609,6 +641,7 @@ pub mod dryrun {
             k,
             rounds,
             seed,
+            1,
             &mut Tracer::disabled(),
             &mut Metrics::new(),
         )
@@ -619,6 +652,9 @@ pub mod dryrun {
     /// clock, verdict/byte metrics, and a post-run span replay of the
     /// timeline. With a deterministic tracer clock the emitted trace is
     /// byte-identical per seed (pinned by `tests/obs_trace.rs`).
+    ///
+    /// `shards` sizes the ingest plane (`--ingest-shards`; 1 = inline
+    /// fold) — bit-identical outcomes at any value.
     #[allow(clippy::too_many_arguments)]
     pub fn run_sync_bits_traced(
         pipe: &Pipeline,
@@ -629,6 +665,7 @@ pub mod dryrun {
         k: usize,
         rounds: usize,
         seed: u64,
+        shards: usize,
         tracer: &mut Tracer,
         metrics: &mut Metrics,
     ) -> Result<DryOutcome> {
@@ -638,6 +675,8 @@ pub mod dryrun {
         let mut controller = bits.map(|b| BitController::new(b.schedule, b.map.clone()));
         let mut transport = SimTransport::new(sim, n_clients, seed);
         let mut server = Server::new(vec![0.0; n], 1.0).with_clients(vec![100; n_clients]);
+        let whole_map = LayerMap::whole(n);
+        let mut plane = IngestPlane::new(shards, bits.map(|b| &b.map).unwrap_or(&whole_map));
         let mut selector = Pcg64::new(seed, 0x5E1EC7);
         let mut flight = 0u64;
         let mut round_mse = Vec::new();
@@ -686,15 +725,23 @@ pub mod dryrun {
             }
             let mut mse_sum = 0.0f64;
             for f in &delivered {
-                let verdict = server.ingest(f);
+                let (verdict, prepared) = server.ingest_prepare(f);
                 note_ingest(tracer, metrics, f, &verdict);
                 ensure!(
                     matches!(verdict, Ingest::Accepted { .. }),
                     "sync dry-run: ingest refused client {}",
                     f.client_id
                 );
+                if let Some(p) = prepared {
+                    if plane.full() {
+                        flush_plane(&mut plane, &mut server, tracer, metrics)?;
+                    }
+                    plane.submit(p);
+                    metrics.set_gauge("ingest_queue_depth", plane.pending() as f64);
+                }
                 mse_sum += mse_of[f.client_id];
             }
+            flush_plane(&mut plane, &mut server, tracer, metrics)?;
             if let Some(c) = controller.as_mut() {
                 let obs = server.round_observations();
                 tracer.point(
@@ -776,6 +823,7 @@ pub mod dryrun {
             windows,
             max_staleness,
             seed,
+            1,
             &mut Tracer::disabled(),
             &mut Metrics::new(),
         )
@@ -783,8 +831,12 @@ pub mod dryrun {
 
     /// [`run_async_bits`] with the observability plane in the loop:
     /// `dispatch`/`arrive`/`ingest` points on the virtual clock, a
-    /// `queue_depth` gauge at every window close, and the same post-run
-    /// span replay + ledger snapshot as the sync path.
+    /// `queue_depth` gauge moved at both edges (every dispatch and every
+    /// arrival, not just window close), and the same post-run span
+    /// replay + ledger snapshot as the sync path.
+    ///
+    /// `shards` sizes the ingest plane (`--ingest-shards`; 1 = inline
+    /// fold) — bit-identical outcomes at any value.
     #[allow(clippy::too_many_arguments)]
     pub fn run_async_bits_traced(
         pipe: &Pipeline,
@@ -797,6 +849,7 @@ pub mod dryrun {
         windows: usize,
         max_staleness: usize,
         seed: u64,
+        shards: usize,
         tracer: &mut Tracer,
         metrics: &mut Metrics,
     ) -> Result<DryOutcome> {
@@ -806,6 +859,8 @@ pub mod dryrun {
         }
         let mut controller = bits.map(|b| BitController::new(b.schedule, b.map.clone()));
         let mut transport = SimTransport::new(sim, n_clients, seed);
+        let whole_map = LayerMap::whole(n);
+        let mut plane = IngestPlane::new(shards, bits.map(|b| &b.map).unwrap_or(&whole_map));
         let mut server = Server::new(vec![0.0; n], 1.0)
             .with_clients(vec![100; n_clients])
             .with_round_mode(RoundMode::BufferedAsync {
@@ -873,6 +928,8 @@ pub mod dryrun {
                             300,
                         );
                         busy[candidate] = true;
+                        metrics
+                            .set_gauge("queue_depth", busy.iter().filter(|&&b| b).count() as f64);
                         return true;
                     }
                     Admission::Offline | Admission::Dropout => {
@@ -925,12 +982,23 @@ pub mod dryrun {
             }
             tracer.point("arrive", vec![("client", Json::from(frame.client_id))]);
             busy[frame.client_id] = false;
-            let verdict = server.ingest(&frame);
+            // Drain edge of the in-flight gauge (enqueue edge is in
+            // `dispatch_one`) — sampling only at window close
+            // under-reported the depth between aggregations.
+            metrics.set_gauge("queue_depth", busy.iter().filter(|&&b| b).count() as f64);
+            let (verdict, prepared) = server.ingest_prepare(&frame);
             note_ingest(tracer, metrics, &frame, &verdict);
             match verdict {
                 Ingest::Accepted { .. } => {
                     window_accepted += 1;
                     window_mse += mse_of[frame.client_id];
+                    if let Some(p) = prepared {
+                        if plane.full() {
+                            flush_plane(&mut plane, &mut server, tracer, metrics)?;
+                        }
+                        plane.submit(p);
+                        metrics.set_gauge("ingest_queue_depth", plane.pending() as f64);
+                    }
                 }
                 Ingest::StaleRound | Ingest::Duplicate => {
                     window_dropped += 1;
@@ -939,6 +1007,7 @@ pub mod dryrun {
                 Ingest::Malformed => bail!("async dry-run: malformed frame delivered"),
             }
             if server.ready_to_apply() {
+                flush_plane(&mut plane, &mut server, tracer, metrics)?;
                 if let Some(c) = controller.as_mut() {
                     let obs = server.round_observations();
                     tracer.point(

@@ -6,10 +6,12 @@
 //!             [--bits B|const:<b>|anneal:<hi>..<lo>|adaptive[:<bytes>]]
 //!             [--keep F] [--rounds N] [--kernel] [--seed S] [--threads N]
 //!             [--round-mode sync|async:K[:S]] [--trace FILE]
+//!             [--ingest-shards N]  # sharded server ingest (0 = auto)
 //!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
 //! repro sim   --task <t> [--rounds N] [--fleet heterogeneous|uniform|3g]
 //!             [--policy sync|overselect] [--over F] [--availability P]
 //!             [--dropout P] [--target M] [--round-mode async:K[:S]]
+//!             [--ingest-shards N]  # sharded server ingest (0 = auto)
 //!             [--bits <schedule>]  # adds const vs anneal vs adaptive rows
 //!             [--trace FILE]       # structured JSONL round telemetry
 //!             [--quick]   # sync vs buffered-async time-to-accuracy table
@@ -18,10 +20,10 @@
 //!                                   # breakdowns, ingest verdicts,
 //!                                   # bit-plan decision log, metrics
 //! repro compress-stats [--n N]      # pipeline table, no artifacts needed
-//! repro bench [--json] [--quick] [--n N] [--out FILE]
+//! repro bench [--quick] [--n N] [--out FILE]
 //!                                   # compress perf trajectory
 //!                                   # (ns/elem per stage × bit width;
-//!                                   #  --json APPENDS a run)
+//!                                   #  every run APPENDS a point)
 //! repro check                       # load + compile all artifacts
 //! repro analyze [--json] [--out FILE] [--root DIR] [--manifest FILE] [paths…]
 //!                                   # project-invariant static analysis
@@ -87,7 +89,10 @@ fn cmd_list() -> Result<()> {
     );
     println!("rounds: --round-mode sync|async:K[:S]  (K = buffer size, S = max staleness)");
     println!("observability: --trace FILE writes JSONL round telemetry; `repro trace FILE` explores it");
-    println!("perf: --threads N (0 = all cores), bench [--json] [--quick] [--n N] [--out FILE]");
+    println!(
+        "perf: --threads N (0 = all cores), --ingest-shards N (sharded server ingest, 0 = auto, \
+         bit-identical at any value), bench [--quick] [--n N] [--out FILE]"
+    );
     Ok(())
 }
 
@@ -100,9 +105,11 @@ fn round_mode_from_args(args: &Args) -> Result<RoundMode> {
 }
 
 /// The compress perf trajectory: ns/elem for every hot stage at every bit
-/// width plus end-to-end round time, optionally recorded as
-/// `BENCH_compress.json` (`--json`) so the numbers are machine-comparable
-/// across PRs.
+/// width plus end-to-end round time, ALWAYS appended to
+/// `BENCH_compress.json` (or `--out FILE`) so the checked-in trajectory
+/// never goes stale — a `repro bench` run that leaves the file empty was
+/// a run nobody can compare against. `--json` is accepted for
+/// back-compat; the append no longer hides behind it.
 fn cmd_bench(args: &Args) -> Result<()> {
     let n = args.opt_usize("n", 1 << 20);
     let seed = args.opt_u64("seed", 42);
@@ -115,11 +122,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if let Some(speedup) = cossgd::compress::perf::headline_speedup(b.results()) {
         println!("headline: 4-bit biased quantize+pack kernel speedup {speedup:.1}x vs reference");
     }
-    if args.flag("json") {
-        let out = std::path::PathBuf::from(args.opt_or("out", "BENCH_compress.json"));
-        cossgd::util::bench::write_trajectory(&out, cossgd::compress::perf::SUITE, b.results())?;
-        println!("run appended to {out:?}");
-    }
+    let out = std::path::PathBuf::from(args.opt_or("out", "BENCH_compress.json"));
+    cossgd::util::bench::write_trajectory(&out, cossgd::compress::perf::SUITE, b.results())?;
+    println!("run appended to {out:?}");
     Ok(())
 }
 
@@ -306,6 +311,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.eval_every = args.opt_usize("eval-every", 5);
     cfg.use_kernel_quantizer = args.flag("kernel");
     cfg.client_threads = args.opt_usize("threads", 1);
+    cfg.ingest_shards = args.opt_usize("ingest-shards", 1);
     cfg.round_mode = round_mode_from_args(args)?;
     cfg.verbose = !args.flag("quiet");
     if let Some(p) = args.opt("trace") {
@@ -508,6 +514,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg.bit_schedule = schedule;
         cfg.eval_every = args.opt_usize("eval-every", 5);
         cfg.client_threads = args.opt_usize("threads", 1);
+        cfg.ingest_shards = args.opt_usize("ingest-shards", 1);
         cfg.verbose = args.flag("verbose");
         // `--trace` captures the first scheme's synchronous run (one run
         // per file; the dry-run path traces every row into one file).
@@ -573,9 +580,13 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
         unreachable!("async_mode_for always returns BufferedAsync")
     };
     let concurrency = (2 * buffer_k).min(n_clients);
+    let ingest_shards = match args.opt_usize("ingest-shards", 1) {
+        0 => cossgd::fl::ingest::auto_shards(),
+        s => s,
+    };
     println!(
         "protocol dry-run (artifacts not built): {n}-param synthetic updates, real frames \
-         through transport + ingest state machine"
+         through transport + ingest state machine ({ingest_shards}-shard ingest plane)"
     );
     println!(
         "fleet: {} over {n_clients} clients · {rounds} rounds · async:{buffer_k} ≤{max_staleness} stale",
@@ -633,6 +644,7 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
             k,
             rounds,
             seed,
+            ingest_shards,
             &mut tracer,
             &mut metrics,
         )?;
@@ -648,6 +660,7 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
             rounds,
             max_staleness,
             seed,
+            ingest_shards,
             &mut tracer,
             &mut metrics,
         )?;

@@ -98,6 +98,9 @@ fn every_rule_family_fires_on_the_violations_fixture() {
     assert!(has("determinism", "obs/trace.rs", "Instant"));
     assert!(has("determinism", "obs/trace.rs", "SystemTime"));
     assert!(has("determinism", "obs/trace.rs", "Stopwatch"));
+    // ...and the sharded ingest plane: unordered per-shard state would
+    // break the bit-identical merge contract.
+    assert!(has("determinism", "fl/ingest.rs", "HashMap"));
     // panic_safety
     assert!(has("panic_safety", "fl/server.rs", ".unwrap()"));
     assert!(has("panic_safety", "fl/server.rs", ".expect("));
@@ -108,6 +111,9 @@ fn every_rule_family_fires_on_the_violations_fixture() {
     assert!(has("hotpath", "compress/kernel.rs", ".cos("));
     assert!(has("hotpath", "compress/kernel.rs", ".to_vec()"));
     assert!(has("hotpath", "compress/kernel.rs", ".clone()"));
+    // ...and the ingest worker fold loop: no per-frame allocations.
+    assert!(has("hotpath", "fl/ingest.rs", ".clone()"));
+    assert!(has("hotpath", "fl/ingest.rs", ".to_vec()"));
     // unsafe_audit
     assert!(has("unsafe_audit", "runtime/engine.rs", "unsafe impl"));
     assert!(has("unsafe_audit", "runtime/engine.rs", "unsafe block"));
@@ -119,7 +125,7 @@ fn every_rule_family_fires_on_the_violations_fixture() {
 
     // Exit-code contract: the CLI turns a dirty report into exit 1; the
     // report itself is the source of truth.
-    assert!(report.diagnostics.len() >= 19);
+    assert!(report.diagnostics.len() >= 23);
 }
 
 #[test]

@@ -1,0 +1,20 @@
+//! Fixture: a scoped-thread shard fold that passes both scopes —
+//! `std::thread::scope` is deterministic (disjoint shards, per-worker
+//! arrival-order folds) and the worker loop borrows every slice, so
+//! neither the determinism nor the hotpath rule may fire.
+
+pub fn fold_sharded(frames: &[(f64, Vec<f32>)], acc: &mut [f64], cut: usize) {
+    let (lo, hi) = acc.split_at_mut(cut);
+    std::thread::scope(|s| {
+        s.spawn(|| fold_range(frames, lo, 0));
+        s.spawn(|| fold_range(frames, hi, cut));
+    });
+}
+
+fn fold_range(frames: &[(f64, Vec<f32>)], acc: &mut [f64], start: usize) {
+    for (w, frame) in frames {
+        for (a, v) in acc.iter_mut().zip(frame[start..].iter()) {
+            *a += f64::from(*v) * *w;
+        }
+    }
+}

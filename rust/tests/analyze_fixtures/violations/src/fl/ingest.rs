@@ -1,0 +1,16 @@
+//! Fixture: per-frame allocations and unordered state in the worker fold
+//! loop — both the hotpath and determinism scopes must fire here.
+
+use std::collections::HashMap;
+
+pub fn fold_frames(frames: &[Vec<f32>], acc: &mut [f64]) {
+    let mut seen: HashMap<usize, usize> = HashMap::new();
+    for (i, frame) in frames.iter().enumerate() {
+        seen.insert(i, frame.len());
+        let staged = frame.clone();
+        let copy = staged.to_vec();
+        for (a, v) in acc.iter_mut().zip(copy.iter()) {
+            *a += f64::from(*v);
+        }
+    }
+}

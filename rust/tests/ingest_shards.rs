@@ -1,0 +1,281 @@
+//! Shard-count invariance of the parallel ingest plane (system level).
+//!
+//! The contract under test: a server fed the SAME arrival stream through
+//! an [`IngestPlane`] at **any** shard count and **any** flush
+//! granularity produces
+//!
+//! * a bit-identical final model (`params.to_bits()` equal element-wise),
+//! * an identical verdict stream (accept/duplicate/stale/malformed, in
+//!   arrival order) and identical per-round verdict counters,
+//! * identical controller observation streams (`round_observations`),
+//!
+//! across frame orders, duplicate/stale/malformed interleavings, and
+//! quantizer widths 1..=8 (single-frame and segmented mixed-width
+//! streams) in a buffered-async window. The plane may only change WHEN
+//! the folds run — never what they sum to.
+
+use cossgd::compress::{wire, Direction, LayerMap, Pipeline, PipelineState, SegmentObs};
+use cossgd::fl::transport::dryrun::{self, DryBits};
+use cossgd::fl::{Frame, Ingest, IngestPlane, RoundMode, Server};
+use cossgd::obs::{Metrics, Tracer};
+use cossgd::sim::SimConfig;
+use cossgd::util::propcheck::gradient_like;
+use cossgd::util::rng::Pcg64;
+
+const N: usize = 640;
+const LAYERS: usize = 8;
+const CLIENTS: usize = 8;
+const BUFFER_K: usize = 4;
+const MAX_STALENESS: usize = 2;
+
+/// One arrival in the scripted stream.
+enum Kind {
+    /// Whole-tensor single segment at the given width.
+    Single(u8),
+    /// Per-layer segmented stream, widths cycling 1..=8 from `salt`.
+    Segmented,
+    /// Garbage bytes the server must refuse without unwinding.
+    Malformed,
+}
+
+fn payload(map: &LayerMap, kind: &Kind, salt: u64) -> Vec<u8> {
+    let mut rng = Pcg64::new(salt, 0x1A6E);
+    match kind {
+        Kind::Single(bits) => {
+            let g = gradient_like(&mut rng, N);
+            let pipe = Pipeline::cosine(*bits);
+            wire::serialize(&pipe.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng))
+        }
+        Kind::Segmented => {
+            let g = gradient_like(&mut rng, N);
+            let segs: Vec<_> = (0..map.len())
+                .map(|l| {
+                    let bits = 1 + ((salt as usize + l) % 8) as u8;
+                    Pipeline::cosine(bits).encode(
+                        &g[map.segment(l)],
+                        Direction::Uplink,
+                        &mut PipelineState::new(),
+                        &mut rng,
+                    )
+                })
+                .collect();
+            wire::serialize_stream(&segs)
+        }
+        Kind::Malformed => vec![0xFF; 24],
+    }
+}
+
+/// The scripted arrival stream: accepted single + segmented frames at
+/// every width, a same-window duplicate, a future-tagged stale frame and
+/// a malformed frame interleaved, across enough accepts to close several
+/// buffered-async windows.
+fn arrivals() -> Vec<(usize, usize, Kind)> {
+    vec![
+        (0, 0, Kind::Single(1)),
+        (1, 0, Kind::Segmented),
+        (0, 0, Kind::Single(3)), // duplicate: same client, same window
+        (2, 99, Kind::Single(2)), // stale: future model tag
+        (3, 0, Kind::Malformed),
+        (2, 0, Kind::Segmented),
+        (4, 0, Kind::Single(5)), // 4th accept -> window 1 closes
+        (5, 0, Kind::Single(2)), // staleness 1, discounted
+        (6, 1, Kind::Segmented),
+        (7, 0, Kind::Single(8)),
+        (3, 1, Kind::Single(4)), // 4th accept -> window 2 closes
+        (1, 1, Kind::Segmented), // staleness 1
+        (5, 2, Kind::Single(7)),
+        (0, 2, Kind::Single(6)),
+        (6, 2, Kind::Segmented), // 4th accept -> window 3 closes
+    ]
+}
+
+struct Outcome {
+    param_bits: Vec<u32>,
+    verdicts: Vec<&'static str>,
+    round_verdicts: Vec<(usize, usize, usize)>,
+    observations: Vec<Vec<SegmentObs>>,
+}
+
+fn label(v: &Ingest) -> &'static str {
+    match v {
+        Ingest::Accepted { .. } => "accepted",
+        Ingest::Duplicate => "duplicate",
+        Ingest::StaleRound => "stale",
+        Ingest::Malformed => "malformed",
+    }
+}
+
+/// Drive the scripted stream through a server + plane at the given shard
+/// count and queue capacity (capacity 1 = flush per arrival, the
+/// streamed extreme; large = flush only at window close).
+fn run_scenario(map: &LayerMap, order: &[usize], shards: usize, capacity: usize) -> Outcome {
+    let script = arrivals();
+    let mut server = Server::new(vec![0.1; N], 1.0)
+        .with_clients(vec![100; CLIENTS])
+        .with_round_mode(RoundMode::BufferedAsync {
+            buffer_k: BUFFER_K,
+            max_staleness: MAX_STALENESS,
+        });
+    let mut plane = IngestPlane::new(shards, map).with_capacity(capacity);
+    let mut out = Outcome {
+        param_bits: Vec::new(),
+        verdicts: Vec::new(),
+        round_verdicts: Vec::new(),
+        observations: Vec::new(),
+    };
+    for &i in order {
+        let (client_id, round, kind) = &script[i];
+        let frame = Frame {
+            round: *round,
+            client_id: *client_id,
+            payload: payload(map, kind, i as u64),
+        };
+        let (verdict, prepared) = server.ingest_prepare(&frame);
+        out.verdicts.push(label(&verdict));
+        if let Some(p) = prepared {
+            if plane.full() {
+                plane.flush_into(&mut server).expect("mid-window flush");
+            }
+            plane.submit(p);
+        }
+        if server.ready_to_apply() {
+            plane.flush_into(&mut server).expect("window-close flush");
+            out.observations.push(server.round_observations());
+            out.round_verdicts.push(server.round_verdicts());
+            server.finish_round();
+        }
+    }
+    plane.flush_into(&mut server).expect("tail flush");
+    out.param_bits = server.params.iter().map(|p| p.to_bits()).collect();
+    out
+}
+
+/// A few deterministic stream orders: scripted order, reversed, and two
+/// seeded shuffles — duplicates/stales land in different windows per
+/// order, and EVERY order must be shard-count invariant.
+fn orders(len: usize) -> Vec<Vec<usize>> {
+    let identity: Vec<usize> = (0..len).collect();
+    let reversed: Vec<usize> = (0..len).rev().collect();
+    let mut shuffles = vec![identity, reversed];
+    for seed in [7u64, 1234] {
+        let mut rng = Pcg64::new(seed, 0x0D0E);
+        let mut v: Vec<usize> = (0..len).collect();
+        for i in (1..v.len()).rev() {
+            v.swap(i, rng.below_usize(i + 1));
+        }
+        shuffles.push(v);
+    }
+    shuffles
+}
+
+#[test]
+fn sharded_ingest_is_bit_identical_across_shard_counts_and_granularities() {
+    let map = LayerMap::even(N, LAYERS);
+    // The scripted order must exercise every adversarial verdict (other
+    // orders may shift which window a frame lands in, so only invariance
+    // is asserted for them).
+    let scripted = run_scenario(&map, &(0..arrivals().len()).collect::<Vec<_>>(), 1, 64);
+    for needle in ["accepted", "duplicate", "stale", "malformed"] {
+        assert!(
+            scripted.verdicts.iter().any(|&v| v == needle),
+            "script lost its `{needle}` interleaving: {:?}",
+            scripted.verdicts
+        );
+    }
+    for order in orders(arrivals().len()) {
+        let reference = run_scenario(&map, &order, 1, 64);
+        assert!(!reference.round_verdicts.is_empty(), "no window closed in {order:?}");
+        for shards in [4usize, 16] {
+            for capacity in [1usize, 3, 64] {
+                let got = run_scenario(&map, &order, shards, capacity);
+                assert_eq!(
+                    got.param_bits, reference.param_bits,
+                    "params diverged: shards={shards} capacity={capacity} order={order:?}"
+                );
+                assert_eq!(got.verdicts, reference.verdicts, "verdict stream diverged");
+                assert_eq!(
+                    got.round_verdicts, reference.round_verdicts,
+                    "per-round verdict counters diverged"
+                );
+                assert_eq!(
+                    got.observations, reference.observations,
+                    "controller observation streams diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Single-layer (whole-tensor) maps shard by even element split — the
+/// legacy frame shape must be invariant too.
+#[test]
+fn whole_tensor_maps_shard_evenly_and_stay_invariant() {
+    let map = LayerMap::whole(N);
+    let order: Vec<usize> = (0..arrivals().len()).collect();
+    let reference = run_scenario(&map, &order, 1, 64);
+    for shards in [4usize, 16] {
+        let got = run_scenario(&map, &order, shards, 2);
+        assert_eq!(got.param_bits, reference.param_bits, "shards={shards}");
+        assert_eq!(got.round_verdicts, reference.round_verdicts);
+    }
+}
+
+/// End-to-end through the shared dry protocol drivers (the exact path
+/// `repro sim --quick --ingest-shards N` smokes in CI): byte-identical
+/// ledgers and identical controller decisions at 1 vs 4 vs 16 shards, in
+/// both round modes.
+#[test]
+fn dry_protocol_runs_are_invariant_under_ingest_sharding() {
+    let pipe = Pipeline::cosine(4);
+    let sim = SimConfig::heterogeneous();
+    let bits = DryBits {
+        schedule: cossgd::compress::BitSchedule::Adaptive { budget: 0 },
+        map: LayerMap::even(2_000, 4),
+        decay: 0.5,
+    };
+    let run_pair = |shards: usize| {
+        let sync = dryrun::run_sync_bits_traced(
+            &pipe,
+            Some(&bits),
+            &sim,
+            2_000,
+            12,
+            4,
+            3,
+            42,
+            shards,
+            &mut Tracer::disabled(),
+            &mut Metrics::new(),
+        )
+        .expect("sync dry run");
+        let asyn = dryrun::run_async_bits_traced(
+            &pipe,
+            Some(&bits),
+            &sim,
+            2_000,
+            12,
+            4,
+            8,
+            3,
+            2,
+            42,
+            shards,
+            &mut Tracer::disabled(),
+            &mut Metrics::new(),
+        )
+        .expect("async dry run");
+        (
+            sync.ledger.uplink_bytes,
+            sync.round_mse,
+            sync.round_bits,
+            asyn.ledger.uplink_bytes,
+            asyn.round_mse,
+            asyn.round_bits,
+            asyn.dropped,
+        )
+    };
+    let reference = run_pair(1);
+    for shards in [4usize, 16] {
+        assert_eq!(run_pair(shards), reference, "dry run diverged at {shards} shards");
+    }
+}

@@ -343,3 +343,121 @@ fn property_random_vectors_and_widths() {
         },
     );
 }
+
+/// The sharded ingest plane's worker kernel: folding a dense frame as
+/// several contiguous sub-ranges (any cut points, including ragged ones
+/// that straddle packed-byte boundaries) must be bit-identical to one
+/// full-frame `accumulate_with` — for every quantizer family the range
+/// path serves, every width 1..=8, float32 passthrough and the
+/// length-dependent signSGD+Norm magnitude.
+#[test]
+fn accumulate_range_splits_bit_identical_to_full_fold() {
+    use cossgd::compress::accumulate_range_with;
+    let mut rng = Pcg64::seeded(808);
+    let n = 1_003; // deliberately not a multiple of any code-per-byte count
+    let g = gradient_like(&mut rng, n);
+    let mut pipes: Vec<Pipeline> = (1..=8u8)
+        .map(|b| Pipeline::cosine(b).without_deflate())
+        .collect();
+    pipes.push(Pipeline::float32());
+    pipes.push(Pipeline::sign_norm().without_deflate());
+    pipes.push(Pipeline::linear(3, Rounding::Biased).without_deflate());
+    for pipe in pipes {
+        let enc = pipe.encode(
+            &g,
+            Direction::Uplink,
+            &mut PipelineState::new(),
+            &mut Pcg64::seeded(9),
+        );
+        let mut scratch = EncodeScratch::new();
+        let w = -3.75f64;
+        let mut full = vec![0.5f64; n];
+        accumulate_with(&enc, w, &mut full, &mut scratch).unwrap();
+        for cuts in [
+            vec![0usize, n],
+            vec![0, 1, 2, n - 1, n],
+            vec![0, 17, 333, 600, n],
+            vec![0, 251, 502, 753, n],
+        ] {
+            let mut split = vec![0.5f64; n];
+            for pair in cuts.windows(2) {
+                let (lo, hi) = (pair[0], pair[1]);
+                accumulate_range_with(&enc, lo, w, &mut split[lo..hi], &mut scratch).unwrap();
+            }
+            for (i, (a, b)) in full.iter().zip(&split).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} elem {i} cuts {cuts:?}",
+                    pipe.name()
+                );
+            }
+        }
+        // Out-of-range sub-slices are an error, not a wrap-around.
+        let mut acc = vec![0.0f64; 8];
+        assert!(accumulate_range_with(&enc, n - 4, w, &mut acc, &mut scratch).is_err());
+    }
+}
+
+/// Fused segmented ingest (the server's prepare→fold split): a
+/// mixed-width multi-segment CSG2 stream ingested by the server must
+/// land bit-identically to the decode-then-add reference — per segment,
+/// decode the frame and add `decoded[j] * weight` at the segment offset
+/// in f64, then apply the round exactly as `finish_round` does. Covers
+/// deflated segments (inflated once at prepare) and the rotated /
+/// sparsified stage-decode fallback.
+#[test]
+fn segmented_server_ingest_bit_identical_to_decode_then_add() {
+    use cossgd::compress::wire;
+    use cossgd::fl::{Frame, Server};
+    let mut rng = Pcg64::seeded(909);
+    let n = 1_200;
+    let g = gradient_like(&mut rng, n);
+    let bounds = [0usize, 150, 400, 700, 1_000, n];
+    let seg_pipes = [
+        Pipeline::cosine(1).without_deflate(),
+        Pipeline::cosine(5), // deflated: inflated once on the coordinator
+        Pipeline::sign_norm().without_deflate(),
+        Pipeline::cosine(8).with_rotation(), // staged fallback
+        Pipeline::cosine(4).with_sparsify(0.25), // staged fallback
+    ];
+    let segs: Vec<_> = bounds
+        .windows(2)
+        .zip(&seg_pipes)
+        .map(|(pair, pipe)| {
+            pipe.encode(
+                &g[pair[0]..pair[1]],
+                Direction::Uplink,
+                &mut PipelineState::new(),
+                &mut Pcg64::seeded(11),
+            )
+        })
+        .collect();
+    let payload = wire::serialize_stream(&segs);
+
+    let init = vec![0.25f32; n];
+    let weight = 100u32;
+    let eta = 1.5f32;
+    let mut server = Server::new(init.clone(), eta).with_clients(vec![weight; 4]);
+    let verdict = server.ingest(&Frame {
+        round: 0,
+        client_id: 2,
+        payload,
+    });
+    assert!(matches!(verdict, cossgd::fl::Ingest::Accepted { .. }));
+    server.finish_round();
+
+    // Reference: decode-then-add in f64, then the FedAvg apply formula.
+    let mut acc = vec![0.0f64; n];
+    for (pair, seg) in bounds.windows(2).zip(&segs) {
+        let decoded = cossgd::compress::decode(seg).unwrap();
+        for (a, &d) in acc[pair[0]..pair[1]].iter_mut().zip(&decoded) {
+            *a += d as f64 * weight as f64;
+        }
+    }
+    let scale = eta as f64 / weight as f64;
+    for (i, (&p, (&m, &a))) in server.params.iter().zip(init.iter().zip(&acc)).enumerate() {
+        let expect = m - (a * scale) as f32;
+        assert_eq!(p.to_bits(), expect.to_bits(), "param {i}");
+    }
+}

@@ -28,6 +28,9 @@ fn bits() -> DryBits {
 }
 
 /// One traced sync + async protocol run, rendered to a JSONL document.
+/// Runs with a 2-shard ingest plane so the trace covers the sharded fold
+/// path (`ingest_flush` points, per-shard gauges) — bit-identical
+/// protocol outcomes either way, and still a pure function of the seed.
 fn trace_doc(seed: u64) -> String {
     let pipe = Pipeline::cosine(4);
     let sim = SimConfig::heterogeneous();
@@ -43,6 +46,7 @@ fn trace_doc(seed: u64) -> String {
         4,
         3,
         seed,
+        2,
         &mut tracer,
         &mut metrics,
     )
@@ -58,6 +62,7 @@ fn trace_doc(seed: u64) -> String {
         3,
         2,
         seed,
+        2,
         &mut tracer,
         &mut metrics,
     )
@@ -117,6 +122,7 @@ fn the_trace_covers_the_round_story() {
     for needle in [
         "round", "broadcast", "train", "upload", // timeline-replay spans
         "downlink", "dispatch", "ingest", "observe", "bit_plan", // live points
+        "ingest_flush", // sharded-plane fold telemetry
     ] {
         assert!(
             names.iter().any(|n| n == needle),
@@ -126,7 +132,14 @@ fn the_trace_covers_the_round_story() {
     // The metrics snapshot carries the verdict counters and the ledger.
     let last = doc.lines().last().expect("metrics line");
     let m = Json::parse(last).expect("metrics json");
-    for counter in ["ingest_accepted", "uplink_bytes", "downlink_bytes", "rounds"] {
+    for counter in [
+        "ingest_accepted",
+        "ingest_flushes",
+        "ingest_frames_folded",
+        "uplink_bytes",
+        "downlink_bytes",
+        "rounds",
+    ] {
         assert!(
             m.path(&["metrics", "counters", counter])
                 .and_then(Json::as_u64)
