@@ -1,18 +1,31 @@
 //! DEFLATE benchmarks on the payloads the system actually produces:
 //! bit-packed quantized gradient codes (very compressible) and raw float32
-//! bytes (barely compressible). Cross-referenced against flate2 (zlib) as
-//! an external yardstick when built with `--features zlib-yardstick`
-//! (flate2 is optional so offline builds need no extra crates).
+//! bytes (barely compressible) — now including the **thread-scaling
+//! series** for the parallel encoder (`deflate codes Default x4` etc.).
+//! Before timing, every parallel case is asserted byte-identical to the
+//! serial stream, so a speedup number can never come from divergent
+//! output. Cross-referenced against flate2 (zlib) as an external
+//! yardstick when built with `--features zlib-yardstick` (flate2 is
+//! optional so offline builds need no extra crates).
+//!
+//! `--quick` caps sampling for CI smoke runs; `--json` **appends** a run
+//! to `BENCH_compress.json` (suite `compress`, schema `cossgd-bench/v1`)
+//! alongside the kernel series so DEFLATE MB/s accumulates in the same
+//! committed trajectory.
 
 use cossgd::compress::cosine::CosineQuantizer;
-use cossgd::compress::deflate::{deflate, inflate, CompressionLevel};
-use cossgd::compress::{bitpack, entropy};
-use cossgd::util::bench::Bencher;
+use cossgd::compress::deflate::{deflate, deflate_into, inflate, CompressionLevel};
+use cossgd::compress::{bitpack, entropy, perf};
+use cossgd::util::bench::{json_requested, quick_requested, write_trajectory, Bencher};
 use cossgd::util::propcheck::gradient_like;
 use cossgd::util::rng::Pcg64;
 
 fn main() {
-    let mut b = Bencher::new();
+    let mut b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    };
     let mut rng = Pcg64::seeded(1);
     let n = 1 << 20;
     let g = gradient_like(&mut rng, n);
@@ -25,23 +38,46 @@ fn main() {
         floats.len()
     );
 
+    // Thread-scaling series: level × threads, bit-identity asserted
+    // against the serial stream before the clock starts.
     for level in [CompressionLevel::Fast, CompressionLevel::Default, CompressionLevel::Best] {
-        let out = deflate(&codes, level);
+        let serial = deflate(&codes, level);
+        for threads in [1usize, 4, 8] {
+            let mut out = Vec::new();
+            deflate_into(&codes, level, threads, &mut out);
+            assert_eq!(out, serial, "parallel ({threads} threads) != serial at {level:?}");
+            b.bench_bytes(
+                &format!(
+                    "deflate codes {level:?} x{threads} (ratio {:.2}x)",
+                    codes.len() as f64 / serial.len() as f64
+                ),
+                codes.len() as u64,
+                || {
+                    let mut out = Vec::new();
+                    deflate_into(&codes, level, threads, &mut out);
+                    out
+                },
+            );
+        }
+    }
+    let serial = deflate(&floats, CompressionLevel::Default);
+    for threads in [1usize, 4, 8] {
+        let mut out = Vec::new();
+        deflate_into(&floats, CompressionLevel::Default, threads, &mut out);
+        assert_eq!(out, serial, "parallel float32 ({threads} threads) != serial");
         b.bench_bytes(
-            &format!("deflate codes {level:?} (ratio {:.2}x)", codes.len() as f64 / out.len() as f64),
-            codes.len() as u64,
-            || deflate(&codes, level),
+            &format!(
+                "deflate float32 Default x{threads} (ratio {:.3}x)",
+                floats.len() as f64 / serial.len() as f64
+            ),
+            floats.len() as u64,
+            || {
+                let mut out = Vec::new();
+                deflate_into(&floats, CompressionLevel::Default, threads, &mut out);
+                out
+            },
         );
     }
-    let out = deflate(&floats, CompressionLevel::Default);
-    b.bench_bytes(
-        &format!(
-            "deflate float32 Default (ratio {:.3}x)",
-            floats.len() as f64 / out.len() as f64
-        ),
-        floats.len() as u64,
-        || deflate(&floats, CompressionLevel::Default),
-    );
 
     let compressed = deflate(&codes, CompressionLevel::Default);
     b.bench_bytes("inflate codes", codes.len() as u64, || {
@@ -58,5 +94,11 @@ fn main() {
             e.write_all(&codes).unwrap();
             e.finish().unwrap()
         });
+    }
+
+    if json_requested() {
+        let path = std::path::Path::new("BENCH_compress.json");
+        write_trajectory(path, perf::SUITE, b.results()).expect("write trajectory");
+        println!("run appended to {path:?}");
     }
 }

@@ -210,13 +210,20 @@ pub struct LayerSignal {
 
 /// One wire segment the server accepted this round — the free per-layer
 /// signal: `(n, bits, norm, bound)` all travel in the CSG2 header, so the
-/// controller reads them without touching payload bytes.
+/// controller reads them without touching payload bytes. `wire_bytes` is
+/// the one *measured* field: the bytes the segment actually occupied on
+/// the wire (header + post-DEFLATE payload), averaged over the round's
+/// accepted frames — the post-compression feedback the controller's cost
+/// model learns from.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SegmentObs {
     pub n: usize,
     pub bits: u8,
     pub norm: f32,
     pub bound: f32,
+    /// Mean measured wire bytes per accepted frame (0 = unknown, e.g.
+    /// hand-built observations — the cost model then assumes analytic).
+    pub wire_bytes: usize,
 }
 
 /// The widths chosen for one round.
@@ -271,13 +278,39 @@ impl Default for BitAllocator {
 }
 
 impl BitAllocator {
-    /// Water-fill widths under `budget` payload bytes (headers included).
-    /// Deterministic: ties break toward the lowest layer index.
+    /// Water-fill widths under `budget` payload bytes (headers included),
+    /// with the analytic (pre-compression) cost model. Deterministic:
+    /// ties break toward the lowest layer index.
     pub fn allocate(&self, signals: &[LayerSignal], budget: usize) -> Vec<u8> {
+        self.allocate_scaled(signals, budget, &[])
+    }
+
+    /// [`BitAllocator::allocate`] with a per-layer *measured cost scale*:
+    /// layer `l`'s wire cost is modeled as `scale[l] · segment_cost(n, w)`
+    /// where `scale[l]` is the controller's EWMA of measured
+    /// (post-DEFLATE) over analytic bytes. Missing entries — or an empty
+    /// slice — default to 1.0, which reproduces [`BitAllocator::allocate`]
+    /// decision-for-decision (analytic costs are integers, exact in f64).
+    /// Scales are clamped to [`COST_SCALE_RANGE`] so one degenerate
+    /// observation can never zero out wire costs and grant unlimited bits.
+    pub fn allocate_scaled(
+        &self,
+        signals: &[LayerSignal],
+        budget: usize,
+        scale: &[f64],
+    ) -> Vec<u8> {
         let floor = self.floor.clamp(MIN_BITS, self.cap);
         let l_count = signals.len();
+        let (lo, hi) = COST_SCALE_RANGE;
+        let s_of = |l: usize| scale.get(l).copied().unwrap_or(1.0).clamp(lo, hi);
+        let cost = |l: usize, n: usize, w: u8| s_of(l) * segment_cost(n, w) as f64;
+        let budget = budget as f64;
         let mut bits = vec![MIN_BITS; l_count];
-        let mut spent: usize = signals.iter().map(|s| segment_cost(s.n, MIN_BITS)).sum();
+        let mut spent: f64 = signals
+            .iter()
+            .enumerate()
+            .map(|(l, s)| cost(l, s.n, MIN_BITS))
+            .sum();
         if spent > budget {
             // Even 1 bit everywhere busts the budget: send the minimum —
             // the budget is a target, not a hard wire limit.
@@ -288,7 +321,7 @@ impl BitAllocator {
         for level in (MIN_BITS + 1)..=floor {
             for (l, s) in signals.iter().enumerate() {
                 if bits[l] == level - 1 {
-                    let inc = segment_cost(s.n, level) - segment_cost(s.n, level - 1);
+                    let inc = cost(l, s.n, level) - cost(l, s.n, level - 1);
                     if spent + inc <= budget {
                         bits[l] = level;
                         spent += inc;
@@ -300,19 +333,21 @@ impl BitAllocator {
         // dozens of layers, not thousands), so a plain scan per grant is
         // cheaper than maintaining a heap.
         loop {
-            let mut best: Option<(usize, usize, f64)> = None; // (layer, inc, gain/byte)
+            let mut best: Option<(usize, f64, f64)> = None; // (layer, inc, gain/byte)
             for (l, s) in signals.iter().enumerate() {
                 let w = bits[l];
                 if w >= self.cap {
                     continue;
                 }
-                let inc = segment_cost(s.n, w + 1) - segment_cost(s.n, w);
+                let inc = cost(l, s.n, w + 1) - cost(l, s.n, w);
                 if spent + inc > budget {
                     continue;
                 }
                 let gain = expected_mse(w, s.bound, s.norm as f32, s.n)
                     - expected_mse(w + 1, s.bound, s.norm as f32, s.n);
-                let per_byte = gain / inc.max(1) as f64;
+                // `.max(1.0)` matches the unscaled path exactly when the
+                // scale is 1 (zero-byte grants rank by raw gain).
+                let per_byte = gain / inc.max(1.0);
                 let better = match best {
                     None => true,
                     Some((_, _, g)) => per_byte > g,
@@ -328,6 +363,17 @@ impl BitAllocator {
         bits
     }
 }
+
+/// Clamp range for the measured-over-analytic cost scales: DEFLATE on
+/// quantized codes realistically lands in ~[0.25, 1.01] (plus header
+/// overhead), so anything outside this range is a degenerate observation
+/// (empty layer, corrupted feedback), not a signal to chase.
+pub const COST_SCALE_RANGE: (f64, f64) = (0.05, 4.0);
+
+/// EWMA weight of the newest measured-cost observation (round t's
+/// measurement counts ~30%, history ~70% — smooth enough to ride out one
+/// odd round, fast enough to track a regime change within a few rounds).
+const COST_EWMA_ALPHA: f64 = 0.3;
 
 /// The round-loop controller: owns the schedule and the layer map, eats
 /// the signals the stack already produces, and emits a [`BitPlan`] per
@@ -352,6 +398,10 @@ pub struct BitController {
     /// Latest per-layer observations (None until the first segmented
     /// round reports back).
     signals: Option<Vec<LayerSignal>>,
+    /// Per-layer EWMA of measured (post-DEFLATE) over analytic wire
+    /// bytes — the post-compression feedback loop. None until the first
+    /// segmented round reports measured sizes; round 0 plans analytically.
+    cost_scale: Option<Vec<f64>>,
     prev_loss: Option<f64>,
     /// Extra floor bits from the EF-residual / loss-delta pressure.
     pressure: u8,
@@ -363,6 +413,7 @@ impl BitController {
             schedule,
             map,
             signals: None,
+            cost_scale: None,
             prev_loss: None,
             pressure: 0,
         }
@@ -390,6 +441,13 @@ impl BitController {
     /// the trace's `bit_plan` events record.
     pub fn pressure(&self) -> u8 {
         self.pressure
+    }
+
+    /// The learned per-layer measured-over-analytic cost scales (None
+    /// until the first segmented round reports measured wire sizes) — the
+    /// post-compression feedback the trace's `bit_plan` events record.
+    pub fn cost_scale(&self) -> Option<&[f64]> {
+        self.cost_scale.as_deref()
     }
 
     /// Wire cost of `plan` in payload bytes (headers included) — what the
@@ -428,7 +486,8 @@ impl BitController {
                         })
                         .collect(),
                 };
-                let bits = alloc.allocate(&signals, self.effective_budget());
+                let scale = self.cost_scale.as_deref().unwrap_or(&[]);
+                let bits = alloc.allocate_scaled(&signals, self.effective_budget(), scale);
                 BitPlan {
                     bounds: self.map.offsets.clone(),
                     bits,
@@ -460,6 +519,28 @@ impl BitController {
                     })
                     .collect(),
             );
+            // Fold measured wire sizes into the per-layer cost scales:
+            // ρ_l = measured / analytic bytes at the width that traveled.
+            // Segments without a measurement (wire_bytes == 0) keep their
+            // previous scale — hand-built observations stay analytic.
+            let (lo, hi) = COST_SCALE_RANGE;
+            let mut scales = self
+                .cost_scale
+                .take()
+                .unwrap_or_else(|| vec![1.0; self.map.len()]);
+            for (s, o) in scales.iter_mut().zip(obs) {
+                if o.wire_bytes == 0 {
+                    continue;
+                }
+                let analytic = segment_cost(o.n, o.bits);
+                if analytic == 0 {
+                    continue;
+                }
+                let rho = (o.wire_bytes as f64 / analytic as f64).clamp(lo, hi);
+                // EWMA with a ρ=1 (analytic) prior.
+                *s = (1.0 - COST_EWMA_ALPHA) * *s + COST_EWMA_ALPHA * rho;
+            }
+            self.cost_scale = Some(scales);
         }
         let grad_energy: f64 = obs.iter().map(|o| (o.norm as f64).powi(2)).sum();
         let residual_pressure = residual_norm * residual_norm > 0.25 * grad_energy
@@ -631,6 +712,7 @@ mod tests {
                 bits: cold.bits[l],
                 norm: if l == 3 { 100.0 } else { 1.0 },
                 bound: 0.1,
+                wire_bytes: 0, // hand-built: stay analytic
             })
             .collect();
         c.observe(&obs, 0.0, Some(1.0));
@@ -656,6 +738,7 @@ mod tests {
                 bits: 2,
                 norm: if l == 0 { 50.0 } else { 1.0 },
                 bound: 0.1,
+                wire_bytes: 0, // hand-built: stay analytic
             })
             .collect();
         // Healthy round: tiny residual, improving loss.
@@ -685,6 +768,104 @@ mod tests {
             healthy.bits,
             pressured.bits
         );
+    }
+
+    #[test]
+    fn empty_scale_matches_the_analytic_allocator() {
+        // allocate_scaled with no scales must be decision-for-decision the
+        // analytic path (integer costs are exact in f64).
+        let mut signals = flat_signals(&[1000, 400, 2500, 1000]);
+        signals[2].norm *= 8.0;
+        let alloc = BitAllocator::default();
+        for budget in [500usize, 2000, 4000, 20_000] {
+            assert_eq!(
+                alloc.allocate(&signals, budget),
+                alloc.allocate_scaled(&signals, budget, &[]),
+                "budget {budget}"
+            );
+            assert_eq!(
+                alloc.allocate(&signals, budget),
+                alloc.allocate_scaled(&signals, budget, &[1.0; 4]),
+                "budget {budget} (explicit unit scales)"
+            );
+        }
+    }
+
+    #[test]
+    fn measured_cheaper_costs_buy_more_bits() {
+        // DEFLATE makes every layer 2× cheaper than analytic: under the
+        // same budget the scaled allocator must hand out strictly more
+        // bits, while the *measured* spend stays within budget.
+        let signals = flat_signals(&[1000, 1000, 1000, 1000]);
+        let alloc = BitAllocator::default();
+        let budget: usize = signals.iter().map(|s| segment_cost(s.n, 3)).sum();
+        let analytic = alloc.allocate(&signals, budget);
+        let scaled = alloc.allocate_scaled(&signals, budget, &[0.5; 4]);
+        let total = |bits: &[u8]| bits.iter().map(|&b| b as usize).sum::<usize>();
+        assert!(
+            total(&scaled) > total(&analytic),
+            "scaled {scaled:?} !> analytic {analytic:?}"
+        );
+        let measured_spend: f64 = signals
+            .iter()
+            .zip(&scaled)
+            .map(|(s, &b)| 0.5 * segment_cost(s.n, b) as f64)
+            .sum();
+        assert!(measured_spend <= budget as f64);
+        // Degenerate scales are clamped, never a free-for-all.
+        let runaway = alloc.allocate_scaled(&signals, budget, &[0.0; 4]);
+        let spend_at_min: f64 = signals
+            .iter()
+            .zip(&runaway)
+            .map(|(s, &b)| COST_SCALE_RANGE.0 * segment_cost(s.n, b) as f64)
+            .sum();
+        assert!(spend_at_min <= budget as f64);
+    }
+
+    #[test]
+    fn controller_learns_measured_costs() {
+        let map = LayerMap::even(4000, 4);
+        let mut c = BitController::new(BitSchedule::Adaptive { budget: 0 }, map.clone());
+        let cold = c.plan(0, 10);
+        assert!(c.cost_scale().is_none(), "no feedback yet");
+        // Measured wire bytes at half the analytic size (deflate working).
+        let obs: Vec<SegmentObs> = (0..4)
+            .map(|l| SegmentObs {
+                n: 1000,
+                bits: cold.bits[l],
+                norm: (1000f32).sqrt(),
+                bound: 0.1,
+                wire_bytes: segment_cost(1000, cold.bits[l]) / 2,
+            })
+            .collect();
+        c.observe(&obs, 0.0, Some(1.0));
+        let scales = c.cost_scale().expect("scales learned");
+        assert_eq!(scales.len(), 4);
+        for &s in scales {
+            // One EWMA step from the ρ=1 prior toward 0.5.
+            assert!((s - 0.85).abs() < 1e-9, "scale {s}");
+        }
+        // Repeated observation converges toward the measured ratio …
+        for _ in 0..20 {
+            c.observe(&obs, 0.0, Some(1.0));
+        }
+        let s0 = c.cost_scale().unwrap()[0];
+        assert!((s0 - 0.5).abs() < 0.02, "converged scale {s0}");
+        // … and the learned cheapness buys more bits at the same budget.
+        let warm = c.plan(5, 10);
+        let total = |bits: &[u8]| bits.iter().map(|&b| b as usize).sum::<usize>();
+        assert!(
+            total(&warm.bits) > total(&cold.bits),
+            "measured feedback unused: cold {:?} warm {:?}",
+            cold.bits,
+            warm.bits
+        );
+        // wire_bytes == 0 keeps the previous scales (analytic fallback).
+        let blank: Vec<SegmentObs> =
+            obs.iter().map(|o| SegmentObs { wire_bytes: 0, ..*o }).collect();
+        let before = c.cost_scale().unwrap().to_vec();
+        c.observe(&blank, 0.0, Some(1.0));
+        assert_eq!(c.cost_scale().unwrap(), before.as_slice());
     }
 
     #[test]

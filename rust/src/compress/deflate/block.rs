@@ -1,0 +1,400 @@
+//! DEFLATE block writer: per block chooses stored / fixed-Huffman /
+//! dynamic-Huffman by exact bit cost (RFC 1951 §3.2) and emits it into a
+//! `BitWriter`. The caller (serial loop or a parallel worker) owns block
+//! boundaries and the BFINAL bit; this module is pure per-block emission,
+//! so chunk workers can run it concurrently on disjoint token slices.
+
+use super::huffman::{build_lengths, canonical_codes, BitWriter};
+use super::lz77::Token;
+
+// ---- RFC 1951 length / distance code tables -------------------------------
+
+/// `(base, extra_bits)` for length codes 257..=285.
+pub const LENGTH_TABLE: [(u16, u8); 29] = [
+    (3, 0), (4, 0), (5, 0), (6, 0), (7, 0), (8, 0), (9, 0), (10, 0),
+    (11, 1), (13, 1), (15, 1), (17, 1), (19, 2), (23, 2), (27, 2), (31, 2),
+    (35, 3), (43, 3), (51, 3), (59, 3), (67, 4), (83, 4), (99, 4), (115, 4),
+    (131, 5), (163, 5), (195, 5), (227, 5), (258, 0),
+];
+
+/// `(base, extra_bits)` for distance codes 0..=29.
+pub const DIST_TABLE: [(u16, u8); 30] = [
+    (1, 0), (2, 0), (3, 0), (4, 0), (5, 1), (7, 1), (9, 2), (13, 2),
+    (17, 3), (25, 3), (33, 4), (49, 4), (65, 5), (97, 5), (129, 6), (193, 6),
+    (257, 7), (385, 7), (513, 8), (769, 8), (1025, 9), (1537, 9),
+    (2049, 10), (3073, 10), (4097, 11), (6145, 11), (8193, 12), (12289, 12),
+    (16385, 13), (24577, 13),
+];
+
+/// Order in which code-length-code lengths are transmitted (§3.2.7).
+pub const CLEN_ORDER: [usize; 19] = [
+    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+];
+
+/// Map a match length (3..=258) to `(code_index, extra_bits, extra_val)`.
+#[inline]
+pub fn length_code(len: u16) -> (usize, u8, u16) {
+    debug_assert!((3..=258).contains(&len));
+    // Binary search is overkill for 29 entries; linear from a coarse guess.
+    let mut idx = LENGTH_TABLE.len() - 1;
+    for (i, &(base, _)) in LENGTH_TABLE.iter().enumerate() {
+        if base > len {
+            idx = i - 1;
+            break;
+        }
+    }
+    if LENGTH_TABLE[LENGTH_TABLE.len() - 1].0 <= len {
+        idx = LENGTH_TABLE.len() - 1;
+    }
+    let (base, extra) = LENGTH_TABLE[idx];
+    (idx, extra, len - base)
+}
+
+/// Map a distance (1..=32768) to `(code_index, extra_bits, extra_val)`.
+#[inline]
+pub fn dist_code(dist: u16) -> (usize, u8, u16) {
+    debug_assert!(dist >= 1);
+    let mut idx = DIST_TABLE.len() - 1;
+    for (i, &(base, _)) in DIST_TABLE.iter().enumerate() {
+        if base > dist {
+            idx = i - 1;
+            break;
+        }
+    }
+    if DIST_TABLE[DIST_TABLE.len() - 1].0 <= dist {
+        idx = DIST_TABLE.len() - 1;
+    }
+    let (base, extra) = DIST_TABLE[idx];
+    (idx, extra, dist - base)
+}
+
+/// Fixed lit/len code lengths (§3.2.6).
+pub fn fixed_lit_lengths() -> [u8; 288] {
+    let mut l = [8u8; 288];
+    for x in l.iter_mut().take(256).skip(144) {
+        *x = 9;
+    }
+    for x in l.iter_mut().take(280).skip(256) {
+        *x = 7;
+    }
+    l
+}
+
+/// Fixed distance code lengths: 5 bits for all 32 codes (30 real distance
+/// codes + 2 reserved — included so the code is complete, per §3.2.6).
+pub fn fixed_dist_lengths() -> [u8; 32] {
+    [5u8; 32]
+}
+
+const END_OF_BLOCK: usize = 256;
+const MAX_STORED: usize = 65535;
+
+/// Frequencies of the lit/len and distance alphabets for a token slice.
+fn frequencies(tokens: &[Token]) -> ([u32; 286], [u32; 30]) {
+    let mut lit = [0u32; 286];
+    let mut dist = [0u32; 30];
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => lit[b as usize] += 1,
+            Token::Match { len, dist: d } => {
+                lit[257 + length_code(len).0] += 1;
+                dist[dist_code(d).0] += 1;
+            }
+        }
+    }
+    lit[END_OF_BLOCK] += 1;
+    (lit, dist)
+}
+
+/// Bit cost of the token payload under the given code lengths.
+fn payload_cost(tokens: &[Token], lit_len: &[u8], dist_len: &[u8]) -> usize {
+    let mut bits = lit_len[END_OF_BLOCK] as usize;
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => bits += lit_len[b as usize] as usize,
+            Token::Match { len, dist: d } => {
+                let (lc, le, _) = length_code(len);
+                let (dc, de, _) = dist_code(d);
+                bits += lit_len[257 + lc] as usize
+                    + le as usize
+                    + dist_len[dc] as usize
+                    + de as usize;
+            }
+        }
+    }
+    bits
+}
+
+/// RLE-encode code lengths with symbols 0..=18 (§3.2.7). Returns
+/// `(symbol, extra_bits_value)` pairs.
+fn rle_code_lengths(lengths: &[u8]) -> Vec<(u8, u8)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < lengths.len() {
+        let v = lengths[i];
+        let mut run = 1usize;
+        while i + run < lengths.len() && lengths[i + run] == v {
+            run += 1;
+        }
+        if v == 0 {
+            let mut left = run;
+            while left >= 11 {
+                let take = left.min(138);
+                out.push((18, (take - 11) as u8));
+                left -= take;
+            }
+            if left >= 3 {
+                out.push((17, (left - 3) as u8));
+                left = 0;
+            }
+            for _ in 0..left {
+                out.push((0, 0));
+            }
+        } else {
+            out.push((v, 0));
+            let mut left = run - 1;
+            while left >= 3 {
+                let take = left.min(6);
+                out.push((16, (take - 3) as u8));
+                left -= take;
+            }
+            for _ in 0..left {
+                out.push((v, 0));
+            }
+        }
+        i += run;
+    }
+    out
+}
+
+struct DynamicPlan {
+    lit_len: Vec<u8>,
+    dist_len: Vec<u8>,
+    clen_len: Vec<u8>,
+    rle: Vec<(u8, u8)>,
+    hlit: usize,
+    hdist: usize,
+    hclen: usize,
+    header_bits: usize,
+}
+
+fn plan_dynamic(tokens: &[Token]) -> DynamicPlan {
+    let (lit_freq, dist_freq) = frequencies(tokens);
+    let mut lit_len = build_lengths(&lit_freq, 15);
+    let mut dist_len = build_lengths(&dist_freq, 15);
+    // At least one distance code must be describable; if no matches, give
+    // distance symbol 0 a 1-bit code (a legal single-symbol code).
+    if dist_len.iter().all(|&l| l == 0) {
+        dist_len[0] = 1;
+    }
+    // HLIT/HDIST: trailing zero lengths may be trimmed (minimums 257 / 1).
+    let hlit = lit_len
+        .iter()
+        .rposition(|&l| l > 0)
+        .map(|p| p + 1)
+        .unwrap_or(257)
+        .max(257);
+    let hdist = dist_len
+        .iter()
+        .rposition(|&l| l > 0)
+        .map(|p| p + 1)
+        .unwrap_or(1)
+        .max(1);
+    lit_len.truncate(hlit);
+    dist_len.truncate(hdist);
+
+    // RLE over the concatenated length arrays.
+    let mut all: Vec<u8> = Vec::with_capacity(hlit + hdist);
+    all.extend_from_slice(&lit_len);
+    all.extend_from_slice(&dist_len);
+    let rle = rle_code_lengths(&all);
+
+    let mut clen_freq = [0u32; 19];
+    for &(s, _) in &rle {
+        clen_freq[s as usize] += 1;
+    }
+    let clen_len = build_lengths(&clen_freq, 7);
+    let hclen = (4..=19)
+        .rev()
+        .find(|&k| clen_len[CLEN_ORDER[k - 1]] > 0)
+        .unwrap_or(4)
+        .max(4);
+
+    let mut header_bits = 5 + 5 + 4 + hclen * 3;
+    for &(s, _) in &rle {
+        header_bits += clen_len[s as usize] as usize
+            + match s {
+                16 => 2,
+                17 => 3,
+                18 => 7,
+                _ => 0,
+            };
+    }
+
+    DynamicPlan {
+        lit_len,
+        dist_len,
+        clen_len,
+        rle,
+        hlit,
+        hdist,
+        hclen,
+        header_bits,
+    }
+}
+
+/// Emit one DEFLATE block for `tokens` covering the raw bytes `raw`, with
+/// the given BFINAL bit. Picks stored / fixed / dynamic by exact bit cost.
+pub fn emit_block(w: &mut BitWriter, tokens: &[Token], raw: &[u8], final_bit: u32) {
+    let fixed_lit = fixed_lit_lengths();
+    let fixed_dist = fixed_dist_lengths();
+    let cost_fixed = 3 + payload_cost(tokens, &fixed_lit, &fixed_dist);
+
+    let plan = plan_dynamic(tokens);
+    let cost_dynamic =
+        3 + plan.header_bits + payload_cost(tokens, &plan.lit_len, &plan.dist_len);
+
+    // Stored cost: 3 bits + pad to byte + (LEN/NLEN + bytes) per ≤64 KiB chunk.
+    let nchunks = raw.len().div_ceil(MAX_STORED).max(1);
+    let cost_stored_bytes = nchunks * 5 + raw.len();
+    let cost_stored = cost_stored_bytes * 8 + 7; // worst-case alignment
+
+    if cost_stored < cost_fixed.min(cost_dynamic) {
+        emit_stored(w, raw, final_bit);
+    } else if cost_fixed <= cost_dynamic {
+        w.write_bits(final_bit, 1);
+        w.write_bits(0b01, 2); // fixed
+        emit_tokens(w, tokens, &fixed_lit, &fixed_dist);
+    } else {
+        w.write_bits(final_bit, 1);
+        w.write_bits(0b10, 2); // dynamic
+        emit_dynamic_header(w, &plan);
+        emit_tokens(w, tokens, &plan.lit_len, &plan.dist_len);
+    }
+}
+
+fn emit_stored(w: &mut BitWriter, raw: &[u8], final_bit: u32) {
+    // At least one (possibly empty) stored chunk, ≤64 KiB each.
+    let nchunks = raw.len().div_ceil(MAX_STORED).max(1);
+    for i in 0..nchunks {
+        let chunk = &raw[i * MAX_STORED..raw.len().min((i + 1) * MAX_STORED)];
+        let f = if i == nchunks - 1 { final_bit } else { 0 };
+        w.write_bits(f, 1);
+        w.write_bits(0b00, 2); // stored
+        w.align_byte();
+        let len = chunk.len() as u16;
+        w.write_bits(len as u32, 16);
+        w.write_bits(!len as u32, 16);
+        for &b in chunk {
+            w.write_bits(b as u32, 8);
+        }
+    }
+}
+
+fn emit_dynamic_header(w: &mut BitWriter, plan: &DynamicPlan) {
+    w.write_bits((plan.hlit - 257) as u32, 5);
+    w.write_bits((plan.hdist - 1) as u32, 5);
+    w.write_bits((plan.hclen - 4) as u32, 4);
+    for &ord in CLEN_ORDER.iter().take(plan.hclen) {
+        w.write_bits(plan.clen_len[ord] as u32, 3);
+    }
+    let clen_codes = canonical_codes(&plan.clen_len);
+    for &(s, extra) in &plan.rle {
+        w.write_code(clen_codes[s as usize], plan.clen_len[s as usize] as u32);
+        match s {
+            16 => w.write_bits(extra as u32, 2),
+            17 => w.write_bits(extra as u32, 3),
+            18 => w.write_bits(extra as u32, 7),
+            _ => {}
+        }
+    }
+}
+
+fn emit_tokens(w: &mut BitWriter, tokens: &[Token], lit_len: &[u8], dist_len: &[u8]) {
+    let lit_codes = canonical_codes(lit_len);
+    let dist_codes = canonical_codes(dist_len);
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => {
+                w.write_code(lit_codes[b as usize], lit_len[b as usize] as u32)
+            }
+            Token::Match { len, dist } => {
+                let (lc, le, lv) = length_code(len);
+                w.write_code(lit_codes[257 + lc], lit_len[257 + lc] as u32);
+                if le > 0 {
+                    w.write_bits(lv as u32, le as u32);
+                }
+                let (dc, de, dv) = dist_code(dist);
+                w.write_code(dist_codes[dc], dist_len[dc] as u32);
+                if de > 0 {
+                    w.write_bits(dv as u32, de as u32);
+                }
+            }
+        }
+    }
+    w.write_code(
+        lit_codes[END_OF_BLOCK],
+        lit_len[END_OF_BLOCK] as u32,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_code_boundaries() {
+        assert_eq!(length_code(3), (0, 0, 0));
+        assert_eq!(length_code(10), (7, 0, 0));
+        assert_eq!(length_code(11), (8, 1, 0));
+        assert_eq!(length_code(12), (8, 1, 1));
+        assert_eq!(length_code(257), (27, 5, 30));
+        assert_eq!(length_code(258), (28, 0, 0));
+    }
+
+    #[test]
+    fn dist_code_boundaries() {
+        assert_eq!(dist_code(1), (0, 0, 0));
+        assert_eq!(dist_code(4), (3, 0, 0));
+        assert_eq!(dist_code(5), (4, 1, 0));
+        assert_eq!(dist_code(6), (4, 1, 1));
+        assert_eq!(dist_code(24577), (29, 13, 0));
+        assert_eq!(dist_code(32768), (29, 13, 8191));
+    }
+
+    #[test]
+    fn rle_examples() {
+        // 5 zeros -> one 17 with extra 2 (5-3).
+        assert_eq!(rle_code_lengths(&[0, 0, 0, 0, 0]), vec![(17, 2)]);
+        // value run: v + 16-repeats.
+        assert_eq!(
+            rle_code_lengths(&[7, 7, 7, 7, 7]),
+            vec![(7, 0), (16, 1)] // 7 then repeat 4 times (3 + extra 1)
+        );
+        // short runs stay literal.
+        assert_eq!(rle_code_lengths(&[3, 3]), vec![(3, 0), (3, 0)]);
+        // long zero run uses 18.
+        assert_eq!(rle_code_lengths(&[0; 140]), vec![(18, 127), (0, 0), (0, 0)]);
+    }
+
+    #[test]
+    fn fixed_tables_shape() {
+        let l = fixed_lit_lengths();
+        assert_eq!(l[0], 8);
+        assert_eq!(l[143], 8);
+        assert_eq!(l[144], 9);
+        assert_eq!(l[255], 9);
+        assert_eq!(l[256], 7);
+        assert_eq!(l[279], 7);
+        assert_eq!(l[280], 8);
+        assert_eq!(l[287], 8);
+    }
+
+    #[test]
+    fn empty_token_block_is_a_valid_final_block() {
+        let mut w = BitWriter::new();
+        emit_block(&mut w, &[], &[], 1);
+        let bytes = w.finish();
+        assert_eq!(super::super::decoder::inflate(&bytes).unwrap(), Vec::<u8>::new());
+    }
+}

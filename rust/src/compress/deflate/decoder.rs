@@ -1,7 +1,7 @@
 //! Full DEFLATE decoder (inflate): stored, fixed-Huffman and
 //! dynamic-Huffman blocks (RFC 1951 §3.2).
 
-use super::encoder::{
+use super::block::{
     fixed_dist_lengths, fixed_lit_lengths, CLEN_ORDER, DIST_TABLE, LENGTH_TABLE,
 };
 use super::huffman::{BitReader, BitsError, Decoder};
@@ -195,9 +195,8 @@ mod tests {
     #[test]
     fn rejects_distance_before_start() {
         // Fixed block: a match with distance 1 as the very first token.
-        use super::super::huffman::BitWriter;
-        use super::super::encoder::{fixed_lit_lengths, fixed_dist_lengths};
-        use super::super::huffman::canonical_codes;
+        use super::super::block::{fixed_dist_lengths, fixed_lit_lengths};
+        use super::super::huffman::{canonical_codes, BitWriter};
         let lit_len = fixed_lit_lengths();
         let dist_len = fixed_dist_lengths();
         let lit_codes = canonical_codes(&lit_len);

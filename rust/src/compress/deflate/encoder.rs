@@ -1,8 +1,21 @@
-//! DEFLATE block emitter: per block chooses stored / fixed-Huffman /
-//! dynamic-Huffman by exact bit cost (RFC 1951 §3.2).
+//! DEFLATE encoder orchestration: fixed-size input chunks → chunked match
+//! finder ([`super::matcher`]) → block writer ([`super::block`]), optionally
+//! fanned out over scoped worker threads.
+//!
+//! Parallel discipline (mirrors `fl/ingest.rs`): chunk boundaries are a
+//! function of the input length only; worker `w` owns chunks `w, w+T,
+//! w+2T, …` (static striping, so per-thread stats are deterministic at a
+//! fixed thread count); each worker sends finished per-chunk bit streams
+//! down its own bounded channel; the calling thread stitches them in chunk
+//! order with [`BitWriter::append`] and drains completed bytes straight
+//! into the caller's output buffer. Because chunking, tokenization, and
+//! block emission never consult the thread count, the output bytes are
+//! identical at ANY thread count — `threads` only changes wall-clock.
 
-use super::huffman::{build_lengths, canonical_codes, BitWriter};
-use super::lz77::{tokenize, MatchParams, Token};
+use super::block::emit_block;
+use super::huffman::BitWriter;
+use super::lz77::{MatchParams, Token};
+use super::matcher::{chunk_count, chunk_range, tokenize_chunk, MatcherScratch};
 
 /// Compression effort.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,426 +33,224 @@ impl CompressionLevel {
             CompressionLevel::Best => MatchParams::best(),
         }
     }
-}
 
-// ---- RFC 1951 length / distance code tables -------------------------------
-
-/// `(base, extra_bits)` for length codes 257..=285.
-pub const LENGTH_TABLE: [(u16, u8); 29] = [
-    (3, 0), (4, 0), (5, 0), (6, 0), (7, 0), (8, 0), (9, 0), (10, 0),
-    (11, 1), (13, 1), (15, 1), (17, 1), (19, 2), (23, 2), (27, 2), (31, 2),
-    (35, 3), (43, 3), (51, 3), (59, 3), (67, 4), (83, 4), (99, 4), (115, 4),
-    (131, 5), (163, 5), (195, 5), (227, 5), (258, 0),
-];
-
-/// `(base, extra_bits)` for distance codes 0..=29.
-pub const DIST_TABLE: [(u16, u8); 30] = [
-    (1, 0), (2, 0), (3, 0), (4, 0), (5, 1), (7, 1), (9, 2), (13, 2),
-    (17, 3), (25, 3), (33, 4), (49, 4), (65, 5), (97, 5), (129, 6), (193, 6),
-    (257, 7), (385, 7), (513, 8), (769, 8), (1025, 9), (1537, 9),
-    (2049, 10), (3073, 10), (4097, 11), (6145, 11), (8193, 12), (12289, 12),
-    (16385, 13), (24577, 13),
-];
-
-/// Order in which code-length-code lengths are transmitted (§3.2.7).
-pub const CLEN_ORDER: [usize; 19] = [
-    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
-];
-
-/// Map a match length (3..=258) to `(code_index, extra_bits, extra_val)`.
-#[inline]
-pub fn length_code(len: u16) -> (usize, u8, u16) {
-    debug_assert!((3..=258).contains(&len));
-    // Binary search is overkill for 29 entries; linear from a coarse guess.
-    let mut idx = LENGTH_TABLE.len() - 1;
-    for (i, &(base, _)) in LENGTH_TABLE.iter().enumerate() {
-        if base > len {
-            idx = i - 1;
-            break;
+    /// CLI name (`--deflate-level`).
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressionLevel::Fast => "fast",
+            CompressionLevel::Default => "default",
+            CompressionLevel::Best => "best",
         }
     }
-    if LENGTH_TABLE[LENGTH_TABLE.len() - 1].0 <= len {
-        idx = LENGTH_TABLE.len() - 1;
-    }
-    let (base, extra) = LENGTH_TABLE[idx];
-    (idx, extra, len - base)
-}
 
-/// Map a distance (1..=32768) to `(code_index, extra_bits, extra_val)`.
-#[inline]
-pub fn dist_code(dist: u16) -> (usize, u8, u16) {
-    debug_assert!(dist >= 1);
-    let mut idx = DIST_TABLE.len() - 1;
-    for (i, &(base, _)) in DIST_TABLE.iter().enumerate() {
-        if base > dist {
-            idx = i - 1;
-            break;
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<CompressionLevel> {
+        match s {
+            "fast" => Some(CompressionLevel::Fast),
+            "default" => Some(CompressionLevel::Default),
+            "best" => Some(CompressionLevel::Best),
+            _ => None,
         }
     }
-    if DIST_TABLE[DIST_TABLE.len() - 1].0 <= dist {
-        idx = DIST_TABLE.len() - 1;
-    }
-    let (base, extra) = DIST_TABLE[idx];
-    (idx, extra, dist - base)
 }
 
-/// Fixed lit/len code lengths (§3.2.6).
-pub fn fixed_lit_lengths() -> Vec<u8> {
-    let mut l = vec![8u8; 288];
-    for x in l.iter_mut().take(256).skip(144) {
-        *x = 9;
-    }
-    for x in l.iter_mut().take(280).skip(256) {
-        *x = 7;
-    }
-    l
+/// What one `deflate_into` call did (fed into round telemetry and the
+/// downlink broadcast observations).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DeflateStats {
+    /// Chunks (= DEFLATE blocks at the chunk layer) emitted.
+    pub chunks: u64,
+    /// Uncompressed input bytes.
+    pub bytes_in: u64,
+    /// Compressed output bytes.
+    pub bytes_out: u64,
+    /// Worker threads actually used (≤ requested, ≤ chunk count).
+    pub threads: usize,
+    /// Compressed bytes contributed by each worker (len == `threads`).
+    pub per_thread: Vec<u64>,
 }
 
-/// Fixed distance code lengths: 5 bits for all 32 codes (30 real distance
-/// codes + 2 reserved — included so the code is complete, per §3.2.6).
-pub fn fixed_dist_lengths() -> Vec<u8> {
-    vec![5u8; 32]
-}
+/// Bounded per-worker channel depth: enough to pipeline match-finding
+/// ahead of stitching without holding many chunks in flight.
+const CHANNEL_DEPTH: usize = 2;
 
-const END_OF_BLOCK: usize = 256;
-/// Target uncompressed bytes per block (new Huffman tables per block).
-const BLOCK_SPAN: usize = 128 * 1024;
-const MAX_STORED: usize = 65535;
-
-/// Compress `data` into a raw DEFLATE stream.
+/// Compress `data` into a raw DEFLATE stream (serial convenience wrapper).
 pub fn deflate(data: &[u8], level: CompressionLevel) -> Vec<u8> {
-    let tokens = tokenize(data, level.params());
-    let mut w = BitWriter::new();
-
-    // Split the token stream into blocks covering ~BLOCK_SPAN input bytes.
-    let mut blocks: Vec<(usize, usize, usize)> = Vec::new(); // (tok_start, tok_end, byte_span)
-    {
-        let mut start = 0usize;
-        let mut span = 0usize;
-        for (i, t) in tokens.iter().enumerate() {
-            span += match *t {
-                Token::Literal(_) => 1,
-                Token::Match { len, .. } => len as usize,
-            };
-            if span >= BLOCK_SPAN {
-                blocks.push((start, i + 1, span));
-                start = i + 1;
-                span = 0;
-            }
-        }
-        if start < tokens.len() || blocks.is_empty() {
-            blocks.push((start, tokens.len(), span));
-        }
-    }
-
-    let mut byte_pos = 0usize; // input offset of the current block
-    let nblocks = blocks.len();
-    for (bi, &(ts, te, span)) in blocks.iter().enumerate() {
-        let final_bit = (bi == nblocks - 1) as u32;
-        let toks = &tokens[ts..te];
-        emit_block(&mut w, toks, &data[byte_pos..byte_pos + span], final_bit);
-        byte_pos += span;
-    }
-    w.finish()
-}
-
-/// Frequencies of the lit/len and distance alphabets for a token slice.
-fn frequencies(tokens: &[Token]) -> (Vec<u32>, Vec<u32>) {
-    let mut lit = vec![0u32; 286];
-    let mut dist = vec![0u32; 30];
-    for t in tokens {
-        match *t {
-            Token::Literal(b) => lit[b as usize] += 1,
-            Token::Match { len, dist: d } => {
-                lit[257 + length_code(len).0] += 1;
-                dist[dist_code(d).0] += 1;
-            }
-        }
-    }
-    lit[END_OF_BLOCK] += 1;
-    (lit, dist)
-}
-
-/// Bit cost of the token payload under the given code lengths.
-fn payload_cost(tokens: &[Token], lit_len: &[u8], dist_len: &[u8]) -> usize {
-    let mut bits = lit_len[END_OF_BLOCK] as usize;
-    for t in tokens {
-        match *t {
-            Token::Literal(b) => bits += lit_len[b as usize] as usize,
-            Token::Match { len, dist: d } => {
-                let (lc, le, _) = length_code(len);
-                let (dc, de, _) = dist_code(d);
-                bits += lit_len[257 + lc] as usize
-                    + le as usize
-                    + dist_len[dc] as usize
-                    + de as usize;
-            }
-        }
-    }
-    bits
-}
-
-/// RLE-encode code lengths with symbols 0..=18 (§3.2.7). Returns
-/// `(symbol, extra_bits_value)` pairs.
-fn rle_code_lengths(lengths: &[u8]) -> Vec<(u8, u8)> {
     let mut out = Vec::new();
-    let mut i = 0usize;
-    while i < lengths.len() {
-        let v = lengths[i];
-        let mut run = 1usize;
-        while i + run < lengths.len() && lengths[i + run] == v {
-            run += 1;
-        }
-        if v == 0 {
-            let mut left = run;
-            while left >= 11 {
-                let take = left.min(138);
-                out.push((18, (take - 11) as u8));
-                left -= take;
-            }
-            if left >= 3 {
-                out.push((17, (left - 3) as u8));
-                left = 0;
-            }
-            for _ in 0..left {
-                out.push((0, 0));
-            }
-        } else {
-            out.push((v, 0));
-            let mut left = run - 1;
-            while left >= 3 {
-                let take = left.min(6);
-                out.push((16, (take - 3) as u8));
-                left -= take;
-            }
-            for _ in 0..left {
-                out.push((v, 0));
-            }
-        }
-        i += run;
-    }
+    deflate_into(data, level, 1, &mut out);
     out
 }
 
-struct DynamicPlan {
-    lit_len: Vec<u8>,
-    dist_len: Vec<u8>,
-    clen_len: Vec<u8>,
-    rle: Vec<(u8, u8)>,
-    hlit: usize,
-    hdist: usize,
-    hclen: usize,
-    header_bits: usize,
+/// Resolve the requested thread count: 0 = auto, and never more workers
+/// than chunks. The resolution affects scheduling only, never the bytes.
+fn effective_threads(requested: usize, nchunks: usize) -> usize {
+    let t = match requested {
+        0 => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1),
+        t => t,
+    };
+    t.clamp(1, nchunks)
 }
 
-fn plan_dynamic(tokens: &[Token]) -> DynamicPlan {
-    let (lit_freq, dist_freq) = frequencies(tokens);
-    let mut lit_len = build_lengths(&lit_freq, 15);
-    let mut dist_len = build_lengths(&dist_freq, 15);
-    // At least one distance code must be describable; if no matches, give
-    // distance symbol 0 a 1-bit code (a legal single-symbol code).
-    if dist_len.iter().all(|&l| l == 0) {
-        dist_len[0] = 1;
-    }
-    // HLIT/HDIST: trailing zero lengths may be trimmed (minimums 257 / 1).
-    let hlit = lit_len
-        .iter()
-        .rposition(|&l| l > 0)
-        .map(|p| p + 1)
-        .unwrap_or(257)
-        .max(257);
-    let hdist = dist_len
-        .iter()
-        .rposition(|&l| l > 0)
-        .map(|p| p + 1)
-        .unwrap_or(1)
-        .max(1);
-    lit_len.truncate(hlit);
-    dist_len.truncate(hdist);
+/// Compress `data` appending the raw DEFLATE stream to `out` (streaming:
+/// completed bytes land in `out` as chunks finish, so wire serialization
+/// overlaps compression). Output bytes are identical at every `threads`
+/// value (0 = auto).
+pub fn deflate_into(
+    data: &[u8],
+    level: CompressionLevel,
+    threads: usize,
+    out: &mut Vec<u8>,
+) -> DeflateStats {
+    let params = level.params();
+    let nchunks = chunk_count(data.len());
+    let threads = effective_threads(threads, nchunks);
+    let start_len = out.len();
 
-    // RLE over the concatenated length arrays.
-    let mut all = lit_len.clone();
-    all.extend_from_slice(&dist_len);
-    let rle = rle_code_lengths(&all);
-
-    let mut clen_freq = vec![0u32; 19];
-    for &(s, _) in &rle {
-        clen_freq[s as usize] += 1;
-    }
-    let clen_len = build_lengths(&clen_freq, 7);
-    let hclen = (4..=19)
-        .rev()
-        .find(|&k| clen_len[CLEN_ORDER[k - 1]] > 0)
-        .unwrap_or(4)
-        .max(4);
-
-    let mut header_bits = 5 + 5 + 4 + hclen * 3;
-    for &(s, _) in &rle {
-        header_bits += clen_len[s as usize] as usize
-            + match s {
-                16 => 2,
-                17 => 3,
-                18 => 7,
-                _ => 0,
-            };
-    }
-
-    DynamicPlan {
-        lit_len,
-        dist_len,
-        clen_len,
-        rle,
-        hlit,
-        hdist,
-        hclen,
-        header_bits,
-    }
-}
-
-fn emit_block(w: &mut BitWriter, tokens: &[Token], raw: &[u8], final_bit: u32) {
-    let fixed_lit = fixed_lit_lengths();
-    let fixed_dist = fixed_dist_lengths();
-    let cost_fixed = 3 + payload_cost(tokens, &fixed_lit, &fixed_dist);
-
-    let plan = plan_dynamic(tokens);
-    let cost_dynamic =
-        3 + plan.header_bits + payload_cost(tokens, &plan.lit_len, &plan.dist_len);
-
-    // Stored cost: 3 bits + pad to byte + (LEN/NLEN + bytes) per ≤64 KiB chunk.
-    let nchunks = raw.len().div_ceil(MAX_STORED).max(1);
-    let cost_stored_bytes = nchunks * 5 + raw.len();
-    let cost_stored = cost_stored_bytes * 8 + 7; // worst-case alignment
-
-    if cost_stored < cost_fixed.min(cost_dynamic) {
-        emit_stored(w, raw, final_bit);
-    } else if cost_fixed <= cost_dynamic {
-        w.write_bits(final_bit, 1);
-        w.write_bits(0b01, 2); // fixed
-        emit_tokens(w, tokens, &fixed_lit, &fixed_dist);
+    let per_thread = if threads <= 1 {
+        deflate_serial(data, params, nchunks, out)
     } else {
-        w.write_bits(final_bit, 1);
-        w.write_bits(0b10, 2); // dynamic
-        emit_dynamic_header(w, &plan);
-        emit_tokens(w, tokens, &plan.lit_len, &plan.dist_len);
+        deflate_parallel(data, params, nchunks, threads, out)
+    };
+
+    DeflateStats {
+        chunks: nchunks as u64,
+        bytes_in: data.len() as u64,
+        bytes_out: (out.len() - start_len) as u64,
+        threads,
+        per_thread,
     }
 }
 
-fn emit_stored(w: &mut BitWriter, raw: &[u8], final_bit: u32) {
-    let mut chunks: Vec<&[u8]> = raw.chunks(MAX_STORED).collect();
-    if chunks.is_empty() {
-        chunks.push(&[]);
+fn deflate_serial(
+    data: &[u8],
+    params: MatchParams,
+    nchunks: usize,
+    out: &mut Vec<u8>,
+) -> Vec<u64> {
+    let start_len = out.len();
+    let mut w = BitWriter::new();
+    let mut scratch = MatcherScratch::new();
+    let mut tokens: Vec<Token> = Vec::new();
+    for ci in 0..nchunks {
+        let (cs, ce) = chunk_range(data.len(), ci);
+        tokenize_chunk(data, cs, ce, params, &mut scratch, &mut tokens);
+        emit_block(&mut w, &tokens, &data[cs..ce], (ci == nchunks - 1) as u32);
+        w.drain_into(out);
     }
-    let n = chunks.len();
-    for (i, chunk) in chunks.iter().enumerate() {
-        let f = if i == n - 1 { final_bit } else { 0 };
-        w.write_bits(f, 1);
-        w.write_bits(0b00, 2); // stored
-        w.align_byte();
-        let len = chunk.len() as u16;
-        w.write_bits(len as u32, 16);
-        w.write_bits(!len as u32, 16);
-        for &b in *chunk {
-            w.write_bits(b as u32, 8);
-        }
-    }
+    w.finish_into(out);
+    vec![(out.len() - start_len) as u64]
 }
 
-fn emit_dynamic_header(w: &mut BitWriter, plan: &DynamicPlan) {
-    w.write_bits((plan.hlit - 257) as u32, 5);
-    w.write_bits((plan.hdist - 1) as u32, 5);
-    w.write_bits((plan.hclen - 4) as u32, 4);
-    for &ord in CLEN_ORDER.iter().take(plan.hclen) {
-        w.write_bits(plan.clen_len[ord] as u32, 3);
-    }
-    let clen_codes = canonical_codes(&plan.clen_len);
-    for &(s, extra) in &plan.rle {
-        w.write_code(clen_codes[s as usize], plan.clen_len[s as usize] as u32);
-        match s {
-            16 => w.write_bits(extra as u32, 2),
-            17 => w.write_bits(extra as u32, 3),
-            18 => w.write_bits(extra as u32, 7),
-            _ => {}
-        }
-    }
-}
+fn deflate_parallel(
+    data: &[u8],
+    params: MatchParams,
+    nchunks: usize,
+    threads: usize,
+    out: &mut Vec<u8>,
+) -> Vec<u64> {
+    use std::sync::mpsc::sync_channel;
 
-fn emit_tokens(w: &mut BitWriter, tokens: &[Token], lit_len: &[u8], dist_len: &[u8]) {
-    let lit_codes = canonical_codes(lit_len);
-    let dist_codes = canonical_codes(dist_len);
-    for t in tokens {
-        match *t {
-            Token::Literal(b) => {
-                w.write_code(lit_codes[b as usize], lit_len[b as usize] as u32)
-            }
-            Token::Match { len, dist } => {
-                let (lc, le, lv) = length_code(len);
-                w.write_code(lit_codes[257 + lc], lit_len[257 + lc] as u32);
-                if le > 0 {
-                    w.write_bits(lv as u32, le as u32);
+    let mut txs = Vec::with_capacity(threads);
+    let mut rxs = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        let (tx, rx) = sync_channel::<BitWriter>(CHANNEL_DEPTH);
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let mut per_thread = vec![0u64; threads];
+
+    std::thread::scope(|s| {
+        for (wi, tx) in txs.into_iter().enumerate() {
+            s.spawn(move || {
+                let mut scratch = MatcherScratch::new();
+                let mut tokens: Vec<Token> = Vec::new();
+                let mut ci = wi;
+                while ci < nchunks {
+                    let (cs, ce) = chunk_range(data.len(), ci);
+                    tokenize_chunk(data, cs, ce, params, &mut scratch, &mut tokens);
+                    let mut cw = BitWriter::new();
+                    emit_block(&mut cw, &tokens, &data[cs..ce], (ci == nchunks - 1) as u32);
+                    if tx.send(cw).is_err() {
+                        return; // stitcher gone (panic unwinding)
+                    }
+                    ci += threads;
                 }
-                let (dc, de, dv) = dist_code(dist);
-                w.write_code(dist_codes[dc], dist_len[dc] as u32);
-                if de > 0 {
-                    w.write_bits(dv as u32, de as u32);
-                }
-            }
+            });
         }
-    }
-    w.write_code(
-        lit_codes[END_OF_BLOCK],
-        lit_len[END_OF_BLOCK] as u32,
-    );
+        // Stitch chunks in order on the calling thread: chunk `ci` always
+        // arrives on channel `ci % threads` in submission order, so no
+        // reorder buffer is needed and the bounded channels cannot deadlock.
+        let mut w = BitWriter::new();
+        for ci in 0..nchunks {
+            let cw = rxs[ci % threads]
+                .recv()
+                .expect("deflate worker terminated early");
+            per_thread[ci % threads] += cw.bit_len().div_ceil(8) as u64;
+            w.append(&cw);
+            w.drain_into(out);
+        }
+        w.finish_into(out);
+    });
+    per_thread
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck::compressible_bytes;
+    use crate::util::rng::Pcg64;
 
     #[test]
-    fn length_code_boundaries() {
-        assert_eq!(length_code(3), (0, 0, 0));
-        assert_eq!(length_code(10), (7, 0, 0));
-        assert_eq!(length_code(11), (8, 1, 0));
-        assert_eq!(length_code(12), (8, 1, 1));
-        assert_eq!(length_code(257), (27, 5, 30));
-        assert_eq!(length_code(258), (28, 0, 0));
+    fn thread_resolution_clamps_to_chunks() {
+        assert_eq!(effective_threads(4, 2), 2);
+        assert_eq!(effective_threads(1, 10), 1);
+        assert!(effective_threads(0, 64) >= 1);
     }
 
     #[test]
-    fn dist_code_boundaries() {
-        assert_eq!(dist_code(1), (0, 0, 0));
-        assert_eq!(dist_code(4), (3, 0, 0));
-        assert_eq!(dist_code(5), (4, 1, 0));
-        assert_eq!(dist_code(6), (4, 1, 1));
-        assert_eq!(dist_code(24577), (29, 13, 0));
-        assert_eq!(dist_code(32768), (29, 13, 8191));
+    fn parallel_output_is_bit_identical_to_serial() {
+        let mut rng = Pcg64::seeded(104);
+        for n in [0usize, 1000, 200_000, 300_000] {
+            let data = compressible_bytes(&mut rng, n);
+            let serial = deflate(&data, CompressionLevel::Default);
+            for t in [2usize, 4, 8, 0] {
+                let mut out = Vec::new();
+                let stats = deflate_into(&data, CompressionLevel::Default, t, &mut out);
+                assert_eq!(out, serial, "n={n} threads={t}");
+                assert_eq!(stats.bytes_out as usize, out.len());
+            }
+        }
     }
 
     #[test]
-    fn rle_examples() {
-        // 5 zeros -> one 17 with extra 2 (5-3).
-        assert_eq!(rle_code_lengths(&[0, 0, 0, 0, 0]), vec![(17, 2)]);
-        // value run: v + 16-repeats.
+    fn stats_account_for_the_stream() {
+        let mut rng = Pcg64::seeded(105);
+        let data = compressible_bytes(&mut rng, 300_000);
+        let mut out = Vec::new();
+        let stats = deflate_into(&data, CompressionLevel::Fast, 4, &mut out);
+        assert_eq!(stats.chunks, 3);
+        assert_eq!(stats.threads, 3); // clamped to chunk count
+        assert_eq!(stats.bytes_in, 300_000);
+        assert_eq!(stats.per_thread.len(), stats.threads);
+        // Per-worker byte counts cover the stream up to the per-chunk
+        // rounding (each chunk's contribution is counted in whole bytes).
+        let accounted: u64 = stats.per_thread.iter().sum();
+        assert!(accounted >= stats.bytes_out && accounted <= stats.bytes_out + stats.chunks);
+    }
+
+    #[test]
+    fn appending_into_a_nonempty_buffer_preserves_the_prefix() {
+        let mut rng = Pcg64::seeded(106);
+        let data = compressible_bytes(&mut rng, 150_000);
+        let mut out = vec![0xAA, 0xBB];
+        let stats = deflate_into(&data, CompressionLevel::Default, 4, &mut out);
+        assert_eq!(&out[..2], &[0xAA, 0xBB]);
+        assert_eq!(stats.bytes_out as usize, out.len() - 2);
         assert_eq!(
-            rle_code_lengths(&[7, 7, 7, 7, 7]),
-            vec![(7, 0), (16, 1)] // 7 then repeat 4 times (3 + extra 1)
+            super::super::decoder::inflate(&out[2..]).unwrap(),
+            data
         );
-        // short runs stay literal.
-        assert_eq!(rle_code_lengths(&[3, 3]), vec![(3, 0), (3, 0)]);
-        // long zero run uses 18.
-        assert_eq!(rle_code_lengths(&[0; 140]), vec![(18, 127), (0, 0), (0, 0)]);
-    }
-
-    #[test]
-    fn fixed_tables_shape() {
-        let l = fixed_lit_lengths();
-        assert_eq!(l[0], 8);
-        assert_eq!(l[143], 8);
-        assert_eq!(l[144], 9);
-        assert_eq!(l[255], 9);
-        assert_eq!(l[256], 7);
-        assert_eq!(l[279], 7);
-        assert_eq!(l[280], 8);
-        assert_eq!(l[287], 8);
     }
 }

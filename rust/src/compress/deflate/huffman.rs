@@ -61,6 +61,41 @@ impl BitWriter {
     pub fn bit_len(&self) -> usize {
         self.bytes.len() * 8 + self.nbits as usize
     }
+
+    /// Splice another writer's bit stream onto this one at the current bit
+    /// offset (the parallel DEFLATE plane stitches per-chunk streams).
+    ///
+    /// Invariant relied on: a `BitWriter` never holds a full byte in `acc`
+    /// (`write_bits` drains eagerly), so `other.nbits < 8` and the tail
+    /// write below is a single partial byte.
+    pub fn append(&mut self, other: &BitWriter) {
+        if self.nbits == 0 {
+            // Byte-aligned: bulk copy, then adopt the partial byte.
+            self.bytes.extend_from_slice(&other.bytes);
+            self.acc = other.acc;
+            self.nbits = other.nbits;
+            return;
+        }
+        for &b in &other.bytes {
+            self.write_bits(b as u32, 8);
+        }
+        if other.nbits > 0 {
+            self.write_bits(other.acc as u32, other.nbits);
+        }
+    }
+
+    /// Move all completed bytes into `out`, keeping any partial byte
+    /// buffered (streaming output: callers drain after each block).
+    pub fn drain_into(&mut self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.bytes);
+        self.bytes.clear();
+    }
+
+    /// Flush the final partial byte and move everything into `out`.
+    pub fn finish_into(mut self, out: &mut Vec<u8>) {
+        self.align_byte();
+        out.append(&mut self.bytes);
+    }
 }
 
 /// LSB-first bit reader.
@@ -424,6 +459,50 @@ mod tests {
         assert_eq!(r.read_bits(1).unwrap(), 1);
         assert_eq!(r.read_bits(30).unwrap(), 0x3FFFFFFF);
         assert!(r.read_bits(8).is_err());
+    }
+
+    #[test]
+    fn append_matches_single_writer_at_any_split() {
+        let mut rng = Pcg64::seeded(95);
+        let items: Vec<(u32, u32)> = (0..200)
+            .map(|_| {
+                let n = 1 + rng.below(24) as u32;
+                (rng.below(1u64 << n) as u32, n)
+            })
+            .collect();
+        let mut reference = BitWriter::new();
+        for &(v, n) in &items {
+            reference.write_bits(v, n);
+        }
+        let expect = reference.finish();
+        for split in [0, 1, 37, 100, 199, 200] {
+            let (mut a, mut b) = (BitWriter::new(), BitWriter::new());
+            for &(v, n) in &items[..split] {
+                a.write_bits(v, n);
+            }
+            for &(v, n) in &items[split..] {
+                b.write_bits(v, n);
+            }
+            a.append(&b);
+            assert_eq!(a.finish(), expect, "split {split}");
+        }
+    }
+
+    #[test]
+    fn drain_into_preserves_the_stream() {
+        let mut w = BitWriter::new();
+        let mut out = Vec::new();
+        w.write_bits(0b10110, 5);
+        w.write_bits(0xF0F0, 16);
+        w.drain_into(&mut out); // partial byte stays buffered
+        assert_eq!(out.len(), 2);
+        w.write_bits(0b111, 3);
+        w.finish_into(&mut out);
+        let mut reference = BitWriter::new();
+        reference.write_bits(0b10110, 5);
+        reference.write_bits(0xF0F0, 16);
+        reference.write_bits(0b111, 3);
+        assert_eq!(out, reference.finish());
     }
 
     #[test]

@@ -54,17 +54,17 @@ impl MatchParams {
 
 /// Cap on hash-chain insertions per committed match (perf; long runs
 /// would otherwise insert hundreds of identical positions).
-const MAX_INSERTS: usize = 32;
+pub(super) const MAX_INSERTS: usize = 32;
 
 const HASH_BITS: u32 = 15;
-const HASH_SIZE: usize = 1 << HASH_BITS;
-const NIL: u32 = u32::MAX;
+pub(super) const HASH_SIZE: usize = 1 << HASH_BITS;
+pub(super) const NIL: u32 = u32::MAX;
 
 /// Length of the common prefix of `data[a..]` and `data[b..]`, capped at
 /// `max_len`. Compares 8 bytes at a time (perf: this is the hottest loop
 /// of the DEFLATE encoder — see EXPERIMENTS.md §Perf).
 #[inline]
-fn match_len(data: &[u8], a: usize, b: usize, max_len: usize) -> usize {
+pub(super) fn match_len(data: &[u8], a: usize, b: usize, max_len: usize) -> usize {
     let mut l = 0usize;
     while l + 8 <= max_len && b + l + 8 <= data.len() {
         let x = u64::from_le_bytes(data[a + l..a + l + 8].try_into().unwrap());
@@ -82,7 +82,7 @@ fn match_len(data: &[u8], a: usize, b: usize, max_len: usize) -> usize {
 }
 
 #[inline]
-fn hash3(data: &[u8], i: usize) -> usize {
+pub(super) fn hash3(data: &[u8], i: usize) -> usize {
     // Multiplicative hash of 3 bytes.
     let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
     ((v.wrapping_mul(0x9E37_79B1)) >> (32 - HASH_BITS)) as usize

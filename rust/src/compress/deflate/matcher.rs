@@ -1,0 +1,321 @@
+//! Chunked LZ77 match finder for the parallel DEFLATE plane.
+//!
+//! The input is cut at fixed [`CHUNK_SIZE`] boundaries — a function of the
+//! input length only, never of the thread count — and each chunk is
+//! tokenized independently with up to `WINDOW_SIZE` bytes of preceding
+//! input pre-inserted into the hash chains as a dictionary. Match lengths
+//! are capped at the chunk end, so one chunk maps to exactly one DEFLATE
+//! block and the concatenated blocks form a single valid stream whose
+//! bytes are identical at every thread count (`tests/deflate_parallel.rs`
+//! pins this at 1/4/8 threads).
+//!
+//! Dictionary carry-in keeps the candidate set of every chunk position
+//! complete: any in-window back-reference target for a position `p` in the
+//! chunk satisfies `p - dist >= chunk_start - WINDOW_SIZE`, which is
+//! exactly the range walked by [`MatcherScratch::reset`]'s insert-only
+//! pre-pass, so cutting the input into chunks costs no reachable matches —
+//! only matches that would have *spanned* a chunk boundary are shortened.
+
+use super::lz77::{
+    hash3, match_len, MatchParams, Token, HASH_SIZE, MAX_INSERTS, MAX_MATCH, MIN_MATCH, NIL,
+    WINDOW_SIZE,
+};
+
+/// Uncompressed bytes per chunk (= one DEFLATE block). Matches the serial
+/// encoder's historical block span so single-chunk inputs are unchanged.
+pub const CHUNK_SIZE: usize = 128 * 1024;
+
+/// Number of fixed-size chunks covering `n` input bytes. At least one, so
+/// the empty input still emits a (final) block.
+pub fn chunk_count(n: usize) -> usize {
+    n.div_ceil(CHUNK_SIZE).max(1)
+}
+
+/// Half-open input range of chunk `ci`.
+pub fn chunk_range(n: usize, ci: usize) -> (usize, usize) {
+    let start = ci * CHUNK_SIZE;
+    (start.min(n), (start + CHUNK_SIZE).min(n))
+}
+
+/// Reusable hash-chain state. One per worker; `reset` re-primes it for the
+/// next chunk without reallocating (the chunk loop stays allocation-free).
+pub struct MatcherScratch {
+    /// `head[h]` = most recent absolute position with hash `h`, or NIL.
+    head: Vec<u32>,
+    /// `prev[p - dict_start]` = previous position in `p`'s chain, or NIL.
+    prev: Vec<u32>,
+}
+
+impl Default for MatcherScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MatcherScratch {
+    // analyze: allow(hotpath): one-time scratch construction, reused across every chunk a worker owns
+    pub fn new() -> Self {
+        MatcherScratch {
+            head: vec![NIL; HASH_SIZE],
+            prev: Vec::new(),
+        }
+    }
+
+    /// Clear the chains and size `prev` for `span` positions.
+    fn reset(&mut self, span: usize) {
+        self.head.fill(NIL);
+        self.prev.clear();
+        self.prev.resize(span, NIL);
+    }
+}
+
+#[inline]
+fn insert(data: &[u8], pos: usize, dict_start: usize, head: &mut [u32], prev: &mut [u32]) {
+    if pos + MIN_MATCH <= data.len() {
+        let h = hash3(data, pos);
+        prev[pos - dict_start] = head[h];
+        head[h] = pos as u32;
+    }
+}
+
+#[inline]
+fn find_match(
+    data: &[u8],
+    pos: usize,
+    dict_start: usize,
+    end: usize,
+    head: &[u32],
+    prev: &[u32],
+    params: &MatchParams,
+) -> (usize, usize) {
+    if pos + MIN_MATCH > data.len() {
+        return (0, 0);
+    }
+    // Cap at the chunk end: a match may *reference* the dictionary but may
+    // not cover bytes past the chunk, so one chunk stays one block.
+    let max_len = MAX_MATCH.min(end - pos);
+    let mut best_len = MIN_MATCH - 1;
+    let mut best_dist = 0usize;
+    let mut cand = head[hash3(data, pos)];
+    let min_pos = pos.saturating_sub(WINDOW_SIZE);
+    let mut chain = params.max_chain;
+    while cand != NIL && (cand as usize) >= min_pos && chain > 0 {
+        let c = cand as usize;
+        if c >= pos {
+            break;
+        }
+        // Quick reject: check the byte past the current best.
+        if best_len < max_len && data[c + best_len] == data[pos + best_len] {
+            let l = match_len(data, c, pos, max_len);
+            if l > best_len {
+                best_len = l;
+                best_dist = pos - c;
+                if l >= params.good_len {
+                    break;
+                }
+            }
+        }
+        cand = prev[c - dict_start];
+        chain -= 1;
+    }
+    if best_len >= MIN_MATCH {
+        (best_len, best_dist)
+    } else {
+        (0, 0)
+    }
+}
+
+/// Tokenize `data[start..end]` into `tokens` (cleared first), with
+/// `data[max(0, start - WINDOW_SIZE)..start]` as the back-reference
+/// dictionary. Same greedy/lazy discipline as `lz77::tokenize`, plus the
+/// chunk-end match cap.
+pub fn tokenize_chunk(
+    data: &[u8],
+    start: usize,
+    end: usize,
+    params: MatchParams,
+    scratch: &mut MatcherScratch,
+    tokens: &mut Vec<Token>,
+) {
+    tokens.clear();
+    if start >= end {
+        return;
+    }
+    let dict_start = start.saturating_sub(WINDOW_SIZE);
+    if end - dict_start < MIN_MATCH + 1 {
+        tokens.extend(data[start..end].iter().map(|&b| Token::Literal(b)));
+        return;
+    }
+    scratch.reset(end - dict_start);
+    let head = &mut scratch.head;
+    let prev = &mut scratch.prev;
+
+    // Insert-only walk over the dictionary: every window-reachable
+    // predecessor of every chunk position lands in the chains.
+    for p in dict_start..start {
+        insert(data, p, dict_start, head, prev);
+    }
+
+    let mut i = start;
+    while i < end {
+        let (len, dist) = find_match(data, i, dict_start, end, head, prev, &params);
+        if len == 0 {
+            insert(data, i, dict_start, head, prev);
+            tokens.push(Token::Literal(data[i]));
+            i += 1;
+            continue;
+        }
+
+        // Lazy matching: if the match starting at i+1 is strictly longer,
+        // emit data[i] as a literal and defer.
+        if params.lazy && len < params.good_len && i + 1 < end {
+            insert(data, i, dict_start, head, prev);
+            let (len2, _d2) = find_match(data, i + 1, dict_start, end, head, prev, &params);
+            if len2 > len {
+                tokens.push(Token::Literal(data[i]));
+                i += 1;
+                continue;
+            }
+            tokens.push(Token::Match {
+                len: len as u16,
+                dist: dist as u16,
+            });
+            // Perf: cap chain insertions per committed match, as in
+            // `lz77::tokenize` (long runs would insert hundreds of
+            // identical positions).
+            let ins_end = (i + len).min(i + 1 + MAX_INSERTS);
+            for p in i + 1..ins_end {
+                insert(data, p, dict_start, head, prev);
+            }
+            i += len;
+        } else {
+            tokens.push(Token::Match {
+                len: len as u16,
+                dist: dist as u16,
+            });
+            let ins_end = (i + len).min(i + MAX_INSERTS);
+            for p in i..ins_end {
+                insert(data, p, dict_start, head, prev);
+            }
+            i += len;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::compressible_bytes;
+    use crate::util::rng::Pcg64;
+
+    fn expand_from(data: &[u8], start: usize, tokens: &[Token]) -> Vec<u8> {
+        // Expand chunk tokens against the real preceding bytes (matches may
+        // reference the dictionary region before `start`).
+        let mut out = data[..start].to_vec();
+        for t in tokens {
+            match *t {
+                Token::Literal(b) => out.push(b),
+                Token::Match { len, dist } => {
+                    let s = out.len() - dist as usize;
+                    for k in 0..len as usize {
+                        let b = out[s + k];
+                        out.push(b);
+                    }
+                }
+            }
+        }
+        out.split_off(start)
+    }
+
+    #[test]
+    fn chunk_bounds_cover_the_input_exactly() {
+        for n in [0usize, 1, CHUNK_SIZE - 1, CHUNK_SIZE, CHUNK_SIZE + 1, 3 * CHUNK_SIZE + 17] {
+            let k = chunk_count(n);
+            let mut covered = 0usize;
+            for ci in 0..k {
+                let (s, e) = chunk_range(n, ci);
+                assert_eq!(s, covered, "n={n} ci={ci}");
+                covered = e;
+            }
+            assert_eq!(covered, n);
+            assert!(k >= 1);
+        }
+    }
+
+    #[test]
+    fn single_chunk_matches_serial_tokenizer() {
+        let mut rng = Pcg64::seeded(101);
+        let data = compressible_bytes(&mut rng, 50_000);
+        for params in [
+            MatchParams::fast(),
+            MatchParams::default_level(),
+            MatchParams::best(),
+        ] {
+            let serial = super::super::lz77::tokenize(&data, params);
+            let mut scratch = MatcherScratch::new();
+            let mut toks = Vec::new();
+            tokenize_chunk(&data, 0, data.len(), params, &mut scratch, &mut toks);
+            assert_eq!(toks, serial);
+        }
+    }
+
+    #[test]
+    fn chunk_tokens_expand_to_the_chunk_bytes() {
+        let mut rng = Pcg64::seeded(102);
+        let data = compressible_bytes(&mut rng, 3 * CHUNK_SIZE + 4321);
+        let mut scratch = MatcherScratch::new();
+        let mut toks = Vec::new();
+        for ci in 0..chunk_count(data.len()) {
+            let (s, e) = chunk_range(data.len(), ci);
+            tokenize_chunk(&data, s, e, MatchParams::default_level(), &mut scratch, &mut toks);
+            assert_eq!(expand_from(&data, s, &toks), data[s..e].to_vec(), "chunk {ci}");
+            // One chunk = one block: no match may cover bytes past `e`.
+            let mut pos = s;
+            for t in &toks {
+                pos += match *t {
+                    Token::Literal(_) => 1,
+                    Token::Match { len, .. } => len as usize,
+                };
+            }
+            assert_eq!(pos, e);
+        }
+    }
+
+    #[test]
+    fn dictionary_carry_in_finds_cross_chunk_matches() {
+        // A motif planted just before the chunk boundary must be reachable
+        // as a back-reference from inside the next chunk.
+        let motif = b"abcdefghijklmnopqrstuvwxyz012345";
+        let mut data = vec![0u8; CHUNK_SIZE + 200];
+        data[CHUNK_SIZE - 32..CHUNK_SIZE].copy_from_slice(motif);
+        data[CHUNK_SIZE + 100..CHUNK_SIZE + 132].copy_from_slice(motif);
+        let mut scratch = MatcherScratch::new();
+        let mut toks = Vec::new();
+        let (s, e) = chunk_range(data.len(), 1);
+        tokenize_chunk(&data, s, e, MatchParams::default_level(), &mut scratch, &mut toks);
+        let crosses = toks.iter().any(|t| match *t {
+            Token::Match { dist, .. } => (dist as usize) > 100,
+            _ => false,
+        });
+        assert!(crosses, "expected a back-reference into the dictionary: {toks:?}");
+        assert_eq!(expand_from(&data, s, &toks), data[s..e].to_vec());
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_chunks() {
+        // Tokenizing chunk B after chunk A must equal tokenizing B fresh.
+        let mut rng = Pcg64::seeded(103);
+        let data = compressible_bytes(&mut rng, 2 * CHUNK_SIZE);
+        let p = MatchParams::default_level();
+        let (s, e) = chunk_range(data.len(), 1);
+        let mut reused = MatcherScratch::new();
+        let mut toks_a = Vec::new();
+        tokenize_chunk(&data, 0, CHUNK_SIZE, p, &mut reused, &mut toks_a);
+        let mut toks_reused = Vec::new();
+        tokenize_chunk(&data, s, e, p, &mut reused, &mut toks_reused);
+        let mut fresh = MatcherScratch::new();
+        let mut toks_fresh = Vec::new();
+        tokenize_chunk(&data, s, e, p, &mut fresh, &mut toks_fresh);
+        assert_eq!(toks_reused, toks_fresh);
+    }
+}

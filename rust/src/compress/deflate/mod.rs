@@ -9,22 +9,30 @@
 //! offline for runtime use, this module implements the format:
 //!
 //! * [`lz77`] — hash-chain match finder (32 KiB window, lazy matching),
+//! * [`matcher`] — chunked match finder for the parallel plane: fixed
+//!   128 KiB chunks with a 32 KiB dictionary carry-in, one chunk = one
+//!   block, bytes identical at every thread count,
 //! * [`huffman`] — canonical code construction (length-limited) + decode
-//!   tables,
-//! * [`encoder`] — block emitter choosing stored / fixed / dynamic per
-//!   block by exact cost,
+//!   tables, bit-level stream stitching (`BitWriter::append`),
+//! * [`block`] — per-block writer choosing stored / fixed / dynamic by
+//!   exact cost,
+//! * [`encoder`] — orchestration: serial loop or scoped worker threads
+//!   with static chunk striping and bounded per-worker channels
+//!   (`deflate_into` streams completed bytes into the caller's buffer),
 //! * [`decoder`] — a full inflate (stored, fixed and dynamic blocks).
 //!
 //! `flate2` (vendored for the `xla` crate) is used **in tests only** to
 //! cross-validate both directions of our implementation against zlib.
 
+pub mod block;
 pub mod decoder;
 pub mod encoder;
 pub mod huffman;
 pub mod lz77;
+pub mod matcher;
 
 pub use decoder::inflate;
-pub use encoder::{deflate, CompressionLevel};
+pub use encoder::{deflate, deflate_into, CompressionLevel, DeflateStats};
 
 /// Convenience: compress with the default level.
 pub fn compress(data: &[u8]) -> Vec<u8> {

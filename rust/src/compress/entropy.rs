@@ -43,10 +43,19 @@ pub fn multiscale_entropy(data: &[u8]) -> Vec<(usize, f64)> {
         .collect()
 }
 
+/// Probe cap for [`accumulated_compression_curve`]: each point compresses
+/// at most this many bytes (at `Fast` level) and reports the sample's
+/// ratio for the whole prefix. Keeps entropy probing off the round budget
+/// — the allocator consults this curve every plan, and a full
+/// `Default`-level pass over the probe window was a second complete
+/// compression per round.
+const PROBE_CAP: usize = 64 * 1024;
+
 /// Accumulated compression-ratio curve: for growing prefixes of `data`,
 /// `ratio(i) = prefix_len / deflate(prefix).len()`. Returns
 /// `(prefix_len, ratio)` pairs at `points` log-spaced sizes — the paper's
-/// Fig. 5 right panel.
+/// Fig. 5 right panel. Prefixes beyond [`PROBE_CAP`] are sampled: the
+/// ratio of the first `PROBE_CAP` bytes stands in for the full prefix.
 pub fn accumulated_compression_curve(data: &[u8], points: usize) -> Vec<(usize, f64)> {
     let mut out = Vec::with_capacity(points);
     if data.is_empty() || points == 0 {
@@ -59,8 +68,12 @@ pub fn accumulated_compression_curve(data: &[u8], points: usize) -> Vec<(usize, 
             * ((data.len() as f64 / min_len as f64).powf(t)))
         .round() as usize;
         let len = len.clamp(1, data.len());
-        let compressed = deflate::compress(&data[..len]).len().max(1);
-        out.push((len, len as f64 / compressed as f64));
+        let probe = len.min(PROBE_CAP);
+        let compressed =
+            deflate::deflate(&data[..probe], deflate::CompressionLevel::Fast)
+                .len()
+                .max(1);
+        out.push((len, probe as f64 / compressed as f64));
     }
     out
 }
@@ -139,6 +152,15 @@ mod tests {
         assert_eq!(curve.last().unwrap().0, 20_000);
         // Compressible data: final ratio is substantially > 1.
         assert!(curve.last().unwrap().1 > 2.0);
+    }
+
+    #[test]
+    fn probe_cap_extrapolates_long_prefixes() {
+        let data = vec![9u8; PROBE_CAP * 2];
+        let curve = accumulated_compression_curve(&data, 4);
+        assert_eq!(curve.last().unwrap().0, PROBE_CAP * 2);
+        // The capped sample still reports the (very high) run ratio.
+        assert!(curve.last().unwrap().1 > 10.0);
     }
 
     #[test]

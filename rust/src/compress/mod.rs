@@ -27,10 +27,18 @@
 //!   │   bit-pack     s bits per code       (64-bit word-at-a-time;    │
 //!   │                                       skipped at 32 bits)       │
 //!   │   DEFLATE      lossless (§4)         (kept only if smaller)     │
+//!   │                │  pipelined plane: 128 KiB chunks fan out to    │
+//!   │                │  N match-finder workers, one block per chunk,  │
+//!   │                │  bit-stitched in order — bytes identical at    │
+//!   │                │  ANY thread count (`--deflate-threads`, 0 =    │
+//!   │                │  auto; `--deflate-level fast|default|best`)    │
 //!   └─────────────────────────────────────────────────────────────────┘
 //!                         │
 //!                         ▼
 //!        EncodedTensor ──wire::serialize──► CSG2 frame (44 B header)
+//!          (or fused: `encode_wire_with` streams compressed chunks
+//!           straight into the frame buffer behind the header, so
+//!           serialization overlaps compression)
 //!                         │
 //!                         ├──▶ fl::NetworkLedger   (bytes moved)
 //!                         └──▶ sim::FleetSim       (bytes ÷ device
@@ -44,6 +52,13 @@
 //! two meters: the byte-exact [`crate::fl::NetworkLedger`], and — when
 //! the systems simulator is on — the virtual clock of [`crate::sim`],
 //! which turns compression ratios into time-to-accuracy speedups.
+//!
+//! The *measured* size also feeds back: the server folds each accepted
+//! frame's as-traveled bytes (header + post-DEFLATE payload) into its
+//! round observations, and the [`allocator`]'s bit controller learns a
+//! per-layer cost scale (EWMA) from them, so adaptive water-filling
+//! budgets against what segments actually cost after lossless
+//! compression instead of the analytic pre-DEFLATE estimate.
 //!
 //! ## Fast kernels ([`kernel`])
 //!
@@ -68,8 +83,10 @@
 //! Two properties of this stack are linted by the in-tree analyzer
 //! ([`crate::analyze`], CI-gated) rather than trusted to review:
 //! *hot-path purity* — no transcendentals and no `.clone()`/`.to_vec()`
-//! in [`kernel`]/[`bitpack`] outside explicitly waived reference paths
-//! (the LUT/threshold builders and the `acos` ground truth) — and *wire
+//! in [`kernel`]/[`bitpack`] or the DEFLATE per-chunk loops
+//! (`deflate/matcher.rs`, `deflate/block.rs`) outside explicitly waived
+//! reference paths (the LUT/threshold builders, the `acos` ground truth,
+//! one-time scratch construction) — and *wire
 //! invariants* — [`wire`] is the single definition site of
 //! `HEADER_BYTES` and the `CSG2` magic, its header layout doc table must
 //! sum to `HEADER_BYTES`, and no other module may hardcode either.

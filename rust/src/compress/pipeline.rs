@@ -80,6 +80,9 @@ pub struct Pipeline {
     /// Apply DEFLATE to the packed payload (§4).
     pub deflate: bool,
     pub level: CompressionLevel,
+    /// Worker threads for the DEFLATE stage (0 = auto, 1 = serial).
+    /// Scheduling only — output bytes are identical at every value.
+    pub deflate_threads: usize,
 }
 
 impl Pipeline {
@@ -92,6 +95,7 @@ impl Pipeline {
             error_feedback: false,
             deflate: true,
             level: CompressionLevel::Default,
+            deflate_threads: 1,
         }
     }
 
@@ -154,6 +158,20 @@ impl Pipeline {
 
     pub fn without_deflate(mut self) -> Pipeline {
         self.deflate = false;
+        self
+    }
+
+    /// Set the DEFLATE compression level (`--deflate-level`).
+    pub fn with_deflate_level(mut self, level: CompressionLevel) -> Pipeline {
+        self.level = level;
+        self
+    }
+
+    /// Set the DEFLATE worker thread count (`--deflate-threads`, 0 =
+    /// auto). Output bytes are identical at every value; only wall-clock
+    /// changes.
+    pub fn with_deflate_threads(mut self, threads: usize) -> Pipeline {
+        self.deflate_threads = threads;
         self
     }
 
@@ -241,6 +259,84 @@ impl Pipeline {
         rng: &mut Pcg64,
         scratch: &mut EncodeScratch,
     ) -> EncodedTensor {
+        let staged = self.run_stages(values, state, rng, scratch);
+
+        // --- deflate -------------------------------------------------------
+        let (payload, deflated) = if self.deflate {
+            scratch.deflated.clear();
+            let stats = deflate::deflate_into(
+                &scratch.packed,
+                self.level,
+                self.deflate_threads,
+                &mut scratch.deflated,
+            );
+            let helped = scratch.deflated.len() < scratch.packed.len();
+            scratch.last_deflate = Some(stats);
+            if helped {
+                (std::mem::take(&mut scratch.deflated), true)
+            } else {
+                (std::mem::take(&mut scratch.packed), false)
+            }
+        } else {
+            scratch.last_deflate = None;
+            (std::mem::take(&mut scratch.packed), false)
+        };
+        staged.into_tensor(self, direction, deflated, payload)
+    }
+
+    /// [`Pipeline::encode_with`] fused with wire serialization: the frame
+    /// header lands in `out` first and the DEFLATE stage then streams its
+    /// compressed bytes straight into `out` behind it — serialization
+    /// overlaps compression, with no intermediate payload `Vec`. Returns
+    /// the frame metadata with an **empty** `payload`; the bytes live in
+    /// `out` and parse back via [`super::wire::deserialize`]. The appended
+    /// bytes are identical to `serialize(&encode_with(..))` at every
+    /// thread count.
+    pub fn encode_wire_with(
+        &self,
+        values: &[f32],
+        direction: Direction,
+        state: &mut PipelineState,
+        rng: &mut Pcg64,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<u8>,
+    ) -> EncodedTensor {
+        let staged = self.run_stages(values, state, rng, scratch);
+        let mut enc = staged.into_tensor(self, direction, false, Vec::new());
+        let deflated = super::wire::serialize_with(&enc, out, |buf| {
+            if self.deflate {
+                let base = buf.len();
+                let stats = deflate::deflate_into(
+                    &scratch.packed,
+                    self.level,
+                    self.deflate_threads,
+                    buf,
+                );
+                scratch.last_deflate = Some(stats);
+                if buf.len() - base < scratch.packed.len() {
+                    return true;
+                }
+                // DEFLATE didn't help: fall back to the packed bytes.
+                buf.truncate(base);
+            } else {
+                scratch.last_deflate = None;
+            }
+            buf.extend_from_slice(&scratch.packed);
+            false
+        });
+        enc.deflated = deflated;
+        enc
+    }
+
+    /// The shared stage chain (EF fold → sparsify → rotate → quantize →
+    /// pack), leaving the packed payload in `scratch.packed`.
+    fn run_stages(
+        &self,
+        values: &[f32],
+        state: &mut PipelineState,
+        rng: &mut Pcg64,
+        scratch: &mut EncodeScratch,
+    ) -> StagedFrame {
         let n = values.len();
 
         // --- error-feedback fold ------------------------------------------
@@ -342,30 +438,14 @@ impl Pipeline {
             }
         }
 
-        // --- deflate -------------------------------------------------------
-        let (payload, deflated) = if self.deflate {
-            let c = deflate::deflate(&scratch.packed, self.level);
-            if c.len() < scratch.packed.len() {
-                (c, true)
-            } else {
-                (std::mem::take(&mut scratch.packed), false)
-            }
-        } else {
-            (std::mem::take(&mut scratch.packed), false)
-        };
-        EncodedTensor {
-            direction,
-            kind_id: self.quantizer.id(),
+        StagedFrame {
             bits,
             n: n as u32,
             kept: kept_n as u32,
             mask_seed,
             rot_seed,
-            rotated: self.rotate,
             norm,
             bound,
-            deflated,
-            payload,
         }
     }
 
@@ -381,6 +461,44 @@ impl Pipeline {
             hadamard::padded_len(kept.max(1))
         } else {
             kept
+        }
+    }
+}
+
+/// Everything [`Pipeline::run_stages`] learned about a frame except the
+/// payload bytes (those stay in the scratch arena until the caller
+/// decides where they go: an owned `payload` Vec or the wire buffer).
+struct StagedFrame {
+    bits: u8,
+    n: u32,
+    kept: u32,
+    mask_seed: u64,
+    rot_seed: u64,
+    norm: f32,
+    bound: f32,
+}
+
+impl StagedFrame {
+    fn into_tensor(
+        self,
+        pipe: &Pipeline,
+        direction: Direction,
+        deflated: bool,
+        payload: Vec<u8>,
+    ) -> EncodedTensor {
+        EncodedTensor {
+            direction,
+            kind_id: pipe.quantizer.id(),
+            bits: self.bits,
+            n: self.n,
+            kept: self.kept,
+            mask_seed: self.mask_seed,
+            rot_seed: self.rot_seed,
+            rotated: pipe.rotate,
+            norm: self.norm,
+            bound: self.bound,
+            deflated,
+            payload,
         }
     }
 }
@@ -625,6 +743,11 @@ pub struct EncodeScratch {
     codes: Vec<u16>,
     /// Bit-packed payload bytes (donated to the frame each round).
     packed: Vec<u8>,
+    /// DEFLATE output staging (donated when compression helps).
+    deflated: Vec<u8>,
+    /// Telemetry from the most recent DEFLATE stage (`None` when the
+    /// stage was skipped — deflate off, or decode-only use).
+    last_deflate: Option<deflate::DeflateStats>,
     /// EF reconstruction of the stage values.
     rec: Vec<f32>,
     /// EF reconstruction after un-rotation.
@@ -636,6 +759,13 @@ pub struct EncodeScratch {
 impl EncodeScratch {
     pub fn new() -> EncodeScratch {
         Self::default()
+    }
+
+    /// Telemetry from the most recent encode's DEFLATE stage (chunk count,
+    /// bytes in/out, per-worker contributions), or `None` if that encode
+    /// skipped compression. Feeds the round metrics in `fl::runner`.
+    pub fn deflate_stats(&self) -> Option<&deflate::DeflateStats> {
+        self.last_deflate.as_ref()
     }
 }
 

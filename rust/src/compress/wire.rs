@@ -54,11 +54,19 @@ pub fn serialize(enc: &EncodedTensor) -> Vec<u8> {
 /// Append one frame's wire bytes to `out` (no intermediate allocation —
 /// the segment-stream encode path appends straight into one buffer).
 pub fn serialize_into(enc: &EncodedTensor, out: &mut Vec<u8>) {
+    write_header(enc, enc.deflated, enc.payload.len() as u32, out);
+    out.extend_from_slice(&enc.payload);
+}
+
+/// Append the 44-byte header for `enc`, with the deflated flag and
+/// payload length supplied by the caller (the streaming path knows them
+/// only after the payload lands).
+fn write_header(enc: &EncodedTensor, deflated: bool, payload_len: u32, out: &mut Vec<u8>) {
     out.extend_from_slice(&MAGIC);
     out.push(enc.kind_id);
     out.push(enc.bits);
     let mut flags = 0u8;
-    if enc.deflated {
+    if deflated {
         flags |= FLAG_DEFLATED;
     }
     if enc.rotated {
@@ -72,8 +80,40 @@ pub fn serialize_into(enc: &EncodedTensor, out: &mut Vec<u8>) {
     out.extend_from_slice(&enc.rot_seed.to_le_bytes());
     out.extend_from_slice(&enc.norm.to_le_bytes());
     out.extend_from_slice(&enc.bound.to_le_bytes());
-    out.extend_from_slice(&(enc.payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&enc.payload);
+    out.extend_from_slice(&payload_len.to_le_bytes());
+}
+
+/// Streaming serialization: append the header to `out`, let
+/// `write_payload` append the payload bytes directly behind it (e.g. a
+/// DEFLATE stage compressing straight into the wire buffer), then patch
+/// `payload_len` and the deflated flag to match what actually landed.
+/// The callback returns whether the bytes it wrote are DEFLATE-compressed;
+/// that bool is recorded in the flags byte and returned. `enc.payload`
+/// and `enc.deflated` are ignored — the callback is the payload source.
+/// The appended bytes are identical to [`serialize_into`] on a tensor
+/// carrying the same `(payload, deflated)` pair.
+pub fn serialize_with<F>(enc: &EncodedTensor, out: &mut Vec<u8>, write_payload: F) -> bool
+where
+    F: FnOnce(&mut Vec<u8>) -> bool,
+{
+    let header_at = out.len();
+    write_header(enc, false, 0, out);
+    let payload_at = out.len();
+    let deflated = write_payload(out);
+    let payload_len = (out.len() - payload_at) as u32;
+    // Patch bytes this function just appended (output-side, never
+    // input-driven); `get_mut` keeps the module free of panicking
+    // indexing, and both lookups always succeed.
+    // `payload_len` is the last header field: bytes HEADER_BYTES-4..HEADER_BYTES.
+    if let Some(slot) = out.get_mut(header_at + HEADER_BYTES - 4..header_at + HEADER_BYTES) {
+        slot.copy_from_slice(&payload_len.to_le_bytes());
+    }
+    if deflated {
+        if let Some(flags) = out.get_mut(header_at + 6) {
+            *flags |= FLAG_DEFLATED;
+        }
+    }
+    deflated
 }
 
 /// Serialize a *stream* of encoded tensors: the segments of one logical
@@ -238,6 +278,33 @@ mod tests {
         let bytes = serialize(&enc);
         assert_eq!(bytes.len(), HEADER_BYTES + 5);
         assert_eq!(deserialize(&bytes).unwrap(), enc);
+    }
+
+    #[test]
+    fn serialize_with_matches_serialize() {
+        let enc = sample();
+        let direct = serialize(&enc);
+        // The streaming path gets metadata only (empty payload, flag off).
+        let mut meta = enc.clone();
+        meta.payload = Vec::new();
+        meta.deflated = false;
+        let mut out = vec![0xEE]; // pre-existing bytes must survive
+        let deflated = serialize_with(&meta, &mut out, |buf| {
+            buf.extend_from_slice(&enc.payload);
+            true
+        });
+        assert!(deflated);
+        assert_eq!(out[0], 0xEE);
+        assert_eq!(&out[1..], &direct[..]);
+        // A callback reporting "not deflated" leaves the flag clear.
+        let mut out2 = Vec::new();
+        assert!(!serialize_with(&meta, &mut out2, |buf| {
+            buf.extend_from_slice(&enc.payload);
+            false
+        }));
+        let back = deserialize(&out2).unwrap();
+        assert!(!back.deflated);
+        assert_eq!(back.payload, enc.payload);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 use anyhow::{bail, Result};
 
 use crate::compress::allocator::BitSchedule;
+use crate::compress::deflate::CompressionLevel;
 use crate::compress::Pipeline;
 use crate::sim::SimConfig;
 use crate::util::json::Json;
@@ -91,6 +92,17 @@ pub struct FlConfig {
     /// lane, EF residual and scratch, and updates are aggregated in
     /// selection order regardless of completion order.
     pub client_threads: usize,
+    /// DEFLATE effort for both pipelines (`--deflate-level
+    /// fast|default|best`). Applied to `uplink` / `downlink` when the
+    /// runner builds its pipelines, and recorded per round in the
+    /// history. Level changes the bytes (better matches), never the
+    /// validity of the stream.
+    pub deflate_level: CompressionLevel,
+    /// Worker threads for the DEFLATE stage of both pipelines
+    /// (`--deflate-threads N`, 0 = auto, 1 = serial). Scheduling only:
+    /// compressed bytes are identical at every value
+    /// ([`crate::compress::deflate::deflate_into`]).
+    pub deflate_threads: usize,
     /// Ingest-plane shards for the server's fused dequantize+accumulate
     /// fold (`--ingest-shards N`). `1` (default) folds inline on the
     /// coordinator; `0` means one per available core. Results are
@@ -148,6 +160,8 @@ impl FlConfig {
             eval_every: 5,
             use_kernel_quantizer: false,
             client_threads: 1,
+            deflate_level: CompressionLevel::Default,
+            deflate_threads: 1,
             ingest_shards: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
@@ -178,6 +192,8 @@ impl FlConfig {
             eval_every: 20,
             use_kernel_quantizer: false,
             client_threads: 1,
+            deflate_level: CompressionLevel::Default,
+            deflate_threads: 1,
             ingest_shards: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
@@ -219,6 +235,8 @@ impl FlConfig {
             eval_every: 5,
             use_kernel_quantizer: false,
             client_threads: 1,
+            deflate_level: CompressionLevel::Default,
+            deflate_threads: 1,
             ingest_shards: 1,
             sim: None,
             round_mode: RoundMode::Synchronous,
@@ -281,6 +299,21 @@ impl FlConfig {
         self
     }
 
+    /// Select the DEFLATE effort for both pipelines
+    /// (`--deflate-level fast|default|best`).
+    pub fn with_deflate_level(mut self, level: CompressionLevel) -> Self {
+        self.deflate_level = level;
+        self
+    }
+
+    /// Run the DEFLATE stage of both pipelines on `threads` workers
+    /// (`--deflate-threads`: `0` = one per available core, `1` = serial).
+    /// Compressed bytes are identical at any value.
+    pub fn with_deflate_threads(mut self, threads: usize) -> Self {
+        self.deflate_threads = threads;
+        self
+    }
+
     /// Shard the server's ingest fold across `shards` workers
     /// (`--ingest-shards`: `0` = one per available core, `1` = inline
     /// serial fold). Bit-identical results at any value.
@@ -321,6 +354,41 @@ impl FlConfig {
         }
     }
 
+    /// Resolve [`Self::deflate_threads`] (`0` → available parallelism).
+    /// The per-call [`crate::compress::deflate::deflate_into`] clamp to
+    /// the chunk count still applies on top.
+    pub fn effective_deflate_threads(&self) -> usize {
+        match self.deflate_threads {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            t => t,
+        }
+    }
+
+    /// Both experiment pipelines with this config's DEFLATE level and
+    /// thread count applied — what the runner actually encodes with.
+    /// Width reconfiguration ([`Pipeline::with_bits`]) clones, so the
+    /// settings survive adaptive per-layer rebuilds.
+    pub fn tuned_uplink(&self) -> Pipeline {
+        self.uplink
+            .clone()
+            .with_deflate_level(self.deflate_level)
+            .with_deflate_threads(self.deflate_threads)
+    }
+
+    /// [`Self::tuned_uplink`], for the downlink policy.
+    pub fn tuned_downlink(&self) -> Downlink {
+        match &self.downlink {
+            Downlink::Float32Model => Downlink::Float32Model,
+            Downlink::Delta(p) => Downlink::Delta(
+                p.clone()
+                    .with_deflate_level(self.deflate_level)
+                    .with_deflate_threads(self.deflate_threads),
+            ),
+        }
+    }
+
     /// Resolve [`Self::ingest_shards`] (`0` → available parallelism,
     /// capped at the per-shard metrics table —
     /// [`crate::fl::ingest::auto_shards`]).
@@ -352,6 +420,8 @@ impl FlConfig {
             .set("downlink", self.downlink.name())
             .set("seed", self.seed)
             .set("threads", self.client_threads)
+            .set("deflate_level", self.deflate_level.name())
+            .set("deflate_threads", self.deflate_threads)
             .set("ingest_shards", self.ingest_shards)
             .set("round_mode", self.round_mode.name())
             .set("round_artifact", self.round_artifact.as_str())
@@ -468,6 +538,41 @@ mod tests {
         // 0 = auto: always at least one worker.
         let auto = FlConfig::mnist(false).with_ingest_shards(0);
         assert!(auto.effective_ingest_shards() >= 1);
+    }
+
+    #[test]
+    fn deflate_knobs_builders_and_describe() {
+        let cfg = FlConfig::mnist(false);
+        assert_eq!(cfg.deflate_level, CompressionLevel::Default);
+        assert_eq!(cfg.deflate_threads, 1, "serial DEFLATE by default");
+        assert_eq!(cfg.effective_deflate_threads(), 1);
+        let cfg = cfg
+            .with_uplink(Pipeline::cosine(4))
+            .with_downlink(Pipeline::cosine(8))
+            .with_deflate_level(CompressionLevel::Fast)
+            .with_deflate_threads(4);
+        assert_eq!(cfg.effective_deflate_threads(), 4);
+        let d = cfg.describe();
+        assert_eq!(d.get("deflate_level").unwrap().as_str(), Some("fast"));
+        assert_eq!(d.get("deflate_threads").unwrap().as_usize(), Some(4));
+        // The tuned pipelines carry the knobs …
+        let up = cfg.tuned_uplink();
+        assert_eq!(up.level, CompressionLevel::Fast);
+        assert_eq!(up.deflate_threads, 4);
+        match cfg.tuned_downlink() {
+            Downlink::Delta(p) => {
+                assert_eq!(p.level, CompressionLevel::Fast);
+                assert_eq!(p.deflate_threads, 4);
+            }
+            other => panic!("unexpected downlink {other:?}"),
+        }
+        // … and width rebuilds (the adaptive schedule's path) keep them.
+        let rebuilt = up.with_bits(2);
+        assert_eq!(rebuilt.level, CompressionLevel::Fast);
+        assert_eq!(rebuilt.deflate_threads, 4);
+        // 0 = auto resolves to at least one worker.
+        let auto = FlConfig::mnist(false).with_deflate_threads(0);
+        assert!(auto.effective_deflate_threads() >= 1);
     }
 
     #[test]

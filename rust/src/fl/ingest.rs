@@ -80,6 +80,11 @@ pub struct PreparedSegment {
     /// The inflated wire frame: headers drive the fold, payload feeds the
     /// fused sub-range kernel.
     enc: EncodedTensor,
+    /// Bytes this segment occupied on the wire (header + payload *as it
+    /// traveled*, i.e. post-DEFLATE) — captured before inflate, so the
+    /// adaptive bit controller can water-fill against measured compressed
+    /// cost instead of the analytic pre-compression size.
+    wire_bytes: usize,
     /// Dense decoded values for rotated/sparsified segments (positional
     /// sub-range folding needs coordinate order; the Hadamard rotation
     /// and mask scatter do not preserve it).
@@ -99,6 +104,7 @@ impl PreparedSegment {
         scratch: &mut EncodeScratch,
     ) -> Result<PreparedSegment> {
         let n = enc.n as usize;
+        let wire_bytes = crate::compress::wire::HEADER_BYTES + enc.payload.len();
         if enc.rotated || enc.kept as usize != n {
             // Stage-decode: full validation (inflate, mask regeneration,
             // payload shape) happens inside decode_with.
@@ -108,7 +114,7 @@ impl PreparedSegment {
                 "staged decode produced {} of {n} values",
                 staged.len()
             );
-            return Ok(PreparedSegment { offset, enc, staged: Some(staged) });
+            return Ok(PreparedSegment { offset, enc, wire_bytes, staged: Some(staged) });
         }
         if enc.deflated {
             enc.payload = deflate::inflate(&enc.payload)?;
@@ -132,7 +138,7 @@ impl PreparedSegment {
                 enc.bits
             );
         }
-        Ok(PreparedSegment { offset, enc, staged: None })
+        Ok(PreparedSegment { offset, enc, wire_bytes, staged: None })
     }
 
     /// The wire header (post-inflate; `n`/`bits`/`norm`/`bound` are
@@ -140,6 +146,13 @@ impl PreparedSegment {
     /// accumulator reads.
     pub fn header(&self) -> &EncodedTensor {
         &self.enc
+    }
+
+    /// Bytes this segment occupied on the wire as it traveled
+    /// (header + post-DEFLATE payload) — the measured-cost signal the
+    /// adaptive bit controller folds into its per-layer cost scale.
+    pub fn wire_bytes(&self) -> usize {
+        self.wire_bytes
     }
 
     /// Accumulator extent covered by this segment.
@@ -614,9 +627,17 @@ mod tests {
         let mut scratch = EncodeScratch::new();
 
         let dense = enc_of(&Pipeline::cosine(3), &g, 1);
+        let traveled = wire::serialize(&dense).len();
+        let was_deflated = dense.deflated;
         let p = PreparedSegment::prepare(dense, 0, &mut scratch).unwrap();
         assert!(!p.header().deflated, "deflate is undone at prepare");
         assert!(p.staged.is_none(), "dense frames stay packed");
+        // Measured wire cost is the as-traveled (compressed) size, not the
+        // inflated one the fold works on.
+        assert_eq!(p.wire_bytes(), traveled);
+        if was_deflated {
+            assert!(p.wire_bytes() < wire::HEADER_BYTES + p.header().payload.len());
+        }
 
         let rotated = enc_of(&Pipeline::cosine(4).with_rotation(), &g, 2);
         let p = PreparedSegment::prepare(rotated, 0, &mut scratch).unwrap();

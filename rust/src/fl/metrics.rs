@@ -35,6 +35,9 @@ pub struct RoundRecord {
     /// entry per layer segment (a single entry for uniform schedules;
     /// empty on the legacy fixed-width path).
     pub bits: Vec<u8>,
+    /// DEFLATE effort the pipelines ran at (`fast`/`default`/`best`;
+    /// `None` when the uplink skips DEFLATE, e.g. the float32 baseline).
+    pub deflate_level: Option<&'static str>,
 }
 
 /// A labelled series of round records.
@@ -87,6 +90,9 @@ impl History {
                                 .set("stale_updates", r.stale_updates)
                                 .set("dup_updates", r.dup_updates)
                                 .set("malformed_updates", r.malformed_updates);
+                            if let Some(level) = r.deflate_level {
+                                j = j.set("deflate_level", level);
+                            }
                             if !r.bits.is_empty() {
                                 let widths: Vec<usize> =
                                     r.bits.iter().map(|&b| b as usize).collect();
@@ -137,6 +143,7 @@ mod tests {
             dup_updates: 0,
             malformed_updates: 0,
             bits: vec![4],
+            deflate_level: Some("default"),
         }
     }
 
@@ -166,6 +173,10 @@ mod tests {
         let bits = recs[0].get("bits").unwrap().as_arr().unwrap();
         assert_eq!(bits.len(), 1);
         assert_eq!(bits[0].as_usize(), Some(4));
+        assert_eq!(
+            recs[0].get("deflate_level").unwrap().as_str(),
+            Some("default")
+        );
     }
 
     #[test]

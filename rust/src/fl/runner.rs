@@ -55,6 +55,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::compress::allocator::{BitController, BitPlan, LayerMap};
+use crate::compress::deflate::DeflateStats;
 use crate::compress::Pipeline;
 use crate::data::partition::{self, eval_set};
 use crate::data::synth::{SynthCifar, SynthMnist, SynthTask, SynthVolume};
@@ -83,6 +84,56 @@ pub struct RunResult {
     pub wall_secs: f64,
     /// Per-round virtual-clock records ([`FlConfig::sim`] runs only).
     pub timeline: Option<Timeline>,
+}
+
+/// Static gauge names for per-worker DEFLATE output bytes — the same
+/// allocation-free instrumentation pattern as the ingest shard tables
+/// ([`crate::fl::ingest`]): `set_gauge` takes `&'static str`, so worker
+/// indices map onto a fixed table and the overflow tail aggregates.
+const DEFLATE_THREAD_BYTES: [&str; 16] = [
+    "deflate_thread00_bytes",
+    "deflate_thread01_bytes",
+    "deflate_thread02_bytes",
+    "deflate_thread03_bytes",
+    "deflate_thread04_bytes",
+    "deflate_thread05_bytes",
+    "deflate_thread06_bytes",
+    "deflate_thread07_bytes",
+    "deflate_thread08_bytes",
+    "deflate_thread09_bytes",
+    "deflate_thread10_bytes",
+    "deflate_thread11_bytes",
+    "deflate_thread12_bytes",
+    "deflate_thread13_bytes",
+    "deflate_thread14_bytes",
+    "deflate_thread15_bytes",
+];
+const DEFLATE_THREAD_REST: &str = "deflate_thread_rest_bytes";
+
+/// Record one downlink DEFLATE run (chunk/byte/thread counts) into the
+/// round telemetry. No-op when the broadcast skipped DEFLATE (legacy
+/// float32 downlink, or a pipeline with the stage off).
+fn note_deflate(tracer: &mut Tracer, metrics: &mut Metrics, stats: Option<&DeflateStats>) {
+    let Some(s) = stats else { return };
+    metrics.inc("deflate_chunks", s.chunks);
+    metrics.inc("deflate_bytes_in", s.bytes_in);
+    metrics.inc("deflate_bytes_out", s.bytes_out);
+    metrics.set_gauge("deflate_threads", s.threads as f64);
+    for (i, &b) in s.per_thread.iter().enumerate() {
+        match DEFLATE_THREAD_BYTES.get(i) {
+            Some(name) => metrics.set_gauge(name, b as f64),
+            None => metrics.inc(DEFLATE_THREAD_REST, b),
+        }
+    }
+    tracer.point(
+        "deflate",
+        vec![
+            ("chunks", Json::from(s.chunks)),
+            ("bytes_in", Json::from(s.bytes_in)),
+            ("bytes_out", Json::from(s.bytes_out)),
+            ("threads", Json::from(s.threads)),
+        ],
+    );
 }
 
 /// Evaluate `params` on the task's eval set.
@@ -126,6 +177,15 @@ fn run_task<T: SynthTask>(
     label: &str,
 ) -> Result<RunResult> {
     let sw = Stopwatch::start(); // analyze: allow(determinism): wall-secs reporting only, never steers the run
+    // Bake the DEFLATE level/thread knobs into both pipelines once; every
+    // later width rebuild (`Pipeline::with_bits`) clones, so the settings
+    // survive the adaptive schedule's per-layer reconfigurations.
+    let cfg = &{
+        let mut c = cfg.clone();
+        c.uplink = c.tuned_uplink();
+        c.downlink = c.tuned_downlink();
+        c
+    };
     let model = engine.manifest.model(cfg.task.model_key())?.clone();
     let round_cfg = engine.manifest.round(&cfg.round_cfg_key)?;
     let eval_artifact = cfg.task.eval_artifact();
@@ -348,6 +408,7 @@ fn run_sync_rounds<T: SynthTask>(
             "downlink",
             vec![("bytes", Json::from(broadcast.bytes)), ("receivers", Json::from(receivers))],
         );
+        note_deflate(tracer, metrics, broadcast.deflate.as_ref());
 
         // Train + encode every active client; serially or fanned out over
         // scoped threads (bit-identical either way — see module docs).
@@ -479,6 +540,7 @@ fn run_sync_rounds<T: SynthTask>(
             dup_updates: dup,
             malformed_updates: malformed,
             bits: bit_plan.map(|p| p.bits).unwrap_or_default(),
+            deflate_level: cfg.uplink.deflate.then(|| cfg.deflate_level.name()),
         };
         if cfg.verbose {
             let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));
@@ -575,6 +637,7 @@ fn run_async_windows<T: SynthTask>(
             "downlink",
             vec![("bytes", Json::from(broadcast.bytes)), ("receivers", Json::from(clients.len()))],
         );
+        note_deflate(tracer, metrics, broadcast.deflate.as_ref());
     }
 
     // Fill the pipeline.
@@ -720,6 +783,7 @@ fn run_async_windows<T: SynthTask>(
                         ("receivers", Json::from(clients.len())),
                     ],
                 );
+                note_deflate(tracer, metrics, broadcast.deflate.as_ref());
             }
 
             let (metric, eval_loss) = if eval_due(cfg, applied) {
@@ -755,6 +819,7 @@ fn run_async_windows<T: SynthTask>(
                 dup_updates: dup,
                 malformed_updates: malformed,
                 bits: bit_plan.as_ref().map(|p| p.bits.clone()).unwrap_or_default(),
+                deflate_level: cfg.uplink.deflate.then(|| cfg.deflate_level.name()),
             };
             if cfg.verbose {
                 let m = metric.map_or("-".to_string(), |m| format!("{m:.4}"));

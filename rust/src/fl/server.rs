@@ -176,6 +176,10 @@ pub struct Broadcast {
     pub wire: Option<Vec<u8>>,
     /// Bytes on the wire per receiving client.
     pub bytes: usize,
+    /// What the downlink DEFLATE stage did (None when the pipeline skips
+    /// DEFLATE or in legacy float32 mode) — chunk / thread / byte counts
+    /// for round telemetry.
+    pub deflate: Option<crate::compress::deflate::DeflateStats>,
 }
 
 /// The global model + aggregation state.
@@ -230,6 +234,9 @@ struct ObsAcc {
     bits: u8,
     norm_sq_sum: f64,
     bound: f32,
+    /// Sum of as-traveled segment bytes (header + post-DEFLATE payload)
+    /// across accepted frames — the allocator's measured-cost signal.
+    wire_bytes_sum: u64,
     count: u64,
 }
 
@@ -476,6 +483,7 @@ impl Server {
                         bits: s.bits,
                         norm_sq_sum: 0.0,
                         bound: s.bound,
+                        wire_bytes_sum: 0,
                         count: 0,
                     }
                 })
@@ -486,6 +494,7 @@ impl Server {
             o.bits = s.bits;
             o.bound = s.bound;
             o.norm_sq_sum += (s.norm as f64) * (s.norm as f64);
+            o.wire_bytes_sum += p.wire_bytes() as u64;
             o.count += 1;
         }
     }
@@ -510,8 +519,11 @@ impl Server {
     }
 
     /// The open round's per-segment observations (RMS norm over accepted
-    /// frames, latest width/bound) — what the runner feeds the adaptive
-    /// bit controller. Empty until a frame is accepted.
+    /// frames, latest width/bound, mean measured wire bytes) — what the
+    /// runner feeds the adaptive bit controller. Empty until a frame is
+    /// accepted. `wire_bytes` is the as-traveled (post-DEFLATE) segment
+    /// size, so the controller's cost model tracks what the link actually
+    /// carried, not the analytic packed size.
     pub fn round_observations(&self) -> Vec<SegmentObs> {
         self.obs_round
             .iter()
@@ -520,6 +532,7 @@ impl Server {
                 bits: o.bits,
                 norm: (o.norm_sq_sum / o.count.max(1) as f64).sqrt() as f32,
                 bound: o.bound,
+                wire_bytes: (o.wire_bytes_sum / o.count.max(1)) as usize,
             })
             .collect()
     }
@@ -587,6 +600,7 @@ impl Server {
             Downlink::Float32Model => Ok(Broadcast {
                 wire: None,
                 bytes: self.params.len() * 4,
+                deflate: None,
             }),
             Downlink::Delta(pipe) => {
                 let delta: Vec<f32> = self
@@ -595,18 +609,25 @@ impl Server {
                     .zip(&self.replica)
                     .map(|(&p, &r)| p - r)
                     .collect();
-                let enc = pipe.encode_with(
+                // Streaming encode: the DEFLATE stage writes straight into
+                // the wire frame buffer, so serialization overlaps
+                // compression instead of copying a finished payload.
+                let mut frame = Vec::new();
+                pipe.encode_wire_with(
                     &delta,
                     Direction::Downlink,
                     &mut self.state,
                     &mut self.rng,
                     &mut self.scratch,
+                    &mut frame,
                 );
-                let frame = wire::serialize(&enc);
                 // Advance the reference replica by the *decoded* delta so
                 // the server models exactly what clients reconstruct; the
                 // next round's delta then carries this round's
                 // quantization error (implicit downlink error feedback).
+                // Decoding the frame bytes (rather than a pre-serialize
+                // tensor) keeps server and fleet on the same input.
+                let enc = wire::deserialize(&frame)?;
                 let decoded = decode_with(&enc, &mut self.scratch)?;
                 for (r, d) in self.replica.iter_mut().zip(&decoded) {
                     *r += d;
@@ -614,6 +635,7 @@ impl Server {
                 Ok(Broadcast {
                     bytes: frame.len(),
                     wire: Some(frame),
+                    deflate: self.scratch.deflate_stats().cloned(),
                 })
             }
         }
@@ -707,6 +729,7 @@ mod tests {
         let mut server = Server::new(vec![0.5; 321], 1.0);
         let b = server.broadcast().unwrap();
         assert!(b.wire.is_none());
+        assert!(b.deflate.is_none());
         assert_eq!(b.bytes, 321 * 4); // exactly the CSG1-era 4·n bytes
     }
 
@@ -732,6 +755,9 @@ mod tests {
             let b = server.broadcast().unwrap();
             // The quantized delta frame is strictly below the float32 cost.
             assert!(b.bytes < 2000 * 4, "delta frame {} bytes", b.bytes);
+            // The downlink pipeline ran DEFLATE; the stats rode along.
+            let stats = b.deflate.as_ref().expect("deflate stats");
+            assert_eq!(stats.bytes_in as usize, 2000); // 8-bit codes, 1 B/elem
             fleet.apply_wire(b.wire.as_ref().unwrap()).unwrap();
             // Client replica and server reference replica agree bit-exactly.
             assert_eq!(fleet.params.as_slice(), server.replica());
@@ -979,6 +1005,8 @@ mod tests {
             assert_eq!(o.bits, w);
             assert_eq!(o.n, seg.n as usize);
             assert!((o.norm - seg.norm).abs() < 1e-6);
+            // Measured cost = exactly what this segment cost on the wire.
+            assert_eq!(o.wire_bytes, wire::serialize(seg).len());
         }
         assert_eq!(s.finish_round(), 1);
         assert!(s.round_observations().is_empty(), "obs reset per round");

@@ -7,11 +7,15 @@
 //!             [--keep F] [--rounds N] [--kernel] [--seed S] [--threads N]
 //!             [--round-mode sync|async:K[:S]] [--trace FILE]
 //!             [--ingest-shards N]  # sharded server ingest (0 = auto)
+//!             [--deflate-level fast|default|best]
+//!             [--deflate-threads N]  # parallel DEFLATE (0 = auto,
+//!                                    # bytes identical at any value)
 //!             [--downlink <name>] [--downlink-bits B] [--downlink-keep F]
 //! repro sim   --task <t> [--rounds N] [--fleet heterogeneous|uniform|3g]
 //!             [--policy sync|overselect] [--over F] [--availability P]
 //!             [--dropout P] [--target M] [--round-mode async:K[:S]]
 //!             [--ingest-shards N]  # sharded server ingest (0 = auto)
+//!             [--deflate-level L] [--deflate-threads N]
 //!             [--bits <schedule>]  # adds const vs anneal vs adaptive rows
 //!             [--trace FILE]       # structured JSONL round telemetry
 //!             [--quick]   # sync vs buffered-async time-to-accuracy table
@@ -35,6 +39,7 @@ use anyhow::{bail, Result};
 
 use cossgd::compress::allocator::{BitSchedule, LayerMap};
 use cossgd::compress::cosine::{BoundMode, Rounding};
+use cossgd::compress::deflate::CompressionLevel;
 use cossgd::compress::{Direction, Pipeline, PipelineState};
 use cossgd::figures::{self, FigOpts};
 use cossgd::fl::{self, FlConfig, RoundMode, Task};
@@ -93,7 +98,25 @@ fn cmd_list() -> Result<()> {
         "perf: --threads N (0 = all cores), --ingest-shards N (sharded server ingest, 0 = auto, \
          bit-identical at any value), bench [--quick] [--n N] [--out FILE]"
     );
+    println!(
+        "deflate: --deflate-level fast|default|best, --deflate-threads N \
+         (parallel DEFLATE, 0 = auto; output bytes identical at any thread count)"
+    );
     Ok(())
+}
+
+/// Parse the DEFLATE knobs shared by `train` and `sim`:
+/// `--deflate-level fast|default|best` (effort) and `--deflate-threads N`
+/// (0 = auto; scheduling only — compressed bytes are identical at every
+/// value).
+fn deflate_from_args(args: &Args) -> Result<(CompressionLevel, usize)> {
+    let level = match args.opt("deflate-level") {
+        Some(s) => CompressionLevel::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --deflate-level '{s}' (fast, default, best)")
+        })?,
+        None => CompressionLevel::Default,
+    };
+    Ok((level, args.opt_usize("deflate-threads", 1)))
 }
 
 /// Parse `--round-mode` (default synchronous).
@@ -311,6 +334,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.eval_every = args.opt_usize("eval-every", 5);
     cfg.use_kernel_quantizer = args.flag("kernel");
     cfg.client_threads = args.opt_usize("threads", 1);
+    (cfg.deflate_level, cfg.deflate_threads) = deflate_from_args(args)?;
     cfg.ingest_shards = args.opt_usize("ingest-shards", 1);
     cfg.round_mode = round_mode_from_args(args)?;
     cfg.verbose = !args.flag("quiet");
@@ -514,6 +538,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg.bit_schedule = schedule;
         cfg.eval_every = args.opt_usize("eval-every", 5);
         cfg.client_threads = args.opt_usize("threads", 1);
+        (cfg.deflate_level, cfg.deflate_threads) = deflate_from_args(args)?;
         cfg.ingest_shards = args.opt_usize("ingest-shards", 1);
         cfg.verbose = args.flag("verbose");
         // `--trace` captures the first scheme's synchronous run (one run
@@ -580,6 +605,7 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
         unreachable!("async_mode_for always returns BufferedAsync")
     };
     let concurrency = (2 * buffer_k).min(n_clients);
+    let (deflate_level, deflate_threads) = deflate_from_args(args)?;
     let ingest_shards = match args.opt_usize("ingest-shards", 1) {
         0 => cossgd::fl::ingest::auto_shards(),
         s => s,
@@ -614,14 +640,21 @@ fn cmd_sim_dry(args: &Args) -> Result<()> {
         }),
         _ => None,
     };
+    // Every row's pipeline carries the DEFLATE knobs (a no-op for
+    // float32, which skips the stage) — so `--deflate-threads 4` smokes
+    // the parallel encoder through the whole protocol path.
+    let tuned = |p: Pipeline| {
+        p.with_deflate_level(deflate_level)
+            .with_deflate_threads(deflate_threads)
+    };
     let mut rows: Vec<(String, Pipeline, Option<dryrun::DryBits>)> = vec![
-        ("float32".into(), Pipeline::float32(), None),
-        ("cosine-4".into(), Pipeline::cosine(4), None),
+        ("float32".into(), tuned(Pipeline::float32()), None),
+        ("cosine-4".into(), tuned(Pipeline::cosine(4)), None),
     ];
     if let Some(b) = bit_row {
         rows.push((
             format!("cosine {}", b.schedule.name()),
-            Pipeline::cosine(4),
+            tuned(Pipeline::cosine(4)),
             Some(b),
         ));
     }

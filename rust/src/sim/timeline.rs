@@ -191,6 +191,7 @@ mod tests {
             dup_updates: 0,
             malformed_updates: 0,
             bits: Vec::new(),
+            deflate_level: None,
         }
     }
 

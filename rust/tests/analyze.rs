@@ -101,6 +101,12 @@ fn every_rule_family_fires_on_the_violations_fixture() {
     // ...and the sharded ingest plane: unordered per-shard state would
     // break the bit-identical merge contract.
     assert!(has("determinism", "fl/ingest.rs", "HashMap"));
+    // ...and the parallel DEFLATE plane: wall-clock reads or unordered
+    // chains in the match-finder/block-writer would break the
+    // byte-identical-at-any-thread-count contract.
+    assert!(has("determinism", "compress/deflate/matcher.rs", "HashMap"));
+    assert!(has("determinism", "compress/deflate/matcher.rs", "Instant"));
+    assert!(has("determinism", "compress/deflate/block.rs", "SystemTime"));
     // panic_safety
     assert!(has("panic_safety", "fl/server.rs", ".unwrap()"));
     assert!(has("panic_safety", "fl/server.rs", ".expect("));
@@ -114,6 +120,11 @@ fn every_rule_family_fires_on_the_violations_fixture() {
     // ...and the ingest worker fold loop: no per-frame allocations.
     assert!(has("hotpath", "fl/ingest.rs", ".clone()"));
     assert!(has("hotpath", "fl/ingest.rs", ".to_vec()"));
+    // ...and the DEFLATE per-chunk loops: workers reuse caller scratch.
+    assert!(has("hotpath", "compress/deflate/matcher.rs", ".to_vec()"));
+    assert!(has("hotpath", "compress/deflate/matcher.rs", "vec!["));
+    assert!(has("hotpath", "compress/deflate/block.rs", ".clone()"));
+    assert!(has("hotpath", "compress/deflate/block.rs", ".to_vec()"));
     // unsafe_audit
     assert!(has("unsafe_audit", "runtime/engine.rs", "unsafe impl"));
     assert!(has("unsafe_audit", "runtime/engine.rs", "unsafe block"));
@@ -125,7 +136,7 @@ fn every_rule_family_fires_on_the_violations_fixture() {
 
     // Exit-code contract: the CLI turns a dirty report into exit 1; the
     // report itself is the source of truth.
-    assert!(report.diagnostics.len() >= 23);
+    assert!(report.diagnostics.len() >= 30);
 }
 
 #[test]

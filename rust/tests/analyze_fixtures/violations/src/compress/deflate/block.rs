@@ -1,0 +1,16 @@
+//! Fixture: a block writer that stamps frames with the wall clock and
+//! clones its token stream per block — determinism and hotpath must fire.
+
+use std::time::SystemTime;
+
+pub fn emit_block(tokens: &[(u8, u32)], out: &mut Vec<u8>) -> u64 {
+    let owned = tokens.to_vec();
+    for (lit, dist) in owned.clone() {
+        out.push(lit);
+        out.extend_from_slice(&dist.to_le_bytes());
+    }
+    SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

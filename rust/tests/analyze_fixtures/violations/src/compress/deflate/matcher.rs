@@ -1,0 +1,22 @@
+//! Fixture: a chunked match-finder that keeps its hash chains in an
+//! unordered map, reads the wall clock for per-chunk timing, and
+//! allocates per chunk — the determinism and hotpath scopes must both
+//! fire on the parallel-DEFLATE plane.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn tokenize_chunk(data: &[u8], out: &mut Vec<(u8, u32)>) -> u128 {
+    let t0 = Instant::now();
+    let mut chains: HashMap<u32, usize> = HashMap::new();
+    for (i, w) in data.windows(3).enumerate() {
+        let key = u32::from(w[0]) << 16 | u32::from(w[1]) << 8 | u32::from(w[2]);
+        chains.insert(key, i);
+    }
+    let staged = data.to_vec();
+    let scratch = vec![0u32; staged.len()];
+    for (b, s) in staged.iter().zip(scratch.iter()) {
+        out.push((*b, *s));
+    }
+    t0.elapsed().as_nanos()
+}

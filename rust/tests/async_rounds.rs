@@ -54,6 +54,7 @@ fn history_over(tl: &Timeline, target_rounds: usize) -> History {
             dup_updates: 0,
             malformed_updates: 0,
             bits: Vec::new(),
+            deflate_level: None,
         });
     }
     h

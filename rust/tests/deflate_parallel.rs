@@ -1,0 +1,220 @@
+//! Parallel DEFLATE plane: the tests that make `--deflate-threads` safe
+//! to flip in production.
+//!
+//! 1. **Byte identity**: `deflate_into` emits the *same bytes* at every
+//!    thread count (chunk boundaries depend only on input length, one
+//!    chunk = one block, bit-level stitching), so compressed artifacts
+//!    are reproducible regardless of the machine that produced them.
+//! 2. **Pipeline identity**: `Pipeline::encode_with` is bit-identical
+//!    across thread counts for every stage combination (deflate on/off ×
+//!    rotation × sparsification), and `encode_wire_with` streams exactly
+//!    the bytes `wire::serialize(&encode_with(..))` would produce.
+//! 3. **Decoder robustness**: truncations, corrupt block headers,
+//!    mid-stream bit flips, and random garbage return clean
+//!    [`InflateError`]s — never panics, never wrong-but-Ok silently
+//!    accepted as the original payload.
+
+use cossgd::compress::deflate::{deflate, deflate_into, inflate, CompressionLevel};
+use cossgd::compress::{wire, Direction, EncodeScratch, Pipeline, PipelineState};
+use cossgd::util::propcheck::{bytes, compressible_bytes, gradient_like};
+use cossgd::util::rng::Pcg64;
+
+/// 128 KiB — keep in sync with `compress::deflate::matcher::CHUNK_SIZE`.
+/// The corruption tests poke bytes around these seams.
+const CHUNK: usize = 128 * 1024;
+
+const LEVELS: [CompressionLevel; 3] = [
+    CompressionLevel::Fast,
+    CompressionLevel::Default,
+    CompressionLevel::Best,
+];
+
+#[test]
+fn parallel_deflate_is_byte_identical_at_every_thread_count() {
+    let mut rng = Pcg64::seeded(0xD3F1);
+    // Multi-chunk compressible, multi-chunk incompressible (stored
+    // blocks), sub-chunk, and empty inputs.
+    let inputs: Vec<Vec<u8>> = vec![
+        compressible_bytes(&mut rng, 3 * CHUNK + 4321),
+        bytes(&mut rng, 2 * CHUNK + 999),
+        compressible_bytes(&mut rng, 1000),
+        Vec::new(),
+    ];
+    for data in &inputs {
+        for level in LEVELS {
+            let serial = deflate(data, level);
+            assert_eq!(inflate(&serial).expect("serial roundtrip"), *data);
+            for threads in [1usize, 2, 4, 8] {
+                let mut out = Vec::new();
+                let stats = deflate_into(data, level, threads, &mut out);
+                assert_eq!(
+                    out, serial,
+                    "{} bytes at {level:?} ×{threads}: parallel != serial",
+                    data.len()
+                );
+                assert_eq!(stats.bytes_in as usize, data.len());
+                assert_eq!(stats.bytes_out as usize, out.len());
+                assert_eq!(stats.chunks as usize, data.len().div_ceil(CHUNK).max(1));
+                // Requested threads are clamped to the chunk count.
+                assert!(stats.threads >= 1 && stats.threads <= threads.max(1));
+                assert_eq!(stats.per_thread.len(), stats.threads);
+            }
+        }
+    }
+}
+
+#[test]
+fn deflate_into_appends_behind_existing_bytes() {
+    // Streaming into a wire buffer means the stream starts mid-Vec; the
+    // prefix must survive untouched and the suffix must still inflate.
+    let mut rng = Pcg64::seeded(7);
+    let data = compressible_bytes(&mut rng, CHUNK + 17);
+    let mut out = b"HEADER".to_vec();
+    let stats = deflate_into(&data, CompressionLevel::Default, 4, &mut out);
+    assert_eq!(&out[..6], b"HEADER");
+    assert_eq!(stats.bytes_out as usize, out.len() - 6);
+    assert_eq!(inflate(&out[6..]).expect("suffix inflates"), data);
+}
+
+/// The stage combinations the protocol actually ships: plain cosine,
+/// rotated, sparsified, and the deflate-off control.
+fn pipelines(threads: usize, level: CompressionLevel) -> Vec<(&'static str, Pipeline)> {
+    let tune = |p: Pipeline| p.with_deflate_level(level).with_deflate_threads(threads);
+    vec![
+        ("cosine4", tune(Pipeline::cosine(4))),
+        ("cosine8+rot", tune(Pipeline::cosine(8).with_rotation())),
+        ("cosine4+sparse", tune(Pipeline::cosine(4).with_sparsify(0.25))),
+        ("cosine4-nodeflate", tune(Pipeline::cosine(4)).without_deflate()),
+    ]
+}
+
+#[test]
+fn pipeline_encode_is_bit_identical_across_threads() {
+    let mut grng = Pcg64::seeded(42);
+    // Big enough that the packed payload spans multiple DEFLATE chunks
+    // for the 8-bit config (n bytes) — the seams must not leak into the
+    // observable frame.
+    let n = 3 * CHUNK / 2;
+    let g = gradient_like(&mut grng, n);
+    for level in [CompressionLevel::Fast, CompressionLevel::Default] {
+        let baseline = pipelines(1, level)
+            .into_iter()
+            .map(|(name, p)| {
+                let mut rng = Pcg64::seeded(9);
+                let enc = p.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+                (name, enc)
+            })
+            .collect::<Vec<_>>();
+        for threads in [4usize, 8] {
+            for ((name, want), (_, p)) in baseline.iter().zip(pipelines(threads, level)) {
+                let mut rng = Pcg64::seeded(9);
+                let enc =
+                    p.encode(&g, Direction::Uplink, &mut PipelineState::new(), &mut rng);
+                assert_eq!(
+                    &enc, want,
+                    "{name} at {level:?} ×{threads} diverges from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn encode_wire_with_streams_exactly_the_serialized_frame() {
+    let mut grng = Pcg64::seeded(3);
+    let g = gradient_like(&mut grng, CHUNK + 5000);
+    for (name, p) in pipelines(4, CompressionLevel::Default) {
+        let mut rng = Pcg64::seeded(11);
+        let enc = p.encode(&g, Direction::Downlink, &mut PipelineState::new(), &mut rng);
+        let want = wire::serialize(&enc);
+
+        let mut rng = Pcg64::seeded(11);
+        let mut scratch = EncodeScratch::new();
+        let mut frame = Vec::new();
+        let meta = p.encode_wire_with(
+            &g,
+            Direction::Downlink,
+            &mut PipelineState::new(),
+            &mut rng,
+            &mut scratch,
+            &mut frame,
+        );
+        assert_eq!(frame, want, "{name}: streamed frame != serialize(encode)");
+        assert!(meta.payload.is_empty(), "{name}: streamed meta keeps payload");
+        assert_eq!(meta.deflated, enc.deflated, "{name}: deflated flag");
+        // The frame parses back to the same tensor the two-step path made.
+        let parsed = wire::deserialize(&frame).expect("parse streamed frame");
+        assert_eq!(parsed, enc, "{name}: parsed frame != encoded tensor");
+        // Stats surface iff the deflate stage ran.
+        assert_eq!(scratch.deflate_stats().is_some(), name != "cosine4-nodeflate");
+    }
+}
+
+#[test]
+fn truncated_streams_error_cleanly() {
+    let mut rng = Pcg64::seeded(21);
+    let data = compressible_bytes(&mut rng, 2 * CHUNK + 100);
+    let full = deflate(&data, CompressionLevel::Default);
+    assert_eq!(inflate(&full).expect("full stream"), data);
+    let mut rejected = 0usize;
+    let mut cut = 0usize;
+    while cut < full.len() {
+        // A proper prefix must never be silently accepted as the payload.
+        match inflate(&full[..cut]) {
+            Err(_) => rejected += 1,
+            Ok(d) => assert_ne!(d, data, "truncation at {cut} decoded the full payload"),
+        }
+        cut += 97;
+    }
+    assert!(rejected > 0, "no truncation was ever rejected");
+}
+
+#[test]
+fn corrupt_block_headers_and_bit_flips_never_panic() {
+    let mut rng = Pcg64::seeded(33);
+    let data = compressible_bytes(&mut rng, 2 * CHUNK + 777);
+    let full = deflate(&data, CompressionLevel::Default);
+
+    // BTYPE=11 is reserved: forcing it in the first block header must be
+    // a clean error.
+    let mut bad = full.clone();
+    bad[0] |= 0b110;
+    assert!(inflate(&bad).is_err(), "reserved BTYPE accepted");
+
+    // Flip one byte at a stride across the stream — including around the
+    // chunk seams — and demand a clean error or a decode that differs
+    // (a flip confined to final-byte padding may legitimately round-trip,
+    // so the last byte is exempt).
+    let mut errors = 0usize;
+    let mut pos = 0usize;
+    while pos + 1 < full.len() {
+        let mut bent = full.clone();
+        bent[pos] ^= 0x5A;
+        match inflate(&bent) {
+            Err(_) => errors += 1,
+            Ok(d) => assert_ne!(d, data, "flip at {pos} was invisible"),
+        }
+        pos += 211;
+    }
+    assert!(errors > 0, "no corruption was ever rejected");
+
+    // Stored blocks (incompressible input) take the other decode path:
+    // same contract.
+    let raw = bytes(&mut rng, CHUNK / 2);
+    let stored = deflate(&raw, CompressionLevel::Default);
+    assert_eq!(inflate(&stored).expect("stored roundtrip"), raw);
+    for cut in [0, 1, 4, stored.len() / 2, stored.len() - 1] {
+        match inflate(&stored[..cut]) {
+            Err(_) => {}
+            Ok(d) => assert_ne!(d, raw, "stored truncation at {cut} round-tripped"),
+        }
+    }
+
+    // Random garbage: never a panic, (almost) never an accept — and an
+    // accept of garbage can at most produce garbage, which we ignore.
+    for seed in 0..64u64 {
+        let mut frng = Pcg64::seeded(0xFACE + seed);
+        let junk = bytes(&mut frng, 257);
+        let _ = inflate(&junk);
+    }
+}

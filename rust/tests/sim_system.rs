@@ -178,6 +178,7 @@ fn bandwidth_bound_fleet_reaches_target_sooner_with_round_trip_quantization() {
                 dup_updates: 0,
                 malformed_updates: 0,
                 bits: Vec::new(),
+                deflate_level: None,
             });
         }
         h
