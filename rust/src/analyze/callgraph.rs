@@ -1,0 +1,126 @@
+//! Reachability over the symbol table: one edge per conservatively
+//! resolved call, multi-source BFS with parent pointers, and shortest
+//! offending-chain extraction for the reports.
+
+use std::collections::VecDeque;
+
+use super::symbols::SymbolTable;
+
+/// The whole-tree call graph, indexed by [`super::symbols::FnSym`] id.
+pub struct CallGraph {
+    /// `edges[f]` = sorted `(callee, line-of-first-call)` pairs, one per
+    /// distinct callee.
+    edges: Vec<Vec<(usize, usize)>>,
+}
+
+impl CallGraph {
+    pub fn build(syms: &SymbolTable) -> CallGraph {
+        let mut edges: Vec<Vec<(usize, usize)>> = vec![Vec::new(); syms.fns.len()];
+        for call in &syms.calls {
+            for callee in syms.resolve(call) {
+                edges[call.caller].push((callee, call.line));
+            }
+        }
+        for e in &mut edges {
+            e.sort_unstable();
+            e.dedup_by_key(|p| p.0); // keep the lowest call line per callee
+        }
+        CallGraph { edges }
+    }
+
+    pub fn callees(&self, f: usize) -> &[(usize, usize)] {
+        &self.edges[f]
+    }
+
+    /// Multi-source BFS from `entries`; shortest chains win, ties broken
+    /// by fn id (deterministic for a deterministic symbol table).
+    pub fn reach(&self, entries: &[usize]) -> Reach {
+        let n = self.edges.len();
+        let mut seen = vec![false; n];
+        let mut parent: Vec<Option<usize>> = vec![None; n];
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        for &e in entries {
+            if e < n && !seen[e] {
+                seen[e] = true;
+                queue.push_back(e);
+            }
+        }
+        while let Some(f) = queue.pop_front() {
+            for &(c, _) in &self.edges[f] {
+                if !seen[c] {
+                    seen[c] = true;
+                    parent[c] = Some(f);
+                    queue.push_back(c);
+                }
+            }
+        }
+        Reach { seen, parent }
+    }
+}
+
+/// BFS result: membership plus parent pointers for chain rendering.
+pub struct Reach {
+    seen: Vec<bool>,
+    parent: Vec<Option<usize>>,
+}
+
+impl Reach {
+    pub fn contains(&self, f: usize) -> bool {
+        self.seen.get(f).copied().unwrap_or(false)
+    }
+
+    /// Entry → … → `f`, as fn ids (entry first). `f` itself when `f` is
+    /// an entry.
+    pub fn chain(&self, f: usize) -> Vec<usize> {
+        let mut out = vec![f];
+        let mut cur = f;
+        while let Some(p) = self.parent[cur] {
+            out.push(p);
+            cur = p;
+        }
+        out.reverse();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::lexer::lex_str;
+    use crate::analyze::symbols::SymbolTable;
+
+    #[test]
+    fn bfs_chains_are_shortest() {
+        let src = "\
+pub fn entry() {
+    mid();
+    deep_a();
+}
+fn mid() {
+    leaf();
+}
+fn deep_a() {
+    deep_b();
+}
+fn deep_b() {
+    leaf();
+}
+fn leaf() {}
+fn island() {}
+";
+        let files = vec![lex_str("a.rs", src)];
+        let syms = SymbolTable::build(&files);
+        let graph = CallGraph::build(&syms);
+        let id = |n: &str| syms.fns.iter().position(|f| f.name == n).unwrap();
+        let reach = graph.reach(&[id("entry")]);
+        assert!(reach.contains(id("leaf")));
+        assert!(!reach.contains(id("island")));
+        let chain: Vec<String> = reach
+            .chain(id("leaf"))
+            .into_iter()
+            .map(|f| syms.fns[f].name.clone())
+            .collect();
+        assert_eq!(chain, vec!["entry", "mid", "leaf"], "shortest path wins");
+        assert_eq!(reach.chain(id("entry")).len(), 1);
+    }
+}

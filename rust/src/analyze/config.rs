@@ -10,7 +10,9 @@
 //!
 //! Only string arrays are supported, `#` starts a comment outside strings,
 //! arrays may span lines. Unknown keys or sections are hard errors so the
-//! manifest cannot silently drift from the rule set.
+//! manifest cannot silently drift from the rule set. Interprocedural
+//! rules additionally take `entries = ["file.rs::Type::fn", "f.rs::pre*"]`
+//! — the call-graph boundary entry points they walk from.
 
 use std::collections::BTreeMap;
 
@@ -25,6 +27,10 @@ pub struct RuleScope {
     /// Allowlist entries: `relative/path.rs` (whole file) or
     /// `relative/path.rs::fn_name` (one function).
     pub allow: Vec<String>,
+    /// Call-graph boundary entry points for interprocedural rules:
+    /// `file.rs::fn`, `file.rs::Type::fn`, with an optional trailing `*`
+    /// suffix glob on the fn name.
+    pub entries: Vec<String>,
 }
 
 impl RuleScope {
@@ -124,8 +130,9 @@ impl AnalyzeConfig {
             match key {
                 "paths" => scope.paths = items,
                 "allow" => scope.allow = items,
+                "entries" => scope.entries = items,
                 other => bail!(
-                    "manifest line {}: unknown key '{}' (expected paths/allow)",
+                    "manifest line {}: unknown key '{}' (expected paths/allow/entries)",
                     ln + 1,
                     other
                 ),
@@ -230,6 +237,17 @@ mod tests {
         assert!(ps.allows_fn("fl/server.rs", "debug_dump"));
         assert!(!ps.allows_fn("fl/server.rs", "ingest"));
         assert!(!ps.allows_file("fl/server.rs"));
+    }
+
+    #[test]
+    fn parses_entries() {
+        let cfg = AnalyzeConfig::parse(
+            "[determinism]\npaths=[\"*\"]\nentries = [\"fl/server.rs::Server::ingest\", \"compress/wire.rs::deserialize*\"]\n[panic_safety]\npaths=[\"*\"]\n",
+            KNOWN,
+        )
+        .unwrap();
+        assert_eq!(cfg.rules["determinism"].entries.len(), 2);
+        assert!(cfg.rules["panic_safety"].entries.is_empty());
     }
 
     #[test]

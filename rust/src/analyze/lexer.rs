@@ -536,9 +536,28 @@ fn structure_pass(lines: &[String]) -> StructureOut {
                         i += 1;
                     }
                     let word = &l[start..i];
+                    // Raw identifier `r#word`: the scrub pass leaves the
+                    // prefix in place (it is code, not a raw string), so
+                    // a word directly preceded by `r#` must never be
+                    // treated as a keyword — `r#fn` is a name, not `fn`.
+                    let raw_ident = start >= 2
+                        && bytes[start - 1] == b'#'
+                        && bytes[start - 2] == b'r'
+                        && (start == 2 || !is_ident(bytes[start - 3]));
                     if expecting_fn_name {
-                        pending_fn = Some((word.to_string(), ln));
+                        if word == "r" && i < bytes.len() && bytes[i] == b'#' {
+                            continue; // `fn r#name` — the name follows the prefix
+                        }
+                        let name = if raw_ident {
+                            format!("r#{word}")
+                        } else {
+                            word.to_string()
+                        };
+                        pending_fn = Some((name, ln));
                         expecting_fn_name = false;
+                        continue;
+                    }
+                    if raw_ident {
                         continue;
                     }
                     match word {
@@ -732,6 +751,25 @@ fn f() {
         assert!(!f.has_safety_comment(f.unsafes[1].line));
         assert!(f.has_safety_comment(f.unsafes[2].line));
         assert!(!f.has_safety_comment(f.unsafes[3].line));
+    }
+
+    #[test]
+    fn raw_identifiers_are_not_keywords() {
+        let src = "\
+fn caller() {
+    let r#fn = 1;
+    let r#unsafe = r#fn + 1;
+    r#unsafe
+}
+fn r#match(x: u32) -> u32 {
+    x
+}
+";
+        let f = lex_str("x.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["caller", "r#match"]);
+        assert!(f.unsafes.is_empty(), "r#unsafe is a name, not a keyword");
+        assert_eq!(f.fns[0].end, 4);
     }
 
     #[test]

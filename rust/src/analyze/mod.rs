@@ -2,29 +2,46 @@
 //! hand-enforced invariants.
 //!
 //! ```text
-//!            analyze.toml (scopes + allowlists, hand-rolled TOML subset)
-//!                 │
+//!            analyze.toml (scopes + allowlists + boundary `entries`,
+//!                 │        hand-rolled TOML subset)
 //!   *.rs ──► lexer::lex_str ──► SourceFile (scrubbed lines, comments,
 //!                 │              literals, fn/test/unsafe spans, waivers)
-//!                 ▼
-//!            rules::all() ── determinism · panic_safety · hotpath
-//!                 │           unsafe_audit · wire
-//!                 ▼
-//!            report::Report (path-sorted; text / --json; exit 1 if dirty)
+//!                 ├───────────────────────────────┐
+//!                 ▼                               ▼
+//!            rules::all()                symbols::SymbolTable
+//!             │                           (fn defs + owners, call
+//!             │  per-file lexical:        sites, loop spans)
+//!             │   determinism                     │
+//!             │   panic_safety                    ▼
+//!             │   hotpath                 callgraph::CallGraph
+//!             │   unsafe_audit            (BFS reachability with
+//!             │   wire                    parent-pointer chains)
+//!             │                                   │
+//!             │  interprocedural ◄────────────────┘
+//!             │   panic_propagation · thread_aliasing · hotloop_alloc
+//!             ▼
+//!            report::Report (path-sorted; text / --json with rendered
+//!                            `via a -> b -> c` call chains; exit 1 if dirty)
 //! ```
 //!
 //! The invariants are the ones the repo's correctness story rests on and a
 //! reviewer cannot re-check on every diff: bit-identical deterministic
-//! aggregation, panic-free decode of hostile CSG2 frames, transcendental-
-//! and allocation-free quantization kernels, documented `unsafe`, and a
-//! single source of truth for the 44-byte wire header. Scopes and escape
-//! hatches live in `rust/analyze.toml`; point waivers live next to the
-//! code as `// analyze: allow(<rule>): reason` comments.
+//! aggregation, panic-free decode of hostile CSG2 frames — now traced
+//! interprocedurally from the boundary entry points through the whole-tree
+//! call graph — transcendental- and allocation-free quantization kernels
+//! (including allocations hidden behind calls made from hot loops),
+//! disjointness-audited `&mut` captures in scoped-thread spawn closures,
+//! documented `unsafe`, and a single source of truth for the 44-byte wire
+//! header. Scopes and escape hatches live in `rust/analyze.toml`; point
+//! waivers live next to the code as `// analyze: allow(<rule>): reason`
+//! comments.
 
+pub mod callgraph;
 pub mod config;
 pub mod lexer;
 pub mod report;
 pub mod rules;
+pub mod symbols;
 
 use std::path::{Path, PathBuf};
 

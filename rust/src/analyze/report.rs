@@ -2,13 +2,17 @@
 
 use crate::util::json::Json;
 
-/// One rule violation. `line` is 1-indexed for display.
+/// One rule violation. `line` is 1-indexed for display. Interprocedural
+/// rules attach `chain`: the offending call chain from the boundary
+/// entry to the sinful fn, as `file.rs::[Type::]fn` labels.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Diagnostic {
     pub path: String,
     pub line: usize,
     pub rule: String,
     pub message: String,
+    /// Empty for per-file lexical rules.
+    pub chain: Vec<String>,
 }
 
 impl Diagnostic {
@@ -18,7 +22,14 @@ impl Diagnostic {
             line: line0 + 1,
             rule: rule.to_string(),
             message,
+            chain: Vec::new(),
         }
+    }
+
+    /// Attach the offending call chain (entry first).
+    pub fn with_chain(mut self, chain: Vec<String>) -> Diagnostic {
+        self.chain = chain;
+        self
     }
 }
 
@@ -48,7 +59,8 @@ impl Report {
         self.diagnostics.is_empty()
     }
 
-    /// Human-readable report, one `path:line: [rule] message` per finding.
+    /// Human-readable report, one `path:line: [rule] message` per finding
+    /// (plus an indented `via` line when a call chain is attached).
     pub fn text(&self) -> String {
         let mut out = String::new();
         for d in &self.diagnostics {
@@ -56,6 +68,9 @@ impl Report {
                 "{}:{}: [{}] {}\n",
                 d.path, d.line, d.rule, d.message
             ));
+            if !d.chain.is_empty() {
+                out.push_str(&format!("    via {}\n", d.chain.join(" -> ")));
+            }
         }
         out.push_str(&format!(
             "analyze: {} violation(s), {} file(s) scanned, {} rule(s): {}\n",
@@ -73,11 +88,18 @@ impl Report {
             .diagnostics
             .iter()
             .map(|d| {
-                Json::obj()
+                let mut obj = Json::obj()
                     .set("file", d.path.as_str())
                     .set("line", d.line)
                     .set("message", d.message.as_str())
-                    .set("rule", d.rule.as_str())
+                    .set("rule", d.rule.as_str());
+                if !d.chain.is_empty() {
+                    obj = obj.set(
+                        "chain",
+                        Json::Arr(d.chain.iter().map(|c| Json::from(c.as_str())).collect()),
+                    );
+                }
+                obj
             })
             .collect();
         Json::obj()
@@ -111,6 +133,24 @@ mod tests {
         assert_eq!(r.diagnostics[0].path, "a.rs");
         assert_eq!(r.rules_run, vec!["determinism", "hotpath"]);
         assert!(r.text().starts_with("a.rs:10: [hotpath] y\n"));
+    }
+
+    #[test]
+    fn chain_renders_in_text_and_json() {
+        let d = Diagnostic::new("a.rs", 4, "panic_propagation", "`.unwrap()` reachable".into())
+            .with_chain(vec![
+                "fl/server.rs::Server::ingest".into(),
+                "a.rs::helper".into(),
+            ]);
+        let r = Report::new(vec![d], 1, vec!["panic_propagation".into()]);
+        assert!(r
+            .text()
+            .contains("    via fl/server.rs::Server::ingest -> a.rs::helper\n"));
+        let j = crate::util::json::Json::parse(&r.json()).unwrap();
+        let v = j.get("violations").unwrap().as_arr().unwrap();
+        let chain = v[0].get("chain").unwrap().as_arr().unwrap();
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0].as_str(), Some("fl/server.rs::Server::ingest"));
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Rule `hotloop_alloc`: loop bodies in the hot-path files (`paths`) may
+//! not allocate — directly or **transitively through the call graph**.
+//! A `Vec::new` hidden three calls deep behind a per-element accumulate
+//! loop is exactly the regression this rule exists to catch; the per-file
+//! `hotpath` rule cannot see it. Sinful constructs may live in any file
+//! (only the loop must be in a scoped file); the diagnostic carries the
+//! call chain from the looping fn to the allocating fn.
+//!
+//! The sin list is deliberately narrow — steady-state per-element
+//! allocations, not one-time setup: `Vec::new(`, `vec![`, `Box::new(`,
+//! `.clone()`, `.to_vec()`, `.to_owned()`. Amortized constructs
+//! (`with_capacity` reuse, `collect` into preallocated reductions) stay
+//! legal; a scoping decision that proves too loose is tightened in the
+//! manifest, not here.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+use super::super::callgraph::CallGraph;
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::super::symbols::SymbolTable;
+use super::{suppressed, token_hit, Rule};
+
+const RULE: &str = "hotloop_alloc";
+
+const ALLOC: &[(&str, &str)] = &[
+    ("Vec::new(", "allocates per iteration; hoist or reuse a scratch buffer"),
+    ("vec![", "allocates per iteration; hoist or reuse a scratch buffer"),
+    ("Box::new(", "heap-allocates per iteration; use a stack value or reuse"),
+    (".clone()", "deep-copies per iteration; borrow or reuse"),
+    (".to_vec()", "copies the slice per iteration; borrow or reuse"),
+    (".to_owned()", "copies per iteration; borrow or reuse"),
+];
+
+pub struct HotLoopAlloc;
+
+impl Rule for HotLoopAlloc {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        let syms = SymbolTable::build(files);
+        let graph = CallGraph::build(&syms);
+        // First sin (token, line) per fn, scanning only the fn's own lines.
+        let direct: Vec<Option<(usize, usize)>> = syms
+            .fns
+            .iter()
+            .map(|f| {
+                let file = &files[f.file];
+                if f.in_test {
+                    return None;
+                }
+                for ln in f.decl..=f.end.min(file.lines.len().saturating_sub(1)) {
+                    if file.enclosing_fn(ln).map(|e| e.decl) != Some(f.decl)
+                        || file.in_test(ln)
+                        || file.waived(RULE, ln)
+                    {
+                        continue;
+                    }
+                    for (ti, (token, _)) in ALLOC.iter().enumerate() {
+                        if token_hit(&file.lines[ln], token) {
+                            return Some((ti, ln));
+                        }
+                    }
+                }
+                None
+            })
+            .collect();
+
+        let mut memo: HashMap<usize, Option<Vec<usize>>> = HashMap::new();
+        let mut out = Vec::new();
+        for lp in &syms.loops {
+            let f = &syms.fns[lp.fn_id];
+            let file = &files[f.file];
+            if f.in_test || !scope.covers(&file.rel_path) {
+                continue;
+            }
+            // Direct allocations inside the loop body.
+            for ln in lp.start..=lp.end.min(file.lines.len().saturating_sub(1)) {
+                if file.enclosing_fn(ln).map(|e| e.decl) != Some(f.decl)
+                    || suppressed(file, scope, RULE, ln)
+                {
+                    continue;
+                }
+                for (token, why) in ALLOC {
+                    if token_hit(&file.lines[ln], token) {
+                        out.push(Diagnostic::new(
+                            &file.rel_path,
+                            ln,
+                            RULE,
+                            format!("`{token}` inside a hot loop: {why}"),
+                        ));
+                    }
+                }
+            }
+            // Transitive allocations behind calls made inside the loop.
+            for call in &syms.calls {
+                if call.caller != lp.fn_id || call.line < lp.start || call.line > lp.end {
+                    continue;
+                }
+                if suppressed(file, scope, RULE, call.line) {
+                    continue;
+                }
+                for callee in syms.resolve(call) {
+                    let Some(path) =
+                        sin_path(callee, &graph, &direct, &mut memo, &mut HashSet::new())
+                    else {
+                        continue;
+                    };
+                    let sinner = *path.last().expect("non-empty sin path");
+                    let (ti, sin_ln) = direct[sinner].expect("path ends at a direct sin");
+                    let (token, why) = ALLOC[ti];
+                    let mut chain = vec![syms.label(lp.fn_id)];
+                    chain.extend(path.iter().map(|&x| syms.label(x)));
+                    out.push(
+                        Diagnostic::new(
+                            &file.rel_path,
+                            call.line,
+                            RULE,
+                            format!(
+                                "hot loop calls `{}` which allocates (`{token}` at {}:{}): {why}",
+                                syms.label(callee),
+                                files[syms.fns[sinner].file].rel_path,
+                                sin_ln + 1,
+                            ),
+                        )
+                        .with_chain(chain),
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Shortest-by-DFS path from `id` to a fn with a direct sin, inclusive of
+/// both ends (`[id, .., sinner]`), or None. Memoized; cycles break to None.
+fn sin_path(
+    id: usize,
+    graph: &CallGraph,
+    direct: &[Option<(usize, usize)>],
+    memo: &mut HashMap<usize, Option<Vec<usize>>>,
+    stack: &mut HashSet<usize>,
+) -> Option<Vec<usize>> {
+    if let Some(m) = memo.get(&id) {
+        return m.clone();
+    }
+    if !stack.insert(id) {
+        return None;
+    }
+    let res = if direct[id].is_some() {
+        Some(vec![id])
+    } else {
+        let mut found = None;
+        for &(callee, _) in graph.callees(id) {
+            if let Some(mut p) = sin_path(callee, graph, direct, memo, stack) {
+                p.insert(0, id);
+                found = Some(p);
+                break;
+            }
+        }
+        found
+    };
+    stack.remove(&id);
+    memo.insert(id, res.clone());
+    res
+}

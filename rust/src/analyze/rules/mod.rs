@@ -1,13 +1,20 @@
 //! The rule families and shared matching helpers.
 //!
-//! Each rule implements [`Rule`] over the full set of lexed files; most are
-//! per-line token scans, `wire` is a cross-file consistency check. Shared
+//! Each rule implements [`Rule`] over the full set of lexed files. The
+//! lexical families are per-line token scans and `wire` is a cross-file
+//! consistency check; `panic_propagation`, `thread_aliasing`, and
+//! `hotloop_alloc` are interprocedural — they build the whole-tree
+//! [`symbols::SymbolTable`](super::symbols::SymbolTable) and walk the
+//! [`callgraph::CallGraph`](super::callgraph::CallGraph). Shared
 //! suppression logic: test spans, manifest allowlists (file or `file::fn`),
 //! and inline `// analyze: allow(rule)` waivers.
 
 mod determinism;
+mod hotloop_alloc;
 mod hotpath;
+mod panic_propagation;
 mod panic_safety;
+mod thread_aliasing;
 mod unsafe_audit;
 mod wire;
 
@@ -28,7 +35,10 @@ pub fn all() -> Vec<Box<dyn Rule>> {
     vec![
         Box::new(determinism::Determinism),
         Box::new(panic_safety::PanicSafety),
+        Box::new(panic_propagation::PanicPropagation),
         Box::new(hotpath::HotPath),
+        Box::new(hotloop_alloc::HotLoopAlloc),
+        Box::new(thread_aliasing::ThreadAliasing),
         Box::new(unsafe_audit::UnsafeAudit),
         Box::new(wire::WireInvariants),
     ]

@@ -1,0 +1,91 @@
+//! Rule `panic_propagation`: interprocedural panic-safety. From the
+//! manifest's boundary entry points (`entries = ["fl/server.rs::Server::
+//! ingest", "compress/wire.rs::deserialize*"]`) walk the whole-tree call
+//! graph; **no reachable fn in any file** may use a panicking combinator,
+//! and bare indexing is additionally banned in reachable fns of the files
+//! listed under `paths` (files whose indexing is provably in-range by
+//! construction stay out of `paths` — the scoping decision is written in
+//! `analyze.toml`). Every diagnostic carries the offending call chain
+//! from the entry, rendered in both the text and JSON reports.
+
+use super::super::callgraph::CallGraph;
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::super::symbols::SymbolTable;
+use super::{panic_safety, suppressed, token_hit, Rule};
+
+const RULE: &str = "panic_propagation";
+
+pub struct PanicPropagation;
+
+impl Rule for PanicPropagation {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        if scope.entries.is_empty() {
+            return Vec::new();
+        }
+        let syms = SymbolTable::build(files);
+        let graph = CallGraph::build(&syms);
+        let mut entry_ids: Vec<usize> = scope
+            .entries
+            .iter()
+            .flat_map(|pat| syms.resolve_entry(pat))
+            .collect();
+        entry_ids.sort_unstable();
+        entry_ids.dedup();
+        let reach = graph.reach(&entry_ids);
+
+        let mut out = Vec::new();
+        for (id, f) in syms.fns.iter().enumerate() {
+            if f.in_test || !reach.contains(id) {
+                continue;
+            }
+            let file = &files[f.file];
+            let chain: Vec<String> = reach.chain(id).iter().map(|&x| syms.label(x)).collect();
+            let entry = chain.first().cloned().unwrap_or_default();
+            let check_indexing = scope.covers(&file.rel_path);
+            for ln in f.decl..=f.end.min(file.lines.len().saturating_sub(1)) {
+                // Lines of nested fns belong to their own (also reachable
+                // or not) symbol, not to this one.
+                if file.enclosing_fn(ln).map(|e| e.decl) != Some(f.decl) {
+                    continue;
+                }
+                let line = &file.lines[ln];
+                for (token, why) in panic_safety::BANNED {
+                    if token_hit(line, token) && !suppressed(file, scope, RULE, ln) {
+                        out.push(
+                            Diagnostic::new(
+                                &file.rel_path,
+                                ln,
+                                RULE,
+                                format!("`{token}` reachable from boundary entry `{entry}`: {why}"),
+                            )
+                            .with_chain(chain.clone()),
+                        );
+                    }
+                }
+                if check_indexing
+                    && panic_safety::has_bare_indexing(line)
+                    && !suppressed(file, scope, RULE, ln)
+                {
+                    out.push(
+                        Diagnostic::new(
+                            &file.rel_path,
+                            ln,
+                            RULE,
+                            format!(
+                                "bare indexing reachable from boundary entry `{entry}`; use `.get(..)`"
+                            ),
+                        )
+                        .with_chain(chain.clone()),
+                    );
+                }
+            }
+        }
+        out
+    }
+}

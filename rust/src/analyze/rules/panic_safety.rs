@@ -7,7 +7,9 @@ use super::super::lexer::SourceFile;
 use super::super::report::Diagnostic;
 use super::{scan_tokens, suppressed, Rule};
 
-const BANNED: &[(&str, &str)] = &[
+/// Shared with `panic_propagation`, which bans the same combinators in
+/// any fn reachable from a boundary entry point.
+pub(crate) const BANNED: &[(&str, &str)] = &[
     (".unwrap()", "panics on None/Err; propagate with `?` or match"),
     (".expect(", "panics on None/Err; propagate with `?` or match"),
     ("panic!", "hostile input must map to Malformed/Err, not a panic"),
@@ -50,7 +52,7 @@ impl Rule for PanicSafety {
 
 /// `[` directly preceded by an identifier character, `)` or `]` is an
 /// index expression (Rust style never puts a space there).
-fn has_bare_indexing(line: &str) -> bool {
+pub(crate) fn has_bare_indexing(line: &str) -> bool {
     let b = line.as_bytes();
     for (i, &c) in b.iter().enumerate() {
         if c != b'[' || i == 0 {

@@ -1,0 +1,192 @@
+//! Rule `thread_aliasing`: inside `thread::scope` blocks of the scoped
+//! files, spawn closures must `move`-capture, and any `&mut NAME` they
+//! use must be provably disjoint per worker. Recognized disjointness
+//! idioms, in the order checked:
+//!
+//! * `NAME` is a closure parameter (the iterator that produced it split
+//!   the state — `split_at_mut` chains feed `.map(|(i, slice, ..)| …)`);
+//! * `NAME` is `let`-bound inside the closure body (worker-owned state);
+//! * `NAME` is bound, anywhere in the enclosing fn before the spawn, on a
+//!   line using a splitting/channel idiom (`split_at_mut`, `chunks_mut`,
+//!   `iter_mut`, `sync_channel`, `.recv()`, …);
+//! * `NAME` is an owned local `move`-captured by the closure (each worker
+//!   gets its own value — `let mut scratch = …` before a `move` spawn).
+//!
+//! Anything else — a non-`move` closure, or a `&mut` reborrow of shared
+//! state smuggled into workers — is a violation.
+
+use super::super::config::RuleScope;
+use super::super::lexer::SourceFile;
+use super::super::report::Diagnostic;
+use super::super::symbols::{brace_span, paren_span};
+use super::{suppressed, token_hit, Rule};
+
+const RULE: &str = "thread_aliasing";
+
+const IDIOMS: &[&str] = &[
+    "split_at_mut",
+    "split_first_mut",
+    "split_last_mut",
+    "chunks_mut",
+    "iter_mut",
+    "sync_channel",
+    ".recv()",
+    "split_off",
+];
+
+pub struct ThreadAliasing;
+
+impl Rule for ThreadAliasing {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, files: &[SourceFile], scope: &RuleScope) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for file in files {
+            if !scope.covers(&file.rel_path) {
+                continue;
+            }
+            for ln in 0..file.lines.len() {
+                let Some(col) = file.lines[ln].find("thread::scope(") else {
+                    continue;
+                };
+                if file.in_test(ln) {
+                    continue;
+                }
+                let Some((_, close)) = brace_span(&file.lines, ln, col) else {
+                    continue;
+                };
+                for sln in ln..=close.min(file.lines.len().saturating_sub(1)) {
+                    let line = file.lines[sln].clone();
+                    let mut from = 0usize;
+                    while let Some(p) = line[from..].find(".spawn(") {
+                        let at = from + p;
+                        from = at + ".spawn(".len();
+                        check_spawn(file, scope, sln, at + ".spawn".len(), &mut out);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Audit one `.spawn(` call whose `(` sits at (`ln`, `paren_col`).
+fn check_spawn(
+    file: &SourceFile,
+    scope: &RuleScope,
+    ln: usize,
+    paren_col: usize,
+    out: &mut Vec<Diagnostic>,
+) {
+    if suppressed(file, scope, RULE, ln) {
+        return;
+    }
+    let Some((sl, el)) = paren_span(&file.lines, ln, paren_col) else {
+        return;
+    };
+    // Flatten the spawn call region, starting at its `(`.
+    let mut region = String::new();
+    for l in sl..=el.min(file.lines.len().saturating_sub(1)) {
+        let s = &file.lines[l];
+        if l == sl {
+            region.push_str(&s[paren_col.min(s.len())..]);
+        } else {
+            region.push_str(s);
+        }
+        region.push('\n');
+    }
+    let is_move = region
+        .get(1..)
+        .map(|r| r.trim_start().starts_with("move"))
+        .unwrap_or(false);
+    if !is_move {
+        out.push(Diagnostic::new(
+            &file.rel_path,
+            ln,
+            RULE,
+            "scoped spawn closure must `move`-capture; implicit borrows alias shared state across workers"
+                .to_string(),
+        ));
+    }
+    // Closure params (between the first `|` pair) and body (after it).
+    let (params, body) = match region.find('|') {
+        Some(a) => match region[a + 1..].find('|') {
+            Some(off) => (
+                region[a + 1..a + 1 + off].to_string(),
+                region[a + 2 + off..].to_string(),
+            ),
+            None => (String::new(), region[a + 1..].to_string()),
+        },
+        None => (String::new(), region.clone()),
+    };
+
+    let bb = body.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = body[i..].find("&mut ") {
+        let at = i + p + "&mut ".len();
+        i = at;
+        let mut e = at;
+        while e < bb.len() && bb[e] == b' ' {
+            e += 1;
+        }
+        let s2 = e;
+        while e < bb.len() && (bb[e].is_ascii_alphanumeric() || bb[e] == b'_') {
+            e += 1;
+        }
+        if e == s2 {
+            continue; // `&mut (...)` — not a named capture
+        }
+        let name = &body[s2..e];
+        if name == "self" {
+            continue;
+        }
+        if token_hit(&params, name) || body_binds(&body, name) {
+            continue;
+        }
+        let fn_start = file.enclosing_fn(ln).map(|f| f.decl).unwrap_or(0);
+        if pre_spawn_idiom(file, fn_start, ln, name) {
+            continue;
+        }
+        if is_move && owned_local(file, fn_start, ln, name) {
+            continue;
+        }
+        out.push(Diagnostic::new(
+            &file.rel_path,
+            ln,
+            RULE,
+            format!(
+                "`&mut {name}` captured by a scoped spawn closure without a recognized disjointness idiom (split_at_mut/chunks_mut/iter_mut chain, per-worker channel endpoint, or move-captured owned local)"
+            ),
+        ));
+    }
+}
+
+/// Is `name` `let`-bound inside the closure body (left of an `=`)?
+fn body_binds(body: &str, name: &str) -> bool {
+    body.lines().any(|l| {
+        let lhs = l.split('=').next().unwrap_or(l);
+        token_hit(lhs, "let") && token_hit(lhs, name)
+    })
+}
+
+/// Does a line of the enclosing fn before the spawn bind/use `name`
+/// through a recognized disjointness idiom?
+fn pre_spawn_idiom(file: &SourceFile, fn_start: usize, spawn_ln: usize, name: &str) -> bool {
+    file.lines[fn_start..=spawn_ln]
+        .iter()
+        .any(|l| token_hit(l, name) && IDIOMS.iter().any(|i| l.contains(i)))
+}
+
+/// Is `name` an owned local of the enclosing fn (a `let` binding whose
+/// initializer is not itself a `&mut` reborrow)? Under a `move` closure
+/// each worker then captures its own value.
+fn owned_local(file: &SourceFile, fn_start: usize, spawn_ln: usize, name: &str) -> bool {
+    file.lines[fn_start..=spawn_ln].iter().any(|l| {
+        let mut split = l.splitn(2, '=');
+        let lhs = split.next().unwrap_or(l);
+        let rhs = split.next().unwrap_or("");
+        token_hit(lhs, "let") && token_hit(lhs, name) && !rhs.contains("&mut")
+    })
+}

@@ -9,6 +9,11 @@
 //!   byte accounting relies on.
 //! * Magic byte strings (`CSG2`/`CSG1`) appear only in `compress/wire.rs`;
 //!   consumers use `wire::MAGIC`.
+//! * Every `const FLAG_*` bit in `compress/wire.rs` is OR-ed into
+//!   `KNOWN_FLAGS` (else the unknown-flag guard rejects frames that
+//!   legitimately set it) and consumed on the decode path
+//!   (`flags & FLAG_X`) — a written-but-never-read bit is dead weight the
+//!   format spec silently carries forever.
 
 use super::super::config::RuleScope;
 use super::super::lexer::SourceFile;
@@ -84,6 +89,7 @@ impl Rule for WireInvariants {
                     check_bare_literals(files, scope, header, def_line, &mut out);
                 }
             }
+            check_flag_exhaustiveness(wf, scope, &mut out);
         }
 
         // Magic strings outside the canonical file.
@@ -216,6 +222,99 @@ fn check_bare_literals(
     }
 }
 
+/// `FLAG_*` exhaustiveness in the canonical file (see module docs).
+fn check_flag_exhaustiveness(wf: &SourceFile, scope: &RuleScope, out: &mut Vec<Diagnostic>) {
+    let mut flags: Vec<(String, usize)> = Vec::new();
+    let mut known_line: Option<usize> = None;
+    for (ln, line) in wf.lines.iter().enumerate() {
+        if wf.in_test(ln) || !token_hit(line, "const") {
+            continue;
+        }
+        if token_hit(line, "KNOWN_FLAGS") {
+            known_line = Some(ln);
+            continue;
+        }
+        let Some(p) = line.find("FLAG_") else {
+            continue;
+        };
+        let b = line.as_bytes();
+        if p > 0 && (b[p - 1].is_ascii_alphanumeric() || b[p - 1] == b'_') {
+            continue; // e.g. `const OTHER_FLAG_BITS`
+        }
+        let mut e = p;
+        while e < b.len() && (b[e].is_ascii_alphanumeric() || b[e] == b'_') {
+            e += 1;
+        }
+        flags.push((line[p..e].to_string(), ln));
+    }
+    if flags.is_empty() {
+        return;
+    }
+    let Some(kl) = known_line else {
+        out.push(Diagnostic::new(
+            &wf.rel_path,
+            flags[0].1,
+            RULE,
+            "FLAG_* bits defined but no `const KNOWN_FLAGS` mask found".to_string(),
+        ));
+        return;
+    };
+    for (name, ln) in &flags {
+        if suppressed(wf, scope, RULE, *ln) {
+            continue;
+        }
+        if !token_hit(&wf.lines[kl], name) {
+            out.push(Diagnostic::new(
+                &wf.rel_path,
+                *ln,
+                RULE,
+                format!(
+                    "`{name}` is not OR-ed into KNOWN_FLAGS; the unknown-flag guard rejects frames that set it"
+                ),
+            ));
+        }
+        let consumed = wf
+            .lines
+            .iter()
+            .enumerate()
+            .any(|(l2, line)| !wf.in_test(l2) && amp_consumed(line, name));
+        if !consumed {
+            out.push(Diagnostic::new(
+                &wf.rel_path,
+                *ln,
+                RULE,
+                format!(
+                    "`{name}` is never consumed on the decode path (`flags & {name}`); the bit is written but ignored"
+                ),
+            ));
+        }
+    }
+}
+
+/// Does `line` read `name` through a `&` mask (`flags & NAME`, `& !NAME`
+/// does not count because that is the KNOWN_FLAGS guard, not a per-bit
+/// read — but NAME there is KNOWN_FLAGS anyway)?
+fn amp_consumed(line: &str, name: &str) -> bool {
+    let lb = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(name) {
+        let at = from + p;
+        let end = at + name.len();
+        from = at + 1;
+        if end < lb.len() && (lb[end].is_ascii_alphanumeric() || lb[end] == b'_') {
+            continue; // FLAG_A inside FLAG_AB
+        }
+        let mut i = at;
+        while i > 0 && lb[i - 1] == b' ' {
+            i -= 1;
+        }
+        if i > 0 && lb[i - 1] == b'&' {
+            return true;
+        }
+    }
+    false
+}
+
 /// Like `token_hit` but for integers: neighbours may not be identifier
 /// characters *or* `.` (so `44` does not match inside `44.0` or `0.44`).
 fn bare_number_hit(line: &str, needle: &str) -> bool {
@@ -248,5 +347,14 @@ mod tests {
         assert!(!bare_number_hit("let x = 0x44;", "44"));
         assert!(!bare_number_hit("let x = 442;", "44"));
         assert!(!bare_number_hit("let x = a44;", "44"));
+    }
+
+    #[test]
+    fn amp_consumption() {
+        assert!(amp_consumed("rotated: flags & FLAG_ROTATED != 0,", "FLAG_ROTATED"));
+        assert!(amp_consumed("if flags &FLAG_X != 0 {", "FLAG_X"));
+        assert!(!amp_consumed("flags |= FLAG_ROTATED;", "FLAG_ROTATED"));
+        assert!(!amp_consumed("const FLAG_ROTATED: u8 = 1 << 1;", "FLAG_ROTATED"));
+        assert!(!amp_consumed("flags & FLAG_AB != 0", "FLAG_A"));
     }
 }

@@ -1,0 +1,673 @@
+//! Whole-tree symbol table: every `fn` definition with its `impl`/`trait`
+//! owner, every call site (plain / method / path-qualified), and every
+//! loop span — the cross-file layer the call-graph rules build on.
+//!
+//! Resolution is conservative in exactly one direction: an *ambiguous*
+//! callee resolves to every plausible in-tree definition (a method call
+//! fans out to every impl fn of that name — over-approximation keeps
+//! reachability sound), but a qualified path whose receiver names no
+//! in-tree type, module file, or module directory resolves to nothing:
+//! `std::` / external calls must not drag unrelated same-named fns into
+//! the graph. Known blind spots, accepted as heuristics: turbofish call
+//! syntax (`f::<T>()`), `<T as Trait>::f()` casts, and braces inside
+//! `for`-loop patterns; none occur on the audited paths and the fixtures
+//! pin the shapes that do.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{FnSpan, SourceFile};
+
+/// A function definition with its file and `impl`/`trait` owner.
+#[derive(Debug, Clone)]
+pub struct FnSym {
+    /// Index into the lexed file set.
+    pub file: usize,
+    pub name: String,
+    /// `impl`/`trait` block type name, when defined inside one.
+    pub owner: Option<String>,
+    /// 0-indexed lines (declaration, opening brace, closing brace).
+    pub decl: usize,
+    pub open: usize,
+    pub end: usize,
+    pub in_test: bool,
+}
+
+/// How a call site names its callee.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CallKind {
+    /// `foo(...)` — unqualified.
+    Plain,
+    /// `.foo(...)` — method syntax.
+    Method,
+    /// `Recv::foo(...)` — the path segment directly before the name.
+    Qualified(String),
+}
+
+/// One call site inside a known fn body.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    /// [`FnSym`] id of the calling fn.
+    pub caller: usize,
+    pub kind: CallKind,
+    pub name: String,
+    /// 0-indexed line of the call.
+    pub line: usize,
+}
+
+/// An inclusive `for`/`while`/`loop` body span inside a fn.
+#[derive(Debug, Clone)]
+pub struct LoopSpan {
+    /// [`FnSym`] id of the enclosing fn.
+    pub fn_id: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// The whole-tree table plus the indices resolution needs.
+pub struct SymbolTable {
+    pub fns: Vec<FnSym>,
+    pub calls: Vec<CallSite>,
+    pub loops: Vec<LoopSpan>,
+    /// `rel_path` per file index (mirrors the lexed file order).
+    pub paths: Vec<String>,
+    file_fns: Vec<Vec<usize>>,
+    free_by_name: BTreeMap<String, Vec<usize>>,
+    method_by_name: BTreeMap<String, Vec<usize>>,
+    owned: BTreeMap<(String, String), Vec<usize>>,
+    /// File stem (`bitpack` for `compress/bitpack.rs`, parent dir for
+    /// `mod.rs`) → file indices.
+    stem_files: BTreeMap<String, Vec<usize>>,
+    /// Any path directory component → file indices underneath it.
+    dir_files: BTreeMap<String, Vec<usize>>,
+}
+
+impl SymbolTable {
+    pub fn build(files: &[SourceFile]) -> SymbolTable {
+        let mut fns: Vec<FnSym> = Vec::new();
+        let mut loops: Vec<LoopSpan> = Vec::new();
+        let mut file_fns: Vec<Vec<usize>> = vec![Vec::new(); files.len()];
+        let mut paths: Vec<String> = Vec::with_capacity(files.len());
+
+        for (fi, file) in files.iter().enumerate() {
+            paths.push(file.rel_path.clone());
+            let (owners, loop_lines) = scan_file(file);
+            for span in &file.fns {
+                let owner = owners
+                    .iter()
+                    .filter(|o| o.start <= span.decl && span.end <= o.end)
+                    .max_by_key(|o| o.start)
+                    .map(|o| o.name.clone());
+                let id = fns.len();
+                file_fns[fi].push(id);
+                fns.push(FnSym {
+                    file: fi,
+                    name: span.name.clone(),
+                    owner,
+                    decl: span.decl,
+                    open: span.open,
+                    end: span.end,
+                    in_test: file.in_test(span.decl) || file.in_test(span.open),
+                });
+            }
+            for (start, end) in loop_lines {
+                if let Some(fid) = innermost_fn(&file.fns, &file_fns[fi], start) {
+                    loops.push(LoopSpan { fn_id: fid, start, end });
+                }
+            }
+        }
+
+        let mut free_by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut method_by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut owned: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+        for (id, f) in fns.iter().enumerate() {
+            match &f.owner {
+                None => free_by_name.entry(f.name.clone()).or_default().push(id),
+                Some(o) => {
+                    method_by_name.entry(f.name.clone()).or_default().push(id);
+                    owned.entry((o.clone(), f.name.clone())).or_default().push(id);
+                }
+            }
+        }
+
+        let mut stem_files: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut dir_files: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (fi, rel) in paths.iter().enumerate() {
+            let comps: Vec<&str> = rel.split('/').collect();
+            let fname = comps.last().copied().unwrap_or("");
+            let stem = fname.strip_suffix(".rs").unwrap_or(fname);
+            if stem == "mod" {
+                if comps.len() >= 2 {
+                    stem_files
+                        .entry(comps[comps.len() - 2].to_string())
+                        .or_default()
+                        .push(fi);
+                }
+            } else {
+                stem_files.entry(stem.to_string()).or_default().push(fi);
+            }
+            for dir in &comps[..comps.len().saturating_sub(1)] {
+                dir_files.entry(dir.to_string()).or_default().push(fi);
+            }
+        }
+
+        let mut calls = Vec::new();
+        for (fi, file) in files.iter().enumerate() {
+            extract_calls(file, &file_fns[fi], &fns, &mut calls);
+        }
+
+        SymbolTable {
+            fns,
+            calls,
+            loops,
+            paths,
+            file_fns,
+            free_by_name,
+            method_by_name,
+            owned,
+            stem_files,
+            dir_files,
+        }
+    }
+
+    /// Conservative candidate set for a call site (test fns excluded).
+    pub fn resolve(&self, call: &CallSite) -> Vec<usize> {
+        let caller_file = self.fns[call.caller].file;
+        let same_file = |out: &mut Vec<usize>| {
+            out.extend(
+                self.file_fns[caller_file]
+                    .iter()
+                    .copied()
+                    .filter(|&id| self.fns[id].name == call.name),
+            );
+        };
+        let mut out: Vec<usize> = Vec::new();
+        match &call.kind {
+            CallKind::Plain => {
+                if let Some(v) = self.free_by_name.get(&call.name) {
+                    out.extend_from_slice(v);
+                }
+                same_file(&mut out);
+            }
+            CallKind::Method => {
+                if let Some(v) = self.method_by_name.get(&call.name) {
+                    out.extend_from_slice(v);
+                }
+            }
+            CallKind::Qualified(recv) => {
+                if recv == "Self" || recv == "self" {
+                    same_file(&mut out);
+                } else if let Some(v) = self.owned.get(&(recv.clone(), call.name.clone())) {
+                    out.extend_from_slice(v);
+                } else {
+                    let mut from_files = |files: &[usize], out: &mut Vec<usize>| {
+                        for &fi in files {
+                            out.extend(self.file_fns[fi].iter().copied().filter(|&id| {
+                                self.fns[id].name == call.name && self.fns[id].owner.is_none()
+                            }));
+                        }
+                    };
+                    if let Some(fs) = self.stem_files.get(recv) {
+                        from_files(fs, &mut out);
+                    }
+                    if out.is_empty() {
+                        if let Some(fs) = self.dir_files.get(recv) {
+                            from_files(fs, &mut out);
+                        }
+                    }
+                    // No in-tree match ⇒ external (std etc.): no edge.
+                }
+            }
+        }
+        out.retain(|&id| !self.fns[id].in_test);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// `file.rs::Owner::name` / `file.rs::name` display label.
+    pub fn label(&self, id: usize) -> String {
+        let f = &self.fns[id];
+        match &f.owner {
+            Some(o) => format!("{}::{}::{}", self.paths[f.file], o, f.name),
+            None => format!("{}::{}", self.paths[f.file], f.name),
+        }
+    }
+
+    /// Resolve an `entries` pattern — `file.rs::fn`, `file.rs::Type::fn`,
+    /// with an optional trailing `*` suffix glob on the fn name — to fn
+    /// ids (non-test only).
+    pub fn resolve_entry(&self, pattern: &str) -> Vec<usize> {
+        let Some(rs) = pattern.find(".rs::") else {
+            return Vec::new();
+        };
+        let path = &pattern[..rs + 3];
+        let rest: Vec<&str> = pattern[rs + 5..].split("::").collect();
+        let (owner, name_pat) = match rest.as_slice() {
+            [name] => (None, *name),
+            [owner, name] => (Some(*owner), *name),
+            _ => return Vec::new(),
+        };
+        let name_match = |name: &str| match name_pat.strip_suffix('*') {
+            Some(prefix) => name.starts_with(prefix),
+            None => name == name_pat,
+        };
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| {
+                !f.in_test
+                    && self.paths[f.file] == path
+                    && name_match(&f.name)
+                    && owner.is_none_or(|o| f.owner.as_deref() == Some(o))
+            })
+            .map(|(id, _)| id)
+            .collect()
+    }
+}
+
+/// Innermost fn (by global id) whose span contains `line`.
+fn innermost_fn(spans: &[FnSpan], ids: &[usize], line: usize) -> Option<usize> {
+    spans
+        .iter()
+        .zip(ids)
+        .filter(|(s, _)| s.decl <= line && line <= s.end)
+        .min_by_key(|(s, _)| s.end - s.decl)
+        .map(|(_, &id)| id)
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+struct OwnerSpan {
+    start: usize,
+    end: usize,
+    name: String,
+}
+
+enum Mark {
+    Plain,
+    Owner(String, usize),
+    Loop(usize),
+}
+
+/// One brace-matched scan per file: `impl`/`trait` block spans (with the
+/// declared type name) and loop body spans.
+fn scan_file(file: &SourceFile) -> (Vec<OwnerSpan>, Vec<(usize, usize)>) {
+    let mut owners: Vec<OwnerSpan> = Vec::new();
+    let mut loop_spans: Vec<(usize, usize)> = Vec::new();
+    let mut stack: Vec<Mark> = Vec::new();
+    // `impl`/`trait` header text being captured (until its `{`).
+    let mut header: Option<(usize, String)> = None;
+    let mut pending_loop: Option<usize> = None;
+    // A top-level `fn` is being declared: `-> impl Trait {` must not
+    // open an owner block.
+    let mut after_fn = false;
+
+    for (ln, l) in file.lines.iter().enumerate() {
+        let bytes = l.as_bytes();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let c = bytes[i];
+            if is_ident(c) {
+                let start = i;
+                while i < bytes.len() && is_ident(bytes[i]) {
+                    i += 1;
+                }
+                let word = &l[start..i];
+                // `r#loop` / `r#fn` are raw identifiers, not keywords.
+                let raw_ident = start >= 2
+                    && bytes[start - 1] == b'#'
+                    && bytes[start - 2] == b'r'
+                    && (start == 2 || !is_ident(bytes[start - 3]));
+                match if raw_ident { "" } else { word } {
+                    "impl" | "trait" if stack.is_empty() && !after_fn && header.is_none() => {
+                        header = Some((ln, String::new()));
+                        continue;
+                    }
+                    "fn" => {
+                        after_fn = stack.is_empty();
+                    }
+                    "for" if header.is_none() => {
+                        // `for<'a>` HRTB bounds are not loops.
+                        let mut j = i;
+                        while j < bytes.len() && bytes[j] == b' ' {
+                            j += 1;
+                        }
+                        if j >= bytes.len() || bytes[j] != b'<' {
+                            pending_loop = Some(ln);
+                        }
+                    }
+                    "while" | "loop" if header.is_none() => pending_loop = Some(ln),
+                    _ => {}
+                }
+                if let Some((_, text)) = header.as_mut() {
+                    text.push(' ');
+                    text.push_str(word);
+                }
+                continue;
+            }
+            match c {
+                b'{' => {
+                    if let Some((start, text)) = header.take() {
+                        match owner_name(&text) {
+                            Some(name) => stack.push(Mark::Owner(name, start)),
+                            None => stack.push(Mark::Plain),
+                        }
+                    } else if let Some(start) = pending_loop.take() {
+                        stack.push(Mark::Loop(start));
+                    } else {
+                        stack.push(Mark::Plain);
+                    }
+                    after_fn = false;
+                }
+                b'}' => match stack.pop() {
+                    Some(Mark::Owner(name, start)) => {
+                        owners.push(OwnerSpan { start, end: ln, name })
+                    }
+                    Some(Mark::Loop(start)) => loop_spans.push((start, ln)),
+                    _ => {}
+                },
+                b';' => {
+                    pending_loop = None;
+                    if stack.is_empty() {
+                        after_fn = false;
+                        header = None;
+                    }
+                }
+                _ => {
+                    if let Some((_, text)) = header.as_mut() {
+                        text.push(c as char);
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+    (owners, loop_spans)
+}
+
+/// Extract the type name an `impl`/`trait` header declares: the last
+/// segment of the first path after `for` (`impl Trait for Type`), else
+/// the first non-lifetime identifier outside generics.
+fn owner_name(header: &str) -> Option<String> {
+    let b = header.as_bytes();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    let mut name: Option<&str> = None;
+    let mut have_path = false;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'<' => depth += 1,
+            b'>' => depth -= 1,
+            b'\'' => {
+                i += 1;
+                while i < b.len() && is_ident(b[i]) {
+                    i += 1;
+                }
+                continue;
+            }
+            _ if is_ident(c) => {
+                let start = i;
+                while i < b.len() && is_ident(b[i]) {
+                    i += 1;
+                }
+                let word = &header[start..i];
+                if depth != 0 {
+                    continue;
+                }
+                if word == "for" {
+                    name = None;
+                    have_path = false;
+                    continue;
+                }
+                if word == "where" {
+                    break;
+                }
+                if matches!(word, "unsafe" | "const" | "dyn" | "mut" | "pub")
+                    || b[start].is_ascii_digit()
+                {
+                    continue;
+                }
+                let continues =
+                    start >= 2 && b[start - 1] == b':' && b[start - 2] == b':' && have_path;
+                if continues || !have_path {
+                    name = Some(word);
+                    have_path = true;
+                }
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    name.map(|s| s.to_string())
+}
+
+const CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "in", "move", "as", "let", "else", "fn",
+    "impl", "use", "pub", "mut", "ref", "break", "continue", "unsafe", "where", "dyn", "crate",
+    "super", "self", "Self", "struct", "enum", "trait", "type", "const", "static", "async",
+    "await", "box", "yield",
+];
+
+/// Scan one file's scrubbed lines for `ident(` call sites and classify
+/// them; only calls inside a known fn body are recorded.
+fn extract_calls(file: &SourceFile, ids: &[usize], fns: &[FnSym], out: &mut Vec<CallSite>) {
+    for (ln, l) in file.lines.iter().enumerate() {
+        let b = l.as_bytes();
+        let mut i = 0usize;
+        let mut last_word = "";
+        while i < b.len() {
+            if !is_ident(b[i]) {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < b.len() && is_ident(b[i]) {
+                i += 1;
+            }
+            let word = &l[start..i];
+            let mut j = i;
+            while j < b.len() && b[j] == b' ' {
+                j += 1;
+            }
+            let is_call = j < b.len() && b[j] == b'(';
+            let is_macro = i < b.len() && b[i] == b'!';
+            if is_call
+                && !is_macro
+                && !b[start].is_ascii_digit()
+                && !CALL_KEYWORDS.contains(&word)
+                && last_word != "fn"
+            {
+                let kind = if start > 0 && b[start - 1] == b'.' {
+                    Some(CallKind::Method)
+                } else if start >= 2 && b[start - 1] == b':' && b[start - 2] == b':' {
+                    let e = start - 2;
+                    let mut s = e;
+                    while s > 0 && is_ident(b[s - 1]) {
+                        s -= 1;
+                    }
+                    if s < e {
+                        Some(CallKind::Qualified(l[s..e].to_string()))
+                    } else {
+                        None // `<T as Trait>::f(` / leading `::` — external
+                    }
+                } else if start > 0 && b[start - 1] == b'#' {
+                    None // raw identifier `r#word(` — a name, not a call we track
+                } else {
+                    Some(CallKind::Plain)
+                };
+                if let Some(kind) = kind {
+                    if let Some(caller) = innermost_global(fns, ids, ln) {
+                        out.push(CallSite {
+                            caller,
+                            kind,
+                            name: word.to_string(),
+                            line: ln,
+                        });
+                    }
+                }
+            }
+            last_word = word;
+        }
+    }
+}
+
+/// Innermost fn id containing `line`, over the global fn set restricted
+/// to this file's ids.
+fn innermost_global(fns: &[FnSym], ids: &[usize], line: usize) -> Option<usize> {
+    ids.iter()
+        .copied()
+        .filter(|&id| fns[id].decl <= line && line <= fns[id].end)
+        .min_by_key(|&id| fns[id].end - fns[id].decl)
+}
+
+/// Brace-match from the first `{` at or after (`line`, `col`) in scrubbed
+/// lines; returns (open line, close line) inclusive.
+pub(crate) fn brace_span(
+    lines: &[String],
+    line: usize,
+    col: usize,
+) -> Option<(usize, usize)> {
+    let mut depth = 0i64;
+    let mut open_line: Option<usize> = None;
+    for (ln, l) in lines.iter().enumerate().skip(line) {
+        let from = if ln == line { col.min(l.len()) } else { 0 };
+        for &c in &l.as_bytes()[from..] {
+            match c {
+                b'{' => {
+                    if open_line.is_none() {
+                        open_line = Some(ln);
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    if open_line.is_some() {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some((open_line.unwrap_or(line), ln));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Paren-match from the first `(` at or after (`line`, `col`); returns
+/// (open line, close line) inclusive.
+pub(crate) fn paren_span(
+    lines: &[String],
+    line: usize,
+    col: usize,
+) -> Option<(usize, usize)> {
+    let mut depth = 0i64;
+    let mut open_line: Option<usize> = None;
+    for (ln, l) in lines.iter().enumerate().skip(line) {
+        let from = if ln == line { col.min(l.len()) } else { 0 };
+        for &c in &l.as_bytes()[from..] {
+            match c {
+                b'(' => {
+                    if open_line.is_none() {
+                        open_line = Some(ln);
+                    }
+                    depth += 1;
+                }
+                b')' => {
+                    if open_line.is_some() {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some((open_line.unwrap_or(line), ln));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::lexer::lex_str;
+
+    fn table(sources: &[(&str, &str)]) -> SymbolTable {
+        let files: Vec<SourceFile> =
+            sources.iter().map(|(p, t)| lex_str(p, t)).collect();
+        SymbolTable::build(&files)
+    }
+
+    #[test]
+    fn owners_and_generics() {
+        let t = table(&[(
+            "a/reader.rs",
+            "impl<'a> BitReader<'a> {\n    fn read(&mut self) -> u8 { 0 }\n}\nimpl std::fmt::Display for Thing {\n    fn fmt(&self) -> u8 { 1 }\n}\ntrait Codec {\n    fn id(&self) -> u8 {\n        9\n    }\n}\n",
+        )]);
+        let owners: Vec<(String, Option<String>)> = t
+            .fns
+            .iter()
+            .map(|f| (f.name.clone(), f.owner.clone()))
+            .collect();
+        assert_eq!(
+            owners,
+            vec![
+                ("read".into(), Some("BitReader".into())),
+                ("fmt".into(), Some("Thing".into())),
+                ("id".into(), Some("Codec".into())),
+            ]
+        );
+    }
+
+    #[test]
+    fn call_kinds_and_resolution() {
+        let t = table(&[
+            (
+                "fl/server.rs",
+                "impl Server {\n    pub fn ingest(&mut self) {\n        let x = helper();\n        self.classify();\n        pack::store(x);\n        std::thread::yield_now();\n        Other::missing();\n    }\n    fn classify(&self) {}\n}\nfn helper() -> u8 { 0 }\n",
+            ),
+            ("fl/pack.rs", "pub fn store(_x: u8) {}\n"),
+        ]);
+        let ingest = t.fns.iter().position(|f| f.name == "ingest").unwrap();
+        let by_name = |n: &str| -> Vec<usize> {
+            t.calls
+                .iter()
+                .filter(|c| c.caller == ingest && c.name == n)
+                .flat_map(|c| t.resolve(c))
+                .collect()
+        };
+        let labels = |ids: Vec<usize>| -> Vec<String> {
+            ids.into_iter().map(|id| t.label(id)).collect()
+        };
+        assert_eq!(labels(by_name("helper")), vec!["fl/server.rs::helper"]);
+        assert_eq!(
+            labels(by_name("classify")),
+            vec!["fl/server.rs::Server::classify"]
+        );
+        assert_eq!(labels(by_name("store")), vec!["fl/pack.rs::store"]);
+        // `std::thread::yield_now` / `Other::missing`: no in-tree match,
+        // no edge — external calls must not pull in same-named fns.
+        assert!(by_name("yield_now").is_empty());
+        assert!(by_name("missing").is_empty());
+    }
+
+    #[test]
+    fn loops_and_entries() {
+        let t = table(&[(
+            "fl/hot.rs",
+            "pub fn fold(xs: &[u8]) -> u32 {\n    let mut acc = 0u32;\n    for &x in xs {\n        acc += x as u32;\n    }\n    while acc > 100 {\n        acc /= 2;\n    }\n    acc\n}\npub fn fold_tail() {}\n",
+        )]);
+        assert_eq!(t.loops.len(), 2);
+        assert_eq!(t.loops[0].start, 2);
+        assert_eq!(t.loops[0].end, 4);
+        assert_eq!(t.resolve_entry("fl/hot.rs::fold").len(), 1);
+        assert_eq!(t.resolve_entry("fl/hot.rs::fold*").len(), 2);
+        assert_eq!(t.resolve_entry("fl/hot.rs::Server::fold").len(), 0);
+        assert_eq!(t.resolve_entry("other.rs::fold").len(), 0);
+    }
+}

@@ -59,6 +59,18 @@ pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u16> {
     out
 }
 
+/// Guarded little-endian 64-bit load. Callers bound-check `pos + 8 <=
+/// bytes.len()` before refilling; the `get`-based load keeps the word
+/// refill panic-free by construction (out-of-range reads as 0) instead of
+/// relying on a `try_into().unwrap()` the decode path cannot afford.
+#[inline]
+fn le_word(bytes: &[u8], pos: usize) -> u64 {
+    bytes
+        .get(pos..pos + 8)
+        .and_then(|s| <[u8; 8]>::try_from(s).ok())
+        .map_or(0, u64::from_le_bytes)
+}
+
 /// [`unpack`] into a reusable buffer (cleared first).
 pub fn unpack_into(bytes: &[u8], bits: u8, n: usize, out: &mut Vec<u16>) {
     assert!((1..=16).contains(&bits), "bits must be in 1..=16");
@@ -81,8 +93,7 @@ pub fn unpack_into(bytes: &[u8], bits: u8, n: usize, out: &mut Vec<u16>) {
     for _ in 0..n {
         if nbits < bits {
             if pos + 8 <= bytes.len() {
-                let w = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
-                acc |= (w as u128) << nbits;
+                acc |= (le_word(bytes, pos) as u128) << nbits;
                 pos += 8;
                 nbits += 64;
             } else {
@@ -134,8 +145,7 @@ pub fn unpack_range_into(bytes: &[u8], bits: u8, start: usize, count: usize, out
         if nbits < bits {
             while nbits < bits + discard {
                 if pos + 8 <= bytes.len() {
-                    let w = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
-                    acc |= (w as u128) << nbits;
+                    acc |= (le_word(bytes, pos) as u128) << nbits;
                     pos += 8;
                     nbits += 64;
                 } else {

@@ -73,7 +73,10 @@ fn read_dynamic_tables(br: &mut BitReader) -> Result<(Decoder, Decoder), Inflate
     }
     let mut clen_len = vec![0u8; 19];
     for &ord in CLEN_ORDER.iter().take(hclen) {
-        clen_len[ord] = br.read_bits(3)? as u8;
+        let v = br.read_bits(3)? as u8;
+        *clen_len
+            .get_mut(ord)
+            .ok_or_else(|| InflateError(format!("clen order index {ord} out of range")))? = v;
     }
     let clen_dec = Decoder::new(&clen_len).map_err(|e| InflateError(e.0.into()))?;
 
@@ -105,10 +108,14 @@ fn read_dynamic_tables(br: &mut BitReader) -> Result<(Decoder, Decoder), Inflate
     if lengths.len() != total {
         return Err(InflateError("code length RLE overran".into()));
     }
-    let lit_dec =
-        Decoder::new(&lengths[..hlit]).map_err(|e| InflateError(e.0.into()))?;
-    let dist_dec =
-        Decoder::new(&lengths[hlit..]).map_err(|e| InflateError(e.0.into()))?;
+    let lit_lens = lengths
+        .get(..hlit)
+        .ok_or_else(|| InflateError("code length RLE underran HLIT".into()))?;
+    let dist_lens = lengths
+        .get(hlit..)
+        .ok_or_else(|| InflateError("code length RLE underran HDIST".into()))?;
+    let lit_dec = Decoder::new(lit_lens).map_err(|e| InflateError(e.0.into()))?;
+    let dist_dec = Decoder::new(dist_lens).map_err(|e| InflateError(e.0.into()))?;
     Ok((lit_dec, dist_dec))
 }
 
@@ -124,13 +131,14 @@ fn inflate_block(
             0..=255 => out.push(sym as u8),
             256 => return Ok(()),
             257..=285 => {
-                let (base, extra) = LENGTH_TABLE[sym as usize - 257];
+                let (base, extra) = *LENGTH_TABLE
+                    .get(sym as usize - 257)
+                    .ok_or_else(|| InflateError(format!("bad length symbol {sym}")))?;
                 let len = base as usize + br.read_bits(extra as u32)? as usize;
                 let dsym = dist.decode(br)?;
-                if dsym as usize >= DIST_TABLE.len() {
-                    return Err(InflateError(format!("bad distance symbol {dsym}")));
-                }
-                let (dbase, dextra) = DIST_TABLE[dsym as usize];
+                let (dbase, dextra) = *DIST_TABLE
+                    .get(dsym as usize)
+                    .ok_or_else(|| InflateError(format!("bad distance symbol {dsym}")))?;
                 let d = dbase as usize + br.read_bits(dextra as u32)? as usize;
                 if d > out.len() {
                     return Err(InflateError(format!(
@@ -141,7 +149,9 @@ fn inflate_block(
                 let start = out.len() - d;
                 // Overlapping copies are the norm (run-length via dist 1).
                 for k in 0..len {
-                    let b = out[start + k];
+                    let b = *out
+                        .get(start + k)
+                        .ok_or_else(|| InflateError("copy source out of range".into()))?;
                     out.push(b);
                 }
             }

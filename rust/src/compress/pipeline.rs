@@ -633,8 +633,18 @@ pub fn accumulate_with(
         enc.bits
     );
     bitpack::unpack_into(raw, enc.bits, n, &mut scratch.codes);
-    let q = quantizer::from_wire(enc.kind_id, enc.bits)?;
-    q.accumulate_into(&scratch.codes, enc.norm, enc.bound, &mut scratch.kernel, w, acc);
+    // Boxless fused dispatch: `from_wire(..)` would heap-allocate a
+    // `Box<dyn Quantizer>` per (client, tensor) in the ingest hot loop.
+    quantizer::accumulate_wire(
+        enc.kind_id,
+        enc.bits,
+        &scratch.codes,
+        enc.norm,
+        enc.bound,
+        &mut scratch.kernel,
+        w,
+        acc,
+    )?;
     Ok(())
 }
 
@@ -707,8 +717,16 @@ pub fn accumulate_range_with(
         signsgd::accumulate_signs(&scratch.codes, mag, w, acc);
         return Ok(());
     }
-    let q = quantizer::from_wire(enc.kind_id, enc.bits)?;
-    q.accumulate_into(&scratch.codes, enc.norm, enc.bound, &mut scratch.kernel, w, acc);
+    quantizer::accumulate_wire(
+        enc.kind_id,
+        enc.bits,
+        &scratch.codes,
+        enc.norm,
+        enc.bound,
+        &mut scratch.kernel,
+        w,
+        acc,
+    )?;
     Ok(())
 }
 

@@ -181,6 +181,41 @@ pub fn from_wire(id: u8, bits: u8) -> Result<Box<dyn Quantizer>> {
     })
 }
 
+/// Fused dequantize+accumulate straight from a wire identity — the boxless
+/// twin of `from_wire(id, bits)?.accumulate_into(..)`, dispatching to the
+/// per-scheme fused kernels without constructing a `Box<dyn Quantizer>`
+/// per call. The server's per-tensor ingest folds run once per
+/// (client, tensor) inside the hot loop, where a heap allocation is
+/// exactly what the `hotloop_alloc` analyzer rule rejects. Bit-identical
+/// to the trait path (pinned in `accumulate_wire_matches_trait_path`).
+/// Float32 frames have no packed codes, so they have no fused accumulate
+/// and decode via the raw payload path instead.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_wire(
+    id: u8,
+    bits: u8,
+    codes: &[u16],
+    norm: f32,
+    bound: f32,
+    scratch: &mut KernelScratch,
+    w: f64,
+    acc: &mut [f64],
+) -> Result<()> {
+    validate_wire(id, bits)?;
+    match id {
+        ids::COSINE => super::kernel::accumulate_cosine(codes, norm, bound, bits, scratch, w, acc),
+        ids::LINEAR => super::kernel::accumulate_linear(codes, bound, bits, scratch, w, acc),
+        ids::SIGN => signsgd::accumulate_signs(codes, 1.0, w, acc),
+        ids::SIGN_NORM => {
+            let mag = norm / (codes.len().max(1) as f32).sqrt();
+            signsgd::accumulate_signs(codes, mag, w, acc);
+        }
+        ids::EF_SIGN => signsgd::accumulate_signs(codes, bound, w, acc),
+        other => bail!("quantizer id {other} has no fused wire accumulate"),
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Trait impls for the in-tree schemes.
 // ---------------------------------------------------------------------------
@@ -657,6 +692,36 @@ mod tests {
             q.dequantize_into(&codes, norm, bound, &mut scratch, &mut out);
             assert_eq!(out, d, "{}", q.name());
         }
+    }
+
+    #[test]
+    fn accumulate_wire_matches_trait_path() {
+        let mut rng = Pcg64::seeded(75);
+        let g = gradient_like(&mut rng, 600);
+        let cases: Vec<(u8, u8, Box<dyn Quantizer>)> = vec![
+            (ids::COSINE, 4, Box::new(CosineQuantizer::paper_default(4))),
+            (ids::LINEAR, 8, Box::new(LinearQuantizer::biased(8))),
+            (ids::SIGN, 1, Box::new(SignSgd)),
+            (ids::SIGN_NORM, 1, Box::new(SignSgdNorm)),
+            (ids::EF_SIGN, 1, Box::new(EfSign)),
+        ];
+        let mut scratch = KernelScratch::new();
+        for (id, bits, q) in cases {
+            let a = q.quantize(&g, &mut Pcg64::seeded(11));
+            let mut via_trait = vec![0.25f64; g.len()];
+            let mut via_wire = via_trait.clone();
+            q.accumulate_into(&a.codes, a.norm, a.bound, &mut scratch, 0.7, &mut via_trait);
+            accumulate_wire(id, bits, &a.codes, a.norm, a.bound, &mut scratch, 0.7, &mut via_wire)
+                .unwrap();
+            let same = via_trait
+                .iter()
+                .zip(&via_wire)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{}", q.name());
+        }
+        assert!(
+            accumulate_wire(ids::FLOAT32, 32, &[], 0.0, 0.0, &mut scratch, 1.0, &mut []).is_err()
+        );
     }
 
     #[test]

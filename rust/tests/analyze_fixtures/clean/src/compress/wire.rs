@@ -10,6 +10,15 @@
 pub const MAGIC: [u8; 4] = *b"CSG2";
 pub const HEADER_BYTES: usize = 12;
 
+// Every flag bit is in KNOWN_FLAGS and consumed on decode — the
+// flag-exhaustiveness check must stay quiet.
+pub const FLAG_DEFLATED: u8 = 1 << 0;
+pub const KNOWN_FLAGS: u8 = FLAG_DEFLATED;
+
+pub fn is_deflated(flags: u8) -> bool {
+    flags & FLAG_DEFLATED != 0
+}
+
 pub fn frame_len(payload: usize) -> usize {
     HEADER_BYTES + payload
 }

@@ -1,13 +1,20 @@
-//! Fixture: a scoped-thread shard fold that passes both scopes —
+//! Fixture: a scoped-thread shard fold that passes every scope —
 //! `std::thread::scope` is deterministic (disjoint shards, per-worker
-//! arrival-order folds) and the worker loop borrows every slice, so
-//! neither the determinism nor the hotpath rule may fire.
+//! arrival-order folds), the worker loop borrows every slice, and each
+//! spawn closure `move`-captures with `&mut` state blessed by a
+//! recognized disjointness idiom (`split_at_mut` halves, a body-local
+//! scratch), so determinism, hotpath, hotloop_alloc, and thread_aliasing
+//! must all stay quiet.
 
 pub fn fold_sharded(frames: &[(f64, Vec<f32>)], acc: &mut [f64], cut: usize) {
     let (lo, hi) = acc.split_at_mut(cut);
     std::thread::scope(|s| {
-        s.spawn(|| fold_range(frames, lo, 0));
-        s.spawn(|| fold_range(frames, hi, cut));
+        s.spawn(move || fold_range(frames, &mut lo[..], 0));
+        s.spawn(move || {
+            let mut local = [0.0f64; 8];
+            fold_range(frames, &mut local[..], cut);
+            merge(hi, &local);
+        });
     });
 }
 
@@ -16,5 +23,11 @@ fn fold_range(frames: &[(f64, Vec<f32>)], acc: &mut [f64], start: usize) {
         for (a, v) in acc.iter_mut().zip(frame[start..].iter()) {
             *a += f64::from(*v) * *w;
         }
+    }
+}
+
+fn merge(acc: &mut [f64], local: &[f64]) {
+    for (a, v) in acc.iter_mut().zip(local.iter()) {
+        *a += *v;
     }
 }

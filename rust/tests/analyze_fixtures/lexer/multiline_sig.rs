@@ -1,0 +1,16 @@
+//! Lexer fixture: multi-line fn signatures — the fn span must anchor at
+//! the `fn` keyword line, find the opening brace lines later, and the
+//! call graph must still resolve calls to the fn.
+
+pub fn long_signature(
+    first: &[f32],
+    second: &mut Vec<f32>,
+    third: usize,
+) -> Option<f32> {
+    second.clear();
+    first.get(third).copied()
+}
+
+pub fn caller() -> Option<f32> {
+    long_signature(&[1.0], &mut Vec::new(), 0)
+}

@@ -1,0 +1,18 @@
+//! Lexer fixture: raw identifiers. `r#fn` / `r#unsafe` / `r#match` are
+//! names, not keywords — they must not open fn spans, unsafe sites, or
+//! confuse the structure pass, and a fn *named* via a raw identifier
+//! keeps its `r#`-prefixed name.
+
+pub fn caller() -> u32 {
+    let r#match = 3u32;
+    let r#loop = r#match + 1;
+    r#fn(r#loop)
+}
+
+fn r#fn(x: u32) -> u32 {
+    x + r#unsafe()
+}
+
+fn r#unsafe() -> u32 {
+    7
+}

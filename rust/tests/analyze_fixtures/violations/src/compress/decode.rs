@@ -1,0 +1,21 @@
+//! Fixture: decode-path helpers in a file NO lexical rule scopes. The
+//! `.unwrap()` in `word_load` and the `.to_vec()` in `stage_frame` are
+//! only reachable through the call graph — from `fl/server.rs::ingest`
+//! (panic_propagation) and from the fold loop in `fl/ingest.rs`
+//! (hotloop_alloc) respectively. Both interprocedural rules must fire
+//! with a rendered chain; neither per-file rule may.
+
+pub fn decode_codes(bytes: &[u8]) -> u64 {
+    word_load(bytes)
+}
+
+fn word_load(bytes: &[u8]) -> u64 {
+    u64::from_le_bytes(bytes[..8].try_into().unwrap())
+}
+
+pub fn stage_frame(frame: &[f32], acc: &mut [f64]) {
+    let staged = frame.to_vec();
+    for (a, v) in acc.iter_mut().zip(staged.iter()) {
+        *a += f64::from(*v);
+    }
+}

@@ -9,6 +9,16 @@
 //! ```
 pub const HEADER_BYTES: usize = 44;
 
+// FLAG_ROTATED is neither OR-ed into KNOWN_FLAGS nor consumed on the
+// decode path — the flag-exhaustiveness check must fire twice.
+pub const FLAG_DEFLATED: u8 = 1 << 0;
+pub const FLAG_ROTATED: u8 = 1 << 1;
+pub const KNOWN_FLAGS: u8 = FLAG_DEFLATED;
+
+pub fn is_deflated(flags: u8) -> bool {
+    flags & FLAG_DEFLATED != 0
+}
+
 pub fn frame_len(payload: usize) -> usize {
     HEADER_BYTES + payload
 }

@@ -1,5 +1,30 @@
-//! Fixture: wall-clock read in the round loop.
+//! Fixture: wall-clock read in the round loop, plus scoped-thread spawn
+//! closures that alias shared `&mut` state — thread_aliasing must fire
+//! on the non-`move` closure AND on both unblessed `&mut` captures.
 pub fn round_loop() -> u128 {
     let t0 = std::time::Instant::now();
     t0.elapsed().as_nanos()
+}
+
+pub fn fan_out(shared: &mut [f64], flags: &mut [u32]) {
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            bump(&mut flags);
+        });
+        s.spawn(move || {
+            scale(&mut shared);
+        });
+    });
+}
+
+fn bump(flags: &mut [u32]) {
+    if let Some(f) = flags.first_mut() {
+        *f += 1;
+    }
+}
+
+fn scale(shared: &mut [f64]) {
+    for v in shared.iter_mut() {
+        *v *= 2.0;
+    }
 }

@@ -1,4 +1,6 @@
-//! Fixture: panic-safety and determinism violations in an ingest path.
+//! Fixture: panic-safety and determinism violations in an ingest path,
+//! plus a call into `compress/decode.rs` whose sins only the
+//! interprocedural panic_propagation walk can reach.
 use std::collections::HashMap;
 
 pub fn ingest(payload: &[u8]) -> u32 {
@@ -9,6 +11,7 @@ pub fn ingest(payload: &[u8]) -> u32 {
     if text.is_empty() {
         panic!("empty frame");
     }
-    seen.insert(head as u32, 1);
+    let word = decode_codes(tail);
+    seen.insert(head as u32, word as u32);
     head as u32
 }

@@ -150,6 +150,40 @@ fn run_scenario(map: &LayerMap, order: &[usize], shards: usize, capacity: usize)
     out
 }
 
+/// The same scripted stream through plain serial [`Server::ingest`] — no
+/// plane at all, every accepted frame folded at the arrival site.
+fn run_serial(map: &LayerMap, order: &[usize]) -> Outcome {
+    let script = arrivals();
+    let mut server = Server::new(vec![0.1; N], 1.0)
+        .with_clients(vec![100; CLIENTS])
+        .with_round_mode(RoundMode::BufferedAsync {
+            buffer_k: BUFFER_K,
+            max_staleness: MAX_STALENESS,
+        });
+    let mut out = Outcome {
+        param_bits: Vec::new(),
+        verdicts: Vec::new(),
+        round_verdicts: Vec::new(),
+        observations: Vec::new(),
+    };
+    for &i in order {
+        let (client_id, round, kind) = &script[i];
+        let frame = Frame {
+            round: *round,
+            client_id: *client_id,
+            payload: payload(map, kind, i as u64),
+        };
+        out.verdicts.push(label(&server.ingest(&frame)));
+        if server.ready_to_apply() {
+            out.observations.push(server.round_observations());
+            out.round_verdicts.push(server.round_verdicts());
+            server.finish_round();
+        }
+    }
+    out.param_bits = server.params.iter().map(|p| p.to_bits()).collect();
+    out
+}
+
 /// A few deterministic stream orders: scripted order, reversed, and two
 /// seeded shuffles — duplicates/stales land in different windows per
 /// order, and EVERY order must be shard-count invariant.
@@ -202,6 +236,39 @@ fn sharded_ingest_is_bit_identical_across_shard_counts_and_granularities() {
                     "controller observation streams diverged"
                 );
             }
+        }
+    }
+}
+
+/// Regression guard for the fused-wire-accumulate dispatch: plain serial
+/// [`Server::ingest`] (fold at the arrival site, no plane) and the
+/// prepare → queue → flush plane path must agree on EVERYTHING — verdict
+/// stream, per-round counters, observation streams, and final params to
+/// the bit — for every stream order. The two paths share one fold kernel
+/// by construction; this pins that equivalence against future drift.
+#[test]
+fn serial_ingest_matches_plane_flush_verdict_for_verdict() {
+    let map = LayerMap::even(N, LAYERS);
+    for order in orders(arrivals().len()) {
+        let serial = run_serial(&map, &order);
+        for (shards, capacity) in [(1usize, 64usize), (4, 1), (16, 3)] {
+            let planed = run_scenario(&map, &order, shards, capacity);
+            assert_eq!(
+                planed.verdicts, serial.verdicts,
+                "verdicts diverged from serial ingest: shards={shards} capacity={capacity} order={order:?}"
+            );
+            assert_eq!(
+                planed.round_verdicts, serial.round_verdicts,
+                "round counters diverged from serial ingest: shards={shards} capacity={capacity}"
+            );
+            assert_eq!(
+                planed.observations, serial.observations,
+                "observations diverged from serial ingest: shards={shards} capacity={capacity}"
+            );
+            assert_eq!(
+                planed.param_bits, serial.param_bits,
+                "params diverged from serial ingest: shards={shards} capacity={capacity} order={order:?}"
+            );
         }
     }
 }
